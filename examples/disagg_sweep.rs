@@ -1,0 +1,67 @@
+//! Disaggregation design-space sweep: beyond the paper's figures, explore
+//! how the D-Cache advantage moves with pool size, KV path bandwidth, and
+//! model scale — the ablation DESIGN.md calls out for the storage-pool
+//! design choices.
+//!
+//! Run: `cargo run --release --example disagg_sweep`
+
+use dockerssd::llm::disagg::{evaluate_scenario, DisaggModel};
+use dockerssd::llm::{all_llms, DeviceProfile};
+use dockerssd::llm::parallelism::find_optimal;
+use dockerssd::metrics::Table;
+
+fn main() {
+    let llms = all_llms();
+    let gpt3 = &llms[1];
+
+    // pool-size scaling at fixed 32K sequence
+    println!("pool-size scaling (gpt3-175B, 32K seq):");
+    let mut t = Table::new(vec!["nodes", "H-Cache total_s", "D-Cache total_s", "speedup"]);
+    for nodes in [16u32, 32, 64, 128] {
+        let h = evaluate_scenario(gpt3, DisaggModel::HostCache, nodes, 32_768, 1);
+        let d = evaluate_scenario(gpt3, DisaggModel::DockerCache, nodes, 32_768, 1);
+        if let (Some(h), Some(d)) = (h, d) {
+            t.row(vec![
+                format!("{nodes}"),
+                format!("{:.0}", h.time().total()),
+                format!("{:.0}", d.time().total()),
+                format!("{:.1}x", h.time().total() / d.time().total()),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    // KV-path bandwidth ablation: how fast must flash be for the win?
+    println!("flash KV-path bandwidth ablation (gpt3-175B, 32 nodes, 32K seq):");
+    let mut t = Table::new(vec!["flash_kv_GBps", "D-Cache total_s", "speedup vs H-Cache"]);
+    let h = evaluate_scenario(gpt3, DisaggModel::HostCache, 32, 32_768, 1).unwrap();
+    for bw_gbps in [1.0f64, 2.0, 4.0, 8.0, 16.0] {
+        let mut dev = DeviceProfile::dockerssd();
+        dev.kv_bw = bw_gbps * 1e9;
+        if let Some(d) = find_optimal(gpt3, &dev, 32, 32_768, 1, true) {
+            t.row(vec![
+                format!("{bw_gbps}"),
+                format!("{:.0}", d.time.total()),
+                format!("{:.1}x", h.time().total() / d.time.total()),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    // model-scale sweep at fixed pool
+    println!("model scale at 128 nodes, 32K seq (D-Cache):");
+    let mut t = Table::new(vec!["model", "parallelism", "compute_s", "memory_s", "total_s"]);
+    for llm in &llms {
+        if let Some(d) = evaluate_scenario(llm, DisaggModel::DockerCache, 128, 32_768, 1) {
+            t.row(vec![
+                llm.name.to_string(),
+                d.choice.par.label(),
+                format!("{:.0}", d.time().compute),
+                format!("{:.0}", d.time().memory),
+                format!("{:.0}", d.time().total()),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!("disagg_sweep OK");
+}

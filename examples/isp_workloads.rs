@@ -1,0 +1,109 @@
+//! ISP workload study: replay scaled Table 2 traces against the real
+//! substrates (λFS + flash timing + TCP), then compare the six
+//! data-processing models on the full workload set — the experiment
+//! behind Figures 3 and 11.
+//!
+//! Run: `cargo run --release --example isp_workloads`
+
+use dockerssd::config::SystemConfig;
+use dockerssd::etheron::TcpStack;
+use dockerssd::firmware::{CostModel, Syscall, VirtualFw};
+use dockerssd::lambdafs::{LambdaFs, LockSide};
+use dockerssd::metrics::Table;
+use dockerssd::models::{evaluate, ModelKind};
+use dockerssd::ssd::SsdDevice;
+use dockerssd::util::SimTime;
+use dockerssd::workloads::{all_workloads, Op, TraceGenerator};
+
+fn main() {
+    let cfg = SystemConfig::default();
+    let costs = CostModel::calibrated();
+
+    // --- part 1: trace replay on the substrates --------------------------
+    println!("replaying scaled traces on the simulated DockerSSD:");
+    let mut t = Table::new(vec!["workload", "ops", "sim_time", "walk_cache_hit%", "icl_hit%"]);
+    for spec in all_workloads() {
+        let mut dev = SsdDevice::new(cfg.ssd.clone());
+        let mut fs = LambdaFs::over_device(&dev);
+        let mut fw = VirtualFw::new(&cfg.ssd);
+        let mut tcp = TcpStack::new();
+        tcp.listen(80);
+
+        let scale = 2_000; // shrink Table 2 counts for a fast replay
+        let ops = TraceGenerator::new(spec.clone(), 7, scale).generate();
+        let mut now = SimTime::ZERO;
+        // pre-create the file population
+        let files = ops
+            .iter()
+            .filter_map(|o| match o {
+                Op::Open { file } | Op::Read { file, .. } | Op::Write { file, .. } => Some(*file),
+                _ => None,
+            })
+            .max()
+            .unwrap_or(0)
+            + 1;
+        for f in 0..files {
+            let _ = fs.write_file(&mut dev, now, &format!("/data/f{f}"), b"seed", LockSide::Isp);
+        }
+        for op in &ops {
+            match op {
+                Op::Open { file } => {
+                    let _ = fs.walk(&format!("/data/f{file}"));
+                    now += fw.syscall(Syscall::Openat);
+                }
+                Op::Read { file, bytes } => {
+                    let path = format!("/data/f{file}");
+                    if let Ok(r) = fs.read_file(&mut dev, now, &path, LockSide::Isp) {
+                        now = r.done;
+                    }
+                    let _ = bytes;
+                }
+                Op::Write { file, bytes } => {
+                    let path = format!("/data/f{file}");
+                    let body = vec![7u8; (*bytes).min(65_536) as usize];
+                    if let Ok(r) = fs.write_file(&mut dev, now, &path, &body, LockSide::Isp) {
+                        now = r.done;
+                    }
+                }
+                Op::Syscall => {
+                    now += fw.syscall(Syscall::Futex);
+                }
+                Op::TcpPacket { .. } => {
+                    now += SimTime::ns(costs.t_pkt_ethon_ns);
+                }
+                Op::Compute { bytes } => {
+                    let ns = *bytes as f64
+                        * costs.t_proc_host_ns_per_byte
+                        * costs.ssd_compute_factor();
+                    now += SimTime::ns(ns as u64);
+                }
+            }
+        }
+        let walks = fs.walk_cache.hits() + fs.walk_cache.misses();
+        t.row(vec![
+            spec.full_name(),
+            format!("{}", ops.len()),
+            format!("{now}"),
+            format!("{:.0}%", 100.0 * fs.walk_cache.hits() as f64 / walks.max(1) as f64),
+            format!("{:.0}%", 100.0 * dev.icl.hit_rate()),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // --- part 2: the six models on all workloads (Fig 11 view) ------------
+    println!("analytic model comparison (normalized to D-VirtFW):");
+    let mut t = Table::new(vec!["workload", "Host", "P.ISP-R", "P.ISP-V", "D-Naive", "D-FullOS"]);
+    for w in all_workloads() {
+        let base = evaluate(ModelKind::DVirtFw, &w, &costs).total();
+        t.row(vec![
+            w.full_name(),
+            format!("{:.2}", evaluate(ModelKind::Host, &w, &costs).total() / base),
+            format!("{:.2}", evaluate(ModelKind::PIspR, &w, &costs).total() / base),
+            format!("{:.2}", evaluate(ModelKind::PIspV, &w, &costs).total() / base),
+            format!("{:.2}", evaluate(ModelKind::DNaive, &w, &costs).total() / base),
+            format!("{:.2}", evaluate(ModelKind::DFullOs, &w, &costs).total() / base),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("isp_workloads OK");
+}

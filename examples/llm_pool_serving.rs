@@ -1,0 +1,30 @@
+//! End-to-end case study (DESIGN.md E9): serve a real model from a
+//! disaggregated pool.
+//!
+//! This is the driver that proves all three layers compose:
+//!   L1 Pallas decode-attention + fused-FFN kernels ->
+//!   L2 JAX transformer, AOT-lowered to HLO text ->
+//!   L3 Rust coordinator executing via PJRT across pool-node engines,
+//!   with batching, routing, and KV accounting.
+//!
+//! Requires `make artifacts` first.  Tokens are real model outputs
+//! (greedy decode over the AOT-compiled weights), not mocks.
+//!
+//! Run: `cargo run --release --example llm_pool_serving [nodes] [requests] [tokens]`
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let nodes = args.first().and_then(|s| s.parse().ok()).unwrap_or(2);
+    let requests = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(8);
+    let tokens = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(16);
+
+    println!("=== DockerSSD disaggregated pool serving (real PJRT execution) ===");
+    match dockerssd::examples_support::run_serve("artifacts", nodes, requests, tokens) {
+        Ok(()) => println!("llm_pool_serving OK"),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            eprintln!("hint: run `make artifacts` first");
+            std::process::exit(1);
+        }
+    }
+}

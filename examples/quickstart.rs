@@ -1,0 +1,80 @@
+//! Quickstart: the DockerSSD workflow in one file.
+//!
+//! 1. Build a simulated DockerSSD (flash backend + λFS + Virtual-FW).
+//! 2. Pull a container image over Ether-oN and run it (mini-docker).
+//! 3. Let the ISP-container process a file near flash, protected by the
+//!    inode-lock protocol.
+//! 4. Read the result back from the host side.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use dockerssd::config::SystemConfig;
+use dockerssd::docker::{MiniDocker, Registry};
+use dockerssd::firmware::VirtualFw;
+use dockerssd::lambdafs::{LambdaFs, LockSide};
+use dockerssd::ssd::SsdDevice;
+use dockerssd::util::SimTime;
+
+fn main() {
+    let cfg = SystemConfig::default();
+    println!(
+        "DockerSSD: {} channels, {} packages, frontend {} cores @ {}GHz",
+        cfg.ssd.channels,
+        cfg.ssd.total_packages(),
+        cfg.ssd.frontend_cores,
+        cfg.ssd.frontend_ghz
+    );
+
+    // 1. the device: flash timing model + FTL + ICL, λFS on top
+    let mut dev = SsdDevice::new(cfg.ssd.clone());
+    let mut fs = LambdaFs::over_device(&dev);
+    let mut fw = VirtualFw::new(&cfg.ssd);
+
+    // 2. host stages input data into the sharable namespace
+    let input: Vec<u8> = (0..1_000_000u32).map(|i| (i % 251) as u8).collect();
+    let w = fs
+        .write_file(&mut dev, SimTime::ZERO, "/data/input.bin", &input, LockSide::Host)
+        .expect("host writes input");
+    println!("host staged {} bytes into /data/input.bin ({:?} simulated)", input.len(), w.done);
+
+    // 3. pull + run the ISP container
+    let reg = Registry::with_benchmark_images();
+    let mut md = MiniDocker::new();
+    let pulled = md.pull(&mut fw, &mut fs, &mut dev, &reg, w.done, "pattern").unwrap();
+    let run = md.run(&mut fw, &mut fs, &mut dev, pulled.done, "pattern").unwrap();
+    let id = run.output.clone();
+    println!("ISP-container {} running ({:?} simulated)", id, run.done);
+
+    // 4. the container binds the file (inode lock), processes near flash
+    let ino = fs.walk("/data/input.bin").unwrap();
+    assert!(fs.locks.acquire(ino, LockSide::Isp), "ISP binds the input");
+    let (data, t_read) = fw.isp_read(&mut fs, &mut dev, run.done, "/data/input.bin").unwrap();
+    let count = data.iter().filter(|&&b| b == 42).count();
+    let t_write = fw
+        .isp_write(
+            &mut fs,
+            &mut dev,
+            t_read,
+            "/data/result.txt",
+            format!("matches: {count}\n").as_bytes(),
+        )
+        .unwrap();
+    fs.locks.release(ino, LockSide::Isp);
+    md.log_line(&mut fs, &mut dev, t_write, &id, &format!("processed {} bytes", data.len())).unwrap();
+
+    // 5. host reads the result from the sharable namespace
+    let result = fs
+        .read_file(&mut dev, t_write, "/data/result.txt", LockSide::Host)
+        .unwrap();
+    println!("result (read by host): {}", String::from_utf8_lossy(&result.value).trim());
+    println!(
+        "simulated end-to-end: {:?}; fw emulated {} syscalls; flash: {} reads / {} programs",
+        result.done,
+        fw.syscalls.total(),
+        dev.flash.reads,
+        dev.flash.programs
+    );
+
+    md.stop(&mut fw, &mut fs, &mut dev, result.done, &id).unwrap();
+    println!("container stopped. quickstart OK");
+}

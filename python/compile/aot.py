@@ -1,0 +1,183 @@
+"""AOT compile path: lower the L2 model to HLO *text* artifacts for Rust.
+
+Run once at build time (``make artifacts``); the Rust coordinator then
+loads and executes the artifacts through the PJRT C API without Python.
+
+Interchange format is HLO **text**, not ``lowered.compile().serialize()``:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids, which the
+``xla`` crate's bundled xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``).  The text parser reassigns ids, so text round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Artifacts written to ``--out-dir`` (default ../artifacts):
+  model_prefill.hlo.txt  — prefill(prompt) -> (logits, k_cache, v_cache)
+  model_decode.hlo.txt   — decode_step(tokens, pos, kc, vc) -> (logits, kc', vc')
+  embed_bag.hlo.txt      — DLRM embedding-bag kernel for the 'embed' workload
+  weights.bin            — f32 little-endian params, concatenated in PARAM_ORDER
+  manifest.json          — config, per-param offsets/shapes, argument orders
+
+Argument order of the model executables (the Rust-side ABI):
+  prefill: [prompt(i32)] + PARAM_ORDER
+  decode:  [tokens(i32), pos(i32), k_cache, v_cache] + PARAM_ORDER
+Outputs are always a flat tuple (return_tuple=True).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.kernels.embed import embed_bag
+from compile.kernels.attention import vmem_footprint_bytes as attn_vmem
+from compile.kernels.ffn import vmem_footprint_bytes as ffn_vmem, mxu_flops
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_model_artifacts(cfg: M.ModelConfig, out_dir: pathlib.Path, seed: int):
+    params = M.init_weights(jax.random.PRNGKey(seed), cfg)
+    order = M.PARAM_ORDER
+    plist = [params[n] for n in order]
+
+    # --- weights.bin + per-param manifest entries -------------------------
+    offsets = []
+    off = 0
+    with open(out_dir / "weights.bin", "wb") as f:
+        for name in order:
+            arr = np.asarray(params[name], dtype="<f4")
+            f.write(arr.tobytes())
+            offsets.append({
+                "name": name,
+                "shape": list(arr.shape),
+                "offset_bytes": off,
+                "size_bytes": arr.nbytes,
+            })
+            off += arr.nbytes
+
+    # --- prefill ----------------------------------------------------------
+    def prefill_fn(prompt, *plist):
+        p = dict(zip(order, plist))
+        return M.prefill(p, cfg, prompt)
+
+    prompt_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.prompt_len), jnp.int32)
+    w_specs = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in plist]
+    lowered = jax.jit(prefill_fn).lower(prompt_spec, *w_specs)
+    (out_dir / "model_prefill.hlo.txt").write_text(to_hlo_text(lowered))
+
+    # --- decode step --------------------------------------------------------
+    def decode_fn(tokens, pos, kc, vc, *plist):
+        p = dict(zip(order, plist))
+        return M.decode_step(p, cfg, tokens, pos, kc, vc)
+
+    tok_spec = jax.ShapeDtypeStruct((cfg.batch,), jnp.int32)
+    pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    kv_spec = jax.ShapeDtypeStruct(cfg.kv_cache_shape(), jnp.float32)
+    lowered = jax.jit(decode_fn).lower(tok_spec, pos_spec, kv_spec, kv_spec, *w_specs)
+    (out_dir / "model_decode.hlo.txt").write_text(to_hlo_text(lowered))
+
+    return offsets, off
+
+
+def build_embed_artifact(out_dir: pathlib.Path, n_rows: int, dim: int,
+                         batch: int, bag: int):
+    """Standalone embedding-bag executable for the DLRM 'embed' ISP workload."""
+    table_spec = jax.ShapeDtypeStruct((n_rows, dim), jnp.float32)
+    idx_spec = jax.ShapeDtypeStruct((batch, bag), jnp.int32)
+    lowered = jax.jit(lambda t, i: (embed_bag(t, i),)).lower(table_spec, idx_spec)
+    (out_dir / "embed_bag.hlo.txt").write_text(to_hlo_text(lowered))
+    return {"n_rows": n_rows, "dim": dim, "batch": batch, "bag": bag}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=20250710)
+    ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--n-layers", type=int, default=4)
+    ap.add_argument("--n-heads", type=int, default=8)
+    ap.add_argument("--d-ff", type=int, default=1024)
+    ap.add_argument("--max-seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--embed-rows", type=int, default=4096)
+    ap.add_argument("--embed-dim", type=int, default=64)
+    ap.add_argument("--embed-batch", type=int, default=32)
+    ap.add_argument("--embed-bag", type=int, default=16)
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    cfg = M.ModelConfig(
+        vocab=args.vocab, d_model=args.d_model, n_layers=args.n_layers,
+        n_heads=args.n_heads, d_ff=args.d_ff, max_seq=args.max_seq,
+        batch=args.batch, prompt_len=args.prompt_len,
+    )
+    print(f"[aot] model: {cfg} ({cfg.param_count():,} params)")
+
+    offsets, total = build_model_artifacts(cfg, out_dir, args.seed)
+    embed_cfg = build_embed_artifact(
+        out_dir, args.embed_rows, args.embed_dim, args.embed_batch, args.embed_bag)
+
+    weights_sha = hashlib.sha256((out_dir / "weights.bin").read_bytes()).hexdigest()
+    manifest = {
+        "config": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads, "d_ff": cfg.d_ff, "max_seq": cfg.max_seq,
+            "batch": cfg.batch, "prompt_len": cfg.prompt_len,
+            "head_dim": cfg.head_dim, "param_count": cfg.param_count(),
+        },
+        "seed": args.seed,
+        "params": offsets,
+        "weights_bytes": total,
+        "weights_sha256": weights_sha,
+        "param_order": M.PARAM_ORDER,
+        "arg_order": {
+            "prefill": ["prompt"] + M.PARAM_ORDER,
+            "decode": ["tokens", "pos", "k_cache", "v_cache"] + M.PARAM_ORDER,
+        },
+        "outputs": {
+            "prefill": ["logits", "k_cache", "v_cache"],
+            "decode": ["logits", "k_cache", "v_cache"],
+        },
+        "embed_bag": embed_cfg,
+        "artifacts": {
+            "prefill": "model_prefill.hlo.txt",
+            "decode": "model_decode.hlo.txt",
+            "embed_bag": "embed_bag.hlo.txt",
+            "weights": "weights.bin",
+        },
+        # DESIGN.md section Perf: analytic per-kernel VMEM/MXU estimates
+        # (interpret-mode wallclock is not a TPU proxy).
+        "perf_estimates": {
+            "attn_vmem_bytes_per_step": attn_vmem(cfg.head_dim),
+            "ffn_vmem_bytes_per_step": ffn_vmem(cfg.batch, cfg.d_model),
+            "ffn_mxu_flops_per_call": mxu_flops(cfg.batch, cfg.d_model, cfg.d_ff),
+        },
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+
+    for name in ("model_prefill.hlo.txt", "model_decode.hlo.txt",
+                 "embed_bag.hlo.txt", "weights.bin", "manifest.json"):
+        sz = (out_dir / name).stat().st_size
+        print(f"[aot] wrote {name}: {sz:,} bytes")
+
+
+if __name__ == "__main__":
+    main()

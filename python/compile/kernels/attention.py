@@ -1,0 +1,140 @@
+"""L1 Pallas kernel: KV-cache decode attention (the DockerSSD ISP hot spot).
+
+The paper's case study serves distributed LLM inference from a
+computing-enabled storage pool, where each DockerSSD keeps the KV cache on
+flash it can address "as local memory".  The per-token decode attention is
+the memory-bound hot spot: one new query row is scored against the whole
+cached K/V history.
+
+Hardware adaptation (GPU paper -> TPU kernel, see DESIGN.md
+section Hardware-Adaptation): instead of a warp-per-row flash-decoding
+kernel over HBM, we stream the KV cache through VMEM in blocks along the
+grid's innermost axis and keep an online-softmax carry (running max, running
+denominator, weighted accumulator) in VMEM scratch.  The full S x S attention
+matrix is never materialized; VMEM holds exactly one (block_kv, head_dim)
+K tile and V tile plus the O(head_dim) carry.
+
+The kernel is always constructed with ``interpret=True``: the CPU PJRT
+client cannot execute Mosaic custom-calls, and the AOT path (python/compile/
+aot.py) needs plain-HLO lowering so the Rust runtime can run it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Default KV block: 128 rows keeps the K/V tiles aligned to the 128-lane
+# vector register shape while bounding VMEM to 2 * 128 * head_dim * 4B of
+# tile traffic per grid step (~32KB for head_dim=32).
+DEFAULT_BLOCK_KV = 128
+
+NEG_INF = -1e30
+
+
+def _decode_attn_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
+                        m_ref, l_ref, acc_ref, *, block_kv: int):
+    """One (batch, head, kv-block) grid step of online-softmax attention.
+
+    Block views configured by the BlockSpecs in :func:`decode_attention`:
+      pos_ref: [1]                       valid cache length
+      q_ref:   [1, 1, head_dim]          the new query row for this (b, h)
+      k_ref:   [1, 1, block_kv, head_dim]
+      v_ref:   [1, 1, block_kv, head_dim]
+      o_ref:   [1, 1, head_dim]
+      m/l/acc: VMEM scratch carrying online-softmax state across kv blocks
+    """
+    blk = pl.program_id(2)
+    num_blocks = pl.num_programs(2)
+
+    @pl.when(blk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[0]
+    q = q_ref[0, 0, :].astype(jnp.float32)       # [head_dim]
+    k = k_ref[0, 0].astype(jnp.float32)          # [block_kv, head_dim]
+    v = v_ref[0, 0].astype(jnp.float32)          # [block_kv, head_dim]
+
+    # Scores for this block of cached keys; rows at index >= pos are padding.
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    s = jnp.dot(k, q) * scale                    # [block_kv]
+    offs = blk * block_kv + jax.lax.iota(jnp.int32, block_kv)
+    s = jnp.where(offs < pos, s, NEG_INF)
+
+    # Online-softmax (flash-decoding) recurrence.
+    m_prev = m_ref[0]
+    m_cur = jnp.maximum(m_prev, jnp.max(s))
+    p = jnp.exp(s - m_cur)                       # [block_kv]
+    alpha = jnp.exp(m_prev - m_cur)
+    l_ref[0] = l_ref[0] * alpha + jnp.sum(p)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(p, v)
+    m_ref[0] = m_cur
+
+    @pl.when(blk == num_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[0], 1e-30)
+        o_ref[0, 0, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, block_kv: int = DEFAULT_BLOCK_KV):
+    """Single-token decode attention against a KV cache.
+
+    Args:
+      q:        [batch, heads, head_dim] query rows for the new token.
+      k_cache:  [batch, heads, max_seq, head_dim]
+      v_cache:  [batch, heads, max_seq, head_dim]
+      pos:      scalar int32 — number of valid cache rows (the new token's
+                K/V must already be written at index ``pos - 1``).
+      block_kv: KV rows streamed through VMEM per grid step.
+
+    Returns:
+      [batch, heads, head_dim] attention output, dtype of ``q``.
+    """
+    batch, heads, max_seq, head_dim = k_cache.shape
+    if q.shape != (batch, heads, head_dim):
+        raise ValueError(f"q shape {q.shape} != {(batch, heads, head_dim)}")
+    block_kv = min(block_kv, max_seq)
+    if max_seq % block_kv != 0:
+        raise ValueError(f"max_seq={max_seq} not a multiple of block_kv={block_kv}")
+    num_blocks = max_seq // block_kv
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (1,))
+
+    return pl.pallas_call(
+        functools.partial(_decode_attn_kernel, block_kv=block_kv),
+        grid=(batch, heads, num_blocks),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, s: (0,)),
+            pl.BlockSpec((1, 1, head_dim), lambda b, h, s: (b, h, 0)),
+            pl.BlockSpec((1, 1, block_kv, head_dim), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, block_kv, head_dim), lambda b, h, s: (b, h, s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, head_dim), lambda b, h, s: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, heads, head_dim), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((head_dim,), jnp.float32),
+        ],
+        interpret=True,
+    )(pos_arr, q, k_cache, v_cache)
+
+
+def vmem_footprint_bytes(head_dim: int, block_kv: int = DEFAULT_BLOCK_KV,
+                         dtype_bytes: int = 4) -> int:
+    """Analytic VMEM bytes resident per grid step (DESIGN.md section Perf).
+
+    One K tile + one V tile + q row + output row + the online-softmax carry.
+    Used by the perf pass to verify the kernel stays VMEM-resident for long
+    caches instead of scaling with max_seq.
+    """
+    tiles = 2 * block_kv * head_dim * dtype_bytes
+    rows = 2 * head_dim * dtype_bytes
+    carry = (2 + head_dim) * 4
+    return tiles + rows + carry

@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: embedding-bag lookup + aggregation (DLRM 'embed' workload).
+
+Table 2's 'embed' workloads (rm1/rm2) perform DLRM embedding-table lookups
+and aggregate sparse features — the canonical ISP workload the paper offloads
+to DockerSSD (the table lives on flash; only the pooled vectors leave the
+device).  This kernel is the in-storage compute for that path and backs the
+``isp_workloads`` example's real-execution mode.
+
+Tiling: grid over batch tiles; each step gathers ``bag`` rows for
+``block_b`` bags from the table resident in ANY/HBM memory space and
+segment-sums them in VMEM.  The gather is expressed with dynamic row loads
+(pl.load on a dynamic slice), which interpret-mode executes directly and a
+TPU lowering would turn into a DMA-gather per row.
+
+interpret=True for CPU-PJRT executability (see attention.py docstring).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 8
+
+
+def _embed_bag_kernel(idx_ref, table_ref, o_ref, *, bag: int, block_b: int):
+    """Views: idx [block_b, bag] int32, table [n_rows, dim], o [block_b, dim]."""
+    dim = o_ref.shape[-1]
+
+    def body(i, acc):
+        def inner(j, a):
+            row = idx_ref[i, j]
+            vec = table_ref[pl.dslice(row, 1), pl.dslice(0, dim)]
+            return a + vec[0]
+
+        pooled = jax.lax.fori_loop(0, bag, inner, jnp.zeros((dim,), jnp.float32))
+        o_ref[i, :] = pooled.astype(o_ref.dtype)
+        return acc
+
+    jax.lax.fori_loop(0, block_b, body, 0)
+
+
+def embed_bag(table, indices, *, block_b: int = DEFAULT_BLOCK_B):
+    """Sum-pooled embedding lookup: ``out[b] = sum_j table[indices[b, j]]``.
+
+    Args:
+      table:   [n_rows, dim] float embedding table.
+      indices: [batch, bag] int32 row ids, all in ``[0, n_rows)``.
+      block_b: bags processed per grid step.
+
+    Returns: [batch, dim], dtype of ``table``.
+    """
+    n_rows, dim = table.shape
+    batch, bag = indices.shape
+    block_b = min(block_b, batch)
+    if batch % block_b != 0:
+        raise ValueError(f"batch={batch} not a multiple of block_b={block_b}")
+    num_blocks = batch // block_b
+
+    return pl.pallas_call(
+        functools.partial(_embed_bag_kernel, bag=bag, block_b=block_b),
+        grid=(num_blocks,),
+        in_specs=[
+            pl.BlockSpec((block_b, bag), lambda b: (b, 0)),
+            pl.BlockSpec((n_rows, dim), lambda b: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, dim), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, dim), table.dtype),
+        interpret=True,
+    )(indices.astype(jnp.int32), table)

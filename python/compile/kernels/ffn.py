@@ -1,0 +1,110 @@
+"""L1 Pallas kernel: fused feed-forward network (matmul -> bias -> GeLU -> matmul -> bias).
+
+The transformer FFN is the MXU-bound half of the decode step.  On GPU the
+paper's substrate would express this as two cuBLAS calls with an elementwise
+kernel between them; on TPU we fuse the chain so the [rows, block_f]
+intermediate activation lives only in VMEM and never round-trips to HBM.
+
+Tiling: the hidden (ffn) dimension is split into ``block_f``-wide tiles on
+the grid's innermost axis.  Each step computes
+
+    h_blk = gelu(x @ w1[:, blk] + b1[blk])        # [rows, block_f], VMEM only
+    acc  += h_blk @ w2[blk, :]                    # [rows, d_model] carry
+
+so the MXU sees two dense (rows x d_model x block_f) contractions per step
+and the accumulator is the only cross-step state.  block_f=128 matches the
+MXU systolic tile edge.
+
+interpret=True for CPU-PJRT executability (see attention.py docstring).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_F = 128
+
+
+def _gelu(x):
+    # tanh-approximation GeLU, matching jax.nn.gelu(approximate=True).
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x * x * x)))
+
+
+def _ffn_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref, acc_ref):
+    """One hidden-dim tile of the fused FFN.
+
+    Views: x [rows, d], w1 [d, block_f], b1 [block_f], w2 [block_f, d],
+    b2 [d], o [rows, d], acc scratch [rows, d] (f32).
+    """
+    blk = pl.program_id(0)
+    num_blocks = pl.num_programs(0)
+
+    @pl.when(blk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    w1 = w1_ref[...].astype(jnp.float32)
+    h = _gelu(jnp.dot(x, w1) + b1_ref[...].astype(jnp.float32))
+    acc_ref[...] += jnp.dot(h, w2_ref[...].astype(jnp.float32))
+
+    @pl.when(blk == num_blocks - 1)
+    def _finalize():
+        o_ref[...] = (acc_ref[...] + b2_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def fused_ffn(x, w1, b1, w2, b2, *, block_f: int = DEFAULT_BLOCK_F):
+    """Fused ``gelu(x @ w1 + b1) @ w2 + b2``.
+
+    Args:
+      x:  [rows, d_model]
+      w1: [d_model, d_ff];  b1: [d_ff]
+      w2: [d_ff, d_model];  b2: [d_model]
+      block_f: hidden-dim tile width streamed through VMEM per grid step.
+
+    Returns: [rows, d_model], dtype of ``x``.
+    """
+    rows, d_model = x.shape
+    d_ff = w1.shape[1]
+    if w1.shape != (d_model, d_ff) or w2.shape != (d_ff, d_model):
+        raise ValueError(f"inconsistent FFN shapes: {w1.shape}, {w2.shape}")
+    block_f = min(block_f, d_ff)
+    if d_ff % block_f != 0:
+        raise ValueError(f"d_ff={d_ff} not a multiple of block_f={block_f}")
+    num_blocks = d_ff // block_f
+
+    return pl.pallas_call(
+        _ffn_kernel,
+        grid=(num_blocks,),
+        in_specs=[
+            pl.BlockSpec((rows, d_model), lambda f: (0, 0)),
+            pl.BlockSpec((d_model, block_f), lambda f: (0, f)),
+            pl.BlockSpec((block_f,), lambda f: (f,)),
+            pl.BlockSpec((block_f, d_model), lambda f: (f, 0)),
+            pl.BlockSpec((d_model,), lambda f: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rows, d_model), lambda f: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d_model), x.dtype),
+        scratch_shapes=[pltpu.VMEM((rows, d_model), jnp.float32)],
+        interpret=True,
+    )(x, w1, b1, w2, b2)
+
+
+def vmem_footprint_bytes(rows: int, d_model: int, block_f: int = DEFAULT_BLOCK_F,
+                         dtype_bytes: int = 4) -> int:
+    """Analytic VMEM bytes per grid step (x tile + weight tiles + carry)."""
+    x_tile = rows * d_model * dtype_bytes
+    w_tiles = 2 * d_model * block_f * dtype_bytes + (block_f + d_model) * dtype_bytes
+    h_tile = rows * block_f * 4
+    acc = rows * d_model * 4
+    return x_tile + w_tiles + h_tile + acc
+
+
+def mxu_flops(rows: int, d_model: int, d_ff: int) -> int:
+    """MACs*2 issued to the MXU for one fused_ffn call (utilization estimate)."""
+    return 2 * rows * d_model * d_ff * 2

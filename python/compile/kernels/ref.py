@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (correctness ground truth).
+
+Each function mirrors the exact contract of its kernel counterpart with the
+most literal jnp expression possible — no tiling, no online softmax, no
+fusion — so pytest/hypothesis can assert_allclose kernel vs oracle across
+shape and dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_decode_attention(q, k_cache, v_cache, pos):
+    """Oracle for kernels.attention.decode_attention.
+
+    q [B,H,D], k_cache/v_cache [B,H,S,D], pos scalar -> [B,H,D].
+    """
+    qf = q.astype(jnp.float32)
+    k = k_cache.astype(jnp.float32)
+    v = v_cache.astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.float32(qf.shape[-1]))
+    s = jnp.einsum("bhd,bhsd->bhs", qf, k) * scale
+    mask = jnp.arange(k.shape[2]) < pos
+    s = jnp.where(mask[None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhs,bhsd->bhd", p, v)
+    return out.astype(q.dtype)
+
+
+def ref_ffn(x, w1, b1, w2, b2):
+    """Oracle for kernels.ffn.fused_ffn (tanh-approximate GeLU)."""
+    x32 = x.astype(jnp.float32)
+    h = jax.nn.gelu(x32 @ w1.astype(jnp.float32) + b1.astype(jnp.float32),
+                    approximate=True)
+    out = h @ w2.astype(jnp.float32) + b2.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def ref_embed_bag(table, indices):
+    """Oracle for kernels.embed.embed_bag."""
+    gathered = table.astype(jnp.float32)[indices]          # [B, bag, dim]
+    return jnp.sum(gathered, axis=1).astype(table.dtype)

@@ -1,0 +1,237 @@
+"""L2 JAX model: decoder-only transformer with KV cache, built on the L1 kernels.
+
+This is the model the DockerSSD storage pool serves in the paper's case
+study (distributed LLM inference with per-device KV caching).  Two entry
+points are AOT-lowered by aot.py and executed from the Rust coordinator:
+
+  * :func:`prefill`     — run a fixed-length prompt, fill the KV cache, and
+                          return the last-position logits.
+  * :func:`decode_step` — one autoregressive token: append K/V at ``pos``,
+                          run Pallas decode attention + fused FFN per layer,
+                          return next-token logits and the updated cache.
+
+Weights are *runtime inputs* (not baked constants) so the HLO stays small
+and the Rust side performs a real model-load from ``artifacts/weights.bin``.
+The canonical argument order is ``PARAM_ORDER``; aot.py records it in the
+artifact manifest.
+
+Python here is build-time only — never on the request path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.attention import decode_attention
+from compile.kernels.ffn import fused_ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static shape configuration for one AOT-compiled model variant."""
+
+    vocab: int = 512
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    d_ff: int = 1024
+    max_seq: int = 256
+    batch: int = 4
+    prompt_len: int = 32
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        return sum(math.prod(s) for _, s in param_shapes(self))
+
+    def kv_cache_shape(self) -> Tuple[int, ...]:
+        return (self.n_layers, self.batch, self.n_heads, self.max_seq, self.head_dim)
+
+
+# Canonical parameter order — the ABI between aot.py and the Rust runtime.
+# Per-layer tensors are stacked along a leading n_layers axis so the layer
+# loop lowers to one lax.scan instead of n_layers copies of the body.
+PARAM_ORDER: List[str] = [
+    "tok_emb", "pos_emb",
+    "ln1_s", "ln1_b", "wqkv", "bqkv", "wo", "bo",
+    "ln2_s", "ln2_b", "w1", "b1", "w2", "b2",
+    "lnf_s", "lnf_b",
+]
+
+
+def param_shapes(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """(name, shape) for every parameter, in PARAM_ORDER."""
+    L, d, f, V, S = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab, cfg.max_seq
+    return [
+        ("tok_emb", (V, d)),
+        ("pos_emb", (S, d)),
+        ("ln1_s", (L, d)), ("ln1_b", (L, d)),
+        ("wqkv", (L, d, 3 * d)), ("bqkv", (L, 3 * d)),
+        ("wo", (L, d, d)), ("bo", (L, d)),
+        ("ln2_s", (L, d)), ("ln2_b", (L, d)),
+        ("w1", (L, d, f)), ("b1", (L, f)),
+        ("w2", (L, f, d)), ("b2", (L, d)),
+        ("lnf_s", (d,)), ("lnf_b", (d,)),
+    ]
+
+
+def init_weights(key, cfg: ModelConfig) -> Dict[str, jax.Array]:
+    """GPT-2-style initialization (scaled normal matrices, ones/zeros LN)."""
+    params: Dict[str, jax.Array] = {}
+    shapes = dict(param_shapes(cfg))
+    keys = jax.random.split(key, len(PARAM_ORDER))
+    for name, k in zip(PARAM_ORDER, keys):
+        shape = shapes[name]
+        if name in ("ln1_s", "ln2_s", "lnf_s"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name in ("ln1_b", "ln2_b", "lnf_b", "bqkv", "bo", "b1", "b2"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif name in ("tok_emb", "pos_emb"):
+            params[name] = 0.02 * jax.random.normal(k, shape, jnp.float32)
+        else:
+            fan_in = shape[-2]
+            params[name] = jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(fan_in)
+    return params
+
+
+def _layernorm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _split_heads(x, cfg: ModelConfig):
+    # [batch, d_model] -> [batch, heads, head_dim]
+    return x.reshape(x.shape[0], cfg.n_heads, cfg.head_dim)
+
+
+def decode_step(params: Dict[str, jax.Array], cfg: ModelConfig,
+                tokens: jax.Array, pos: jax.Array,
+                k_cache: jax.Array, v_cache: jax.Array):
+    """One autoregressive decode step for the whole batch.
+
+    Args:
+      params:  dict keyed per PARAM_ORDER.
+      tokens:  [batch] int32 — the tokens at position ``pos`` whose
+               successors we predict.
+      pos:     scalar int32 — index where this token's K/V is written; the
+               attention then sees ``pos + 1`` valid rows.
+      k_cache: [n_layers, batch, heads, max_seq, head_dim]
+      v_cache: same shape.
+
+    Returns: (logits [batch, vocab], k_cache', v_cache').
+    """
+    B = cfg.batch
+    x = params["tok_emb"][tokens] + params["pos_emb"][pos]          # [B, d]
+
+    layer_ws = (
+        params["ln1_s"], params["ln1_b"], params["wqkv"], params["bqkv"],
+        params["wo"], params["bo"], params["ln2_s"], params["ln2_b"],
+        params["w1"], params["b1"], params["w2"], params["b2"],
+    )
+
+    def layer(carry, xs):
+        x = carry
+        (ln1_s, ln1_b, wqkv, bqkv, wo, bo, ln2_s, ln2_b, w1, b1, w2, b2,
+         kc, vc) = xs
+        h = _layernorm(x, ln1_s, ln1_b)
+        qkv = h @ wqkv + bqkv                                       # [B, 3d]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q, k, v = (_split_heads(t, cfg) for t in (q, k, v))         # [B,H,Dh]
+        # Append this token's K/V at row ``pos``.
+        kc = jax.lax.dynamic_update_slice(kc, k[:, :, None, :], (0, 0, pos, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v[:, :, None, :], (0, 0, pos, 0))
+        attn = decode_attention(q, kc, vc, pos + 1)                 # [B,H,Dh]
+        x = x + attn.reshape(B, cfg.d_model) @ wo + bo
+        h2 = _layernorm(x, ln2_s, ln2_b)
+        x = x + fused_ffn(h2, w1, b1, w2, b2)
+        return x, (kc, vc)
+
+    x, (k_cache, v_cache) = jax.lax.scan(layer, x, layer_ws + (k_cache, v_cache))
+    x = _layernorm(x, params["lnf_s"], params["lnf_b"])
+    logits = x @ params["tok_emb"].T                                # tied head
+    return logits, k_cache, v_cache
+
+
+def prefill(params: Dict[str, jax.Array], cfg: ModelConfig, prompt: jax.Array):
+    """Process a fixed-length prompt, returning last-token logits + KV cache.
+
+    Prefill is compute-bound and runs once per request, so it uses plain
+    jnp causal attention (XLA fuses it well); the Pallas kernels own the
+    per-token decode path, which dominates end-to-end serving time.
+
+    Args:
+      prompt: [batch, prompt_len] int32.
+
+    Returns: (logits [batch, vocab], k_cache, v_cache) with caches shaped
+      [n_layers, batch, heads, max_seq, head_dim]; rows [0, prompt_len) valid.
+    """
+    B, P, S = cfg.batch, cfg.prompt_len, cfg.max_seq
+    H, Dh = cfg.n_heads, cfg.head_dim
+    x = params["tok_emb"][prompt] + params["pos_emb"][:P][None, :, :]  # [B,P,d]
+
+    layer_ws = (
+        params["ln1_s"], params["ln1_b"], params["wqkv"], params["bqkv"],
+        params["wo"], params["bo"], params["ln2_s"], params["ln2_b"],
+        params["w1"], params["b1"], params["w2"], params["b2"],
+    )
+    causal = jnp.tril(jnp.ones((P, P), bool))
+
+    def layer(x, xs):
+        ln1_s, ln1_b, wqkv, bqkv, wo, bo, ln2_s, ln2_b, w1, b1, w2, b2 = xs
+        h = _layernorm(x, ln1_s, ln1_b)
+        qkv = h @ wqkv + bqkv                                        # [B,P,3d]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(B, P, H, Dh).transpose(0, 2, 1, 3)             # [B,H,P,Dh]
+        k = k.reshape(B, P, H, Dh).transpose(0, 2, 1, 3)
+        v = v.reshape(B, P, H, Dh).transpose(0, 2, 1, 3)
+        s = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(Dh))
+        s = jnp.where(causal[None, None], s, -1e30)
+        attn = jnp.einsum("bhqk,bhkd->bhqd", jax.nn.softmax(s, -1), v)
+        attn = attn.transpose(0, 2, 1, 3).reshape(B, P, cfg.d_model)
+        x = x + attn @ wo + bo
+        h2 = _layernorm(x, ln2_s, ln2_b)
+        ff = jax.nn.gelu(h2 @ w1 + b1, approximate=True) @ w2 + b2
+        x = x + ff
+        # Cache K/V padded out to max_seq rows.
+        pad = [(0, 0), (0, 0), (0, S - P), (0, 0)]
+        return x, (jnp.pad(k, pad), jnp.pad(v, pad))
+
+    x, (k_cache, v_cache) = jax.lax.scan(layer, x, layer_ws)
+    x = _layernorm(x[:, -1, :], params["lnf_s"], params["lnf_b"])    # [B, d]
+    logits = x @ params["tok_emb"].T
+    return logits, k_cache, v_cache
+
+
+def reference_decode_step(params, cfg: ModelConfig, tokens, pos, k_cache, v_cache):
+    """Oracle decode step using only jnp (no Pallas), for pytest."""
+    from compile.kernels.ref import ref_decode_attention, ref_ffn
+
+    B = cfg.batch
+    x = params["tok_emb"][tokens] + params["pos_emb"][pos]
+
+    for l in range(cfg.n_layers):
+        h = _layernorm(x, params["ln1_s"][l], params["ln1_b"][l])
+        qkv = h @ params["wqkv"][l] + params["bqkv"][l]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q, k, v = (_split_heads(t, cfg) for t in (q, k, v))
+        kc = jax.lax.dynamic_update_slice(k_cache[l], k[:, :, None, :], (0, 0, pos, 0))
+        vc = jax.lax.dynamic_update_slice(v_cache[l], v[:, :, None, :], (0, 0, pos, 0))
+        k_cache = k_cache.at[l].set(kc)
+        v_cache = v_cache.at[l].set(vc)
+        attn = ref_decode_attention(q, kc, vc, pos + 1)
+        x = x + attn.reshape(B, cfg.d_model) @ params["wo"][l] + params["bo"][l]
+        h2 = _layernorm(x, params["ln2_s"][l], params["ln2_b"][l])
+        x = x + ref_ffn(h2, params["w1"][l], params["b1"][l],
+                        params["w2"][l], params["b2"][l])
+
+    x = _layernorm(x, params["lnf_s"], params["lnf_b"])
+    return x @ params["tok_emb"].T, k_cache, v_cache

@@ -1,0 +1,95 @@
+"""AOT artifact tests: manifest integrity and HLO lowering round-trip."""
+
+import json
+import pathlib
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ART = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+needs_artifacts = pytest.mark.skipif(
+    not (ART / "manifest.json").exists(),
+    reason="run `make artifacts` first",
+)
+
+
+def test_to_hlo_text_small_function():
+    lowered = jax.jit(lambda x: (x * 2 + 1,)).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ROOT" in text
+
+
+def test_to_hlo_text_pallas_kernel_lowers_to_plain_hlo():
+    from compile.kernels.ffn import fused_ffn
+    d, f = 32, 64
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32)
+             for s in [(2, d), (d, f), (f,), (f, d), (d,)]]
+    lowered = jax.jit(lambda *a: (fused_ffn(*a),)).lower(*specs)
+    text = aot.to_hlo_text(lowered)
+    # interpret=True must not leave backend custom-calls behind
+    assert "mosaic" not in text.lower()
+    assert "HloModule" in text
+
+
+@needs_artifacts
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        return json.loads((ART / "manifest.json").read_text())
+
+    def test_param_order_matches_model(self, manifest):
+        assert manifest["param_order"] == M.PARAM_ORDER
+
+    def test_offsets_contiguous(self, manifest):
+        off = 0
+        for p in manifest["params"]:
+            assert p["offset_bytes"] == off
+            off += p["size_bytes"]
+        assert off == manifest["weights_bytes"]
+
+    def test_weights_file_size(self, manifest):
+        assert (ART / "weights.bin").stat().st_size == manifest["weights_bytes"]
+
+    def test_shapes_match_config(self, manifest):
+        c = manifest["config"]
+        cfg = M.ModelConfig(
+            vocab=c["vocab"], d_model=c["d_model"], n_layers=c["n_layers"],
+            n_heads=c["n_heads"], d_ff=c["d_ff"], max_seq=c["max_seq"],
+            batch=c["batch"], prompt_len=c["prompt_len"])
+        want = dict(M.param_shapes(cfg))
+        for p in manifest["params"]:
+            assert tuple(p["shape"]) == want[p["name"]], p["name"]
+
+    def test_artifact_files_exist(self, manifest):
+        for f in manifest["artifacts"].values():
+            assert (ART / f).exists(), f
+
+    def test_weights_reproducible_from_seed(self, manifest):
+        """weights.bin must be exactly init_weights(seed) in PARAM_ORDER."""
+        c = manifest["config"]
+        cfg = M.ModelConfig(
+            vocab=c["vocab"], d_model=c["d_model"], n_layers=c["n_layers"],
+            n_heads=c["n_heads"], d_ff=c["d_ff"], max_seq=c["max_seq"],
+            batch=c["batch"], prompt_len=c["prompt_len"])
+        params = M.init_weights(jax.random.PRNGKey(manifest["seed"]), cfg)
+        blob = (ART / "weights.bin").read_bytes()
+        for p in manifest["params"]:
+            arr = np.frombuffer(
+                blob[p["offset_bytes"]:p["offset_bytes"] + p["size_bytes"]],
+                dtype="<f4").reshape(p["shape"])
+            np.testing.assert_allclose(arr, params[p["name"]], rtol=0, atol=0)
+
+    def test_hlo_artifacts_have_expected_entry(self, manifest):
+        for key in ("prefill", "decode", "embed_bag"):
+            text = (ART / manifest["artifacts"][key]).read_text()
+            assert text.startswith("HloModule"), key
+            assert "mosaic" not in text.lower(), key

@@ -1,0 +1,149 @@
+"""Kernel-vs-oracle correctness: the core L1 signal.
+
+Every Pallas kernel is checked against its pure-jnp oracle in ref.py with
+assert_allclose, across deterministic cases here and hypothesis-driven
+shape/dtype sweeps in test_kernel_properties.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.attention import decode_attention, vmem_footprint_bytes
+from compile.kernels.embed import embed_bag
+from compile.kernels.ffn import fused_ffn
+from compile.kernels import ref
+
+
+def rand(key, *shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype)
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("pos", [1, 7, 100, 255, 256])
+    def test_matches_ref_across_pos(self, pos):
+        k = jax.random.split(jax.random.PRNGKey(pos), 3)
+        B, H, S, D = 2, 4, 256, 32
+        q = rand(k[0], B, H, D)
+        kc = rand(k[1], B, H, S, D)
+        vc = rand(k[2], B, H, S, D)
+        out = decode_attention(q, kc, vc, pos)
+        want = ref.ref_decode_attention(q, kc, vc, pos)
+        np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("block_kv", [32, 64, 128, 256])
+    def test_block_size_invariance(self, block_kv):
+        k = jax.random.split(jax.random.PRNGKey(1), 3)
+        B, H, S, D = 1, 2, 256, 16
+        q = rand(k[0], B, H, D)
+        kc = rand(k[1], B, H, S, D)
+        vc = rand(k[2], B, H, S, D)
+        out = decode_attention(q, kc, vc, 200, block_kv=block_kv)
+        want = ref.ref_decode_attention(q, kc, vc, 200)
+        np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+    def test_pos_one_attends_only_first_row(self):
+        k = jax.random.split(jax.random.PRNGKey(2), 3)
+        B, H, S, D = 1, 1, 128, 8
+        q = rand(k[0], B, H, D)
+        kc = rand(k[1], B, H, S, D)
+        vc = rand(k[2], B, H, S, D)
+        out = decode_attention(q, kc, vc, 1)
+        # softmax over a single valid row == that row's V exactly
+        np.testing.assert_allclose(out[0, 0], vc[0, 0, 0], rtol=1e-6, atol=1e-6)
+
+    def test_padding_rows_are_ignored(self):
+        k = jax.random.split(jax.random.PRNGKey(3), 3)
+        B, H, S, D = 1, 2, 128, 16
+        q = rand(k[0], B, H, D)
+        kc = rand(k[1], B, H, S, D)
+        vc = rand(k[2], B, H, S, D)
+        pos = 40
+        out1 = decode_attention(q, kc, vc, pos)
+        # Garbage beyond pos must not change the result.
+        kc2 = kc.at[:, :, pos:, :].set(1e4)
+        vc2 = vc.at[:, :, pos:, :].set(-1e4)
+        out2 = decode_attention(q, kc2, vc2, pos)
+        np.testing.assert_allclose(out1, out2, rtol=1e-6, atol=1e-6)
+
+    def test_mismatched_q_shape_raises(self):
+        q = jnp.zeros((2, 3, 8))
+        kc = jnp.zeros((2, 4, 64, 8))
+        with pytest.raises(ValueError):
+            decode_attention(q, kc, kc, 1)
+
+    def test_non_divisible_block_raises(self):
+        q = jnp.zeros((1, 1, 8))
+        kc = jnp.zeros((1, 1, 100, 8))
+        with pytest.raises(ValueError):
+            decode_attention(q, kc, kc, 1, block_kv=64)
+
+    def test_vmem_footprint_is_seq_independent(self):
+        # The whole point of block-streaming: VMEM cost does not grow with S.
+        f = vmem_footprint_bytes(head_dim=64)
+        assert f == vmem_footprint_bytes(head_dim=64)
+        assert f < 4 * 1024 * 1024  # comfortably under one VMEM bank
+
+
+class TestFusedFFN:
+    @pytest.mark.parametrize("rows,d,f", [(1, 64, 128), (4, 256, 1024), (8, 128, 512)])
+    def test_matches_ref(self, rows, d, f):
+        k = jax.random.split(jax.random.PRNGKey(rows * d), 5)
+        x = rand(k[0], rows, d)
+        w1 = rand(k[1], d, f) * 0.1
+        b1 = rand(k[2], f)
+        w2 = rand(k[3], f, d) * 0.1
+        b2 = rand(k[4], d)
+        out = fused_ffn(x, w1, b1, w2, b2)
+        want = ref.ref_ffn(x, w1, b1, w2, b2)
+        np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("block_f", [64, 128, 256, 512])
+    def test_block_size_invariance(self, block_f):
+        k = jax.random.split(jax.random.PRNGKey(9), 5)
+        x = rand(k[0], 2, 128)
+        w1 = rand(k[1], 128, 512) * 0.1
+        b1 = rand(k[2], 512)
+        w2 = rand(k[3], 512, 128) * 0.1
+        b2 = rand(k[4], 128)
+        out = fused_ffn(x, w1, b1, w2, b2, block_f=block_f)
+        want = ref.ref_ffn(x, w1, b1, w2, b2)
+        np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+
+    def test_zero_input_gives_bias_path(self):
+        d, f = 32, 64
+        x = jnp.zeros((2, d))
+        w1 = jnp.ones((d, f))
+        b1 = jnp.zeros((f,))
+        w2 = jnp.ones((f, d))
+        b2 = jnp.full((d,), 3.0)
+        # gelu(0) = 0, so out = b2 everywhere.
+        np.testing.assert_allclose(fused_ffn(x, w1, b1, w2, b2),
+                                   jnp.broadcast_to(b2, (2, d)), atol=1e-6)
+
+    def test_inconsistent_shapes_raise(self):
+        with pytest.raises(ValueError):
+            fused_ffn(jnp.zeros((2, 8)), jnp.zeros((8, 16)), jnp.zeros((16,)),
+                      jnp.zeros((8, 16)), jnp.zeros((8,)))
+
+
+class TestEmbedBag:
+    @pytest.mark.parametrize("batch,bag", [(8, 4), (32, 16), (16, 1)])
+    def test_matches_ref(self, batch, bag):
+        k = jax.random.split(jax.random.PRNGKey(batch), 2)
+        table = rand(k[0], 1000, 64)
+        idx = jax.random.randint(k[1], (batch, bag), 0, 1000)
+        out = embed_bag(table, idx)
+        want = ref.ref_embed_bag(table, idx)
+        np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+
+    def test_repeated_index_counts_multiply(self):
+        table = jnp.eye(4, dtype=jnp.float32)
+        idx = jnp.array([[2, 2, 2, 2]], dtype=jnp.int32)
+        out = embed_bag(table, idx)
+        np.testing.assert_allclose(out[0], jnp.array([0, 0, 4, 0]), atol=1e-6)
+
+    def test_non_divisible_batch_raises(self):
+        with pytest.raises(ValueError):
+            embed_bag(jnp.zeros((10, 4)), jnp.zeros((6, 2), jnp.int32), block_b=4)

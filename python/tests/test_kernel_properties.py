@@ -1,0 +1,92 @@
+"""Hypothesis shape/dtype sweeps: Pallas kernels vs pure-jnp oracles.
+
+Strategy draws structurally valid shapes (power-of-two-ish dims, divisible
+block sizes) and random positions/indices, then asserts allclose against
+ref.py.  Deadlines are disabled: interpret-mode Pallas traces are slow on
+the first call for each new shape.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import decode_attention
+from compile.kernels.embed import embed_bag
+from compile.kernels.ffn import fused_ffn
+from compile.kernels import ref
+
+COMMON = dict(deadline=None, max_examples=20, print_blob=True)
+
+
+def arrays(key, *shape, scale=1.0, dtype=jnp.float32):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+@settings(**COMMON)
+@given(
+    batch=st.sampled_from([1, 2, 3]),
+    heads=st.sampled_from([1, 2, 4]),
+    seq=st.sampled_from([64, 128, 192, 256]),
+    head_dim=st.sampled_from([8, 16, 32]),
+    block_kv=st.sampled_from([32, 64, 128]),
+    pos_frac=st.floats(0.01, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_decode_attention_matches_ref(batch, heads, seq, head_dim, block_kv,
+                                      pos_frac, seed, dtype):
+    if seq % block_kv != 0:
+        block_kv = 32
+    pos = max(1, int(pos_frac * seq))
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = arrays(ks[0], batch, heads, head_dim, dtype=dtype)
+    kc = arrays(ks[1], batch, heads, seq, head_dim, dtype=dtype)
+    vc = arrays(ks[2], batch, heads, seq, head_dim, dtype=dtype)
+    out = decode_attention(q, kc, vc, pos, block_kv=block_kv)
+    want = ref.ref_decode_attention(q, kc, vc, pos)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+@settings(**COMMON)
+@given(
+    rows=st.sampled_from([1, 2, 4, 8]),
+    d_model=st.sampled_from([32, 64, 128]),
+    d_ff=st.sampled_from([64, 128, 256, 512]),
+    block_f=st.sampled_from([32, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_ffn_matches_ref(rows, d_model, d_ff, block_f, seed):
+    if d_ff % block_f != 0:
+        block_f = 32
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = arrays(ks[0], rows, d_model)
+    w1 = arrays(ks[1], d_model, d_ff, scale=0.1)
+    b1 = arrays(ks[2], d_ff)
+    w2 = arrays(ks[3], d_ff, d_model, scale=0.1)
+    b2 = arrays(ks[4], d_model)
+    out = fused_ffn(x, w1, b1, w2, b2, block_f=block_f)
+    want = ref.ref_ffn(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(out, want, rtol=3e-4, atol=3e-4)
+
+
+@settings(**COMMON)
+@given(
+    n_rows=st.sampled_from([16, 100, 1024]),
+    dim=st.sampled_from([4, 16, 64]),
+    batch=st.sampled_from([4, 8, 16, 32]),
+    bag=st.sampled_from([1, 2, 8, 16]),
+    block_b=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_embed_bag_matches_ref(n_rows, dim, batch, bag, block_b, seed):
+    if batch % block_b != 0:
+        block_b = 2
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    table = arrays(ks[0], n_rows, dim)
+    idx = jax.random.randint(ks[1], (batch, bag), 0, n_rows)
+    out = embed_bag(table, idx, block_b=block_b)
+    want = ref.ref_embed_bag(table, idx)
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)

@@ -1,0 +1,105 @@
+"""L2 model tests: decode step vs reference, prefill/decode consistency, shapes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.ModelConfig(vocab=64, d_model=32, n_layers=2, n_heads=4, d_ff=64,
+                    max_seq=64, batch=2, prompt_len=8)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_weights(jax.random.PRNGKey(0), CFG)
+
+
+def empty_cache():
+    return (jnp.zeros(CFG.kv_cache_shape(), jnp.float32),
+            jnp.zeros(CFG.kv_cache_shape(), jnp.float32))
+
+
+class TestShapes:
+    def test_param_shapes_cover_order(self):
+        names = [n for n, _ in M.param_shapes(CFG)]
+        assert names == M.PARAM_ORDER
+
+    def test_param_count_matches_arrays(self, params):
+        total = sum(int(np.prod(p.shape)) for p in params.values())
+        assert total == CFG.param_count()
+
+    def test_decode_output_shapes(self, params):
+        kc, vc = empty_cache()
+        toks = jnp.zeros((CFG.batch,), jnp.int32)
+        logits, kc2, vc2 = M.decode_step(params, CFG, toks, jnp.int32(0), kc, vc)
+        assert logits.shape == (CFG.batch, CFG.vocab)
+        assert kc2.shape == CFG.kv_cache_shape()
+        assert vc2.shape == CFG.kv_cache_shape()
+
+    def test_prefill_output_shapes(self, params):
+        prompt = jnp.zeros((CFG.batch, CFG.prompt_len), jnp.int32)
+        logits, kc, vc = M.prefill(params, CFG, prompt)
+        assert logits.shape == (CFG.batch, CFG.vocab)
+        assert kc.shape == CFG.kv_cache_shape()
+
+
+class TestDecodeCorrectness:
+    def test_decode_matches_reference(self, params):
+        kc, vc = empty_cache()
+        key = jax.random.PRNGKey(7)
+        toks = jax.random.randint(key, (CFG.batch,), 0, CFG.vocab)
+        # run a few steps through both implementations, comparing each
+        r_kc, r_vc = kc, vc
+        for pos in range(4):
+            logits, kc, vc = M.decode_step(params, CFG, toks, jnp.int32(pos), kc, vc)
+            r_logits, r_kc, r_vc = M.reference_decode_step(
+                params, CFG, toks, jnp.int32(pos), r_kc, r_vc)
+            np.testing.assert_allclose(logits, r_logits, rtol=2e-4, atol=2e-4)
+            np.testing.assert_allclose(kc, r_kc, rtol=1e-5, atol=1e-5)
+            toks = jnp.argmax(logits, -1).astype(jnp.int32)
+
+    def test_cache_rows_written_at_pos(self, params):
+        kc, vc = empty_cache()
+        toks = jnp.ones((CFG.batch,), jnp.int32)
+        _, kc2, _ = M.decode_step(params, CFG, toks, jnp.int32(5), kc, vc)
+        # only row 5 should be nonzero
+        assert float(jnp.abs(kc2[:, :, :, 5, :]).sum()) > 0
+        untouched = jnp.concatenate([kc2[:, :, :, :5, :], kc2[:, :, :, 6:, :]], axis=3)
+        assert float(jnp.abs(untouched).sum()) == 0.0
+
+
+class TestPrefillDecodeConsistency:
+    def test_prefill_equals_tokenwise_decode(self, params):
+        """Prefilling P tokens must equal P sequential decode steps."""
+        key = jax.random.PRNGKey(3)
+        prompt = jax.random.randint(key, (CFG.batch, CFG.prompt_len), 0, CFG.vocab)
+        p_logits, p_kc, p_vc = M.prefill(params, CFG, prompt)
+
+        kc, vc = empty_cache()
+        for pos in range(CFG.prompt_len):
+            logits, kc, vc = M.decode_step(
+                params, CFG, prompt[:, pos], jnp.int32(pos), kc, vc)
+
+        np.testing.assert_allclose(logits, p_logits, rtol=5e-4, atol=5e-4)
+        np.testing.assert_allclose(kc[:, :, :, :CFG.prompt_len, :],
+                                   p_kc[:, :, :, :CFG.prompt_len, :],
+                                   rtol=5e-4, atol=5e-4)
+
+    def test_generation_deterministic(self, params):
+        prompt = jnp.zeros((CFG.batch, CFG.prompt_len), jnp.int32)
+
+        def generate():
+            logits, kc, vc = M.prefill(params, CFG, prompt)
+            toks = []
+            t = jnp.argmax(logits, -1).astype(jnp.int32)
+            for i in range(5):
+                toks.append(np.asarray(t))
+                logits, kc, vc = M.decode_step(
+                    params, CFG, t, jnp.int32(CFG.prompt_len + i), kc, vc)
+                t = jnp.argmax(logits, -1).astype(jnp.int32)
+            return np.stack(toks)
+
+        a, b = generate(), generate()
+        np.testing.assert_array_equal(a, b)

@@ -1,0 +1,51 @@
+//! Bench E1 — Figure 3: Host vs P.ISP breakdown over all 13 workloads.
+//! Prints the figure's rows and measures the model-evaluation hot path.
+
+use dockerssd::benchkit::{bench, section};
+use dockerssd::firmware::CostModel;
+use dockerssd::models::{evaluate, Component, ModelKind};
+use dockerssd::workloads::all_workloads;
+
+fn main() {
+    let c = CostModel::calibrated();
+    let ws = all_workloads();
+
+    section("Figure 3: Host vs P.ISP breakdown");
+    println!(
+        "{:<16} {:>10} {:>10} {:>12} | {:>10} {:>12} {:>12}",
+        "workload", "Host(s)", "Storage%", "Compute%", "P.ISP(s)", "Communicate%", "Storage%"
+    );
+    let (mut sf, mut cf, mut ratio) = (0.0, 0.0, 0.0);
+    for w in &ws {
+        let h = evaluate(ModelKind::Host, w, &c);
+        let p = evaluate(ModelKind::PIspR, w, &c);
+        println!(
+            "{:<16} {:>10.2} {:>9.0}% {:>11.0}% | {:>10.2} {:>11.0}% {:>11.0}%",
+            w.full_name(),
+            h.total(),
+            100.0 * h.fraction(Component::Storage),
+            100.0 * h.fraction(Component::Compute),
+            p.total(),
+            100.0 * p.communicate() / p.total(),
+            100.0 * p.fraction(Component::Storage),
+        );
+        sf += h.fraction(Component::Storage);
+        cf += p.communicate() / p.total();
+        ratio += p.total() / h.total();
+    }
+    let n = ws.len() as f64;
+    println!(
+        "\nmeans: Host Storage {:.0}% (paper 38%) | P.ISP Communicate {:.0}% (paper 43%) | P.ISP/Host {:.2}x (paper 1.4x)",
+        100.0 * sf / n,
+        100.0 * cf / n,
+        ratio / n
+    );
+
+    section("hot path");
+    bench("evaluate all 13 workloads x 2 models", || {
+        for w in &ws {
+            std::hint::black_box(evaluate(ModelKind::Host, w, &c));
+            std::hint::black_box(evaluate(ModelKind::PIspR, w, &c));
+        }
+    });
+}

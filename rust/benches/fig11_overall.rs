@@ -1,0 +1,78 @@
+//! Bench E4 — Figure 11: all six data-processing models across the 13
+//! Table 2 workloads, normalized to D-VirtFW, plus the paper's aggregate
+//! claims and an end-to-end substrate replay measurement.
+
+use dockerssd::benchkit::{bench, section};
+use dockerssd::config::SystemConfig;
+use dockerssd::firmware::CostModel;
+use dockerssd::lambdafs::{LambdaFs, LockSide};
+use dockerssd::models::{fig11_row, geomean_ratio, ModelKind};
+use dockerssd::ssd::SsdDevice;
+use dockerssd::util::SimTime;
+use dockerssd::workloads::all_workloads;
+
+fn main() {
+    let c = CostModel::calibrated();
+
+    section("Figure 11: normalized latency (D-VirtFW = 1.0)");
+    println!(
+        "{:<16} {:>7} {:>8} {:>8} {:>8} {:>9} {:>9}",
+        "workload", "Host", "P.ISP-R", "P.ISP-V", "D-Naive", "D-FullOS", "D-VirtFW"
+    );
+    for w in all_workloads() {
+        let row = fig11_row(&w, &c);
+        print!("{:<16}", w.full_name());
+        for (_, _, norm) in &row {
+            print!(" {:>8.2}", norm);
+        }
+        println!();
+    }
+
+    section("aggregate geomean ratios vs D-VirtFW");
+    for (m, paper) in [
+        (ModelKind::Host, "1.3x"),
+        (ModelKind::PIspR, "1.6x"),
+        (ModelKind::PIspV, "1.6x"),
+        (ModelKind::DNaive, "1.8x"),
+        (ModelKind::DFullOs, "1.6x"),
+    ] {
+        println!(
+            "  {:<9} {:.2}x  (paper ~{})",
+            m.name(),
+            geomean_ratio(m, ModelKind::DVirtFw, &c),
+            paper
+        );
+    }
+    println!(
+        "  P.ISP-V/P.ISP-R {:.3} (paper 0.863) | D-FullOS/P.ISP-V {:.3} (paper 1.093) | D-Naive/D-FullOS {:.3} (paper 1.128)",
+        geomean_ratio(ModelKind::PIspV, ModelKind::PIspR, &c),
+        geomean_ratio(ModelKind::DFullOs, ModelKind::PIspV, &c),
+        geomean_ratio(ModelKind::DNaive, ModelKind::DFullOs, &c),
+    );
+
+    section("hot paths");
+    let ws = all_workloads();
+    bench("fig11: 13 workloads x 6 models", || {
+        for w in &ws {
+            std::hint::black_box(fig11_row(w, &c));
+        }
+    });
+
+    // substrate-level: λFS file I/O through the flash timing model
+    let cfg = SystemConfig::default();
+    let mut dev = SsdDevice::new(cfg.ssd.clone());
+    let mut fs = LambdaFs::over_device(&dev);
+    let body = vec![0xA5u8; 64 * 1024];
+    fs.write_file(&mut dev, SimTime::ZERO, "/data/bench", &body, LockSide::Isp)
+        .unwrap();
+    bench("lambda-fs 64KB read via ICL+FTL+flash", || {
+        std::hint::black_box(
+            fs.read_file(&mut dev, SimTime::ZERO, "/data/bench", LockSide::Isp).unwrap(),
+        );
+    });
+    bench("lambda-fs 64KB write via ICL+FTL+flash", || {
+        std::hint::black_box(
+            fs.write_file(&mut dev, SimTime::ZERO, "/data/bench", &body, LockSide::Isp).unwrap(),
+        );
+    });
+}

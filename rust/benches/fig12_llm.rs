@@ -1,0 +1,81 @@
+//! Bench E5/E6 — Figure 12: optimal parallelism per disaggregation
+//! scenario (12a) and the compute/memory breakdown with the paper's
+//! aggregate ratios (12b), plus the parallelism-search hot path.
+
+use dockerssd::benchkit::{bench, section};
+use dockerssd::llm::all_llms;
+use dockerssd::llm::disagg::{aggregate_ratio, fig12_sweep, nodes_for, DisaggModel};
+use dockerssd::llm::parallelism::find_optimal;
+
+fn main() {
+    let seq = 32_768;
+
+    section("Figure 12a: optimal parallelism (32K seq, batch 1)");
+    let rs = fig12_sweep(seq, 1);
+    println!(
+        "{:<14} {:>5}  {:>22} {:>22} {:>22} {:>22}",
+        "model", "nodes", "H-NoCache", "H-Cache", "D-NoCache", "D-Cache"
+    );
+    for (i, llm) in all_llms().iter().enumerate() {
+        print!("{:<14} {:>5} ", llm.name, nodes_for(i));
+        for d in DisaggModel::ALL {
+            let cell = rs
+                .iter()
+                .find(|r| r.model == llm.name && r.disagg == d)
+                .map(|r| format!("{}({})", r.choice.par.dominant().name(), r.choice.par.label()))
+                .unwrap_or_else(|| "infeasible".into());
+            print!(" {:>22}", cell);
+        }
+        println!();
+    }
+    println!("paper: NoCache -> pipeline; Cache -> tensor");
+
+    section("Figure 12b: Compute/Memory breakdown (seconds)");
+    println!(
+        "{:<14} {:>11} {:>12} {:>12} {:>10} {:>12}",
+        "model", "scenario", "compute", "memory", "comm", "total"
+    );
+    for r in &rs {
+        println!(
+            "{:<14} {:>11} {:>12.1} {:>12.1} {:>10.2} {:>12.1}",
+            r.model,
+            r.disagg.name(),
+            r.time().compute,
+            r.time().memory,
+            r.time().comm,
+            r.time().total()
+        );
+    }
+
+    section("aggregate ratios (paper targets)");
+    println!(
+        "  H-Cache over H-NoCache: {:.0}x (paper 421x)",
+        aggregate_ratio(DisaggModel::HostNoCache, DisaggModel::HostCache, seq, 1)
+    );
+    println!(
+        "  D-Cache over D-NoCache: {:.0}x (paper 4.6Kx)",
+        aggregate_ratio(DisaggModel::DockerNoCache, DisaggModel::DockerCache, seq, 1)
+    );
+    println!(
+        "  D-Cache over H-Cache:   {:.1}x (paper 7.9x)",
+        aggregate_ratio(DisaggModel::HostCache, DisaggModel::DockerCache, seq, 1)
+    );
+    println!(
+        "  D-NoCache vs H-NoCache: {:.1}x slower (paper 1.7x)",
+        aggregate_ratio(DisaggModel::DockerNoCache, DisaggModel::HostNoCache, seq, 1)
+    );
+    println!(
+        "  D-Cache over H-NoCache: {:.0}x (paper 3.2Kx)",
+        aggregate_ratio(DisaggModel::HostNoCache, DisaggModel::DockerCache, seq, 1)
+    );
+
+    section("hot paths");
+    let gpt3 = all_llms().into_iter().find(|m| m.name == "gpt3-175B").unwrap();
+    let dev = DisaggModel::DockerCache.device();
+    bench("parallelism search, 128 nodes", || {
+        std::hint::black_box(find_optimal(&gpt3, &dev, 128, seq, 1, true));
+    });
+    bench("full fig12 sweep (8 models x 4 scenarios)", || {
+        std::hint::black_box(fig12_sweep(seq, 1));
+    });
+}

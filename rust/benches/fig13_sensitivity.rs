@@ -1,0 +1,46 @@
+//! Bench E7/E8 — Figure 13: sequence-length sensitivity (a/b, with the
+//! 256 / 1024 crossovers and ~9.5x convergence) and batch-size
+//! sensitivity (c/d, modest <=1.4x gains).
+
+use dockerssd::benchkit::{bench, section};
+use dockerssd::llm::all_llms;
+use dockerssd::llm::disagg::{batch_sweep, crossover_seq, seq_sweep};
+
+fn main() {
+    let llms = all_llms();
+    let lamda = &llms[0];
+    let megatron = &llms[7];
+
+    section("Figure 13a/b: sequence-length sweep (D-Cache speedup over H-Cache)");
+    let seqs: Vec<u64> = (6..=17).map(|p| 1u64 << p).collect();
+    for (llm, nodes, paper) in [(lamda, 16u32, 256u64), (megatron, 128u32, 1024u64)] {
+        println!("\n{} on {} nodes:", llm.name, nodes);
+        for (s, sp) in seq_sweep(llm, nodes, &seqs, 1) {
+            let marker = if sp >= 1.0 { "D wins" } else { "H wins" };
+            println!("  seq {:>7}: {:>6.2}x  {}", s, sp, marker);
+        }
+        println!(
+            "  crossover {:?} (paper {}); long-sequence convergence ~9.5x",
+            crossover_seq(llm, nodes),
+            paper
+        );
+    }
+
+    section("Figure 13c/d: batch-size sweep at seq 512");
+    let batches = [1u64, 2, 4, 8, 16, 32, 64, 128, 256, 512];
+    for (llm, nodes) in [(lamda, 16u32), (megatron, 128u32)] {
+        println!("\n{} on {} nodes:", llm.name, nodes);
+        for (b, sp) in batch_sweep(llm, nodes, 512, &batches) {
+            println!("  batch {:>4}: {:>5.2}x", b, sp);
+        }
+    }
+    println!("\npaper: modest improvement, max ~1.3x");
+
+    section("hot paths");
+    bench("seq sweep 12 points (lamda, 16 nodes)", || {
+        std::hint::black_box(seq_sweep(lamda, 16, &seqs, 1));
+    });
+    bench("batch sweep 10 points (megatron, 128 nodes)", || {
+        std::hint::black_box(batch_sweep(megatron, 128, 512, &batches));
+    });
+}

@@ -1,0 +1,151 @@
+//! Substrate hot-path microbenchmarks (§Perf, L3): the pieces that sit
+//! on the simulated request path — NVMe queue service, Ether-oN frame
+//! round-trip, flash timing model, FTL mapping, λFS path walk, TCP
+//! segment processing, JSON manifest parse, batcher/router.
+
+use std::net::Ipv4Addr;
+
+use dockerssd::benchkit::{bench, section};
+use dockerssd::config::{EtherOnConfig, SsdConfig};
+use dockerssd::coordinator::{Batcher, InferenceRequest, Router};
+use dockerssd::etheron::{EthFrame, EtherType, EtherOnDriver, MacAddr, TcpSegment, TcpFlags, TcpStack};
+use dockerssd::lambdafs::{LambdaFs, LockSide};
+use dockerssd::nvme::{BlockBackend, FrameSink, NvmeCommand, NvmeController, NvmeSubsystem, PcieFunction, QueuePair};
+use dockerssd::ssd::SsdDevice;
+use dockerssd::util::SimTime;
+
+struct NullBackend;
+impl BlockBackend for NullBackend {
+    fn read(&mut self, at: SimTime, _lba: u64, blocks: u64) -> (SimTime, Vec<u8>) {
+        (at, vec![0; (blocks * 512) as usize])
+    }
+    fn write(&mut self, at: SimTime, _lba: u64, _data: &[u8]) -> SimTime {
+        at
+    }
+    fn flush(&mut self, at: SimTime) -> SimTime {
+        at
+    }
+}
+
+struct NullSink;
+impl FrameSink for NullSink {
+    fn deliver(&mut self, _at: SimTime, _frame: &[u8]) -> SimTime {
+        SimTime::us(1)
+    }
+}
+
+fn main() {
+    section("NVMe");
+    let mut ctl = NvmeController::new(NvmeSubsystem::standard(1_000_000, 0.3));
+    let mut qp = QueuePair::new(1, 64);
+    let mut be = NullBackend;
+    let mut sink = NullSink;
+    bench("service_queue: 32 reads", || {
+        for i in 0..32u16 {
+            qp.sq.submit(NvmeCommand::read(i, 2, (i as u64) * 8, 7)).unwrap();
+        }
+        ctl.service_queue(SimTime::ZERO, &mut qp, PcieFunction::Host, &mut be, &mut sink);
+        while qp.cq.reap().is_some() {}
+    });
+
+    section("Ether-oN");
+    let mut drv = EtherOnDriver::new(EtherOnConfig::default());
+    let mut qp2 = QueuePair::new(2, 64);
+    drv.arm_upcalls(&mut qp2);
+    ctl.service_queue(SimTime::ZERO, &mut qp2, PcieFunction::Host, &mut be, &mut sink);
+    let frame = EthFrame {
+        dst: MacAddr::for_node(1),
+        src: MacAddr::for_node(0),
+        ethertype: EtherType::Ipv4,
+        payload: vec![0xAB; 1024],
+    };
+    bench("frame encode+decode (1KB)", || {
+        let bytes = frame.encode();
+        std::hint::black_box(EthFrame::decode(&bytes).unwrap());
+    });
+    bench("tx+rx round trip via upcall", || {
+        drv.transmit(&mut qp2, &frame).unwrap();
+        ctl.service_queue(SimTime::ZERO, &mut qp2, PcieFunction::Host, &mut be, &mut sink);
+        ctl.upcall(&mut qp2, frame.encode());
+        std::hint::black_box(drv.poll_rx(&mut qp2));
+    });
+
+    section("TCP FSM");
+    bench("handshake + 1KB data + teardown", || {
+        let mut client = TcpStack::new();
+        let mut server = TcpStack::new();
+        server.listen(2375);
+        let server_ip = Ipv4Addr::new(10, 77, 0, 2);
+        let client_ip = Ipv4Addr::new(10, 77, 0, 1);
+        let syn = client.connect(49152, server_ip, 2375);
+        let syn_ack = server.process(client_ip, &syn);
+        let ack = client.process(server_ip, &syn_ack[0]);
+        server.process(client_ip, &ack[0]);
+        let seg = client.send((49152, server_ip, 2375), vec![0u8; 1024]).unwrap();
+        server.process(client_ip, &seg);
+        std::hint::black_box(server.recv((2375, client_ip, 49152)));
+    });
+    bench("tcp segment encode+decode (1KB)", || {
+        let seg = TcpSegment {
+            src_port: 1,
+            dst_port: 2,
+            seq: 100,
+            ack: 200,
+            flags: TcpFlags::ACK,
+            window: 65535,
+            payload: vec![7u8; 1024],
+        };
+        std::hint::black_box(TcpSegment::decode(&seg.encode()).unwrap());
+    });
+
+    section("SSD backend");
+    let mut dev = SsdDevice::new(SsdConfig::default());
+    let mut page = 0u64;
+    bench("write_pages (fresh page, ICL+FTL)", || {
+        dev.write_pages(SimTime::ZERO, page % 100_000, 1);
+        page += 1;
+    });
+    bench("read_pages (hot page, ICL hit)", || {
+        std::hint::black_box(dev.read_pages(SimTime::ZERO, 42, 1));
+    });
+
+    section("lambda-FS");
+    let mut dev2 = SsdDevice::new(SsdConfig::default());
+    let mut fs = LambdaFs::over_device(&dev2);
+    for i in 0..100 {
+        fs.write_file(&mut dev2, SimTime::ZERO, &format!("/data/d{}/f{}", i % 10, i), b"x", LockSide::Isp)
+            .ok();
+    }
+    bench("path walk (cached)", || {
+        std::hint::black_box(fs.walk("/data/d3/f33").unwrap());
+    });
+    bench("4KB file read", || {
+        std::hint::black_box(fs.read_file(&mut dev2, SimTime::ZERO, "/data/d3/f33", LockSide::Isp).unwrap());
+    });
+
+    section("coordinator");
+    let mut router = Router::new(16);
+    bench("router pick+complete", || {
+        let n = router.pick();
+        router.complete(n);
+    });
+    bench("batcher push+form (width 4)", || {
+        let mut b = Batcher::new(4, 32, std::time::Duration::ZERO);
+        for id in 0..4 {
+            b.push(InferenceRequest {
+                id,
+                prompt: vec![1; 32],
+                max_new_tokens: 8,
+            });
+        }
+        std::hint::black_box(b.form(false).unwrap());
+    });
+
+    section("JSON");
+    let manifest = std::fs::read_to_string("artifacts/manifest.json").ok();
+    if let Some(text) = manifest {
+        bench("manifest.json parse", || {
+            std::hint::black_box(dockerssd::json::parse(&text).unwrap());
+        });
+    }
+}

@@ -1,0 +1,80 @@
+//! Minimal benchmark harness (in-crate substitute for criterion — this
+//! build environment is offline; DESIGN.md §4).
+//!
+//! Each `[[bench]]` target is a `harness = false` binary that calls
+//! [`bench`] for measured hot paths and prints paper-table rows via
+//! [`crate::metrics::Table`].  Measurement: warmup iterations, then
+//! timed batches until `min_time`, reporting mean/min/max per iteration.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's measurement.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.mean.as_secs_f64().max(1e-12)
+    }
+}
+
+/// Measure `f`, printing a criterion-style line.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    // warmup
+    for _ in 0..3 {
+        f();
+    }
+    let min_time = Duration::from_millis(300);
+    let mut samples: Vec<Duration> = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < min_time || samples.len() < 10 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    let total: Duration = samples.iter().sum();
+    let mean = total / samples.len() as u32;
+    let min = *samples.iter().min().unwrap();
+    let max = *samples.iter().max().unwrap();
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: samples.len() as u64,
+        mean,
+        min,
+        max,
+    };
+    println!(
+        "bench {:<44} {:>12?}/iter  (min {:?}, max {:?}, n={})",
+        r.name, r.mean, r.min, r.max, r.iters
+    );
+    r
+}
+
+/// Section header for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut x = 0u64;
+        let r = bench("noop-ish", || {
+            x = x.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(r.iters >= 10);
+        assert!(r.min <= r.mean && r.mean <= r.max);
+    }
+}

@@ -1,0 +1,398 @@
+//! Configuration system: every tunable of the simulated testbed in one
+//! JSON-loadable tree, mirroring the paper's evaluation setup
+//! ("EVALUATION — Prototype and methodology").
+//!
+//! Defaults reproduce the paper's testbed: host 3.8GHz CPU + 64GB DDR4;
+//! SSD frontend 2.2GHz + 2GB DRAM; backend 48 MLC flash packages over 12
+//! channels; pool of 16-128 DockerSSDs behind PCIe switches.
+//!
+//! (Offline-build substitution, DESIGN.md §4: serde/toml are unavailable,
+//! so configs are JSON via the in-crate [`crate::json`] module; any field
+//! omitted in a config file keeps its paper default.)
+
+use crate::json::{parse, Json};
+
+/// Host system parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostConfig {
+    /// Host CPU frequency (GHz) — 3.8 in the paper.
+    pub cpu_ghz: f64,
+    /// Host DRAM capacity (GiB).
+    pub dram_gib: u64,
+    /// Host DRAM bandwidth (GB/s).
+    pub dram_gbps: f64,
+    /// PCIe link bandwidth to the SSD (GB/s, Gen3 x4 effective).
+    pub pcie_gbps: f64,
+}
+
+impl Default for HostConfig {
+    fn default() -> Self {
+        HostConfig {
+            cpu_ghz: 3.8,
+            dram_gib: 64,
+            dram_gbps: 25.6,
+            pcie_gbps: 3.2,
+        }
+    }
+}
+
+/// SSD geometry + timing (SimpleSSD-style MLC parameters).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SsdConfig {
+    /// Frontend embedded processor frequency (GHz) — 2.2 in the paper.
+    pub frontend_ghz: f64,
+    /// Frontend cores running Virtual-FW — 6 RISC-V cores in the prototype.
+    pub frontend_cores: u32,
+    /// Internal DRAM capacity (GiB) — 2 in the paper.
+    pub dram_gib: u64,
+    /// Flash channels — 12 in the paper.
+    pub channels: u32,
+    /// Packages per channel (48 total / 12 channels).
+    pub packages_per_channel: u32,
+    /// Flash page size (bytes).
+    pub page_bytes: u32,
+    /// Pages per block.
+    pub pages_per_block: u32,
+    /// Blocks per package.
+    pub blocks_per_package: u32,
+    /// MLC page read latency (us).
+    pub read_us: u64,
+    /// MLC page program latency (us).
+    pub program_us: u64,
+    /// Block erase latency (us).
+    pub erase_us: u64,
+    /// Channel transfer rate (MB/s per channel, ONFI-class).
+    pub channel_mbps: f64,
+    /// ICL (internal cache layer) size as a fraction of internal DRAM.
+    pub icl_fraction: f64,
+    /// Over-provisioning fraction reserved for GC.
+    pub op_fraction: f64,
+    /// GC trigger: free-block fraction below which GC runs.
+    pub gc_threshold: f64,
+}
+
+impl Default for SsdConfig {
+    fn default() -> Self {
+        SsdConfig {
+            frontend_ghz: 2.2,
+            frontend_cores: 6,
+            dram_gib: 2,
+            channels: 12,
+            packages_per_channel: 4,
+            page_bytes: 4096,
+            pages_per_block: 256,
+            blocks_per_package: 2048,
+            read_us: 50,
+            program_us: 500,
+            erase_us: 3500,
+            channel_mbps: 400.0,
+            icl_fraction: 0.5,
+            op_fraction: 0.07,
+            gc_threshold: 0.05,
+        }
+    }
+}
+
+impl SsdConfig {
+    pub fn total_packages(&self) -> u32 {
+        self.channels * self.packages_per_channel
+    }
+    pub fn pages_per_package(&self) -> u64 {
+        self.pages_per_block as u64 * self.blocks_per_package as u64
+    }
+    pub fn capacity_bytes(&self) -> u64 {
+        self.total_packages() as u64 * self.pages_per_package() * self.page_bytes as u64
+    }
+}
+
+/// Ether-oN interface parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EtherOnConfig {
+    /// Pre-allocated receive-frame upcall commands per SQ (paper: 4).
+    pub upcalls_per_sq: u32,
+    /// NVMe queue depth per SQ/CQ pair.
+    pub queue_depth: u32,
+    /// Frame page size — sk_buff copied into a 4KB-aligned kernel page.
+    pub frame_page_bytes: u32,
+    /// MTU for the virtual adapter.
+    pub mtu: u32,
+}
+
+impl Default for EtherOnConfig {
+    fn default() -> Self {
+        EtherOnConfig {
+            upcalls_per_sq: 4,
+            queue_depth: 64,
+            frame_page_bytes: 4096,
+            mtu: 1500,
+        }
+    }
+}
+
+/// Storage-pool / disaggregation parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PoolConfig {
+    /// DockerSSDs per array (behind one PCIe switch).
+    pub nodes_per_array: u32,
+    /// Number of arrays in the cluster.
+    pub arrays: u32,
+    /// Per-hop PCIe switch latency (ns).
+    pub switch_hop_ns: u64,
+    /// Intra-array link bandwidth (GB/s).
+    pub link_gbps: f64,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            nodes_per_array: 16,
+            arrays: 1,
+            switch_hop_ns: 300,
+            link_gbps: 3.2,
+        }
+    }
+}
+
+impl PoolConfig {
+    pub fn total_nodes(&self) -> u32 {
+        self.nodes_per_array * self.arrays
+    }
+}
+
+/// Serving coordinator parameters (the E9 case study).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    /// Artifact directory with HLO text + weights.
+    pub artifacts_dir: String,
+    /// Max new tokens per request.
+    pub max_new_tokens: u32,
+    /// Number of pool nodes to serve from.
+    pub nodes: u32,
+    /// Batch window before a partial batch launches (us of wallclock).
+    pub batch_timeout_us: u64,
+    /// Echo generated tokens to stdout.
+    pub verbose: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            artifacts_dir: "artifacts".into(),
+            max_new_tokens: 32,
+            nodes: 2,
+            batch_timeout_us: 2000,
+            verbose: true,
+        }
+    }
+}
+
+/// Top-level config tree.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SystemConfig {
+    pub host: HostConfig,
+    pub ssd: SsdConfig,
+    pub etheron: EtherOnConfig,
+    pub pool: PoolConfig,
+    pub serve: ServeConfig,
+}
+
+// --- JSON (de)serialization ------------------------------------------------
+
+macro_rules! get_field {
+    ($obj:expr, $cfg:expr, $field:ident, f64) => {
+        if let Some(v) = $obj.get(stringify!($field)).and_then(Json::as_f64) {
+            $cfg.$field = v;
+        }
+    };
+    ($obj:expr, $cfg:expr, $field:ident, u64) => {
+        if let Some(v) = $obj.get(stringify!($field)).and_then(Json::as_u64) {
+            $cfg.$field = v;
+        }
+    };
+    ($obj:expr, $cfg:expr, $field:ident, u32) => {
+        if let Some(v) = $obj.get(stringify!($field)).and_then(Json::as_u64) {
+            $cfg.$field = v as u32;
+        }
+    };
+    ($obj:expr, $cfg:expr, $field:ident, bool) => {
+        if let Some(v) = $obj.get(stringify!($field)).and_then(Json::as_bool) {
+            $cfg.$field = v;
+        }
+    };
+    ($obj:expr, $cfg:expr, $field:ident, String) => {
+        if let Some(v) = $obj.get(stringify!($field)).and_then(Json::as_str) {
+            $cfg.$field = v.to_string();
+        }
+    };
+}
+
+impl SystemConfig {
+    /// Load from a JSON file; missing sections/fields keep paper defaults.
+    pub fn load(path: &str) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json_str(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))
+    }
+
+    pub fn from_json_str(text: &str) -> Result<Self, String> {
+        let root = parse(text)?;
+        let mut cfg = SystemConfig::default();
+        if let Some(h) = root.get("host") {
+            get_field!(h, cfg.host, cpu_ghz, f64);
+            get_field!(h, cfg.host, dram_gib, u64);
+            get_field!(h, cfg.host, dram_gbps, f64);
+            get_field!(h, cfg.host, pcie_gbps, f64);
+        }
+        if let Some(s) = root.get("ssd") {
+            get_field!(s, cfg.ssd, frontend_ghz, f64);
+            get_field!(s, cfg.ssd, frontend_cores, u32);
+            get_field!(s, cfg.ssd, dram_gib, u64);
+            get_field!(s, cfg.ssd, channels, u32);
+            get_field!(s, cfg.ssd, packages_per_channel, u32);
+            get_field!(s, cfg.ssd, page_bytes, u32);
+            get_field!(s, cfg.ssd, pages_per_block, u32);
+            get_field!(s, cfg.ssd, blocks_per_package, u32);
+            get_field!(s, cfg.ssd, read_us, u64);
+            get_field!(s, cfg.ssd, program_us, u64);
+            get_field!(s, cfg.ssd, erase_us, u64);
+            get_field!(s, cfg.ssd, channel_mbps, f64);
+            get_field!(s, cfg.ssd, icl_fraction, f64);
+            get_field!(s, cfg.ssd, op_fraction, f64);
+            get_field!(s, cfg.ssd, gc_threshold, f64);
+        }
+        if let Some(e) = root.get("etheron") {
+            get_field!(e, cfg.etheron, upcalls_per_sq, u32);
+            get_field!(e, cfg.etheron, queue_depth, u32);
+            get_field!(e, cfg.etheron, frame_page_bytes, u32);
+            get_field!(e, cfg.etheron, mtu, u32);
+        }
+        if let Some(p) = root.get("pool") {
+            get_field!(p, cfg.pool, nodes_per_array, u32);
+            get_field!(p, cfg.pool, arrays, u32);
+            get_field!(p, cfg.pool, switch_hop_ns, u64);
+            get_field!(p, cfg.pool, link_gbps, f64);
+        }
+        if let Some(s) = root.get("serve") {
+            get_field!(s, cfg.serve, artifacts_dir, String);
+            get_field!(s, cfg.serve, max_new_tokens, u32);
+            get_field!(s, cfg.serve, nodes, u32);
+            get_field!(s, cfg.serve, batch_timeout_us, u64);
+            get_field!(s, cfg.serve, verbose, bool);
+        }
+        Ok(cfg)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "host",
+                Json::obj(vec![
+                    ("cpu_ghz", Json::Num(self.host.cpu_ghz)),
+                    ("dram_gib", Json::Int(self.host.dram_gib as i64)),
+                    ("dram_gbps", Json::Num(self.host.dram_gbps)),
+                    ("pcie_gbps", Json::Num(self.host.pcie_gbps)),
+                ]),
+            ),
+            (
+                "ssd",
+                Json::obj(vec![
+                    ("frontend_ghz", Json::Num(self.ssd.frontend_ghz)),
+                    ("frontend_cores", Json::Int(self.ssd.frontend_cores as i64)),
+                    ("dram_gib", Json::Int(self.ssd.dram_gib as i64)),
+                    ("channels", Json::Int(self.ssd.channels as i64)),
+                    (
+                        "packages_per_channel",
+                        Json::Int(self.ssd.packages_per_channel as i64),
+                    ),
+                    ("page_bytes", Json::Int(self.ssd.page_bytes as i64)),
+                    ("pages_per_block", Json::Int(self.ssd.pages_per_block as i64)),
+                    (
+                        "blocks_per_package",
+                        Json::Int(self.ssd.blocks_per_package as i64),
+                    ),
+                    ("read_us", Json::Int(self.ssd.read_us as i64)),
+                    ("program_us", Json::Int(self.ssd.program_us as i64)),
+                    ("erase_us", Json::Int(self.ssd.erase_us as i64)),
+                    ("channel_mbps", Json::Num(self.ssd.channel_mbps)),
+                    ("icl_fraction", Json::Num(self.ssd.icl_fraction)),
+                    ("op_fraction", Json::Num(self.ssd.op_fraction)),
+                    ("gc_threshold", Json::Num(self.ssd.gc_threshold)),
+                ]),
+            ),
+            (
+                "etheron",
+                Json::obj(vec![
+                    ("upcalls_per_sq", Json::Int(self.etheron.upcalls_per_sq as i64)),
+                    ("queue_depth", Json::Int(self.etheron.queue_depth as i64)),
+                    (
+                        "frame_page_bytes",
+                        Json::Int(self.etheron.frame_page_bytes as i64),
+                    ),
+                    ("mtu", Json::Int(self.etheron.mtu as i64)),
+                ]),
+            ),
+            (
+                "pool",
+                Json::obj(vec![
+                    ("nodes_per_array", Json::Int(self.pool.nodes_per_array as i64)),
+                    ("arrays", Json::Int(self.pool.arrays as i64)),
+                    ("switch_hop_ns", Json::Int(self.pool.switch_hop_ns as i64)),
+                    ("link_gbps", Json::Num(self.pool.link_gbps)),
+                ]),
+            ),
+            (
+                "serve",
+                Json::obj(vec![
+                    ("artifacts_dir", Json::str(self.serve.artifacts_dir.clone())),
+                    ("max_new_tokens", Json::Int(self.serve.max_new_tokens as i64)),
+                    ("nodes", Json::Int(self.serve.nodes as i64)),
+                    ("batch_timeout_us", Json::Int(self.serve.batch_timeout_us as i64)),
+                    ("verbose", Json::Bool(self.serve.verbose)),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_testbed() {
+        let c = SystemConfig::default();
+        assert_eq!(c.host.cpu_ghz, 3.8);
+        assert_eq!(c.ssd.frontend_ghz, 2.2);
+        assert_eq!(c.ssd.channels, 12);
+        assert_eq!(c.ssd.total_packages(), 48);
+        assert_eq!(c.etheron.upcalls_per_sq, 4);
+        assert_eq!(c.pool.total_nodes(), 16);
+    }
+
+    #[test]
+    fn ssd_capacity_is_reasonable() {
+        let c = SsdConfig::default();
+        let gb = c.capacity_bytes() as f64 / 1e9;
+        assert!(gb > 90.0, "capacity {gb}GB");
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let c = SystemConfig::default();
+        let text = c.to_json().dump();
+        let back = SystemConfig::from_json_str(&text).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let back = SystemConfig::from_json_str(r#"{"host": {"cpu_ghz": 4.2}}"#).unwrap();
+        assert_eq!(back.host.cpu_ghz, 4.2);
+        assert_eq!(back.host.dram_gib, 64); // default field
+        assert_eq!(back.ssd.channels, 12); // default section
+    }
+
+    #[test]
+    fn bad_json_is_an_error() {
+        assert!(SystemConfig::from_json_str("{nope").is_err());
+    }
+}

@@ -1,0 +1,181 @@
+//! Request batcher: packs incoming requests into the engine's fixed
+//! batch width.
+//!
+//! The AOT executables have a static [batch, prompt_len] signature, so a
+//! batch launches when full, or when `max_wait` expires with at least one
+//! request pending (the partial batch is padded by repeating the last
+//! request's prompt; padding rows are dropped from responses).
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use super::InferenceRequest;
+
+/// A formed batch: `live` of the `prompts.len()` rows carry real requests.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub requests: Vec<InferenceRequest>,
+    pub prompts: Vec<Vec<i32>>,
+    pub live: usize,
+    pub max_new_tokens: usize,
+}
+
+/// The batching queue.
+pub struct Batcher {
+    width: usize,
+    prompt_len: usize,
+    max_wait: Duration,
+    queue: VecDeque<(InferenceRequest, Instant)>,
+    pub batches_formed: u64,
+    pub requests_seen: u64,
+    pub padded_rows: u64,
+}
+
+impl Batcher {
+    pub fn new(width: usize, prompt_len: usize, max_wait: Duration) -> Self {
+        assert!(width > 0);
+        Batcher {
+            width,
+            prompt_len,
+            max_wait,
+            queue: VecDeque::new(),
+            batches_formed: 0,
+            requests_seen: 0,
+            padded_rows: 0,
+        }
+    }
+
+    pub fn push(&mut self, req: InferenceRequest) {
+        self.requests_seen += 1;
+        self.queue.push_back((req, Instant::now()));
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Normalize a prompt to exactly `prompt_len` tokens (left-truncate,
+    /// right-pad with token 0).
+    fn fit(&self, prompt: &[i32]) -> Vec<i32> {
+        let mut p: Vec<i32> = if prompt.len() > self.prompt_len {
+            prompt[prompt.len() - self.prompt_len..].to_vec()
+        } else {
+            prompt.to_vec()
+        };
+        p.resize(self.prompt_len, 0);
+        p
+    }
+
+    /// Try to form a batch: full-width immediately, partial only once the
+    /// oldest request has waited `max_wait` (or `force` is set).
+    pub fn form(&mut self, force: bool) -> Option<Batch> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let oldest_wait = self.queue.front().map(|(_, t)| t.elapsed()).unwrap_or_default();
+        if self.queue.len() < self.width && !force && oldest_wait < self.max_wait {
+            return None;
+        }
+        let take = self.queue.len().min(self.width);
+        let requests: Vec<InferenceRequest> =
+            self.queue.drain(..take).map(|(r, _)| r).collect();
+        let mut prompts: Vec<Vec<i32>> = requests.iter().map(|r| self.fit(&r.prompt)).collect();
+        let live = prompts.len();
+        // pad to full width by repeating the last prompt
+        while prompts.len() < self.width {
+            prompts.push(prompts.last().unwrap().clone());
+            self.padded_rows += 1;
+        }
+        let max_new_tokens = requests.iter().map(|r| r.max_new_tokens).max().unwrap_or(1);
+        self.batches_formed += 1;
+        Some(Batch {
+            requests,
+            prompts,
+            live,
+            max_new_tokens,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, len: usize) -> InferenceRequest {
+        InferenceRequest {
+            id,
+            prompt: (0..len as i32).collect(),
+            max_new_tokens: 4,
+        }
+    }
+
+    #[test]
+    fn full_batch_forms_immediately() {
+        let mut b = Batcher::new(4, 8, Duration::from_secs(100));
+        for i in 0..4 {
+            b.push(req(i, 8));
+        }
+        let batch = b.form(false).expect("full batch");
+        assert_eq!(batch.live, 4);
+        assert_eq!(batch.prompts.len(), 4);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn partial_batch_waits_unless_forced() {
+        let mut b = Batcher::new(4, 8, Duration::from_secs(100));
+        b.push(req(1, 8));
+        assert!(b.form(false).is_none(), "should wait for more requests");
+        let batch = b.form(true).expect("forced partial");
+        assert_eq!(batch.live, 1);
+        assert_eq!(batch.prompts.len(), 4, "padded to width");
+        assert_eq!(b.padded_rows, 3);
+    }
+
+    #[test]
+    fn partial_batch_fires_after_timeout() {
+        let mut b = Batcher::new(4, 8, Duration::from_millis(1));
+        b.push(req(1, 8));
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(b.form(false).is_some());
+    }
+
+    #[test]
+    fn prompts_are_fit_to_length() {
+        let mut b = Batcher::new(2, 8, Duration::ZERO);
+        b.push(req(1, 3)); // short -> padded
+        b.push(req(2, 20)); // long -> left-truncated (keep the tail)
+        let batch = b.form(true).unwrap();
+        assert_eq!(batch.prompts[0].len(), 8);
+        assert_eq!(&batch.prompts[0][3..], &[0, 0, 0, 0, 0]);
+        assert_eq!(batch.prompts[1], (12..20).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn conservation_every_request_in_exactly_one_batch() {
+        let mut b = Batcher::new(4, 8, Duration::ZERO);
+        for i in 0..10 {
+            b.push(req(i, 8));
+        }
+        let mut seen = Vec::new();
+        while let Some(batch) = b.form(true) {
+            for r in &batch.requests {
+                seen.push(r.id);
+            }
+        }
+        seen.sort();
+        assert_eq!(seen, (0..10).collect::<Vec<u64>>());
+        assert_eq!(b.batches_formed, 3);
+    }
+
+    #[test]
+    fn queue_order_is_fifo() {
+        let mut b = Batcher::new(2, 4, Duration::ZERO);
+        for i in 0..4 {
+            b.push(req(i, 4));
+        }
+        let first = b.form(false).unwrap();
+        assert_eq!(first.requests[0].id, 0);
+        assert_eq!(first.requests[1].id, 1);
+    }
+}

@@ -1,0 +1,92 @@
+//! KV-cache residency accounting: each pool node keeps its KV cache on
+//! its own flash ("access flash memory as local memory"); the manager
+//! tracks per-node residency against capacity and refuses placements
+//! that would not fit — the capacity story behind Figure 12.
+
+/// Per-node KV accounting (bytes).
+pub struct KvManager {
+    capacity: u64,
+    used: Vec<u64>,
+    pub admitted: u64,
+    pub rejected: u64,
+}
+
+impl KvManager {
+    pub fn new(nodes: usize, capacity_bytes: u64) -> Self {
+        KvManager {
+            capacity: capacity_bytes,
+            used: vec![0; nodes],
+            admitted: 0,
+            rejected: 0,
+        }
+    }
+
+    /// KV bytes for one batch slot of a model config.
+    pub fn kv_bytes(n_layers: usize, n_heads: usize, max_seq: usize, head_dim: usize,
+                    batch: usize, bytes_per_elem: usize) -> u64 {
+        (n_layers * batch * n_heads * max_seq * head_dim * 2 * bytes_per_elem) as u64
+    }
+
+    /// Try to reserve `bytes` on `node`.
+    pub fn reserve(&mut self, node: u32, bytes: u64) -> bool {
+        let u = &mut self.used[node as usize];
+        if *u + bytes > self.capacity {
+            self.rejected += 1;
+            return false;
+        }
+        *u += bytes;
+        self.admitted += 1;
+        true
+    }
+
+    pub fn release(&mut self, node: u32, bytes: u64) {
+        let u = &mut self.used[node as usize];
+        *u = u.saturating_sub(bytes);
+    }
+
+    pub fn used_of(&self, node: u32) -> u64 {
+        self.used[node as usize]
+    }
+
+    pub fn utilization(&self, node: u32) -> f64 {
+        self.used[node as usize] as f64 / self.capacity as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_bytes_formula() {
+        // 4 layers, 8 heads, 256 seq, 32 head_dim, batch 4, f32
+        let b = KvManager::kv_bytes(4, 8, 256, 32, 4, 4);
+        assert_eq!(b, 4 * 4 * 8 * 256 * 32 * 2 * 4);
+    }
+
+    #[test]
+    fn reserve_until_capacity() {
+        let mut kv = KvManager::new(2, 1000);
+        assert!(kv.reserve(0, 600));
+        assert!(!kv.reserve(0, 600), "over capacity");
+        assert!(kv.reserve(1, 600), "other node unaffected");
+        assert_eq!(kv.admitted, 2);
+        assert_eq!(kv.rejected, 1);
+    }
+
+    #[test]
+    fn release_frees_space() {
+        let mut kv = KvManager::new(1, 1000);
+        kv.reserve(0, 800);
+        kv.release(0, 800);
+        assert!(kv.reserve(0, 900));
+        assert_eq!(kv.used_of(0), 900);
+    }
+
+    #[test]
+    fn utilization_fraction() {
+        let mut kv = KvManager::new(1, 1000);
+        kv.reserve(0, 250);
+        assert!((kv.utilization(0) - 0.25).abs() < 1e-12);
+    }
+}

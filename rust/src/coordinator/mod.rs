@@ -1,0 +1,39 @@
+//! Serving coordinator (DESIGN.md S12): the host-side leader that routes
+//! inference requests across the computing-enabled storage pool, batches
+//! them to the AOT engine's fixed batch width, and accounts per-node KV
+//! residency against flash capacity.
+//!
+//! Offline-build note (DESIGN.md §4): tokio is unavailable in this
+//! environment, so the server uses std threads + channels; the design
+//! (leader dispatch queue, per-node workers, response collector) is the
+//! same shape a tokio runtime would host.
+
+pub mod batcher;
+pub mod kv_manager;
+pub mod router;
+pub mod server;
+
+pub use batcher::{Batch, Batcher};
+pub use kv_manager::KvManager;
+pub use router::Router;
+pub use server::{serve, BatchExecutor, ServeReport};
+
+/// One inference request entering the system.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InferenceRequest {
+    pub id: u64,
+    /// Prompt token ids (will be clipped/padded to the engine prompt_len).
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+}
+
+/// A finished request.
+#[derive(Clone, Debug)]
+pub struct InferenceResponse {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    /// Which pool node served it.
+    pub node: u32,
+    /// Wallclock latency of the whole batch this request rode in.
+    pub latency: std::time::Duration,
+}

@@ -1,0 +1,101 @@
+//! Request router: spreads batches across pool nodes, least-outstanding
+//! first (the vllm-router-style policy, simplified to the pool's
+//! homogeneous nodes).
+
+/// Router over `n` nodes tracking outstanding batches per node.
+pub struct Router {
+    outstanding: Vec<u64>,
+    dispatched: Vec<u64>,
+    /// Rotating cursor so ties round-robin instead of piling on node 0.
+    cursor: usize,
+}
+
+impl Router {
+    pub fn new(nodes: usize) -> Self {
+        assert!(nodes > 0);
+        Router {
+            outstanding: vec![0; nodes],
+            dispatched: vec![0; nodes],
+            cursor: 0,
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.outstanding.len()
+    }
+
+    /// Pick the node with the fewest outstanding batches; ties resolve
+    /// round-robin starting from the rotating cursor.
+    pub fn pick(&mut self) -> u32 {
+        let n = self.outstanding.len();
+        let min = *self.outstanding.iter().min().unwrap();
+        let mut idx = self.cursor % n;
+        for off in 0..n {
+            let cand = (self.cursor + off) % n;
+            if self.outstanding[cand] == min {
+                idx = cand;
+                break;
+            }
+        }
+        self.cursor = (idx + 1) % n;
+        self.outstanding[idx] += 1;
+        self.dispatched[idx] += 1;
+        idx as u32
+    }
+
+    /// A node finished a batch.
+    pub fn complete(&mut self, node: u32) {
+        let o = &mut self.outstanding[node as usize];
+        *o = o.saturating_sub(1);
+    }
+
+    pub fn outstanding_of(&self, node: u32) -> u64 {
+        self.outstanding[node as usize]
+    }
+
+    pub fn dispatched_of(&self, node: u32) -> u64 {
+        self.dispatched[node as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robins_when_balanced() {
+        let mut r = Router::new(3);
+        assert_eq!(r.pick(), 0);
+        assert_eq!(r.pick(), 1);
+        assert_eq!(r.pick(), 2);
+        assert_eq!(r.pick(), 0);
+    }
+
+    #[test]
+    fn prefers_idle_node() {
+        let mut r = Router::new(2);
+        r.pick(); // node 0 busy
+        r.pick(); // node 1 busy
+        r.complete(1);
+        assert_eq!(r.pick(), 1, "node 1 went idle first");
+    }
+
+    #[test]
+    fn dispatch_counts_balanced_over_many_batches() {
+        let mut r = Router::new(4);
+        for _ in 0..400 {
+            let n = r.pick();
+            r.complete(n);
+        }
+        for n in 0..4 {
+            assert_eq!(r.dispatched_of(n), 100);
+        }
+    }
+
+    #[test]
+    fn complete_is_saturating() {
+        let mut r = Router::new(1);
+        r.complete(0); // no underflow
+        assert_eq!(r.outstanding_of(0), 0);
+    }
+}

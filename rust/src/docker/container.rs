@@ -1,0 +1,66 @@
+//! ISP-container state (paper "Container life cycle management").
+
+/// Lifecycle states reachable through the 11 mini-docker commands.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ContainerState {
+    Created,
+    Running,
+    Exited(i32),
+    Killed,
+}
+
+/// One ISP-container.
+#[derive(Clone, Debug)]
+pub struct Container {
+    pub id: String,
+    pub image: String,
+    /// Entry script from the image manifest.
+    pub entry: String,
+    /// λFS path of the merged rootfs.
+    pub rootfs: String,
+    pub state: ContainerState,
+    /// ISP process id while running.
+    pub pid: Option<u32>,
+}
+
+impl Container {
+    pub fn new(id: &str, image: &str, entry: &str, rootfs: &str) -> Self {
+        Container {
+            id: id.to_string(),
+            image: image.to_string(),
+            entry: entry.to_string(),
+            rootfs: rootfs.to_string(),
+            state: ContainerState::Created,
+            pid: None,
+        }
+    }
+
+    /// Log file location: `/containers/<id>/log` (the paper logs under
+    /// the container directory for host-side retrieval).
+    pub fn log_path(&self) -> String {
+        format!("/containers/{}/log", self.id)
+    }
+
+    pub fn is_running(&self) -> bool {
+        self.state == ContainerState::Running
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_container_is_created_state() {
+        let c = Container::new("c0001", "nginx", "/entry", "/containers/c0001/rootfs");
+        assert_eq!(c.state, ContainerState::Created);
+        assert!(!c.is_running());
+        assert_eq!(c.pid, None);
+    }
+
+    #[test]
+    fn log_path_under_container_dir() {
+        let c = Container::new("c0042", "embed", "/entry", "/containers/c0042/rootfs");
+        assert_eq!(c.log_path(), "/containers/c0042/log");
+    }
+}

@@ -1,0 +1,135 @@
+//! Image blobs and manifests.
+//!
+//! Blobs are the binary objects Docker moves around; the manifest stores
+//! metadata for the application launch (entry script + layer digests).
+//! Manifests serialize as JSON, matching the files mini-docker keeps
+//! under `/images/manifest/`.
+
+use crate::json::{parse, Json};
+use crate::util::{fnv1a, Rng};
+
+/// A content-addressed binary object.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Blob {
+    pub digest: u64,
+    pub bytes: Vec<u8>,
+}
+
+impl Blob {
+    /// Build a blob from raw content; the digest is FNV-1a over the bytes.
+    pub fn from_bytes(bytes: Vec<u8>) -> Blob {
+        Blob {
+            digest: fnv1a(&bytes),
+            bytes,
+        }
+    }
+
+    /// Deterministic synthetic layer of `size` bytes (seeded by content id).
+    pub fn synthetic(seed: u64, size: usize) -> Blob {
+        let mut rng = Rng::new(seed);
+        let mut bytes = Vec::with_capacity(size);
+        while bytes.len() < size {
+            bytes.extend_from_slice(&rng.next_u64().to_le_bytes());
+        }
+        bytes.truncate(size);
+        Blob::from_bytes(bytes)
+    }
+
+    pub fn verify(&self) -> bool {
+        fnv1a(&self.bytes) == self.digest
+    }
+}
+
+/// Image manifest: "details about the target application, such as its
+/// entry script and required image layers for rootfs".
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ImageManifest {
+    pub name: String,
+    pub tag: String,
+    pub entry: String,
+    /// Layer digests, bottom-most first.
+    pub layers: Vec<u64>,
+}
+
+impl ImageManifest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("tag", Json::str(self.tag.clone())),
+            ("entry", Json::str(self.entry.clone())),
+            (
+                "layers",
+                Json::Arr(
+                    self.layers
+                        .iter()
+                        .map(|d| Json::str(format!("{:016x}", d)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json_str(text: &str) -> Option<ImageManifest> {
+        let v = parse(text).ok()?;
+        let layers = v
+            .get("layers")?
+            .as_arr()?
+            .iter()
+            .map(|l| u64::from_str_radix(l.as_str()?, 16).ok())
+            .collect::<Option<Vec<u64>>>()?;
+        Some(ImageManifest {
+            name: v.get("name")?.as_str()?.to_string(),
+            tag: v.get("tag")?.as_str()?.to_string(),
+            entry: v.get("entry")?.as_str()?.to_string(),
+            layers,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blob_digest_verifies() {
+        let b = Blob::from_bytes(b"layer-content".to_vec());
+        assert!(b.verify());
+        let mut tampered = b.clone();
+        tampered.bytes[0] ^= 1;
+        assert!(!tampered.verify());
+    }
+
+    #[test]
+    fn synthetic_blobs_deterministic_and_sized() {
+        let a = Blob::synthetic(5, 10_000);
+        let b = Blob::synthetic(5, 10_000);
+        let c = Blob::synthetic(6, 10_000);
+        assert_eq!(a, b);
+        assert_ne!(a.digest, c.digest);
+        assert_eq!(a.bytes.len(), 10_000);
+        assert!(a.verify());
+    }
+
+    #[test]
+    fn manifest_json_round_trip() {
+        let m = ImageManifest {
+            name: "nginx".into(),
+            tag: "latest".into(),
+            entry: "nginx -g 'daemon off;'".into(),
+            layers: vec![0xDEADBEEF, 42],
+        };
+        let text = m.to_json().dump();
+        let back = ImageManifest::from_json_str(&text).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn manifest_rejects_malformed() {
+        assert!(ImageManifest::from_json_str("{}").is_none());
+        assert!(ImageManifest::from_json_str("not json").is_none());
+        assert!(ImageManifest::from_json_str(
+            r#"{"name":"x","tag":"y","entry":"z","layers":["nothex!"]}"#
+        )
+        .is_none());
+    }
+}

@@ -1,0 +1,560 @@
+//! mini-docker (DESIGN.md S6, paper "Firmware-level container
+//! environment"): the streamlined Docker implementation inside Virtual-FW
+//! supporting 11 of Docker's 106 commands (Table 1b), image blobs +
+//! manifests stored in λFS under `/images`, and container state +
+//! logs under `/containers/<id>/`.
+
+pub mod container;
+pub mod image;
+pub mod registry;
+
+use crate::firmware::{Syscall, VirtualFw};
+use crate::lambdafs::{LambdaFs, LockSide};
+use crate::ssd::SsdDevice;
+use crate::util::SimTime;
+
+pub use container::{Container, ContainerState};
+pub use image::{Blob, ImageManifest};
+pub use registry::Registry;
+
+/// The 11 supported commands (Table 1b).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DockerCmd {
+    Pull(String),
+    Rmi(String),
+    Create(String),
+    Run(String),
+    Start(String),
+    Stop(String),
+    Restart(String),
+    Kill(String),
+    Rm(String),
+    Logs(String),
+    Ps,
+}
+
+impl DockerCmd {
+    /// Parse an HTTP REST request line the way dockerd's API would
+    /// (docker-cli speaks HTTP to mini-docker over Ether-oN).
+    pub fn from_http(request_line: &str) -> Option<DockerCmd> {
+        let mut parts = request_line.split_whitespace();
+        let method = parts.next()?;
+        let path = parts.next()?;
+        let segs: Vec<&str> = path.trim_matches('/').split('/').collect();
+        match (method, segs.as_slice()) {
+            ("POST", ["images", name, "pull"]) => Some(DockerCmd::Pull(name.to_string())),
+            ("DELETE", ["images", name]) => Some(DockerCmd::Rmi(name.to_string())),
+            ("POST", ["containers", "create", image]) => {
+                Some(DockerCmd::Create(image.to_string()))
+            }
+            ("POST", ["containers", id, "start"]) => Some(DockerCmd::Start(id.to_string())),
+            ("POST", ["containers", id, "stop"]) => Some(DockerCmd::Stop(id.to_string())),
+            ("POST", ["containers", id, "restart"]) => Some(DockerCmd::Restart(id.to_string())),
+            ("POST", ["containers", id, "kill"]) => Some(DockerCmd::Kill(id.to_string())),
+            ("POST", ["containers", image, "run"]) => Some(DockerCmd::Run(image.to_string())),
+            ("DELETE", ["containers", id]) => Some(DockerCmd::Rm(id.to_string())),
+            ("GET", ["containers", id, "logs"]) => Some(DockerCmd::Logs(id.to_string())),
+            ("GET", ["containers", "json"]) => Some(DockerCmd::Ps),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum DockerError {
+    NoSuchImage,
+    NoSuchContainer,
+    BadState(&'static str),
+    Fs(crate::lambdafs::FsError),
+    OutOfMemory,
+}
+
+impl From<crate::lambdafs::FsError> for DockerError {
+    fn from(e: crate::lambdafs::FsError) -> Self {
+        DockerError::Fs(e)
+    }
+}
+
+/// Response to a command, with the simulated completion time.
+#[derive(Debug)]
+pub struct CmdResult {
+    pub output: String,
+    pub done: SimTime,
+}
+
+/// The firmware-level container engine.
+pub struct MiniDocker {
+    containers: Vec<Container>,
+    next_id: u64,
+    /// Default memory footprint charged per container (bytes).
+    pub container_mem_bytes: u64,
+}
+
+impl Default for MiniDocker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MiniDocker {
+    pub fn new() -> Self {
+        MiniDocker {
+            containers: Vec::new(),
+            next_id: 1,
+            container_mem_bytes: 64 << 20,
+        }
+    }
+
+    pub fn containers(&self) -> &[Container] {
+        &self.containers
+    }
+
+    fn find(&mut self, id: &str) -> Result<&mut Container, DockerError> {
+        self.containers
+            .iter_mut()
+            .find(|c| c.id == id)
+            .ok_or(DockerError::NoSuchContainer)
+    }
+
+    /// `docker pull`: fetch blobs + manifest from the registry over
+    /// Ether-oN and store them in λFS (`/images/blobs/<digest>`,
+    /// `/images/manifest/<name>`).
+    pub fn pull(
+        &mut self,
+        fw: &mut VirtualFw,
+        fs: &mut LambdaFs,
+        dev: &mut SsdDevice,
+        reg: &Registry,
+        at: SimTime,
+        image: &str,
+    ) -> Result<CmdResult, DockerError> {
+        let (manifest, blobs) = reg.fetch(image).ok_or(DockerError::NoSuchImage)?;
+        let mut done = at;
+        // each blob arrives as Ether-oN frames, then lands in λFS
+        for blob in blobs {
+            let frames = (blob.bytes.len() as u64).div_ceil(1448).max(1);
+            done += SimTime::ns(frames * fw.costs.t_pkt_ethon_ns);
+            let path = format!("/images/blobs/{:016x}", blob.digest);
+            let r = fs.write_file(dev, done, &path, &blob.bytes, LockSide::Isp)?;
+            done = r.done;
+        }
+        let mpath = format!("/images/manifest/{}", manifest.name);
+        let r = fs.write_file(dev, done, &mpath, manifest.to_json().dump().as_bytes(), LockSide::Isp)?;
+        done = r.done;
+        Ok(CmdResult {
+            output: format!("Pulled {} ({} layers)", image, manifest.layers.len()),
+            done,
+        })
+    }
+
+    /// `docker rmi`: remove manifest + blobs.
+    pub fn rmi(
+        &mut self,
+        fs: &mut LambdaFs,
+        dev: &mut SsdDevice,
+        at: SimTime,
+        image: &str,
+    ) -> Result<CmdResult, DockerError> {
+        let manifest = self.load_manifest(fs, dev, at, image)?;
+        for layer in &manifest.layers {
+            let _ = fs.unlink(&format!("/images/blobs/{:016x}", layer));
+        }
+        fs.unlink(&format!("/images/manifest/{}", image))?;
+        Ok(CmdResult {
+            output: format!("Untagged {image}"),
+            done: at,
+        })
+    }
+
+    fn load_manifest(
+        &self,
+        fs: &mut LambdaFs,
+        dev: &mut SsdDevice,
+        at: SimTime,
+        image: &str,
+    ) -> Result<ImageManifest, DockerError> {
+        let path = format!("/images/manifest/{}", image);
+        let r = fs
+            .read_file(dev, at, &path, LockSide::Isp)
+            .map_err(|_| DockerError::NoSuchImage)?;
+        let text = String::from_utf8_lossy(&r.value);
+        ImageManifest::from_json_str(&text).ok_or(DockerError::NoSuchImage)
+    }
+
+    /// `docker create`: unpack layers into a rootfs (overlay merge: lower
+    /// dirs from blobs + writable upper), recording the container.
+    pub fn create(
+        &mut self,
+        fw: &mut VirtualFw,
+        fs: &mut LambdaFs,
+        dev: &mut SsdDevice,
+        at: SimTime,
+        image: &str,
+    ) -> Result<CmdResult, DockerError> {
+        let manifest = self.load_manifest(fs, dev, at, image)?;
+        let id = format!("c{:04}", self.next_id);
+        self.next_id += 1;
+        let root = format!("/containers/{id}/rootfs");
+        fs.mkdir_p(&root, crate::nvme::namespace::PRIVATE_NS)
+            .map_err(DockerError::Fs)?;
+        let mut done = at;
+        // overlay: lower directories materialize from each layer blob
+        for (i, layer) in manifest.layers.iter().enumerate() {
+            let blob = fs
+                .read_file(dev, done, &format!("/images/blobs/{:016x}", layer), LockSide::Isp)?;
+            done = blob.done;
+            let r = fs.write_file(
+                dev,
+                done,
+                &format!("{root}/lower{i}"),
+                &blob.value,
+                LockSide::Isp,
+            )?;
+            done = r.done;
+        }
+        // writable upper dir + merged view marker
+        fs.mkdir_p(&format!("{root}/upper"), crate::nvme::namespace::PRIVATE_NS)
+            .map_err(DockerError::Fs)?;
+        let r = fs.write_file(
+            dev,
+            done,
+            &format!("{root}/merged"),
+            manifest.entry.as_bytes(),
+            LockSide::Isp,
+        )?;
+        done = r.done;
+        fw.syscall(Syscall::Mkdir);
+        self.containers
+            .push(Container::new(&id, image, &manifest.entry, &root));
+        Ok(CmdResult { output: id, done })
+    }
+
+    /// `docker start`: fork the ISP process and mark Running.
+    pub fn start(
+        &mut self,
+        fw: &mut VirtualFw,
+        fs: &mut LambdaFs,
+        dev: &mut SsdDevice,
+        at: SimTime,
+        id: &str,
+    ) -> Result<CmdResult, DockerError> {
+        let mem = self.container_mem_bytes;
+        let c = self.find(id)?;
+        if c.state == ContainerState::Running {
+            return Err(DockerError::BadState("already running"));
+        }
+        let entry = c.entry.clone();
+        let log_path = c.log_path();
+        let pid = fw.thread.spawn(mem).ok_or(DockerError::OutOfMemory)?;
+        fw.syscall(Syscall::Fork);
+        let c = self.find(id)?;
+        c.state = ContainerState::Running;
+        c.pid = Some(pid);
+        let r = fs.append_file(
+            dev,
+            at,
+            &log_path,
+            format!("[{}] started: {}\n", id, entry).as_bytes(),
+            LockSide::Isp,
+        )?;
+        Ok(CmdResult {
+            output: format!("Started {id} (pid {pid})"),
+            done: r.done,
+        })
+    }
+
+    /// `docker run` = create + start.
+    pub fn run(
+        &mut self,
+        fw: &mut VirtualFw,
+        fs: &mut LambdaFs,
+        dev: &mut SsdDevice,
+        at: SimTime,
+        image: &str,
+    ) -> Result<CmdResult, DockerError> {
+        let created = self.create(fw, fs, dev, at, image)?;
+        let id = created.output.clone();
+        let started = self.start(fw, fs, dev, created.done, &id)?;
+        Ok(CmdResult {
+            output: id,
+            done: started.done,
+        })
+    }
+
+    /// `docker stop`: graceful exit (code 0).
+    pub fn stop(
+        &mut self,
+        fw: &mut VirtualFw,
+        fs: &mut LambdaFs,
+        dev: &mut SsdDevice,
+        at: SimTime,
+        id: &str,
+    ) -> Result<CmdResult, DockerError> {
+        let mem_pages = self.container_mem_bytes.div_ceil(4096);
+        let c = self.find(id)?;
+        if c.state != ContainerState::Running {
+            return Err(DockerError::BadState("not running"));
+        }
+        let pid = c.pid.take().expect("running container has pid");
+        let log_path = c.log_path();
+        c.state = ContainerState::Exited(0);
+        fw.thread.exit(pid, 0);
+        fw.thread.reap(pid, mem_pages);
+        fw.syscall(Syscall::Exit);
+        let r = fs.append_file(dev, at, &log_path, format!("[{id}] stopped\n").as_bytes(), LockSide::Isp)?;
+        Ok(CmdResult {
+            output: format!("Stopped {id}"),
+            done: r.done,
+        })
+    }
+
+    /// `docker kill`: SIGKILL semantics (code 137).
+    pub fn kill(
+        &mut self,
+        fw: &mut VirtualFw,
+        fs: &mut LambdaFs,
+        dev: &mut SsdDevice,
+        at: SimTime,
+        id: &str,
+    ) -> Result<CmdResult, DockerError> {
+        let mem_pages = self.container_mem_bytes.div_ceil(4096);
+        let c = self.find(id)?;
+        if c.state != ContainerState::Running {
+            return Err(DockerError::BadState("not running"));
+        }
+        let pid = c.pid.take().expect("running container has pid");
+        let log_path = c.log_path();
+        c.state = ContainerState::Killed;
+        fw.thread.exit(pid, 137);
+        fw.thread.reap(pid, mem_pages);
+        let r = fs.append_file(dev, at, &log_path, format!("[{id}] killed\n").as_bytes(), LockSide::Isp)?;
+        Ok(CmdResult {
+            output: format!("Killed {id}"),
+            done: r.done,
+        })
+    }
+
+    /// `docker restart` = stop (if running) + start.
+    pub fn restart(
+        &mut self,
+        fw: &mut VirtualFw,
+        fs: &mut LambdaFs,
+        dev: &mut SsdDevice,
+        at: SimTime,
+        id: &str,
+    ) -> Result<CmdResult, DockerError> {
+        let state = self.find(id)?.state.clone();
+        let mut now = at;
+        if state == ContainerState::Running {
+            now = self.stop(fw, fs, dev, now, id)?.done;
+        }
+        self.start(fw, fs, dev, now, id)
+    }
+
+    /// `docker rm`: remove a non-running container and its rootfs.
+    pub fn rm(
+        &mut self,
+        fs: &mut LambdaFs,
+        at: SimTime,
+        id: &str,
+    ) -> Result<CmdResult, DockerError> {
+        let c = self.find(id)?;
+        if c.state == ContainerState::Running {
+            return Err(DockerError::BadState("running; stop or kill first"));
+        }
+        let root = c.rootfs.clone();
+        if let Ok(entries) = fs.list(&root) {
+            for e in entries {
+                let _ = fs.unlink(&format!("{root}/{e}"));
+            }
+        }
+        let _ = fs.unlink(&format!("/containers/{id}/log"));
+        self.containers.retain(|c| c.id != id);
+        Ok(CmdResult {
+            output: format!("Removed {id}"),
+            done: at,
+        })
+    }
+
+    /// `docker logs`: read `/containers/<id>/log` (transferable to the
+    /// host via Ether-oN for real-time analysis).
+    pub fn logs(
+        &mut self,
+        fs: &mut LambdaFs,
+        dev: &mut SsdDevice,
+        at: SimTime,
+        id: &str,
+    ) -> Result<CmdResult, DockerError> {
+        let c = self.find(id)?;
+        let path = c.log_path();
+        let r = fs.read_file(dev, at, &path, LockSide::Isp)?;
+        Ok(CmdResult {
+            output: String::from_utf8_lossy(&r.value).into_owned(),
+            done: r.done,
+        })
+    }
+
+    /// `docker ps`: one line per container.
+    pub fn ps(&self) -> CmdResult {
+        let mut out = String::from("CONTAINER ID  IMAGE  STATUS\n");
+        for c in &self.containers {
+            out.push_str(&format!("{}  {}  {:?}\n", c.id, c.image, c.state));
+        }
+        CmdResult {
+            output: out,
+            done: SimTime::ZERO,
+        }
+    }
+
+    /// Append a line to a container's log (stdout capture).
+    pub fn log_line(
+        &mut self,
+        fs: &mut LambdaFs,
+        dev: &mut SsdDevice,
+        at: SimTime,
+        id: &str,
+        line: &str,
+    ) -> Result<SimTime, DockerError> {
+        let c = self.find(id)?;
+        let path = c.log_path();
+        let r = fs.append_file(dev, at, &path, format!("{line}\n").as_bytes(), LockSide::Isp)?;
+        Ok(r.done)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SsdConfig;
+
+    fn setup() -> (MiniDocker, VirtualFw, LambdaFs, SsdDevice, Registry) {
+        let cfg = SsdConfig::default();
+        let dev = SsdDevice::new(cfg.clone());
+        let fs = LambdaFs::over_device(&dev);
+        let fw = VirtualFw::new(&cfg);
+        let mut reg = Registry::new();
+        reg.publish("mariadb", "latest", "mariadbd --datadir=/data", &[64 << 10, 32 << 10], 7);
+        (MiniDocker::new(), fw, fs, dev, reg)
+    }
+
+    #[test]
+    fn pull_stores_blobs_and_manifest() {
+        let (mut md, mut fw, mut fs, mut dev, reg) = setup();
+        let r = md.pull(&mut fw, &mut fs, &mut dev, &reg, SimTime::ZERO, "mariadb").unwrap();
+        assert!(r.done > SimTime::ZERO);
+        let blobs = fs.list("/images/blobs").unwrap();
+        assert_eq!(blobs.len(), 2);
+        assert!(fs.walk("/images/manifest/mariadb").is_ok());
+    }
+
+    #[test]
+    fn pull_unknown_image_fails() {
+        let (mut md, mut fw, mut fs, mut dev, reg) = setup();
+        assert_eq!(
+            md.pull(&mut fw, &mut fs, &mut dev, &reg, SimTime::ZERO, "nope")
+                .unwrap_err(),
+            DockerError::NoSuchImage
+        );
+    }
+
+    #[test]
+    fn full_lifecycle_pull_run_logs_stop_rm() {
+        let (mut md, mut fw, mut fs, mut dev, reg) = setup();
+        md.pull(&mut fw, &mut fs, &mut dev, &reg, SimTime::ZERO, "mariadb").unwrap();
+        let r = md.run(&mut fw, &mut fs, &mut dev, SimTime::ZERO, "mariadb").unwrap();
+        let id = r.output.clone();
+        assert_eq!(md.containers()[0].state, ContainerState::Running);
+        assert_eq!(fw.thread.running(), 1);
+
+        md.log_line(&mut fs, &mut dev, r.done, &id, "query ok").unwrap();
+        let logs = md.logs(&mut fs, &mut dev, r.done, &id).unwrap();
+        assert!(logs.output.contains("started"));
+        assert!(logs.output.contains("query ok"));
+
+        md.stop(&mut fw, &mut fs, &mut dev, r.done, &id).unwrap();
+        assert_eq!(md.containers()[0].state, ContainerState::Exited(0));
+        assert_eq!(fw.thread.running(), 0);
+
+        md.rm(&mut fs, r.done, &id).unwrap();
+        assert!(md.containers().is_empty());
+    }
+
+    #[test]
+    fn cannot_rm_running_container() {
+        let (mut md, mut fw, mut fs, mut dev, reg) = setup();
+        md.pull(&mut fw, &mut fs, &mut dev, &reg, SimTime::ZERO, "mariadb").unwrap();
+        let id = md.run(&mut fw, &mut fs, &mut dev, SimTime::ZERO, "mariadb").unwrap().output;
+        assert!(matches!(
+            md.rm(&mut fs, SimTime::ZERO, &id).unwrap_err(),
+            DockerError::BadState(_)
+        ));
+    }
+
+    #[test]
+    fn kill_sets_killed_and_restart_revives() {
+        let (mut md, mut fw, mut fs, mut dev, reg) = setup();
+        md.pull(&mut fw, &mut fs, &mut dev, &reg, SimTime::ZERO, "mariadb").unwrap();
+        let id = md.run(&mut fw, &mut fs, &mut dev, SimTime::ZERO, "mariadb").unwrap().output;
+        md.kill(&mut fw, &mut fs, &mut dev, SimTime::ZERO, &id).unwrap();
+        assert_eq!(md.containers()[0].state, ContainerState::Killed);
+        md.restart(&mut fw, &mut fs, &mut dev, SimTime::ZERO, &id).unwrap();
+        assert_eq!(md.containers()[0].state, ContainerState::Running);
+    }
+
+    #[test]
+    fn rmi_removes_image_files() {
+        let (mut md, mut fw, mut fs, mut dev, reg) = setup();
+        md.pull(&mut fw, &mut fs, &mut dev, &reg, SimTime::ZERO, "mariadb").unwrap();
+        md.rmi(&mut fs, &mut dev, SimTime::ZERO, "mariadb").unwrap();
+        assert!(fs.walk("/images/manifest/mariadb").is_err());
+        assert!(fs.list("/images/blobs").unwrap().is_empty());
+    }
+
+    #[test]
+    fn ps_lists_containers() {
+        let (mut md, mut fw, mut fs, mut dev, reg) = setup();
+        md.pull(&mut fw, &mut fs, &mut dev, &reg, SimTime::ZERO, "mariadb").unwrap();
+        md.run(&mut fw, &mut fs, &mut dev, SimTime::ZERO, "mariadb").unwrap();
+        let out = md.ps().output;
+        assert!(out.contains("c0001"));
+        assert!(out.contains("mariadb"));
+    }
+
+    #[test]
+    fn http_command_parsing() {
+        assert_eq!(
+            DockerCmd::from_http("POST /images/mariadb/pull HTTP/1.1"),
+            Some(DockerCmd::Pull("mariadb".into()))
+        );
+        assert_eq!(
+            DockerCmd::from_http("POST /containers/c0001/start HTTP/1.1"),
+            Some(DockerCmd::Start("c0001".into()))
+        );
+        assert_eq!(
+            DockerCmd::from_http("GET /containers/json HTTP/1.1"),
+            Some(DockerCmd::Ps)
+        );
+        assert_eq!(
+            DockerCmd::from_http("DELETE /containers/c0001 HTTP/1.1"),
+            Some(DockerCmd::Rm("c0001".into()))
+        );
+        assert_eq!(DockerCmd::from_http("PATCH /nope HTTP/1.1"), None);
+    }
+
+    #[test]
+    fn create_materializes_overlay_rootfs() {
+        let (mut md, mut fw, mut fs, mut dev, reg) = setup();
+        md.pull(&mut fw, &mut fs, &mut dev, &reg, SimTime::ZERO, "mariadb").unwrap();
+        let id = md.create(&mut fw, &mut fs, &mut dev, SimTime::ZERO, "mariadb").unwrap().output;
+        let root = format!("/containers/{id}/rootfs");
+        let entries = fs.list(&root).unwrap();
+        assert!(entries.contains(&"lower0".to_string()));
+        assert!(entries.contains(&"lower1".to_string()));
+        assert!(entries.contains(&"upper".to_string()));
+        assert!(entries.contains(&"merged".to_string()));
+        let merged = fs
+            .read_file(&mut dev, SimTime::ZERO, &format!("{root}/merged"), LockSide::Isp)
+            .unwrap();
+        assert_eq!(merged.value, b"mariadbd --datadir=/data".to_vec());
+    }
+}

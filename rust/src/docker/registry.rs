@@ -1,0 +1,94 @@
+//! Host-side image registry — the "user-defined location" docker pull
+//! retrieves blobs from (paper Figure 2b step 1).
+
+use std::collections::HashMap;
+
+use super::image::{Blob, ImageManifest};
+
+/// An in-memory registry of published images.
+#[derive(Default)]
+pub struct Registry {
+    images: HashMap<String, (ImageManifest, Vec<Blob>)>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Publish an image with synthetic layers of the given sizes.
+    pub fn publish(
+        &mut self,
+        name: &str,
+        tag: &str,
+        entry: &str,
+        layer_sizes: &[usize],
+        seed: u64,
+    ) {
+        let blobs: Vec<Blob> = layer_sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &sz)| Blob::synthetic(seed.wrapping_add(i as u64), sz))
+            .collect();
+        let manifest = ImageManifest {
+            name: name.to_string(),
+            tag: tag.to_string(),
+            entry: entry.to_string(),
+            layers: blobs.iter().map(|b| b.digest).collect(),
+        };
+        self.images.insert(name.to_string(), (manifest, blobs));
+    }
+
+    /// Fetch manifest + blobs for `name` (a `docker pull` round trip).
+    pub fn fetch(&self, name: &str) -> Option<(&ImageManifest, &[Blob])> {
+        self.images.get(name).map(|(m, b)| (m, b.as_slice()))
+    }
+
+    pub fn list(&self) -> Vec<&str> {
+        self.images.keys().map(String::as_str).collect()
+    }
+
+    /// Publish the paper's six benchmark images with plausible layer sizes.
+    pub fn with_benchmark_images() -> Registry {
+        let mut r = Registry::new();
+        r.publish("embed", "latest", "dlrm-embed --tables=/data/emb", &[256 << 10, 64 << 10], 11);
+        r.publish("mariadb", "latest", "mariadbd --datadir=/data", &[512 << 10, 128 << 10, 64 << 10], 12);
+        r.publish("rocksdb", "latest", "rocksdb-bench --db=/data/kv", &[256 << 10, 32 << 10], 13);
+        r.publish("pattern", "latest", "grep -rc needle /data/docs", &[128 << 10], 14);
+        r.publish("nginx", "latest", "nginx -g 'daemon off;'", &[384 << 10, 96 << 10], 15);
+        r.publish("vsftpd", "latest", "vsftpd /etc/vsftpd.conf", &[192 << 10], 16);
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn publish_then_fetch() {
+        let mut r = Registry::new();
+        r.publish("app", "v1", "/bin/app", &[1000, 2000], 3);
+        let (m, blobs) = r.fetch("app").unwrap();
+        assert_eq!(m.name, "app");
+        assert_eq!(m.layers.len(), 2);
+        assert_eq!(blobs.len(), 2);
+        assert_eq!(blobs[0].bytes.len(), 1000);
+        assert!(blobs.iter().all(|b| b.verify()));
+        // manifest digests match blob digests
+        assert_eq!(m.layers, blobs.iter().map(|b| b.digest).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fetch_missing_is_none() {
+        assert!(Registry::new().fetch("ghost").is_none());
+    }
+
+    #[test]
+    fn benchmark_images_cover_table2_programs() {
+        let r = Registry::with_benchmark_images();
+        for name in ["embed", "mariadb", "rocksdb", "pattern", "nginx", "vsftpd"] {
+            assert!(r.fetch(name).is_some(), "{name}");
+        }
+    }
+}

@@ -1,0 +1,378 @@
+//! Byte-level Ethernet / IPv4 / TCP codecs for the Ether-oN intranet.
+//!
+//! Real wire formats (not structs-over-the-wire): the Ether-oN driver
+//! copies an sk_buff — headers, payload, checksum — into a 4KB kernel page,
+//! so the encode/decode here round-trips through `Vec<u8>` exactly as the
+//! NVMe command payload would.
+
+use std::net::Ipv4Addr;
+
+pub const ETH_HEADER_LEN: usize = 14;
+pub const IPV4_HEADER_LEN: usize = 20;
+pub const TCP_HEADER_LEN: usize = 20;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct MacAddr(pub [u8; 6]);
+
+impl MacAddr {
+    pub const BROADCAST: MacAddr = MacAddr([0xFF; 6]);
+
+    /// Deterministic locally-administered MAC for a pool node id.
+    pub fn for_node(id: u32) -> MacAddr {
+        let b = id.to_be_bytes();
+        MacAddr([0x02, 0xD5, b[0], b[1], b[2], b[3]])
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EtherType {
+    Ipv4,
+    Arp,
+    Other(u16),
+}
+
+impl EtherType {
+    fn to_u16(self) -> u16 {
+        match self {
+            EtherType::Ipv4 => 0x0800,
+            EtherType::Arp => 0x0806,
+            EtherType::Other(v) => v,
+        }
+    }
+    fn from_u16(v: u16) -> Self {
+        match v {
+            0x0800 => EtherType::Ipv4,
+            0x0806 => EtherType::Arp,
+            other => EtherType::Other(other),
+        }
+    }
+}
+
+/// An Ethernet II frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EthFrame {
+    pub dst: MacAddr,
+    pub src: MacAddr,
+    pub ethertype: EtherType,
+    pub payload: Vec<u8>,
+}
+
+impl EthFrame {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(ETH_HEADER_LEN + self.payload.len());
+        out.extend_from_slice(&self.dst.0);
+        out.extend_from_slice(&self.src.0);
+        out.extend_from_slice(&self.ethertype.to_u16().to_be_bytes());
+        out.extend_from_slice(&self.payload);
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> Option<EthFrame> {
+        if bytes.len() < ETH_HEADER_LEN {
+            return None;
+        }
+        let mut dst = [0u8; 6];
+        let mut src = [0u8; 6];
+        dst.copy_from_slice(&bytes[0..6]);
+        src.copy_from_slice(&bytes[6..12]);
+        let et = u16::from_be_bytes([bytes[12], bytes[13]]);
+        Some(EthFrame {
+            dst: MacAddr(dst),
+            src: MacAddr(src),
+            ethertype: EtherType::from_u16(et),
+            payload: bytes[ETH_HEADER_LEN..].to_vec(),
+        })
+    }
+}
+
+/// RFC 1071 internet checksum.
+pub fn internet_checksum(bytes: &[u8]) -> u16 {
+    let mut sum: u32 = 0;
+    let mut chunks = bytes.chunks_exact(2);
+    for c in &mut chunks {
+        sum += u16::from_be_bytes([c[0], c[1]]) as u32;
+    }
+    if let [last] = chunks.remainder() {
+        sum += (*last as u32) << 8;
+    }
+    while sum >> 16 != 0 {
+        sum = (sum & 0xFFFF) + (sum >> 16);
+    }
+    !(sum as u16)
+}
+
+/// Minimal IPv4 packet (no options, no fragmentation — the Ether-oN
+/// intranet is a single hop with a fixed MTU).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Ipv4Packet {
+    pub src: Ipv4Addr,
+    pub dst: Ipv4Addr,
+    pub protocol: u8,
+    pub payload: Vec<u8>,
+}
+
+pub const IPPROTO_TCP: u8 = 6;
+pub const IPPROTO_UDP: u8 = 17;
+
+impl Ipv4Packet {
+    pub fn encode(&self) -> Vec<u8> {
+        let total = (IPV4_HEADER_LEN + self.payload.len()) as u16;
+        let mut h = vec![0u8; IPV4_HEADER_LEN];
+        h[0] = 0x45; // v4, IHL=5
+        h[2..4].copy_from_slice(&total.to_be_bytes());
+        h[8] = 64; // TTL
+        h[9] = self.protocol;
+        h[12..16].copy_from_slice(&self.src.octets());
+        h[16..20].copy_from_slice(&self.dst.octets());
+        let csum = internet_checksum(&h);
+        h[10..12].copy_from_slice(&csum.to_be_bytes());
+        h.extend_from_slice(&self.payload);
+        h
+    }
+
+    pub fn decode(bytes: &[u8]) -> Option<Ipv4Packet> {
+        if bytes.len() < IPV4_HEADER_LEN || bytes[0] >> 4 != 4 {
+            return None;
+        }
+        let ihl = ((bytes[0] & 0x0F) as usize) * 4;
+        let total = u16::from_be_bytes([bytes[2], bytes[3]]) as usize;
+        if bytes.len() < total || total < ihl {
+            return None;
+        }
+        // verify header checksum
+        if internet_checksum(&bytes[..ihl]) != 0 {
+            return None;
+        }
+        Some(Ipv4Packet {
+            src: Ipv4Addr::new(bytes[12], bytes[13], bytes[14], bytes[15]),
+            dst: Ipv4Addr::new(bytes[16], bytes[17], bytes[18], bytes[19]),
+            protocol: bytes[9],
+            payload: bytes[ihl..total].to_vec(),
+        })
+    }
+}
+
+/// TCP header flags.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TcpFlags {
+    pub syn: bool,
+    pub ack: bool,
+    pub fin: bool,
+    pub rst: bool,
+    pub psh: bool,
+}
+
+impl TcpFlags {
+    pub const SYN: TcpFlags = TcpFlags {
+        syn: true,
+        ack: false,
+        fin: false,
+        rst: false,
+        psh: false,
+    };
+    pub const SYN_ACK: TcpFlags = TcpFlags {
+        syn: true,
+        ack: true,
+        fin: false,
+        rst: false,
+        psh: false,
+    };
+    pub const ACK: TcpFlags = TcpFlags {
+        syn: false,
+        ack: true,
+        fin: false,
+        rst: false,
+        psh: false,
+    };
+    pub const FIN_ACK: TcpFlags = TcpFlags {
+        syn: false,
+        ack: true,
+        fin: true,
+        rst: false,
+        psh: false,
+    };
+    pub const RST: TcpFlags = TcpFlags {
+        syn: false,
+        ack: false,
+        fin: false,
+        rst: true,
+        psh: false,
+    };
+
+    fn to_byte(self) -> u8 {
+        (self.fin as u8)
+            | (self.syn as u8) << 1
+            | (self.rst as u8) << 2
+            | (self.psh as u8) << 3
+            | (self.ack as u8) << 4
+    }
+
+    fn from_byte(b: u8) -> Self {
+        TcpFlags {
+            fin: b & 1 != 0,
+            syn: b & 2 != 0,
+            rst: b & 4 != 0,
+            psh: b & 8 != 0,
+            ack: b & 16 != 0,
+        }
+    }
+}
+
+/// A TCP segment (no options; fixed 20-byte header).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TcpSegment {
+    pub src_port: u16,
+    pub dst_port: u16,
+    pub seq: u32,
+    pub ack: u32,
+    pub flags: TcpFlags,
+    pub window: u16,
+    pub payload: Vec<u8>,
+}
+
+impl TcpSegment {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut h = vec![0u8; TCP_HEADER_LEN];
+        h[0..2].copy_from_slice(&self.src_port.to_be_bytes());
+        h[2..4].copy_from_slice(&self.dst_port.to_be_bytes());
+        h[4..8].copy_from_slice(&self.seq.to_be_bytes());
+        h[8..12].copy_from_slice(&self.ack.to_be_bytes());
+        h[12] = 5 << 4; // data offset = 5 words
+        h[13] = self.flags.to_byte();
+        h[14..16].copy_from_slice(&self.window.to_be_bytes());
+        h.extend_from_slice(&self.payload);
+        let csum = internet_checksum(&h);
+        h[16..18].copy_from_slice(&csum.to_be_bytes());
+        h
+    }
+
+    pub fn decode(bytes: &[u8]) -> Option<TcpSegment> {
+        if bytes.len() < TCP_HEADER_LEN {
+            return None;
+        }
+        let off = ((bytes[12] >> 4) as usize) * 4;
+        if bytes.len() < off {
+            return None;
+        }
+        Some(TcpSegment {
+            src_port: u16::from_be_bytes([bytes[0], bytes[1]]),
+            dst_port: u16::from_be_bytes([bytes[2], bytes[3]]),
+            seq: u32::from_be_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]),
+            ack: u32::from_be_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]),
+            flags: TcpFlags::from_byte(bytes[13]),
+            window: u16::from_be_bytes([bytes[14], bytes[15]]),
+            payload: bytes[off..].to_vec(),
+        })
+    }
+}
+
+/// Build a full Ethernet frame carrying a TCP segment over IPv4.
+pub fn tcp_frame(
+    src_mac: MacAddr,
+    dst_mac: MacAddr,
+    src_ip: Ipv4Addr,
+    dst_ip: Ipv4Addr,
+    seg: &TcpSegment,
+) -> EthFrame {
+    let ip = Ipv4Packet {
+        src: src_ip,
+        dst: dst_ip,
+        protocol: IPPROTO_TCP,
+        payload: seg.encode(),
+    };
+    EthFrame {
+        dst: dst_mac,
+        src: src_mac,
+        ethertype: EtherType::Ipv4,
+        payload: ip.encode(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eth_frame_round_trip() {
+        let f = EthFrame {
+            dst: MacAddr::for_node(1),
+            src: MacAddr::for_node(2),
+            ethertype: EtherType::Ipv4,
+            payload: vec![1, 2, 3, 4, 5],
+        };
+        assert_eq!(EthFrame::decode(&f.encode()), Some(f));
+    }
+
+    #[test]
+    fn eth_decode_rejects_short() {
+        assert_eq!(EthFrame::decode(&[0u8; 10]), None);
+    }
+
+    #[test]
+    fn ipv4_round_trip_and_checksum() {
+        let p = Ipv4Packet {
+            src: Ipv4Addr::new(10, 77, 0, 1),
+            dst: Ipv4Addr::new(10, 77, 0, 2),
+            protocol: IPPROTO_TCP,
+            payload: b"hello".to_vec(),
+        };
+        let enc = p.encode();
+        assert_eq!(Ipv4Packet::decode(&enc), Some(p));
+        // corrupt a byte -> checksum fails
+        let mut bad = enc.clone();
+        bad[15] ^= 0xFF;
+        assert_eq!(Ipv4Packet::decode(&bad), None);
+    }
+
+    #[test]
+    fn tcp_segment_round_trip() {
+        let s = TcpSegment {
+            src_port: 2375,
+            dst_port: 49152,
+            seq: 1000,
+            ack: 2000,
+            flags: TcpFlags::SYN_ACK,
+            window: 65535,
+            payload: b"GET /containers/json HTTP/1.1\r\n".to_vec(),
+        };
+        assert_eq!(TcpSegment::decode(&s.encode()), Some(s));
+    }
+
+    #[test]
+    fn full_stack_frame_round_trip() {
+        let seg = TcpSegment {
+            src_port: 1,
+            dst_port: 2,
+            seq: 7,
+            ack: 8,
+            flags: TcpFlags::ACK,
+            window: 1024,
+            payload: vec![0xAA; 100],
+        };
+        let f = tcp_frame(
+            MacAddr::for_node(0),
+            MacAddr::for_node(1),
+            Ipv4Addr::new(10, 77, 0, 1),
+            Ipv4Addr::new(10, 77, 0, 2),
+            &seg,
+        );
+        let f2 = EthFrame::decode(&f.encode()).unwrap();
+        let ip = Ipv4Packet::decode(&f2.payload).unwrap();
+        assert_eq!(ip.protocol, IPPROTO_TCP);
+        let seg2 = TcpSegment::decode(&ip.payload).unwrap();
+        assert_eq!(seg2, seg);
+    }
+
+    #[test]
+    fn node_macs_are_unique_and_local() {
+        let a = MacAddr::for_node(1);
+        let b = MacAddr::for_node(2);
+        assert_ne!(a, b);
+        assert_eq!(a.0[0] & 0x02, 0x02); // locally administered bit
+    }
+
+    #[test]
+    fn checksum_of_zeroes_is_ffff() {
+        assert_eq!(internet_checksum(&[0, 0, 0, 0]), 0xFFFF);
+    }
+}

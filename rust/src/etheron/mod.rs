@@ -1,0 +1,16 @@
+//! Ether-oN: Ethernet over NVMe (DESIGN.md S2, paper "ETHERNET OVER NVME").
+//!
+//! Overlays socket-based networking onto the NVMe protocol: the host-side
+//! kernel driver exposes a virtual network adapter whose TX path wraps
+//! Ethernet frames into `TransmitFrame` (0xE0) vendor commands, and whose
+//! RX path is a pool of pre-posted `ReceiveFrame` (0xE1) commands the
+//! device completes asynchronously (the paper's upcall mechanism, sized at
+//! 4 slots per SQ).
+
+pub mod driver;
+pub mod frame;
+pub mod tcp;
+
+pub use driver::{EtherOnDriver, EtherOnStats};
+pub use frame::{EthFrame, EtherType, Ipv4Packet, MacAddr, TcpFlags, TcpSegment};
+pub use tcp::{TcpConn, TcpState, TcpStack};

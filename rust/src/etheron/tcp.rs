@@ -1,0 +1,354 @@
+//! TCP finite state machine — the paper's network handler "employs a TCP
+//! finite state machine to track socket communication states".
+//!
+//! This is a deliberately compact TCP: three-way handshake, in-order data
+//! with cumulative ACKs, FIN teardown, RST abort.  It is used on both ends
+//! of the Ether-oN intranet (host sockets and Virtual-FW's network
+//! handler), which is a lossless single-hop PCIe path, so retransmission
+//! timers are out of scope; state correctness and packet accounting are in
+//! scope because Figure 11's Network component counts them.
+
+use std::collections::{HashMap, VecDeque};
+use std::net::Ipv4Addr;
+
+use super::frame::{TcpFlags, TcpSegment};
+
+/// RFC 793 state set (subset reachable on a lossless link).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TcpState {
+    Listen,
+    SynSent,
+    SynReceived,
+    Established,
+    FinWait1,
+    FinWait2,
+    CloseWait,
+    LastAck,
+    Closed,
+}
+
+/// One connection endpoint.
+#[derive(Debug)]
+pub struct TcpConn {
+    pub state: TcpState,
+    pub local_port: u16,
+    pub remote_port: u16,
+    pub remote_ip: Ipv4Addr,
+    pub snd_nxt: u32,
+    pub rcv_nxt: u32,
+    /// Data received in order, ready for the application.
+    pub rx_buf: VecDeque<u8>,
+    pub segments_sent: u64,
+    pub segments_received: u64,
+}
+
+impl TcpConn {
+    fn new(local_port: u16, remote_ip: Ipv4Addr, remote_port: u16, state: TcpState) -> Self {
+        TcpConn {
+            state,
+            local_port,
+            remote_port,
+            remote_ip,
+            snd_nxt: 0,
+            rcv_nxt: 0,
+            rx_buf: VecDeque::new(),
+            segments_sent: 0,
+            segments_received: 0,
+        }
+    }
+
+    fn seg(&mut self, flags: TcpFlags, payload: Vec<u8>) -> TcpSegment {
+        let seg = TcpSegment {
+            src_port: self.local_port,
+            dst_port: self.remote_port,
+            seq: self.snd_nxt,
+            ack: self.rcv_nxt,
+            flags,
+            window: 65535,
+            payload,
+        };
+        self.segments_sent += 1;
+        seg
+    }
+}
+
+/// Connection key: (local port, remote ip, remote port).
+pub type ConnKey = (u16, Ipv4Addr, u16);
+
+/// A TCP endpoint stack: listening ports + connection table.
+/// `process` consumes an incoming segment and returns segments to emit.
+#[derive(Default)]
+pub struct TcpStack {
+    listening: Vec<u16>,
+    pub conns: HashMap<ConnKey, TcpConn>,
+    pub total_segments: u64,
+}
+
+impl TcpStack {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn listen(&mut self, port: u16) {
+        if !self.listening.contains(&port) {
+            self.listening.push(port);
+        }
+    }
+
+    /// Active open: emit SYN.
+    pub fn connect(&mut self, local_port: u16, remote_ip: Ipv4Addr, remote_port: u16) -> TcpSegment {
+        let mut conn = TcpConn::new(local_port, remote_ip, remote_port, TcpState::SynSent);
+        let syn = conn.seg(TcpFlags::SYN, Vec::new());
+        conn.snd_nxt = conn.snd_nxt.wrapping_add(1); // SYN consumes a seq
+        self.total_segments += 1;
+        self.conns.insert((local_port, remote_ip, remote_port), conn);
+        syn
+    }
+
+    /// Send application data on an established connection.
+    pub fn send(&mut self, key: ConnKey, data: Vec<u8>) -> Option<TcpSegment> {
+        let conn = self.conns.get_mut(&key)?;
+        if conn.state != TcpState::Established {
+            return None;
+        }
+        let len = data.len() as u32;
+        let mut flags = TcpFlags::ACK;
+        flags.psh = true;
+        let seg = conn.seg(flags, data);
+        conn.snd_nxt = conn.snd_nxt.wrapping_add(len);
+        self.total_segments += 1;
+        Some(seg)
+    }
+
+    /// Application close: emit FIN.
+    pub fn close(&mut self, key: ConnKey) -> Option<TcpSegment> {
+        let conn = self.conns.get_mut(&key)?;
+        let seg = match conn.state {
+            TcpState::Established => {
+                conn.state = TcpState::FinWait1;
+                let s = conn.seg(TcpFlags::FIN_ACK, Vec::new());
+                conn.snd_nxt = conn.snd_nxt.wrapping_add(1);
+                s
+            }
+            TcpState::CloseWait => {
+                conn.state = TcpState::LastAck;
+                let s = conn.seg(TcpFlags::FIN_ACK, Vec::new());
+                conn.snd_nxt = conn.snd_nxt.wrapping_add(1);
+                s
+            }
+            _ => return None,
+        };
+        self.total_segments += 1;
+        Some(seg)
+    }
+
+    /// Process one incoming segment from `src_ip`; returns replies to emit.
+    pub fn process(&mut self, src_ip: Ipv4Addr, seg: &TcpSegment) -> Vec<TcpSegment> {
+        self.total_segments += 1;
+        let key: ConnKey = (seg.dst_port, src_ip, seg.src_port);
+        let mut out = Vec::new();
+
+        if let Some(conn) = self.conns.get_mut(&key) {
+            conn.segments_received += 1;
+            if seg.flags.rst {
+                conn.state = TcpState::Closed;
+                return out;
+            }
+            match conn.state {
+                TcpState::SynSent if seg.flags.syn && seg.flags.ack => {
+                    conn.rcv_nxt = seg.seq.wrapping_add(1);
+                    conn.state = TcpState::Established;
+                    out.push(conn.seg(TcpFlags::ACK, Vec::new()));
+                }
+                TcpState::SynReceived if seg.flags.ack && !seg.flags.syn => {
+                    conn.state = TcpState::Established;
+                    // data may ride on the handshake ACK
+                    if !seg.payload.is_empty() {
+                        conn.rcv_nxt = conn.rcv_nxt.wrapping_add(seg.payload.len() as u32);
+                        conn.rx_buf.extend(seg.payload.iter().copied());
+                        out.push(conn.seg(TcpFlags::ACK, Vec::new()));
+                    }
+                }
+                TcpState::Established => {
+                    if seg.flags.fin {
+                        conn.rcv_nxt = seg
+                            .seq
+                            .wrapping_add(seg.payload.len() as u32)
+                            .wrapping_add(1);
+                        conn.state = TcpState::CloseWait;
+                        out.push(conn.seg(TcpFlags::ACK, Vec::new()));
+                    } else if !seg.payload.is_empty() {
+                        if seg.seq == conn.rcv_nxt {
+                            conn.rcv_nxt = conn.rcv_nxt.wrapping_add(seg.payload.len() as u32);
+                            conn.rx_buf.extend(seg.payload.iter().copied());
+                        }
+                        // cumulative ACK either way (dup data re-ACKed)
+                        out.push(conn.seg(TcpFlags::ACK, Vec::new()));
+                    }
+                }
+                TcpState::FinWait1 if seg.flags.ack => {
+                    if seg.flags.fin {
+                        conn.rcv_nxt = seg.seq.wrapping_add(1);
+                        conn.state = TcpState::Closed; // TIME_WAIT elided
+                        out.push(conn.seg(TcpFlags::ACK, Vec::new()));
+                    } else {
+                        conn.state = TcpState::FinWait2;
+                    }
+                }
+                TcpState::FinWait2 if seg.flags.fin => {
+                    conn.rcv_nxt = seg.seq.wrapping_add(1);
+                    conn.state = TcpState::Closed;
+                    out.push(conn.seg(TcpFlags::ACK, Vec::new()));
+                }
+                TcpState::LastAck if seg.flags.ack => {
+                    conn.state = TcpState::Closed;
+                }
+                _ => {}
+            }
+            self.total_segments += out.len() as u64;
+            return out;
+        }
+
+        // No connection: passive open on a listening port?
+        if seg.flags.syn && !seg.flags.ack && self.listening.contains(&seg.dst_port) {
+            let mut conn = TcpConn::new(seg.dst_port, src_ip, seg.src_port, TcpState::SynReceived);
+            conn.rcv_nxt = seg.seq.wrapping_add(1);
+            conn.segments_received = 1;
+            let syn_ack = {
+                let s = conn.seg(TcpFlags::SYN_ACK, Vec::new());
+                conn.snd_nxt = conn.snd_nxt.wrapping_add(1);
+                s
+            };
+            self.conns.insert(key, conn);
+            self.total_segments += 1;
+            out.push(syn_ack);
+            return out;
+        }
+
+        // Otherwise: RST.
+        let rst = TcpSegment {
+            src_port: seg.dst_port,
+            dst_port: seg.src_port,
+            seq: 0,
+            ack: seg.seq.wrapping_add(1),
+            flags: TcpFlags::RST,
+            window: 0,
+            payload: Vec::new(),
+        };
+        self.total_segments += 1;
+        out.push(rst);
+        out
+    }
+
+    /// Drain application data received on a connection.
+    pub fn recv(&mut self, key: ConnKey) -> Vec<u8> {
+        self.conns
+            .get_mut(&key)
+            .map(|c| c.rx_buf.drain(..).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn state_of(&self, key: ConnKey) -> Option<TcpState> {
+        self.conns.get(&key).map(|c| c.state)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CLIENT_IP: Ipv4Addr = Ipv4Addr::new(10, 77, 0, 1);
+    const SERVER_IP: Ipv4Addr = Ipv4Addr::new(10, 77, 0, 2);
+
+    /// Run a full handshake between two stacks; returns (client, server, keys).
+    fn establish() -> (TcpStack, TcpStack, ConnKey, ConnKey) {
+        let mut client = TcpStack::new();
+        let mut server = TcpStack::new();
+        server.listen(2375); // mini-docker's HTTP port
+
+        let syn = client.connect(49152, SERVER_IP, 2375);
+        let syn_ack = server.process(CLIENT_IP, &syn);
+        assert_eq!(syn_ack.len(), 1);
+        let ack = client.process(SERVER_IP, &syn_ack[0]);
+        assert_eq!(ack.len(), 1);
+        server.process(CLIENT_IP, &ack[0]);
+
+        let ckey = (49152, SERVER_IP, 2375);
+        let skey = (2375, CLIENT_IP, 49152);
+        assert_eq!(client.state_of(ckey), Some(TcpState::Established));
+        assert_eq!(server.state_of(skey), Some(TcpState::Established));
+        (client, server, ckey, skey)
+    }
+
+    #[test]
+    fn three_way_handshake() {
+        establish();
+    }
+
+    #[test]
+    fn data_transfer_and_ack() {
+        let (mut client, mut server, ckey, skey) = establish();
+        let seg = client.send(ckey, b"GET /v1/containers HTTP/1.1\r\n".to_vec()).unwrap();
+        let replies = server.process(CLIENT_IP, &seg);
+        assert_eq!(replies.len(), 1); // pure ACK
+        assert!(replies[0].flags.ack);
+        assert_eq!(server.recv(skey), b"GET /v1/containers HTTP/1.1\r\n".to_vec());
+        client.process(SERVER_IP, &replies[0]);
+        // server can answer
+        let resp = server.send(skey, b"HTTP/1.1 200 OK\r\n".to_vec()).unwrap();
+        client.process(SERVER_IP, &resp);
+        assert_eq!(client.recv(ckey), b"HTTP/1.1 200 OK\r\n".to_vec());
+    }
+
+    #[test]
+    fn duplicate_segment_not_double_delivered() {
+        let (mut client, mut server, ckey, skey) = establish();
+        let seg = client.send(ckey, b"abc".to_vec()).unwrap();
+        server.process(CLIENT_IP, &seg);
+        server.process(CLIENT_IP, &seg); // replay
+        assert_eq!(server.recv(skey), b"abc".to_vec());
+        assert!(server.recv(skey).is_empty());
+    }
+
+    #[test]
+    fn graceful_close_both_sides() {
+        let (mut client, mut server, ckey, skey) = establish();
+        let fin = client.close(ckey).unwrap();
+        let ack = server.process(CLIENT_IP, &fin);
+        client.process(SERVER_IP, &ack[0]);
+        assert_eq!(client.state_of(ckey), Some(TcpState::FinWait2));
+        assert_eq!(server.state_of(skey), Some(TcpState::CloseWait));
+        let fin2 = server.close(skey).unwrap();
+        let last_ack = client.process(SERVER_IP, &fin2);
+        server.process(CLIENT_IP, &last_ack[0]);
+        assert_eq!(client.state_of(ckey), Some(TcpState::Closed));
+        assert_eq!(server.state_of(skey), Some(TcpState::Closed));
+    }
+
+    #[test]
+    fn syn_to_closed_port_gets_rst() {
+        let mut server = TcpStack::new();
+        let mut client = TcpStack::new();
+        let syn = client.connect(1000, SERVER_IP, 81);
+        let replies = server.process(CLIENT_IP, &syn);
+        assert_eq!(replies.len(), 1);
+        assert!(replies[0].flags.rst);
+        client.process(SERVER_IP, &replies[0]);
+        assert_eq!(client.state_of((1000, SERVER_IP, 81)), Some(TcpState::Closed));
+    }
+
+    #[test]
+    fn send_on_unestablished_conn_refused() {
+        let mut client = TcpStack::new();
+        client.connect(1000, SERVER_IP, 80); // still SynSent
+        assert!(client.send((1000, SERVER_IP, 80), b"x".to_vec()).is_none());
+    }
+
+    #[test]
+    fn segment_counters_track_traffic() {
+        let (client, server, _, _) = establish();
+        // SYN + SYN-ACK + ACK observed across both stacks
+        assert!(client.total_segments >= 2);
+        assert!(server.total_segments >= 2);
+    }
+}

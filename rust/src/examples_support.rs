@@ -1,0 +1,68 @@
+//! Shared driver for the serving case study, used by `repro serve` and
+//! the `llm_pool_serving` example: spin up N pool-node engines (real PJRT
+//! execution of the AOT artifacts), push batched requests through the
+//! coordinator, and report latency/throughput.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::coordinator::{serve, InferenceRequest};
+use crate::runtime::{Engine, Manifest};
+use crate::util::Rng;
+
+/// Run the serving demo.  Returns Err if artifacts are missing.
+pub fn run_serve(artifacts: &str, nodes: usize, n_requests: usize, tokens: usize) -> Result<()> {
+    let dir = PathBuf::from(artifacts);
+    let manifest = Manifest::load(&dir)?;
+    let c = manifest.config.clone();
+    println!(
+        "model: {} params, {} layers, d_model {}, batch {}, prompt {}, max_seq {}",
+        c.param_count, c.n_layers, c.d_model, c.batch, c.prompt_len, c.max_seq
+    );
+    println!("pool: {nodes} DockerSSD nodes (PJRT CPU engines)");
+
+    // deterministic synthetic prompts over the model's vocab
+    let mut rng = Rng::new(42);
+    let requests: Vec<InferenceRequest> = (0..n_requests as u64)
+        .map(|id| InferenceRequest {
+            id,
+            prompt: (0..c.prompt_len)
+                .map(|_| rng.below(c.vocab as u64) as i32)
+                .collect(),
+            max_new_tokens: tokens,
+        })
+        .collect();
+
+    let factories: Vec<_> = (0..nodes)
+        .map(|_| {
+            let dir = dir.clone();
+            move || Engine::load(&dir)
+        })
+        .collect();
+
+    let kv_bytes = (manifest.kv_cache_elems() * 2 * 4) as u64;
+    let report = serve(factories, requests, c.batch, c.prompt_len, kv_bytes * 4);
+
+    println!("\nresults:");
+    for r in report.responses.iter().take(4) {
+        println!("  req {} via node {}: {:?}", r.id, r.node, &r.tokens);
+    }
+    if report.responses.len() > 4 {
+        println!("  ... ({} total)", report.responses.len());
+    }
+    println!(
+        "\n{} requests, {} batches ({} padded rows), {} tokens in {:?}",
+        report.responses.len(),
+        report.batches,
+        report.padded_rows,
+        report.tokens_out,
+        report.wall
+    );
+    println!(
+        "throughput {:.1} tok/s, mean batch latency {:?}",
+        report.throughput_tok_s(),
+        report.mean_latency()
+    );
+    Ok(())
+}

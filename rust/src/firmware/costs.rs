@@ -1,0 +1,195 @@
+//! Calibrated unit-cost model shared by the six data-processing models
+//! (Figures 3 and 11).
+//!
+//! Anchors (paper statements the calibration targets):
+//!   * Host: Storage ≈ 38% of end-to-end time (Fig 3).
+//!   * P.ISP cuts Storage ~50% but Communicate (Kernel-ctx + LBA-set)
+//!     reaches ~43% of its total; ~1.4x Host end-to-end (Fig 3).
+//!   * P.ISP-V is 13.7% faster than P.ISP-R (vendor commands vs RPC).
+//!   * D-FullOS +9.3% vs P.ISP-V; D-Naive +12.8% vs D-FullOS (Fig 11).
+//!   * D-VirtFW: beats Host 1.3x, P.ISP-R/V 1.6x, D-Naive 1.8x,
+//!     D-FullOS 1.6x; λFS saves 8.4% (LBA-set), rootfs pre-packaging
+//!     saves 30.9% (Kernel-ctx) relative to P.ISP (Fig 11).
+//!
+//! Single global constants — per-workload variation comes only from the
+//! Table 2 characteristic vectors, never from per-workload fitting.
+//! EXPERIMENTS.md E1/E4 record achieved vs paper ratios.
+
+/// All unit costs in nanoseconds (or ns per byte where noted).
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    // --- CPU speeds -----------------------------------------------------
+    /// Host CPU frequency (GHz), paper testbed.
+    pub host_ghz: f64,
+    /// SSD frontend frequency (GHz).
+    pub ssd_ghz: f64,
+    /// Extra slowdown of the embedded in-order cores beyond frequency
+    /// (IPC discount vs the host's OoO core).
+    pub ssd_ipc_discount: f64,
+
+    // --- compute --------------------------------------------------------
+    /// Host data-processing cost per byte touched (ns/B).
+    pub t_proc_host_ns_per_byte: f64,
+
+    // --- system (OS) ----------------------------------------------------
+    /// Full-OS syscall on the host (trap + kernel work + return), ns.
+    pub t_sys_host_ns: u64,
+    /// Full-OS syscall on the embedded cores (D-FullOS / D-Naive), ns.
+    pub t_sys_fullos_ssd_ns: u64,
+    /// Virtual-FW emulated syscall (function wrapper, no kernel boundary), ns.
+    pub t_sys_emul_ns: u64,
+    /// Host VFS path walk per component, ns.
+    pub t_walk_host_ns: u64,
+    /// λFS path walk per component (I/O-node cache), ns.
+    pub t_walk_fw_ns: u64,
+
+    // --- storage --------------------------------------------------------
+    /// MLC page read, us.
+    pub t_flash_read_us: u64,
+    /// MLC page program, us.
+    pub t_flash_prog_us: u64,
+    /// Channel-level parallelism divisor (channels kept busy).
+    pub channels: u64,
+    /// Additional cell-latency overlap from deep NVMe queues (multi-plane
+    /// and die interleaving on top of channel striping).
+    pub flash_overlap: f64,
+    /// Aggregate internal channel bandwidth, GB/s.
+    pub ch_bw_gbps: f64,
+    /// Host PCIe effective bandwidth, GB/s.
+    pub pcie_bw_gbps: f64,
+    /// Host block layer + NVMe driver + interrupt cost per I/O, ns.
+    pub t_blk_host_ns: u64,
+
+    // --- network ----------------------------------------------------------
+    /// Host kernel network stack cost per TCP packet, ns.
+    pub t_pkt_host_ns: u64,
+    /// Ether-oN cost per packet (NVMe cmd + 4KB page copy), ns.
+    pub t_pkt_ethon_ns: u64,
+    /// Ether-oN frame parse cost on the device, ns.
+    pub t_frame_parse_ns: u64,
+
+    // --- P.ISP communication ----------------------------------------------
+    /// P.ISP-R: per offloaded-syscall RPC bounce to the host runtime, ns.
+    pub t_ctx_rpc_ns: u64,
+    /// P.ISP-V: per bounce via vendor-specific NVMe command, ns.
+    pub t_ctx_vendor_ns: u64,
+    /// LBA-set handshake per newly-opened file, ns.
+    pub t_lba_per_file_ns: u64,
+    /// LBA-set bookkeeping per I/O, ns.
+    pub t_lba_per_io_ns: u64,
+
+    // --- D-Naive inter-complex transfers -----------------------------------
+    /// Bandwidth between ISP processor complex and controller complex, GB/s.
+    pub complex_link_gbps: f64,
+    /// Per-I/O cost of crossing the complex boundary, ns.
+    pub t_complex_per_io_ns: u64,
+}
+
+impl CostModel {
+    /// The calibrated instance.
+    ///
+    /// Constants fitted once by randomized search against the anchor
+    /// ratios in the module docs, under physical-plausibility constraints
+    /// (full-OS syscalls on the 2.2GHz in-order cores cost more than on
+    /// the host; λFS walks beat host VFS walks; emulated syscalls stay an
+    /// order of magnitude under kernel syscalls; vendor commands beat
+    /// RPC).  Achieved ratios are recorded in EXPERIMENTS.md E1/E4.
+    pub fn calibrated() -> Self {
+        CostModel {
+            host_ghz: 3.8,
+            ssd_ghz: 2.2,
+            ssd_ipc_discount: 1.10,
+            t_proc_host_ns_per_byte: 1.04,
+            t_sys_host_ns: 3_000,
+            t_sys_fullos_ssd_ns: 4_600,
+            t_sys_emul_ns: 190,
+            t_walk_host_ns: 1_900,
+            t_walk_fw_ns: 815,
+            t_flash_read_us: 50,
+            t_flash_prog_us: 500,
+            channels: 12,
+            flash_overlap: 4.8,
+            ch_bw_gbps: 4.8,
+            pcie_bw_gbps: 3.2,
+            t_blk_host_ns: 3_700,
+            t_pkt_host_ns: 3_000,
+            t_pkt_ethon_ns: 2_200,
+            t_frame_parse_ns: 350,
+            t_ctx_rpc_ns: 5_700,
+            t_ctx_vendor_ns: 2_950,
+            t_lba_per_file_ns: 26_000,
+            t_lba_per_io_ns: 520,
+            complex_link_gbps: 1.9,
+            t_complex_per_io_ns: 2_150,
+        }
+    }
+
+    /// Compute slowdown of the SSD frontend vs the host.
+    pub fn ssd_compute_factor(&self) -> f64 {
+        (self.host_ghz / self.ssd_ghz) * self.ssd_ipc_discount
+    }
+
+    /// ns to move `bytes` at `gbps` GB/s.
+    pub fn xfer_ns(bytes: u64, gbps: f64) -> f64 {
+        bytes as f64 / gbps
+    }
+
+    /// Effective flash service time for one I/O of `bytes` bytes on the
+    /// device (channel-parallel cell access + channel transfer), ns.
+    pub fn flash_io_ns(&self, bytes: u64, is_write: bool) -> f64 {
+        let cell_us = if is_write {
+            self.t_flash_prog_us
+        } else {
+            self.t_flash_read_us
+        };
+        let pages = bytes.div_ceil(4096).max(1);
+        // pages spread across channels; cell time further overlapped by
+        // die/plane interleaving under deep queues
+        let cell_ns = (cell_us * 1_000) as f64 * pages as f64
+            / (self.channels as f64 * self.flash_overlap);
+        let xfer_ns = Self::xfer_ns(bytes, self.ch_bw_gbps);
+        cell_ns + xfer_ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_factor_near_paper_sixty_percent() {
+        let c = CostModel::calibrated();
+        // paper: short sequences run at "roughly 60% of host performance"
+        let perf = 1.0 / c.ssd_compute_factor();
+        assert!((0.5..0.65).contains(&perf), "ssd relative perf {perf}");
+    }
+
+    #[test]
+    fn emulated_syscall_is_order_of_magnitude_cheaper() {
+        let c = CostModel::calibrated();
+        assert!(c.t_sys_emul_ns * 10 <= c.t_sys_host_ns);
+        assert!(c.t_sys_emul_ns * 20 <= c.t_sys_fullos_ssd_ns);
+    }
+
+    #[test]
+    fn vendor_commands_cheaper_than_rpc() {
+        let c = CostModel::calibrated();
+        assert!(c.t_ctx_vendor_ns < c.t_ctx_rpc_ns);
+    }
+
+    #[test]
+    fn flash_io_scales_with_size_and_direction() {
+        let c = CostModel::calibrated();
+        let r4k = c.flash_io_ns(4096, false);
+        let r64k = c.flash_io_ns(65536, false);
+        let w4k = c.flash_io_ns(4096, true);
+        assert!(r64k > r4k);
+        assert!(w4k > r4k, "program slower than read");
+    }
+
+    #[test]
+    fn xfer_math() {
+        // 3.2 GB/s == 3.2 B/ns -> 3200 bytes in 1000 ns
+        assert!((CostModel::xfer_ns(3200, 3.2) - 1000.0).abs() < 1e-6);
+    }
+}

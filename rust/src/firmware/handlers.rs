@@ -1,0 +1,274 @@
+//! The three Virtual-FW handlers (Figure 7a) plus the FW-pool / ISP-pool
+//! memory partitions guarded by CPU privilege modes.
+
+use std::collections::HashMap;
+
+use crate::config::SsdConfig;
+use crate::etheron::TcpStack;
+use crate::lambdafs::{FsError, FsResult, LambdaFs, LockSide};
+use crate::ssd::SsdDevice;
+use crate::util::SimTime;
+
+/// CPU execution modes: FW-pool access requires privileged mode, enforced
+/// by the memory protection unit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrivilegeMode {
+    Privileged,
+    User,
+}
+
+/// Page-granular DRAM partitions: the FW-pool holds handler tables, the
+/// ISP-pool holds call arguments and container data.
+#[derive(Debug)]
+pub struct MemPools {
+    page_bytes: u64,
+    fw_pages_total: u64,
+    isp_pages_total: u64,
+    fw_pages_used: u64,
+    isp_pages_used: u64,
+    pub mpu_faults: u64,
+}
+
+impl MemPools {
+    pub fn new(page_bytes: u64, fw_pages: u64, isp_pages: u64) -> Self {
+        MemPools {
+            page_bytes,
+            fw_pages_total: fw_pages,
+            isp_pages_total: isp_pages,
+            fw_pages_used: 0,
+            isp_pages_used: 0,
+            mpu_faults: 0,
+        }
+    }
+
+    /// Allocate from the FW pool; MPU-rejected outside privileged mode.
+    pub fn alloc_fw(&mut self, mode: PrivilegeMode, bytes: u64) -> Option<u64> {
+        if mode != PrivilegeMode::Privileged {
+            self.mpu_faults += 1;
+            return None;
+        }
+        let pages = bytes.div_ceil(self.page_bytes).max(1);
+        if self.fw_pages_used + pages > self.fw_pages_total {
+            return None;
+        }
+        self.fw_pages_used += pages;
+        Some(pages)
+    }
+
+    /// Allocate from the ISP pool (either mode — privileged firmware may
+    /// access the ISP pool directly, avoiding copies between the pools).
+    pub fn alloc_isp(&mut self, bytes: u64) -> Option<u64> {
+        let pages = bytes.div_ceil(self.page_bytes).max(1);
+        if self.isp_pages_used + pages > self.isp_pages_total {
+            return None;
+        }
+        self.isp_pages_used += pages;
+        Some(pages)
+    }
+
+    pub fn free_isp(&mut self, pages: u64) {
+        self.isp_pages_used = self.isp_pages_used.saturating_sub(pages);
+    }
+
+    pub fn isp_pages_free(&self) -> u64 {
+        self.isp_pages_total - self.isp_pages_used
+    }
+}
+
+/// An ISP process (container main thread) tracked by the thread handler.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ProcState {
+    Running,
+    Exited(i32),
+}
+
+/// Thread handler: process table + the memory pools.
+pub struct ThreadHandler {
+    pub pools: MemPools,
+    procs: HashMap<u32, ProcState>,
+    next_pid: u32,
+    pub calls: u64,
+}
+
+impl ThreadHandler {
+    pub fn new(cfg: &SsdConfig) -> Self {
+        let dram_pages = cfg.dram_gib * (1 << 30) / cfg.page_bytes as u64;
+        // FW tables get a fixed 1/16 slice; ISP data the rest (minus ICL).
+        let fw = dram_pages / 16;
+        let isp = dram_pages - fw - ((dram_pages as f64 * cfg.icl_fraction) as u64);
+        ThreadHandler {
+            pools: MemPools::new(cfg.page_bytes as u64, fw, isp),
+            procs: HashMap::new(),
+            next_pid: 100,
+            calls: 0,
+        }
+    }
+
+    /// fork(): create an ISP process, allocating its working pages.
+    pub fn spawn(&mut self, mem_bytes: u64) -> Option<u32> {
+        self.pools.alloc_isp(mem_bytes)?;
+        let pid = self.next_pid;
+        self.next_pid += 1;
+        self.procs.insert(pid, ProcState::Running);
+        Some(pid)
+    }
+
+    /// exit(): mark the process exited.
+    pub fn exit(&mut self, pid: u32, code: i32) -> bool {
+        match self.procs.get_mut(&pid) {
+            Some(state) => {
+                *state = ProcState::Exited(code);
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn reap(&mut self, pid: u32, mem_pages: u64) -> Option<i32> {
+        match self.procs.get(&pid) {
+            Some(ProcState::Exited(code)) => {
+                let code = *code;
+                self.procs.remove(&pid);
+                self.pools.free_isp(mem_pages);
+                Some(code)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn state(&self, pid: u32) -> Option<&ProcState> {
+        self.procs.get(&pid)
+    }
+
+    pub fn running(&self) -> usize {
+        self.procs
+            .values()
+            .filter(|s| matches!(s, ProcState::Running))
+            .count()
+    }
+}
+
+/// I/O handler: ISP-generated I/O only, straight onto λFS — no host block
+/// layer, no NVMe software stack.
+#[derive(Default)]
+pub struct IoHandler {
+    pub calls: u64,
+    pub reads: u64,
+    pub writes: u64,
+}
+
+impl IoHandler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn read(
+        &mut self,
+        fs: &mut LambdaFs,
+        dev: &mut SsdDevice,
+        at: SimTime,
+        path: &str,
+    ) -> Result<FsResult<Vec<u8>>, FsError> {
+        self.reads += 1;
+        fs.read_file(dev, at, path, LockSide::Isp)
+    }
+
+    pub fn write(
+        &mut self,
+        fs: &mut LambdaFs,
+        dev: &mut SsdDevice,
+        at: SimTime,
+        path: &str,
+        data: &[u8],
+    ) -> Result<SimTime, FsError> {
+        self.writes += 1;
+        Ok(fs.write_file(dev, at, path, data, LockSide::Isp)?.done)
+    }
+}
+
+/// Network handler: the device-side TCP stack plus frame accounting.
+pub struct NetHandler {
+    pub tcp: TcpStack,
+    pub calls: u64,
+    pub rx_frames: u64,
+    pub rx_bytes: u64,
+    pub tx_frames: u64,
+}
+
+impl NetHandler {
+    pub fn new() -> Self {
+        NetHandler {
+            tcp: TcpStack::new(),
+            calls: 0,
+            rx_frames: 0,
+            rx_bytes: 0,
+            tx_frames: 0,
+        }
+    }
+}
+
+impl Default for NetHandler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SsdConfig;
+
+    #[test]
+    fn mpu_blocks_user_mode_fw_pool() {
+        let mut pools = MemPools::new(4096, 16, 64);
+        assert!(pools.alloc_fw(PrivilegeMode::User, 4096).is_none());
+        assert_eq!(pools.mpu_faults, 1);
+        assert!(pools.alloc_fw(PrivilegeMode::Privileged, 4096).is_some());
+    }
+
+    #[test]
+    fn isp_pool_open_to_both_modes_no_copy() {
+        let mut pools = MemPools::new(4096, 16, 64);
+        assert!(pools.alloc_isp(8192).is_some());
+        assert_eq!(pools.isp_pages_free(), 62);
+    }
+
+    #[test]
+    fn pools_are_bounded() {
+        let mut pools = MemPools::new(4096, 2, 2);
+        assert!(pools.alloc_fw(PrivilegeMode::Privileged, 8192).is_some());
+        assert!(pools.alloc_fw(PrivilegeMode::Privileged, 1).is_none());
+        assert!(pools.alloc_isp(8192).is_some());
+        assert!(pools.alloc_isp(1).is_none());
+    }
+
+    #[test]
+    fn process_lifecycle() {
+        let mut th = ThreadHandler::new(&SsdConfig::default());
+        let pid = th.spawn(1 << 20).expect("spawn");
+        assert_eq!(th.state(pid), Some(&ProcState::Running));
+        assert_eq!(th.running(), 1);
+        assert!(th.exit(pid, 0));
+        assert_eq!(th.running(), 0);
+        assert_eq!(th.reap(pid, 256), Some(0));
+        assert_eq!(th.state(pid), None);
+    }
+
+    #[test]
+    fn exit_unknown_pid_fails() {
+        let mut th = ThreadHandler::new(&SsdConfig::default());
+        assert!(!th.exit(12345, 0));
+        assert_eq!(th.reap(12345, 0), None);
+    }
+
+    #[test]
+    fn reap_frees_memory() {
+        let mut th = ThreadHandler::new(&SsdConfig::default());
+        let free0 = th.pools.isp_pages_free();
+        let pid = th.spawn(4096 * 10).unwrap();
+        assert_eq!(th.pools.isp_pages_free(), free0 - 10);
+        th.exit(pid, 7);
+        assert_eq!(th.reap(pid, 10), Some(7));
+        assert_eq!(th.pools.isp_pages_free(), free0);
+    }
+}

@@ -1,0 +1,196 @@
+//! The inode lock: λFS's host/ISP concurrency-control protocol.
+//!
+//! From the paper: "λFS adds a reference counter to the inode ... This
+//! counter updates when the target file (or its directory file) is opened
+//! or closed.  VFS and λFS then send a special packet via Ether-oN to
+//! update it.  The file is accessible only if the inode reference counter
+//! [of the other side] is zero."  On ISP acquisition the host VFS
+//! invalidates its inode cache.  The lock is non-persistent by design
+//! (power loss resets it; the host restores the FS and restarts the
+//! container).
+
+use std::collections::HashMap;
+
+use super::Ino;
+
+/// Which side of the PCIe boundary is asking.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LockSide {
+    Host,
+    Isp,
+}
+
+impl LockSide {
+    pub fn other(self) -> LockSide {
+        match self {
+            LockSide::Host => LockSide::Isp,
+            LockSide::Isp => LockSide::Host,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct RefCounts {
+    host: u32,
+    isp: u32,
+}
+
+/// Per-inode reference counters plus the Ether-oN sync accounting.
+#[derive(Debug, Default)]
+pub struct InodeLockTable {
+    refs: HashMap<Ino, RefCounts>,
+    /// Special sync packets exchanged over Ether-oN (counted for Fig 11).
+    pub sync_packets: u64,
+    /// Host VFS inode-cache invalidations triggered by ISP acquisition.
+    pub vfs_invalidations: u64,
+}
+
+impl InodeLockTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn counts(&self, ino: Ino) -> RefCounts {
+        self.refs.get(&ino).copied().unwrap_or_default()
+    }
+
+    /// May `side` access `ino` right now?  Allowed iff the *other* side's
+    /// reference counter is zero.
+    pub fn may_access(&self, ino: Ino, side: LockSide) -> bool {
+        let c = self.counts(ino);
+        match side {
+            LockSide::Host => c.isp == 0,
+            LockSide::Isp => c.host == 0,
+        }
+    }
+
+    /// Open/bind: increment `side`'s counter.  Fails (no change) when the
+    /// other side currently holds the inode.
+    pub fn acquire(&mut self, ino: Ino, side: LockSide) -> bool {
+        if !self.may_access(ino, side) {
+            return false;
+        }
+        let entry = self.refs.entry(ino).or_default();
+        match side {
+            LockSide::Host => entry.host += 1,
+            LockSide::Isp => {
+                entry.isp += 1;
+                // "VFS invalidates its inode cache, referring to the
+                // storage's latest information"
+                self.vfs_invalidations += 1;
+            }
+        }
+        // counter update crosses Ether-oN as a special packet
+        self.sync_packets += 1;
+        true
+    }
+
+    /// Close/unbind: decrement `side`'s counter (saturating).
+    pub fn release(&mut self, ino: Ino, side: LockSide) {
+        if let Some(entry) = self.refs.get_mut(&ino) {
+            match side {
+                LockSide::Host => entry.host = entry.host.saturating_sub(1),
+                LockSide::Isp => entry.isp = entry.isp.saturating_sub(1),
+            }
+            self.sync_packets += 1;
+            if entry.host == 0 && entry.isp == 0 {
+                self.refs.remove(&ino);
+            }
+        }
+    }
+
+    /// Power-failure semantics: all locks vanish (non-persistent).
+    pub fn reset(&mut self) {
+        self.refs.clear();
+    }
+
+    pub fn held(&self, ino: Ino) -> bool {
+        let c = self.counts(ino);
+        c.host > 0 || c.isp > 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn both_sides_free_initially() {
+        let t = InodeLockTable::new();
+        assert!(t.may_access(1, LockSide::Host));
+        assert!(t.may_access(1, LockSide::Isp));
+    }
+
+    #[test]
+    fn isp_bind_excludes_host() {
+        let mut t = InodeLockTable::new();
+        assert!(t.acquire(1, LockSide::Isp));
+        assert!(!t.may_access(1, LockSide::Host));
+        assert!(t.may_access(1, LockSide::Isp)); // same side re-enters
+        t.release(1, LockSide::Isp);
+        assert!(t.may_access(1, LockSide::Host));
+    }
+
+    #[test]
+    fn nested_opens_require_matching_closes() {
+        let mut t = InodeLockTable::new();
+        assert!(t.acquire(1, LockSide::Host));
+        assert!(t.acquire(1, LockSide::Host));
+        t.release(1, LockSide::Host);
+        assert!(!t.may_access(1, LockSide::Isp), "still one host ref");
+        t.release(1, LockSide::Host);
+        assert!(t.may_access(1, LockSide::Isp));
+    }
+
+    #[test]
+    fn cross_acquire_fails_without_sideeffect() {
+        let mut t = InodeLockTable::new();
+        t.acquire(1, LockSide::Host);
+        let packets_before = t.sync_packets;
+        assert!(!t.acquire(1, LockSide::Isp));
+        assert_eq!(t.sync_packets, packets_before, "failed acquire sends nothing");
+    }
+
+    #[test]
+    fn isp_acquire_invalidates_host_vfs_cache() {
+        let mut t = InodeLockTable::new();
+        t.acquire(7, LockSide::Isp);
+        assert_eq!(t.vfs_invalidations, 1);
+        t.acquire(8, LockSide::Host);
+        assert_eq!(t.vfs_invalidations, 1, "host acquire does not invalidate");
+    }
+
+    #[test]
+    fn sync_packets_counted_per_update() {
+        let mut t = InodeLockTable::new();
+        t.acquire(1, LockSide::Host);
+        t.release(1, LockSide::Host);
+        assert_eq!(t.sync_packets, 2);
+    }
+
+    #[test]
+    fn power_failure_resets_locks() {
+        let mut t = InodeLockTable::new();
+        t.acquire(1, LockSide::Isp);
+        t.acquire(2, LockSide::Host);
+        t.reset();
+        assert!(!t.held(1));
+        assert!(!t.held(2));
+        assert!(t.may_access(1, LockSide::Host));
+    }
+
+    #[test]
+    fn independent_inodes_do_not_interfere() {
+        let mut t = InodeLockTable::new();
+        t.acquire(1, LockSide::Isp);
+        assert!(t.may_access(2, LockSide::Host));
+        assert!(t.acquire(2, LockSide::Host));
+    }
+
+    #[test]
+    fn release_without_acquire_is_safe() {
+        let mut t = InodeLockTable::new();
+        t.release(99, LockSide::Host); // no panic
+        assert!(!t.held(99));
+    }
+}

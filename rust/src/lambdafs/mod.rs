@@ -1,0 +1,505 @@
+//! λFS — the Lambda filesystem (DESIGN.md S4, paper "Backend Media
+//! Management", Figure 4b).
+//!
+//! An EXT4-shaped inode/directory tree laid out over the two NVMe
+//! namespaces: the *private* namespace holds ISP internals (`/images`,
+//! `/containers`) invisible to the host; the *sharable* namespace holds
+//! the in/out data both sides process (`/data`).  File payloads live in
+//! flash pages of an [`crate::ssd::SsdDevice`]; every operation charges
+//! simulated time through the device's timing model.
+//!
+//! Concurrency control is the paper's inode-lock protocol: a reference
+//! counter per inode, synchronized between host VFS and λFS with special
+//! Ether-oN packets (counted, so Figure 11's accounting sees them).
+
+pub mod lock;
+pub mod pathwalk;
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::nvme::namespace::{NamespaceId, PRIVATE_NS, SHARABLE_NS};
+use crate::ssd::SsdDevice;
+use crate::util::SimTime;
+
+pub use lock::{InodeLockTable, LockSide};
+pub use pathwalk::PathWalkCache;
+
+pub type Ino = u64;
+pub const ROOT_INO: Ino = 1;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InodeKind {
+    File,
+    Dir,
+}
+
+#[derive(Clone, Debug)]
+pub struct Inode {
+    pub ino: Ino,
+    pub kind: InodeKind,
+    pub size: u64,
+    pub ns: NamespaceId,
+    /// Flash pages backing the file body, in order.
+    pub pages: Vec<u64>,
+}
+
+/// Result of an operation, carrying the simulated completion time.
+#[derive(Debug)]
+pub struct FsResult<T> {
+    pub value: T,
+    pub done: SimTime,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum FsError {
+    NotFound,
+    NotADirectory,
+    IsADirectory,
+    AlreadyExists,
+    Locked,
+    CrossNamespace,
+}
+
+/// Per-namespace page allocator regions (pages are global device pages).
+struct NsAlloc {
+    next: u64,
+    end: u64,
+}
+
+/// The λ filesystem.
+pub struct LambdaFs {
+    inodes: HashMap<Ino, Inode>,
+    dirents: HashMap<Ino, BTreeMap<String, Ino>>,
+    next_ino: Ino,
+    alloc: HashMap<NamespaceId, NsAlloc>,
+    page_bytes: u64,
+    pub walk_cache: PathWalkCache,
+    pub locks: InodeLockTable,
+    /// Stats the models layer consumes.
+    pub path_walk_components: u64,
+    pub ops: u64,
+}
+
+impl LambdaFs {
+    /// Create over a device: `private_pages` device pages for the private
+    /// namespace starting at page 0, the rest (up to `total_pages`) sharable.
+    pub fn new(page_bytes: u64, private_pages: u64, total_pages: u64) -> Self {
+        let mut fs = LambdaFs {
+            inodes: HashMap::new(),
+            dirents: HashMap::new(),
+            next_ino: ROOT_INO,
+            alloc: HashMap::new(),
+            page_bytes,
+            walk_cache: PathWalkCache::new(512),
+            locks: InodeLockTable::new(),
+            path_walk_components: 0,
+            ops: 0,
+        };
+        fs.alloc.insert(
+            PRIVATE_NS,
+            NsAlloc {
+                next: 0,
+                end: private_pages,
+            },
+        );
+        fs.alloc.insert(
+            SHARABLE_NS,
+            NsAlloc {
+                next: private_pages,
+                end: total_pages,
+            },
+        );
+        let root = fs.mk_inode(InodeKind::Dir, PRIVATE_NS);
+        debug_assert_eq!(root, ROOT_INO);
+        // canonical layout
+        fs.mkdir_p("/images", PRIVATE_NS).unwrap();
+        fs.mkdir_p("/images/blobs", PRIVATE_NS).unwrap();
+        fs.mkdir_p("/images/manifest", PRIVATE_NS).unwrap();
+        fs.mkdir_p("/containers", PRIVATE_NS).unwrap();
+        fs.mkdir_p("/data", SHARABLE_NS).unwrap();
+        fs
+    }
+
+    /// Standard sizing from an SsdDevice: 30% private.
+    pub fn over_device(dev: &SsdDevice) -> Self {
+        let total = dev.cfg.capacity_bytes() / dev.cfg.page_bytes as u64;
+        LambdaFs::new(dev.cfg.page_bytes as u64, total * 3 / 10, total)
+    }
+
+    fn mk_inode(&mut self, kind: InodeKind, ns: NamespaceId) -> Ino {
+        let ino = self.next_ino;
+        self.next_ino += 1;
+        self.inodes.insert(
+            ino,
+            Inode {
+                ino,
+                kind,
+                size: 0,
+                ns,
+                pages: Vec::new(),
+            },
+        );
+        if kind == InodeKind::Dir {
+            self.dirents.insert(ino, BTreeMap::new());
+        }
+        ino
+    }
+
+    fn alloc_pages(&mut self, ns: NamespaceId, n: u64) -> Vec<u64> {
+        let a = self.alloc.get_mut(&ns).expect("namespace");
+        assert!(a.next + n <= a.end, "λFS namespace {ns} out of space");
+        let start = a.next;
+        a.next += n;
+        (start..start + n).collect()
+    }
+
+    /// Path walk: resolve `/a/b/c` to an inode, counting component lookups
+    /// and consulting the I/O-node cache (paper: "path walking" + "I/O
+    /// node caching").
+    pub fn walk(&mut self, path: &str) -> Result<Ino, FsError> {
+        self.ops += 1;
+        if path == "/" {
+            return Ok(ROOT_INO);
+        }
+        if let Some(ino) = self.walk_cache.lookup(path) {
+            // cached: one lookup instead of one per component
+            self.path_walk_components += 1;
+            return Ok(ino);
+        }
+        let mut cur = ROOT_INO;
+        for comp in path.trim_matches('/').split('/') {
+            self.path_walk_components += 1;
+            let dir = self.dirents.get(&cur).ok_or(FsError::NotADirectory)?;
+            cur = *dir.get(comp).ok_or(FsError::NotFound)?;
+        }
+        self.walk_cache.insert(path, cur);
+        Ok(cur)
+    }
+
+    fn split_parent(path: &str) -> Result<(&str, &str), FsError> {
+        let trimmed = path.trim_end_matches('/');
+        let idx = trimmed.rfind('/').ok_or(FsError::NotFound)?;
+        let (parent, name) = trimmed.split_at(idx);
+        let parent = if parent.is_empty() { "/" } else { parent };
+        Ok((parent, &name[1..]))
+    }
+
+    /// mkdir -p. Every created directory inherits `ns`.
+    pub fn mkdir_p(&mut self, path: &str, ns: NamespaceId) -> Result<Ino, FsError> {
+        let mut cur = ROOT_INO;
+        for comp in path.trim_matches('/').split('/') {
+            self.path_walk_components += 1;
+            let existing = self.dirents.get(&cur).and_then(|d| d.get(comp)).copied();
+            cur = match existing {
+                Some(ino) => {
+                    if self.inodes[&ino].kind != InodeKind::Dir {
+                        return Err(FsError::NotADirectory);
+                    }
+                    ino
+                }
+                None => {
+                    let ino = self.mk_inode(InodeKind::Dir, ns);
+                    self.dirents.get_mut(&cur).unwrap().insert(comp.into(), ino);
+                    ino
+                }
+            };
+        }
+        Ok(cur)
+    }
+
+    /// Create an empty file; errors if it exists.
+    pub fn create(&mut self, path: &str) -> Result<Ino, FsError> {
+        let (parent, name) = Self::split_parent(path)?;
+        let pino = self.walk(parent)?;
+        let pns = self.inodes[&pino].ns;
+        if self.inodes[&pino].kind != InodeKind::Dir {
+            return Err(FsError::NotADirectory);
+        }
+        if self.dirents[&pino].contains_key(name) {
+            return Err(FsError::AlreadyExists);
+        }
+        let ino = self.mk_inode(InodeKind::File, pns);
+        self.dirents.get_mut(&pino).unwrap().insert(name.into(), ino);
+        Ok(ino)
+    }
+
+    /// Write a whole file (create if absent), storing bytes in device pages
+    /// and charging program time.  `side` must hold access (lock protocol).
+    pub fn write_file(
+        &mut self,
+        dev: &mut SsdDevice,
+        at: SimTime,
+        path: &str,
+        data: &[u8],
+        side: LockSide,
+    ) -> Result<FsResult<Ino>, FsError> {
+        let ino = match self.walk(path) {
+            Ok(i) => i,
+            Err(FsError::NotFound) => self.create(path)?,
+            Err(e) => return Err(e),
+        };
+        if self.inodes[&ino].kind == InodeKind::Dir {
+            return Err(FsError::IsADirectory);
+        }
+        if !self.locks.may_access(ino, side) {
+            return Err(FsError::Locked);
+        }
+        let npages = (data.len() as u64).div_ceil(self.page_bytes).max(1);
+        let (ns, have) = {
+            let inode = &self.inodes[&ino];
+            (inode.ns, inode.pages.len() as u64)
+        };
+        if have < npages {
+            let extra = self.alloc_pages(ns, npages - have);
+            self.inodes.get_mut(&ino).unwrap().pages.extend(extra);
+        }
+        let inode = self.inodes.get_mut(&ino).unwrap();
+        inode.size = data.len() as u64;
+        let pages = inode.pages.clone();
+        let mut done = at;
+        for (i, chunk) in data.chunks(self.page_bytes as usize).enumerate() {
+            dev.store_data(pages[i], chunk);
+            done = done.max(dev.write_pages(at, pages[i], 1));
+        }
+        Ok(FsResult { value: ino, done })
+    }
+
+    /// Read a whole file, charging read time.
+    pub fn read_file(
+        &mut self,
+        dev: &mut SsdDevice,
+        at: SimTime,
+        path: &str,
+        side: LockSide,
+    ) -> Result<FsResult<Vec<u8>>, FsError> {
+        let ino = self.walk(path)?;
+        let inode = self.inodes.get(&ino).ok_or(FsError::NotFound)?;
+        if inode.kind == InodeKind::Dir {
+            return Err(FsError::IsADirectory);
+        }
+        if !self.locks.may_access(ino, side) {
+            return Err(FsError::Locked);
+        }
+        let size = inode.size as usize;
+        let pages = inode.pages.clone();
+        let mut out = Vec::with_capacity(size);
+        let mut done = at;
+        for p in &pages {
+            done = done.max(dev.read_pages(at, *p, 1));
+            out.extend(dev.load_data(*p, self.page_bytes as usize));
+        }
+        out.truncate(size);
+        Ok(FsResult { value: out, done })
+    }
+
+    /// Append to a file (used by mini-docker for container logs).
+    pub fn append_file(
+        &mut self,
+        dev: &mut SsdDevice,
+        at: SimTime,
+        path: &str,
+        data: &[u8],
+        side: LockSide,
+    ) -> Result<FsResult<Ino>, FsError> {
+        let existing = match self.walk(path) {
+            Ok(_) => self.read_file(dev, at, path, side)?.value,
+            Err(FsError::NotFound) => Vec::new(),
+            Err(e) => return Err(e),
+        };
+        let mut all = existing;
+        all.extend_from_slice(data);
+        self.write_file(dev, at, path, &all, side)
+    }
+
+    pub fn unlink(&mut self, path: &str) -> Result<(), FsError> {
+        let (parent, name) = Self::split_parent(path)?;
+        let pino = self.walk(parent)?;
+        let ino = *self
+            .dirents
+            .get(&pino)
+            .and_then(|d| d.get(name))
+            .ok_or(FsError::NotFound)?;
+        if self.inodes[&ino].kind == InodeKind::Dir && !self.dirents[&ino].is_empty() {
+            return Err(FsError::IsADirectory);
+        }
+        self.dirents.get_mut(&pino).unwrap().remove(name);
+        self.inodes.remove(&ino);
+        self.dirents.remove(&ino);
+        self.walk_cache.invalidate(path);
+        Ok(())
+    }
+
+    pub fn list(&mut self, path: &str) -> Result<Vec<String>, FsError> {
+        let ino = self.walk(path)?;
+        let d = self.dirents.get(&ino).ok_or(FsError::NotADirectory)?;
+        Ok(d.keys().cloned().collect())
+    }
+
+    pub fn stat(&mut self, path: &str) -> Result<Inode, FsError> {
+        let ino = self.walk(path)?;
+        Ok(self.inodes[&ino].clone())
+    }
+
+    /// Is this inode's content visible to the host PCIe function?
+    pub fn host_visible(&self, ino: Ino) -> bool {
+        self.inodes
+            .get(&ino)
+            .map_or(false, |i| i.ns == SHARABLE_NS)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SsdConfig;
+
+    fn setup() -> (LambdaFs, SsdDevice) {
+        let cfg = SsdConfig {
+            blocks_per_package: 64,
+            ..Default::default()
+        };
+        let dev = SsdDevice::new(cfg);
+        let fs = LambdaFs::over_device(&dev);
+        (fs, dev)
+    }
+
+    #[test]
+    fn canonical_layout_exists() {
+        let (mut fs, _) = setup();
+        for p in ["/images", "/images/blobs", "/containers", "/data"] {
+            assert!(fs.walk(p).is_ok(), "{p}");
+        }
+    }
+
+    #[test]
+    fn private_dirs_invisible_to_host() {
+        let (mut fs, _) = setup();
+        let images = fs.walk("/images").unwrap();
+        let data = fs.walk("/data").unwrap();
+        assert!(!fs.host_visible(images));
+        assert!(fs.host_visible(data));
+    }
+
+    #[test]
+    fn write_read_round_trip() {
+        let (mut fs, mut dev) = setup();
+        let body: Vec<u8> = (0..10_000u32).map(|i| (i % 253) as u8).collect();
+        let w = fs
+            .write_file(&mut dev, SimTime::ZERO, "/data/input.bin", &body, LockSide::Host)
+            .unwrap();
+        assert!(w.done > SimTime::ZERO, "write must take simulated time");
+        let r = fs
+            .read_file(&mut dev, w.done, "/data/input.bin", LockSide::Host)
+            .unwrap();
+        assert_eq!(r.value, body);
+    }
+
+    #[test]
+    fn overwrite_shrinks_size() {
+        let (mut fs, mut dev) = setup();
+        fs.write_file(&mut dev, SimTime::ZERO, "/data/f", &[1u8; 9000], LockSide::Host)
+            .unwrap();
+        fs.write_file(&mut dev, SimTime::ZERO, "/data/f", &[2u8; 10], LockSide::Host)
+            .unwrap();
+        let r = fs
+            .read_file(&mut dev, SimTime::ZERO, "/data/f", LockSide::Host)
+            .unwrap();
+        assert_eq!(r.value, vec![2u8; 10]);
+    }
+
+    #[test]
+    fn files_inherit_parent_namespace() {
+        let (mut fs, mut dev) = setup();
+        fs.write_file(&mut dev, SimTime::ZERO, "/images/blobs/x", b"blob", LockSide::Isp)
+            .unwrap();
+        let ino = fs.walk("/images/blobs/x").unwrap();
+        assert!(!fs.host_visible(ino));
+        fs.write_file(&mut dev, SimTime::ZERO, "/data/y", b"data", LockSide::Host)
+            .unwrap();
+        let ino = fs.walk("/data/y").unwrap();
+        assert!(fs.host_visible(ino));
+    }
+
+    #[test]
+    fn missing_paths_error() {
+        let (mut fs, mut dev) = setup();
+        assert_eq!(fs.walk("/nope"), Err(FsError::NotFound));
+        assert_eq!(
+            fs.read_file(&mut dev, SimTime::ZERO, "/data/ghost", LockSide::Host)
+                .unwrap_err(),
+            FsError::NotFound
+        );
+    }
+
+    #[test]
+    fn create_rejects_duplicates() {
+        let (mut fs, _) = setup();
+        fs.create("/data/once").unwrap();
+        assert_eq!(fs.create("/data/once"), Err(FsError::AlreadyExists));
+    }
+
+    #[test]
+    fn unlink_removes_and_invalidates_cache() {
+        let (mut fs, mut dev) = setup();
+        fs.write_file(&mut dev, SimTime::ZERO, "/data/tmp", b"x", LockSide::Host)
+            .unwrap();
+        assert!(fs.walk("/data/tmp").is_ok());
+        fs.unlink("/data/tmp").unwrap();
+        assert_eq!(fs.walk("/data/tmp"), Err(FsError::NotFound));
+    }
+
+    #[test]
+    fn append_accumulates() {
+        let (mut fs, mut dev) = setup();
+        fs.append_file(&mut dev, SimTime::ZERO, "/containers/log", b"line1\n", LockSide::Isp)
+            .unwrap();
+        fs.append_file(&mut dev, SimTime::ZERO, "/containers/log", b"line2\n", LockSide::Isp)
+            .unwrap();
+        let r = fs
+            .read_file(&mut dev, SimTime::ZERO, "/containers/log", LockSide::Isp)
+            .unwrap();
+        assert_eq!(r.value, b"line1\nline2\n".to_vec());
+    }
+
+    #[test]
+    fn walk_uses_cache_second_time() {
+        let (mut fs, mut dev) = setup();
+        fs.write_file(&mut dev, SimTime::ZERO, "/data/a", b"1", LockSide::Host)
+            .unwrap();
+        fs.walk_cache.reset_stats();
+        let before = fs.path_walk_components;
+        fs.walk("/data/a").unwrap();
+        fs.walk("/data/a").unwrap();
+        let per_walk = (fs.path_walk_components - before) / 2;
+        assert!(per_walk <= 2, "cached walks must be short, got {per_walk}");
+        assert!(fs.walk_cache.hits() >= 1);
+    }
+
+    #[test]
+    fn list_shows_entries_sorted() {
+        let (mut fs, _) = setup();
+        fs.create("/data/b").unwrap();
+        fs.create("/data/a").unwrap();
+        assert_eq!(fs.list("/data").unwrap(), vec!["a".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn lock_blocks_cross_side_access() {
+        let (mut fs, mut dev) = setup();
+        fs.write_file(&mut dev, SimTime::ZERO, "/data/shared", b"v1", LockSide::Host)
+            .unwrap();
+        let ino = fs.walk("/data/shared").unwrap();
+        // ISP binds the file for processing
+        assert!(fs.locks.acquire(ino, LockSide::Isp));
+        let denied = fs.write_file(&mut dev, SimTime::ZERO, "/data/shared", b"v2", LockSide::Host);
+        assert_eq!(denied.unwrap_err(), FsError::Locked);
+        // ISP itself can still write
+        assert!(fs
+            .write_file(&mut dev, SimTime::ZERO, "/data/shared", b"v2", LockSide::Isp)
+            .is_ok());
+        fs.locks.release(ino, LockSide::Isp);
+        assert!(fs
+            .write_file(&mut dev, SimTime::ZERO, "/data/shared", b"v3", LockSide::Host)
+            .is_ok());
+    }
+}

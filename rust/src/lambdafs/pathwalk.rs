@@ -1,0 +1,134 @@
+//! I/O-node cache: path -> inode LRU, the firmware I/O handler's
+//! "caches these mappings for faster access" feature.
+
+use std::collections::HashMap;
+
+use super::Ino;
+
+/// Bounded LRU of resolved paths.
+pub struct PathWalkCache {
+    map: HashMap<String, (Ino, u64)>,
+    cap: usize,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+}
+
+impl PathWalkCache {
+    pub fn new(cap: usize) -> Self {
+        PathWalkCache {
+            map: HashMap::with_capacity(cap),
+            cap: cap.max(1),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn lookup(&mut self, path: &str) -> Option<Ino> {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.map.get_mut(path) {
+            Some((ino, stamp)) => {
+                *stamp = tick;
+                self.hits += 1;
+                Some(*ino)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn insert(&mut self, path: &str, ino: Ino) {
+        self.tick += 1;
+        if self.map.len() >= self.cap && !self.map.contains_key(path) {
+            // evict LRU
+            if let Some(victim) = self
+                .map
+                .iter()
+                .min_by_key(|(_, (_, stamp))| *stamp)
+                .map(|(k, _)| k.clone())
+            {
+                self.map.remove(&victim);
+            }
+        }
+        self.map.insert(path.to_string(), (ino, self.tick));
+    }
+
+    pub fn invalidate(&mut self, path: &str) {
+        self.map.remove(path);
+    }
+
+    pub fn invalidate_all(&mut self) {
+        self.map.clear();
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_after_insert() {
+        let mut c = PathWalkCache::new(8);
+        assert_eq!(c.lookup("/a/b"), None);
+        c.insert("/a/b", 42);
+        assert_eq!(c.lookup("/a/b"), Some(42));
+        assert_eq!(c.hits(), 1);
+        assert_eq!(c.misses(), 1);
+    }
+
+    #[test]
+    fn capacity_bounded_with_lru_eviction() {
+        let mut c = PathWalkCache::new(3);
+        c.insert("/a", 1);
+        c.insert("/b", 2);
+        c.insert("/c", 3);
+        c.lookup("/a"); // refresh /a
+        c.insert("/d", 4); // evicts /b (LRU)
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.lookup("/b"), None);
+        assert_eq!(c.lookup("/a"), Some(1));
+        assert_eq!(c.lookup("/d"), Some(4));
+    }
+
+    #[test]
+    fn invalidate_removes() {
+        let mut c = PathWalkCache::new(4);
+        c.insert("/x", 9);
+        c.invalidate("/x");
+        assert_eq!(c.lookup("/x"), None);
+    }
+
+    #[test]
+    fn reinsert_updates_value() {
+        let mut c = PathWalkCache::new(4);
+        c.insert("/x", 1);
+        c.insert("/x", 2);
+        assert_eq!(c.lookup("/x"), Some(2));
+        assert_eq!(c.len(), 1);
+    }
+}

@@ -1,0 +1,34 @@
+//! DockerSSD: containerized in-storage processing and computing-enabled SSD
+//! disaggregation — a full-system reproduction of the CS.AR 2025 paper.
+//!
+//! The crate is organized as the paper's stack (DESIGN.md §2):
+//!
+//! * Substrates: [`nvme`] (queues/commands/namespaces), [`etheron`]
+//!   (Ethernet-over-NVMe), [`ssd`] (flash timing + FTL + ICL), [`lambdafs`]
+//!   (the λ filesystem), [`firmware`] (Virtual-FW handlers + syscall
+//!   emulation), [`docker`] (mini-docker container environment).
+//! * Evaluation substrates: [`models`] (the six data-processing models),
+//!   [`workloads`] (Table 2 generators), [`llm`] (the analytic
+//!   distributed-inference simulator), [`pool`] (disaggregated storage pool).
+//! * Serving: [`runtime`] (PJRT artifact execution), [`coordinator`]
+//!   (router + batcher + KV manager driving real token generation).
+
+pub mod benchkit;
+pub mod config;
+pub mod coordinator;
+pub mod docker;
+pub mod json;
+pub mod etheron;
+pub mod examples_support;
+pub mod firmware;
+pub mod lambdafs;
+pub mod llm;
+pub mod metrics;
+pub mod models;
+pub mod nvme;
+pub mod pool;
+pub mod runtime;
+pub mod sim;
+pub mod ssd;
+pub mod util;
+pub mod workloads;

@@ -1,0 +1,133 @@
+//! Device profiles for the disaggregation scenarios (paper: hosts with
+//! 3.8GHz CPU + 64GB DRAM vs DockerSSDs with 2.2GHz frontend + 400GB
+//! flash addressable "as local memory").
+//!
+//! The decisive differences:
+//!   * compute: DockerSSD ~0.58x host (frequency + IPC),
+//!   * KV path: host-with-cache reads KV through Linux swap (page faults,
+//!     copies, cache pollution) at a small fraction of raw PCIe speed;
+//!     DockerSSD reads flash directly at full internal channel bandwidth.
+
+/// Hardware profile of one inference device (host or DockerSSD).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    /// Effective FLOP/s for memory-bound per-token decode ops.
+    pub flops_decode: f64,
+    /// Peak FLOP/s for large batched GEMMs (NoCache recompute).
+    pub flops_gemm: f64,
+    /// Main-memory bandwidth for weight streaming (B/s).
+    pub mem_bw: f64,
+    /// Bandwidth of the KV-cache path (B/s) — DRAM, swap, or flash.
+    pub kv_bw: f64,
+    /// Memory capacity available for weights + KV (bytes).
+    pub mem_capacity: f64,
+    /// Inter-device link bandwidth (B/s).
+    pub link_bw: f64,
+    /// Per-message link latency (s).
+    pub link_latency_s: f64,
+    /// Bytes per weight parameter (fp16).
+    pub weight_bytes_per_param: f64,
+    /// Bytes per KV element (fp16).
+    pub kv_bytes_per_elem: f64,
+}
+
+const GB: f64 = 1e9;
+
+impl DeviceProfile {
+    /// Host without KV cache: 64GB DRAM holds weight shards + activations.
+    ///
+    /// `flops_decode` is the *effective* per-token decode throughput with
+    /// weight streaming overlapped (Calculon-style); fitted so the
+    /// Fig 13a crossover for lamda-137B lands near seq 256.
+    pub fn host_nocache() -> Self {
+        DeviceProfile {
+            name: "host-nocache",
+            flops_decode: 127e9,
+            flops_gemm: 127e9,
+            mem_bw: 25.6 * GB,
+            kv_bw: 25.6 * GB, // unused (no KV)
+            mem_capacity: 64.0 * GB,
+            link_bw: 3.2 * GB,
+            link_latency_s: 5e-6,
+            weight_bytes_per_param: 2.0,
+            kv_bytes_per_elem: 2.0,
+        }
+    }
+
+    /// Host with KV cache: DRAM + 400GB SSD via Linux swap.  The KV path
+    /// suffers page faults, copies, and cache pollution — a fraction of
+    /// raw device speed.
+    pub fn host_cache() -> Self {
+        DeviceProfile {
+            name: "host-cache",
+            mem_capacity: (64.0 + 400.0) * GB,
+            kv_bw: 0.40 * GB, // swap-effective bandwidth
+            ..Self::host_nocache()
+        }
+    }
+
+    /// DockerSSD: slower cores (2.2 vs 3.8 GHz — the paper's "roughly 60%
+    /// of host performance"), flash addressed as local memory at full
+    /// internal channel bandwidth.
+    pub fn dockerssd() -> Self {
+        let host = Self::host_nocache();
+        let slow = 2.2 / 3.8; // frequency ratio
+        DeviceProfile {
+            name: "dockerssd",
+            flops_decode: host.flops_decode * slow,
+            flops_gemm: host.flops_gemm * slow,
+            mem_bw: 12.8 * GB, // internal DRAM
+            kv_bw: 4.0 * GB,   // internal channel aggregate, direct
+            mem_capacity: 400.0 * GB,
+            link_bw: 3.2 * GB,
+            link_latency_s: 5e-6,
+            weight_bytes_per_param: 2.0,
+            kv_bytes_per_elem: 2.0,
+        }
+    }
+
+    /// DockerSSD without using flash for KV (D-NoCache): same silicon,
+    /// KV disabled; only the 2GB internal DRAM is usable, but NoCache
+    /// needs no KV anyway.
+    pub fn dockerssd_nocache() -> Self {
+        DeviceProfile {
+            name: "dockerssd-nocache",
+            ..Self::dockerssd()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dockerssd_compute_is_roughly_60pct_of_host() {
+        let h = DeviceProfile::host_nocache();
+        let d = DeviceProfile::dockerssd();
+        let ratio = d.flops_decode / h.flops_decode;
+        assert!((0.5..0.65).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn swap_kv_path_is_order_of_magnitude_slower_than_flash_direct() {
+        let h = DeviceProfile::host_cache();
+        let d = DeviceProfile::dockerssd();
+        let ratio = d.kv_bw / h.kv_bw;
+        // this ratio bounds the long-sequence speedup (paper: ~9.5x)
+        assert!((8.0..11.0).contains(&ratio), "kv bw ratio {ratio}");
+    }
+
+    #[test]
+    fn cache_profiles_have_capacity_for_kv() {
+        assert!(DeviceProfile::host_cache().mem_capacity > DeviceProfile::host_nocache().mem_capacity);
+        assert!(DeviceProfile::dockerssd().mem_capacity >= 400.0 * 1e9);
+    }
+
+    #[test]
+    fn gemm_path_at_least_as_fast_as_decode_path() {
+        let h = DeviceProfile::host_nocache();
+        assert!(h.flops_gemm >= h.flops_decode);
+    }
+}

@@ -1,0 +1,223 @@
+//! The four resource-disaggregation scenarios of Figure 12 and the
+//! sensitivity sweeps of Figure 13.
+
+use super::device::DeviceProfile;
+use super::models::{all_llms, LlmConfig};
+use super::parallelism::{find_optimal, OptimalChoice};
+use super::InferenceTime;
+
+/// The disaggregation models (paper: H-NoCache, H-Cache, D-NoCache,
+/// D-Cache).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DisaggModel {
+    HostNoCache,
+    HostCache,
+    DockerNoCache,
+    DockerCache,
+}
+
+impl DisaggModel {
+    pub const ALL: [DisaggModel; 4] = [
+        DisaggModel::HostNoCache,
+        DisaggModel::HostCache,
+        DisaggModel::DockerNoCache,
+        DisaggModel::DockerCache,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DisaggModel::HostNoCache => "H-NoCache",
+            DisaggModel::HostCache => "H-Cache",
+            DisaggModel::DockerNoCache => "D-NoCache",
+            DisaggModel::DockerCache => "D-Cache",
+        }
+    }
+
+    pub fn device(&self) -> DeviceProfile {
+        match self {
+            DisaggModel::HostNoCache => DeviceProfile::host_nocache(),
+            DisaggModel::HostCache => DeviceProfile::host_cache(),
+            DisaggModel::DockerNoCache => DeviceProfile::dockerssd_nocache(),
+            DisaggModel::DockerCache => DeviceProfile::dockerssd(),
+        }
+    }
+
+    pub fn kv_cache(&self) -> bool {
+        matches!(self, DisaggModel::HostCache | DisaggModel::DockerCache)
+    }
+}
+
+/// One evaluated scenario (Fig 12 cell).
+#[derive(Clone, Debug)]
+pub struct ScenarioResult {
+    pub model: &'static str,
+    pub disagg: DisaggModel,
+    pub nodes: u32,
+    pub choice: OptimalChoice,
+}
+
+impl ScenarioResult {
+    pub fn time(&self) -> &InferenceTime {
+        &self.choice.time
+    }
+}
+
+/// Node-pool size per model: the paper scales 16..128 DockerSSDs with
+/// model size ("evaluated using storage pools composed of 16 to 128
+/// DockerSSDs").  We double nodes every two models.
+pub fn nodes_for(model_idx: usize) -> u32 {
+    16 << (model_idx / 2).min(3)
+}
+
+/// Evaluate one (model, disagg) scenario at the paper's default 32K
+/// sequence, batch 1 per data-parallel replica.
+pub fn evaluate_scenario(
+    llm: &LlmConfig,
+    disagg: DisaggModel,
+    nodes: u32,
+    seq: u64,
+    batch: u64,
+) -> Option<ScenarioResult> {
+    let dev = disagg.device();
+    let choice = find_optimal(llm, &dev, nodes, seq, batch, disagg.kv_cache())?;
+    Some(ScenarioResult {
+        model: llm.name,
+        disagg,
+        nodes,
+        choice,
+    })
+}
+
+/// Figure 12 sweep: all 8 models x 4 disaggregation scenarios at 32K/1.
+pub fn fig12_sweep(seq: u64, batch: u64) -> Vec<ScenarioResult> {
+    let mut out = Vec::new();
+    for (i, llm) in all_llms().iter().enumerate() {
+        let nodes = nodes_for(i);
+        for d in DisaggModel::ALL {
+            if let Some(r) = evaluate_scenario(llm, d, nodes, seq, batch) {
+                out.push(r);
+            }
+        }
+    }
+    out
+}
+
+/// Geometric-mean ratio of total inference time between two disaggregation
+/// models across all 8 LLMs (the paper's aggregate claims).
+pub fn aggregate_ratio(a: DisaggModel, b: DisaggModel, seq: u64, batch: u64) -> f64 {
+    let mut log_sum = 0.0;
+    let mut n = 0;
+    for (i, llm) in all_llms().iter().enumerate() {
+        let nodes = nodes_for(i);
+        let (Some(ra), Some(rb)) = (
+            evaluate_scenario(llm, a, nodes, seq, batch),
+            evaluate_scenario(llm, b, nodes, seq, batch),
+        ) else {
+            continue;
+        };
+        log_sum += (ra.time().total() / rb.time().total()).ln();
+        n += 1;
+    }
+    assert!(n > 0, "no feasible scenario pair");
+    (log_sum / n as f64).exp()
+}
+
+/// Figure 13a/b: D-Cache speedup over H-Cache across sequence lengths for
+/// one model.  Returns (seq, speedup) points.
+pub fn seq_sweep(llm: &LlmConfig, nodes: u32, seqs: &[u64], batch: u64) -> Vec<(u64, f64)> {
+    seqs.iter()
+        .filter_map(|&s| {
+            let h = evaluate_scenario(llm, DisaggModel::HostCache, nodes, s, batch)?;
+            let d = evaluate_scenario(llm, DisaggModel::DockerCache, nodes, s, batch)?;
+            Some((s, h.time().total() / d.time().total()))
+        })
+        .collect()
+}
+
+/// Figure 13c/d: batch-size sweep at fixed sequence length.
+pub fn batch_sweep(llm: &LlmConfig, nodes: u32, seq: u64, batches: &[u64]) -> Vec<(u64, f64)> {
+    batches
+        .iter()
+        .filter_map(|&b| {
+            let h = evaluate_scenario(llm, DisaggModel::HostCache, nodes, seq, b)?;
+            let d = evaluate_scenario(llm, DisaggModel::DockerCache, nodes, seq, b)?;
+            Some((b, h.time().total() / d.time().total()))
+        })
+        .collect()
+}
+
+/// The crossover sequence length where D-Cache starts beating H-Cache.
+pub fn crossover_seq(llm: &LlmConfig, nodes: u32) -> Option<u64> {
+    let seqs: Vec<u64> = (4..=17).map(|p| 1u64 << p).collect();
+    for (s, speedup) in seq_sweep(llm, nodes, &seqs, 1) {
+        if speedup >= 1.0 {
+            return Some(s);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_models_have_names() {
+        let names: Vec<&str> = DisaggModel::ALL.iter().map(|d| d.name()).collect();
+        assert_eq!(names, vec!["H-NoCache", "H-Cache", "D-NoCache", "D-Cache"]);
+    }
+
+    #[test]
+    fn node_scaling_16_to_128() {
+        assert_eq!(nodes_for(0), 16);
+        assert_eq!(nodes_for(2), 32);
+        assert_eq!(nodes_for(4), 64);
+        assert_eq!(nodes_for(6), 128);
+        assert_eq!(nodes_for(7), 128);
+    }
+
+    #[test]
+    fn fig12_sweep_covers_feasible_scenarios() {
+        let rs = fig12_sweep(32_768, 1);
+        // 8 models x 4 scenarios, minus any infeasible combinations
+        assert!(rs.len() >= 24, "only {} scenarios feasible", rs.len());
+    }
+
+    #[test]
+    fn cache_dominates_nocache() {
+        let r = aggregate_ratio(DisaggModel::HostNoCache, DisaggModel::HostCache, 32_768, 1);
+        assert!(r > 10.0, "H-NoCache/H-Cache = {r}");
+        let r = aggregate_ratio(DisaggModel::DockerNoCache, DisaggModel::DockerCache, 32_768, 1);
+        assert!(r > 10.0, "D-NoCache/D-Cache = {r}");
+    }
+
+    #[test]
+    fn dcache_beats_hcache_at_32k() {
+        let r = aggregate_ratio(DisaggModel::HostCache, DisaggModel::DockerCache, 32_768, 1);
+        assert!(r > 1.0, "H-Cache/D-Cache = {r}");
+    }
+
+    #[test]
+    fn dnocache_slower_than_hnocache() {
+        // paper: 1.7x degradation from slower silicon
+        let r = aggregate_ratio(DisaggModel::DockerNoCache, DisaggModel::HostNoCache, 32_768, 1);
+        assert!((1.2..2.4).contains(&r), "D-NoCache/H-NoCache = {r}");
+    }
+
+    #[test]
+    fn speedup_grows_with_sequence() {
+        let llm = all_llms().remove(0);
+        let pts = seq_sweep(&llm, 16, &[256, 1024, 8192, 65_536], 1);
+        assert!(pts.len() >= 3);
+        for pair in pts.windows(2) {
+            assert!(pair[1].1 >= pair[0].1 * 0.95, "{pts:?}");
+        }
+    }
+
+    #[test]
+    fn crossover_exists_for_smallest_model() {
+        let llm = all_llms().remove(0);
+        let x = crossover_seq(&llm, 16);
+        assert!(x.is_some(), "no crossover found");
+    }
+}

@@ -1,0 +1,241 @@
+//! Analytic distributed-LLM-inference simulator (DESIGN.md S10).
+//!
+//! Rebuilds the paper's Calculon-derived methodology: an analytical model
+//! of per-token compute and memory time for eight LLMs, extended (as the
+//! authors did) with a KV-cache model, evaluated under data/tensor/
+//! pipeline parallelism across 16-128 devices, picking the
+//! fastest configuration per scenario.  Drives Figures 12 and 13.
+
+pub mod device;
+pub mod disagg;
+pub mod models;
+pub mod parallelism;
+
+pub use device::DeviceProfile;
+pub use disagg::{DisaggModel, ScenarioResult};
+pub use models::{all_llms, LlmConfig};
+pub use parallelism::{Parallelism, ParallelKind};
+
+/// Breakdown of per-sequence inference time (seconds): Compute (matrix/
+/// vector math) vs Memory (reading inputs + KV + writing outputs) —
+/// Figure 12b's two components.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct InferenceTime {
+    pub compute: f64,
+    pub memory: f64,
+    /// Inter-device communication (folded into Compute in Fig 12b's
+    /// two-way split, but tracked separately here).
+    pub comm: f64,
+}
+
+impl InferenceTime {
+    pub fn total(&self) -> f64 {
+        self.compute + self.memory + self.comm
+    }
+}
+
+/// Per-token inference cost for one (model, device, parallelism, cache)
+/// scenario.  `seq` is the sequence length the KV cache has reached; the
+/// per-token cost is evaluated at the *average* prefix length seq/2 and
+/// multiplied by `seq` by callers integrating over a generation.
+///
+/// Modeling choices (DESIGN.md §4):
+/// * Dense per-token FLOPs = 2 x 12 L d^2 (analytic dense params), which
+///   keeps inter-model ratios consistent with layer geometry.  Weight
+///   reads overlap compute and are folded into the device's effective
+///   decode throughput (`flops_decode`), as in Calculon-style models.
+/// * Without a KV cache, attention at step i needs K/V for all i prefix
+///   positions, and recovering them requires re-running the *full
+///   forward* over the prefix (K/V at layer l depend on hidden states at
+///   layer l).  That recompute is a big batched computation: it runs at
+///   `flops_gemm` and pipelines across pp stages in sequence chunks of
+///   `RECOMPUTE_CHUNK` positions, paying the classic (pp-1)/chunks
+///   pipeline-fill bubble.
+/// * With a KV cache, the prefix K/V (2 x d x 2B per layer-position) is
+///   read through the device's KV path — DRAM for hosts without cache
+///   pressure, DRAM+swap for H-Cache, flash-as-local for D-Cache.  This
+///   is exactly where the disaggregation models differ.
+/// * Tensor parallelism: 2 all-reduces per layer; pipeline parallelism:
+///   per-boundary activation hop.  With a KV cache, decode is a serial
+///   per-token dependency chain, so PP divides only memory capacity, not
+///   latency.
+pub const RECOMPUTE_CHUNK: f64 = 64.0;
+
+pub fn time_per_token(
+    llm: &LlmConfig,
+    dev: &DeviceProfile,
+    par: Parallelism,
+    seq: u64,
+    batch: u64,
+    kv_cache: bool,
+) -> InferenceTime {
+    let d = llm.d_model as f64;
+    let l = llm.layers as f64;
+    let b_local = (batch as f64 / par.dp as f64).max(1.0);
+    let prefix = (seq as f64 / 2.0).max(1.0); // average over the generation
+
+    // --- compute ---------------------------------------------------------
+    let dense_flops = 2.0 * llm.dense_params() as f64 * b_local;
+    let mut t = InferenceTime::default();
+
+    if kv_cache {
+        // new token only; model split over tp (PP stages execute serially)
+        t.compute = dense_flops / (dev.flops_decode * par.tp as f64);
+        // attention score+mix over the prefix is folded into memory time
+    } else {
+        // full-forward recompute of the prefix, every step
+        let recompute = prefix * dense_flops;
+        let chunks = (prefix / RECOMPUTE_CHUNK).max(1.0);
+        let pp_eff = par.pp as f64 / (1.0 + (par.pp as f64 - 1.0) / chunks);
+        t.compute = dense_flops / (dev.flops_decode * par.tp as f64)
+            + recompute / (dev.flops_gemm * par.tp as f64 * pp_eff);
+    }
+
+    // --- memory ----------------------------------------------------------
+    if kv_cache {
+        // prefix K/V read through the KV path
+        let kv_bytes = l * prefix * 2.0 * d * dev.kv_bytes_per_elem * b_local;
+        t.memory = kv_bytes / (par.tp as f64 * dev.kv_bw);
+    } else {
+        // activations only (weights overlap compute)
+        let act_bytes = l * d * 8.0 * b_local;
+        t.memory = act_bytes / dev.mem_bw;
+    }
+
+    // --- communication -----------------------------------------------------
+    if par.tp > 1 {
+        // 2 all-reduces per layer; the reduced activations cover every
+        // position being processed this step: one token with a KV cache,
+        // the whole prefix without one.  This asymmetry is why Fig 12a
+        // flips from pipeline- to tensor-parallel once caching is on.
+        let positions = if kv_cache { 1.0 } else { prefix };
+        let bytes =
+            2.0 * l * positions * b_local * d * 2.0 * ((par.tp - 1) as f64 / par.tp as f64);
+        // all tp ranks push through a shared PCIe switch whose backplane
+        // does not scale with fan-out: effective bandwidth halves per
+        // doubling beyond 2 ranks (congestion factor tp/2)
+        let congestion = (par.tp as f64 * 0.75).max(1.0);
+        t.comm += bytes * congestion / dev.link_bw + 2.0 * l * dev.link_latency_s;
+    }
+    if par.pp > 1 {
+        let bytes = (par.pp - 1) as f64 * b_local * d * 2.0;
+        t.comm += bytes / dev.link_bw + (par.pp - 1) as f64 * dev.link_latency_s;
+    }
+    t
+}
+
+/// Memory capacity required per device (bytes) — the feasibility
+/// constraint of the parallelism search.
+pub fn bytes_per_device(
+    llm: &LlmConfig,
+    dev: &DeviceProfile,
+    par: Parallelism,
+    seq: u64,
+    batch: u64,
+    kv_cache: bool,
+) -> f64 {
+    let weights = llm.dense_params() as f64 * dev.weight_bytes_per_param
+        / (par.tp * par.pp) as f64;
+    let kv = if kv_cache {
+        llm.layers as f64
+            * seq as f64
+            * 2.0
+            * llm.d_model as f64
+            * dev.kv_bytes_per_elem
+            * (batch as f64 / par.dp as f64).max(1.0)
+            / (par.tp * par.pp) as f64
+    } else {
+        0.0
+    };
+    weights + kv
+}
+
+/// Time to generate a full sequence of `seq` tokens (seconds).
+pub fn sequence_time(
+    llm: &LlmConfig,
+    dev: &DeviceProfile,
+    par: Parallelism,
+    seq: u64,
+    batch: u64,
+    kv_cache: bool,
+) -> InferenceTime {
+    let per = time_per_token(llm, dev, par, seq, batch, kv_cache);
+    InferenceTime {
+        compute: per.compute * seq as f64,
+        memory: per.memory * seq as f64,
+        comm: per.comm * seq as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::llm::device::DeviceProfile;
+    use crate::llm::models::all_llms;
+
+    fn gpt3() -> LlmConfig {
+        all_llms().into_iter().find(|m| m.name == "gpt3-175B").unwrap()
+    }
+
+    #[test]
+    fn cache_beats_nocache_at_long_seq() {
+        let m = gpt3();
+        let dev = DeviceProfile::host_cache();
+        let par = Parallelism { dp: 1, tp: 16, pp: 1 };
+        let with = sequence_time(&m, &dev, par, 32_768, 1, true).total();
+        let par_pp = Parallelism { dp: 1, tp: 1, pp: 16 };
+        let without = sequence_time(&m, &DeviceProfile::host_nocache(), par_pp, 32_768, 1, false).total();
+        assert!(without / with > 50.0, "cache gain {}", without / with);
+    }
+
+    #[test]
+    fn time_grows_with_sequence() {
+        let m = gpt3();
+        let dev = DeviceProfile::dockerssd();
+        let par = Parallelism { dp: 1, tp: 8, pp: 1 };
+        let t1 = sequence_time(&m, &dev, par, 1024, 1, true).total();
+        let t2 = sequence_time(&m, &dev, par, 4096, 1, true).total();
+        assert!(t2 > t1);
+    }
+
+    #[test]
+    fn memory_capacity_grows_with_kv() {
+        let m = gpt3();
+        let dev = DeviceProfile::dockerssd();
+        let par = Parallelism { dp: 1, tp: 4, pp: 4 };
+        let no_kv = bytes_per_device(&m, &dev, par, 32_768, 1, false);
+        let kv = bytes_per_device(&m, &dev, par, 32_768, 1, true);
+        assert!(kv > no_kv);
+        // KV at 32K for a 175B model is substantial
+        assert!(kv - no_kv > 1e9);
+    }
+
+    #[test]
+    fn tp_reduces_per_token_compute() {
+        let m = gpt3();
+        let dev = DeviceProfile::dockerssd();
+        let t1 = time_per_token(&m, &dev, Parallelism { dp: 1, tp: 1, pp: 1 }, 1024, 1, true);
+        let t8 = time_per_token(&m, &dev, Parallelism { dp: 1, tp: 8, pp: 1 }, 1024, 1, true);
+        assert!(t8.compute < t1.compute);
+        assert!(t8.comm > t1.comm, "tp adds all-reduce traffic");
+    }
+
+    #[test]
+    fn pp_does_not_speed_up_cached_decode() {
+        // serial dependency chain: pp divides capacity, not latency
+        let m = gpt3();
+        let dev = DeviceProfile::dockerssd();
+        let t1 = time_per_token(&m, &dev, Parallelism { dp: 1, tp: 1, pp: 1 }, 1024, 1, true);
+        let t8 = time_per_token(&m, &dev, Parallelism { dp: 1, tp: 1, pp: 8 }, 1024, 1, true);
+        assert!(t8.compute >= t1.compute * 0.99);
+    }
+
+    #[test]
+    fn pp_divides_nocache_recompute() {
+        let m = gpt3();
+        let dev = DeviceProfile::host_nocache();
+        let t1 = time_per_token(&m, &dev, Parallelism { dp: 1, tp: 1, pp: 1 }, 8192, 1, false);
+        let t8 = time_per_token(&m, &dev, Parallelism { dp: 1, tp: 1, pp: 8 }, 8192, 1, false);
+        assert!(t8.compute < t1.compute / 4.0);
+    }
+}

@@ -1,0 +1,84 @@
+//! The eight evaluated LLMs (paper: lamda-137B ... megatron-1T), with
+//! public layer geometries.  FLOP and KV-cache math uses the analytic
+//! dense parameter count 12 L d^2 so inter-model ratios track geometry.
+
+/// One model configuration.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LlmConfig {
+    pub name: &'static str,
+    /// Headline parameter count (for reporting).
+    pub headline_params_b: u64,
+    pub layers: u32,
+    pub d_model: u32,
+    pub heads: u32,
+}
+
+impl LlmConfig {
+    /// Analytic dense transformer parameters: 12 L d^2 (attention 4d^2 +
+    /// FFN 8d^2 per layer).
+    pub fn dense_params(&self) -> u64 {
+        12 * self.layers as u64 * (self.d_model as u64).pow(2)
+    }
+
+    /// KV-cache bytes for (seq, batch) at `bytes_per_elem`.
+    pub fn kv_bytes(&self, seq: u64, batch: u64, bytes_per_elem: f64) -> f64 {
+        self.layers as f64 * seq as f64 * 2.0 * self.d_model as f64 * batch as f64 * bytes_per_elem
+    }
+}
+
+/// All eight models of Figure 12, in paper order.
+pub fn all_llms() -> Vec<LlmConfig> {
+    vec![
+        LlmConfig { name: "lamda-137B", headline_params_b: 137, layers: 64, d_model: 8192, heads: 128 },
+        LlmConfig { name: "gpt3-175B", headline_params_b: 175, layers: 96, d_model: 12288, heads: 96 },
+        LlmConfig { name: "jurassic-178B", headline_params_b: 178, layers: 76, d_model: 13824, heads: 96 },
+        LlmConfig { name: "pangu-200B", headline_params_b: 200, layers: 64, d_model: 16384, heads: 128 },
+        LlmConfig { name: "gopher-280B", headline_params_b: 280, layers: 80, d_model: 16384, heads: 128 },
+        LlmConfig { name: "turing-530B", headline_params_b: 530, layers: 105, d_model: 20480, heads: 128 },
+        LlmConfig { name: "palm-540B", headline_params_b: 540, layers: 118, d_model: 18432, heads: 48 },
+        LlmConfig { name: "megatron-1T", headline_params_b: 1000, layers: 128, d_model: 25600, heads: 160 },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eight_models_in_order() {
+        let ms = all_llms();
+        assert_eq!(ms.len(), 8);
+        assert_eq!(ms[0].name, "lamda-137B");
+        assert_eq!(ms[7].name, "megatron-1T");
+    }
+
+    #[test]
+    fn headline_params_increase_monotonically() {
+        let ms = all_llms();
+        for pair in ms.windows(2) {
+            assert!(pair[1].headline_params_b >= pair[0].headline_params_b);
+        }
+    }
+
+    #[test]
+    fn gpt3_dense_params_near_headline() {
+        let gpt3 = all_llms().into_iter().find(|m| m.name == "gpt3-175B").unwrap();
+        let dense = gpt3.dense_params() as f64 / 1e9;
+        assert!((150.0..200.0).contains(&dense), "gpt3 dense {dense}B");
+    }
+
+    #[test]
+    fn megatron_dense_params_near_1t() {
+        let mt = all_llms().into_iter().find(|m| m.name == "megatron-1T").unwrap();
+        let dense = mt.dense_params() as f64 / 1e12;
+        assert!((0.8..1.2).contains(&dense), "megatron dense {dense}T");
+    }
+
+    #[test]
+    fn kv_bytes_scale_linearly() {
+        let m = all_llms().remove(0);
+        let a = m.kv_bytes(1024, 1, 2.0);
+        assert_eq!(m.kv_bytes(2048, 1, 2.0), 2.0 * a);
+        assert_eq!(m.kv_bytes(1024, 4, 2.0), 4.0 * a);
+    }
+}

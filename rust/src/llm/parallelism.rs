@@ -1,0 +1,185 @@
+//! Parallelism search: enumerate (dp, tp, pp) factorizations of the node
+//! count, filter by memory feasibility, pick the fastest (the paper's
+//! "identifying the optimal configuration by selecting the scenario with
+//! the shortest execution time").
+
+use super::device::DeviceProfile;
+use super::models::LlmConfig;
+use super::{bytes_per_device, sequence_time, InferenceTime};
+
+/// A (dp, tp, pp) assignment over dp*tp*pp devices.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Parallelism {
+    pub dp: u32,
+    pub tp: u32,
+    pub pp: u32,
+}
+
+impl Parallelism {
+    pub fn devices(&self) -> u32 {
+        self.dp * self.tp * self.pp
+    }
+
+    pub fn label(&self) -> String {
+        format!("dp{}/tp{}/pp{}", self.dp, self.tp, self.pp)
+    }
+
+    /// The dominant axis (Figure 12a reports which kind wins).
+    pub fn dominant(&self) -> ParallelKind {
+        if self.tp >= self.pp && self.tp >= self.dp {
+            ParallelKind::Tensor
+        } else if self.pp >= self.dp {
+            ParallelKind::Pipeline
+        } else {
+            ParallelKind::Data
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParallelKind {
+    Data,
+    Tensor,
+    Pipeline,
+}
+
+impl ParallelKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ParallelKind::Data => "data",
+            ParallelKind::Tensor => "tensor",
+            ParallelKind::Pipeline => "pipeline",
+        }
+    }
+}
+
+/// All (dp, tp, pp) triples with dp*tp*pp == n (n a power of two here).
+pub fn factorizations(n: u32) -> Vec<Parallelism> {
+    let mut out = Vec::new();
+    let mut dp = 1;
+    while dp <= n {
+        if n % dp == 0 {
+            let rest = n / dp;
+            let mut tp = 1;
+            while tp <= rest {
+                if rest % tp == 0 {
+                    out.push(Parallelism {
+                        dp,
+                        tp,
+                        pp: rest / tp,
+                    });
+                }
+                tp += 1;
+            }
+        }
+        dp += 1;
+    }
+    out
+}
+
+/// Search result.
+#[derive(Clone, Debug)]
+pub struct OptimalChoice {
+    pub par: Parallelism,
+    pub time: InferenceTime,
+}
+
+/// Find the fastest feasible parallelism for a scenario.  `batch` is the
+/// *global* batch; dp must divide it.
+pub fn find_optimal(
+    llm: &LlmConfig,
+    dev: &DeviceProfile,
+    nodes: u32,
+    seq: u64,
+    batch: u64,
+    kv_cache: bool,
+) -> Option<OptimalChoice> {
+    let mut best: Option<OptimalChoice> = None;
+    for par in factorizations(nodes) {
+        if par.dp as u64 > batch {
+            continue;
+        }
+        if bytes_per_device(llm, dev, par, seq, batch, kv_cache) > dev.mem_capacity {
+            continue;
+        }
+        let t = sequence_time(llm, dev, par, seq, batch, kv_cache);
+        if best.as_ref().map_or(true, |b| t.total() < b.time.total()) {
+            best = Some(OptimalChoice { par, time: t });
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::llm::models::all_llms;
+
+    #[test]
+    fn factorizations_cover_power_of_two() {
+        let f = factorizations(8);
+        assert!(f.contains(&Parallelism { dp: 1, tp: 8, pp: 1 }));
+        assert!(f.contains(&Parallelism { dp: 2, tp: 2, pp: 2 }));
+        assert!(f.contains(&Parallelism { dp: 8, tp: 1, pp: 1 }));
+        for p in &f {
+            assert_eq!(p.devices(), 8);
+        }
+    }
+
+    #[test]
+    fn dominant_axis_classification() {
+        assert_eq!(Parallelism { dp: 1, tp: 8, pp: 2 }.dominant(), ParallelKind::Tensor);
+        assert_eq!(Parallelism { dp: 2, tp: 1, pp: 8 }.dominant(), ParallelKind::Pipeline);
+        assert_eq!(Parallelism { dp: 8, tp: 1, pp: 1 }.dominant(), ParallelKind::Data);
+    }
+
+    #[test]
+    fn optimal_respects_memory_feasibility() {
+        let m = all_llms().into_iter().find(|m| m.name == "megatron-1T").unwrap();
+        let dev = DeviceProfile::host_nocache(); // 64GB/node
+        // 1T params fp16 = 2TB; 16 nodes x 64GB = 1TB -> infeasible at any split
+        assert!(find_optimal(&m, &dev, 16, 1024, 1, false).is_none());
+        // 64 nodes x 64GB = 4TB -> feasible
+        assert!(find_optimal(&m, &dev, 64, 1024, 1, false).is_some());
+    }
+
+    #[test]
+    fn dp_cannot_exceed_batch() {
+        let m = all_llms().remove(0);
+        let dev = DeviceProfile::host_cache();
+        let best = find_optimal(&m, &dev, 16, 1024, 1, true).unwrap();
+        assert_eq!(best.par.dp, 1, "batch 1 forbids data parallelism");
+    }
+
+    #[test]
+    fn cached_decode_prefers_tensor_parallelism() {
+        // Fig 12a: with KV cache, tensor parallelism wins
+        let m = all_llms().into_iter().find(|m| m.name == "gpt3-175B").unwrap();
+        for dev in [DeviceProfile::host_cache(), DeviceProfile::dockerssd()] {
+            let best = find_optimal(&m, &dev, 32, 32_768, 1, true).unwrap();
+            assert_eq!(
+                best.par.dominant(),
+                ParallelKind::Tensor,
+                "{}: {}",
+                dev.name,
+                best.par.label()
+            );
+        }
+    }
+
+    #[test]
+    fn nocache_prefers_pipeline_parallelism() {
+        // Fig 12a: heavy per-layer recompute -> pipeline parallelism
+        let m = all_llms().into_iter().find(|m| m.name == "gpt3-175B").unwrap();
+        for dev in [DeviceProfile::host_nocache(), DeviceProfile::dockerssd_nocache()] {
+            let best = find_optimal(&m, &dev, 32, 32_768, 1, false).unwrap();
+            assert_eq!(
+                best.par.dominant(),
+                ParallelKind::Pipeline,
+                "{}: {}",
+                dev.name,
+                best.par.label()
+            );
+        }
+    }
+}

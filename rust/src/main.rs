@@ -1,0 +1,331 @@
+//! `repro` — the DockerSSD leader CLI.
+//!
+//! Subcommands regenerate every table and figure of the paper's
+//! evaluation (DESIGN.md §3) and drive the serving case study:
+//!
+//! ```text
+//! repro table2            # Table 2: workload characteristics
+//! repro fig3              # Fig 3: Host vs P.ISP breakdown
+//! repro fig10             # Fig 10: firmware image sizes
+//! repro fig11             # Fig 11: 6 models x 13 workloads
+//! repro fig12a            # Fig 12a: optimal parallelism per scenario
+//! repro fig12b            # Fig 12b: compute/memory breakdown + ratios
+//! repro fig13ab           # Fig 13a/b: sequence-length sensitivity
+//! repro fig13cd           # Fig 13c/d: batch-size sensitivity
+//! repro docker-demo       # pull/run/logs lifecycle on the simulated SSD
+//! repro serve [--nodes N --requests R --tokens T --artifacts DIR]
+//! repro config            # print the default config as JSON
+//! ```
+//!
+//! (CLI parsing is hand-rolled: clap is unavailable offline, DESIGN.md §4.)
+
+use dockerssd::config::SystemConfig;
+use dockerssd::docker::{MiniDocker, Registry};
+use dockerssd::firmware::{fw_image, linux_image, CostModel, VirtualFw};
+use dockerssd::lambdafs::LambdaFs;
+use dockerssd::llm::disagg::{
+    aggregate_ratio, batch_sweep, crossover_seq, fig12_sweep, seq_sweep, DisaggModel,
+};
+use dockerssd::llm::all_llms;
+use dockerssd::metrics::Table;
+use dockerssd::models::{evaluate, fig11_row, geomean_ratio, Component, ModelKind};
+use dockerssd::ssd::SsdDevice;
+use dockerssd::util::{human_bytes, SimTime};
+use dockerssd::workloads::all_workloads;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "table2" => table2(),
+        "fig3" => fig3(),
+        "fig10" => fig10(),
+        "fig11" => fig11(),
+        "fig12a" => fig12a(),
+        "fig12b" => fig12b(),
+        "fig13ab" => fig13ab(),
+        "fig13cd" => fig13cd(),
+        "docker-demo" => docker_demo(),
+        "serve" => serve_cmd(&args[1..]),
+        "config" => println!("{}", SystemConfig::default().to_json().dump()),
+        _ => {
+            eprintln!("usage: repro <table2|fig3|fig10|fig11|fig12a|fig12b|fig13ab|fig13cd|docker-demo|serve|config>");
+            std::process::exit(if cmd == "help" { 0 } else { 2 });
+        }
+    }
+}
+
+fn table2() {
+    let mut t = Table::new(vec![
+        "workload", "io_size", "io_count", "syscalls", "path_walks", "files", "tcp_pkts",
+        "exec_s",
+    ]);
+    for w in all_workloads() {
+        t.row(vec![
+            w.full_name(),
+            human_bytes(w.io_bytes),
+            format!("{}", w.io_count),
+            format!("{}", w.syscalls),
+            format!("{}", w.path_walks),
+            format!("{}", w.files_opened),
+            format!("{}", w.tcp_packets),
+            format!("{}", w.exec_time_s),
+        ]);
+    }
+    println!("Table 2: workload characteristics\n{}", t.render());
+}
+
+fn fig3() {
+    let c = CostModel::calibrated();
+    let mut t = Table::new(vec!["workload", "Host total", "Host Storage%", "P.ISP total", "P.ISP Communicate%", "P.ISP/Host"]);
+    let (mut sf, mut cf, mut rr) = (0.0, 0.0, 0.0);
+    let ws = all_workloads();
+    for w in &ws {
+        let h = evaluate(ModelKind::Host, w, &c);
+        let p = evaluate(ModelKind::PIspR, w, &c);
+        sf += h.fraction(Component::Storage);
+        cf += p.communicate() / p.total();
+        rr += p.total() / h.total();
+        t.row(vec![
+            w.full_name(),
+            format!("{:.2}s", h.total()),
+            format!("{:.0}%", 100.0 * h.fraction(Component::Storage)),
+            format!("{:.2}s", p.total()),
+            format!("{:.0}%", 100.0 * p.communicate() / p.total()),
+            format!("{:.2}x", p.total() / h.total()),
+        ]);
+    }
+    let n = ws.len() as f64;
+    println!("Figure 3: performance impact analysis\n{}", t.render());
+    println!(
+        "mean: Host Storage {:.0}% (paper 38%) | P.ISP Communicate {:.0}% (paper 43%) | P.ISP/Host {:.2}x (paper 1.4x)",
+        100.0 * sf / n,
+        100.0 * cf / n,
+        rr / n
+    );
+}
+
+fn fig10() {
+    let (linux, fw) = (linux_image(), fw_image());
+    let mut t = Table::new(vec!["image", "component", "size"]);
+    for c in &linux.components {
+        t.row(vec![linux.name, c.name, &human_bytes(c.bytes)]);
+    }
+    for c in &fw.components {
+        t.row(vec![fw.name, c.name, &human_bytes(c.bytes)]);
+    }
+    println!("Figure 10: image size\n{}", t.render());
+    println!(
+        "totals: {} = {}, {} = {} -> reduction {:.1}x (paper 83.4x)",
+        linux.name,
+        human_bytes(linux.total_bytes()),
+        fw.name,
+        human_bytes(fw.total_bytes()),
+        linux.total_bytes() as f64 / fw.total_bytes() as f64
+    );
+}
+
+fn fig11() {
+    let c = CostModel::calibrated();
+    let mut t = Table::new(vec![
+        "workload", "Host", "P.ISP-R", "P.ISP-V", "D-Naive", "D-FullOS", "D-VirtFW",
+    ]);
+    for w in all_workloads() {
+        let row = fig11_row(&w, &c);
+        let mut cells = vec![w.full_name()];
+        for (_, _, norm) in &row {
+            cells.push(format!("{:.2}", norm));
+        }
+        t.row(cells);
+    }
+    println!("Figure 11: latency normalized to D-VirtFW\n{}", t.render());
+    println!("aggregate geomean vs D-VirtFW (paper targets):");
+    for (m, target) in [
+        (ModelKind::Host, 1.3),
+        (ModelKind::PIspR, 1.6),
+        (ModelKind::PIspV, 1.6),
+        (ModelKind::DNaive, 1.8),
+        (ModelKind::DFullOs, 1.6),
+    ] {
+        println!(
+            "  {:<9} {:.2}x (paper ~{:.1}x)",
+            m.name(),
+            geomean_ratio(m, ModelKind::DVirtFw, &c),
+            target
+        );
+    }
+    // component view for one representative workload
+    let w = &all_workloads()[0];
+    println!("\ncomponent breakdown, {} (seconds):", w.full_name());
+    let mut t = Table::new(vec!["model", "Network", "Kernel-ctx", "LBA-set", "Storage", "System", "Compute"]);
+    for m in ModelKind::ALL {
+        let b = evaluate(m, w, &c);
+        t.row(vec![
+            m.name().to_string(),
+            format!("{:.3}", b.network),
+            format!("{:.3}", b.kernel_ctx),
+            format!("{:.3}", b.lba_set),
+            format!("{:.3}", b.storage),
+            format!("{:.3}", b.system),
+            format!("{:.3}", b.compute),
+        ]);
+    }
+    println!("{}", t.render());
+}
+
+fn fig12a() {
+    let mut t = Table::new(vec!["model", "nodes", "H-NoCache", "H-Cache", "D-NoCache", "D-Cache"]);
+    let rs = fig12_sweep(32_768, 1);
+    for (i, llm) in all_llms().iter().enumerate() {
+        let nodes = dockerssd::llm::disagg::nodes_for(i);
+        let mut cells = vec![llm.name.to_string(), format!("{nodes}")];
+        for d in DisaggModel::ALL {
+            let cell = rs
+                .iter()
+                .find(|r| r.model == llm.name && r.disagg == d)
+                .map(|r| format!("{} ({})", r.choice.par.dominant().name(), r.choice.par.label()))
+                .unwrap_or_else(|| "infeasible".into());
+            cells.push(cell);
+        }
+        t.row(cells);
+    }
+    println!("Figure 12a: optimal parallelism (32K seq, batch 1)\n{}", t.render());
+    println!("paper: NoCache -> pipeline parallelism; Cache -> tensor parallelism");
+}
+
+fn fig12b() {
+    let mut t = Table::new(vec!["model", "scenario", "compute_s", "memory_s", "comm_s", "total_s"]);
+    for r in fig12_sweep(32_768, 1) {
+        t.row(vec![
+            r.model.to_string(),
+            r.disagg.name().to_string(),
+            format!("{:.1}", r.time().compute),
+            format!("{:.1}", r.time().memory),
+            format!("{:.1}", r.time().comm),
+            format!("{:.1}", r.time().total()),
+        ]);
+    }
+    println!("Figure 12b: inference time breakdown (32K seq)\n{}", t.render());
+    println!("aggregate ratios (paper targets):");
+    println!(
+        "  H-NoCache/H-Cache = {:.0}x (paper 421x)",
+        aggregate_ratio(DisaggModel::HostNoCache, DisaggModel::HostCache, 32_768, 1)
+    );
+    println!(
+        "  D-NoCache/D-Cache = {:.0}x (paper 4.6Kx)",
+        aggregate_ratio(DisaggModel::DockerNoCache, DisaggModel::DockerCache, 32_768, 1)
+    );
+    println!(
+        "  H-Cache/D-Cache   = {:.1}x (paper 7.9x)",
+        aggregate_ratio(DisaggModel::HostCache, DisaggModel::DockerCache, 32_768, 1)
+    );
+    println!(
+        "  D-NoCache/H-NoCache = {:.1}x (paper 1.7x)",
+        aggregate_ratio(DisaggModel::DockerNoCache, DisaggModel::HostNoCache, 32_768, 1)
+    );
+    println!(
+        "  H-NoCache/D-Cache = {:.0}x (paper 3.2Kx)",
+        aggregate_ratio(DisaggModel::HostNoCache, DisaggModel::DockerCache, 32_768, 1)
+    );
+}
+
+fn fig13ab() {
+    let llms = all_llms();
+    let lamda = &llms[0];
+    let megatron = &llms[7];
+    let seqs: Vec<u64> = (6..=17).map(|p| 1u64 << p).collect();
+    for (llm, nodes, paper_x) in [(lamda, 16u32, 256u64), (megatron, 128u32, 1024u64)] {
+        let mut t = Table::new(vec!["seq", "D-Cache speedup over H-Cache"]);
+        for (s, sp) in seq_sweep(llm, nodes, &seqs, 1) {
+            t.row(vec![format!("{s}"), format!("{:.2}x", sp)]);
+        }
+        println!("Figure 13a/b: {} on {} nodes\n{}", llm.name, nodes, t.render());
+        println!(
+            "crossover: {:?} (paper {}); speedup converges toward ~9.5x at long sequences\n",
+            crossover_seq(llm, nodes),
+            paper_x
+        );
+    }
+}
+
+fn fig13cd() {
+    let llms = all_llms();
+    let batches = [1u64, 2, 4, 8, 16, 32, 64, 128, 256, 512];
+    for (llm, nodes) in [(&llms[0], 16u32), (&llms[7], 128u32)] {
+        let mut t = Table::new(vec!["batch", "D-Cache speedup over H-Cache"]);
+        for (b, sp) in batch_sweep(llm, nodes, 512, &batches) {
+            t.row(vec![format!("{b}"), format!("{:.2}x", sp)]);
+        }
+        println!("Figure 13c/d: {} on {} nodes (seq 512)\n{}", llm.name, nodes, t.render());
+    }
+    println!("paper: modest improvement, max ~1.3x for lamda and megatron");
+}
+
+fn docker_demo() {
+    let cfg = SystemConfig::default();
+    let mut dev = SsdDevice::new(cfg.ssd.clone());
+    let mut fs = LambdaFs::over_device(&dev);
+    let mut fw = VirtualFw::new(&cfg.ssd);
+    let reg = Registry::with_benchmark_images();
+    let mut md = MiniDocker::new();
+
+    println!("# docker pull mariadb (over Ether-oN into λFS)");
+    let r = md.pull(&mut fw, &mut fs, &mut dev, &reg, SimTime::ZERO, "mariadb").unwrap();
+    println!("{} (simulated {:?})", r.output, r.done);
+
+    println!("# docker run mariadb");
+    let r2 = md.run(&mut fw, &mut fs, &mut dev, r.done, "mariadb").unwrap();
+    let id = r2.output.clone();
+    println!("container {} started (simulated {:?})", id, r2.done);
+
+    md.log_line(&mut fs, &mut dev, r2.done, &id, "query: SELECT ... 42 rows").unwrap();
+    println!("# docker logs {id}");
+    let logs = md.logs(&mut fs, &mut dev, r2.done, &id).unwrap();
+    print!("{}", logs.output);
+
+    println!("# docker ps");
+    print!("{}", md.ps().output);
+
+    md.stop(&mut fw, &mut fs, &mut dev, r2.done, &id).unwrap();
+    md.rm(&mut fs, r2.done, &id).unwrap();
+    println!("stopped + removed; fw syscalls emulated: {}", fw.syscalls.total());
+}
+
+fn serve_cmd(rest: &[String]) {
+    let mut nodes = 2usize;
+    let mut requests = 8usize;
+    let mut tokens = 16usize;
+    let mut artifacts = "artifacts".to_string();
+    let mut i = 0;
+    while i < rest.len() {
+        match rest[i].as_str() {
+            "--nodes" => {
+                nodes = rest[i + 1].parse().expect("--nodes N");
+                i += 2;
+            }
+            "--requests" => {
+                requests = rest[i + 1].parse().expect("--requests R");
+                i += 2;
+            }
+            "--tokens" => {
+                tokens = rest[i + 1].parse().expect("--tokens T");
+                i += 2;
+            }
+            "--artifacts" => {
+                artifacts = rest[i + 1].clone();
+                i += 2;
+            }
+            other => {
+                eprintln!("unknown flag {other}");
+                std::process::exit(2);
+            }
+        }
+    }
+    match dockerssd::examples_support::run_serve(&artifacts, nodes, requests, tokens) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("serve failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,236 @@
+//! Metrics: counters, latency histograms, and table rendering for the
+//! benchmark harness output.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::util::SimTime;
+
+/// Log-bucketed latency histogram (2 buckets per octave, ns domain).
+#[derive(Clone, Debug, Default)]
+pub struct LatencyHistogram {
+    buckets: BTreeMap<u32, u64>,
+    count: u64,
+    sum_ns: u128,
+    min_ns: u64,
+    max_ns: u64,
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            min_ns: u64::MAX,
+            ..Default::default()
+        }
+    }
+
+    fn bucket_of(ns: u64) -> u32 {
+        if ns <= 1 {
+            return 0;
+        }
+        let lg = 63 - ns.leading_zeros();
+        let half = if ns & (1 << lg.saturating_sub(1)) != 0 && lg > 0 {
+            1
+        } else {
+            0
+        };
+        lg * 2 + half
+    }
+
+    pub fn record(&mut self, t: SimTime) {
+        let ns = t.as_ns();
+        *self.buckets.entry(Self::bucket_of(ns)).or_insert(0) += 1;
+        self.count += 1;
+        self.sum_ns += ns as u128;
+        self.min_ns = self.min_ns.min(ns);
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> SimTime {
+        if self.count == 0 {
+            return SimTime::ZERO;
+        }
+        SimTime::ns((self.sum_ns / self.count as u128) as u64)
+    }
+
+    pub fn min(&self) -> SimTime {
+        if self.count == 0 {
+            SimTime::ZERO
+        } else {
+            SimTime::ns(self.min_ns)
+        }
+    }
+
+    pub fn max(&self) -> SimTime {
+        SimTime::ns(self.max_ns)
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound of bucket).
+    pub fn quantile(&self, q: f64) -> SimTime {
+        if self.count == 0 {
+            return SimTime::ZERO;
+        }
+        let target = ((self.count as f64) * q).ceil() as u64;
+        let mut seen = 0;
+        for (&b, &c) in &self.buckets {
+            seen += c;
+            if seen >= target {
+                let lg = b / 2;
+                let base = 1u64 << lg;
+                let upper = if b % 2 == 1 { base + base / 2 } else { base };
+                return SimTime::ns(upper.max(1));
+            }
+        }
+        SimTime::ns(self.max_ns)
+    }
+}
+
+/// Named counters for substrate statistics.
+#[derive(Clone, Debug, Default)]
+pub struct Counters {
+    map: BTreeMap<&'static str, u64>,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn inc(&mut self, name: &'static str) {
+        self.add(name, 1);
+    }
+    pub fn add(&mut self, name: &'static str, n: u64) {
+        *self.map.entry(name).or_insert(0) += n;
+    }
+    pub fn get(&self, name: &str) -> u64 {
+        self.map.get(name).copied().unwrap_or(0)
+    }
+    pub fn iter(&self) -> impl Iterator<Item = (&'static str, u64)> + '_ {
+        self.map.iter().map(|(k, v)| (*k, *v))
+    }
+}
+
+/// Fixed-width text table, used by the `repro` CLI to print the paper's
+/// tables/figures as rows.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Table {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                let _ = write!(line, "{:<width$}", c, width = widths[i]);
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_basic_stats() {
+        let mut h = LatencyHistogram::new();
+        for ns in [100u64, 200, 300, 400] {
+            h.record(SimTime::ns(ns));
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.mean(), SimTime::ns(250));
+        assert_eq!(h.min(), SimTime::ns(100));
+        assert_eq!(h.max(), SimTime::ns(400));
+    }
+
+    #[test]
+    fn histogram_quantiles_monotone() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=1000u64 {
+            h.record(SimTime::ns(i * 10));
+        }
+        let p50 = h.quantile(0.5).as_ns();
+        let p99 = h.quantile(0.99).as_ns();
+        assert!(p50 <= p99);
+        assert!(p50 >= 2_500 && p50 <= 10_000, "p50={p50}");
+    }
+
+    #[test]
+    fn empty_histogram_is_safe() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.mean(), SimTime::ZERO);
+        assert_eq!(h.quantile(0.99), SimTime::ZERO);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let mut c = Counters::new();
+        c.inc("reads");
+        c.add("reads", 4);
+        c.inc("writes");
+        assert_eq!(c.get("reads"), 5);
+        assert_eq!(c.get("writes"), 1);
+        assert_eq!(c.get("absent"), 0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(vec!["name", "value"]);
+        t.row(vec!["short", "1"]);
+        t.row(vec!["a-much-longer-name", "23456"]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("name"));
+        assert!(lines[3].contains("23456"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+}

@@ -1,0 +1,150 @@
+//! The six latency components of Figure 11 (all values in seconds).
+
+/// Component identifiers in Figure 11's legend order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Component {
+    Network,
+    KernelCtx,
+    LbaSet,
+    Storage,
+    System,
+    Compute,
+}
+
+impl Component {
+    pub const ALL: [Component; 6] = [
+        Component::Network,
+        Component::KernelCtx,
+        Component::LbaSet,
+        Component::Storage,
+        Component::System,
+        Component::Compute,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Component::Network => "Network",
+            Component::KernelCtx => "Kernel-ctx",
+            Component::LbaSet => "LBA-set",
+            Component::Storage => "Storage",
+            Component::System => "System",
+            Component::Compute => "Compute",
+        }
+    }
+}
+
+/// Per-component latency (seconds).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LatencyBreakdown {
+    pub network: f64,
+    pub kernel_ctx: f64,
+    pub lba_set: f64,
+    pub storage: f64,
+    pub system: f64,
+    pub compute: f64,
+}
+
+impl LatencyBreakdown {
+    pub fn total(&self) -> f64 {
+        self.network + self.kernel_ctx + self.lba_set + self.storage + self.system + self.compute
+    }
+
+    pub fn get(&self, c: Component) -> f64 {
+        match c {
+            Component::Network => self.network,
+            Component::KernelCtx => self.kernel_ctx,
+            Component::LbaSet => self.lba_set,
+            Component::Storage => self.storage,
+            Component::System => self.system,
+            Component::Compute => self.compute,
+        }
+    }
+
+    /// Figure 3's coarse split: ISP communication/synchronization.
+    pub fn communicate(&self) -> f64 {
+        self.kernel_ctx + self.lba_set
+    }
+
+    pub fn fraction(&self, c: Component) -> f64 {
+        let t = self.total();
+        if t == 0.0 {
+            0.0
+        } else {
+            self.get(c) / t
+        }
+    }
+
+    pub fn scaled(&self, f: f64) -> LatencyBreakdown {
+        LatencyBreakdown {
+            network: self.network * f,
+            kernel_ctx: self.kernel_ctx * f,
+            lba_set: self.lba_set * f,
+            storage: self.storage * f,
+            system: self.system * f,
+            compute: self.compute * f,
+        }
+    }
+
+    pub fn add(&mut self, other: &LatencyBreakdown) {
+        self.network += other.network;
+        self.kernel_ctx += other.kernel_ctx;
+        self.lba_set += other.lba_set;
+        self.storage += other.storage;
+        self.system += other.system;
+        self.compute += other.compute;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> LatencyBreakdown {
+        LatencyBreakdown {
+            network: 1.0,
+            kernel_ctx: 2.0,
+            lba_set: 3.0,
+            storage: 4.0,
+            system: 5.0,
+            compute: 6.0,
+        }
+    }
+
+    #[test]
+    fn total_sums_components() {
+        assert_eq!(sample().total(), 21.0);
+    }
+
+    #[test]
+    fn get_matches_fields() {
+        let b = sample();
+        for (c, want) in Component::ALL.iter().zip([1.0, 2.0, 3.0, 4.0, 5.0, 6.0]) {
+            assert_eq!(b.get(*c), want);
+        }
+    }
+
+    #[test]
+    fn communicate_is_ctx_plus_lba() {
+        assert_eq!(sample().communicate(), 5.0);
+    }
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let b = sample();
+        let sum: f64 = Component::ALL.iter().map(|c| b.fraction(*c)).sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_breakdown_fraction_is_zero() {
+        assert_eq!(LatencyBreakdown::default().fraction(Component::Storage), 0.0);
+    }
+
+    #[test]
+    fn add_and_scale() {
+        let mut a = sample();
+        a.add(&sample());
+        assert_eq!(a.total(), 42.0);
+        assert_eq!(a.scaled(0.5).total(), 21.0);
+    }
+}

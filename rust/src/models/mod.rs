@@ -1,0 +1,278 @@
+//! The six data-processing models of the evaluation (DESIGN.md S7):
+//! Host, P.ISP-R, P.ISP-V, D-Naive, D-FullOS, D-VirtFW.
+//!
+//! Each model composes an end-to-end latency for a Table 2 workload from
+//! the calibrated unit costs ([`crate::firmware::CostModel`]), split into
+//! the six components of Figure 11: Network, Kernel-ctx, LBA-set,
+//! Storage, System, Compute.  Figure 3's three-way breakdown maps onto
+//! the same components (Communicate = Kernel-ctx + LBA-set).
+
+pub mod breakdown;
+
+use crate::firmware::CostModel;
+use crate::workloads::WorkloadSpec;
+
+pub use breakdown::{Component, LatencyBreakdown};
+
+/// Which model — order matches Figure 11's legend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    Host,
+    PIspR,
+    PIspV,
+    DNaive,
+    DFullOs,
+    DVirtFw,
+}
+
+impl ModelKind {
+    pub const ALL: [ModelKind; 6] = [
+        ModelKind::Host,
+        ModelKind::PIspR,
+        ModelKind::PIspV,
+        ModelKind::DNaive,
+        ModelKind::DFullOs,
+        ModelKind::DVirtFw,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Host => "Host",
+            ModelKind::PIspR => "P.ISP-R",
+            ModelKind::PIspV => "P.ISP-V",
+            ModelKind::DNaive => "D-Naive",
+            ModelKind::DFullOs => "D-FullOS",
+            ModelKind::DVirtFw => "D-VirtFW",
+        }
+    }
+}
+
+/// Evaluate `model` on `w`, returning the component breakdown in seconds.
+pub fn evaluate(model: ModelKind, w: &WorkloadSpec, c: &CostModel) -> LatencyBreakdown {
+    match model {
+        ModelKind::Host => host(w, c),
+        ModelKind::PIspR => pisp(w, c, true),
+        ModelKind::PIspV => pisp(w, c, false),
+        ModelKind::DNaive => docker_ssd(w, c, OsKind::FullOsSplit),
+        ModelKind::DFullOs => docker_ssd(w, c, OsKind::FullOsUnified),
+        ModelKind::DVirtFw => docker_ssd(w, c, OsKind::VirtFw),
+    }
+}
+
+const NS: f64 = 1e-9;
+
+/// Host (non-ISP baseline): full OS stack, data crosses PCIe to DRAM.
+fn host(w: &WorkloadSpec, c: &CostModel) -> LatencyBreakdown {
+    let mut b = LatencyBreakdown::default();
+    // compute on the host cores
+    b.compute = w.io_bytes as f64 * c.t_proc_host_ns_per_byte * NS;
+    // system: syscalls + VFS path walks (host dentry cache assumed warm-ish)
+    b.system = (w.syscalls as f64 * c.t_sys_host_ns as f64
+        + w.path_walks as f64 * c.t_walk_host_ns as f64)
+        * NS;
+    // storage: flash service + host block stack per I/O + PCIe transfer
+    let per_io_bytes = w.io_bytes / w.io_count.max(1);
+    let flash =
+        w.io_count as f64 * c.flash_io_ns(per_io_bytes, false) * (1.0 - w.write_frac)
+            + w.io_count as f64 * c.flash_io_ns(per_io_bytes, true) * w.write_frac;
+    let blk = w.io_count as f64 * c.t_blk_host_ns as f64;
+    let pcie = CostModel::xfer_ns(w.io_bytes, c.pcie_bw_gbps);
+    b.storage = (flash + blk + pcie) * NS;
+    // network: host kernel stack
+    b.network = w.tcp_packets as f64 * c.t_pkt_host_ns as f64 * NS;
+    b
+}
+
+/// Programmable ISP (Willow-like RPC / Biscuit-like vendor commands):
+/// kernels run near flash, but system-specific calls bounce to the host
+/// and file extents require LBA-set handshakes.
+fn pisp(w: &WorkloadSpec, c: &CostModel, rpc: bool) -> LatencyBreakdown {
+    let mut b = LatencyBreakdown::default();
+    let f = c.ssd_compute_factor();
+    b.compute = w.io_bytes as f64 * c.t_proc_host_ns_per_byte * f * NS;
+    // bare-metal kernels: no OS stack on device; the host-side runtime
+    // shim handles residual bookkeeping per file
+    b.system = w.files_opened as f64 * c.t_sys_host_ns as f64 * NS;
+    // storage near flash: no host block stack, no PCIe crossing
+    let per_io_bytes = w.io_bytes / w.io_count.max(1);
+    let flash =
+        w.io_count as f64 * c.flash_io_ns(per_io_bytes, false) * (1.0 - w.write_frac)
+            + w.io_count as f64 * c.flash_io_ns(per_io_bytes, true) * w.write_frac;
+    b.storage = flash * NS;
+    // kernel-ctx: every syscall-like service the offloaded kernel needs is
+    // a round trip to the host runtime (RPC or vendor command)
+    let per_bounce = if rpc { c.t_ctx_rpc_ns } else { c.t_ctx_vendor_ns };
+    b.kernel_ctx = w.syscalls as f64 * per_bounce as f64 * NS;
+    // LBA-set: per newly-opened file + per-I/O extent bookkeeping
+    b.lba_set =
+        (w.files_opened as f64 * c.t_lba_per_file_ns as f64
+            + w.io_count as f64 * c.t_lba_per_io_ns as f64)
+            * NS;
+    // network responses still ride the host stack (R additionally pays an
+    // RPC response per packet batch, folded into t_ctx_rpc)
+    b.network = w.tcp_packets as f64 * c.t_pkt_host_ns as f64 * NS;
+    b
+}
+
+enum OsKind {
+    /// D-Naive: full Linux on a separate processor complex.
+    FullOsSplit,
+    /// D-FullOS: full Linux sharing the controller complex.
+    FullOsUnified,
+    /// D-VirtFW: Virtual-FW emulation.
+    VirtFw,
+}
+
+/// Containerized DockerSSD variants: autonomous execution (no Kernel-ctx,
+/// no LBA-set thanks to λFS + rootfs pre-packaging), differing in OS stack.
+fn docker_ssd(w: &WorkloadSpec, c: &CostModel, os: OsKind) -> LatencyBreakdown {
+    let mut b = LatencyBreakdown::default();
+    let f = c.ssd_compute_factor();
+    b.compute = w.io_bytes as f64 * c.t_proc_host_ns_per_byte * f * NS;
+
+    let per_io_bytes = w.io_bytes / w.io_count.max(1);
+    let flash =
+        w.io_count as f64 * c.flash_io_ns(per_io_bytes, false) * (1.0 - w.write_frac)
+            + w.io_count as f64 * c.flash_io_ns(per_io_bytes, true) * w.write_frac;
+
+    match os {
+        OsKind::VirtFw => {
+            // emulated syscalls + λFS walks with the I/O-node cache
+            b.system = (w.syscalls as f64 * c.t_sys_emul_ns as f64
+                + w.path_walks as f64 * c.t_walk_fw_ns as f64)
+                * NS;
+            // λFS direct flash path
+            b.storage = flash * NS;
+        }
+        OsKind::FullOsUnified => {
+            // full Linux on the slow cores: syscalls + VFS walks + block layer
+            b.system = (w.syscalls as f64 * c.t_sys_fullos_ssd_ns as f64
+                + w.path_walks as f64 * (c.t_walk_host_ns as f64 * f))
+                * NS;
+            b.storage = (flash + w.io_count as f64 * c.t_blk_host_ns as f64 * f) * NS;
+        }
+        OsKind::FullOsSplit => {
+            b.system = (w.syscalls as f64 * c.t_sys_fullos_ssd_ns as f64
+                + w.path_walks as f64 * (c.t_walk_host_ns as f64 * f))
+                * NS;
+            // plus every byte crosses the ISP-complex <-> controller link
+            let complex = CostModel::xfer_ns(w.io_bytes, c.complex_link_gbps)
+                + w.io_count as f64 * c.t_complex_per_io_ns as f64;
+            b.storage =
+                (flash + w.io_count as f64 * c.t_blk_host_ns as f64 * f + complex) * NS;
+        }
+    }
+    // Ether-oN network path for client traffic
+    b.network = w.tcp_packets as f64 * c.t_pkt_ethon_ns as f64 * NS;
+    b
+}
+
+/// Figure 11 row: every model evaluated on `w`, normalized to D-VirtFW.
+pub fn fig11_row(w: &WorkloadSpec, c: &CostModel) -> Vec<(ModelKind, LatencyBreakdown, f64)> {
+    let base = evaluate(ModelKind::DVirtFw, w, c).total();
+    ModelKind::ALL
+        .iter()
+        .map(|&m| {
+            let b = evaluate(m, w, c);
+            let norm = b.total() / base;
+            (m, b, norm)
+        })
+        .collect()
+}
+
+/// Geometric mean of per-workload ratios model/base — the paper's "NxM
+/// better" aggregates.
+pub fn geomean_ratio(model: ModelKind, base: ModelKind, c: &CostModel) -> f64 {
+    let ws = crate::workloads::all_workloads();
+    let mut log_sum = 0.0;
+    for w in &ws {
+        let m = evaluate(model, w, c).total();
+        let b = evaluate(base, w, c).total();
+        log_sum += (m / b).ln();
+    }
+    (log_sum / ws.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::all_workloads;
+
+    fn c() -> CostModel {
+        CostModel::calibrated()
+    }
+
+    #[test]
+    fn all_models_produce_positive_latency() {
+        for w in all_workloads() {
+            for m in ModelKind::ALL {
+                let t = evaluate(m, &w, &c()).total();
+                assert!(t > 0.0, "{} on {}", m.name(), w.full_name());
+            }
+        }
+    }
+
+    #[test]
+    fn host_has_no_isp_communication() {
+        for w in all_workloads() {
+            let b = evaluate(ModelKind::Host, &w, &c());
+            assert_eq!(b.kernel_ctx, 0.0);
+            assert_eq!(b.lba_set, 0.0);
+        }
+    }
+
+    #[test]
+    fn dockerssd_variants_have_no_communication_overhead() {
+        for w in all_workloads() {
+            for m in [ModelKind::DNaive, ModelKind::DFullOs, ModelKind::DVirtFw] {
+                let b = evaluate(m, &w, &c());
+                assert_eq!(b.kernel_ctx, 0.0, "{}", m.name());
+                assert_eq!(b.lba_set, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn pisp_storage_is_half_of_host_storage() {
+        // paper: "P.ISP reduces Storage latency by 50% compared to Host"
+        let ws = all_workloads();
+        let mut ratio_sum = 0.0;
+        for w in &ws {
+            let h = evaluate(ModelKind::Host, w, &c()).storage;
+            let p = evaluate(ModelKind::PIspR, w, &c()).storage;
+            ratio_sum += p / h;
+        }
+        let mean = ratio_sum / ws.len() as f64;
+        assert!((0.35..0.70).contains(&mean), "P.ISP/Host storage {mean:.2}");
+    }
+
+    #[test]
+    fn pisp_v_faster_than_r() {
+        let r = geomean_ratio(ModelKind::PIspV, ModelKind::PIspR, &c());
+        assert!(r < 1.0, "V/R = {r:.3}");
+        // paper: 13.7% lower latency
+        assert!((0.78..0.97).contains(&r), "V/R = {r:.3}");
+    }
+
+    #[test]
+    fn dvirtfw_beats_every_other_model() {
+        for m in [
+            ModelKind::Host,
+            ModelKind::PIspR,
+            ModelKind::PIspV,
+            ModelKind::DNaive,
+            ModelKind::DFullOs,
+        ] {
+            let r = geomean_ratio(m, ModelKind::DVirtFw, &c());
+            assert!(r > 1.0, "{} / D-VirtFW = {r:.3}", m.name());
+        }
+    }
+
+    #[test]
+    fn fig11_normalization_base_is_one() {
+        let w = &all_workloads()[0];
+        let row = fig11_row(w, &c());
+        let dv = row.iter().find(|(m, _, _)| *m == ModelKind::DVirtFw).unwrap();
+        assert!((dv.2 - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,213 @@
+//! NVMe command and completion encoding.
+//!
+//! Commands carry the fields the paper's Figure 6b cares about: opcode,
+//! command id, namespace id, PRP1/PRP2 data pointers, and the LBA/length
+//! command dwords.  Ether-oN reuses the standard layout with
+//! vendor-specific opcodes 0xE0 (transmit frame) / 0xE1 (receive frame).
+
+/// Command identifier, unique per submission queue.
+pub type CID = u16;
+
+/// NVMe opcodes used by DockerSSD.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Opcode {
+    /// NVM read (0x02).
+    Read,
+    /// NVM write (0x01).
+    Write,
+    /// NVM flush (0x00).
+    Flush,
+    /// Admin identify (0x06).
+    Identify,
+    /// Ether-oN vendor-specific: host -> SSD Ethernet frame (0xE0).
+    TransmitFrame,
+    /// Ether-oN vendor-specific: pre-posted upcall slot the SSD completes
+    /// to deliver an SSD -> host Ethernet frame (0xE1).
+    ReceiveFrame,
+}
+
+impl Opcode {
+    pub fn to_byte(self) -> u8 {
+        match self {
+            Opcode::Flush => 0x00,
+            Opcode::Write => 0x01,
+            Opcode::Read => 0x02,
+            Opcode::Identify => 0x06,
+            Opcode::TransmitFrame => 0xE0,
+            Opcode::ReceiveFrame => 0xE1,
+        }
+    }
+
+    pub fn from_byte(b: u8) -> Option<Opcode> {
+        Some(match b {
+            0x00 => Opcode::Flush,
+            0x01 => Opcode::Write,
+            0x02 => Opcode::Read,
+            0x06 => Opcode::Identify,
+            0xE0 => Opcode::TransmitFrame,
+            0xE1 => Opcode::ReceiveFrame,
+            _ => return None,
+        })
+    }
+
+    pub fn is_vendor(self) -> bool {
+        matches!(self, Opcode::TransmitFrame | Opcode::ReceiveFrame)
+    }
+
+    pub fn is_io(self) -> bool {
+        matches!(self, Opcode::Read | Opcode::Write | Opcode::Flush)
+    }
+}
+
+/// One submission-queue entry.  `data` stands in for the host kernel page
+/// the PRP points to (we carry the bytes inline instead of simulating
+/// host-physical addressing).
+#[derive(Clone, Debug)]
+pub struct NvmeCommand {
+    pub cid: CID,
+    pub opcode: Opcode,
+    pub nsid: u32,
+    /// PRP1: 4KB-aligned host page address (simulated).
+    pub prp1: u64,
+    /// Starting LBA for I/O commands (CDW10/11).
+    pub slba: u64,
+    /// Number of logical blocks, 0's-based per spec (CDW12).
+    pub nlb: u16,
+    /// Payload carried by the PRP page (frame bytes for vendor commands,
+    /// write data for writes).
+    pub data: Vec<u8>,
+}
+
+impl NvmeCommand {
+    pub fn read(cid: CID, nsid: u32, slba: u64, nlb: u16) -> Self {
+        NvmeCommand {
+            cid,
+            opcode: Opcode::Read,
+            nsid,
+            prp1: 0,
+            slba,
+            nlb,
+            data: Vec::new(),
+        }
+    }
+
+    pub fn write(cid: CID, nsid: u32, slba: u64, data: Vec<u8>) -> Self {
+        let nlb = ((data.len().max(1) + 511) / 512 - 1) as u16;
+        NvmeCommand {
+            cid,
+            opcode: Opcode::Write,
+            nsid,
+            prp1: 0,
+            slba,
+            nlb,
+            data,
+        }
+    }
+
+    /// Ether-oN transmit: the sk_buff copied into a 4KB-aligned kernel page.
+    pub fn transmit_frame(cid: CID, page_addr: u64, frame: Vec<u8>) -> Self {
+        NvmeCommand {
+            cid,
+            opcode: Opcode::TransmitFrame,
+            nsid: 0,
+            prp1: page_addr,
+            slba: 0,
+            nlb: 0,
+            data: frame,
+        }
+    }
+
+    /// Ether-oN receive: pre-posted with an empty page the device fills.
+    pub fn receive_frame(cid: CID, page_addr: u64) -> Self {
+        NvmeCommand {
+            cid,
+            opcode: Opcode::ReceiveFrame,
+            nsid: 0,
+            prp1: page_addr,
+            slba: 0,
+            nlb: 0,
+            data: Vec::new(),
+        }
+    }
+}
+
+/// Completion status codes (subset).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Status {
+    Success,
+    InvalidOpcode,
+    InvalidNamespace,
+    LbaOutOfRange,
+    AccessDenied,
+}
+
+/// One completion-queue entry; `data` carries read/upcall payloads back.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub cid: CID,
+    pub status: Status,
+    pub data: Vec<u8>,
+}
+
+impl Completion {
+    pub fn ok(cid: CID) -> Self {
+        Completion {
+            cid,
+            status: Status::Success,
+            data: Vec::new(),
+        }
+    }
+
+    pub fn ok_with(cid: CID, data: Vec<u8>) -> Self {
+        Completion {
+            cid,
+            status: Status::Success,
+            data,
+        }
+    }
+
+    pub fn err(cid: CID, status: Status) -> Self {
+        Completion {
+            cid,
+            status,
+            data: Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opcode_bytes_round_trip() {
+        for op in [
+            Opcode::Read,
+            Opcode::Write,
+            Opcode::Flush,
+            Opcode::Identify,
+            Opcode::TransmitFrame,
+            Opcode::ReceiveFrame,
+        ] {
+            assert_eq!(Opcode::from_byte(op.to_byte()), Some(op));
+        }
+        assert_eq!(Opcode::from_byte(0x7F), None);
+    }
+
+    #[test]
+    fn vendor_opcodes_in_reserved_range() {
+        // the paper reserves 0xE0-0xE1 for Ether-oN
+        assert_eq!(Opcode::TransmitFrame.to_byte(), 0xE0);
+        assert_eq!(Opcode::ReceiveFrame.to_byte(), 0xE1);
+        assert!(Opcode::TransmitFrame.is_vendor());
+        assert!(!Opcode::Read.is_vendor());
+    }
+
+    #[test]
+    fn write_nlb_is_zeros_based_512b_units() {
+        let cmd = NvmeCommand::write(1, 1, 0, vec![0u8; 4096]);
+        assert_eq!(cmd.nlb, 7); // 8 blocks, 0's based
+        let small = NvmeCommand::write(2, 1, 0, vec![0u8; 100]);
+        assert_eq!(small.nlb, 0);
+    }
+}

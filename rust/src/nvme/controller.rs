@@ -1,0 +1,353 @@
+//! NVMe controller: fetches commands from SQs, enforces per-function
+//! namespace visibility, dispatches block I/O to the backend and
+//! vendor frames to the firmware, posts completions + MSI.
+//!
+//! The controller is generic over two traits so the substrate wiring stays
+//! acyclic: [`BlockBackend`] (implemented by `ssd::SsdDevice`) and
+//! [`FrameSink`] (implemented by the Virtual-FW network handler).
+
+use crate::util::SimTime;
+
+use super::command::{Completion, NvmeCommand, Opcode, Status};
+use super::namespace::NvmeSubsystem;
+use super::queue::QueuePair;
+
+/// Backend block service: returns the simulated completion latency.
+pub trait BlockBackend {
+    fn read(&mut self, at: SimTime, lba: u64, blocks: u64) -> (SimTime, Vec<u8>);
+    fn write(&mut self, at: SimTime, lba: u64, data: &[u8]) -> SimTime;
+    fn flush(&mut self, at: SimTime) -> SimTime;
+}
+
+/// Destination for Ether-oN transmit frames (the device-side network stack).
+pub trait FrameSink {
+    /// Deliver a host->SSD frame; returns processing latency.
+    fn deliver(&mut self, at: SimTime, frame: &[u8]) -> SimTime;
+}
+
+/// Which PCIe function a queue pair is attached to (Figure 4b).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PcieFunction {
+    /// Host-facing: sharable namespace only.
+    Host,
+    /// Virtual-FW-facing: private + sharable.
+    VirtualFw,
+}
+
+impl PcieFunction {
+    pub fn is_host(self) -> bool {
+        matches!(self, PcieFunction::Host)
+    }
+}
+
+/// Fixed protocol-level costs (PCIe round trip, doorbell MMIO, MSI).
+#[derive(Clone, Copy, Debug)]
+pub struct NvmeCosts {
+    pub fetch_ns: u64,
+    pub completion_ns: u64,
+    pub msi_ns: u64,
+}
+
+impl Default for NvmeCosts {
+    fn default() -> Self {
+        NvmeCosts {
+            fetch_ns: 400,
+            completion_ns: 300,
+            msi_ns: 900,
+        }
+    }
+}
+
+/// Control logic for one queue pair.
+pub struct NvmeController {
+    pub subsystem: NvmeSubsystem,
+    pub costs: NvmeCosts,
+    /// Upcall slots: pre-posted ReceiveFrame commands held by the device
+    /// until an ISP container sends a frame toward the host.
+    upcall_slots: Vec<NvmeCommand>,
+    pub stats_io: u64,
+    pub stats_frames: u64,
+    pub stats_upcalls: u64,
+}
+
+impl NvmeController {
+    pub fn new(subsystem: NvmeSubsystem) -> Self {
+        NvmeController {
+            subsystem,
+            costs: NvmeCosts::default(),
+            upcall_slots: Vec::new(),
+            stats_io: 0,
+            stats_frames: 0,
+            stats_upcalls: 0,
+        }
+    }
+
+    pub fn upcall_slots_free(&self) -> usize {
+        self.upcall_slots.len()
+    }
+
+    /// Process every pending command in `qp`, using `backend` for block I/O
+    /// and `sink` for Ether-oN frames.  Returns the time the last
+    /// completion was posted.
+    pub fn service_queue<B: BlockBackend, F: FrameSink>(
+        &mut self,
+        at: SimTime,
+        qp: &mut QueuePair,
+        function: PcieFunction,
+        backend: &mut B,
+        sink: &mut F,
+    ) -> SimTime {
+        let mut now = at;
+        while let Some(cmd) = qp.sq.fetch() {
+            now += SimTime::ns(self.costs.fetch_ns);
+            let completion_time;
+            let completion = match cmd.opcode {
+                Opcode::Read => {
+                    if !self.subsystem.check_access(cmd.nsid, function.is_host()) {
+                        completion_time = now;
+                        Completion::err(cmd.cid, Status::AccessDenied)
+                    } else {
+                        let ns = self.subsystem.get(cmd.nsid).unwrap();
+                        let blocks = cmd.nlb as u64 + 1;
+                        if !ns.contains(cmd.slba, blocks) {
+                            completion_time = now;
+                            Completion::err(cmd.cid, Status::LbaOutOfRange)
+                        } else {
+                            let base = self.subsystem.lba_base(cmd.nsid).unwrap();
+                            let (done, data) = backend.read(now, base + cmd.slba, blocks);
+                            self.stats_io += 1;
+                            completion_time = done;
+                            Completion::ok_with(cmd.cid, data)
+                        }
+                    }
+                }
+                Opcode::Write => {
+                    if !self.subsystem.check_access(cmd.nsid, function.is_host()) {
+                        completion_time = now;
+                        Completion::err(cmd.cid, Status::AccessDenied)
+                    } else {
+                        let ns = self.subsystem.get(cmd.nsid).unwrap();
+                        let blocks = cmd.nlb as u64 + 1;
+                        if !ns.contains(cmd.slba, blocks) {
+                            completion_time = now;
+                            Completion::err(cmd.cid, Status::LbaOutOfRange)
+                        } else {
+                            let base = self.subsystem.lba_base(cmd.nsid).unwrap();
+                            let done = backend.write(now, base + cmd.slba, &cmd.data);
+                            self.stats_io += 1;
+                            completion_time = done;
+                            Completion::ok(cmd.cid)
+                        }
+                    }
+                }
+                Opcode::Flush => {
+                    let done = backend.flush(now);
+                    self.stats_io += 1;
+                    completion_time = done;
+                    Completion::ok(cmd.cid)
+                }
+                Opcode::Identify => {
+                    let visible = self.subsystem.visible(function.is_host());
+                    let mut data = Vec::new();
+                    for ns in visible {
+                        data.extend_from_slice(&ns.id.to_le_bytes());
+                        data.extend_from_slice(&ns.lba_count.to_le_bytes());
+                    }
+                    completion_time = now;
+                    Completion::ok_with(cmd.cid, data)
+                }
+                Opcode::TransmitFrame => {
+                    let done = now + sink.deliver(now, &cmd.data);
+                    self.stats_frames += 1;
+                    completion_time = done;
+                    Completion::ok(cmd.cid)
+                }
+                Opcode::ReceiveFrame => {
+                    // Held open: the device keeps the slot until an
+                    // ISP-container emits a frame toward the host.
+                    self.upcall_slots.push(cmd);
+                    continue;
+                }
+            };
+            now = completion_time + SimTime::ns(self.costs.completion_ns + self.costs.msi_ns);
+            // CQ full would stall the device; treat as fatal in the model.
+            qp.cq.post(completion).expect("completion queue overflow");
+        }
+        now
+    }
+
+    /// Device-side upcall: complete a held ReceiveFrame slot with `frame`.
+    /// Returns false when no slot is available (the SSD must wait — this is
+    /// exactly the flow-control the paper sizes at 4 slots/SQ).
+    pub fn upcall(&mut self, qp: &mut QueuePair, frame: Vec<u8>) -> bool {
+        let Some(slot) = self.upcall_slots.pop() else {
+            return false;
+        };
+        self.stats_upcalls += 1;
+        qp.cq
+            .post(Completion::ok_with(slot.cid, frame))
+            .expect("completion queue overflow");
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nvme::namespace::{NvmeSubsystem, PRIVATE_NS, SHARABLE_NS};
+
+    struct MemBackend {
+        store: std::collections::HashMap<u64, Vec<u8>>,
+        lat: SimTime,
+    }
+
+    impl MemBackend {
+        fn new() -> Self {
+            MemBackend {
+                store: Default::default(),
+                lat: SimTime::us(10),
+            }
+        }
+    }
+
+    impl BlockBackend for MemBackend {
+        fn read(&mut self, at: SimTime, lba: u64, blocks: u64) -> (SimTime, Vec<u8>) {
+            let mut out = Vec::new();
+            for b in 0..blocks {
+                out.extend(
+                    self.store
+                        .get(&(lba + b))
+                        .cloned()
+                        .unwrap_or_else(|| vec![0u8; 512]),
+                );
+            }
+            (at + self.lat, out)
+        }
+        fn write(&mut self, at: SimTime, lba: u64, data: &[u8]) -> SimTime {
+            for (i, chunk) in data.chunks(512).enumerate() {
+                self.store.insert(lba + i as u64, chunk.to_vec());
+            }
+            at + self.lat
+        }
+        fn flush(&mut self, at: SimTime) -> SimTime {
+            at
+        }
+    }
+
+    struct NullSink(u64);
+    impl FrameSink for NullSink {
+        fn deliver(&mut self, _at: SimTime, _frame: &[u8]) -> SimTime {
+            self.0 += 1;
+            SimTime::us(1)
+        }
+    }
+
+    fn setup() -> (NvmeController, QueuePair, MemBackend, NullSink) {
+        let sub = NvmeSubsystem::standard(10_000, 0.3);
+        (
+            NvmeController::new(sub),
+            QueuePair::new(1, 16),
+            MemBackend::new(),
+            NullSink(0),
+        )
+    }
+
+    #[test]
+    fn write_then_read_round_trips() {
+        let (mut ctl, mut qp, mut be, mut sink) = setup();
+        let payload = vec![0xAB; 1024];
+        qp.sq
+            .submit(NvmeCommand::write(1, SHARABLE_NS, 10, payload.clone()))
+            .unwrap();
+        qp.sq.submit(NvmeCommand::read(2, SHARABLE_NS, 10, 1)).unwrap();
+        ctl.service_queue(SimTime::ZERO, &mut qp, PcieFunction::Host, &mut be, &mut sink);
+        let w = qp.cq.reap().unwrap();
+        assert_eq!(w.status, Status::Success);
+        let r = qp.cq.reap().unwrap();
+        assert_eq!(r.status, Status::Success);
+        assert_eq!(&r.data[..1024], &payload[..]);
+    }
+
+    #[test]
+    fn host_cannot_touch_private_namespace() {
+        let (mut ctl, mut qp, mut be, mut sink) = setup();
+        qp.sq.submit(NvmeCommand::read(1, PRIVATE_NS, 0, 0)).unwrap();
+        ctl.service_queue(SimTime::ZERO, &mut qp, PcieFunction::Host, &mut be, &mut sink);
+        assert_eq!(qp.cq.reap().unwrap().status, Status::AccessDenied);
+        // but the Virtual-FW function can
+        qp.sq.submit(NvmeCommand::read(2, PRIVATE_NS, 0, 0)).unwrap();
+        ctl.service_queue(SimTime::ZERO, &mut qp, PcieFunction::VirtualFw, &mut be, &mut sink);
+        assert_eq!(qp.cq.reap().unwrap().status, Status::Success);
+    }
+
+    #[test]
+    fn lba_out_of_range_rejected() {
+        let (mut ctl, mut qp, mut be, mut sink) = setup();
+        qp.sq
+            .submit(NvmeCommand::read(1, SHARABLE_NS, 6_999, 1))
+            .unwrap();
+        ctl.service_queue(SimTime::ZERO, &mut qp, PcieFunction::Host, &mut be, &mut sink);
+        assert_eq!(qp.cq.reap().unwrap().status, Status::LbaOutOfRange);
+    }
+
+    #[test]
+    fn transmit_frame_reaches_sink() {
+        let (mut ctl, mut qp, mut be, mut sink) = setup();
+        qp.sq
+            .submit(NvmeCommand::transmit_frame(5, 0x1000, vec![1, 2, 3]))
+            .unwrap();
+        ctl.service_queue(SimTime::ZERO, &mut qp, PcieFunction::Host, &mut be, &mut sink);
+        assert_eq!(sink.0, 1);
+        assert_eq!(qp.cq.reap().unwrap().status, Status::Success);
+    }
+
+    #[test]
+    fn receive_frames_are_held_then_completed_by_upcall() {
+        let (mut ctl, mut qp, mut be, mut sink) = setup();
+        // pre-post 4 upcall slots, as the Ether-oN driver does at init
+        for cid in 10..14 {
+            qp.sq
+                .submit(NvmeCommand::receive_frame(cid, 0x2000))
+                .unwrap();
+        }
+        ctl.service_queue(SimTime::ZERO, &mut qp, PcieFunction::Host, &mut be, &mut sink);
+        assert!(qp.cq.is_empty(), "receive frames must not complete eagerly");
+        assert_eq!(ctl.upcall_slots_free(), 4);
+
+        assert!(ctl.upcall(&mut qp, vec![9, 9]));
+        let c = qp.cq.reap().unwrap();
+        assert_eq!(c.data, vec![9, 9]);
+        assert_eq!(ctl.upcall_slots_free(), 3);
+    }
+
+    #[test]
+    fn upcall_without_slots_is_backpressured() {
+        let (mut ctl, mut qp, _, _) = setup();
+        assert!(!ctl.upcall(&mut qp, vec![1]));
+    }
+
+    #[test]
+    fn namespace_isolation_lba_bases_do_not_alias() {
+        // writes to private and sharable at the same relative LBA must not collide
+        let (mut ctl, mut qp, mut be, mut sink) = setup();
+        qp.sq
+            .submit(NvmeCommand::write(1, PRIVATE_NS, 5, vec![0x11; 512]))
+            .unwrap();
+        qp.sq
+            .submit(NvmeCommand::write(2, SHARABLE_NS, 5, vec![0x22; 512]))
+            .unwrap();
+        qp.sq.submit(NvmeCommand::read(3, PRIVATE_NS, 5, 0)).unwrap();
+        qp.sq.submit(NvmeCommand::read(4, SHARABLE_NS, 5, 0)).unwrap();
+        ctl.service_queue(
+            SimTime::ZERO,
+            &mut qp,
+            PcieFunction::VirtualFw,
+            &mut be,
+            &mut sink,
+        );
+        qp.cq.reap();
+        qp.cq.reap();
+        assert_eq!(qp.cq.reap().unwrap().data[0], 0x11);
+        assert_eq!(qp.cq.reap().unwrap().data[0], 0x22);
+    }
+}

@@ -1,0 +1,18 @@
+//! NVMe subsystem simulation (DESIGN.md S1).
+//!
+//! Models exactly the protocol surface DockerSSD builds on: paired
+//! submission/completion queues with doorbells, PRP-addressed 4KB pages,
+//! MSI completion signalling, namespaces exposed through two PCIe
+//! functions (host-facing: sharable-NS only; Virtual-FW-facing: private +
+//! sharable), and the two vendor-specific opcodes (0xE0/0xE1) Ether-oN
+//! adds for transmit/receive frames.
+
+pub mod command;
+pub mod controller;
+pub mod namespace;
+pub mod queue;
+
+pub use command::{Completion, NvmeCommand, Opcode, Status, CID};
+pub use controller::{BlockBackend, FrameSink, NvmeController, PcieFunction};
+pub use namespace::{Namespace, NamespaceId, NvmeSubsystem};
+pub use queue::{CompletionQueue, QueuePair, SubmissionQueue};

@@ -1,0 +1,138 @@
+//! NVMe namespaces and the two-PCIe-function layout of λFS (Figure 4b).
+//!
+//! The NVMe subsystem partitions the media into a *private* namespace
+//! (Virtual-FW only: image layers, container rootfs) and a *sharable*
+//! namespace (host + ISP containers).  Two PCIe functions expose them:
+//! the host-facing function sees only the sharable namespace; the
+//! Virtual-FW-facing function sees both.
+
+/// Namespace identifier (NSID 0 is invalid per spec).
+pub type NamespaceId = u32;
+
+pub const PRIVATE_NS: NamespaceId = 1;
+pub const SHARABLE_NS: NamespaceId = 2;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Namespace {
+    pub id: NamespaceId,
+    /// Capacity in logical blocks (512B units).
+    pub lba_count: u64,
+    /// Visible to the host-facing PCIe function?
+    pub host_visible: bool,
+}
+
+impl Namespace {
+    pub fn contains(&self, slba: u64, blocks: u64) -> bool {
+        slba.checked_add(blocks).map_or(false, |end| end <= self.lba_count)
+    }
+}
+
+/// The NVMe subsystem: namespace table + visibility rules per function.
+#[derive(Clone, Debug)]
+pub struct NvmeSubsystem {
+    namespaces: Vec<Namespace>,
+}
+
+impl NvmeSubsystem {
+    /// Standard DockerSSD split: `private_frac` of capacity goes to the
+    /// private namespace.
+    pub fn standard(total_lbas: u64, private_frac: f64) -> Self {
+        assert!((0.0..1.0).contains(&private_frac));
+        let private = (total_lbas as f64 * private_frac) as u64;
+        NvmeSubsystem {
+            namespaces: vec![
+                Namespace {
+                    id: PRIVATE_NS,
+                    lba_count: private,
+                    host_visible: false,
+                },
+                Namespace {
+                    id: SHARABLE_NS,
+                    lba_count: total_lbas - private,
+                    host_visible: true,
+                },
+            ],
+        }
+    }
+
+    pub fn get(&self, id: NamespaceId) -> Option<&Namespace> {
+        self.namespaces.iter().find(|n| n.id == id)
+    }
+
+    /// Namespaces visible through a PCIe function.
+    pub fn visible(&self, from_host: bool) -> Vec<&Namespace> {
+        self.namespaces
+            .iter()
+            .filter(|n| !from_host || n.host_visible)
+            .collect()
+    }
+
+    /// Access check: is `nsid` reachable from this function at all?
+    pub fn check_access(&self, nsid: NamespaceId, from_host: bool) -> bool {
+        self.get(nsid).map_or(false, |n| !from_host || n.host_visible)
+    }
+
+    /// Base offset of a namespace in the flat device LBA space (namespaces
+    /// are laid out consecutively in id order).
+    pub fn lba_base(&self, nsid: NamespaceId) -> Option<u64> {
+        let mut base = 0;
+        for n in &self.namespaces {
+            if n.id == nsid {
+                return Some(base);
+            }
+            base += n.lba_count;
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_split_partitions_capacity() {
+        let s = NvmeSubsystem::standard(1000, 0.3);
+        assert_eq!(s.get(PRIVATE_NS).unwrap().lba_count, 300);
+        assert_eq!(s.get(SHARABLE_NS).unwrap().lba_count, 700);
+    }
+
+    #[test]
+    fn host_function_sees_only_sharable() {
+        let s = NvmeSubsystem::standard(1000, 0.3);
+        let host_view = s.visible(true);
+        assert_eq!(host_view.len(), 1);
+        assert_eq!(host_view[0].id, SHARABLE_NS);
+        let fw_view = s.visible(false);
+        assert_eq!(fw_view.len(), 2);
+    }
+
+    #[test]
+    fn private_ns_denied_to_host() {
+        let s = NvmeSubsystem::standard(1000, 0.3);
+        assert!(!s.check_access(PRIVATE_NS, true));
+        assert!(s.check_access(PRIVATE_NS, false));
+        assert!(s.check_access(SHARABLE_NS, true));
+        assert!(!s.check_access(99, false)); // unknown nsid
+    }
+
+    #[test]
+    fn namespace_bounds_check() {
+        let n = Namespace {
+            id: 1,
+            lba_count: 100,
+            host_visible: true,
+        };
+        assert!(n.contains(0, 100));
+        assert!(!n.contains(1, 100));
+        assert!(!n.contains(u64::MAX, 2)); // overflow safe
+    }
+
+    #[test]
+    fn lba_bases_are_consecutive() {
+        let s = NvmeSubsystem::standard(1000, 0.3);
+        assert_eq!(s.lba_base(PRIVATE_NS), Some(0));
+        assert_eq!(s.lba_base(SHARABLE_NS), Some(300));
+        assert_eq!(s.lba_base(42), None);
+    }
+}

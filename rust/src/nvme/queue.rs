@@ -1,0 +1,185 @@
+//! Submission/completion queue rings with doorbells.
+//!
+//! Ring semantics follow the spec closely enough to expose the properties
+//! the paper relies on: bounded depth (backpressure for Ether-oN upcalls),
+//! FIFO fetch order, head/tail doorbells, and MSI-style completion
+//! notification (modeled as a counter the driver polls).
+
+use std::collections::VecDeque;
+
+use super::command::{Completion, NvmeCommand};
+
+/// Fixed-depth submission queue.  The host writes entries at the tail and
+/// rings the tail doorbell; the controller fetches from the head.
+#[derive(Debug)]
+pub struct SubmissionQueue {
+    depth: usize,
+    ring: VecDeque<NvmeCommand>,
+    /// Tail doorbell writes observed (for stats/debug).
+    pub doorbell_writes: u64,
+}
+
+impl SubmissionQueue {
+    pub fn new(depth: usize) -> Self {
+        assert!(depth >= 2, "spec requires depth >= 2");
+        SubmissionQueue {
+            depth,
+            ring: VecDeque::with_capacity(depth),
+            doorbell_writes: 0,
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.ring.len() == self.depth
+    }
+
+    /// Submit an entry and ring the doorbell. Errors when the ring is full
+    /// (the driver must back off — this is the backpressure path).
+    pub fn submit(&mut self, cmd: NvmeCommand) -> Result<(), NvmeCommand> {
+        if self.is_full() {
+            return Err(cmd);
+        }
+        self.ring.push_back(cmd);
+        self.doorbell_writes += 1;
+        Ok(())
+    }
+
+    /// Controller-side fetch from the head.
+    pub fn fetch(&mut self) -> Option<NvmeCommand> {
+        self.ring.pop_front()
+    }
+}
+
+/// Fixed-depth completion queue with an MSI counter.
+#[derive(Debug)]
+pub struct CompletionQueue {
+    depth: usize,
+    ring: VecDeque<Completion>,
+    /// Message-signaled interrupts raised (one per posted completion).
+    pub msi_count: u64,
+}
+
+impl CompletionQueue {
+    pub fn new(depth: usize) -> Self {
+        CompletionQueue {
+            depth,
+            ring: VecDeque::with_capacity(depth),
+            msi_count: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.ring.len() == self.depth
+    }
+
+    /// Controller posts a completion and raises MSI.
+    pub fn post(&mut self, c: Completion) -> Result<(), Completion> {
+        if self.is_full() {
+            return Err(c);
+        }
+        self.ring.push_back(c);
+        self.msi_count += 1;
+        Ok(())
+    }
+
+    /// Driver reaps the next completion (head doorbell implied).
+    pub fn reap(&mut self) -> Option<Completion> {
+        self.ring.pop_front()
+    }
+}
+
+/// A paired SQ/CQ as created per core by the NVMe driver.
+#[derive(Debug)]
+pub struct QueuePair {
+    pub sq: SubmissionQueue,
+    pub cq: CompletionQueue,
+    pub id: u16,
+}
+
+impl QueuePair {
+    pub fn new(id: u16, depth: usize) -> Self {
+        QueuePair {
+            sq: SubmissionQueue::new(depth),
+            cq: CompletionQueue::new(depth),
+            id,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nvme::command::{NvmeCommand, Status};
+
+    #[test]
+    fn sq_is_fifo() {
+        let mut sq = SubmissionQueue::new(8);
+        for i in 0..5u16 {
+            sq.submit(NvmeCommand::read(i, 1, i as u64, 0)).unwrap();
+        }
+        for i in 0..5u16 {
+            assert_eq!(sq.fetch().unwrap().cid, i);
+        }
+        assert!(sq.fetch().is_none());
+    }
+
+    #[test]
+    fn sq_full_applies_backpressure() {
+        let mut sq = SubmissionQueue::new(2);
+        sq.submit(NvmeCommand::read(0, 1, 0, 0)).unwrap();
+        sq.submit(NvmeCommand::read(1, 1, 0, 0)).unwrap();
+        let rejected = sq.submit(NvmeCommand::read(2, 1, 0, 0));
+        assert!(rejected.is_err());
+        assert_eq!(rejected.unwrap_err().cid, 2);
+        // draining frees a slot
+        sq.fetch();
+        assert!(sq.submit(NvmeCommand::read(3, 1, 0, 0)).is_ok());
+    }
+
+    #[test]
+    fn doorbell_counts_submissions() {
+        let mut sq = SubmissionQueue::new(4);
+        for i in 0..3u16 {
+            sq.submit(NvmeCommand::read(i, 1, 0, 0)).unwrap();
+        }
+        assert_eq!(sq.doorbell_writes, 3);
+    }
+
+    #[test]
+    fn cq_raises_msi_per_completion() {
+        let mut cq = CompletionQueue::new(4);
+        cq.post(Completion::ok(7)).unwrap();
+        cq.post(Completion::err(8, Status::LbaOutOfRange)).unwrap();
+        assert_eq!(cq.msi_count, 2);
+        assert_eq!(cq.reap().unwrap().cid, 7);
+        let c = cq.reap().unwrap();
+        assert_eq!(c.cid, 8);
+        assert_eq!(c.status, Status::LbaOutOfRange);
+    }
+
+    #[test]
+    #[should_panic]
+    fn sq_depth_must_be_at_least_two() {
+        SubmissionQueue::new(1);
+    }
+}

@@ -1,0 +1,10 @@
+//! Computing-enabled storage pool (DESIGN.md S9, paper "RESOURCE
+//! DISAGGREGATION"): DockerSSDs disaggregated from their hosts behind
+//! PCIe switches, each with its own IP, orchestrated like a
+//! docker-compose/Kubernetes deployment.
+
+pub mod orchestrator;
+pub mod topology;
+
+pub use orchestrator::{DeploymentSpec, Orchestrator, RestartPolicy};
+pub use topology::{NodeId, PoolNode, PoolTopology};

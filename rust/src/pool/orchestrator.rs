@@ -1,0 +1,229 @@
+//! Container orchestration over the pool — the docker-compose/Kubernetes
+//! role in the paper's distributed-inference deployment: place container
+//! replicas on healthy nodes, monitor them through mini-docker logs,
+//! restart per policy.
+
+use std::collections::HashMap;
+
+use super::topology::{NodeId, PoolTopology};
+
+/// Restart policy (compose-like).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RestartPolicy {
+    Never,
+    OnFailure,
+    Always,
+}
+
+/// A deployment request: run `replicas` containers of `image` across the
+/// pool.
+#[derive(Clone, Debug)]
+pub struct DeploymentSpec {
+    pub name: String,
+    pub image: String,
+    pub replicas: u32,
+    pub restart: RestartPolicy,
+}
+
+/// One placed replica.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Placement {
+    pub deployment: String,
+    pub replica: u32,
+    pub node: NodeId,
+    pub running: bool,
+    pub restarts: u32,
+}
+
+/// The orchestrator state.
+#[derive(Default)]
+pub struct Orchestrator {
+    placements: Vec<Placement>,
+    load: HashMap<NodeId, u32>,
+}
+
+impl Orchestrator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Place replicas on the least-loaded healthy nodes (spread strategy).
+    /// Fails if there are no healthy nodes.
+    pub fn deploy(&mut self, topo: &PoolTopology, spec: &DeploymentSpec) -> Result<Vec<NodeId>, String> {
+        let mut healthy: Vec<NodeId> = topo.healthy_nodes().map(|n| n.id).collect();
+        if healthy.is_empty() {
+            return Err("no healthy nodes".into());
+        }
+        let mut placed = Vec::new();
+        for r in 0..spec.replicas {
+            healthy.sort_by_key(|id| (self.load.get(id).copied().unwrap_or(0), *id));
+            let node = healthy[0];
+            *self.load.entry(node).or_insert(0) += 1;
+            self.placements.push(Placement {
+                deployment: spec.name.clone(),
+                replica: r,
+                node,
+                running: true,
+                restarts: 0,
+            });
+            placed.push(node);
+        }
+        Ok(placed)
+    }
+
+    pub fn placements(&self, deployment: &str) -> Vec<&Placement> {
+        self.placements
+            .iter()
+            .filter(|p| p.deployment == deployment)
+            .collect()
+    }
+
+    pub fn load_of(&self, node: NodeId) -> u32 {
+        self.load.get(&node).copied().unwrap_or(0)
+    }
+
+    /// A replica died (container exited / node fault).  Applies the
+    /// restart policy; returns true if it was restarted (possibly moved).
+    pub fn replica_failed(
+        &mut self,
+        topo: &PoolTopology,
+        deployment: &str,
+        replica: u32,
+        policy: RestartPolicy,
+    ) -> bool {
+        let Some(idx) = self
+            .placements
+            .iter()
+            .position(|p| p.deployment == deployment && p.replica == replica)
+        else {
+            return false;
+        };
+        let node = self.placements[idx].node;
+        self.placements[idx].running = false;
+        if policy == RestartPolicy::Never {
+            return false;
+        }
+        // restart on the same node if healthy, else move to least-loaded
+        let target = if topo.node(node).map_or(false, |n| n.healthy) {
+            node
+        } else {
+            *self.load.entry(node).or_insert(1) -= 1;
+            let mut healthy: Vec<NodeId> = topo.healthy_nodes().map(|n| n.id).collect();
+            if healthy.is_empty() {
+                return false;
+            }
+            healthy.sort_by_key(|id| (self.load.get(id).copied().unwrap_or(0), *id));
+            let t = healthy[0];
+            *self.load.entry(t).or_insert(0) += 1;
+            t
+        };
+        let p = &mut self.placements[idx];
+        p.node = target;
+        p.running = true;
+        p.restarts += 1;
+        true
+    }
+
+    /// Replicas running per deployment (health summary the host monitors
+    /// via mini-docker logs).
+    pub fn running_count(&self, deployment: &str) -> u32 {
+        self.placements
+            .iter()
+            .filter(|p| p.deployment == deployment && p.running)
+            .count() as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PoolConfig;
+
+    fn topo(n: u32) -> PoolTopology {
+        PoolTopology::build(&PoolConfig {
+            nodes_per_array: n,
+            arrays: 1,
+            ..Default::default()
+        })
+    }
+
+    fn spec(name: &str, replicas: u32) -> DeploymentSpec {
+        DeploymentSpec {
+            name: name.into(),
+            image: "llm-worker".into(),
+            replicas,
+            restart: RestartPolicy::OnFailure,
+        }
+    }
+
+    #[test]
+    fn deploy_spreads_across_nodes() {
+        let t = topo(4);
+        let mut orch = Orchestrator::new();
+        let placed = orch.deploy(&t, &spec("infer", 4)).unwrap();
+        let mut sorted = placed.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 4, "replicas should spread: {placed:?}");
+    }
+
+    #[test]
+    fn deploy_balances_load_with_more_replicas_than_nodes() {
+        let t = topo(4);
+        let mut orch = Orchestrator::new();
+        orch.deploy(&t, &spec("infer", 8)).unwrap();
+        for n in 0..4 {
+            assert_eq!(orch.load_of(n), 2, "node {n}");
+        }
+    }
+
+    #[test]
+    fn deploy_avoids_unhealthy_nodes() {
+        let mut t = topo(4);
+        t.node_mut(0).unwrap().healthy = false;
+        let mut orch = Orchestrator::new();
+        let placed = orch.deploy(&t, &spec("infer", 3)).unwrap();
+        assert!(!placed.contains(&0));
+    }
+
+    #[test]
+    fn deploy_fails_with_no_healthy_nodes() {
+        let mut t = topo(2);
+        t.node_mut(0).unwrap().healthy = false;
+        t.node_mut(1).unwrap().healthy = false;
+        let mut orch = Orchestrator::new();
+        assert!(orch.deploy(&t, &spec("infer", 1)).is_err());
+    }
+
+    #[test]
+    fn failed_replica_restarts_in_place() {
+        let t = topo(2);
+        let mut orch = Orchestrator::new();
+        orch.deploy(&t, &spec("infer", 2)).unwrap();
+        assert!(orch.replica_failed(&t, "infer", 0, RestartPolicy::OnFailure));
+        let p = orch.placements("infer");
+        assert_eq!(p[0].restarts, 1);
+        assert!(p[0].running);
+    }
+
+    #[test]
+    fn failed_replica_moves_off_unhealthy_node() {
+        let mut t = topo(2);
+        let mut orch = Orchestrator::new();
+        orch.deploy(&t, &spec("infer", 1)).unwrap();
+        let original = orch.placements("infer")[0].node;
+        t.node_mut(original).unwrap().healthy = false;
+        assert!(orch.replica_failed(&t, "infer", 0, RestartPolicy::Always));
+        let moved = orch.placements("infer")[0].node;
+        assert_ne!(moved, original);
+    }
+
+    #[test]
+    fn never_policy_leaves_replica_down() {
+        let t = topo(2);
+        let mut orch = Orchestrator::new();
+        orch.deploy(&t, &spec("infer", 2)).unwrap();
+        assert!(!orch.replica_failed(&t, "infer", 1, RestartPolicy::Never));
+        assert_eq!(orch.running_count("infer"), 1);
+    }
+}

@@ -1,0 +1,151 @@
+//! Pool topology: arrays of DockerSSDs behind PCIe switches, integrated
+//! into a cluster by a switch tray (Figure 8a).  Ether-oN assigns each
+//! node an IP on the intranet regardless of PCIe position.
+
+use std::net::Ipv4Addr;
+
+use crate::config::PoolConfig;
+use crate::etheron::MacAddr;
+use crate::util::SimTime;
+
+pub type NodeId = u32;
+
+/// One DockerSSD node in the pool.
+#[derive(Clone, Debug)]
+pub struct PoolNode {
+    pub id: NodeId,
+    pub array: u32,
+    pub ip: Ipv4Addr,
+    pub mac: MacAddr,
+    pub healthy: bool,
+}
+
+/// The cluster topology.
+pub struct PoolTopology {
+    cfg: PoolConfig,
+    nodes: Vec<PoolNode>,
+}
+
+impl PoolTopology {
+    /// Build the paper's layout: `arrays` PCIe switches with
+    /// `nodes_per_array` DockerSSDs each; IPs assigned 10.77.<array>.<idx>.
+    pub fn build(cfg: &PoolConfig) -> Self {
+        let mut nodes = Vec::new();
+        for a in 0..cfg.arrays {
+            for i in 0..cfg.nodes_per_array {
+                let id = a * cfg.nodes_per_array + i;
+                nodes.push(PoolNode {
+                    id,
+                    array: a,
+                    ip: Ipv4Addr::new(10, 77, a as u8, (i + 1) as u8),
+                    mac: MacAddr::for_node(id),
+                    healthy: true,
+                });
+            }
+        }
+        PoolTopology {
+            cfg: cfg.clone(),
+            nodes,
+        }
+    }
+
+    pub fn nodes(&self) -> &[PoolNode] {
+        &self.nodes
+    }
+
+    pub fn node(&self, id: NodeId) -> Option<&PoolNode> {
+        self.nodes.get(id as usize)
+    }
+
+    pub fn node_mut(&mut self, id: NodeId) -> Option<&mut PoolNode> {
+        self.nodes.get_mut(id as usize)
+    }
+
+    pub fn healthy_nodes(&self) -> impl Iterator<Item = &PoolNode> {
+        self.nodes.iter().filter(|n| n.healthy)
+    }
+
+    /// PCIe hop count between two endpoints: same array = 1 switch; cross
+    /// array = 2 switches + the tray.
+    pub fn hops(&self, a: NodeId, b: NodeId) -> u32 {
+        match (self.node(a), self.node(b)) {
+            (Some(x), Some(y)) if x.array == y.array => 1,
+            (Some(_), Some(_)) => 3,
+            _ => 0,
+        }
+    }
+
+    /// Host -> node hop count (host hangs off the tray: 2 hops to any node).
+    pub fn host_hops(&self, _n: NodeId) -> u32 {
+        2
+    }
+
+    /// Latency to move `bytes` from node `a` to node `b`.
+    pub fn link_time(&self, a: NodeId, b: NodeId, bytes: u64) -> SimTime {
+        let hops = self.hops(a, b) as u64;
+        let wire = bytes as f64 / self.cfg.link_gbps; // ns (GB/s == B/ns)
+        SimTime::ns(hops * self.cfg.switch_hop_ns + wire as u64)
+    }
+
+    /// Latency from the host to node `n`.
+    pub fn host_link_time(&self, n: NodeId, bytes: u64) -> SimTime {
+        let hops = self.host_hops(n) as u64;
+        let wire = bytes as f64 / self.cfg.link_gbps;
+        SimTime::ns(hops * self.cfg.switch_hop_ns + wire as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(nodes: u32, arrays: u32) -> PoolConfig {
+        PoolConfig {
+            nodes_per_array: nodes,
+            arrays,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn builds_requested_node_count() {
+        let t = PoolTopology::build(&cfg(16, 2));
+        assert_eq!(t.nodes().len(), 32);
+    }
+
+    #[test]
+    fn ips_and_macs_unique() {
+        let t = PoolTopology::build(&cfg(16, 4));
+        let mut ips: Vec<_> = t.nodes().iter().map(|n| n.ip).collect();
+        let mut macs: Vec<_> = t.nodes().iter().map(|n| n.mac).collect();
+        ips.sort();
+        ips.dedup();
+        macs.sort_by_key(|m| m.0);
+        macs.dedup();
+        assert_eq!(ips.len(), 64);
+        assert_eq!(macs.len(), 64);
+    }
+
+    #[test]
+    fn intra_array_cheaper_than_cross_array() {
+        let t = PoolTopology::build(&cfg(4, 2));
+        let intra = t.link_time(0, 1, 4096);
+        let cross = t.link_time(0, 5, 4096);
+        assert!(cross > intra);
+        assert_eq!(t.hops(0, 1), 1);
+        assert_eq!(t.hops(0, 5), 3);
+    }
+
+    #[test]
+    fn link_time_scales_with_bytes() {
+        let t = PoolTopology::build(&cfg(4, 1));
+        assert!(t.link_time(0, 1, 1 << 20) > t.link_time(0, 1, 1 << 10));
+    }
+
+    #[test]
+    fn health_filtering() {
+        let mut t = PoolTopology::build(&cfg(4, 1));
+        t.node_mut(2).unwrap().healthy = false;
+        assert_eq!(t.healthy_nodes().count(), 3);
+    }
+}

@@ -1,0 +1,339 @@
+//! Page-mapped flash translation layer with greedy garbage collection.
+//!
+//! LBA-page (LPN) -> physical page (PPA) mapping, channel-striped write
+//! allocation for parallelism, per-block valid-page bookkeeping, and a
+//! greedy (min-valid) GC victim policy — the standard composition the
+//! paper's SimpleSSD backend implements.
+
+use crate::config::SsdConfig;
+
+/// Physical page address.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Ppa {
+    pub channel: u32,
+    pub package: u32,
+    pub block: u32,
+    pub page: u32,
+}
+
+impl Ppa {
+    pub fn package_index(&self, cfg: &SsdConfig) -> usize {
+        (self.channel * cfg.packages_per_channel + self.package) as usize
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FtlStats {
+    pub maps: u64,
+    pub remaps: u64,
+    pub gc_runs: u64,
+    pub gc_moved_pages: u64,
+}
+
+/// Per-block state.
+#[derive(Clone, Debug)]
+struct BlockState {
+    /// lpn stored in each page slot (None = free or invalidated).
+    slots: Vec<Option<u64>>,
+    /// next free page slot (append-only within a block).
+    write_ptr: u32,
+    valid: u32,
+    erased: bool,
+}
+
+impl BlockState {
+    fn new(pages: u32) -> Self {
+        BlockState {
+            slots: vec![None; pages as usize],
+            write_ptr: 0,
+            valid: 0,
+            erased: true,
+        }
+    }
+
+    fn full(&self) -> bool {
+        self.write_ptr as usize >= self.slots.len()
+    }
+}
+
+/// The FTL proper.
+pub struct Ftl {
+    cfg: SsdConfig,
+    /// LPN -> PPA map (sparse).
+    map: std::collections::HashMap<u64, Ppa>,
+    /// [package][block] state.
+    blocks: Vec<Vec<BlockState>>,
+    /// Active (open) block per package for write striping.
+    open_block: Vec<Option<u32>>,
+    /// Round-robin write pointer over packages.
+    next_pkg: usize,
+    /// Incrementally-maintained count of fresh (erased, unopened) blocks —
+    /// O(1) needs_gc() instead of scanning ~100K block states per write
+    /// (EXPERIMENTS.md §Perf, L3 iteration 1).
+    free_count: usize,
+    pub stats: FtlStats,
+}
+
+impl Ftl {
+    pub fn new(cfg: &SsdConfig) -> Self {
+        let npkg = cfg.total_packages() as usize;
+        Ftl {
+            blocks: (0..npkg)
+                .map(|_| {
+                    (0..cfg.blocks_per_package)
+                        .map(|_| BlockState::new(cfg.pages_per_block))
+                        .collect()
+                })
+                .collect(),
+            open_block: vec![None; npkg],
+            next_pkg: 0,
+            free_count: npkg * cfg.blocks_per_package as usize,
+            map: Default::default(),
+            cfg: cfg.clone(),
+            stats: FtlStats::default(),
+        }
+    }
+
+    fn pkg_to_ppa(&self, pkg: usize, block: u32, page: u32) -> Ppa {
+        let per = self.cfg.packages_per_channel;
+        Ppa {
+            channel: pkg as u32 / per,
+            package: pkg as u32 % per,
+            block,
+            page,
+        }
+    }
+
+    /// Total free (erased, unopened) blocks across packages (O(1)).
+    pub fn free_blocks(&self) -> usize {
+        self.free_count
+    }
+
+    #[cfg(test)]
+    fn free_blocks_scan(&self) -> usize {
+        self.blocks
+            .iter()
+            .flatten()
+            .filter(|b| b.erased && b.write_ptr == 0)
+            .count()
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.blocks.iter().map(|p| p.len()).sum()
+    }
+
+    pub fn needs_gc(&self) -> bool {
+        (self.free_blocks() as f64) < self.cfg.gc_threshold * self.total_blocks() as f64
+    }
+
+    /// Translate an LPN, mapping it (as if on first write) when absent.
+    pub fn translate_or_map(&mut self, lpn: u64) -> Ppa {
+        if let Some(&ppa) = self.map.get(&lpn) {
+            return ppa;
+        }
+        self.map_write(lpn)
+    }
+
+    /// Allocate a fresh physical page for (over)writing `lpn`, invalidating
+    /// any previous mapping.  Round-robin striping across packages keeps
+    /// the channels busy in parallel.
+    pub fn map_write(&mut self, lpn: u64) -> Ppa {
+        // invalidate old location
+        if let Some(old) = self.map.remove(&lpn) {
+            let pkg = old.package_index(&self.cfg);
+            let b = &mut self.blocks[pkg][old.block as usize];
+            if b.slots[old.page as usize] == Some(lpn) {
+                b.slots[old.page as usize] = None;
+                b.valid -= 1;
+            }
+            self.stats.remaps += 1;
+        } else {
+            self.stats.maps += 1;
+        }
+
+        let npkg = self.blocks.len();
+        for _ in 0..npkg {
+            let pkg = self.next_pkg;
+            self.next_pkg = (self.next_pkg + 1) % npkg;
+            if let Some(ppa) = self.try_append(pkg, lpn) {
+                self.map.insert(lpn, ppa);
+                return ppa;
+            }
+        }
+        panic!("FTL out of space: no package has a writable block (GC starvation)");
+    }
+
+    /// Try appending to `pkg`'s open block, opening a new one if needed.
+    fn try_append(&mut self, pkg: usize, lpn: u64) -> Option<Ppa> {
+        // close the open block if full
+        if let Some(ob) = self.open_block[pkg] {
+            if self.blocks[pkg][ob as usize].full() {
+                self.open_block[pkg] = None;
+            }
+        }
+        if self.open_block[pkg].is_none() {
+            let fresh = self.blocks[pkg]
+                .iter()
+                .position(|b| b.erased && b.write_ptr == 0)?;
+            self.open_block[pkg] = Some(fresh as u32);
+            self.blocks[pkg][fresh].erased = false;
+            self.free_count -= 1;
+        }
+        let ob = self.open_block[pkg].unwrap();
+        let block = &mut self.blocks[pkg][ob as usize];
+        let page = block.write_ptr;
+        block.slots[page as usize] = Some(lpn);
+        block.write_ptr += 1;
+        block.valid += 1;
+        Some(self.pkg_to_ppa(pkg, ob, page))
+    }
+
+    /// Greedy victim selection: the *closed* block with the fewest valid
+    /// pages.  Returns (victim ppa, valid LPNs to relocate).
+    pub fn pick_gc_victim(&mut self) -> Option<(Ppa, Vec<u64>)> {
+        let mut best: Option<(usize, usize, u32)> = None; // (pkg, block, valid)
+        for (pkg, blocks) in self.blocks.iter().enumerate() {
+            for (bi, b) in blocks.iter().enumerate() {
+                let open = self.open_block[pkg] == Some(bi as u32);
+                if b.erased || open || !b.full() {
+                    continue;
+                }
+                if best.map_or(true, |(_, _, v)| b.valid < v) {
+                    best = Some((pkg, bi, b.valid));
+                }
+            }
+        }
+        let (pkg, bi, _) = best?;
+        self.stats.gc_runs += 1;
+        let valid: Vec<u64> = self.blocks[pkg][bi]
+            .slots
+            .iter()
+            .flatten()
+            .copied()
+            .collect();
+        self.stats.gc_moved_pages += valid.len() as u64;
+        Some((self.pkg_to_ppa(pkg, bi as u32, 0), valid))
+    }
+
+    /// Mark a GC'd block erased (called after relocation completes).
+    pub fn finish_gc(&mut self, victim: Ppa) {
+        let pkg = victim.package_index(&self.cfg);
+        let b = &mut self.blocks[pkg][victim.block as usize];
+        // relocated LPNs were remapped by map_write; drop any stragglers
+        *b = BlockState::new(self.cfg.pages_per_block);
+        self.free_count += 1;
+        if self.open_block[pkg] == Some(victim.block) {
+            self.open_block[pkg] = None;
+        }
+    }
+
+    pub fn mapped_pages(&self) -> usize {
+        self.map.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SsdConfig {
+        SsdConfig {
+            channels: 2,
+            packages_per_channel: 2,
+            blocks_per_package: 8,
+            pages_per_block: 16,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn read_after_write_maps_to_same_ppa() {
+        let mut ftl = Ftl::new(&cfg());
+        let w = ftl.map_write(7);
+        assert_eq!(ftl.translate_or_map(7), w);
+    }
+
+    #[test]
+    fn overwrite_moves_and_invalidates() {
+        let mut ftl = Ftl::new(&cfg());
+        let a = ftl.map_write(7);
+        let b = ftl.map_write(7);
+        assert_ne!(a, b);
+        assert_eq!(ftl.translate_or_map(7), b);
+        assert_eq!(ftl.stats.remaps, 1);
+        assert_eq!(ftl.mapped_pages(), 1);
+    }
+
+    #[test]
+    fn writes_stripe_across_packages() {
+        let mut ftl = Ftl::new(&cfg());
+        let ppas: Vec<Ppa> = (0..4).map(|l| ftl.map_write(l)).collect();
+        let pkgs: std::collections::HashSet<usize> =
+            ppas.iter().map(|p| p.package_index(&cfg())).collect();
+        assert_eq!(pkgs.len(), 4, "4 writes should hit 4 distinct packages");
+    }
+
+    #[test]
+    fn gc_victim_is_min_valid_closed_block() {
+        let c = cfg();
+        let mut ftl = Ftl::new(&c);
+        // fill two blocks' worth in one package pattern, then invalidate most of one
+        let total = (c.pages_per_block * 8) as u64;
+        for l in 0..total {
+            ftl.map_write(l);
+        }
+        // overwrite most LPNs that landed in early blocks
+        for l in 0..total / 2 {
+            ftl.map_write(l);
+        }
+        let (victim, valid) = ftl.pick_gc_victim().expect("victim exists");
+        // victim must be a closed block with minimal valid count
+        assert!(valid.len() < c.pages_per_block as usize);
+        ftl.finish_gc(victim);
+        assert!(ftl.free_blocks() > 0);
+    }
+
+    #[test]
+    fn free_count_matches_scan_through_gc_cycles() {
+        let c = cfg();
+        let mut ftl = Ftl::new(&c);
+        assert_eq!(ftl.free_blocks(), ftl.free_blocks_scan());
+        let total = (c.pages_per_block * 20) as u64;
+        for l in 0..total {
+            ftl.map_write(l % 97);
+            if ftl.needs_gc() {
+                if let Some((victim, valid)) = ftl.pick_gc_victim() {
+                    for lpn in valid {
+                        ftl.map_write(lpn);
+                    }
+                    ftl.finish_gc(victim);
+                }
+            }
+            assert_eq!(ftl.free_blocks(), ftl.free_blocks_scan());
+        }
+    }
+
+    #[test]
+    fn gc_threshold_detection() {
+        let c = cfg();
+        let mut ftl = Ftl::new(&c);
+        assert!(!ftl.needs_gc());
+        // consume nearly all blocks
+        let total_pages = (c.pages_per_block * c.blocks_per_package * 4) as u64;
+        for l in 0..(total_pages as f64 * 0.97) as u64 {
+            ftl.map_write(l);
+        }
+        assert!(ftl.needs_gc());
+    }
+
+    #[test]
+    #[should_panic(expected = "FTL out of space")]
+    fn exhaustion_without_gc_panics() {
+        let c = cfg();
+        let mut ftl = Ftl::new(&c);
+        let total_pages = (c.pages_per_block * c.blocks_per_package * 4) as u64;
+        for l in 0..total_pages + 1 {
+            ftl.map_write(l); // never overwrites, never GCs
+        }
+    }
+}

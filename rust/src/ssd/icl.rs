@@ -1,0 +1,203 @@
+//! ICL — internal cache layer: set-associative write-back DRAM cache in
+//! front of the FTL ("the ICL relocates data to internal DRAM,
+//! functioning as a memory cache").
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IclStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub dirty_evictions: u64,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Line {
+    lpn: u64,
+    dirty: bool,
+    /// LRU stamp (bigger = more recent).
+    stamp: u64,
+}
+
+/// Set-associative cache keyed by logical page number.
+pub struct Icl {
+    sets: Vec<Vec<Line>>,
+    ways: usize,
+    tick: u64,
+    pub stats: IclStats,
+}
+
+impl Icl {
+    /// `capacity_pages` total lines across `ways`-way sets.
+    pub fn new(capacity_pages: u64, ways: usize) -> Self {
+        let nsets = ((capacity_pages as usize) / ways).max(1);
+        Icl {
+            sets: vec![Vec::with_capacity(ways); nsets],
+            ways,
+            tick: 0,
+            stats: IclStats::default(),
+        }
+    }
+
+    fn set_of(&self, lpn: u64) -> usize {
+        // multiplicative hash spreads sequential LPNs across sets
+        (lpn.wrapping_mul(0x9E3779B97F4A7C15) >> 32) as usize % self.sets.len()
+    }
+
+    /// Probe the cache. Returns true on hit (updating LRU and dirtiness).
+    pub fn access(&mut self, lpn: u64, write: bool) -> bool {
+        self.tick += 1;
+        let tick = self.tick;
+        let set = self.set_of(lpn);
+        if let Some(line) = self.sets[set].iter_mut().find(|l| l.lpn == lpn) {
+            line.stamp = tick;
+            line.dirty |= write;
+            self.stats.hits += 1;
+            true
+        } else {
+            self.stats.misses += 1;
+            false
+        }
+    }
+
+    /// Insert `lpn` after a miss.  Returns the evicted dirty LPN, if any
+    /// (the caller must program it to flash).
+    pub fn fill(&mut self, lpn: u64, dirty: bool) -> Option<u64> {
+        self.tick += 1;
+        let tick = self.tick;
+        let set_idx = self.set_of(lpn);
+        let ways = self.ways;
+        let set = &mut self.sets[set_idx];
+        if let Some(line) = set.iter_mut().find(|l| l.lpn == lpn) {
+            line.dirty |= dirty;
+            line.stamp = tick;
+            return None;
+        }
+        if set.len() < ways {
+            set.push(Line {
+                lpn,
+                dirty,
+                stamp: tick,
+            });
+            return None;
+        }
+        // evict LRU
+        let (idx, _) = set
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, l)| l.stamp)
+            .expect("set non-empty");
+        let victim = set[idx];
+        set[idx] = Line {
+            lpn,
+            dirty,
+            stamp: tick,
+        };
+        if victim.dirty {
+            self.stats.dirty_evictions += 1;
+            Some(victim.lpn)
+        } else {
+            None
+        }
+    }
+
+    /// Remove and return all dirty LPNs (flush path).
+    pub fn drain_dirty(&mut self) -> Vec<u64> {
+        let mut out = Vec::new();
+        for set in &mut self.sets {
+            for line in set.iter_mut() {
+                if line.dirty {
+                    line.dirty = false;
+                    out.push(line.lpn);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.stats.hits + self.stats.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.stats.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_after_fill() {
+        let mut icl = Icl::new(64, 8);
+        assert!(!icl.access(42, false));
+        icl.fill(42, false);
+        assert!(icl.access(42, false));
+    }
+
+    #[test]
+    fn lru_eviction_within_set() {
+        let mut icl = Icl::new(8, 8); // single set of 8 ways (8/8 = 1 set)
+        for lpn in 0..8 {
+            icl.fill(lpn, false);
+        }
+        // touch 0..7 except 3 -> 3 becomes LRU
+        for lpn in [0u64, 1, 2, 4, 5, 6, 7] {
+            icl.access(lpn, false);
+        }
+        icl.fill(100, false);
+        assert!(!icl.access(3, false), "LRU line should be gone");
+        assert!(icl.access(100, false));
+    }
+
+    #[test]
+    fn dirty_eviction_returned() {
+        let mut icl = Icl::new(8, 8);
+        for lpn in 0..8 {
+            icl.fill(lpn, true);
+        }
+        let evicted = icl.fill(99, false);
+        assert!(evicted.is_some());
+        assert_eq!(icl.stats.dirty_evictions, 1);
+    }
+
+    #[test]
+    fn clean_eviction_returns_none() {
+        let mut icl = Icl::new(8, 8);
+        for lpn in 0..8 {
+            icl.fill(lpn, false);
+        }
+        assert_eq!(icl.fill(99, false), None);
+    }
+
+    #[test]
+    fn drain_dirty_then_clean() {
+        let mut icl = Icl::new(64, 8);
+        icl.fill(1, true);
+        icl.fill(2, false);
+        icl.fill(3, true);
+        let mut dirty = icl.drain_dirty();
+        dirty.sort();
+        assert_eq!(dirty, vec![1, 3]);
+        assert!(icl.drain_dirty().is_empty());
+    }
+
+    #[test]
+    fn double_fill_updates_not_duplicates() {
+        let mut icl = Icl::new(64, 8);
+        icl.fill(5, false);
+        icl.fill(5, true); // now dirty
+        let dirty = icl.drain_dirty();
+        assert_eq!(dirty, vec![5]);
+    }
+
+    #[test]
+    fn hit_rate_tracks() {
+        let mut icl = Icl::new(64, 8);
+        icl.fill(1, false);
+        icl.access(1, false);
+        icl.access(1, false);
+        icl.access(2, false); // miss
+        assert!((icl.hit_rate() - 2.0 / 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,234 @@
+//! Shared primitives: simulated time, deterministic PRNG, byte helpers.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// Simulated time in nanoseconds. All substrate latencies compose in this
+/// unit; `as_secs_f64` converts for reporting.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default, Hash)]
+pub struct SimTime(pub u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+
+    pub fn ns(n: u64) -> Self {
+        SimTime(n)
+    }
+    pub fn us(n: u64) -> Self {
+        SimTime(n * 1_000)
+    }
+    pub fn ms(n: u64) -> Self {
+        SimTime(n * 1_000_000)
+    }
+    pub fn secs_f64(s: f64) -> Self {
+        SimTime((s * 1e9) as u64)
+    }
+    pub fn as_ns(self) -> u64 {
+        self.0
+    }
+    pub fn as_us_f64(self) -> f64 {
+        self.0 as f64 / 1e3
+    }
+    pub fn as_ms_f64(self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+    pub fn saturating_sub(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.saturating_sub(rhs.0))
+    }
+    pub fn max(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.max(rhs.0))
+    }
+    pub fn scale(self, f: f64) -> SimTime {
+        SimTime((self.0 as f64 * f) as u64)
+    }
+}
+
+impl Add for SimTime {
+    type Output = SimTime;
+    fn add(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for SimTime {
+    fn add_assign(&mut self, rhs: SimTime) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for SimTime {
+    type Output = SimTime;
+    fn sub(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0 - rhs.0)
+    }
+}
+
+impl fmt::Debug for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0 >= 1_000_000_000 {
+            write!(f, "{:.3}s", self.as_secs_f64())
+        } else if self.0 >= 1_000_000 {
+            write!(f, "{:.3}ms", self.as_ms_f64())
+        } else if self.0 >= 1_000 {
+            write!(f, "{:.3}us", self.as_us_f64())
+        } else {
+            write!(f, "{}ns", self.0)
+        }
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self, f)
+    }
+}
+
+/// SplitMix64: tiny, fast, deterministic PRNG for workload generation.
+/// (We avoid the `rand` crate to keep the dependency graph small; the
+/// simulator needs reproducibility, not cryptographic quality.)
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng {
+            state: seed.wrapping_add(0x9E3779B97F4A7C15),
+        }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, bound)`. `bound` must be nonzero.
+    pub fn below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0);
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(hi > lo);
+        lo + self.below(hi - lo)
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Skewed pick in `[0, n)` — hot keys for cache behaviour.
+    pub fn zipf(&mut self, n: u64, skew: f64) -> u64 {
+        let u = self.f64().max(1e-12);
+        let x = (n as f64) * u.powf(skew.max(1.0));
+        (x as u64).min(n - 1)
+    }
+}
+
+/// FNV-1a 64-bit hash — content digests for docker blobs.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Human-readable byte size.
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut i = 0;
+    while v >= 1024.0 && i < UNITS.len() - 1 {
+        v /= 1024.0;
+        i += 1;
+    }
+    if i == 0 {
+        format!("{}{}", n, UNITS[0])
+    } else {
+        format!("{:.1}{}", v, UNITS[i])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simtime_units_compose() {
+        assert_eq!(SimTime::us(1), SimTime::ns(1000));
+        assert_eq!(SimTime::ms(1), SimTime::us(1000));
+        assert_eq!(SimTime::ms(2) + SimTime::us(500), SimTime::us(2500));
+        assert!((SimTime::secs_f64(1.5).as_secs_f64() - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn simtime_saturating_sub() {
+        assert_eq!(SimTime::ns(5).saturating_sub(SimTime::ns(10)), SimTime::ZERO);
+        assert_eq!(SimTime::ns(10).saturating_sub(SimTime::ns(4)), SimTime::ns(6));
+    }
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_below_respects_bound() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            assert!(r.below(13) < 13);
+        }
+    }
+
+    #[test]
+    fn rng_f64_in_unit_interval() {
+        let mut r = Rng::new(9);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn zipf_is_skewed_toward_zero() {
+        let mut r = Rng::new(11);
+        let mut low = 0u64;
+        let n = 100_000;
+        for _ in 0..n {
+            if r.zipf(1000, 2.0) < 100 {
+                low += 1;
+            }
+        }
+        assert!(low > n / 5, "low={low}");
+    }
+
+    #[test]
+    fn fnv_distinguishes_content() {
+        assert_ne!(fnv1a(b"hello"), fnv1a(b"world"));
+        assert_eq!(fnv1a(b"same"), fnv1a(b"same"));
+    }
+
+    #[test]
+    fn human_bytes_formats() {
+        assert_eq!(human_bytes(512), "512B");
+        assert_eq!(human_bytes(2048), "2.0KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.0MiB");
+    }
+}

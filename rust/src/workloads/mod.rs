@@ -1,0 +1,10 @@
+//! Workload suite (DESIGN.md S8): the six benchmarks / 13 workloads of
+//! Table 2, as both (a) characteristic vectors driving the latency models
+//! of Figure 3/11 and (b) deterministic operation-trace generators that
+//! exercise the substrates (λFS, SSD, TCP) with real operations.
+
+pub mod spec;
+pub mod trace;
+
+pub use spec::{all_workloads, Benchmark, WorkloadSpec};
+pub use trace::{Op, TraceGenerator};

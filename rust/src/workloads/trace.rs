@@ -1,0 +1,180 @@
+//! Deterministic operation-trace generation from a WorkloadSpec.
+//!
+//! A trace is a scaled-down, statistically faithful stream of operations
+//! (reads, writes, opens, path walks, syscalls, TCP packets) whose *mix*
+//! matches the Table 2 row.  The integration tests and the `isp_workloads`
+//! example replay traces against the real substrates (λFS + SSD + TCP
+//! stacks) instead of trusting the analytic models blindly.
+
+use crate::util::Rng;
+
+use super::spec::WorkloadSpec;
+
+/// One operation in a replayable trace.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Op {
+    /// Open (and path-walk) a file by index.
+    Open { file: u64 },
+    /// Read `bytes` from open file `file`.
+    Read { file: u64, bytes: u64 },
+    /// Write `bytes` to open file `file`.
+    Write { file: u64, bytes: u64 },
+    /// A non-I/O syscall (thread/memory/lock management).
+    Syscall,
+    /// One TCP packet exchanged with a client.
+    TcpPacket { bytes: u64 },
+    /// Pure computation over `bytes` of data already read.
+    Compute { bytes: u64 },
+}
+
+/// Generates a bounded trace whose operation mix mirrors the spec.
+pub struct TraceGenerator {
+    spec: WorkloadSpec,
+    rng: Rng,
+    /// Scale factor: ops in the trace = ceil(count / scale).
+    scale: u64,
+}
+
+impl TraceGenerator {
+    /// `scale` shrinks Table 2 counts so traces replay in milliseconds;
+    /// the mix (ratios between op kinds) is preserved.
+    pub fn new(spec: WorkloadSpec, seed: u64, scale: u64) -> Self {
+        TraceGenerator {
+            spec,
+            rng: Rng::new(seed),
+            scale: scale.max(1),
+        }
+    }
+
+    fn scaled(&self, n: u64) -> u64 {
+        n.div_ceil(self.scale)
+    }
+
+    /// Produce the full trace (deterministic for a given seed).
+    pub fn generate(&mut self) -> Vec<Op> {
+        let s = &self.spec;
+        let n_io = self.scaled(s.io_count);
+        let n_sys = self.scaled(s.syscalls);
+        let n_open = self.scaled(s.files_opened).max(1);
+        let n_tcp = self.scaled(s.tcp_packets);
+        let bytes_per_io = (s.io_bytes / s.io_count.max(1)).max(512);
+
+        let mut ops = Vec::with_capacity((n_io + n_sys + n_open + n_tcp) as usize);
+
+        // interleave deterministically: each "tick" may emit several kinds
+        let total_ticks = n_io.max(n_sys).max(n_open).max(n_tcp).max(1);
+        let mut emitted_io = 0;
+        let mut emitted_sys = 0;
+        let mut emitted_open = 0;
+        let mut emitted_tcp = 0;
+        for tick in 0..total_ticks {
+            // proportional emission keeps the mix constant through the trace
+            while emitted_open * total_ticks <= tick * n_open && emitted_open < n_open {
+                ops.push(Op::Open {
+                    file: self.rng.below(n_open.max(1)),
+                });
+                emitted_open += 1;
+            }
+            while emitted_io * total_ticks <= tick * n_io && emitted_io < n_io {
+                let file = self.rng.below(n_open.max(1));
+                let jitter = self.rng.range(bytes_per_io / 2, bytes_per_io * 3 / 2 + 1);
+                if self.rng.chance(s.write_frac) {
+                    ops.push(Op::Write { file, bytes: jitter });
+                } else {
+                    ops.push(Op::Read { file, bytes: jitter });
+                }
+                ops.push(Op::Compute { bytes: jitter });
+                emitted_io += 1;
+            }
+            while emitted_sys * total_ticks <= tick * n_sys && emitted_sys < n_sys {
+                ops.push(Op::Syscall);
+                emitted_sys += 1;
+            }
+            while emitted_tcp * total_ticks <= tick * n_tcp && emitted_tcp < n_tcp {
+                ops.push(Op::TcpPacket {
+                    bytes: self.rng.range(64, 1460),
+                });
+                emitted_tcp += 1;
+            }
+        }
+        ops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::spec::all_workloads;
+
+    fn counts(ops: &[Op]) -> (u64, u64, u64, u64, u64) {
+        let (mut io, mut sys, mut open, mut tcp, mut wr) = (0, 0, 0, 0, 0);
+        for op in ops {
+            match op {
+                Op::Read { .. } => io += 1,
+                Op::Write { .. } => {
+                    io += 1;
+                    wr += 1;
+                }
+                Op::Syscall => sys += 1,
+                Op::Open { .. } => open += 1,
+                Op::TcpPacket { .. } => tcp += 1,
+                Op::Compute { .. } => {}
+            }
+        }
+        (io, sys, open, tcp, wr)
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let spec = all_workloads()[0].clone();
+        let a = TraceGenerator::new(spec.clone(), 42, 1000).generate();
+        let b = TraceGenerator::new(spec, 42, 1000).generate();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let spec = all_workloads()[0].clone();
+        let a = TraceGenerator::new(spec.clone(), 1, 1000).generate();
+        let b = TraceGenerator::new(spec, 2, 1000).generate();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn mix_matches_spec_ratios() {
+        let spec = all_workloads()[2].clone(); // mariadb-tpch4
+        let ops = TraceGenerator::new(spec.clone(), 7, 100).generate();
+        let (io, sys, open, _tcp, _) = counts(&ops);
+        let want_io_sys = spec.io_count as f64 / spec.syscalls as f64;
+        let got_io_sys = io as f64 / sys as f64;
+        assert!(
+            (want_io_sys - got_io_sys).abs() / want_io_sys < 0.05,
+            "io/sys ratio {got_io_sys} vs {want_io_sys}"
+        );
+        assert!(open > 0);
+    }
+
+    #[test]
+    fn write_heavy_workload_emits_writes() {
+        let spec = all_workloads()[5].clone(); // rocksdb-write (write_frac 0.9)
+        let ops = TraceGenerator::new(spec, 3, 100).generate();
+        let (io, _, _, _, wr) = counts(&ops);
+        assert!(wr as f64 > 0.8 * io as f64, "writes {wr}/{io}");
+    }
+
+    #[test]
+    fn read_only_workload_has_no_writes() {
+        let spec = all_workloads()[6].clone(); // pattern-find
+        let ops = TraceGenerator::new(spec, 3, 1000).generate();
+        let (_, _, _, _, wr) = counts(&ops);
+        assert_eq!(wr, 0);
+    }
+
+    #[test]
+    fn every_table2_row_generates_nonempty_trace() {
+        for spec in all_workloads() {
+            let ops = TraceGenerator::new(spec.clone(), 11, 10_000).generate();
+            assert!(!ops.is_empty(), "{}", spec.full_name());
+        }
+    }
+}

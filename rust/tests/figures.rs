@@ -1,0 +1,226 @@
+//! Figure/table reproduction gates: every headline claim of the paper's
+//! evaluation, asserted within tolerance (EXPERIMENTS.md records achieved
+//! values).  Tolerances are deliberately generous — the substrate is a
+//! calibrated simulator, the *shape* must hold (who wins, by roughly what
+//! factor, where crossovers fall).
+
+use dockerssd::firmware::{fw_image, linux_image, CostModel};
+use dockerssd::llm::all_llms;
+use dockerssd::llm::disagg::{
+    aggregate_ratio, batch_sweep, crossover_seq, fig12_sweep, seq_sweep, DisaggModel,
+};
+use dockerssd::llm::ParallelKind;
+use dockerssd::models::{evaluate, geomean_ratio, ModelKind};
+use dockerssd::workloads::all_workloads;
+
+fn close(got: f64, want: f64, rel: f64) -> bool {
+    (got / want).ln().abs() < rel.ln()
+}
+
+// --- Figure 3 ---------------------------------------------------------------
+
+#[test]
+fn fig3_host_storage_fraction_near_38pct() {
+    let c = CostModel::calibrated();
+    let ws = all_workloads();
+    let mean: f64 = ws
+        .iter()
+        .map(|w| {
+            let b = evaluate(ModelKind::Host, w, &c);
+            b.storage / b.total()
+        })
+        .sum::<f64>()
+        / ws.len() as f64;
+    assert!((0.28..0.50).contains(&mean), "storage fraction {mean:.2} (paper 0.38)");
+}
+
+#[test]
+fn fig3_pisp_slower_than_host_with_dominant_communicate() {
+    let c = CostModel::calibrated();
+    let r = geomean_ratio(ModelKind::PIspR, ModelKind::Host, &c);
+    assert!((1.15..1.8).contains(&r), "P.ISP/Host {r:.2} (paper 1.4)");
+    let ws = all_workloads();
+    let comm: f64 = ws
+        .iter()
+        .map(|w| {
+            let b = evaluate(ModelKind::PIspR, w, &c);
+            b.communicate() / b.total()
+        })
+        .sum::<f64>()
+        / ws.len() as f64;
+    assert!((0.28..0.55).contains(&comm), "communicate fraction {comm:.2} (paper 0.43)");
+}
+
+#[test]
+fn fig3_pisp_storage_half_of_host() {
+    let c = CostModel::calibrated();
+    let ws = all_workloads();
+    let mean: f64 = ws
+        .iter()
+        .map(|w| {
+            evaluate(ModelKind::PIspR, w, &c).storage / evaluate(ModelKind::Host, w, &c).storage
+        })
+        .sum::<f64>()
+        / ws.len() as f64;
+    assert!((0.35..0.70).contains(&mean), "P.ISP/Host storage {mean:.2} (paper 0.5)");
+}
+
+// --- Figure 10 ----------------------------------------------------------------
+
+#[test]
+fn fig10_image_size_reduction_near_83x() {
+    let f = linux_image().total_bytes() as f64 / fw_image().total_bytes() as f64;
+    assert!(close(f, 83.4, 1.35), "reduction {f:.1}x (paper 83.4x)");
+}
+
+// --- Figure 11 ----------------------------------------------------------------
+
+#[test]
+fn fig11_dvirtfw_beats_host_by_about_1_3x() {
+    let c = CostModel::calibrated();
+    let r = geomean_ratio(ModelKind::Host, ModelKind::DVirtFw, &c);
+    assert!(close(r, 1.3, 1.25), "Host/D-VirtFW {r:.2} (paper 1.3)");
+}
+
+#[test]
+fn fig11_dvirtfw_beats_pisp_by_1_6_to_1_8x() {
+    let c = CostModel::calibrated();
+    let r = geomean_ratio(ModelKind::PIspR, ModelKind::DVirtFw, &c);
+    assert!((1.35..2.2).contains(&r), "P.ISP-R/D-VirtFW {r:.2} (paper ~1.6-1.8)");
+    let v = geomean_ratio(ModelKind::PIspV, ModelKind::DVirtFw, &c);
+    assert!((1.2..2.0).contains(&v), "P.ISP-V/D-VirtFW {v:.2}");
+}
+
+#[test]
+fn fig11_dvirtfw_beats_dnaive_and_dfullos() {
+    let c = CostModel::calibrated();
+    let naive = geomean_ratio(ModelKind::DNaive, ModelKind::DVirtFw, &c);
+    let fullos = geomean_ratio(ModelKind::DFullOs, ModelKind::DVirtFw, &c);
+    assert!(close(naive, 1.8, 1.3), "D-Naive/D-VirtFW {naive:.2} (paper 1.8)");
+    assert!(close(fullos, 1.6, 1.3), "D-FullOS/D-VirtFW {fullos:.2} (paper 1.6)");
+    assert!(naive > fullos, "D-Naive must be slower than D-FullOS");
+}
+
+#[test]
+fn fig11_secondary_orderings() {
+    let c = CostModel::calibrated();
+    // P.ISP-V ~13.7% faster than P.ISP-R
+    let vr = geomean_ratio(ModelKind::PIspV, ModelKind::PIspR, &c);
+    assert!((0.75..0.95).contains(&vr), "V/R {vr:.3} (paper 0.863)");
+    // D-FullOS ~9.3% slower than P.ISP-V
+    let fv = geomean_ratio(ModelKind::DFullOs, ModelKind::PIspV, &c);
+    assert!((1.0..1.35).contains(&fv), "D-FullOS/P.ISP-V {fv:.3} (paper 1.093)");
+    // D-Naive ~12.8% slower than D-FullOS
+    let nf = geomean_ratio(ModelKind::DNaive, ModelKind::DFullOs, &c);
+    assert!((1.03..1.35).contains(&nf), "D-Naive/D-FullOS {nf:.3} (paper 1.128)");
+}
+
+// --- Figure 12 -----------------------------------------------------------------
+
+#[test]
+fn fig12a_parallelism_pattern() {
+    // NoCache -> pipeline-dominant; Cache -> tensor-dominant
+    let rs = fig12_sweep(32_768, 1);
+    let mut cache_tensor = 0;
+    let mut cache_total = 0;
+    let mut nocache_pipeline = 0;
+    let mut nocache_total = 0;
+    for r in &rs {
+        if r.disagg.kv_cache() {
+            cache_total += 1;
+            if r.choice.par.dominant() == ParallelKind::Tensor {
+                cache_tensor += 1;
+            }
+        } else {
+            nocache_total += 1;
+            if r.choice.par.dominant() == ParallelKind::Pipeline {
+                nocache_pipeline += 1;
+            }
+        }
+    }
+    assert!(cache_tensor * 10 >= cache_total * 9, "{cache_tensor}/{cache_total} cache scenarios tensor-parallel");
+    assert!(
+        nocache_pipeline * 10 >= nocache_total * 8,
+        "{nocache_pipeline}/{nocache_total} nocache scenarios pipeline-parallel"
+    );
+}
+
+#[test]
+fn fig12b_kv_cache_gains() {
+    let h = aggregate_ratio(DisaggModel::HostNoCache, DisaggModel::HostCache, 32_768, 1);
+    assert!((100.0..1500.0).contains(&h), "H-NoCache/H-Cache {h:.0} (paper 421)");
+    let d = aggregate_ratio(DisaggModel::DockerNoCache, DisaggModel::DockerCache, 32_768, 1);
+    assert!((1000.0..15000.0).contains(&d), "D-NoCache/D-Cache {d:.0} (paper 4600)");
+    assert!(d > h, "flash-local KV must gain more than swap KV");
+}
+
+#[test]
+fn fig12b_dcache_beats_hcache_by_about_7_9x() {
+    let r = aggregate_ratio(DisaggModel::HostCache, DisaggModel::DockerCache, 32_768, 1);
+    assert!(close(r, 7.9, 1.45), "H-Cache/D-Cache {r:.1} (paper 7.9)");
+}
+
+#[test]
+fn fig12b_dnocache_1_7x_slower_than_hnocache() {
+    let r = aggregate_ratio(DisaggModel::DockerNoCache, DisaggModel::HostNoCache, 32_768, 1);
+    assert!(close(r, 1.7, 1.2), "D-NoCache/H-NoCache {r:.2} (paper 1.7)");
+}
+
+#[test]
+fn fig12b_dcache_vs_hnocache_3_2kx() {
+    let r = aggregate_ratio(DisaggModel::HostNoCache, DisaggModel::DockerCache, 32_768, 1);
+    assert!((800.0..8000.0).contains(&r), "H-NoCache/D-Cache {r:.0} (paper 3200)");
+}
+
+// --- Figure 13 -----------------------------------------------------------------
+
+#[test]
+fn fig13a_crossovers_at_256_and_1024() {
+    let llms = all_llms();
+    let x_lamda = crossover_seq(&llms[0], 16).expect("lamda crossover");
+    let x_megatron = crossover_seq(&llms[7], 128).expect("megatron crossover");
+    assert!((128..=512).contains(&x_lamda), "lamda crossover {x_lamda} (paper 256)");
+    assert!((512..=2048).contains(&x_megatron), "megatron crossover {x_megatron} (paper 1024)");
+    assert!(x_megatron > x_lamda, "larger model crosses later");
+}
+
+#[test]
+fn fig13b_speedup_converges_toward_9_5x() {
+    let llms = all_llms();
+    let pts = seq_sweep(&llms[0], 16, &[1 << 17], 1);
+    let converged = pts[0].1;
+    assert!(close(converged, 9.5, 1.25), "long-seq speedup {converged:.1} (paper ~9.5)");
+}
+
+#[test]
+fn fig13b_short_sequences_run_at_60pct_of_host() {
+    let llms = all_llms();
+    let pts = seq_sweep(&llms[0], 16, &[64], 1);
+    let speedup = pts[0].1; // D/H speedup < 1 at short seq
+    assert!((0.45..0.9).contains(&speedup), "short-seq relative perf {speedup:.2} (paper ~0.6)");
+}
+
+#[test]
+fn fig13cd_batch_gain_is_modest() {
+    let llms = all_llms();
+    for (llm, nodes) in [(&llms[0], 16u32), (&llms[7], 128u32)] {
+        let pts = batch_sweep(llm, nodes, 512, &[1, 8, 64, 512]);
+        for (b, sp) in pts {
+            assert!(sp < 1.8, "{} batch {b}: speedup {sp:.2} (paper max ~1.3)", llm.name);
+        }
+    }
+}
+
+// --- Table 2 -------------------------------------------------------------------
+
+#[test]
+fn table2_counts_transcribed() {
+    let ws = all_workloads();
+    assert_eq!(ws.len(), 13);
+    let tpch4 = ws.iter().find(|w| w.full_name() == "mariadb-tpch4").unwrap();
+    assert_eq!(tpch4.io_count, 1_100_000);
+    assert_eq!(tpch4.path_walks, 37_000);
+    let fileup = ws.iter().find(|w| w.full_name() == "vsftpd-fileup").unwrap();
+    assert_eq!(fileup.syscalls, 5_400_000);
+    assert_eq!(fileup.tcp_packets, 1_200_000);
+}

@@ -1,0 +1,185 @@
+//! Cross-module integration: the full docker lifecycle over the
+//! NVMe/Ether-oN/λFS/firmware substrates, host-to-container TCP over the
+//! Ether-oN intranet, and the orchestrated pool.
+
+use std::net::Ipv4Addr;
+
+use dockerssd::config::SystemConfig;
+use dockerssd::docker::{DockerCmd, MiniDocker, Registry};
+use dockerssd::etheron::{EtherOnDriver, MacAddr, TcpStack};
+use dockerssd::etheron::frame::{tcp_frame, EthFrame, Ipv4Packet, TcpSegment};
+use dockerssd::firmware::VirtualFw;
+use dockerssd::lambdafs::{LambdaFs, LockSide};
+use dockerssd::nvme::{NvmeController, NvmeSubsystem, PcieFunction, QueuePair};
+use dockerssd::pool::{DeploymentSpec, Orchestrator, PoolTopology, RestartPolicy};
+use dockerssd::ssd::SsdDevice;
+use dockerssd::util::SimTime;
+
+fn rig() -> (MiniDocker, VirtualFw, LambdaFs, SsdDevice, Registry) {
+    let cfg = SystemConfig::default();
+    let dev = SsdDevice::new(cfg.ssd.clone());
+    let fs = LambdaFs::over_device(&dev);
+    let fw = VirtualFw::new(&cfg.ssd);
+    (MiniDocker::new(), fw, fs, dev, Registry::with_benchmark_images())
+}
+
+#[test]
+fn docker_lifecycle_over_simulated_ssd() {
+    let (mut md, mut fw, mut fs, mut dev, reg) = rig();
+    // pull every benchmark image, run one container each
+    for img in ["embed", "mariadb", "rocksdb", "pattern", "nginx", "vsftpd"] {
+        md.pull(&mut fw, &mut fs, &mut dev, &reg, SimTime::ZERO, img).unwrap();
+        let id = md.run(&mut fw, &mut fs, &mut dev, SimTime::ZERO, img).unwrap().output;
+        md.log_line(&mut fs, &mut dev, SimTime::ZERO, &id, "ready").unwrap();
+    }
+    assert_eq!(md.containers().len(), 6);
+    assert_eq!(fw.thread.running(), 6);
+    // the blobs landed in the private namespace: invisible to the host
+    let blobs = fs.list("/images/blobs").unwrap();
+    assert!(blobs.len() >= 6);
+    for b in &blobs {
+        let ino = fs.walk(&format!("/images/blobs/{b}")).unwrap();
+        assert!(!fs.host_visible(ino), "blob {b} leaked to host namespace");
+    }
+    // flash actually saw traffic (write-back ICL: flush forces programs)
+    use dockerssd::nvme::BlockBackend;
+    dev.flush(SimTime::ZERO);
+    assert!(dev.flash.programs > 0);
+}
+
+#[test]
+fn isp_processing_respects_inode_locks_end_to_end() {
+    let (mut md, mut fw, mut fs, mut dev, reg) = rig();
+    md.pull(&mut fw, &mut fs, &mut dev, &reg, SimTime::ZERO, "pattern").unwrap();
+    let id = md.run(&mut fw, &mut fs, &mut dev, SimTime::ZERO, "pattern").unwrap().output;
+
+    // host stages data
+    fs.write_file(&mut dev, SimTime::ZERO, "/data/docs.txt", b"needle haystack needle", LockSide::Host)
+        .unwrap();
+    let ino = fs.walk("/data/docs.txt").unwrap();
+
+    // container binds -> host shut out
+    assert!(fs.locks.acquire(ino, LockSide::Isp));
+    assert!(fs
+        .write_file(&mut dev, SimTime::ZERO, "/data/docs.txt", b"clobber", LockSide::Host)
+        .is_err());
+
+    // ISP processes + writes result
+    let (data, t) = fw.isp_read(&mut fs, &mut dev, SimTime::ZERO, "/data/docs.txt").unwrap();
+    let hits = String::from_utf8_lossy(&data).matches("needle").count();
+    fw.isp_write(&mut fs, &mut dev, t, "/data/result", format!("{hits}").as_bytes())
+        .unwrap();
+    fs.locks.release(ino, LockSide::Isp);
+
+    // host reads result from the sharable namespace
+    let r = fs.read_file(&mut dev, t, "/data/result", LockSide::Host).unwrap();
+    assert_eq!(r.value, b"2");
+    md.stop(&mut fw, &mut fs, &mut dev, t, &id).unwrap();
+}
+
+#[test]
+fn docker_cli_over_etheron_tcp_http() {
+    // host docker-cli -> TCP over Ether-oN -> mini-docker HTTP parse
+    let (mut md, mut fw, mut fs, mut dev, reg) = rig();
+    md.pull(&mut fw, &mut fs, &mut dev, &reg, SimTime::ZERO, "nginx").unwrap();
+
+    let mut host = TcpStack::new();
+    fw.tcp().listen(2375);
+    let host_ip = Ipv4Addr::new(10, 77, 0, 1);
+    let ssd_ip = Ipv4Addr::new(10, 77, 0, 2);
+
+    // three-way handshake across the two stacks
+    let syn = host.connect(49152, ssd_ip, 2375);
+    let syn_ack = fw.tcp().process(host_ip, &syn);
+    let ack = host.process(ssd_ip, &syn_ack[0]);
+    fw.tcp().process(host_ip, &ack[0]);
+
+    // send the HTTP command as a TCP payload wrapped in a real frame
+    let req = b"POST /containers/nginx/run HTTP/1.1\r\n".to_vec();
+    let seg = host.send((49152, ssd_ip, 2375), req).unwrap();
+    let f = tcp_frame(MacAddr::for_node(0), MacAddr::for_node(1), host_ip, ssd_ip, &seg);
+    // frame crosses NVMe as a TransmitFrame command payload
+    let decoded = EthFrame::decode(&f.encode()).unwrap();
+    let ip = Ipv4Packet::decode(&decoded.payload).unwrap();
+    let seg2 = TcpSegment::decode(&ip.payload).unwrap();
+    fw.tcp().process(ip.src, &seg2);
+    let payload = fw.tcp().recv((2375, host_ip, 49152));
+
+    // mini-docker parses and executes
+    let line = String::from_utf8_lossy(&payload);
+    let cmd = DockerCmd::from_http(line.lines().next().unwrap()).expect("parse http");
+    assert_eq!(cmd, DockerCmd::Run("nginx".into()));
+    let id = md.run(&mut fw, &mut fs, &mut dev, SimTime::ZERO, "nginx").unwrap().output;
+    assert!(md.ps().output.contains(&id));
+}
+
+#[test]
+fn etheron_upcall_flow_with_nvme_controller() {
+    let cfg = SystemConfig::default();
+    let mut dev = SsdDevice::new(cfg.ssd.clone());
+    let mut fw = VirtualFw::new(&cfg.ssd);
+    let mut ctl = NvmeController::new(NvmeSubsystem::standard(1_000_000, 0.3));
+    let mut qp = QueuePair::new(1, 64);
+    let mut drv = EtherOnDriver::new(cfg.etheron.clone());
+
+    assert_eq!(drv.arm_upcalls(&mut qp), 4);
+    ctl.service_queue(SimTime::ZERO, &mut qp, PcieFunction::Host, &mut dev, &mut fw);
+    assert_eq!(ctl.upcall_slots_free(), 4);
+
+    // device (container) emits 10 frames toward the host; the 4-slot pool
+    // must never deadlock as long as the driver keeps re-arming
+    let mut received = 0;
+    for i in 0..10u8 {
+        let f = EthFrame {
+            dst: MacAddr::for_node(0),
+            src: MacAddr::for_node(1),
+            ethertype: dockerssd::etheron::EtherType::Ipv4,
+            payload: vec![i; 100],
+        };
+        assert!(ctl.upcall(&mut qp, f.encode()), "slot available");
+        received += drv.poll_rx(&mut qp).len();
+        ctl.service_queue(SimTime::ZERO, &mut qp, PcieFunction::Host, &mut dev, &mut fw);
+    }
+    assert_eq!(received, 10);
+    assert_eq!(drv.stats.rearm_count, 10);
+}
+
+#[test]
+fn pool_deployment_survives_node_failure() {
+    let cfg = SystemConfig::default();
+    let mut topo = PoolTopology::build(&cfg.pool);
+    let mut orch = Orchestrator::new();
+    let spec = DeploymentSpec {
+        name: "llm-infer".into(),
+        image: "embed".into(),
+        replicas: 8,
+        restart: RestartPolicy::Always,
+    };
+    let placed = orch.deploy(&topo, &spec).unwrap();
+    assert_eq!(placed.len(), 8);
+    assert_eq!(orch.running_count("llm-infer"), 8);
+
+    // kill a node; its replicas must restart elsewhere
+    let victim = placed[0];
+    topo.node_mut(victim).unwrap().healthy = false;
+    for (i, node) in placed.iter().enumerate() {
+        if *node == victim {
+            assert!(orch.replica_failed(&topo, "llm-infer", i as u32, RestartPolicy::Always));
+        }
+    }
+    assert_eq!(orch.running_count("llm-infer"), 8);
+    for p in orch.placements("llm-infer") {
+        assert_ne!(p.node, victim, "replica still on dead node");
+    }
+}
+
+#[test]
+fn pool_topology_latency_model_consistency() {
+    let cfg = SystemConfig::default();
+    let topo = PoolTopology::build(&cfg.pool);
+    // transferring a KV page between neighbors is cheaper than through
+    // the host path
+    let near = topo.link_time(0, 1, 4096);
+    let via_host = topo.host_link_time(0, 4096) + topo.host_link_time(1, 4096);
+    assert!(near < via_host);
+}
