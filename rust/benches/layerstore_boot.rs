@@ -1,0 +1,233 @@
+//! Replica-boot cost: registry-only pulls vs the content-addressed
+//! layerstore (dedup + CoW + pool-wide peer fetch).
+//!
+//! The claim under test (ISSUE 1 acceptance): booting N >= 4 replicas of
+//! one image across the pool moves at least 2x fewer bytes over the
+//! registry WAN than the registry-only path — replica-boot cost scales
+//! with *unique* bytes, not replica count.  (In fact only the first cold
+//! node ever crosses the WAN, so the reduction is ~N-fold.)
+
+use dockerssd::benchkit::section;
+use dockerssd::config::{PoolConfig, SsdConfig};
+use dockerssd::docker::{MiniDocker, Registry};
+use dockerssd::firmware::VirtualFw;
+use dockerssd::lambdafs::{LambdaFs, LockSide};
+use dockerssd::layerstore::{LayerStore, PoolLayerCache, REGISTRY_WAN_FACTOR};
+use dockerssd::metrics::{names, Counters, Table};
+use dockerssd::pool::{DeploymentSpec, Orchestrator, PoolTopology, RestartPolicy};
+use dockerssd::ssd::SsdDevice;
+use dockerssd::util::{human_bytes, SimTime};
+
+/// One DockerSSD's full stack.
+struct Node {
+    dev: SsdDevice,
+    fs: LambdaFs,
+    fw: VirtualFw,
+    md: MiniDocker,
+    store: LayerStore,
+}
+
+impl Node {
+    fn new(cfg: &SsdConfig) -> Node {
+        let dev = SsdDevice::new(cfg.clone());
+        let fs = LambdaFs::over_device(&dev);
+        Node {
+            fw: VirtualFw::new(cfg),
+            md: MiniDocker::new(),
+            store: LayerStore::default(),
+            dev,
+            fs,
+        }
+    }
+}
+
+fn pool(n: u32) -> (PoolTopology, Vec<Node>) {
+    let pcfg = PoolConfig {
+        nodes_per_array: n,
+        arrays: 1,
+        ..Default::default()
+    };
+    let scfg = SsdConfig::default();
+    let nodes = (0..n).map(|_| Node::new(&scfg)).collect();
+    (PoolTopology::build(&pcfg), nodes)
+}
+
+fn registry() -> (Registry, u64) {
+    let mut reg = Registry::new();
+    reg.publish(
+        "svc",
+        "latest",
+        "svc --serve /data",
+        &[256 << 10, 128 << 10, 64 << 10],
+        42,
+    );
+    let (_, blobs) = reg.fetch("svc").unwrap();
+    let image_bytes = blobs.iter().map(|b| b.bytes.len() as u64).sum();
+    (reg, image_bytes)
+}
+
+/// Seed path: every replica pulls the whole image from the registry
+/// into its node's private namespace, then materializes the overlay.
+fn boot_registry_only(replicas: u32, nnodes: u32, reg: &Registry, image_bytes: u64) -> (u64, SimTime) {
+    let (topo, mut nodes) = pool(nnodes);
+    let mut wan_bytes = 0u64;
+    let mut total = SimTime::ZERO;
+    for r in 0..replicas {
+        let nid = r % nnodes;
+        let node = &mut nodes[nid as usize];
+        let wan = topo.host_link_time(nid, image_bytes).scale(REGISTRY_WAN_FACTOR);
+        wan_bytes += image_bytes;
+        let pulled = node
+            .md
+            .pull(&mut node.fw, &mut node.fs, &mut node.dev, reg, wan, "svc")
+            .expect("pull");
+        let ran = node
+            .md
+            .run(&mut node.fw, &mut node.fs, &mut node.dev, pulled.done, "svc")
+            .expect("run");
+        total += ran.done;
+    }
+    (wan_bytes, total.scale(1.0 / replicas as f64))
+}
+
+/// LayerStore path: locality-aware placement, peer fetch for layers the
+/// pool already holds, dedup'd install, CoW writable layer per replica.
+fn boot_via_layerstore(
+    replicas: u32,
+    nnodes: u32,
+    reg: &Registry,
+    cache: &mut PoolLayerCache,
+    counters: &mut Counters,
+) -> (u64, SimTime) {
+    let (topo, mut nodes) = pool(nnodes);
+    let mut orch = Orchestrator::new();
+    let (manifest, blobs) = reg.fetch("svc").unwrap();
+    let layers: Vec<(u64, u64)> = blobs
+        .iter()
+        .map(|b| (b.digest, b.bytes.len() as u64))
+        .collect();
+    let spec = DeploymentSpec {
+        name: "svc".into(),
+        image: "svc".into(),
+        replicas,
+        restart: RestartPolicy::OnFailure,
+    };
+    let placed = orch
+        .deploy_with_layers(&topo, &spec, cache, &layers)
+        .expect("placement");
+
+    let mut total = SimTime::ZERO;
+    for nid in placed {
+        let node = &mut nodes[nid as usize];
+        let mut t = SimTime::ZERO;
+        for blob in blobs {
+            // where does this layer come from? (registers presence)
+            let (_src, xfer) = cache.fetch(&topo, nid, blob.digest, blob.bytes.len() as u64);
+            t += xfer;
+            // install through the firmware handler: dedups into the store
+            let r = node
+                .fw
+                .install
+                .install_blob(&mut node.fs, &mut node.dev, &mut node.store, t, &blob.bytes)
+                .expect("install");
+            t = r.done;
+        }
+        let m = node
+            .fs
+            .write_file(
+                &mut node.dev,
+                t,
+                &format!("/images/manifest/{}", manifest.name),
+                manifest.to_json().dump().as_bytes(),
+                LockSide::Isp,
+            )
+            .expect("manifest");
+        t = m.done;
+        let ran = node
+            .md
+            .run_cow(&mut node.fw, &mut node.fs, &mut node.dev, &mut node.store, t, "svc")
+            .expect("run_cow");
+        // each replica dirties a page of config: a CoW break, not a copy
+        let layer = node.md.cow_layer_of(&ran.output).expect("cow layer");
+        node.md
+            .cow
+            .write_at(
+                &mut node.store,
+                &mut node.fs,
+                &mut node.dev,
+                ran.done,
+                layer,
+                0,
+                &[0xC0; 4096],
+            )
+            .expect("dirty config");
+        total += ran.done;
+    }
+    for node in &nodes {
+        node.store.export_counters(counters);
+        node.md.cow.export_counters(counters);
+    }
+    cache.export_counters(counters);
+    (cache.bytes_from_registry, total.scale(1.0 / replicas as f64))
+}
+
+fn main() {
+    section("replica boot: registry-only vs layerstore");
+    let (reg, image_bytes) = registry();
+    println!(
+        "image: svc:latest, 3 layers, {} (pool of 8 DockerSSDs, WAN factor {REGISTRY_WAN_FACTOR})\n",
+        human_bytes(image_bytes)
+    );
+
+    let mut table = Table::new(vec![
+        "replicas",
+        "wan_bytes (registry-only)",
+        "wan_bytes (layerstore)",
+        "reduction",
+        "peer_fetches",
+        "mean_boot (registry-only)",
+        "mean_boot (layerstore)",
+    ]);
+
+    for replicas in [1u32, 2, 4, 8, 16] {
+        let (base_bytes, base_boot) = boot_registry_only(replicas, 8, &reg, image_bytes);
+        let mut cache = PoolLayerCache::new();
+        let mut counters = Counters::new();
+        let (store_bytes, store_boot) =
+            boot_via_layerstore(replicas, 8, &reg, &mut cache, &mut counters);
+        let reduction = base_bytes as f64 / store_bytes.max(1) as f64;
+        table.row(vec![
+            format!("{replicas}"),
+            human_bytes(base_bytes),
+            human_bytes(store_bytes),
+            format!("{reduction:.1}x"),
+            format!("{}", cache.peer_fetches),
+            format!("{base_boot}"),
+            format!("{store_boot}"),
+        ]);
+        if replicas >= 4 {
+            assert!(
+                reduction >= 2.0,
+                "acceptance: >=2x WAN-byte reduction at {replicas} replicas, got {reduction:.2}x"
+            );
+        }
+        if replicas == 16 {
+            println!("{}", table.render());
+            println!("layerstore counters (16-replica run, summed over nodes):");
+            let mut ct = Table::new(vec!["counter", "value"]);
+            for key in [
+                names::DEDUP_HITS,
+                names::BYTES_WRITTEN,
+                names::BYTES_DEDUPED,
+                names::COW_BREAKS,
+                names::PEER_FETCHES,
+                names::REGISTRY_FETCHES,
+                names::BYTES_NOT_TRANSFERRED,
+            ] {
+                ct.row(vec![key.to_string(), format!("{}", counters.get(key))]);
+            }
+            println!("{}", ct.render());
+        }
+    }
+    println!("boot cost scales with unique bytes, not replica count: OK");
+}

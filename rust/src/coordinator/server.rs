@@ -24,6 +24,7 @@ pub trait BatchExecutor {
     fn kv_bytes(&self) -> u64;
 }
 
+#[cfg(feature = "pjrt")]
 impl BatchExecutor for crate::runtime::Engine {
     fn run_batch(&mut self, prompts: &[Vec<i32>], new_tokens: usize) -> anyhow::Result<Vec<Vec<i32>>> {
         self.generate(prompts, new_tokens)

@@ -38,6 +38,13 @@ impl Blob {
     pub fn verify(&self) -> bool {
         fnv1a(&self.bytes) == self.digest
     }
+
+    /// Digests of this blob's layerstore chunks at the given chunk size —
+    /// what the content-addressed store will index it as.
+    pub fn chunk_digests(&self, chunk_bytes: usize) -> Vec<u64> {
+        assert!(chunk_bytes > 0);
+        self.bytes.chunks(chunk_bytes).map(fnv1a).collect()
+    }
 }
 
 /// Image manifest: "details about the target application, such as its
@@ -52,6 +59,11 @@ pub struct ImageManifest {
 }
 
 impl ImageManifest {
+    /// Canonical `name:tag` reference, as the registry keys it.
+    pub fn reference(&self) -> String {
+        format!("{}:{}", self.name, self.tag)
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("name", Json::str(self.name.clone())),
@@ -108,6 +120,26 @@ mod tests {
         assert_ne!(a.digest, c.digest);
         assert_eq!(a.bytes.len(), 10_000);
         assert!(a.verify());
+    }
+
+    #[test]
+    fn chunk_digests_partition_content() {
+        let b = Blob::synthetic(9, 10_000);
+        let digests = b.chunk_digests(4096);
+        assert_eq!(digests.len(), 3);
+        assert_eq!(digests[0], fnv1a(&b.bytes[..4096]));
+        assert_eq!(digests[2], fnv1a(&b.bytes[8192..]));
+    }
+
+    #[test]
+    fn manifest_reference_is_name_tag() {
+        let m = ImageManifest {
+            name: "nginx".into(),
+            tag: "v3".into(),
+            entry: "e".into(),
+            layers: vec![],
+        };
+        assert_eq!(m.reference(), "nginx:v3");
     }
 
     #[test]

@@ -8,8 +8,11 @@ pub mod container;
 pub mod image;
 pub mod registry;
 
+use std::collections::HashMap;
+
 use crate::firmware::{Syscall, VirtualFw};
 use crate::lambdafs::{LambdaFs, LockSide};
+use crate::layerstore::{CowStore, LayerId, LayerStore};
 use crate::ssd::SsdDevice;
 use crate::util::SimTime;
 
@@ -88,6 +91,10 @@ pub struct MiniDocker {
     next_id: u64,
     /// Default memory footprint charged per container (bytes).
     pub container_mem_bytes: u64,
+    /// Copy-on-write writable layers for store-backed containers.
+    pub cow: CowStore,
+    /// container id -> its writable layer (store-backed containers only).
+    cow_layers: HashMap<String, LayerId>,
 }
 
 impl Default for MiniDocker {
@@ -102,6 +109,8 @@ impl MiniDocker {
             containers: Vec::new(),
             next_id: 1,
             container_mem_bytes: 64 << 20,
+            cow: CowStore::new(),
+            cow_layers: HashMap::new(),
         }
     }
 
@@ -114,6 +123,13 @@ impl MiniDocker {
             .iter_mut()
             .find(|c| c.id == id)
             .ok_or(DockerError::NoSuchContainer)
+    }
+
+    /// Canonical manifest key for a pull reference: docker treats `app`
+    /// and `app:latest` as the same image, so `:latest` is stripped and
+    /// both resolve to one `/images/manifest/<key>` file.
+    fn manifest_key(reference: &str) -> &str {
+        reference.strip_suffix(":latest").unwrap_or(reference)
     }
 
     /// `docker pull`: fetch blobs + manifest from the registry over
@@ -138,13 +154,153 @@ impl MiniDocker {
             let r = fs.write_file(dev, done, &path, &blob.bytes, LockSide::Isp)?;
             done = r.done;
         }
-        let mpath = format!("/images/manifest/{}", manifest.name);
+        // keyed by the canonical reference, so tagged pulls resolve on create
+        let mpath = format!("/images/manifest/{}", Self::manifest_key(image));
         let r = fs.write_file(dev, done, &mpath, manifest.to_json().dump().as_bytes(), LockSide::Isp)?;
         done = r.done;
         Ok(CmdResult {
             output: format!("Pulled {} ({} layers)", image, manifest.layers.len()),
             done,
         })
+    }
+
+    /// `docker pull` through the content-addressed layerstore: layers
+    /// already resident (from any image, any prior pull) are metadata
+    /// hits — no Ether-oN frames, no flash programs.  Only missing
+    /// layers cross the wire, and they land dedup'd via the firmware's
+    /// install handler.
+    pub fn pull_via_store(
+        &mut self,
+        fw: &mut VirtualFw,
+        fs: &mut LambdaFs,
+        dev: &mut SsdDevice,
+        reg: &Registry,
+        store: &mut LayerStore,
+        at: SimTime,
+        image: &str,
+    ) -> Result<CmdResult, DockerError> {
+        let (manifest, blobs) = reg.fetch(image).ok_or(DockerError::NoSuchImage)?;
+        let mpath = format!("/images/manifest/{}", Self::manifest_key(image));
+        // invariant: an image's layers hold exactly one blob ref while its
+        // manifest file exists, so rmi_with_store can release them 1:1 —
+        // a warm re-pull of an already-installed image refs nothing
+        let repull = fs.walk(&mpath).is_ok();
+        let mut done = at;
+        let mut fetched_bytes = 0u64;
+        let mut reused = 0usize;
+        for blob in blobs {
+            if store.has_blob(blob.digest) {
+                reused += 1;
+                if repull {
+                    continue;
+                }
+            } else {
+                // only missing layers arrive as Ether-oN frames
+                let frames = (blob.bytes.len() as u64).div_ceil(1448).max(1);
+                done += SimTime::ns(frames * fw.costs.t_pkt_ethon_ns);
+                fetched_bytes += blob.bytes.len() as u64;
+            }
+            // the install handler owns store-hit vs install accounting
+            let r = fw.install.install_blob(fs, dev, store, done, &blob.bytes)?;
+            done = r.done;
+        }
+        let r = fs.write_file(dev, done, &mpath, manifest.to_json().dump().as_bytes(), LockSide::Isp)?;
+        done = r.done;
+        Ok(CmdResult {
+            output: format!(
+                "Pulled {} ({} layers, {} reused, {} bytes fetched)",
+                image,
+                manifest.layers.len(),
+                reused,
+                fetched_bytes
+            ),
+            done,
+        })
+    }
+
+    /// `docker create` on the layerstore path: instead of copying every
+    /// layer blob into the rootfs (the seed's overlay materialization),
+    /// mount a copy-on-write writable layer that *shares* the image
+    /// chunks — container boot moves metadata, not bytes.  The image
+    /// must have been pulled via the store, and the container must be
+    /// removed with [`Self::rm_with_store`] (plain `rm` cannot release
+    /// the writable layer's chunk references).
+    pub fn create_cow(
+        &mut self,
+        fw: &mut VirtualFw,
+        fs: &mut LambdaFs,
+        dev: &mut SsdDevice,
+        store: &mut LayerStore,
+        at: SimTime,
+        image: &str,
+    ) -> Result<CmdResult, DockerError> {
+        let manifest = self.load_manifest(fs, dev, at, image)?;
+        if manifest.layers.iter().any(|l| !store.has_blob(*l)) {
+            return Err(DockerError::NoSuchImage);
+        }
+        let id = format!("c{:04}", self.next_id);
+        self.next_id += 1;
+        let root = format!("/containers/{id}/rootfs");
+        fs.mkdir_p(&root, crate::nvme::namespace::PRIVATE_NS)
+            .map_err(DockerError::Fs)?;
+        let layer = self
+            .cow
+            .fork_from_blobs(store, &manifest.layers)
+            .expect("layers checked present");
+        // merged-view marker carries the entry script, as in create()
+        let r = fs.write_file(
+            dev,
+            at,
+            &format!("{root}/merged"),
+            manifest.entry.as_bytes(),
+            LockSide::Isp,
+        )?;
+        let done = r.done;
+        fw.syscall(Syscall::Mkdir);
+        self.cow_layers.insert(id.clone(), layer);
+        self.containers
+            .push(Container::new(&id, image, &manifest.entry, &root));
+        Ok(CmdResult { output: id, done })
+    }
+
+    /// `docker run` on the layerstore path: create_cow + start.
+    pub fn run_cow(
+        &mut self,
+        fw: &mut VirtualFw,
+        fs: &mut LambdaFs,
+        dev: &mut SsdDevice,
+        store: &mut LayerStore,
+        at: SimTime,
+        image: &str,
+    ) -> Result<CmdResult, DockerError> {
+        let created = self.create_cow(fw, fs, dev, store, at, image)?;
+        let id = created.output.clone();
+        let started = self.start(fw, fs, dev, created.done, &id)?;
+        Ok(CmdResult {
+            output: id,
+            done: started.done,
+        })
+    }
+
+    /// The writable layer backing a store-backed container.
+    pub fn cow_layer_of(&self, id: &str) -> Option<LayerId> {
+        self.cow_layers.get(id).copied()
+    }
+
+    /// `docker rm` for store-backed containers: also releases the
+    /// container's writable layer (reclaiming unshared chunks).
+    pub fn rm_with_store(
+        &mut self,
+        fs: &mut LambdaFs,
+        store: &mut LayerStore,
+        at: SimTime,
+        id: &str,
+    ) -> Result<CmdResult, DockerError> {
+        let result = self.rm(fs, at, id)?;
+        if let Some(layer) = self.cow_layers.remove(id) {
+            self.cow.drop_layer(store, fs, layer)?;
+        }
+        Ok(result)
     }
 
     /// `docker rmi`: remove manifest + blobs.
@@ -159,7 +315,29 @@ impl MiniDocker {
         for layer in &manifest.layers {
             let _ = fs.unlink(&format!("/images/blobs/{:016x}", layer));
         }
-        fs.unlink(&format!("/images/manifest/{}", image))?;
+        fs.unlink(&format!("/images/manifest/{}", Self::manifest_key(image)))?;
+        Ok(CmdResult {
+            output: format!("Untagged {image}"),
+            done: at,
+        })
+    }
+
+    /// `docker rmi` for store-pulled images: drops the blob-level
+    /// references the pull took, reclaiming chunks no other image or
+    /// writable layer still shares.
+    pub fn rmi_with_store(
+        &mut self,
+        fs: &mut LambdaFs,
+        dev: &mut SsdDevice,
+        store: &mut LayerStore,
+        at: SimTime,
+        image: &str,
+    ) -> Result<CmdResult, DockerError> {
+        let manifest = self.load_manifest(fs, dev, at, image)?;
+        for layer in &manifest.layers {
+            store.unref_blob(fs, *layer)?;
+        }
+        fs.unlink(&format!("/images/manifest/{}", Self::manifest_key(image)))?;
         Ok(CmdResult {
             output: format!("Untagged {image}"),
             done: at,
@@ -173,7 +351,7 @@ impl MiniDocker {
         at: SimTime,
         image: &str,
     ) -> Result<ImageManifest, DockerError> {
-        let path = format!("/images/manifest/{}", image);
+        let path = format!("/images/manifest/{}", Self::manifest_key(image));
         let r = fs
             .read_file(dev, at, &path, LockSide::Isp)
             .map_err(|_| DockerError::NoSuchImage)?;
@@ -539,6 +717,136 @@ mod tests {
             Some(DockerCmd::Rm("c0001".into()))
         );
         assert_eq!(DockerCmd::from_http("PATCH /nope HTTP/1.1"), None);
+    }
+
+    #[test]
+    fn pull_via_store_dedups_second_pull() {
+        let (mut md, mut fw, mut fs, mut dev, reg) = setup();
+        let mut store = LayerStore::default();
+        let r1 = md
+            .pull_via_store(&mut fw, &mut fs, &mut dev, &reg, &mut store, SimTime::ZERO, "mariadb")
+            .unwrap();
+        assert!(r1.done > SimTime::ZERO);
+        let (manifest, _) = reg.fetch("mariadb").unwrap();
+        assert!(manifest.layers.iter().all(|l| store.has_blob(*l)));
+        let written = store.stats.bytes_written;
+        assert_eq!(written, (64 << 10) + (32 << 10));
+        // second pull of the same image: zero bytes fetched or written,
+        // and no extra blob refs (refs mirror "manifest present")
+        let r2 = md
+            .pull_via_store(&mut fw, &mut fs, &mut dev, &reg, &mut store, r1.done, "mariadb")
+            .unwrap();
+        assert_eq!(store.stats.bytes_written, written);
+        assert!(r2.output.contains("2 reused"));
+        assert!(r2.output.contains("0 bytes fetched"));
+        assert!(manifest.layers.iter().all(|l| store.blob_refs(*l) == 1));
+    }
+
+    #[test]
+    fn rmi_with_store_reclaims_image_chunks() {
+        let (mut md, mut fw, mut fs, mut dev, reg) = setup();
+        let mut store = LayerStore::default();
+        md.pull_via_store(&mut fw, &mut fs, &mut dev, &reg, &mut store, SimTime::ZERO, "mariadb")
+            .unwrap();
+        // re-pull must not leak a second reference (rmi releases once)
+        md.pull_via_store(&mut fw, &mut fs, &mut dev, &reg, &mut store, SimTime::ZERO, "mariadb")
+            .unwrap();
+        assert!(store.unique_bytes() > 0);
+        md.rmi_with_store(&mut fs, &mut dev, &mut store, SimTime::ZERO, "mariadb")
+            .unwrap();
+        assert_eq!(store.unique_bytes(), 0, "image chunks reclaimed");
+        assert!(fs.list("/images/chunks").unwrap().is_empty());
+        assert!(fs.walk("/images/manifest/mariadb").is_err());
+    }
+
+    #[test]
+    fn rmi_with_store_keeps_chunks_live_containers_share() {
+        let (mut md, mut fw, mut fs, mut dev, reg) = setup();
+        let mut store = LayerStore::default();
+        md.pull_via_store(&mut fw, &mut fs, &mut dev, &reg, &mut store, SimTime::ZERO, "mariadb")
+            .unwrap();
+        let id = md
+            .run_cow(&mut fw, &mut fs, &mut dev, &mut store, SimTime::ZERO, "mariadb")
+            .unwrap()
+            .output;
+        md.rmi_with_store(&mut fs, &mut dev, &mut store, SimTime::ZERO, "mariadb")
+            .unwrap();
+        // the running container's writable layer still pins the chunks
+        assert_eq!(store.unique_bytes(), 96 << 10);
+        let layer = md.cow_layer_of(&id).unwrap();
+        let r = md.cow.read(&mut store, &mut fs, &mut dev, SimTime::ZERO, layer).unwrap();
+        assert_eq!(r.value.len(), 96 << 10);
+        md.stop(&mut fw, &mut fs, &mut dev, SimTime::ZERO, &id).unwrap();
+        md.rm_with_store(&mut fs, &mut store, SimTime::ZERO, &id).unwrap();
+        assert_eq!(store.unique_bytes(), 0);
+    }
+
+    #[test]
+    fn tagged_and_untagged_references_are_one_image() {
+        let (mut md, mut fw, mut fs, mut dev, reg) = setup();
+        // pull with the explicit :latest tag, create with the bare name
+        md.pull(&mut fw, &mut fs, &mut dev, &reg, SimTime::ZERO, "mariadb:latest")
+            .unwrap();
+        let id = md.create(&mut fw, &mut fs, &mut dev, SimTime::ZERO, "mariadb").unwrap().output;
+        assert_eq!(md.containers()[0].id, id);
+        // one manifest file, not two
+        assert_eq!(fs.list("/images/manifest").unwrap(), vec!["mariadb".to_string()]);
+    }
+
+    #[test]
+    fn create_cow_mounts_writable_layer_without_copying() {
+        let (mut md, mut fw, mut fs, mut dev, reg) = setup();
+        let mut store = LayerStore::default();
+        md.pull_via_store(&mut fw, &mut fs, &mut dev, &reg, &mut store, SimTime::ZERO, "mariadb")
+            .unwrap();
+        let unique = store.unique_bytes();
+        let r = md
+            .run_cow(&mut fw, &mut fs, &mut dev, &mut store, SimTime::ZERO, "mariadb")
+            .unwrap();
+        let id = r.output.clone();
+        assert_eq!(md.containers()[0].state, ContainerState::Running);
+        assert_eq!(store.unique_bytes(), unique, "boot copies no layer bytes");
+        let layer = md.cow_layer_of(&id).expect("store-backed container");
+        assert_eq!(md.cow.len_of(layer), Some((64 << 10) + (32 << 10)));
+        // rootfs holds only the merged marker — lower dirs stay shared chunks
+        let root = format!("/containers/{id}/rootfs");
+        assert_eq!(fs.list(&root).unwrap(), vec!["merged".to_string()]);
+    }
+
+    #[test]
+    fn rm_with_store_releases_the_writable_layer() {
+        let (mut md, mut fw, mut fs, mut dev, reg) = setup();
+        let mut store = LayerStore::default();
+        md.pull_via_store(&mut fw, &mut fs, &mut dev, &reg, &mut store, SimTime::ZERO, "mariadb")
+            .unwrap();
+        let id = md
+            .run_cow(&mut fw, &mut fs, &mut dev, &mut store, SimTime::ZERO, "mariadb")
+            .unwrap()
+            .output;
+        // dirty one chunk so the layer owns private content
+        let layer = md.cow_layer_of(&id).unwrap();
+        md.cow
+            .write_at(&mut store, &mut fs, &mut dev, SimTime::ZERO, layer, 0, &[0xAB; 128])
+            .unwrap();
+        assert!(store.unique_bytes() > (96 << 10) as u64);
+        md.stop(&mut fw, &mut fs, &mut dev, SimTime::ZERO, &id).unwrap();
+        md.rm_with_store(&mut fs, &mut store, SimTime::ZERO, &id).unwrap();
+        assert_eq!(md.cow.layer_count(), 0);
+        assert_eq!(md.cow_layer_of(&id), None);
+        assert_eq!(store.unique_bytes(), 96 << 10, "private CoW chunk reclaimed");
+    }
+
+    #[test]
+    fn create_cow_requires_store_resident_image() {
+        let (mut md, mut fw, mut fs, mut dev, reg) = setup();
+        let mut store = LayerStore::default();
+        // classic pull: blobs land as files, not in the store
+        md.pull(&mut fw, &mut fs, &mut dev, &reg, SimTime::ZERO, "mariadb").unwrap();
+        assert_eq!(
+            md.create_cow(&mut fw, &mut fs, &mut dev, &mut store, SimTime::ZERO, "mariadb")
+                .unwrap_err(),
+            DockerError::NoSuchImage
+        );
     }
 
     #[test]

@@ -5,7 +5,9 @@ use std::collections::HashMap;
 
 use super::image::{Blob, ImageManifest};
 
-/// An in-memory registry of published images.
+/// An in-memory registry of published images, keyed by `name:tag`.
+/// (Keying by name alone silently overwrote older tags and made `fetch`
+/// ignore the tag entirely — `publish("app", "v2", ...)` clobbered v1.)
 #[derive(Default)]
 pub struct Registry {
     images: HashMap<String, (ImageManifest, Vec<Blob>)>,
@@ -14,6 +16,16 @@ pub struct Registry {
 impl Registry {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Canonical reference: an untagged name means `:latest`, as docker
+    /// resolves it.
+    fn key(reference: &str) -> String {
+        if reference.contains(':') {
+            reference.to_string()
+        } else {
+            format!("{reference}:latest")
+        }
     }
 
     /// Publish an image with synthetic layers of the given sizes.
@@ -36,14 +48,19 @@ impl Registry {
             entry: entry.to_string(),
             layers: blobs.iter().map(|b| b.digest).collect(),
         };
-        self.images.insert(name.to_string(), (manifest, blobs));
+        self.images
+            .insert(format!("{name}:{tag}"), (manifest, blobs));
     }
 
-    /// Fetch manifest + blobs for `name` (a `docker pull` round trip).
-    pub fn fetch(&self, name: &str) -> Option<(&ImageManifest, &[Blob])> {
-        self.images.get(name).map(|(m, b)| (m, b.as_slice()))
+    /// Fetch manifest + blobs for a `name[:tag]` reference (a `docker
+    /// pull` round trip); an untagged reference resolves to `:latest`.
+    pub fn fetch(&self, reference: &str) -> Option<(&ImageManifest, &[Blob])> {
+        self.images
+            .get(&Self::key(reference))
+            .map(|(m, b)| (m, b.as_slice()))
     }
 
+    /// All published `name:tag` references.
     pub fn list(&self) -> Vec<&str> {
         self.images.keys().map(String::as_str).collect()
     }
@@ -69,7 +86,7 @@ mod tests {
     fn publish_then_fetch() {
         let mut r = Registry::new();
         r.publish("app", "v1", "/bin/app", &[1000, 2000], 3);
-        let (m, blobs) = r.fetch("app").unwrap();
+        let (m, blobs) = r.fetch("app:v1").unwrap();
         assert_eq!(m.name, "app");
         assert_eq!(m.layers.len(), 2);
         assert_eq!(blobs.len(), 2);
@@ -82,6 +99,36 @@ mod tests {
     #[test]
     fn fetch_missing_is_none() {
         assert!(Registry::new().fetch("ghost").is_none());
+    }
+
+    #[test]
+    fn tags_do_not_clobber_each_other() {
+        // regression: keying by name alone meant publishing v2 silently
+        // overwrote v1 and fetch ignored the tag
+        let mut r = Registry::new();
+        r.publish("app", "v1", "/bin/app --v1", &[1000], 3);
+        r.publish("app", "v2", "/bin/app --v2", &[2000, 500], 4);
+        let (m1, b1) = r.fetch("app:v1").unwrap();
+        let (m2, b2) = r.fetch("app:v2").unwrap();
+        assert_eq!(m1.tag, "v1");
+        assert_eq!(m1.entry, "/bin/app --v1");
+        assert_eq!(b1.len(), 1);
+        assert_eq!(m2.tag, "v2");
+        assert_eq!(b2.len(), 2);
+        assert_ne!(m1.layers, m2.layers);
+    }
+
+    #[test]
+    fn untagged_reference_resolves_to_latest() {
+        let mut r = Registry::new();
+        r.publish("app", "v1", "/bin/app --v1", &[1000], 3);
+        r.publish("app", "latest", "/bin/app", &[4000], 5);
+        let (m, _) = r.fetch("app").unwrap();
+        assert_eq!(m.tag, "latest");
+        // a name with no :latest published does not resolve untagged
+        r.publish("tool", "v9", "/bin/tool", &[100], 6);
+        assert!(r.fetch("tool").is_none());
+        assert!(r.fetch("tool:v9").is_some());
     }
 
     #[test]

@@ -6,8 +6,9 @@ use std::collections::HashMap;
 use crate::config::SsdConfig;
 use crate::etheron::TcpStack;
 use crate::lambdafs::{FsError, FsResult, LambdaFs, LockSide};
+use crate::layerstore::LayerStore;
 use crate::ssd::SsdDevice;
-use crate::util::SimTime;
+use crate::util::{fnv1a, SimTime};
 
 /// CPU execution modes: FW-pool access requires privileged mode, enforced
 /// by the memory protection unit.
@@ -186,6 +187,53 @@ impl IoHandler {
     }
 }
 
+/// Install handler: the firmware entry point image-layer installs go
+/// through.  Every blob that lands on the device — registry pull, peer
+/// fetch — is routed into the content-addressed [`LayerStore`] instead
+/// of a private per-node copy, so identical layers are stored once.
+#[derive(Default)]
+pub struct InstallHandler {
+    pub calls: u64,
+    /// Installs satisfied by content already in the store.
+    pub store_hits: u64,
+    /// Blobs whose content actually had to be (partially) written.
+    pub blobs_installed: u64,
+    pub bytes_installed: u64,
+}
+
+impl InstallHandler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Install one image layer into the store.  A blob whose content is
+    /// already resident is a metadata-only hit (no flash traffic);
+    /// otherwise it is chunked into the store, deduplicating against
+    /// everything already there.  Returns the blob digest.
+    pub fn install_blob(
+        &mut self,
+        fs: &mut LambdaFs,
+        dev: &mut SsdDevice,
+        store: &mut LayerStore,
+        at: SimTime,
+        bytes: &[u8],
+    ) -> Result<FsResult<u64>, FsError> {
+        self.calls += 1;
+        let digest = fnv1a(bytes);
+        if store.has_blob(digest) {
+            self.store_hits += 1;
+            store.ref_blob(digest);
+            return Ok(FsResult {
+                value: digest,
+                done: at,
+            });
+        }
+        self.blobs_installed += 1;
+        self.bytes_installed += bytes.len() as u64;
+        store.put_blob(fs, dev, at, bytes)
+    }
+}
+
 /// Network handler: the device-side TCP stack plus frame accounting.
 pub struct NetHandler {
     pub tcp: TcpStack,
@@ -259,6 +307,30 @@ mod tests {
         let mut th = ThreadHandler::new(&SsdConfig::default());
         assert!(!th.exit(12345, 0));
         assert_eq!(th.reap(12345, 0), None);
+    }
+
+    #[test]
+    fn install_routes_through_store_and_dedups() {
+        let cfg = SsdConfig::default();
+        let mut dev = crate::ssd::SsdDevice::new(cfg.clone());
+        let mut fs = crate::lambdafs::LambdaFs::over_device(&dev);
+        let mut store = LayerStore::default();
+        let mut ih = InstallHandler::new();
+        let layer = vec![7u8; 100_000];
+        let r1 = ih
+            .install_blob(&mut fs, &mut dev, &mut store, SimTime::ZERO, &layer)
+            .unwrap();
+        assert!(r1.done > SimTime::ZERO);
+        assert_eq!(ih.blobs_installed, 1);
+        // second replica installing the same layer: pure store hit
+        let r2 = ih
+            .install_blob(&mut fs, &mut dev, &mut store, r1.done, &layer)
+            .unwrap();
+        assert_eq!(r2.value, r1.value);
+        assert_eq!(r2.done, r1.done, "store hit programs nothing");
+        assert_eq!(ih.store_hits, 1);
+        assert_eq!(ih.bytes_installed, 100_000);
+        assert_eq!(store.blob_refs(r1.value), 2);
     }
 
     #[test]

@@ -20,7 +20,9 @@ use crate::ssd::SsdDevice;
 use crate::util::SimTime;
 
 pub use costs::CostModel;
-pub use handlers::{IoHandler, MemPools, NetHandler, PrivilegeMode, ThreadHandler};
+pub use handlers::{
+    InstallHandler, IoHandler, MemPools, NetHandler, PrivilegeMode, ThreadHandler,
+};
 pub use image::{fw_image, linux_image, FirmwareImage};
 pub use syscalls::{Syscall, SyscallClass, SyscallTable};
 
@@ -29,6 +31,8 @@ pub struct VirtualFw {
     pub thread: ThreadHandler,
     pub io: IoHandler,
     pub net: NetHandler,
+    /// Image-layer installs, routed into the content-addressed layerstore.
+    pub install: InstallHandler,
     pub syscalls: SyscallTable,
     pub costs: CostModel,
     /// Accumulated simulated busy time of the firmware cores.
@@ -41,6 +45,7 @@ impl VirtualFw {
             thread: ThreadHandler::new(cfg),
             io: IoHandler::new(),
             net: NetHandler::new(),
+            install: InstallHandler::new(),
             syscalls: SyscallTable::standard(),
             costs: CostModel::calibrated(),
             busy: SimTime::ZERO,

@@ -114,6 +114,9 @@ impl LambdaFs {
         // canonical layout
         fs.mkdir_p("/images", PRIVATE_NS).unwrap();
         fs.mkdir_p("/images/blobs", PRIVATE_NS).unwrap();
+        // content-addressed chunk files of the layerstore: dedup'd image
+        // layer + CoW data, invisible to the host like the raw blobs
+        fs.mkdir_p("/images/chunks", PRIVATE_NS).unwrap();
         fs.mkdir_p("/images/manifest", PRIVATE_NS).unwrap();
         fs.mkdir_p("/containers", PRIVATE_NS).unwrap();
         fs.mkdir_p("/data", SHARABLE_NS).unwrap();
@@ -366,7 +369,7 @@ mod tests {
     #[test]
     fn canonical_layout_exists() {
         let (mut fs, _) = setup();
-        for p in ["/images", "/images/blobs", "/containers", "/data"] {
+        for p in ["/images", "/images/blobs", "/images/chunks", "/containers", "/data"] {
             assert!(fs.walk(p).is_ok(), "{p}");
         }
     }

@@ -1,0 +1,331 @@
+//! Copy-on-write writable layers over the chunk store.
+//!
+//! A writable layer is a container's private view of its image: a vector
+//! of chunk references into [`super::LayerStore`], initialized by sharing
+//! the image blobs' chunks (refcount++ each, zero bytes copied).  Writes
+//! follow the nrfs rule (SNIPPETS.md): "if a write is made to an object
+//! with a reference count higher than 1 a copy will be made first" — a
+//! CoW break.  Chunks the layer holds exclusively are rewritten in place.
+
+use std::collections::HashMap;
+
+use super::LayerStore;
+use crate::lambdafs::{FsError, FsResult, LambdaFs};
+use crate::metrics::{names, Counters};
+use crate::ssd::SsdDevice;
+use crate::util::SimTime;
+
+pub type LayerId = u64;
+
+struct WritableLayer {
+    chunks: Vec<u64>,
+    len: u64,
+}
+
+/// All writable layers of one DockerSSD.
+#[derive(Default)]
+pub struct CowStore {
+    layers: HashMap<LayerId, WritableLayer>,
+    next_id: LayerId,
+    /// Writes that had to copy a shared chunk first.
+    pub cow_breaks: u64,
+    /// Chunk rewrites of any kind (in-place + breaks).
+    pub chunk_writes: u64,
+}
+
+impl CowStore {
+    pub fn new() -> Self {
+        CowStore {
+            layers: HashMap::new(),
+            next_id: 1,
+            cow_breaks: 0,
+            chunk_writes: 0,
+        }
+    }
+
+    pub fn layer_count(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn len_of(&self, layer: LayerId) -> Option<u64> {
+        self.layers.get(&layer).map(|l| l.len)
+    }
+
+    /// Chunk digests currently backing a layer (for tests/diagnostics).
+    pub fn chunks_of(&self, layer: LayerId) -> Option<&[u64]> {
+        self.layers.get(&layer).map(|l| l.chunks.as_slice())
+    }
+
+    /// Create a writable layer over an image's blob chain (bottom-most
+    /// first), sharing every chunk — no bytes move.  `None` if any blob
+    /// is missing from the store.
+    pub fn fork_from_blobs(&mut self, store: &mut LayerStore, blobs: &[u64]) -> Option<LayerId> {
+        let mut chunks = Vec::new();
+        let mut len = 0u64;
+        for d in blobs {
+            chunks.extend_from_slice(store.blob_chunks(*d)?);
+            len += store.blob_len(*d)?;
+        }
+        for c in &chunks {
+            store
+                .incref_chunk(*c)
+                .expect("blob recipe references live chunks");
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.layers.insert(id, WritableLayer { chunks, len });
+        Some(id)
+    }
+
+    /// Clone a writable layer (container fork): shares all chunks.
+    pub fn clone_layer(&mut self, store: &mut LayerStore, layer: LayerId) -> Option<LayerId> {
+        let (chunks, len) = {
+            let l = self.layers.get(&layer)?;
+            (l.chunks.clone(), l.len)
+        };
+        for c in &chunks {
+            store.incref_chunk(*c).expect("layer references live chunks");
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.layers.insert(id, WritableLayer { chunks, len });
+        Some(id)
+    }
+
+    /// Read a layer's full contents, charging flash read time per chunk.
+    pub fn read(
+        &self,
+        store: &mut LayerStore,
+        fs: &mut LambdaFs,
+        dev: &mut SsdDevice,
+        at: SimTime,
+        layer: LayerId,
+    ) -> Result<FsResult<Vec<u8>>, FsError> {
+        let l = self.layers.get(&layer).ok_or(FsError::NotFound)?;
+        let chunks = l.chunks.clone();
+        let mut out = Vec::with_capacity(l.len as usize);
+        let mut done = at;
+        for c in chunks {
+            let r = store.read_chunk(fs, dev, done, c)?;
+            done = r.done;
+            out.extend_from_slice(&r.value);
+        }
+        Ok(FsResult { value: out, done })
+    }
+
+    /// Write `data` at byte `offset` within the layer (read-modify-write
+    /// at chunk granularity).  Shared chunks are copied first (CoW
+    /// break); exclusive chunks are rewritten in place; a write that
+    /// leaves a chunk's bytes unchanged is a no-op.  Writes must stay
+    /// within the layer's length.
+    pub fn write_at(
+        &mut self,
+        store: &mut LayerStore,
+        fs: &mut LambdaFs,
+        dev: &mut SsdDevice,
+        at: SimTime,
+        layer: LayerId,
+        offset: u64,
+        data: &[u8],
+    ) -> Result<FsResult<()>, FsError> {
+        let l = self.layers.get(&layer).ok_or(FsError::NotFound)?;
+        let end = offset + data.len() as u64;
+        assert!(end <= l.len, "write [{offset}, {end}) beyond layer len {}", l.len);
+
+        // chunk spans: (index, digest, start offset, length)
+        let mut spans = Vec::new();
+        let mut cursor = 0u64;
+        for (i, &c) in l.chunks.iter().enumerate() {
+            let clen = store.dedup.bytes_of(c).expect("layer chunk is live");
+            if cursor < end && cursor + clen > offset {
+                spans.push((i, c, cursor, clen));
+            }
+            cursor += clen;
+        }
+
+        let mut done = at;
+        let mut replacements: Vec<(usize, u64)> = Vec::new();
+        for (i, old, start, clen) in spans {
+            let r = store.read_chunk(fs, dev, done, old)?;
+            done = r.done;
+            let mut bytes = r.value;
+            debug_assert_eq!(bytes.len() as u64, clen);
+            let lo = offset.max(start);
+            let hi = end.min(start + clen);
+            let src = &data[(lo - offset) as usize..(hi - offset) as usize];
+            let dst = &mut bytes[(lo - start) as usize..(hi - start) as usize];
+            if dst == src {
+                continue; // identical content: no write, no break
+            }
+            dst.copy_from_slice(src);
+            let shared = store.dedup.refs_of(old) > 1;
+            let w = store.reference_chunk_data(fs, dev, done, &bytes)?;
+            done = w.done;
+            store.release_chunk(fs, old)?;
+            if shared {
+                self.cow_breaks += 1;
+            }
+            self.chunk_writes += 1;
+            replacements.push((i, w.value));
+        }
+        let l = self.layers.get_mut(&layer).expect("checked above");
+        for (i, digest) in replacements {
+            l.chunks[i] = digest;
+        }
+        Ok(FsResult { value: (), done })
+    }
+
+    /// Destroy a layer, releasing its chunk references (unshared chunks
+    /// are reclaimed from λFS).
+    pub fn drop_layer(
+        &mut self,
+        store: &mut LayerStore,
+        fs: &mut LambdaFs,
+        layer: LayerId,
+    ) -> Result<(), FsError> {
+        let l = self.layers.remove(&layer).ok_or(FsError::NotFound)?;
+        for c in l.chunks {
+            store.release_chunk(fs, c)?;
+        }
+        Ok(())
+    }
+
+    pub fn export_counters(&self, c: &mut Counters) {
+        c.add(names::COW_BREAKS, self.cow_breaks);
+        c.add(names::COW_CHUNK_WRITES, self.chunk_writes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SsdConfig;
+
+    const CHUNK: usize = 4 << 10;
+
+    fn rig() -> (CowStore, LayerStore, LambdaFs, SsdDevice) {
+        let dev = SsdDevice::new(SsdConfig::default());
+        let fs = LambdaFs::over_device(&dev);
+        (CowStore::new(), LayerStore::new(CHUNK), fs, dev)
+    }
+
+    fn body(seed: u8, len: usize) -> Vec<u8> {
+        (0..len).map(|i| seed.wrapping_add((i % 247) as u8)).collect()
+    }
+
+    #[test]
+    fn fork_shares_chunks_and_reads_back_image() {
+        let (mut cow, mut st, mut fs, mut dev) = rig();
+        let l0 = body(1, 2 * CHUNK);
+        let l1 = body(2, CHUNK);
+        let d0 = st.put_blob(&mut fs, &mut dev, SimTime::ZERO, &l0).unwrap().value;
+        let d1 = st.put_blob(&mut fs, &mut dev, SimTime::ZERO, &l1).unwrap().value;
+        let unique = st.unique_bytes();
+        let layer = cow.fork_from_blobs(&mut st, &[d0, d1]).unwrap();
+        assert_eq!(st.unique_bytes(), unique, "fork copies nothing");
+        let r = cow.read(&mut st, &mut fs, &mut dev, SimTime::ZERO, layer).unwrap();
+        let mut want = l0.clone();
+        want.extend(&l1);
+        assert_eq!(r.value, want);
+    }
+
+    #[test]
+    fn write_to_shared_chunk_breaks_cow_and_preserves_parent() {
+        let (mut cow, mut st, mut fs, mut dev) = rig();
+        let blob = body(3, 3 * CHUNK);
+        let d = st.put_blob(&mut fs, &mut dev, SimTime::ZERO, &blob).unwrap().value;
+        let layer = cow.fork_from_blobs(&mut st, &[d]).unwrap();
+        let patch = vec![0xEE; 100];
+        cow.write_at(&mut st, &mut fs, &mut dev, SimTime::ZERO, layer, (CHUNK + 7) as u64, &patch)
+            .unwrap();
+        assert_eq!(cow.cow_breaks, 1);
+        // parent blob is untouched
+        let parent = st.get_blob(&mut fs, &mut dev, SimTime::ZERO, d).unwrap();
+        assert_eq!(parent.value, blob);
+        // layer sees the patch
+        let r = cow.read(&mut st, &mut fs, &mut dev, SimTime::ZERO, layer).unwrap();
+        assert_eq!(&r.value[CHUNK + 7..CHUNK + 107], &patch[..]);
+        assert_eq!(r.value[..CHUNK], blob[..CHUNK]);
+    }
+
+    #[test]
+    fn exclusive_chunk_rewrites_in_place_without_break() {
+        let (mut cow, mut st, mut fs, mut dev) = rig();
+        let blob = body(4, CHUNK);
+        let d = st.put_blob(&mut fs, &mut dev, SimTime::ZERO, &blob).unwrap().value;
+        let layer = cow.fork_from_blobs(&mut st, &[d]).unwrap();
+        cow.write_at(&mut st, &mut fs, &mut dev, SimTime::ZERO, layer, 0, &[1, 2, 3])
+            .unwrap();
+        assert_eq!(cow.cow_breaks, 1, "first write copies off the blob");
+        let chunks_before = st.dedup.chunk_count();
+        cow.write_at(&mut st, &mut fs, &mut dev, SimTime::ZERO, layer, 0, &[9, 9, 9])
+            .unwrap();
+        assert_eq!(cow.cow_breaks, 1, "second write owns the chunk");
+        assert_eq!(cow.chunk_writes, 2);
+        assert_eq!(st.dedup.chunk_count(), chunks_before, "old private chunk reclaimed");
+    }
+
+    #[test]
+    fn identical_write_is_noop() {
+        let (mut cow, mut st, mut fs, mut dev) = rig();
+        let blob = body(5, CHUNK);
+        let d = st.put_blob(&mut fs, &mut dev, SimTime::ZERO, &blob).unwrap().value;
+        let layer = cow.fork_from_blobs(&mut st, &[d]).unwrap();
+        cow.write_at(&mut st, &mut fs, &mut dev, SimTime::ZERO, layer, 10, &blob[10..20].to_vec())
+            .unwrap();
+        assert_eq!(cow.cow_breaks, 0);
+        assert_eq!(cow.chunk_writes, 0);
+    }
+
+    #[test]
+    fn clone_isolates_siblings() {
+        let (mut cow, mut st, mut fs, mut dev) = rig();
+        let blob = body(6, 2 * CHUNK);
+        let d = st.put_blob(&mut fs, &mut dev, SimTime::ZERO, &blob).unwrap().value;
+        let a = cow.fork_from_blobs(&mut st, &[d]).unwrap();
+        let b = cow.clone_layer(&mut st, a).unwrap();
+        cow.write_at(&mut st, &mut fs, &mut dev, SimTime::ZERO, b, 0, &[7u8; 64])
+            .unwrap();
+        let ra = cow.read(&mut st, &mut fs, &mut dev, SimTime::ZERO, a).unwrap();
+        assert_eq!(ra.value, blob, "sibling a unaffected by b's write");
+        let rb = cow.read(&mut st, &mut fs, &mut dev, SimTime::ZERO, b).unwrap();
+        assert_eq!(&rb.value[..64], &[7u8; 64]);
+    }
+
+    #[test]
+    fn drop_layers_then_blob_reclaims_everything() {
+        let (mut cow, mut st, mut fs, mut dev) = rig();
+        let blob = body(7, 2 * CHUNK + 100);
+        let d = st.put_blob(&mut fs, &mut dev, SimTime::ZERO, &blob).unwrap().value;
+        let a = cow.fork_from_blobs(&mut st, &[d]).unwrap();
+        let b = cow.clone_layer(&mut st, a).unwrap();
+        cow.write_at(&mut st, &mut fs, &mut dev, SimTime::ZERO, b, 0, &[1u8; 32]).unwrap();
+        cow.drop_layer(&mut st, &mut fs, a).unwrap();
+        cow.drop_layer(&mut st, &mut fs, b).unwrap();
+        st.unref_blob(&mut fs, d).unwrap();
+        assert_eq!(st.unique_bytes(), 0);
+        assert_eq!(st.dedup.chunk_count(), 0);
+        assert!(fs.list("/images/chunks").unwrap().is_empty());
+    }
+
+    #[test]
+    fn write_spanning_chunks_patches_both() {
+        let (mut cow, mut st, mut fs, mut dev) = rig();
+        let blob = body(8, 2 * CHUNK);
+        let d = st.put_blob(&mut fs, &mut dev, SimTime::ZERO, &blob).unwrap().value;
+        let layer = cow.fork_from_blobs(&mut st, &[d]).unwrap();
+        let patch: Vec<u8> = (0..200).map(|i| i as u8 ^ 0xFF).collect();
+        let off = (CHUNK - 100) as u64;
+        cow.write_at(&mut st, &mut fs, &mut dev, SimTime::ZERO, layer, off, &patch).unwrap();
+        assert_eq!(cow.cow_breaks, 2, "both spanned chunks were shared");
+        let r = cow.read(&mut st, &mut fs, &mut dev, SimTime::ZERO, layer).unwrap();
+        assert_eq!(&r.value[off as usize..off as usize + 200], &patch[..]);
+        assert_eq!(st.get_blob(&mut fs, &mut dev, SimTime::ZERO, d).unwrap().value, blob);
+    }
+
+    #[test]
+    fn fork_missing_blob_is_none() {
+        let (mut cow, mut st, _, _) = rig();
+        assert!(cow.fork_from_blobs(&mut st, &[0xBAD]).is_none());
+    }
+}

@@ -1,0 +1,172 @@
+//! Chunk-level dedup index: content digest -> reference-counted entry.
+//!
+//! The index is the single source of truth for chunk liveness.  Every
+//! consumer of a chunk — a stored blob recipe, a writable CoW layer —
+//! holds exactly one reference per use; a chunk whose count reaches zero
+//! is reclaimable and its λFS backing file can be unlinked (the
+//! nrfs-style "reference count of an object" rule, SNIPPETS.md).
+
+use std::collections::HashMap;
+
+/// One live chunk.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkEntry {
+    /// Outstanding references (blob recipes + writable layers).
+    pub refs: u32,
+    /// Content length in bytes.
+    pub bytes: u64,
+}
+
+/// Outcome of dropping one reference.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decref {
+    /// Chunk still referenced; remaining count.
+    Live(u32),
+    /// Last reference dropped; the chunk's bytes are reclaimable.
+    Reclaimed(u64),
+}
+
+/// The dedup index over all store chunks.
+#[derive(Default)]
+pub struct DedupIndex {
+    chunks: HashMap<u64, ChunkEntry>,
+    unique_bytes: u64,
+    logical_bytes: u64,
+}
+
+impl DedupIndex {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Take a reference on `digest`, creating the entry if the content is
+    /// new.  Returns `true` exactly when the caller must persist the
+    /// chunk (first reference), `false` on a dedup hit.
+    pub fn reference(&mut self, digest: u64, bytes: u64) -> bool {
+        self.logical_bytes += bytes;
+        match self.chunks.get_mut(&digest) {
+            Some(e) => {
+                e.refs += 1;
+                false
+            }
+            None => {
+                self.chunks.insert(digest, ChunkEntry { refs: 1, bytes });
+                self.unique_bytes += bytes;
+                true
+            }
+        }
+    }
+
+    /// Take a reference on a chunk already known to the index.  Returns
+    /// the new count, or `None` if the digest is unknown.
+    pub fn incref(&mut self, digest: u64) -> Option<u32> {
+        let e = self.chunks.get_mut(&digest)?;
+        e.refs += 1;
+        self.logical_bytes += e.bytes;
+        Some(e.refs)
+    }
+
+    /// Drop one reference.  Panics if the digest is unknown — a release
+    /// without a matching reference is a bookkeeping bug, not a runtime
+    /// condition.
+    pub fn release(&mut self, digest: u64) -> Decref {
+        let e = self
+            .chunks
+            .get_mut(&digest)
+            .unwrap_or_else(|| panic!("release of unknown chunk {digest:016x}"));
+        e.refs -= 1;
+        self.logical_bytes -= e.bytes;
+        if e.refs == 0 {
+            let bytes = e.bytes;
+            self.chunks.remove(&digest);
+            self.unique_bytes -= bytes;
+            Decref::Reclaimed(bytes)
+        } else {
+            Decref::Live(self.chunks[&digest].refs)
+        }
+    }
+
+    pub fn contains(&self, digest: u64) -> bool {
+        self.chunks.contains_key(&digest)
+    }
+
+    pub fn refs_of(&self, digest: u64) -> u32 {
+        self.chunks.get(&digest).map_or(0, |e| e.refs)
+    }
+
+    pub fn bytes_of(&self, digest: u64) -> Option<u64> {
+        self.chunks.get(&digest).map(|e| e.bytes)
+    }
+
+    /// Bytes of distinct content currently stored.
+    pub fn unique_bytes(&self) -> u64 {
+        self.unique_bytes
+    }
+
+    /// Bytes as seen by consumers (every reference counts its length).
+    pub fn logical_bytes(&self) -> u64 {
+        self.logical_bytes
+    }
+
+    pub fn chunk_count(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// logical / unique — 1.0 means no sharing, higher is better.
+    pub fn dedup_ratio(&self) -> f64 {
+        if self.unique_bytes == 0 {
+            return 1.0;
+        }
+        self.logical_bytes as f64 / self.unique_bytes as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_reference_persists_later_ones_dedup() {
+        let mut idx = DedupIndex::new();
+        assert!(idx.reference(0xA, 100));
+        assert!(!idx.reference(0xA, 100));
+        assert!(idx.reference(0xB, 50));
+        assert_eq!(idx.refs_of(0xA), 2);
+        assert_eq!(idx.unique_bytes(), 150);
+        assert_eq!(idx.logical_bytes(), 250);
+    }
+
+    #[test]
+    fn release_reclaims_at_zero() {
+        let mut idx = DedupIndex::new();
+        idx.reference(0xA, 100);
+        idx.incref(0xA).unwrap();
+        assert_eq!(idx.release(0xA), Decref::Live(1));
+        assert_eq!(idx.release(0xA), Decref::Reclaimed(100));
+        assert!(!idx.contains(0xA));
+        assert_eq!(idx.unique_bytes(), 0);
+        assert_eq!(idx.logical_bytes(), 0);
+    }
+
+    #[test]
+    fn incref_unknown_is_none() {
+        let mut idx = DedupIndex::new();
+        assert_eq!(idx.incref(0x123), None);
+    }
+
+    #[test]
+    fn dedup_ratio_reflects_sharing() {
+        let mut idx = DedupIndex::new();
+        assert_eq!(idx.dedup_ratio(), 1.0);
+        idx.reference(0xA, 100);
+        idx.reference(0xA, 100);
+        idx.reference(0xA, 100);
+        assert!((idx.dedup_ratio() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn release_unknown_panics() {
+        DedupIndex::new().release(0xDEAD);
+    }
+}

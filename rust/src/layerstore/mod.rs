@@ -1,0 +1,423 @@
+//! LayerStore — content-addressed, deduplicated, copy-on-write layer
+//! storage shared across the SSD pool.
+//!
+//! The seed reproduction moved every image blob onto each node's private
+//! namespace verbatim, so booting N replicas cost N × image bytes.  This
+//! subsystem makes container-boot cost scale with *unique* bytes instead
+//! (the nrfs idiom from SNIPPETS.md — out-of-band dedup + CoW via
+//! per-object reference counts):
+//!
+//! * [`LayerStore`] (this module): blobs are split into fixed-size
+//!   chunks, each addressed by its FNV-1a digest and persisted as a λFS
+//!   file under `/images/chunks/<digest>` — so every chunk read/write
+//!   charges simulated flash time through [`crate::lambdafs`].
+//! * [`dedup`]: the chunk refcount index; a chunk is stored once no
+//!   matter how many blobs or writable layers reference it.
+//! * [`cow`]: writable per-container layers.  A write to a chunk with
+//!   refcount > 1 copies first (CoW break); exclusive chunks are
+//!   rewritten in place.
+//! * [`poolcache`]: pool-wide layer-presence map.  A node that needs a
+//!   layer fetches it from the nearest healthy peer over the Ether-oN
+//!   intranet instead of re-crossing the registry WAN.
+
+pub mod cow;
+pub mod dedup;
+pub mod poolcache;
+
+use std::collections::HashMap;
+
+use crate::lambdafs::{FsError, FsResult, LambdaFs, LockSide};
+use crate::metrics::{names, Counters};
+use crate::ssd::SsdDevice;
+use crate::util::{fnv1a, SimTime};
+
+pub use cow::{CowStore, LayerId};
+pub use dedup::{ChunkEntry, Decref, DedupIndex};
+pub use poolcache::{FetchSource, PoolLayerCache, REGISTRY_WAN_FACTOR};
+
+/// Default chunk size: 64KiB, the nrfs embedded-data threshold — small
+/// enough that single-file edits don't rewrite whole layers, large
+/// enough that chunk metadata stays negligible.
+pub const DEFAULT_CHUNK_BYTES: usize = 64 << 10;
+
+/// How a stored blob is reassembled: its chunk digests, in order.
+struct Recipe {
+    chunks: Vec<u64>,
+    len: u64,
+    /// Blob-level references (images installed / pulls served).
+    refs: u32,
+}
+
+/// Counters the store maintains; exported into [`Counters`] under the
+/// canonical [`names`] keys.
+#[derive(Clone, Debug, Default)]
+pub struct StoreStats {
+    /// put_blob calls that created a new recipe.
+    pub blobs_stored: u64,
+    /// put_blob / ref_blob calls satisfied by an existing recipe.
+    pub blob_hits: u64,
+    /// Chunk references satisfied without programming flash.
+    pub dedup_hits: u64,
+    pub chunks_written: u64,
+    /// Cumulative bytes pushed through put_blob.
+    pub bytes_logical: u64,
+    /// Bytes actually programmed to flash.
+    pub bytes_written: u64,
+    /// Bytes avoided by chunk- or blob-level dedup.
+    pub bytes_deduped: u64,
+    pub chunks_reclaimed: u64,
+    pub bytes_reclaimed: u64,
+}
+
+/// The content-addressed chunk store of one DockerSSD.
+pub struct LayerStore {
+    chunk_bytes: usize,
+    pub dedup: DedupIndex,
+    recipes: HashMap<u64, Recipe>,
+    pub stats: StoreStats,
+}
+
+impl Default for LayerStore {
+    fn default() -> Self {
+        Self::new(DEFAULT_CHUNK_BYTES)
+    }
+}
+
+impl LayerStore {
+    pub fn new(chunk_bytes: usize) -> Self {
+        assert!(chunk_bytes > 0, "chunk size must be positive");
+        LayerStore {
+            chunk_bytes,
+            dedup: DedupIndex::new(),
+            recipes: HashMap::new(),
+            stats: StoreStats::default(),
+        }
+    }
+
+    pub fn chunk_bytes(&self) -> usize {
+        self.chunk_bytes
+    }
+
+    /// λFS backing file for a chunk.
+    pub fn chunk_path(digest: u64) -> String {
+        format!("/images/chunks/{digest:016x}")
+    }
+
+    pub fn has_blob(&self, digest: u64) -> bool {
+        self.recipes.contains_key(&digest)
+    }
+
+    pub fn blob_len(&self, digest: u64) -> Option<u64> {
+        self.recipes.get(&digest).map(|r| r.len)
+    }
+
+    pub fn blob_refs(&self, digest: u64) -> u32 {
+        self.recipes.get(&digest).map_or(0, |r| r.refs)
+    }
+
+    /// Chunk digests of a stored blob, bottom-up order.
+    pub fn blob_chunks(&self, digest: u64) -> Option<&[u64]> {
+        self.recipes.get(&digest).map(|r| r.chunks.as_slice())
+    }
+
+    /// Bytes of distinct content on flash.
+    pub fn unique_bytes(&self) -> u64 {
+        self.dedup.unique_bytes()
+    }
+
+    // --- chunk-level operations (shared with the CoW layer) ---------------
+
+    /// Reference chunk content: dedup-hit if the content exists, else
+    /// persist it to λFS (charging program time).  Returns the digest.
+    pub fn reference_chunk_data(
+        &mut self,
+        fs: &mut LambdaFs,
+        dev: &mut SsdDevice,
+        at: SimTime,
+        data: &[u8],
+    ) -> Result<FsResult<u64>, FsError> {
+        let digest = fnv1a(data);
+        if self.dedup.reference(digest, data.len() as u64) {
+            self.stats.chunks_written += 1;
+            self.stats.bytes_written += data.len() as u64;
+            let r = fs.write_file(dev, at, &Self::chunk_path(digest), data, LockSide::Isp)?;
+            Ok(FsResult {
+                value: digest,
+                done: r.done,
+            })
+        } else {
+            self.stats.dedup_hits += 1;
+            self.stats.bytes_deduped += data.len() as u64;
+            Ok(FsResult {
+                value: digest,
+                done: at,
+            })
+        }
+    }
+
+    /// Take an extra reference on an existing chunk.
+    pub fn incref_chunk(&mut self, digest: u64) -> Result<(), FsError> {
+        self.dedup.incref(digest).map(|_| ()).ok_or(FsError::NotFound)
+    }
+
+    /// Read one chunk back, charging flash read time.
+    pub fn read_chunk(
+        &mut self,
+        fs: &mut LambdaFs,
+        dev: &mut SsdDevice,
+        at: SimTime,
+        digest: u64,
+    ) -> Result<FsResult<Vec<u8>>, FsError> {
+        fs.read_file(dev, at, &Self::chunk_path(digest), LockSide::Isp)
+    }
+
+    /// Drop one chunk reference; unlinks the λFS file when the count hits
+    /// zero.  Returns `true` if the chunk was reclaimed.
+    pub fn release_chunk(&mut self, fs: &mut LambdaFs, digest: u64) -> Result<bool, FsError> {
+        match self.dedup.release(digest) {
+            Decref::Live(_) => Ok(false),
+            Decref::Reclaimed(bytes) => {
+                self.stats.chunks_reclaimed += 1;
+                self.stats.bytes_reclaimed += bytes;
+                fs.unlink(&Self::chunk_path(digest))?;
+                Ok(true)
+            }
+        }
+    }
+
+    // --- blob-level operations --------------------------------------------
+
+    /// Store a blob: chunk it, dedup each chunk, persist the new ones.
+    /// Storing content that is already present is a pure metadata hit
+    /// (no flash traffic, no simulated time).  Returns the blob digest.
+    pub fn put_blob(
+        &mut self,
+        fs: &mut LambdaFs,
+        dev: &mut SsdDevice,
+        at: SimTime,
+        bytes: &[u8],
+    ) -> Result<FsResult<u64>, FsError> {
+        let digest = fnv1a(bytes);
+        self.stats.bytes_logical += bytes.len() as u64;
+        if let Some(r) = self.recipes.get_mut(&digest) {
+            r.refs += 1;
+            self.stats.blob_hits += 1;
+            self.stats.bytes_deduped += bytes.len() as u64;
+            return Ok(FsResult {
+                value: digest,
+                done: at,
+            });
+        }
+        let mut chunks = Vec::new();
+        let mut done = at;
+        if bytes.is_empty() {
+            // zero-length blob: recipe with no chunks
+        } else {
+            for chunk in bytes.chunks(self.chunk_bytes) {
+                let r = self.reference_chunk_data(fs, dev, done, chunk)?;
+                done = r.done;
+                chunks.push(r.value);
+            }
+        }
+        self.recipes.insert(
+            digest,
+            Recipe {
+                chunks,
+                len: bytes.len() as u64,
+                refs: 1,
+            },
+        );
+        self.stats.blobs_stored += 1;
+        Ok(FsResult {
+            value: digest,
+            done,
+        })
+    }
+
+    /// Take an extra blob-level reference (an image pull served entirely
+    /// from the store).  Returns `false` if the blob is absent.
+    pub fn ref_blob(&mut self, digest: u64) -> bool {
+        match self.recipes.get_mut(&digest) {
+            Some(r) => {
+                r.refs += 1;
+                self.stats.blob_hits += 1;
+                self.stats.bytes_deduped += r.len;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Reassemble a blob, charging read time chunk by chunk.
+    pub fn get_blob(
+        &mut self,
+        fs: &mut LambdaFs,
+        dev: &mut SsdDevice,
+        at: SimTime,
+        digest: u64,
+    ) -> Result<FsResult<Vec<u8>>, FsError> {
+        let (chunks, len) = {
+            let r = self.recipes.get(&digest).ok_or(FsError::NotFound)?;
+            (r.chunks.clone(), r.len)
+        };
+        let mut out = Vec::with_capacity(len as usize);
+        let mut done = at;
+        for c in chunks {
+            let r = self.read_chunk(fs, dev, done, c)?;
+            done = r.done;
+            out.extend_from_slice(&r.value);
+        }
+        debug_assert_eq!(out.len() as u64, len, "recipe chunks must partition the blob");
+        Ok(FsResult { value: out, done })
+    }
+
+    /// Drop one blob reference; at zero the recipe is removed and its
+    /// chunk references released (reclaiming unshared chunks from λFS).
+    pub fn unref_blob(&mut self, fs: &mut LambdaFs, digest: u64) -> Result<(), FsError> {
+        let recipe = self.recipes.get_mut(&digest).ok_or(FsError::NotFound)?;
+        recipe.refs -= 1;
+        if recipe.refs > 0 {
+            return Ok(());
+        }
+        let chunks = self.recipes.remove(&digest).expect("recipe present").chunks;
+        for c in chunks {
+            self.release_chunk(fs, c)?;
+        }
+        Ok(())
+    }
+
+    /// Export the store's counters under the canonical metric names.
+    pub fn export_counters(&self, c: &mut Counters) {
+        c.add(names::DEDUP_HITS, self.stats.dedup_hits);
+        c.add(names::CHUNKS_WRITTEN, self.stats.chunks_written);
+        c.add(names::BYTES_WRITTEN, self.stats.bytes_written);
+        c.add(names::BYTES_DEDUPED, self.stats.bytes_deduped);
+        c.add(names::CHUNKS_RECLAIMED, self.stats.chunks_reclaimed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SsdConfig;
+
+    fn rig() -> (LayerStore, LambdaFs, SsdDevice) {
+        let dev = SsdDevice::new(SsdConfig::default());
+        let fs = LambdaFs::over_device(&dev);
+        (LayerStore::new(4 << 10), fs, dev)
+    }
+
+    fn body(seed: u8, len: usize) -> Vec<u8> {
+        (0..len).map(|i| seed.wrapping_add((i % 251) as u8)).collect()
+    }
+
+    #[test]
+    fn put_get_round_trips_and_charges_time() {
+        let (mut st, mut fs, mut dev) = rig();
+        let data = body(1, 10_000);
+        let w = st.put_blob(&mut fs, &mut dev, SimTime::ZERO, &data).unwrap();
+        assert!(w.done > SimTime::ZERO, "chunk writes must take simulated time");
+        let r = st.get_blob(&mut fs, &mut dev, w.done, w.value).unwrap();
+        assert_eq!(r.value, data);
+        assert!(r.done > w.done, "chunk reads must take simulated time");
+    }
+
+    #[test]
+    fn duplicate_put_is_free_metadata_hit() {
+        let (mut st, mut fs, mut dev) = rig();
+        let data = body(2, 20_000);
+        let w1 = st.put_blob(&mut fs, &mut dev, SimTime::ZERO, &data).unwrap();
+        let written = st.stats.bytes_written;
+        let w2 = st.put_blob(&mut fs, &mut dev, w1.done, &data).unwrap();
+        assert_eq!(w1.value, w2.value);
+        assert_eq!(w2.done, w1.done, "dedup'd put must not program flash");
+        assert_eq!(st.stats.bytes_written, written);
+        assert_eq!(st.stats.blob_hits, 1);
+        assert_eq!(st.blob_refs(w1.value), 2);
+    }
+
+    #[test]
+    fn shared_chunks_stored_once_across_blobs() {
+        let (mut st, mut fs, mut dev) = rig();
+        // two blobs sharing their first 8KiB (two 4KiB chunks)
+        let mut a = body(3, 8 << 10);
+        let mut b = a.clone();
+        a.extend(body(4, 4 << 10));
+        b.extend(body(5, 4 << 10));
+        st.put_blob(&mut fs, &mut dev, SimTime::ZERO, &a).unwrap();
+        let before = st.stats.bytes_written;
+        st.put_blob(&mut fs, &mut dev, SimTime::ZERO, &b).unwrap();
+        assert_eq!(
+            st.stats.bytes_written - before,
+            4 << 10,
+            "only b's unique tail chunk hits flash"
+        );
+        assert_eq!(st.stats.dedup_hits, 2);
+        assert_eq!(st.unique_bytes(), 12 << 10);
+    }
+
+    #[test]
+    fn unref_reclaims_unshared_chunks_only() {
+        let (mut st, mut fs, mut dev) = rig();
+        let mut a = body(6, 4 << 10);
+        let shared = body(7, 4 << 10);
+        a.extend(&shared);
+        let mut b = shared.clone();
+        b.extend(body(8, 4 << 10));
+        let da = st.put_blob(&mut fs, &mut dev, SimTime::ZERO, &a).unwrap().value;
+        let db = st.put_blob(&mut fs, &mut dev, SimTime::ZERO, &b).unwrap().value;
+        st.unref_blob(&mut fs, da).unwrap();
+        assert!(!st.has_blob(da));
+        assert_eq!(st.stats.chunks_reclaimed, 1, "only a's private chunk goes");
+        assert_eq!(st.unique_bytes(), 8 << 10);
+        // b still reads back intact
+        let r = st.get_blob(&mut fs, &mut dev, SimTime::ZERO, db).unwrap();
+        assert_eq!(r.value, b);
+        st.unref_blob(&mut fs, db).unwrap();
+        assert_eq!(st.unique_bytes(), 0);
+        assert!(fs.list("/images/chunks").unwrap().is_empty());
+    }
+
+    #[test]
+    fn unref_respects_blob_refcount() {
+        let (mut st, mut fs, mut dev) = rig();
+        let data = body(9, 6_000);
+        let d = st.put_blob(&mut fs, &mut dev, SimTime::ZERO, &data).unwrap().value;
+        assert!(st.ref_blob(d));
+        st.unref_blob(&mut fs, d).unwrap();
+        assert!(st.has_blob(d), "one reference remains");
+        st.unref_blob(&mut fs, d).unwrap();
+        assert!(!st.has_blob(d));
+    }
+
+    #[test]
+    fn empty_blob_round_trips() {
+        let (mut st, mut fs, mut dev) = rig();
+        let d = st.put_blob(&mut fs, &mut dev, SimTime::ZERO, &[]).unwrap().value;
+        let r = st.get_blob(&mut fs, &mut dev, SimTime::ZERO, d).unwrap();
+        assert!(r.value.is_empty());
+    }
+
+    #[test]
+    fn missing_blob_errors() {
+        let (mut st, mut fs, mut dev) = rig();
+        assert_eq!(
+            st.get_blob(&mut fs, &mut dev, SimTime::ZERO, 0xBAD).unwrap_err(),
+            FsError::NotFound
+        );
+        assert_eq!(st.unref_blob(&mut fs, 0xBAD).unwrap_err(), FsError::NotFound);
+        assert!(!st.ref_blob(0xBAD));
+    }
+
+    #[test]
+    fn counters_export_under_canonical_names() {
+        let (mut st, mut fs, mut dev) = rig();
+        let data = body(10, 9_000);
+        st.put_blob(&mut fs, &mut dev, SimTime::ZERO, &data).unwrap();
+        st.put_blob(&mut fs, &mut dev, SimTime::ZERO, &data).unwrap();
+        let mut c = Counters::new();
+        st.export_counters(&mut c);
+        assert!(c.get(names::BYTES_WRITTEN) >= 9_000);
+        assert_eq!(c.get(names::BYTES_DEDUPED), 9_000);
+    }
+}

@@ -1,0 +1,242 @@
+//! Pool-wide layer-presence map: which nodes hold which blob digests.
+//!
+//! In the seed flow every `docker pull` on every node re-crossed the
+//! registry WAN (paper Figure 2b step 1).  With the presence map, a node
+//! missing a layer fetches it from the nearest healthy *peer* over the
+//! Ether-oN intranet — registry traffic scales with unique bytes in the
+//! pool, not with replica count, which is the whole point of
+//! disaggregation ("In-Storage Domain-Specific Acceleration for
+//! Serverless Computing", PAPERS.md, makes the same cold-start
+//! locality argument).
+
+use std::collections::{BTreeSet, HashMap};
+
+use crate::metrics::{names, Counters};
+use crate::pool::topology::{NodeId, PoolTopology};
+use crate::util::SimTime;
+
+/// Registry pulls leave the rack: host uplink time scaled by a WAN
+/// factor (the registry is a "user-defined location" beyond the host).
+pub const REGISTRY_WAN_FACTOR: f64 = 8.0;
+
+/// Where a needed layer comes from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FetchSource {
+    /// Already resident on the requesting node.
+    Local,
+    /// Copied from a peer DockerSSD over the intranet.
+    Peer(NodeId),
+    /// Pulled across the WAN from the registry.
+    Registry,
+}
+
+/// The presence map plus fetch accounting.
+#[derive(Default)]
+pub struct PoolLayerCache {
+    presence: HashMap<u64, BTreeSet<NodeId>>,
+    pub local_hits: u64,
+    pub peer_fetches: u64,
+    pub registry_fetches: u64,
+    pub bytes_local: u64,
+    pub bytes_from_peers: u64,
+    pub bytes_from_registry: u64,
+}
+
+impl PoolLayerCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record that `node` now holds `digest`.
+    pub fn register(&mut self, node: NodeId, digest: u64) {
+        self.presence.entry(digest).or_default().insert(node);
+    }
+
+    /// Record that `node` dropped `digest` (image removed / GC).
+    pub fn evict(&mut self, node: NodeId, digest: u64) {
+        if let Some(set) = self.presence.get_mut(&digest) {
+            set.remove(&node);
+            if set.is_empty() {
+                self.presence.remove(&digest);
+            }
+        }
+    }
+
+    pub fn node_has(&self, node: NodeId, digest: u64) -> bool {
+        self.presence.get(&digest).map_or(false, |s| s.contains(&node))
+    }
+
+    pub fn holders(&self, digest: u64) -> Vec<NodeId> {
+        self.presence
+            .get(&digest)
+            .map(|s| s.iter().copied().collect())
+            .unwrap_or_default()
+    }
+
+    /// Nodes in the pool holding at least one byte of the image —
+    /// i.e. candidates for locality-aware placement.
+    pub fn layers_present(&self, node: NodeId, digests: &[u64]) -> usize {
+        digests.iter().filter(|d| self.node_has(node, **d)).count()
+    }
+
+    /// Nearest healthy holder of `digest` by link time (ties broken by
+    /// lowest node id via BTreeSet iteration order + strict `<`).
+    pub fn nearest_peer(
+        &self,
+        topo: &PoolTopology,
+        node: NodeId,
+        digest: u64,
+        bytes: u64,
+    ) -> Option<(NodeId, SimTime)> {
+        let holders = self.presence.get(&digest)?;
+        let mut best: Option<(NodeId, SimTime)> = None;
+        for &h in holders {
+            if h == node || !topo.node(h).map_or(false, |n| n.healthy) {
+                continue;
+            }
+            let t = topo.link_time(h, node, bytes);
+            if best.map_or(true, |(_, bt)| t < bt) {
+                best = Some((h, t));
+            }
+        }
+        best
+    }
+
+    /// Decide where `node` would get `digest` from, and the transfer
+    /// latency. Does not mutate state.
+    pub fn plan(
+        &self,
+        topo: &PoolTopology,
+        node: NodeId,
+        digest: u64,
+        bytes: u64,
+    ) -> (FetchSource, SimTime) {
+        if self.node_has(node, digest) {
+            return (FetchSource::Local, SimTime::ZERO);
+        }
+        if let Some((peer, t)) = self.nearest_peer(topo, node, digest, bytes) {
+            return (FetchSource::Peer(peer), t);
+        }
+        (
+            FetchSource::Registry,
+            topo.host_link_time(node, bytes).scale(REGISTRY_WAN_FACTOR),
+        )
+    }
+
+    /// Execute a fetch: account for it, mark `node` as a holder, and
+    /// return the source + transfer latency.
+    pub fn fetch(
+        &mut self,
+        topo: &PoolTopology,
+        node: NodeId,
+        digest: u64,
+        bytes: u64,
+    ) -> (FetchSource, SimTime) {
+        let (src, t) = self.plan(topo, node, digest, bytes);
+        match src {
+            FetchSource::Local => {
+                self.local_hits += 1;
+                self.bytes_local += bytes;
+            }
+            FetchSource::Peer(_) => {
+                self.peer_fetches += 1;
+                self.bytes_from_peers += bytes;
+            }
+            FetchSource::Registry => {
+                self.registry_fetches += 1;
+                self.bytes_from_registry += bytes;
+            }
+        }
+        self.register(node, digest);
+        (src, t)
+    }
+
+    /// Bytes that never crossed the registry WAN thanks to pool reuse.
+    pub fn wan_bytes_saved(&self) -> u64 {
+        self.bytes_local + self.bytes_from_peers
+    }
+
+    pub fn export_counters(&self, c: &mut Counters) {
+        c.add(names::PEER_FETCHES, self.peer_fetches);
+        c.add(names::REGISTRY_FETCHES, self.registry_fetches);
+        c.add(names::BYTES_FROM_PEERS, self.bytes_from_peers);
+        c.add(names::BYTES_FROM_REGISTRY, self.bytes_from_registry);
+        c.add(names::BYTES_NOT_TRANSFERRED, self.wan_bytes_saved());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PoolConfig;
+
+    fn topo(nodes: u32, arrays: u32) -> PoolTopology {
+        PoolTopology::build(&PoolConfig {
+            nodes_per_array: nodes,
+            arrays,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn cold_pool_goes_to_registry_then_peers() {
+        let t = topo(4, 1);
+        let mut pc = PoolLayerCache::new();
+        let (src, lat) = pc.fetch(&t, 0, 0xD1, 1 << 20);
+        assert_eq!(src, FetchSource::Registry);
+        assert!(lat > SimTime::ZERO);
+        let (src2, lat2) = pc.fetch(&t, 1, 0xD1, 1 << 20);
+        assert_eq!(src2, FetchSource::Peer(0));
+        assert!(lat2 < lat, "intranet beats WAN");
+        let (src3, _) = pc.fetch(&t, 0, 0xD1, 1 << 20);
+        assert_eq!(src3, FetchSource::Local);
+        assert_eq!(pc.registry_fetches, 1);
+        assert_eq!(pc.peer_fetches, 1);
+        assert_eq!(pc.local_hits, 1);
+        assert_eq!(pc.wan_bytes_saved(), 2 << 20);
+    }
+
+    #[test]
+    fn nearest_peer_prefers_same_array() {
+        let t = topo(2, 2); // nodes 0,1 in array 0; 2,3 in array 1
+        let mut pc = PoolLayerCache::new();
+        pc.register(1, 0xD2); // same array as 0
+        pc.register(2, 0xD2); // cross array
+        let (peer, _) = pc.nearest_peer(&t, 0, 0xD2, 4096).unwrap();
+        assert_eq!(peer, 1);
+    }
+
+    #[test]
+    fn unhealthy_holders_are_skipped() {
+        let mut t = topo(3, 1);
+        let mut pc = PoolLayerCache::new();
+        pc.register(1, 0xD3);
+        t.node_mut(1).unwrap().healthy = false;
+        assert!(pc.nearest_peer(&t, 0, 0xD3, 4096).is_none());
+        let (src, _) = pc.plan(&t, 0, 0xD3, 4096);
+        assert_eq!(src, FetchSource::Registry);
+    }
+
+    #[test]
+    fn evict_forgets_presence() {
+        let t = topo(2, 1);
+        let mut pc = PoolLayerCache::new();
+        pc.register(0, 0xD4);
+        assert!(pc.node_has(0, 0xD4));
+        pc.evict(0, 0xD4);
+        assert!(!pc.node_has(0, 0xD4));
+        let (src, _) = pc.plan(&t, 1, 0xD4, 64);
+        assert_eq!(src, FetchSource::Registry);
+    }
+
+    #[test]
+    fn layers_present_counts_for_placement() {
+        let mut pc = PoolLayerCache::new();
+        pc.register(0, 1);
+        pc.register(0, 2);
+        pc.register(1, 2);
+        assert_eq!(pc.layers_present(0, &[1, 2, 3]), 2);
+        assert_eq!(pc.layers_present(1, &[1, 2, 3]), 1);
+        assert_eq!(pc.layers_present(2, &[1, 2, 3]), 0);
+    }
+}

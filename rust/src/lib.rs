@@ -6,11 +6,16 @@
 //! * Substrates: [`nvme`] (queues/commands/namespaces), [`etheron`]
 //!   (Ethernet-over-NVMe), [`ssd`] (flash timing + FTL + ICL), [`lambdafs`]
 //!   (the λ filesystem), [`firmware`] (Virtual-FW handlers + syscall
-//!   emulation), [`docker`] (mini-docker container environment).
+//!   emulation), [`docker`] (mini-docker container environment),
+//!   [`layerstore`] (content-addressed layer storage: chunk-level dedup,
+//!   copy-on-write writable layers, and the pool-wide layer-presence
+//!   cache that turns replica boots into peer fetches instead of
+//!   registry round trips).
 //! * Evaluation substrates: [`models`] (the six data-processing models),
 //!   [`workloads`] (Table 2 generators), [`llm`] (the analytic
 //!   distributed-inference simulator), [`pool`] (disaggregated storage pool).
-//! * Serving: [`runtime`] (PJRT artifact execution), [`coordinator`]
+//! * Serving: `runtime` (PJRT artifact execution, behind the `pjrt`
+//!   feature — the xla bindings are unavailable offline), [`coordinator`]
 //!   (router + batcher + KV manager driving real token generation).
 
 pub mod benchkit;
@@ -19,14 +24,17 @@ pub mod coordinator;
 pub mod docker;
 pub mod json;
 pub mod etheron;
+#[cfg(feature = "pjrt")]
 pub mod examples_support;
 pub mod firmware;
 pub mod lambdafs;
+pub mod layerstore;
 pub mod llm;
 pub mod metrics;
 pub mod models;
 pub mod nvme;
 pub mod pool;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
 pub mod ssd;

@@ -291,6 +291,16 @@ fn docker_demo() {
     println!("stopped + removed; fw syscalls emulated: {}", fw.syscalls.total());
 }
 
+/// Without the `pjrt` feature there is no Engine to serve with (the xla
+/// bindings are unavailable offline); keep the CLI surface but say so.
+#[cfg(not(feature = "pjrt"))]
+fn serve_cmd(_rest: &[String]) {
+    eprintln!("serve requires the real PJRT runtime: rebuild with --features pjrt");
+    eprintln!("(offline builds exclude the xla bindings; see Cargo.toml)");
+    std::process::exit(2);
+}
+
+#[cfg(feature = "pjrt")]
 fn serve_cmd(rest: &[String]) {
     let mut nodes = 2usize;
     let mut requests = 8usize;

@@ -89,6 +89,29 @@ impl LatencyHistogram {
     }
 }
 
+/// Canonical counter names for the [`crate::layerstore`] subsystem, so
+/// every exporter (store, CoW layers, pool cache, benches) lands on the
+/// same keys and tables can be joined across nodes.
+pub mod names {
+    /// Chunk references satisfied without programming flash.
+    pub const DEDUP_HITS: &str = "layerstore.dedup_hits";
+    pub const CHUNKS_WRITTEN: &str = "layerstore.chunks_written";
+    pub const BYTES_WRITTEN: &str = "layerstore.bytes_written";
+    /// Bytes avoided by chunk- or blob-level dedup.
+    pub const BYTES_DEDUPED: &str = "layerstore.bytes_deduped";
+    pub const CHUNKS_RECLAIMED: &str = "layerstore.chunks_reclaimed";
+    /// Writes that had to copy a shared chunk first.
+    pub const COW_BREAKS: &str = "layerstore.cow_breaks";
+    pub const COW_CHUNK_WRITES: &str = "layerstore.cow_chunk_writes";
+    /// Layer fetches served by a peer DockerSSD over the intranet.
+    pub const PEER_FETCHES: &str = "layerstore.peer_fetches";
+    pub const REGISTRY_FETCHES: &str = "layerstore.registry_fetches";
+    pub const BYTES_FROM_PEERS: &str = "layerstore.bytes_from_peers";
+    pub const BYTES_FROM_REGISTRY: &str = "layerstore.bytes_from_registry";
+    /// Bytes that never crossed the registry WAN thanks to pool reuse.
+    pub const BYTES_NOT_TRANSFERRED: &str = "layerstore.bytes_not_transferred";
+}
+
 /// Named counters for substrate statistics.
 #[derive(Clone, Debug, Default)]
 pub struct Counters {

@@ -6,6 +6,7 @@
 use std::collections::HashMap;
 
 use super::topology::{NodeId, PoolTopology};
+use crate::layerstore::PoolLayerCache;
 
 /// Restart policy (compose-like).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -57,6 +58,54 @@ impl Orchestrator {
         let mut placed = Vec::new();
         for r in 0..spec.replicas {
             healthy.sort_by_key(|id| (self.load.get(id).copied().unwrap_or(0), *id));
+            let node = healthy[0];
+            *self.load.entry(node).or_insert(0) += 1;
+            self.placements.push(Placement {
+                deployment: spec.name.clone(),
+                replica: r,
+                node,
+                running: true,
+                restarts: 0,
+            });
+            placed.push(node);
+        }
+        Ok(placed)
+    }
+
+    /// Layer-locality-aware placement: score each healthy node by the
+    /// bytes it would have to fetch (`missing_bytes`) plus a
+    /// load-balancing term (`load × image_bytes`, so one queued replica
+    /// costs as much as one full cold pull), and place on the cheapest —
+    /// ties broken by least load, then lowest id.  A replica landing on
+    /// a warm node boots from the local layerstore instead of pulling
+    /// across the pool — the placement-side half of the dedup story.
+    ///
+    /// `layers` is the image's (blob digest, bytes) list.
+    pub fn deploy_with_layers(
+        &mut self,
+        topo: &PoolTopology,
+        spec: &DeploymentSpec,
+        cache: &PoolLayerCache,
+        layers: &[(u64, u64)],
+    ) -> Result<Vec<NodeId>, String> {
+        let mut healthy: Vec<NodeId> = topo.healthy_nodes().map(|n| n.id).collect();
+        if healthy.is_empty() {
+            return Err("no healthy nodes".into());
+        }
+        let image_bytes: u64 = layers.iter().map(|(_, b)| *b).sum();
+        let missing_bytes = |id: &NodeId| -> u64 {
+            layers
+                .iter()
+                .filter(|(d, _)| !cache.node_has(*id, *d))
+                .map(|(_, b)| *b)
+                .sum()
+        };
+        let mut placed = Vec::new();
+        for r in 0..spec.replicas {
+            healthy.sort_by_key(|id| {
+                let load = self.load.get(id).copied().unwrap_or(0) as u64;
+                (missing_bytes(id) + load * image_bytes, load, *id)
+            });
             let node = healthy[0];
             *self.load.entry(node).or_insert(0) += 1;
             self.placements.push(Placement {
@@ -193,6 +242,54 @@ mod tests {
         t.node_mut(1).unwrap().healthy = false;
         let mut orch = Orchestrator::new();
         assert!(orch.deploy(&t, &spec("infer", 1)).is_err());
+    }
+
+    #[test]
+    fn layer_locality_prefers_warm_nodes() {
+        let t = topo(4);
+        let mut orch = Orchestrator::new();
+        let mut cache = PoolLayerCache::new();
+        // node 2 already holds both layers, node 1 holds one
+        cache.register(2, 0xA);
+        cache.register(2, 0xB);
+        cache.register(1, 0xA);
+        let layers = [(0xA, 1000u64), (0xB, 2000u64)];
+        let placed = orch
+            .deploy_with_layers(&t, &spec("infer", 3), &cache, &layers)
+            .unwrap();
+        assert_eq!(placed[0], 2, "fully warm node first");
+        assert_eq!(placed[1], 1, "partially warm node next: 2000 missing beats 0+1 load");
+        // replica 3: warm-but-loaded node 2 costs 3000, cold idle node 0
+        // costs 3000 too — lower load wins the tie
+        assert_eq!(placed[2], 0);
+    }
+
+    #[test]
+    fn layer_locality_falls_back_to_load_spread_when_cold() {
+        let t = topo(4);
+        let mut orch = Orchestrator::new();
+        let cache = PoolLayerCache::new();
+        let layers = [(0xA, 1000u64)];
+        let placed = orch
+            .deploy_with_layers(&t, &spec("infer", 4), &cache, &layers)
+            .unwrap();
+        let mut sorted = placed.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 4, "cold pool still spreads: {placed:?}");
+    }
+
+    #[test]
+    fn layer_locality_skips_unhealthy_holders() {
+        let mut t = topo(3);
+        let mut cache = PoolLayerCache::new();
+        cache.register(0, 0xA);
+        t.node_mut(0).unwrap().healthy = false;
+        let mut orch = Orchestrator::new();
+        let placed = orch
+            .deploy_with_layers(&t, &spec("infer", 2), &cache, &[(0xA, 512)])
+            .unwrap();
+        assert!(!placed.contains(&0));
     }
 
     #[test]

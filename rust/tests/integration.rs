@@ -10,6 +10,8 @@ use dockerssd::etheron::{EtherOnDriver, MacAddr, TcpStack};
 use dockerssd::etheron::frame::{tcp_frame, EthFrame, Ipv4Packet, TcpSegment};
 use dockerssd::firmware::VirtualFw;
 use dockerssd::lambdafs::{LambdaFs, LockSide};
+use dockerssd::layerstore::{FetchSource, LayerStore, PoolLayerCache};
+use dockerssd::metrics::{names, Counters};
 use dockerssd::nvme::{NvmeController, NvmeSubsystem, PcieFunction, QueuePair};
 use dockerssd::pool::{DeploymentSpec, Orchestrator, PoolTopology, RestartPolicy};
 use dockerssd::ssd::SsdDevice;
@@ -171,6 +173,111 @@ fn pool_deployment_survives_node_failure() {
     for p in orch.placements("llm-infer") {
         assert_ne!(p.node, victim, "replica still on dead node");
     }
+}
+
+/// The ISSUE 1 acceptance criterion as a tier-1 gate: booting N=4
+/// replicas of one image across the pool via the layerstore moves at
+/// least 2x fewer registry-WAN bytes than the registry-only path, and
+/// the dedup/CoW counters are visible in metrics.
+#[test]
+fn replica_boot_scales_with_unique_bytes_not_replicas() {
+    let cfg = SystemConfig::default();
+    let scfg = cfg.ssd.clone();
+    let topo = PoolTopology::build(&dockerssd::config::PoolConfig {
+        nodes_per_array: 4,
+        arrays: 1,
+        ..Default::default()
+    });
+    let reg = Registry::with_benchmark_images();
+    let (manifest, blobs) = reg.fetch("nginx").unwrap();
+    let image_bytes: u64 = blobs.iter().map(|b| b.bytes.len() as u64).sum();
+    let replicas = 4u32;
+
+    // registry-only baseline: every replica re-pulls the whole image
+    let baseline_wan_bytes = replicas as u64 * image_bytes;
+
+    // layerstore path: one stack per node, shared presence cache
+    let mut nodes: Vec<_> = (0..replicas)
+        .map(|_| {
+            let dev = SsdDevice::new(scfg.clone());
+            let fs = LambdaFs::over_device(&dev);
+            (dev, fs, VirtualFw::new(&scfg), MiniDocker::new(), LayerStore::default())
+        })
+        .collect();
+    let mut orch = Orchestrator::new();
+    let mut cache = PoolLayerCache::new();
+    let layers: Vec<(u64, u64)> = blobs
+        .iter()
+        .map(|b| (b.digest, b.bytes.len() as u64))
+        .collect();
+    let spec = DeploymentSpec {
+        name: "web".into(),
+        image: "nginx".into(),
+        replicas,
+        restart: RestartPolicy::OnFailure,
+    };
+    let placed = orch.deploy_with_layers(&topo, &spec, &cache, &layers).unwrap();
+    assert_eq!(placed.len(), replicas as usize);
+
+    let mut sources = Vec::new();
+    for nid in placed {
+        let (dev, fs, fw, md, store) = &mut nodes[nid as usize];
+        let mut t = SimTime::ZERO;
+        for blob in blobs {
+            let (src, xfer) = cache.fetch(&topo, nid, blob.digest, blob.bytes.len() as u64);
+            sources.push(src);
+            t += xfer;
+            let r = fw.install.install_blob(fs, dev, store, t, &blob.bytes).unwrap();
+            t = r.done;
+        }
+        let m = fs
+            .write_file(
+                dev,
+                t,
+                &format!("/images/manifest/{}", manifest.name),
+                manifest.to_json().dump().as_bytes(),
+                LockSide::Isp,
+            )
+            .unwrap();
+        let ran = md.run_cow(fw, fs, dev, store, m.done, "nginx").unwrap();
+        // dirty one page so the CoW counter moves
+        let layer = md.cow_layer_of(&ran.output).unwrap();
+        md.cow
+            .write_at(store, fs, dev, ran.done, layer, 0, &[0xAB; 512])
+            .unwrap();
+    }
+
+    // only the first (cold) node crossed the WAN
+    assert_eq!(cache.bytes_from_registry, image_bytes);
+    assert!(
+        baseline_wan_bytes >= 2 * cache.bytes_from_registry,
+        "acceptance: >=2x reduction, got {baseline_wan_bytes} vs {}",
+        cache.bytes_from_registry
+    );
+    assert!(
+        sources.iter().any(|s| matches!(s, FetchSource::Peer(_))),
+        "warm replicas must fetch from peers"
+    );
+
+    // dedup/CoW/peer counters visible in metrics
+    let mut counters = Counters::new();
+    for (_, _, _, md, store) in &nodes {
+        store.export_counters(&mut counters);
+        md.cow.export_counters(&mut counters);
+    }
+    cache.export_counters(&mut counters);
+    assert_eq!(counters.get(names::REGISTRY_FETCHES), blobs.len() as u64);
+    assert_eq!(counters.get(names::PEER_FETCHES), (replicas as u64 - 1) * blobs.len() as u64);
+    assert_eq!(counters.get(names::COW_BREAKS), replicas as u64);
+    assert_eq!(
+        counters.get(names::BYTES_NOT_TRANSFERRED),
+        (replicas as u64 - 1) * image_bytes
+    );
+    assert_eq!(
+        counters.get(names::BYTES_WRITTEN),
+        replicas as u64 * image_bytes + replicas as u64 * (64 << 10),
+        "each node writes the image once (dedup'd) plus one CoW chunk copy"
+    );
 }
 
 #[test]

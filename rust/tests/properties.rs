@@ -8,11 +8,12 @@
 use dockerssd::config::SsdConfig;
 use dockerssd::coordinator::{Batcher, InferenceRequest, Router};
 use dockerssd::etheron::frame::{EthFrame, EtherType, Ipv4Packet, MacAddr, TcpSegment, TcpFlags};
-use dockerssd::lambdafs::{InodeLockTable, LockSide};
+use dockerssd::lambdafs::{InodeLockTable, LambdaFs, LockSide};
+use dockerssd::layerstore::{CowStore, LayerStore};
 use dockerssd::llm::{all_llms, sequence_time, DeviceProfile, Parallelism};
 use dockerssd::nvme::{NvmeCommand, SubmissionQueue};
 use dockerssd::ssd::{Ftl, SsdDevice};
-use dockerssd::util::{Rng, SimTime};
+use dockerssd::util::{fnv1a, Rng, SimTime};
 
 const CASES: u64 = 200;
 
@@ -237,6 +238,147 @@ fn prop_llm_monotonicity() {
         let b1 = sequence_time(llm, &dev, par, s1, 1, true).total();
         let b4 = sequence_time(llm, &dev, par, s1, 4, true).total();
         assert!(b4 >= b1, "{}: batch must not speed up fixed parallelism", llm.name);
+    }
+}
+
+// --- layerstore invariants --------------------------------------------------
+
+fn layerstore_rig(chunk_bytes: usize) -> (LayerStore, LambdaFs, SsdDevice) {
+    let dev = SsdDevice::new(SsdConfig::default());
+    let fs = LambdaFs::over_device(&dev);
+    (LayerStore::new(chunk_bytes), fs, dev)
+}
+
+/// LayerStore: store/retrieve round-trips both bytes and digest for
+/// arbitrary content and sizes (including chunk-boundary straddlers).
+#[test]
+fn prop_layerstore_round_trips_digests() {
+    let mut rng = Rng::new(21);
+    let (mut st, mut fs, mut dev) = layerstore_rig(4 << 10);
+    for case in 0..60 {
+        let len = rng.below(40_000) as usize;
+        let body: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let w = st.put_blob(&mut fs, &mut dev, SimTime::ZERO, &body).unwrap();
+        assert_eq!(w.value, fnv1a(&body), "case {case}: digest is content hash");
+        let r = st.get_blob(&mut fs, &mut dev, w.done, w.value).unwrap();
+        assert_eq!(r.value, body, "case {case}");
+    }
+}
+
+/// Dedup never changes read-back bytes: blobs assembled from a small
+/// shared chunk pool dedup heavily, yet every blob reads back exactly,
+/// and unique bytes never exceed logical bytes.
+#[test]
+fn prop_dedup_preserves_readback() {
+    let mut rng = Rng::new(22);
+    const CHUNK: usize = 4 << 10;
+    let (mut st, mut fs, mut dev) = layerstore_rig(CHUNK);
+    // pool of 6 distinct chunk contents shared across all blobs
+    let pool: Vec<Vec<u8>> = (0..6)
+        .map(|s| {
+            let mut c = vec![0u8; CHUNK];
+            for b in c.iter_mut() {
+                *b = (rng.next_u64() as u8).wrapping_add(s);
+            }
+            c
+        })
+        .collect();
+    let mut shadow = Vec::new();
+    for _ in 0..40 {
+        let nchunks = 1 + rng.below(5) as usize;
+        let mut body = Vec::new();
+        for _ in 0..nchunks {
+            body.extend_from_slice(&pool[rng.below(pool.len() as u64) as usize]);
+        }
+        let d = st.put_blob(&mut fs, &mut dev, SimTime::ZERO, &body).unwrap().value;
+        shadow.push((d, body));
+    }
+    for (d, body) in &shadow {
+        let r = st.get_blob(&mut fs, &mut dev, SimTime::ZERO, *d).unwrap();
+        assert_eq!(&r.value, body);
+    }
+    assert!(st.unique_bytes() <= st.dedup.logical_bytes());
+    assert!(
+        st.unique_bytes() <= (pool.len() * CHUNK) as u64,
+        "at most the chunk pool is ever stored"
+    );
+    assert!(st.stats.dedup_hits > 0, "composition must have dedup'd");
+}
+
+/// CoW: clone + arbitrary writes never mutate the parent blob, and the
+/// layer tracks a shadow model byte-for-byte.
+#[test]
+fn prop_cow_writes_never_mutate_parent() {
+    let mut rng = Rng::new(23);
+    for case in 0..15 {
+        let (mut st, mut fs, mut dev) = layerstore_rig(4 << 10);
+        let mut cow = CowStore::new();
+        let len = (8_000 + rng.below(30_000)) as usize;
+        let parent: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let d = st.put_blob(&mut fs, &mut dev, SimTime::ZERO, &parent).unwrap().value;
+        let layer = cow.fork_from_blobs(&mut st, &[d]).unwrap();
+        let clone = cow.clone_layer(&mut st, layer).unwrap();
+        let mut shadow = parent.clone();
+        for _ in 0..12 {
+            let wlen = (1 + rng.below(5_000)) as usize;
+            let off = rng.below((len - wlen) as u64 + 1);
+            let data: Vec<u8> = (0..wlen).map(|_| rng.next_u64() as u8).collect();
+            cow.write_at(&mut st, &mut fs, &mut dev, SimTime::ZERO, clone, off, &data)
+                .unwrap();
+            shadow[off as usize..off as usize + wlen].copy_from_slice(&data);
+        }
+        let parent_back = st.get_blob(&mut fs, &mut dev, SimTime::ZERO, d).unwrap();
+        assert_eq!(parent_back.value, parent, "case {case}: parent blob mutated");
+        let sibling = cow.read(&mut st, &mut fs, &mut dev, SimTime::ZERO, layer).unwrap();
+        assert_eq!(sibling.value, parent, "case {case}: sibling layer mutated");
+        let written = cow.read(&mut st, &mut fs, &mut dev, SimTime::ZERO, clone).unwrap();
+        assert_eq!(written.value, shadow, "case {case}: clone diverged from model");
+    }
+}
+
+/// Refcounts hitting zero reclaim chunks: after dropping every layer
+/// and blob reference — in random order — the store is empty and the
+/// λFS chunk directory holds no files.
+#[test]
+fn prop_refcount_zero_reclaims_chunks() {
+    let mut rng = Rng::new(24);
+    for case in 0..15 {
+        let (mut st, mut fs, mut dev) = layerstore_rig(4 << 10);
+        let mut cow = CowStore::new();
+        let mut blobs = Vec::new();
+        for _ in 0..(2 + rng.below(4)) {
+            let len = (1 + rng.below(20_000)) as usize;
+            let body: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            blobs.push(st.put_blob(&mut fs, &mut dev, SimTime::ZERO, &body).unwrap().value);
+        }
+        let mut layers = Vec::new();
+        for _ in 0..rng.below(5) {
+            let base = blobs[rng.below(blobs.len() as u64) as usize];
+            let l = cow.fork_from_blobs(&mut st, &[base]).unwrap();
+            let maxw = cow.len_of(l).unwrap().min(64) as usize;
+            if maxw > 0 && rng.chance(0.5) {
+                let data: Vec<u8> = (0..maxw).map(|_| rng.next_u64() as u8).collect();
+                cow.write_at(&mut st, &mut fs, &mut dev, SimTime::ZERO, l, 0, &data)
+                    .unwrap();
+            }
+            layers.push(l);
+        }
+        // tear everything down in random order
+        while !layers.is_empty() || !blobs.is_empty() {
+            if !layers.is_empty() && (blobs.is_empty() || rng.chance(0.5)) {
+                let l = layers.swap_remove(rng.below(layers.len() as u64) as usize);
+                cow.drop_layer(&mut st, &mut fs, l).unwrap();
+            } else {
+                let b = blobs.swap_remove(rng.below(blobs.len() as u64) as usize);
+                st.unref_blob(&mut fs, b).unwrap();
+            }
+        }
+        assert_eq!(st.unique_bytes(), 0, "case {case}");
+        assert_eq!(st.dedup.chunk_count(), 0, "case {case}");
+        assert!(
+            fs.list("/images/chunks").unwrap().is_empty(),
+            "case {case}: chunk files must be unlinked"
+        );
     }
 }
 
