@@ -1,0 +1,183 @@
+//! Fabric contention scenarios: replica-boot storms over shared vs
+//! disjoint links, prefetch overlap, and a multi-tenant traffic mix
+//! (LLM collective steps + layer fetches on the same wires).
+//!
+//! Emits machine-readable `BENCH_fabric.json` ({name, metric, value}
+//! records) so perf is tracked across PRs.
+
+use dockerssd::benchkit::{bench, emit_json, section, BenchRecord};
+use dockerssd::config::{EtherOnConfig, PoolConfig};
+use dockerssd::fabric::{Endpoint, Fabric, Priority};
+use dockerssd::layerstore::PoolLayerCache;
+use dockerssd::llm::disagg::{pool_step_time, step_traffic};
+use dockerssd::llm::{all_llms, Parallelism};
+use dockerssd::metrics::Table;
+use dockerssd::pool::PoolTopology;
+use dockerssd::util::SimTime;
+
+fn pool_cfg(nodes_per_array: u32, arrays: u32) -> PoolConfig {
+    PoolConfig {
+        nodes_per_array,
+        arrays,
+        ..Default::default()
+    }
+}
+
+fn fabric(nodes_per_array: u32, arrays: u32) -> Fabric {
+    Fabric::new(&pool_cfg(nodes_per_array, arrays), &EtherOnConfig::default())
+}
+
+/// Boot storm: N replicas pull one image at the same instant, either
+/// all over one array backplane or spread over N disjoint arrays.
+fn boot_storm(records: &mut Vec<BenchRecord>) {
+    section("boot storm: shared vs disjoint links");
+    let image_bytes = 16 << 20;
+    let mut table = Table::new(vec!["replicas", "single", "shared", "disjoint", "shared/single"]);
+    for n in [2u32, 4, 8] {
+        let mut shared_fabric = fabric(n + 1, 1);
+        let single = shared_fabric.estimate(Endpoint::Node(0), Endpoint::Node(1), image_bytes);
+        let mut shared = SimTime::ZERO;
+        for i in 1..=n {
+            let r = shared_fabric.transfer(
+                SimTime::ZERO,
+                Endpoint::Node(0),
+                Endpoint::Node(i),
+                image_bytes,
+                Priority::Foreground,
+            );
+            shared = shared.max(r.finish);
+        }
+        let mut disjoint_fabric = fabric(2, n);
+        let mut disjoint = SimTime::ZERO;
+        for a in 0..n {
+            let r = disjoint_fabric.transfer(
+                SimTime::ZERO,
+                Endpoint::Node(2 * a),
+                Endpoint::Node(2 * a + 1),
+                image_bytes,
+                Priority::Foreground,
+            );
+            disjoint = disjoint.max(r.finish);
+        }
+        let ratio = shared.as_ns() as f64 / single.as_ns() as f64;
+        table.row(vec![
+            format!("{n}"),
+            format!("{single}"),
+            format!("{shared}"),
+            format!("{disjoint}"),
+            format!("{ratio:.2}x"),
+        ]);
+        records.push(BenchRecord::new(
+            format!("boot_storm_shared_n{n}"),
+            "makespan_ms",
+            shared.as_ms_f64(),
+        ));
+        records.push(BenchRecord::new(
+            format!("boot_storm_disjoint_n{n}"),
+            "makespan_ms",
+            disjoint.as_ms_f64(),
+        ));
+        records.push(BenchRecord::new(
+            format!("boot_storm_n{n}"),
+            "shared_over_single",
+            ratio,
+        ));
+        assert!(ratio > (n as f64) * 0.85, "shared link must serialize: {ratio:.2}");
+    }
+    println!("{}", table.render());
+}
+
+/// Prefetch overlap: a background image prefetch is mid-flight; how
+/// much does it delay a foreground fetch on the same link?
+fn prefetch_overlap(records: &mut Vec<BenchRecord>) {
+    section("prefetch overlap: background yields within one frame quantum");
+    let mut f = fabric(8, 1);
+    let idle = f.estimate(Endpoint::Node(2), Endpoint::Node(3), 1 << 20);
+    f.transfer(
+        SimTime::ZERO,
+        Endpoint::Node(0),
+        Endpoint::Node(1),
+        256 << 20,
+        Priority::Background,
+    );
+    let fg = f.transfer(
+        SimTime::ZERO,
+        Endpoint::Node(2),
+        Endpoint::Node(3),
+        1 << 20,
+        Priority::Foreground,
+    );
+    println!(
+        "idle fetch {idle}, with 256MiB prefetch in flight {} (queue wait {})",
+        fg.latency(),
+        fg.queue_wait()
+    );
+    records.push(BenchRecord::new(
+        "prefetch_overlap",
+        "fg_queue_wait_ns",
+        fg.queue_wait().as_ns() as f64,
+    ));
+    records.push(BenchRecord::new(
+        "prefetch_overlap",
+        "prefetch_bytes_hidden",
+        f.stats.prefetch_bytes_hidden as f64,
+    ));
+}
+
+/// Multi-tenant mix: a tensor-parallel decode step and a replica's
+/// layer fetches share one array; compare each against running alone.
+fn tenant_mix(records: &mut Vec<BenchRecord>) {
+    section("multi-tenant mix: LLM collective + layer fetches");
+    let llm = all_llms().remove(0);
+    let par = Parallelism { dp: 1, tp: 8, pp: 1 };
+    let traffic = step_traffic(&llm, par, 32_768, 1, true, false);
+
+    let mut alone = fabric(16, 1);
+    let step_alone = pool_step_time(&mut alone, SimTime::ZERO, &traffic);
+
+    let cfg = pool_cfg(16, 1);
+    let topo = PoolTopology::build(&cfg);
+    let mut mixed = fabric(16, 1);
+    let mut cache = PoolLayerCache::new();
+    cache.register(8, 0xF00D);
+    let layer_bytes = 8 << 20;
+    let (_, fetch_lat) = cache.fetch(&mut mixed, &topo, SimTime::ZERO, 9, 0xF00D, layer_bytes);
+    let step_mixed = pool_step_time(&mut mixed, SimTime::ZERO, &traffic);
+
+    println!(
+        "collective step alone {step_alone}, behind a {}B layer fetch {step_mixed} (fetch {fetch_lat})",
+        layer_bytes
+    );
+    records.push(BenchRecord::new("tenant_mix", "step_alone_ms", step_alone.as_ms_f64()));
+    records.push(BenchRecord::new("tenant_mix", "step_mixed_ms", step_mixed.as_ms_f64()));
+    records.push(BenchRecord::new(
+        "tenant_mix",
+        "congestion_factor",
+        step_mixed.as_ns() as f64 / step_alone.as_ns().max(1) as f64,
+    ));
+    assert!(step_mixed >= step_alone, "sharing a wire cannot be free");
+}
+
+fn main() {
+    let mut records = Vec::new();
+    boot_storm(&mut records);
+    prefetch_overlap(&mut records);
+    tenant_mix(&mut records);
+
+    section("hot path: Fabric::transfer");
+    let mut f = fabric(16, 4);
+    let mut i = 0u32;
+    let r = bench("fabric_transfer_cross_array", || {
+        let from = Endpoint::Node(i % 32);
+        let to = Endpoint::Node((i + 17) % 32);
+        f.transfer(SimTime::ns(i as u64), from, to, 4096, Priority::Foreground);
+        i = i.wrapping_add(1);
+    });
+    records.push(BenchRecord::new(
+        "fabric_transfer_cross_array",
+        "ns_per_op",
+        r.mean.as_nanos() as f64,
+    ));
+
+    emit_json("BENCH_fabric.json", &records).expect("write BENCH_fabric.json");
+}

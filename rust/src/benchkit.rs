@@ -8,6 +8,8 @@
 
 use std::time::{Duration, Instant};
 
+use crate::json::Json;
+
 /// One benchmark's measurement.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
@@ -64,6 +66,42 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// One machine-readable benchmark datapoint, so perf is tracked across
+/// PRs: every bench binary appends records and dumps them to a
+/// `BENCH_<name>.json` file next to the human-readable tables.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchRecord {
+    pub name: String,
+    pub metric: String,
+    pub value: f64,
+}
+
+impl BenchRecord {
+    pub fn new(name: impl Into<String>, metric: impl Into<String>, value: f64) -> Self {
+        BenchRecord {
+            name: name.into(),
+            metric: metric.into(),
+            value,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("metric", Json::str(self.metric.clone())),
+            ("value", Json::Num(self.value)),
+        ])
+    }
+}
+
+/// Write `records` as a JSON array to `path` (and say so on stdout).
+pub fn emit_json(path: &str, records: &[BenchRecord]) -> std::io::Result<()> {
+    let doc = Json::Arr(records.iter().map(BenchRecord::to_json).collect());
+    std::fs::write(path, doc.dump())?;
+    println!("wrote {} records to {path}", records.len());
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -76,5 +114,22 @@ mod tests {
         });
         assert!(r.iters >= 10);
         assert!(r.min <= r.mean && r.mean <= r.max);
+    }
+
+    #[test]
+    fn bench_records_round_trip_as_json() {
+        use crate::json::parse;
+
+        let recs = vec![
+            BenchRecord::new("boot_storm", "makespan_ms", 12.5),
+            BenchRecord::new("boot_storm", "queue_wait_ms", 3.25),
+        ];
+        let doc = Json::Arr(recs.iter().map(BenchRecord::to_json).collect());
+        let back = parse(&doc.dump()).unwrap();
+        let arr = back.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("name").unwrap().as_str(), Some("boot_storm"));
+        assert_eq!(arr[0].get("metric").unwrap().as_str(), Some("makespan_ms"));
+        assert_eq!(arr[1].get("value").unwrap().as_f64(), Some(3.25));
     }
 }

@@ -140,6 +140,13 @@ pub struct PoolConfig {
     pub switch_hop_ns: u64,
     /// Intra-array link bandwidth (GB/s).
     pub link_gbps: f64,
+    /// Cross-array switch-tray backplane bandwidth (GB/s).
+    pub tray_gbps: f64,
+    /// Host uplink bandwidth into the tray (GB/s).
+    pub host_gbps: f64,
+    /// Registry WAN bandwidth beyond the host (GB/s) — the paper's
+    /// "user-defined location"; default is 1/8 of the intranet link.
+    pub wan_gbps: f64,
 }
 
 impl Default for PoolConfig {
@@ -149,6 +156,9 @@ impl Default for PoolConfig {
             arrays: 1,
             switch_hop_ns: 300,
             link_gbps: 3.2,
+            tray_gbps: 3.2,
+            host_gbps: 3.2,
+            wan_gbps: 0.4,
         }
     }
 }
@@ -270,6 +280,9 @@ impl SystemConfig {
             get_field!(p, cfg.pool, arrays, u32);
             get_field!(p, cfg.pool, switch_hop_ns, u64);
             get_field!(p, cfg.pool, link_gbps, f64);
+            get_field!(p, cfg.pool, tray_gbps, f64);
+            get_field!(p, cfg.pool, host_gbps, f64);
+            get_field!(p, cfg.pool, wan_gbps, f64);
         }
         if let Some(s) = root.get("serve") {
             get_field!(s, cfg.serve, artifacts_dir, String);
@@ -337,6 +350,9 @@ impl SystemConfig {
                     ("arrays", Json::Int(self.pool.arrays as i64)),
                     ("switch_hop_ns", Json::Int(self.pool.switch_hop_ns as i64)),
                     ("link_gbps", Json::Num(self.pool.link_gbps)),
+                    ("tray_gbps", Json::Num(self.pool.tray_gbps)),
+                    ("host_gbps", Json::Num(self.pool.host_gbps)),
+                    ("wan_gbps", Json::Num(self.pool.wan_gbps)),
                 ]),
             ),
             (

@@ -2,6 +2,14 @@
 //! its own flash ("access flash memory as local memory"); the manager
 //! tracks per-node residency against capacity and refuses placements
 //! that would not fit — the capacity story behind Figure 12.
+//!
+//! Moving resident KV between nodes (rebalancing, draining a node) is
+//! real node-to-node traffic: [`KvManager::migrate`] charges it to the
+//! shared [`Fabric`] so migrations contend with layer fetches and
+//! collective steps on the same links.
+
+use crate::fabric::{Endpoint, Fabric, Priority, TransferReceipt};
+use crate::util::SimTime;
 
 /// Per-node KV accounting (bytes).
 pub struct KvManager {
@@ -42,6 +50,48 @@ impl KvManager {
     pub fn release(&mut self, node: u32, bytes: u64) {
         let u = &mut self.used[node as usize];
         *u = u.saturating_sub(bytes);
+    }
+
+    /// Move `bytes` of resident KV from `from` to `to`, charging the
+    /// node-to-node transfer to the shared fabric.  Fails (returning
+    /// `None`, with the rejection counted) if `from` doesn't hold that
+    /// much or `to` lacks capacity; residency accounting moves with the
+    /// bytes on success.  A same-node "move" is a free no-op (the
+    /// destination never needs transient headroom for bytes it already
+    /// holds).
+    pub fn migrate(
+        &mut self,
+        fabric: &mut Fabric,
+        now: SimTime,
+        from: u32,
+        to: u32,
+        bytes: u64,
+    ) -> Option<TransferReceipt> {
+        if self.used_of(from) < bytes {
+            self.rejected += 1;
+            return None;
+        }
+        if from == to {
+            // nothing moves; the fabric path is empty for same endpoints
+            return Some(fabric.transfer(
+                now,
+                Endpoint::Node(from),
+                Endpoint::Node(to),
+                bytes,
+                Priority::Foreground,
+            ));
+        }
+        if !self.reserve(to, bytes) {
+            return None;
+        }
+        self.release(from, bytes);
+        Some(fabric.transfer(
+            now,
+            Endpoint::Node(from),
+            Endpoint::Node(to),
+            bytes,
+            Priority::Foreground,
+        ))
     }
 
     pub fn used_of(&self, node: u32) -> u64 {
@@ -88,5 +138,37 @@ mod tests {
         let mut kv = KvManager::new(1, 1000);
         kv.reserve(0, 250);
         assert!((kv.utilization(0) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn migrate_moves_residency_over_the_fabric() {
+        use crate::config::{EtherOnConfig, PoolConfig};
+
+        let mut f = Fabric::new(
+            &PoolConfig {
+                nodes_per_array: 4,
+                arrays: 1,
+                ..Default::default()
+            },
+            &EtherOnConfig::default(),
+        );
+        let mut kv = KvManager::new(4, 1000);
+        kv.reserve(0, 800);
+        let r = kv.migrate(&mut f, SimTime::ZERO, 0, 1, 500).unwrap();
+        assert!(r.finish > SimTime::ZERO, "migration pays wire time");
+        assert_eq!(kv.used_of(0), 300);
+        assert_eq!(kv.used_of(1), 500);
+        // not resident: refused and counted
+        assert!(kv.migrate(&mut f, SimTime::ZERO, 2, 3, 100).is_none());
+        // destination over capacity: refused
+        kv.reserve(3, 900);
+        assert!(kv.migrate(&mut f, SimTime::ZERO, 1, 3, 400).is_none());
+        assert_eq!(kv.used_of(1), 500, "failed migration leaves residency intact");
+        assert_eq!(kv.rejected, 2);
+        // a same-node move is a free no-op, not a capacity rejection
+        let r = kv.migrate(&mut f, SimTime::ZERO, 0, 0, 300).unwrap();
+        assert_eq!(r.latency(), SimTime::ZERO);
+        assert_eq!(kv.used_of(0), 300);
+        assert_eq!(kv.rejected, 2);
     }
 }

@@ -1,6 +1,15 @@
 //! Request router: spreads batches across pool nodes, least-outstanding
 //! first (the vllm-router-style policy, simplified to the pool's
 //! homogeneous nodes).
+//!
+//! Dispatch is not free: the leader's prompt bytes cross the host
+//! uplink and the target node's array backplane, contending with every
+//! other transfer in flight.  [`Router::dispatch`] and
+//! [`Router::complete_costed`] charge that traffic to the shared
+//! [`Fabric`].
+
+use crate::fabric::{Endpoint, Fabric, Priority, TransferReceipt};
+use crate::util::SimTime;
 
 /// Router over `n` nodes tracking outstanding batches per node.
 pub struct Router {
@@ -43,10 +52,50 @@ impl Router {
         idx as u32
     }
 
+    /// Pick a node and charge the batch's prompt bytes host -> node over
+    /// the shared fabric (dispatch is foreground traffic).  Returns the
+    /// chosen node and the fabric's receipt — `receipt.finish` is when
+    /// the node can start computing.
+    pub fn dispatch(
+        &mut self,
+        fabric: &mut Fabric,
+        now: SimTime,
+        prompt_bytes: u64,
+    ) -> (u32, TransferReceipt) {
+        let node = self.pick();
+        let receipt = fabric.transfer(
+            now,
+            Endpoint::Host,
+            Endpoint::Node(node),
+            prompt_bytes,
+            Priority::Foreground,
+        );
+        (node, receipt)
+    }
+
     /// A node finished a batch.
     pub fn complete(&mut self, node: u32) {
         let o = &mut self.outstanding[node as usize];
         *o = o.saturating_sub(1);
+    }
+
+    /// A node finished a batch: release its slot and charge the response
+    /// bytes node -> host over the shared fabric.
+    pub fn complete_costed(
+        &mut self,
+        fabric: &mut Fabric,
+        now: SimTime,
+        node: u32,
+        response_bytes: u64,
+    ) -> TransferReceipt {
+        self.complete(node);
+        fabric.transfer(
+            now,
+            Endpoint::Node(node),
+            Endpoint::Host,
+            response_bytes,
+            Priority::Foreground,
+        )
     }
 
     pub fn outstanding_of(&self, node: u32) -> u64 {
@@ -97,5 +146,34 @@ mod tests {
         let mut r = Router::new(1);
         r.complete(0); // no underflow
         assert_eq!(r.outstanding_of(0), 0);
+    }
+
+    #[test]
+    fn dispatch_charges_the_host_uplink() {
+        use crate::config::{EtherOnConfig, PoolConfig};
+        use crate::metrics::{names, Counters};
+
+        let mut f = Fabric::new(
+            &PoolConfig {
+                nodes_per_array: 4,
+                arrays: 1,
+                ..Default::default()
+            },
+            &EtherOnConfig::default(),
+        );
+        let mut r = Router::new(4);
+        let (n0, rc0) = r.dispatch(&mut f, SimTime::ZERO, 1 << 20);
+        assert_eq!(n0, 0);
+        assert!(rc0.finish > SimTime::ZERO);
+        // a second dispatch at the same instant queues behind the first
+        // on the shared host uplink
+        let (n1, rc1) = r.dispatch(&mut f, SimTime::ZERO, 1 << 20);
+        assert_eq!(n1, 1);
+        assert!(rc1.queue_wait() > SimTime::ZERO, "uplink is shared");
+        r.complete_costed(&mut f, rc0.finish, n0, 1 << 10);
+        assert_eq!(r.outstanding_of(n0), 0);
+        let mut c = Counters::new();
+        f.export_counters(&mut c);
+        assert_eq!(c.get(names::FABRIC_BYTES_HOST_UPLINK), (2 << 20) + (1 << 10));
     }
 }

@@ -24,6 +24,17 @@ pub struct EtherOnStats {
     pub rearm_count: u64,
 }
 
+impl EtherOnStats {
+    /// Frame-level accounting for fabric-routed intranet traffic:
+    /// `frames` MTU frames crossed the TX path (TransmitFrame commands)
+    /// on the sender and the RX upcall path (ReceiveFrame completions)
+    /// on the receiver.
+    pub fn charge_fabric(&mut self, frames: u64) {
+        self.tx_frames += frames;
+        self.rx_frames += frames;
+    }
+}
+
 /// The host-side driver state for one adapter.
 pub struct EtherOnDriver {
     cfg: EtherOnConfig,

@@ -1,0 +1,159 @@
+//! Link classes and per-link bandwidth queues.
+//!
+//! Every byte that crosses the pool is serialized onto one or more of
+//! four contention domains, keyed by the PCIe-switch/tray topology of
+//! Figure 8a.  A [`LinkQueue`] is a busy-until bandwidth queue: a
+//! transfer granted the wire at `begin` occupies it for its wire time,
+//! and the next transfer on the same link starts no earlier — which is
+//! exactly how N concurrent same-link transfers come to take ~N times
+//! one transfer's time while cross-link transfers overlap freely.
+
+use crate::util::SimTime;
+
+/// One contention domain in the pool fabric.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum LinkClass {
+    /// The PCIe-switch backplane shared by one array of DockerSSDs.
+    Array(u32),
+    /// The switch tray integrating the arrays into a cluster.
+    Tray,
+    /// The host's uplink into the tray.
+    HostUplink,
+    /// The WAN beyond the host, out to the container registry.
+    RegistryWan,
+}
+
+impl LinkClass {
+    /// Intranet links carry Ether-oN frames (TransmitFrame/ReceiveFrame
+    /// NVMe commands); the host uplink and WAN are ordinary networking.
+    pub fn is_intranet(&self) -> bool {
+        matches!(self, LinkClass::Array(_) | LinkClass::Tray)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LinkClass::Array(_) => "array",
+            LinkClass::Tray => "tray",
+            LinkClass::HostUplink => "host_uplink",
+            LinkClass::RegistryWan => "registry_wan",
+        }
+    }
+}
+
+/// Transfer priority class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Priority {
+    /// Latency-sensitive traffic: boot-blocking layer fetches, request
+    /// dispatch, KV migration, collective steps.
+    Foreground,
+    /// Best-effort traffic that yields the wire to foreground within one
+    /// frame quantum: placement-time layer prefetch.
+    Background,
+}
+
+/// Busy-until bandwidth queue for one link.
+#[derive(Clone, Debug)]
+pub struct LinkQueue {
+    /// Link bandwidth (GB/s == bytes/ns).
+    pub gbps: f64,
+    /// The wire is granted to foreground transfers until this instant.
+    pub(crate) fg_busy_until: SimTime,
+    /// The wire is granted to background transfers until this instant.
+    pub(crate) bg_busy_until: SimTime,
+    /// Total bytes serialized onto this link.
+    pub bytes: u64,
+    /// Transfers that crossed this link.
+    pub transfers: u64,
+    /// Accumulated time transfers spent waiting for the wire.
+    pub queue_wait: SimTime,
+}
+
+impl LinkQueue {
+    pub fn new(gbps: f64) -> Self {
+        LinkQueue {
+            gbps,
+            fg_busy_until: SimTime::ZERO,
+            bg_busy_until: SimTime::ZERO,
+            bytes: 0,
+            transfers: 0,
+            queue_wait: SimTime::ZERO,
+        }
+    }
+
+    /// Time `bytes` occupy this link's wire.
+    pub fn wire_time(&self, bytes: u64) -> SimTime {
+        SimTime::ns((bytes as f64 / self.gbps) as u64)
+    }
+
+    /// Time one MTU frame occupies the wire — the granularity at which a
+    /// background transfer can be preempted by foreground traffic.
+    pub fn frame_quantum(&self, mtu: u32) -> SimTime {
+        self.wire_time(mtu as u64)
+    }
+
+    /// Grant the wire to a transfer: occupy `[begin, begin + wire)` in
+    /// the priority lane and account the bytes.  A foreground grant that
+    /// preempts an in-flight background transfer pushes the background
+    /// lane out by its own wire time (the preempted transfer resumes
+    /// afterwards).  Queue wait is charged by the fabric to the one
+    /// bottleneck link that delayed the transfer, not here.
+    pub(crate) fn occupy(&mut self, pri: Priority, begin: SimTime, bytes: u64) {
+        let wire = self.wire_time(bytes);
+        match pri {
+            Priority::Foreground => {
+                self.fg_busy_until = begin + wire;
+                if self.bg_busy_until > begin {
+                    self.bg_busy_until += wire;
+                }
+            }
+            Priority::Background => {
+                self.bg_busy_until = begin + wire;
+            }
+        }
+        self.bytes += bytes;
+        self.transfers += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intranet_classification() {
+        assert!(LinkClass::Array(0).is_intranet());
+        assert!(LinkClass::Tray.is_intranet());
+        assert!(!LinkClass::HostUplink.is_intranet());
+        assert!(!LinkClass::RegistryWan.is_intranet());
+    }
+
+    #[test]
+    fn wire_time_scales_with_bytes_and_bandwidth() {
+        let q = LinkQueue::new(3.2);
+        assert!(q.wire_time(1 << 20) > q.wire_time(1 << 10));
+        let fast = LinkQueue::new(32.0);
+        assert!(fast.wire_time(1 << 20) < q.wire_time(1 << 20));
+    }
+
+    #[test]
+    fn occupy_serializes_and_accounts() {
+        let mut q = LinkQueue::new(1.0); // 1 B/ns
+        q.occupy(Priority::Foreground, SimTime::ZERO, 1000);
+        assert_eq!(q.fg_busy_until, SimTime::ns(1000));
+        q.occupy(Priority::Foreground, q.fg_busy_until, 1000);
+        assert_eq!(q.fg_busy_until, SimTime::ns(2000));
+        assert_eq!(q.bytes, 2000);
+        assert_eq!(q.transfers, 2);
+    }
+
+    #[test]
+    fn foreground_preemption_pushes_background_out() {
+        let mut q = LinkQueue::new(1.0);
+        q.occupy(Priority::Background, SimTime::ZERO, 4000);
+        assert_eq!(q.bg_busy_until, SimTime::ns(4000));
+        // foreground grabs the wire at t=1000 for 2000ns
+        q.occupy(Priority::Foreground, SimTime::ns(1000), 2000);
+        assert_eq!(q.fg_busy_until, SimTime::ns(3000));
+        assert_eq!(q.bg_busy_until, SimTime::ns(6000), "preempted prefetch resumes after");
+    }
+}

@@ -1,0 +1,578 @@
+//! Pool-wide message fabric: every cross-node and host/WAN byte in the
+//! system is routed through [`Fabric::transfer`].
+//!
+//! The paper's headline claims rest on Ethernet over NVMe being the
+//! *shared* medium for all pool traffic, so the fabric models the wire
+//! instead of letting each subsystem assume an idle one.  A transfer
+//! between two endpoints crosses an ordered path of [`LinkClass`]
+//! contention domains (same-array switch backplane, cross-array tray,
+//! host uplink, registry WAN); each domain is a busy-until bandwidth
+//! queue, so overlapping transfers on a shared link serialize while
+//! transfers on disjoint links overlap.
+//!
+//! Traffic paths by subsystem:
+//!
+//! * `layerstore::PoolLayerCache` — peer layer fetches cross `Array`
+//!   (and `Tray` when cross-array); registry pulls cross `RegistryWan`
+//!   + `HostUplink` + `Array`.
+//! * `pool::Orchestrator` — placement scoring uses [`Fabric::estimate`];
+//!   placement kicks off `Background` prefetches for missing layers.
+//! * `llm::disagg` — tensor-parallel all-reduce and pipeline boundary
+//!   hops cross `Array`/`Tray`; host-coordinated models also cross
+//!   `HostUplink` per step.
+//! * `coordinator` — request dispatch and response collection cross
+//!   `HostUplink` + `Array`; KV migrations cross node-to-node paths.
+//!
+//! Two priority lanes exist per link: `Foreground` (boot-blocking
+//! fetches, dispatch, collectives) and `Background` (prefetch).  A
+//! background transfer holds the wire for at most one MTU frame quantum
+//! once foreground traffic arrives, then yields and resumes after — so
+//! prefetch can never delay a foreground fetch by more than one frame
+//! time per link.  (Receipts already issued for a preempted background
+//! transfer are not retroactively extended; their finish times are
+//! optimistic lower bounds.)
+//!
+//! Intranet traffic (`Array`/`Tray` links) is frame-accounted against
+//! the Ether-oN driver path: each transfer is chopped into MTU frames
+//! and charged to [`EtherOnStats`] as TransmitFrame/ReceiveFrame pairs.
+
+pub mod link;
+
+pub use link::{LinkClass, LinkQueue, Priority};
+
+use std::collections::BTreeMap;
+
+use crate::config::{EtherOnConfig, PoolConfig, SystemConfig};
+use crate::etheron::EtherOnStats;
+use crate::metrics::{names, Counters};
+use crate::pool::topology::NodeId;
+use crate::util::SimTime;
+
+/// A transfer endpoint.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Endpoint {
+    /// A DockerSSD in the pool.
+    Node(NodeId),
+    /// The host hanging off the switch tray.
+    Host,
+    /// The container registry beyond the host (a "user-defined
+    /// location" across the WAN).
+    Registry,
+}
+
+/// What the fabric granted one transfer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TransferReceipt {
+    /// When the transfer was requested.
+    pub issued: SimTime,
+    /// When the last contended link granted the wire.
+    pub begin: SimTime,
+    /// When the final byte arrived.
+    pub finish: SimTime,
+    pub bytes: u64,
+    /// MTU frames charged to the Ether-oN path (0 for non-intranet paths).
+    pub frames: u64,
+}
+
+impl TransferReceipt {
+    /// A zero-byte, zero-latency receipt (local hit: nothing crossed the
+    /// fabric).
+    pub fn immediate(now: SimTime) -> Self {
+        TransferReceipt {
+            issued: now,
+            begin: now,
+            finish: now,
+            bytes: 0,
+            frames: 0,
+        }
+    }
+
+    /// End-to-end latency the requester observed.
+    pub fn latency(&self) -> SimTime {
+        self.finish.saturating_sub(self.issued)
+    }
+
+    /// Time spent queued behind other traffic before the wire was granted.
+    pub fn queue_wait(&self) -> SimTime {
+        self.begin.saturating_sub(self.issued)
+    }
+}
+
+/// Fabric-wide accounting beyond the per-link queues.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FabricStats {
+    pub transfers_fg: u64,
+    pub transfers_bg: u64,
+    /// Bytes moved by background prefetch.
+    pub prefetch_bytes: u64,
+    /// Prefetch bytes that started with zero queue wait — fully hidden
+    /// behind otherwise-idle links.
+    pub prefetch_bytes_hidden: u64,
+}
+
+/// The pool fabric: topology-keyed link queues + accounting.
+pub struct Fabric {
+    nodes_per_array: u32,
+    total_nodes: u32,
+    switch_hop_ns: u64,
+    mtu: u32,
+    link_gbps: f64,
+    tray_gbps: f64,
+    host_gbps: f64,
+    wan_gbps: f64,
+    links: BTreeMap<LinkClass, LinkQueue>,
+    pub stats: FabricStats,
+    /// Frame-level accounting charged to the Ether-oN driver path for
+    /// intranet traffic.
+    pub ether: EtherOnStats,
+}
+
+impl Fabric {
+    pub fn new(pool: &PoolConfig, etheron: &EtherOnConfig) -> Self {
+        Fabric {
+            nodes_per_array: pool.nodes_per_array.max(1),
+            total_nodes: pool.total_nodes(),
+            switch_hop_ns: pool.switch_hop_ns,
+            mtu: etheron.mtu.max(1),
+            link_gbps: pool.link_gbps,
+            tray_gbps: pool.tray_gbps,
+            host_gbps: pool.host_gbps,
+            wan_gbps: pool.wan_gbps,
+            links: BTreeMap::new(),
+            stats: FabricStats::default(),
+            ether: EtherOnStats::default(),
+        }
+    }
+
+    pub fn of(cfg: &SystemConfig) -> Self {
+        Self::new(&cfg.pool, &cfg.etheron)
+    }
+
+    fn gbps_of(&self, class: LinkClass) -> f64 {
+        match class {
+            LinkClass::Array(_) => self.link_gbps,
+            LinkClass::Tray => self.tray_gbps,
+            LinkClass::HostUplink => self.host_gbps,
+            LinkClass::RegistryWan => self.wan_gbps,
+        }
+    }
+
+    fn ensure_link(&mut self, class: LinkClass) {
+        let gbps = self.gbps_of(class);
+        self.links.entry(class).or_insert_with(|| LinkQueue::new(gbps));
+    }
+
+    /// The array a node sits behind, if the id names a real node.
+    ///
+    /// NOTE: this mapping and `node_path` below mirror the layout rules
+    /// of [`crate::pool::topology::PoolTopology`] (`build`/`hops`),
+    /// including the worst-case fallback for unknown ids — change them
+    /// together.
+    fn array_of(&self, n: NodeId) -> Option<u32> {
+        (n < self.total_nodes).then_some(n / self.nodes_per_array)
+    }
+
+    fn node_path(&self, a: NodeId, b: NodeId) -> (Vec<LinkClass>, u64) {
+        if a == b {
+            return (Vec::new(), 0);
+        }
+        match (self.array_of(a), self.array_of(b)) {
+            (Some(x), Some(y)) if x == y => (vec![LinkClass::Array(x)], 1),
+            (Some(x), Some(y)) => {
+                (vec![LinkClass::Array(x), LinkClass::Tray, LinkClass::Array(y)], 3)
+            }
+            // Unknown endpoint: assume the worst-case cross-array path so
+            // an out-of-range node id is never a free transfer.
+            (Some(x), None) | (None, Some(x)) => (vec![LinkClass::Array(x), LinkClass::Tray], 3),
+            (None, None) => (vec![LinkClass::Tray], 3),
+        }
+    }
+
+    /// The ordered link classes a transfer crosses, plus the switch-hop
+    /// count charged per-hop latency.
+    pub fn path(&self, from: Endpoint, to: Endpoint) -> (Vec<LinkClass>, u64) {
+        match (from, to) {
+            (Endpoint::Node(a), Endpoint::Node(b)) => self.node_path(a, b),
+            (Endpoint::Host, Endpoint::Node(n)) | (Endpoint::Node(n), Endpoint::Host) => {
+                let mut links = vec![LinkClass::HostUplink];
+                match self.array_of(n) {
+                    Some(arr) => links.push(LinkClass::Array(arr)),
+                    // unknown node: worst case, route through the tray
+                    None => links.push(LinkClass::Tray),
+                }
+                (links, 2)
+            }
+            (Endpoint::Registry, Endpoint::Node(n)) | (Endpoint::Node(n), Endpoint::Registry) => {
+                let (mut links, hops) = self.path(Endpoint::Host, Endpoint::Node(n));
+                links.insert(0, LinkClass::RegistryWan);
+                (links, hops)
+            }
+            (Endpoint::Host, Endpoint::Registry) | (Endpoint::Registry, Endpoint::Host) => {
+                (vec![LinkClass::RegistryWan, LinkClass::HostUplink], 1)
+            }
+            (Endpoint::Host, Endpoint::Host) | (Endpoint::Registry, Endpoint::Registry) => {
+                (Vec::new(), 0)
+            }
+        }
+    }
+
+    /// Idle-wire latency: per-hop switch latency plus store-and-forward
+    /// wire time on each link class, ignoring queue occupancy.  This is
+    /// the *planning* cost (placement scoring, fetch-source choice);
+    /// [`Fabric::transfer`] is the only way to observe — and create —
+    /// contention.
+    pub fn estimate(&self, from: Endpoint, to: Endpoint, bytes: u64) -> SimTime {
+        let (links, hops) = self.path(from, to);
+        let mut t = SimTime::ns(hops * self.switch_hop_ns);
+        for c in links {
+            t += SimTime::ns((bytes as f64 / self.gbps_of(c)) as u64);
+        }
+        t
+    }
+
+    /// Idle-wire cost of moving `bytes` one same-array hop — the unit
+    /// the orchestrator uses to weigh queued replicas against missing
+    /// layers.
+    pub fn unit_cost(&self, bytes: u64) -> SimTime {
+        SimTime::ns(self.switch_hop_ns + (bytes as f64 / self.link_gbps) as u64)
+    }
+
+    /// Move `bytes` from `from` to `to`, contending with every transfer
+    /// already granted the shared links.  Returns when the wire was
+    /// granted and when the last byte landed.
+    pub fn transfer(
+        &mut self,
+        now: SimTime,
+        from: Endpoint,
+        to: Endpoint,
+        bytes: u64,
+        pri: Priority,
+    ) -> TransferReceipt {
+        let (path, hops) = self.path(from, to);
+        if path.is_empty() {
+            return TransferReceipt {
+                issued: now,
+                begin: now,
+                finish: now,
+                bytes,
+                frames: 0,
+            };
+        }
+        for &c in &path {
+            self.ensure_link(c);
+        }
+
+        // wire grant: wait for earlier traffic on every shared link,
+        // remembering which link the grant ultimately waited on
+        let mut begin = now;
+        let mut bottleneck: Option<LinkClass> = None;
+        match pri {
+            Priority::Foreground => {
+                for &c in &path {
+                    let avail = self.links[&c].fg_busy_until;
+                    if avail > begin {
+                        begin = avail;
+                        bottleneck = Some(c);
+                    }
+                }
+                // an in-flight background transfer finishes its current
+                // frame quantum, then yields the wire
+                let fg_begin = begin;
+                for &c in &path {
+                    let q = &self.links[&c];
+                    if q.bg_busy_until > begin {
+                        let capped = q.bg_busy_until.min(fg_begin + q.frame_quantum(self.mtu));
+                        if capped > begin {
+                            begin = capped;
+                            bottleneck = Some(c);
+                        }
+                    }
+                }
+            }
+            Priority::Background => {
+                for &c in &path {
+                    let q = &self.links[&c];
+                    let avail = q.fg_busy_until.max(q.bg_busy_until);
+                    if avail > begin {
+                        begin = avail;
+                        bottleneck = Some(c);
+                    }
+                }
+            }
+        }
+
+        // occupy each link for this transfer's serialization time; the
+        // queue wait is charged once, to the link that caused it
+        let mut wire = SimTime::ZERO;
+        let mut intranet = false;
+        for &c in &path {
+            let q = self.links.get_mut(&c).expect("link ensured above");
+            wire += q.wire_time(bytes);
+            q.occupy(pri, begin, bytes);
+            intranet |= c.is_intranet();
+        }
+        let wait = begin.saturating_sub(now);
+        if wait > SimTime::ZERO {
+            if let Some(b) = bottleneck {
+                self.links.get_mut(&b).expect("link ensured above").queue_wait += wait;
+            }
+        }
+        let finish = begin + SimTime::ns(hops * self.switch_hop_ns) + wire;
+
+        let frames = if intranet {
+            let f = bytes.div_ceil(self.mtu as u64).max(1);
+            self.ether.charge_fabric(f);
+            f
+        } else {
+            0
+        };
+        match pri {
+            Priority::Foreground => self.stats.transfers_fg += 1,
+            Priority::Background => {
+                self.stats.transfers_bg += 1;
+                self.stats.prefetch_bytes += bytes;
+                if begin == now {
+                    self.stats.prefetch_bytes_hidden += bytes;
+                }
+            }
+        }
+
+        TransferReceipt {
+            issued: now,
+            begin,
+            finish,
+            bytes,
+            frames,
+        }
+    }
+
+    /// Per-link state, for tests and reporting.
+    pub fn link(&self, class: LinkClass) -> Option<&LinkQueue> {
+        self.links.get(&class)
+    }
+
+    /// Total queue-wait accumulated across all links.
+    pub fn total_queue_wait(&self) -> SimTime {
+        let mut t = SimTime::ZERO;
+        for q in self.links.values() {
+            t += q.queue_wait;
+        }
+        t
+    }
+
+    pub fn export_counters(&self, c: &mut Counters) {
+        for (class, q) in &self.links {
+            let key = match class {
+                LinkClass::Array(_) => names::FABRIC_BYTES_ARRAY,
+                LinkClass::Tray => names::FABRIC_BYTES_TRAY,
+                LinkClass::HostUplink => names::FABRIC_BYTES_HOST_UPLINK,
+                LinkClass::RegistryWan => names::FABRIC_BYTES_WAN,
+            };
+            c.add(key, q.bytes);
+            c.add(names::FABRIC_QUEUE_WAIT_NS, q.queue_wait.as_ns());
+        }
+        c.add(names::FABRIC_TRANSFERS, self.stats.transfers_fg + self.stats.transfers_bg);
+        c.add(names::FABRIC_FRAMES, self.ether.tx_frames);
+        c.add(names::FABRIC_PREFETCH_BYTES, self.stats.prefetch_bytes);
+        c.add(names::FABRIC_PREFETCH_HIDDEN, self.stats.prefetch_bytes_hidden);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fabric(nodes_per_array: u32, arrays: u32) -> Fabric {
+        Fabric::new(
+            &PoolConfig {
+                nodes_per_array,
+                arrays,
+                ..Default::default()
+            },
+            &EtherOnConfig::default(),
+        )
+    }
+
+    #[test]
+    fn paths_follow_topology() {
+        let f = fabric(4, 2);
+        let (p, h) = f.path(Endpoint::Node(0), Endpoint::Node(1));
+        assert_eq!(p, vec![LinkClass::Array(0)]);
+        assert_eq!(h, 1);
+        let (p, h) = f.path(Endpoint::Node(0), Endpoint::Node(5));
+        assert_eq!(p, vec![LinkClass::Array(0), LinkClass::Tray, LinkClass::Array(1)]);
+        assert_eq!(h, 3);
+        let (p, _) = f.path(Endpoint::Host, Endpoint::Node(6));
+        assert_eq!(p, vec![LinkClass::HostUplink, LinkClass::Array(1)]);
+        let (p, _) = f.path(Endpoint::Registry, Endpoint::Node(0));
+        assert_eq!(
+            p,
+            vec![LinkClass::RegistryWan, LinkClass::HostUplink, LinkClass::Array(0)]
+        );
+    }
+
+    #[test]
+    fn unknown_node_pays_worst_case_not_zero() {
+        let f = fabric(4, 1);
+        let known = f.estimate(Endpoint::Node(0), Endpoint::Node(1), 4096);
+        let unknown = f.estimate(Endpoint::Node(0), Endpoint::Node(999), 4096);
+        assert!(unknown > known, "out-of-range node must not be a free transfer");
+        assert!(f.estimate(Endpoint::Host, Endpoint::Node(999), 4096) > SimTime::ZERO);
+    }
+
+    #[test]
+    fn same_endpoint_is_free() {
+        let mut f = fabric(4, 1);
+        assert_eq!(f.estimate(Endpoint::Node(2), Endpoint::Node(2), 1 << 20), SimTime::ZERO);
+        let r = f.transfer(
+            SimTime::us(5),
+            Endpoint::Host,
+            Endpoint::Host,
+            1 << 20,
+            Priority::Foreground,
+        );
+        assert_eq!(r.latency(), SimTime::ZERO);
+    }
+
+    #[test]
+    fn registry_dearer_than_peer() {
+        let f = fabric(4, 1);
+        let peer = f.estimate(Endpoint::Node(1), Endpoint::Node(0), 1 << 20);
+        let wan = f.estimate(Endpoint::Registry, Endpoint::Node(0), 1 << 20);
+        assert!(wan > peer.scale(4.0), "WAN {wan} vs peer {peer}");
+    }
+
+    #[test]
+    fn shared_link_serializes_disjoint_links_overlap() {
+        let bytes = 8 << 20;
+        let n = 4u32;
+        // shared: node 0 feeds nodes 1..=4 over one array backplane
+        let mut f = fabric(8, 1);
+        let single = f.estimate(Endpoint::Node(0), Endpoint::Node(1), bytes);
+        let mut shared = SimTime::ZERO;
+        for i in 1..=n {
+            let r = f.transfer(
+                SimTime::ZERO,
+                Endpoint::Node(0),
+                Endpoint::Node(i),
+                bytes,
+                Priority::Foreground,
+            );
+            shared = shared.max(r.finish);
+        }
+        // disjoint: one pair per array
+        let mut f2 = fabric(2, n);
+        let mut disjoint = SimTime::ZERO;
+        for a in 0..n {
+            let r = f2.transfer(
+                SimTime::ZERO,
+                Endpoint::Node(2 * a),
+                Endpoint::Node(2 * a + 1),
+                bytes,
+                Priority::Foreground,
+            );
+            disjoint = disjoint.max(r.finish);
+        }
+        let ratio = shared.as_ns() as f64 / single.as_ns() as f64;
+        assert!((3.5..4.5).contains(&ratio), "shared/single = {ratio}");
+        assert!(disjoint.as_ns() as f64 / single.as_ns() as f64 <= 1.1);
+        assert!(f.total_queue_wait() > SimTime::ZERO);
+        assert_eq!(f2.total_queue_wait(), SimTime::ZERO);
+    }
+
+    #[test]
+    fn background_yields_within_one_frame_quantum() {
+        let mut f = fabric(4, 1);
+        // a large prefetch is mid-flight on the array link
+        f.transfer(
+            SimTime::ZERO,
+            Endpoint::Node(0),
+            Endpoint::Node(1),
+            64 << 20,
+            Priority::Background,
+        );
+        let quantum = f
+            .link(LinkClass::Array(0))
+            .unwrap()
+            .frame_quantum(EtherOnConfig::default().mtu);
+        let r = f.transfer(
+            SimTime::ZERO,
+            Endpoint::Node(2),
+            Endpoint::Node(3),
+            1 << 20,
+            Priority::Foreground,
+        );
+        assert!(
+            r.queue_wait() <= quantum,
+            "foreground waited {} > one frame quantum {}",
+            r.queue_wait(),
+            quantum
+        );
+    }
+
+    #[test]
+    fn background_queues_behind_everything() {
+        let mut f = fabric(4, 1);
+        let fg = f.transfer(
+            SimTime::ZERO,
+            Endpoint::Node(0),
+            Endpoint::Node(1),
+            8 << 20,
+            Priority::Foreground,
+        );
+        let bg = f.transfer(
+            SimTime::ZERO,
+            Endpoint::Node(2),
+            Endpoint::Node(3),
+            1 << 20,
+            Priority::Background,
+        );
+        assert!(bg.begin >= fg.finish.saturating_sub(SimTime::ns(3 * 300)));
+        assert_eq!(f.stats.transfers_bg, 1);
+        assert_eq!(f.stats.prefetch_bytes, 1 << 20);
+        assert_eq!(f.stats.prefetch_bytes_hidden, 0, "queued prefetch is not hidden");
+    }
+
+    #[test]
+    fn intranet_traffic_charges_etheron_frames() {
+        let mut f = fabric(4, 1);
+        let r = f.transfer(
+            SimTime::ZERO,
+            Endpoint::Node(0),
+            Endpoint::Node(1),
+            150_000,
+            Priority::Foreground,
+        );
+        assert_eq!(r.frames, 100); // 150_000 / mtu 1500
+        assert_eq!(f.ether.tx_frames, 100);
+        assert_eq!(f.ether.rx_frames, 100);
+    }
+
+    #[test]
+    fn counters_export_under_canonical_names() {
+        let mut f = fabric(4, 2);
+        f.transfer(
+            SimTime::ZERO,
+            Endpoint::Node(0),
+            Endpoint::Node(7),
+            1 << 20,
+            Priority::Foreground,
+        );
+        f.transfer(
+            SimTime::ZERO,
+            Endpoint::Registry,
+            Endpoint::Node(0),
+            1 << 10,
+            Priority::Background,
+        );
+        let mut c = Counters::new();
+        f.export_counters(&mut c);
+        assert!(c.get(names::FABRIC_BYTES_ARRAY) >= 2 << 20, "both array hops counted");
+        assert_eq!(c.get(names::FABRIC_BYTES_TRAY), 1 << 20);
+        assert_eq!(c.get(names::FABRIC_BYTES_WAN), 1 << 10);
+        assert_eq!(c.get(names::FABRIC_BYTES_HOST_UPLINK), 1 << 10);
+        assert_eq!(c.get(names::FABRIC_TRANSFERS), 2);
+        assert_eq!(c.get(names::FABRIC_PREFETCH_BYTES), 1 << 10);
+        assert!(c.get(names::FABRIC_FRAMES) > 0);
+    }
+}

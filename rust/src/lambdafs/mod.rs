@@ -347,7 +347,7 @@ impl LambdaFs {
     pub fn host_visible(&self, ino: Ino) -> bool {
         self.inodes
             .get(&ino)
-            .map_or(false, |i| i.ns == SHARABLE_NS)
+            .is_some_and(|i| i.ns == SHARABLE_NS)
     }
 }
 

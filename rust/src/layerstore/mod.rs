@@ -18,7 +18,8 @@
 //!   rewritten in place.
 //! * [`poolcache`]: pool-wide layer-presence map.  A node that needs a
 //!   layer fetches it from the nearest healthy peer over the Ether-oN
-//!   intranet instead of re-crossing the registry WAN.
+//!   intranet instead of re-crossing the registry WAN; every byte it
+//!   moves rides the shared [`crate::fabric`] link queues.
 
 pub mod cow;
 pub mod dedup;
@@ -33,7 +34,7 @@ use crate::util::{fnv1a, SimTime};
 
 pub use cow::{CowStore, LayerId};
 pub use dedup::{ChunkEntry, Decref, DedupIndex};
-pub use poolcache::{FetchSource, PoolLayerCache, REGISTRY_WAN_FACTOR};
+pub use poolcache::{FetchSource, PoolLayerCache};
 
 /// Default chunk size: 64KiB, the nrfs embedded-data threshold — small
 /// enough that single-file edits don't rewrite whole layers, large

@@ -10,7 +10,9 @@
 //!   [`layerstore`] (content-addressed layer storage: chunk-level dedup,
 //!   copy-on-write writable layers, and the pool-wide layer-presence
 //!   cache that turns replica boots into peer fetches instead of
-//!   registry round trips).
+//!   registry round trips), [`fabric`] (the pool-wide message fabric:
+//!   contention-aware per-link bandwidth queues that every cross-node
+//!   and host/WAN transfer routes through).
 //! * Evaluation substrates: [`models`] (the six data-processing models),
 //!   [`workloads`] (Table 2 generators), [`llm`] (the analytic
 //!   distributed-inference simulator), [`pool`] (disaggregated storage pool).
@@ -26,6 +28,7 @@ pub mod json;
 pub mod etheron;
 #[cfg(feature = "pjrt")]
 pub mod examples_support;
+pub mod fabric;
 pub mod firmware;
 pub mod lambdafs;
 pub mod layerstore;

@@ -1,10 +1,19 @@
 //! The four resource-disaggregation scenarios of Figure 12 and the
 //! sensitivity sweeps of Figure 13.
+//!
+//! The analytic model (`time_per_token`) prices communication against a
+//! private per-device link; [`step_traffic`] + [`pool_step_time`]
+//! instead route one decode step's KV/activation movement through the
+//! shared [`Fabric`], so collectives contend with layer fetches,
+//! dispatch, and other tenants on the same array/tray/uplink queues.
 
 use super::device::DeviceProfile;
 use super::models::{all_llms, LlmConfig};
-use super::parallelism::{find_optimal, OptimalChoice};
+use super::parallelism::{find_optimal, OptimalChoice, Parallelism};
 use super::InferenceTime;
+use crate::fabric::{Endpoint, Fabric, Priority};
+use crate::pool::topology::NodeId;
+use crate::util::SimTime;
 
 /// The disaggregation models (paper: H-NoCache, H-Cache, D-NoCache,
 /// D-Cache).
@@ -146,6 +155,99 @@ pub fn batch_sweep(llm: &LlmConfig, nodes: u32, seq: u64, batches: &[u64]) -> Ve
         .collect()
 }
 
+/// One decode step's cross-node traffic for a chosen parallelism,
+/// assuming global rank `r` lives on pool node `r` (the orchestrator's
+/// packed placement): data-parallel replica `k` occupies the node range
+/// `[k*tp*pp, (k+1)*tp*pp)` and every replica's traffic is emitted —
+/// they all contend on the shared fabric.  Mirrors the analytic comm
+/// model of [`crate::llm::time_per_token`]: tensor parallelism is a
+/// ring step per all-reduce (2 per layer, folded into one per-rank
+/// volume), pipeline parallelism is a per-boundary activation hop.
+/// With `host_coordinated` (the H-* scenarios) each replica's step also
+/// round-trips the sampled token's activations over the host uplink.
+pub fn step_traffic(
+    llm: &LlmConfig,
+    par: Parallelism,
+    seq: u64,
+    batch: u64,
+    kv_cache: bool,
+    host_coordinated: bool,
+) -> Vec<(Endpoint, Endpoint, u64)> {
+    let d = llm.d_model as f64;
+    let l = llm.layers as f64;
+    let b_local = (batch as f64 / par.dp as f64).max(1.0);
+    let prefix = (seq as f64 / 2.0).max(1.0);
+    let group = par.tp * par.pp;
+    let mut out = Vec::new();
+    for k in 0..par.dp {
+        let base = k * group;
+        if par.tp > 1 {
+            let positions = if kv_cache { 1.0 } else { prefix };
+            let per_rank = (2.0 * l * positions * b_local * d * 2.0
+                * ((par.tp - 1) as f64 / par.tp as f64)) as u64;
+            for r in 0..par.tp {
+                let from = (base + r) as NodeId;
+                let to = (base + (r + 1) % par.tp) as NodeId;
+                out.push((Endpoint::Node(from), Endpoint::Node(to), per_rank));
+            }
+        }
+        if par.pp > 1 {
+            let act = (b_local * d * 2.0) as u64;
+            for s in 0..par.pp - 1 {
+                let from = (base + s * par.tp + par.tp - 1) as NodeId;
+                let to = (base + (s + 1) * par.tp) as NodeId;
+                out.push((Endpoint::Node(from), Endpoint::Node(to), act));
+            }
+        }
+        if host_coordinated {
+            let act = (b_local * d * 2.0) as u64;
+            let last = (base + group - 1) as NodeId;
+            out.push((Endpoint::Node(last), Endpoint::Host, act));
+            out.push((Endpoint::Host, Endpoint::Node(base as NodeId), act));
+        }
+    }
+    out
+}
+
+/// Route one decode step's traffic through the shared fabric at `now`;
+/// returns the step's communication makespan (last byte landed minus
+/// `now`).  The fabric keeps its queue state, so a second tenant issuing
+/// its step at the same instant sees the congestion the first created.
+pub fn pool_step_time(
+    fabric: &mut Fabric,
+    now: SimTime,
+    traffic: &[(Endpoint, Endpoint, u64)],
+) -> SimTime {
+    let mut finish = now;
+    for &(from, to, bytes) in traffic {
+        let r = fabric.transfer(now, from, to, bytes, Priority::Foreground);
+        finish = finish.max(r.finish);
+    }
+    finish.saturating_sub(now)
+}
+
+/// Re-price a scenario's communication on the shared fabric: compute
+/// and memory come from the analytic model, but `comm` becomes the time
+/// the fabric actually granted one step's traffic (scaled to the full
+/// generation).  Under contention this is strictly slower than the
+/// idle-wire analytic figure — the gap *is* the congestion.
+pub fn pool_adjusted_time(
+    fabric: &mut Fabric,
+    r: &ScenarioResult,
+    llm: &LlmConfig,
+    seq: u64,
+    batch: u64,
+) -> InferenceTime {
+    let host = matches!(r.disagg, DisaggModel::HostNoCache | DisaggModel::HostCache);
+    let traffic = step_traffic(llm, r.choice.par, seq, batch, r.disagg.kv_cache(), host);
+    let step = pool_step_time(fabric, SimTime::ZERO, &traffic);
+    InferenceTime {
+        compute: r.time().compute,
+        memory: r.time().memory,
+        comm: step.as_secs_f64() * seq as f64,
+    }
+}
+
 /// The crossover sequence length where D-Cache starts beating H-Cache.
 pub fn crossover_seq(llm: &LlmConfig, nodes: u32) -> Option<u64> {
     let seqs: Vec<u64> = (4..=17).map(|p| 1u64 << p).collect();
@@ -219,5 +321,75 @@ mod tests {
         let llm = all_llms().remove(0);
         let x = crossover_seq(&llm, 16);
         assert!(x.is_some(), "no crossover found");
+    }
+
+    fn fabric16() -> Fabric {
+        use crate::config::{EtherOnConfig, PoolConfig};
+        Fabric::new(
+            &PoolConfig {
+                nodes_per_array: 16,
+                arrays: 1,
+                ..Default::default()
+            },
+            &EtherOnConfig::default(),
+        )
+    }
+
+    #[test]
+    fn serial_parallelism_moves_no_bytes() {
+        let llm = all_llms().remove(0);
+        let par = Parallelism { dp: 1, tp: 1, pp: 1 };
+        assert!(step_traffic(&llm, par, 1024, 1, true, false).is_empty());
+    }
+
+    #[test]
+    fn data_parallel_replicas_all_emit_traffic() {
+        let llm = all_llms().remove(0);
+        let par = Parallelism { dp: 4, tp: 2, pp: 1 };
+        let traffic = step_traffic(&llm, par, 1024, 4, true, false);
+        assert_eq!(traffic.len(), 8, "4 replicas x 2-rank rings");
+        // replica 3's ring lives on nodes 6 and 7, not on replica 0's
+        assert!(traffic.iter().any(|(f, _, _)| *f == Endpoint::Node(6)));
+        assert!(traffic.iter().any(|(f, _, _)| *f == Endpoint::Node(7)));
+    }
+
+    #[test]
+    fn tensor_parallel_steps_contend_between_tenants() {
+        let llm = all_llms().remove(0);
+        let par = Parallelism { dp: 1, tp: 8, pp: 1 };
+        let traffic = step_traffic(&llm, par, 32_768, 1, true, false);
+        assert_eq!(traffic.len(), 8, "one ring send per tp rank");
+        let mut f = fabric16();
+        let alone = pool_step_time(&mut f, SimTime::ZERO, &traffic);
+        assert!(alone > SimTime::ZERO);
+        // a second tenant issuing the same step at the same instant
+        // queues behind the first on the shared array backplane
+        let contended = pool_step_time(&mut f, SimTime::ZERO, &traffic);
+        assert!(contended > alone, "{contended} !> {alone}");
+    }
+
+    #[test]
+    fn host_coordinated_steps_cross_the_host_uplink() {
+        use crate::metrics::{names, Counters};
+        let llm = all_llms().remove(0);
+        let par = Parallelism { dp: 1, tp: 4, pp: 1 };
+        let traffic = step_traffic(&llm, par, 1024, 1, true, true);
+        let mut f = fabric16();
+        pool_step_time(&mut f, SimTime::ZERO, &traffic);
+        let mut c = Counters::new();
+        f.export_counters(&mut c);
+        assert!(c.get(names::FABRIC_BYTES_HOST_UPLINK) > 0);
+        assert!(c.get(names::FABRIC_BYTES_ARRAY) > 0);
+    }
+
+    #[test]
+    fn pool_adjustment_only_reprices_comm() {
+        let llm = all_llms().remove(0);
+        let r = evaluate_scenario(&llm, DisaggModel::DockerCache, 16, 32_768, 1).unwrap();
+        let mut f = fabric16();
+        let adjusted = pool_adjusted_time(&mut f, &r, &llm, 32_768, 1);
+        assert_eq!(adjusted.compute, r.time().compute);
+        assert_eq!(adjusted.memory, r.time().memory);
+        assert!(adjusted.comm >= 0.0);
     }
 }

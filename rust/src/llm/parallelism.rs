@@ -103,7 +103,7 @@ pub fn find_optimal(
             continue;
         }
         let t = sequence_time(llm, dev, par, seq, batch, kv_cache);
-        if best.as_ref().map_or(true, |b| t.total() < b.time.total()) {
+        if best.as_ref().is_none_or(|b| t.total() < b.time.total()) {
             best = Some(OptimalChoice { par, time: t });
         }
     }

@@ -110,6 +110,24 @@ pub mod names {
     pub const BYTES_FROM_REGISTRY: &str = "layerstore.bytes_from_registry";
     /// Bytes that never crossed the registry WAN thanks to pool reuse.
     pub const BYTES_NOT_TRANSFERRED: &str = "layerstore.bytes_not_transferred";
+    /// Layers dropped by pool-wide GC.
+    pub const GC_EVICTIONS: &str = "layerstore.gc_evictions";
+
+    // Canonical names for the [`crate::fabric`] subsystem: bytes
+    // serialized per link class, queueing delay, and prefetch volume.
+    pub const FABRIC_BYTES_ARRAY: &str = "fabric.bytes_array";
+    pub const FABRIC_BYTES_TRAY: &str = "fabric.bytes_tray";
+    pub const FABRIC_BYTES_HOST_UPLINK: &str = "fabric.bytes_host_uplink";
+    pub const FABRIC_BYTES_WAN: &str = "fabric.bytes_wan";
+    /// Total time transfers spent waiting for a contended wire.
+    pub const FABRIC_QUEUE_WAIT_NS: &str = "fabric.queue_wait_ns";
+    pub const FABRIC_TRANSFERS: &str = "fabric.transfers";
+    /// MTU frames charged to the Ether-oN driver path.
+    pub const FABRIC_FRAMES: &str = "fabric.frames";
+    /// Bytes moved by background prefetch.
+    pub const FABRIC_PREFETCH_BYTES: &str = "fabric.prefetch_bytes";
+    /// Prefetch bytes that never waited behind foreground traffic.
+    pub const FABRIC_PREFETCH_HIDDEN: &str = "fabric.prefetch_bytes_hidden";
 }
 
 /// Named counters for substrate statistics.

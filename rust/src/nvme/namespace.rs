@@ -23,7 +23,7 @@ pub struct Namespace {
 
 impl Namespace {
     pub fn contains(&self, slba: u64, blocks: u64) -> bool {
-        slba.checked_add(blocks).map_or(false, |end| end <= self.lba_count)
+        slba.checked_add(blocks).is_some_and(|end| end <= self.lba_count)
     }
 }
 
@@ -69,7 +69,7 @@ impl NvmeSubsystem {
 
     /// Access check: is `nsid` reachable from this function at all?
     pub fn check_access(&self, nsid: NamespaceId, from_host: bool) -> bool {
-        self.get(nsid).map_or(false, |n| !from_host || n.host_visible)
+        self.get(nsid).is_some_and(|n| !from_host || n.host_visible)
     }
 
     /// Base offset of a namespace in the flat device LBA space (namespaces

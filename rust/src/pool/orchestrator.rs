@@ -6,7 +6,9 @@
 use std::collections::HashMap;
 
 use super::topology::{NodeId, PoolTopology};
+use crate::fabric::Fabric;
 use crate::layerstore::PoolLayerCache;
+use crate::util::SimTime;
 
 /// Restart policy (compose-like).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -73,40 +75,58 @@ impl Orchestrator {
     }
 
     /// Layer-locality-aware placement: score each healthy node by the
-    /// bytes it would have to fetch (`missing_bytes`) plus a
-    /// load-balancing term (`load × image_bytes`, so one queued replica
-    /// costs as much as one full cold pull), and place on the cheapest —
-    /// ties broken by least load, then lowest id.  A replica landing on
-    /// a warm node boots from the local layerstore instead of pulling
-    /// across the pool — the placement-side half of the dedup story.
+    /// fabric's idle-wire estimate of fetching its missing layers, plus
+    /// a load-balancing term (`load × unit_cost(image_bytes)`, so one
+    /// queued replica costs as much as one full warm pull), and place on
+    /// the cheapest — ties broken by least load, then lowest id.  A
+    /// replica landing on a warm node boots from the local layerstore
+    /// instead of pulling across the pool — the placement-side half of
+    /// the dedup story.
+    ///
+    /// Each placement immediately kicks off *background prefetches* for
+    /// the layers the chosen node is missing: the bytes start moving on
+    /// the fabric's background lane while the container is still being
+    /// created, and they yield the wire to any foreground fetch within
+    /// one frame quantum.  By boot time the layers are (being) resident,
+    /// so the boot-path fetch is a local hit.
     ///
     /// `layers` is the image's (blob digest, bytes) list.
     pub fn deploy_with_layers(
         &mut self,
         topo: &PoolTopology,
+        fabric: &mut Fabric,
         spec: &DeploymentSpec,
-        cache: &PoolLayerCache,
+        cache: &mut PoolLayerCache,
         layers: &[(u64, u64)],
+        now: SimTime,
     ) -> Result<Vec<NodeId>, String> {
-        let mut healthy: Vec<NodeId> = topo.healthy_nodes().map(|n| n.id).collect();
+        let healthy: Vec<NodeId> = topo.healthy_nodes().map(|n| n.id).collect();
         if healthy.is_empty() {
             return Err("no healthy nodes".into());
         }
-        let image_bytes: u64 = layers.iter().map(|(_, b)| *b).sum();
-        let missing_bytes = |id: &NodeId| -> u64 {
-            layers
-                .iter()
-                .filter(|(d, _)| !cache.node_has(*id, *d))
-                .map(|(_, b)| *b)
-                .sum()
-        };
+        // one queued replica costs as much as one full warm pull of the
+        // image, layer by layer (hop latency included, so a fully-cold
+        // node and a once-queued warm node tie and load breaks the tie)
+        let queued_cost: SimTime = layers
+            .iter()
+            .fold(SimTime::ZERO, |acc, (_, b)| acc + fabric.unit_cost(*b));
         let mut placed = Vec::new();
         for r in 0..spec.replicas {
-            healthy.sort_by_key(|id| {
-                let load = self.load.get(id).copied().unwrap_or(0) as u64;
-                (missing_bytes(id) + load * image_bytes, load, *id)
-            });
-            let node = healthy[0];
+            // single pass; the key is unique (it ends in the node id),
+            // so the minimum is deterministic
+            let node = *healthy
+                .iter()
+                .min_by_key(|id| {
+                    let load = self.load.get(*id).copied().unwrap_or(0) as u64;
+                    let missing: SimTime = layers
+                        .iter()
+                        .filter(|(d, _)| !cache.node_has(**id, *d))
+                        .fold(SimTime::ZERO, |acc, (d, b)| {
+                            acc + cache.plan(fabric, topo, **id, *d, *b).1
+                        });
+                    (missing + queued_cost.scale(load as f64), load, **id)
+                })
+                .expect("healthy is non-empty");
             *self.load.entry(node).or_insert(0) += 1;
             self.placements.push(Placement {
                 deployment: spec.name.clone(),
@@ -116,8 +136,22 @@ impl Orchestrator {
                 restarts: 0,
             });
             placed.push(node);
+            // overlap layer transfer with container create: background
+            // prefetch for every layer the node is missing
+            for (d, b) in layers {
+                if !cache.node_has(node, *d) {
+                    cache.prefetch(fabric, topo, now, node, *d, *b);
+                }
+            }
         }
         Ok(placed)
+    }
+
+    /// Run pool-wide layer GC with this orchestrator's replica counts as
+    /// the load signal: layers held by more than `k` nodes are dropped
+    /// from the most-loaded holders first (see [`PoolLayerCache::gc`]).
+    pub fn gc_pool(&self, cache: &mut PoolLayerCache, k: usize) -> Vec<(NodeId, u64)> {
+        cache.gc(k, |n| self.load_of(n) as u64)
     }
 
     pub fn placements(&self, deployment: &str) -> Vec<&Placement> {
@@ -153,7 +187,7 @@ impl Orchestrator {
             return false;
         }
         // restart on the same node if healthy, else move to least-loaded
-        let target = if topo.node(node).map_or(false, |n| n.healthy) {
+        let target = if topo.node(node).is_some_and(|n| n.healthy) {
             node
         } else {
             *self.load.entry(node).or_insert(1) -= 1;
@@ -186,7 +220,8 @@ impl Orchestrator {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::PoolConfig;
+    use crate::config::{EtherOnConfig, PoolConfig};
+    use crate::layerstore::FetchSource;
 
     fn topo(n: u32) -> PoolTopology {
         PoolTopology::build(&PoolConfig {
@@ -194,6 +229,17 @@ mod tests {
             arrays: 1,
             ..Default::default()
         })
+    }
+
+    fn fabric(n: u32) -> Fabric {
+        Fabric::new(
+            &PoolConfig {
+                nodes_per_array: n,
+                arrays: 1,
+                ..Default::default()
+            },
+            &EtherOnConfig::default(),
+        )
     }
 
     fn spec(name: &str, replicas: u32) -> DeploymentSpec {
@@ -247,6 +293,7 @@ mod tests {
     #[test]
     fn layer_locality_prefers_warm_nodes() {
         let t = topo(4);
+        let mut f = fabric(4);
         let mut orch = Orchestrator::new();
         let mut cache = PoolLayerCache::new();
         // node 2 already holds both layers, node 1 holds one
@@ -255,23 +302,30 @@ mod tests {
         cache.register(1, 0xA);
         let layers = [(0xA, 1000u64), (0xB, 2000u64)];
         let placed = orch
-            .deploy_with_layers(&t, &spec("infer", 3), &cache, &layers)
+            .deploy_with_layers(&t, &mut f, &spec("infer", 3), &mut cache, &layers, SimTime::ZERO)
             .unwrap();
         assert_eq!(placed[0], 2, "fully warm node first");
-        assert_eq!(placed[1], 1, "partially warm node next: 2000 missing beats 0+1 load");
-        // replica 3: warm-but-loaded node 2 costs 3000, cold idle node 0
-        // costs 3000 too — lower load wins the tie
+        assert_eq!(placed[1], 1, "partially warm node next: fetching 2000B beats one queued replica");
+        // replica 3: warm-but-loaded nodes cost one queued replica, the
+        // cold idle node costs one full image fetch — a tie by
+        // construction, and lower load wins it
         assert_eq!(placed[2], 0);
+        assert_eq!(
+            cache.prefetch_bytes,
+            2000 + 3000,
+            "replica 2's missing layer + replica 3's full image were prefetched"
+        );
     }
 
     #[test]
     fn layer_locality_falls_back_to_load_spread_when_cold() {
         let t = topo(4);
+        let mut f = fabric(4);
         let mut orch = Orchestrator::new();
-        let cache = PoolLayerCache::new();
+        let mut cache = PoolLayerCache::new();
         let layers = [(0xA, 1000u64)];
         let placed = orch
-            .deploy_with_layers(&t, &spec("infer", 4), &cache, &layers)
+            .deploy_with_layers(&t, &mut f, &spec("infer", 4), &mut cache, &layers, SimTime::ZERO)
             .unwrap();
         let mut sorted = placed.clone();
         sorted.sort();
@@ -282,14 +336,59 @@ mod tests {
     #[test]
     fn layer_locality_skips_unhealthy_holders() {
         let mut t = topo(3);
+        let mut f = fabric(3);
         let mut cache = PoolLayerCache::new();
         cache.register(0, 0xA);
         t.node_mut(0).unwrap().healthy = false;
         let mut orch = Orchestrator::new();
         let placed = orch
-            .deploy_with_layers(&t, &spec("infer", 2), &cache, &[(0xA, 512)])
+            .deploy_with_layers(&t, &mut f, &spec("infer", 2), &mut cache, &[(0xA, 512)], SimTime::ZERO)
             .unwrap();
         assert!(!placed.contains(&0));
+    }
+
+    #[test]
+    fn placement_prefetch_makes_boot_fetch_local() {
+        let t = topo(4);
+        let mut f = fabric(4);
+        let mut orch = Orchestrator::new();
+        let mut cache = PoolLayerCache::new();
+        let layers = [(0xA, 4096u64), (0xB, 8192u64)];
+        let placed = orch
+            .deploy_with_layers(&t, &mut f, &spec("infer", 2), &mut cache, &layers, SimTime::ZERO)
+            .unwrap();
+        assert_eq!(cache.prefetch_bytes, 2 * (4096 + 8192), "both replicas prefetched");
+        assert!(f.stats.transfers_bg >= 4, "prefetch rides the background lane");
+        // the boot-path fetch rides the prefetch: it hits locally and at
+        // most waits for the in-flight tail, never re-transfers
+        for nid in placed {
+            for (d, b) in layers {
+                let (src, lat) = cache.fetch(&mut f, &t, SimTime::ZERO, nid, d, b);
+                assert_eq!(src, FetchSource::Local);
+                let (src2, lat2) = cache.fetch(&mut f, &t, lat, nid, d, b);
+                assert_eq!(src2, FetchSource::Local);
+                assert_eq!(lat2, SimTime::ZERO, "resident once the tail has landed");
+            }
+        }
+    }
+
+    #[test]
+    fn gc_pool_uses_replica_load() {
+        let t = topo(4);
+        let mut orch = Orchestrator::new();
+        orch.deploy(&t, &spec("infer", 4)).unwrap();
+        orch.deploy(&t, &spec("extra", 1)).unwrap(); // node 0 now loaded 2
+        let mut cache = PoolLayerCache::new();
+        for n in 0..4 {
+            cache.register(n, 0xD);
+        }
+        let evicted = orch.gc_pool(&mut cache, 2);
+        assert_eq!(evicted.len(), 2);
+        assert!(
+            evicted.contains(&(0, 0xD)),
+            "most-loaded node evicted first: {evicted:?}"
+        );
+        assert_eq!(cache.holders(0xD).len(), 2);
     }
 
     #[test]

@@ -198,7 +198,7 @@ impl Ftl {
                 if b.erased || open || !b.full() {
                     continue;
                 }
-                if best.map_or(true, |(_, _, v)| b.valid < v) {
+                if best.is_none_or(|(_, _, v)| b.valid < v) {
                     best = Some((pkg, bi, b.valid));
                 }
             }

@@ -8,6 +8,7 @@ use dockerssd::config::SystemConfig;
 use dockerssd::docker::{DockerCmd, MiniDocker, Registry};
 use dockerssd::etheron::{EtherOnDriver, MacAddr, TcpStack};
 use dockerssd::etheron::frame::{tcp_frame, EthFrame, Ipv4Packet, TcpSegment};
+use dockerssd::fabric::{Endpoint, Fabric, LinkClass};
 use dockerssd::firmware::VirtualFw;
 use dockerssd::lambdafs::{LambdaFs, LockSide};
 use dockerssd::layerstore::{FetchSource, LayerStore, PoolLayerCache};
@@ -178,16 +179,20 @@ fn pool_deployment_survives_node_failure() {
 /// The ISSUE 1 acceptance criterion as a tier-1 gate: booting N=4
 /// replicas of one image across the pool via the layerstore moves at
 /// least 2x fewer registry-WAN bytes than the registry-only path, and
-/// the dedup/CoW counters are visible in metrics.
+/// the dedup/CoW counters are visible in metrics.  Since ISSUE 2, every
+/// byte rides the shared fabric and placement prefetches missing layers
+/// in the background, so the boot-path fetch hits locally.
 #[test]
 fn replica_boot_scales_with_unique_bytes_not_replicas() {
     let cfg = SystemConfig::default();
     let scfg = cfg.ssd.clone();
-    let topo = PoolTopology::build(&dockerssd::config::PoolConfig {
+    let pcfg = dockerssd::config::PoolConfig {
         nodes_per_array: 4,
         arrays: 1,
         ..Default::default()
-    });
+    };
+    let topo = PoolTopology::build(&pcfg);
+    let mut fabric = Fabric::new(&pcfg, &cfg.etheron);
     let reg = Registry::with_benchmark_images();
     let (manifest, blobs) = reg.fetch("nginx").unwrap();
     let image_bytes: u64 = blobs.iter().map(|b| b.bytes.len() as u64).sum();
@@ -216,15 +221,21 @@ fn replica_boot_scales_with_unique_bytes_not_replicas() {
         replicas,
         restart: RestartPolicy::OnFailure,
     };
-    let placed = orch.deploy_with_layers(&topo, &spec, &cache, &layers).unwrap();
+    let placed = orch
+        .deploy_with_layers(&topo, &mut fabric, &spec, &mut cache, &layers, SimTime::ZERO)
+        .unwrap();
     assert_eq!(placed.len(), replicas as usize);
+    // placement prefetched every missing layer over the background lane:
+    // the cold node pulled from the registry, the rest from peers
+    assert!(cache.peer_fetches > 0, "warm replicas must prefetch from peers");
 
     let mut sources = Vec::new();
     for nid in placed {
         let (dev, fs, fw, md, store) = &mut nodes[nid as usize];
         let mut t = SimTime::ZERO;
         for blob in blobs {
-            let (src, xfer) = cache.fetch(&topo, nid, blob.digest, blob.bytes.len() as u64);
+            let (src, xfer) =
+                cache.fetch(&mut fabric, &topo, t, nid, blob.digest, blob.bytes.len() as u64);
             sources.push(src);
             t += xfer;
             let r = fw.install.install_blob(fs, dev, store, t, &blob.bytes).unwrap();
@@ -247,28 +258,32 @@ fn replica_boot_scales_with_unique_bytes_not_replicas() {
             .unwrap();
     }
 
-    // only the first (cold) node crossed the WAN
+    // only the first (cold) node's prefetch crossed the WAN
     assert_eq!(cache.bytes_from_registry, image_bytes);
     assert!(
         baseline_wan_bytes >= 2 * cache.bytes_from_registry,
         "acceptance: >=2x reduction, got {baseline_wan_bytes} vs {}",
         cache.bytes_from_registry
     );
+    // prefetch made every boot-path fetch a local hit
     assert!(
-        sources.iter().any(|s| matches!(s, FetchSource::Peer(_))),
-        "warm replicas must fetch from peers"
+        sources.iter().all(|s| matches!(s, FetchSource::Local)),
+        "prefetched layers must be resident at boot: {sources:?}"
     );
 
-    // dedup/CoW/peer counters visible in metrics
+    // dedup/CoW/peer/fabric counters visible in metrics
     let mut counters = Counters::new();
     for (_, _, _, md, store) in &nodes {
         store.export_counters(&mut counters);
         md.cow.export_counters(&mut counters);
     }
     cache.export_counters(&mut counters);
+    fabric.export_counters(&mut counters);
     assert_eq!(counters.get(names::REGISTRY_FETCHES), blobs.len() as u64);
     assert_eq!(counters.get(names::PEER_FETCHES), (replicas as u64 - 1) * blobs.len() as u64);
     assert_eq!(counters.get(names::COW_BREAKS), replicas as u64);
+    // N-1 replicas' bytes stayed on the intranet; the boot-path local
+    // hits of prefetched layers are not counted a second time
     assert_eq!(
         counters.get(names::BYTES_NOT_TRANSFERRED),
         (replicas as u64 - 1) * image_bytes
@@ -278,15 +293,116 @@ fn replica_boot_scales_with_unique_bytes_not_replicas() {
         replicas as u64 * image_bytes + replicas as u64 * (64 << 10),
         "each node writes the image once (dedup'd) plus one CoW chunk copy"
     );
+    assert_eq!(counters.get(names::FABRIC_BYTES_WAN), image_bytes);
+    assert_eq!(
+        counters.get(names::FABRIC_PREFETCH_BYTES),
+        replicas as u64 * image_bytes,
+        "every layer byte arrived via background prefetch"
+    );
 }
 
 #[test]
-fn pool_topology_latency_model_consistency() {
+fn pool_fabric_latency_model_consistency() {
     let cfg = SystemConfig::default();
-    let topo = PoolTopology::build(&cfg.pool);
-    // transferring a KV page between neighbors is cheaper than through
-    // the host path
-    let near = topo.link_time(0, 1, 4096);
-    let via_host = topo.host_link_time(0, 4096) + topo.host_link_time(1, 4096);
+    let fabric = Fabric::of(&cfg);
+    // transferring a KV page between neighbors is cheaper than bouncing
+    // it through the host path
+    let near = fabric.estimate(Endpoint::Node(0), Endpoint::Node(1), 4096);
+    let via_host = fabric.estimate(Endpoint::Node(0), Endpoint::Host, 4096)
+        + fabric.estimate(Endpoint::Host, Endpoint::Node(1), 4096);
     assert!(near < via_host);
+    // and the registry is the dearest source of all
+    let wan = fabric.estimate(Endpoint::Registry, Endpoint::Node(1), 4096);
+    assert!(via_host < wan);
+}
+
+/// ISSUE 2 acceptance: booting N replicas over one shared link is
+/// measurably slower than over N disjoint links, with `fabric.*`
+/// counters exported.  The storm goes through the real layerstore fetch
+/// path, so this also pins the poolcache -> fabric integration.
+#[test]
+fn fabric_contention_replica_boot_storm() {
+    let n = 4u32;
+    let bytes = 8 << 20;
+    let digest = 0xB007;
+
+    // shared: one array, node 0 seeds n replicas over one backplane
+    let shared_cfg = dockerssd::config::PoolConfig {
+        nodes_per_array: n + 1,
+        arrays: 1,
+        ..Default::default()
+    };
+    let shared_topo = PoolTopology::build(&shared_cfg);
+    let mut shared_fabric = Fabric::new(&shared_cfg, &dockerssd::config::EtherOnConfig::default());
+    let single = shared_fabric.estimate(Endpoint::Node(0), Endpoint::Node(1), bytes);
+    let mut cache = PoolLayerCache::new();
+    cache.register(0, digest);
+    let mut shared_makespan = SimTime::ZERO;
+    for nid in 1..=n {
+        let (src, lat) =
+            cache.fetch(&mut shared_fabric, &shared_topo, SimTime::ZERO, nid, digest, bytes);
+        assert!(matches!(src, FetchSource::Peer(_)));
+        shared_makespan = shared_makespan.max(lat);
+    }
+
+    // disjoint: n arrays of 2, each pair boots over its own backplane
+    let disjoint_cfg = dockerssd::config::PoolConfig {
+        nodes_per_array: 2,
+        arrays: n,
+        ..Default::default()
+    };
+    let disjoint_topo = PoolTopology::build(&disjoint_cfg);
+    let mut disjoint_fabric =
+        Fabric::new(&disjoint_cfg, &dockerssd::config::EtherOnConfig::default());
+    let mut cache2 = PoolLayerCache::new();
+    let mut disjoint_makespan = SimTime::ZERO;
+    for a in 0..n {
+        cache2.register(2 * a, digest);
+        let to = 2 * a + 1;
+        let (src, lat) =
+            cache2.fetch(&mut disjoint_fabric, &disjoint_topo, SimTime::ZERO, to, digest, bytes);
+        assert!(matches!(src, FetchSource::Peer(_)));
+        disjoint_makespan = disjoint_makespan.max(lat);
+    }
+
+    let ratio = shared_makespan.as_ns() as f64 / single.as_ns() as f64;
+    assert!(
+        (3.5..=4.5).contains(&ratio),
+        "N concurrent same-link transfers should take ~Nx one transfer: {ratio:.2}x"
+    );
+    assert!(
+        disjoint_makespan.as_ns() as f64 / single.as_ns() as f64 <= 1.1,
+        "disjoint links must overlap: {disjoint_makespan} vs single {single}"
+    );
+    assert!(
+        shared_makespan > disjoint_makespan.scale(2.0),
+        "shared-link boot storm must be measurably slower"
+    );
+
+    // background prefetch on the contended link never delays a
+    // foreground fetch by more than one frame quantum
+    let mut pf_fabric = Fabric::new(&shared_cfg, &dockerssd::config::EtherOnConfig::default());
+    let mut pf_cache = PoolLayerCache::new();
+    pf_cache.register(0, digest);
+    pf_cache.prefetch(&mut pf_fabric, &shared_topo, SimTime::ZERO, 1, digest, 64 << 20);
+    pf_cache.register(2, 0xFEED);
+    let (_, fg_lat) = pf_cache.fetch(&mut pf_fabric, &shared_topo, SimTime::ZERO, 3, 0xFEED, bytes);
+    let idle = pf_fabric.estimate(Endpoint::Node(2), Endpoint::Node(3), bytes);
+    let mtu = dockerssd::config::EtherOnConfig::default().mtu;
+    let quantum = pf_fabric.link(LinkClass::Array(0)).unwrap().frame_quantum(mtu);
+    assert!(
+        fg_lat <= idle + quantum,
+        "foreground {fg_lat} exceeded idle {idle} + frame quantum {quantum}"
+    );
+
+    // fabric.* counters exported
+    let mut counters = Counters::new();
+    shared_fabric.export_counters(&mut counters);
+    assert_eq!(counters.get(names::FABRIC_BYTES_ARRAY), n as u64 * bytes);
+    assert!(counters.get(names::FABRIC_QUEUE_WAIT_NS) > 0, "contention must be visible");
+    assert_eq!(counters.get(names::FABRIC_TRANSFERS), n as u64);
+    assert!(counters.get(names::FABRIC_FRAMES) > 0, "intranet traffic charges Ether-oN frames");
+    let mut c2 = Counters::new();
+    disjoint_fabric.export_counters(&mut c2);
+    assert_eq!(c2.get(names::FABRIC_QUEUE_WAIT_NS), 0, "disjoint links never queue");
 }

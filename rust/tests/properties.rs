@@ -404,3 +404,92 @@ fn prop_lambdafs_durability() {
         assert_eq!(&r.value, body, "{path}");
     }
 }
+
+// --- fabric invariants ------------------------------------------------------
+
+/// Fabric: for random transfer mixes, receipts are causally ordered
+/// (issued <= begin <= finish), per-link byte accounting conserves the
+/// bytes offered, and same-lane traffic on one link never overlaps.
+#[test]
+fn prop_fabric_receipts_causal_and_conserving() {
+    use dockerssd::config::{EtherOnConfig, PoolConfig};
+    use dockerssd::fabric::{Endpoint, Fabric, LinkClass, Priority};
+
+    let mut rng = Rng::new(77);
+    for case in 0..50u64 {
+        let cfg = PoolConfig {
+            nodes_per_array: 4,
+            arrays: 1,
+            ..Default::default()
+        };
+        let mut fabric = Fabric::new(&cfg, &EtherOnConfig::default());
+        let mut offered = 0u64;
+        let mut prev_fg_finish = SimTime::ZERO;
+        let mut now = SimTime::ZERO;
+        for _ in 0..20 {
+            now += SimTime::ns(rng.below(1000));
+            let from = rng.below(4) as u32;
+            let mut to = rng.below(4) as u32;
+            if to == from {
+                to = (to + 1) % 4;
+            }
+            let bytes = rng.below(1 << 20) + 1;
+            let pri = if rng.chance(0.3) {
+                Priority::Background
+            } else {
+                Priority::Foreground
+            };
+            let r = fabric.transfer(now, Endpoint::Node(from), Endpoint::Node(to), bytes, pri);
+            assert!(r.issued <= r.begin && r.begin <= r.finish, "case {case}: causality");
+            offered += bytes;
+            if pri == Priority::Foreground {
+                // single array: every foreground transfer serializes on
+                // the one backplane, so wire grants never regress
+                assert!(r.begin >= prev_fg_finish.saturating_sub(SimTime::ns(300)), "case {case}");
+                prev_fg_finish = r.finish;
+            }
+        }
+        let q = fabric.link(LinkClass::Array(0)).unwrap();
+        assert_eq!(q.bytes, offered, "case {case}: all bytes serialized on the backplane");
+    }
+}
+
+/// Fabric: a foreground transfer is never delayed by background traffic
+/// by more than one frame quantum, for random prefetch loads.
+#[test]
+fn prop_fabric_foreground_isolation() {
+    use dockerssd::config::{EtherOnConfig, PoolConfig};
+    use dockerssd::fabric::{Endpoint, Fabric, LinkClass, Priority};
+
+    let mut rng = Rng::new(78);
+    for case in 0..CASES {
+        let cfg = PoolConfig {
+            nodes_per_array: 4,
+            arrays: 1,
+            ..Default::default()
+        };
+        let mut fabric = Fabric::new(&cfg, &EtherOnConfig::default());
+        // random background load, all issued at t=0
+        for _ in 0..(1 + rng.below(4)) {
+            let bytes = rng.below(32 << 20) + 1;
+            fabric.transfer(SimTime::ZERO, Endpoint::Node(0), Endpoint::Node(1), bytes,
+                Priority::Background);
+        }
+        let r = fabric.transfer(
+            SimTime::ZERO,
+            Endpoint::Node(2),
+            Endpoint::Node(3),
+            4096,
+            Priority::Foreground,
+        );
+        let quantum = fabric
+            .link(LinkClass::Array(0))
+            .unwrap()
+            .frame_quantum(EtherOnConfig::default().mtu);
+        assert!(
+            r.queue_wait() <= quantum,
+            "case {case}: foreground waited {} behind prefetch (quantum {quantum})",
+            r.queue_wait()
+        );
+    }
+}
