@@ -10,6 +10,7 @@
 
 use dockerssd::config::SystemConfig;
 use dockerssd::docker::{MiniDocker, Registry};
+use dockerssd::fabric::Fabric;
 use dockerssd::firmware::VirtualFw;
 use dockerssd::lambdafs::{LambdaFs, LockSide};
 use dockerssd::ssd::SsdDevice;
@@ -37,10 +38,13 @@ fn main() {
         .expect("host writes input");
     println!("host staged {} bytes into /data/input.bin ({:?} simulated)", input.len(), w.done);
 
-    // 3. pull + run the ISP container
+    // 3. pull + run the ISP container (registry bytes cross the pool fabric)
     let reg = Registry::with_benchmark_images();
     let mut md = MiniDocker::new();
-    let pulled = md.pull(&mut fw, &mut fs, &mut dev, &reg, w.done, "pattern").unwrap();
+    let mut fab = Fabric::of(&cfg);
+    let pulled = md
+        .pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab, 0, w.done, "pattern")
+        .unwrap();
     let run = md.run(&mut fw, &mut fs, &mut dev, pulled.done, "pattern").unwrap();
     let id = run.output.clone();
     println!("ISP-container {} running ({:?} simulated)", id, run.done);

@@ -158,11 +158,49 @@ fn tenant_mix(records: &mut Vec<BenchRecord>) {
     assert!(step_mixed >= step_alone, "sharing a wire cannot be free");
 }
 
+/// Event-driven engine: a preempted background prefetch is re-timed —
+/// its real finish (after yielding to a foreground burst) vs the
+/// optimistic busy-until figure the sync path would have kept.
+fn retimed_prefetch(records: &mut Vec<BenchRecord>) {
+    section("event engine: preempted prefetch re-timed, not optimistic");
+    let mut f = fabric(8, 1);
+    let bytes = 64u64 << 20;
+    let optimistic = f.estimate(Endpoint::Node(0), Endpoint::Node(1), bytes);
+    let bg = f.schedule(
+        SimTime::ZERO,
+        Endpoint::Node(0),
+        Endpoint::Node(1),
+        bytes,
+        Priority::Background,
+    );
+    for i in 1..=4u64 {
+        f.schedule(
+            SimTime::ms(i),
+            Endpoint::Node(2),
+            Endpoint::Node(3),
+            4 << 20,
+            Priority::Foreground,
+        );
+    }
+    f.run_to_idle();
+    let r = f.receipt_of(bg).expect("engine drained");
+    let ratio = r.finish.as_ns() as f64 / optimistic.as_ns().max(1) as f64;
+    println!("optimistic {optimistic}, re-timed {} ({ratio:.2}x)", r.finish);
+    records.push(BenchRecord::new("retimed_prefetch", "retimed_over_optimistic", ratio));
+    records.push(BenchRecord::new(
+        "retimed_prefetch",
+        "retimed_transfers",
+        f.stats.retimed_transfers as f64,
+    ));
+    assert!(r.finish > optimistic, "preempted prefetch must be re-timed");
+}
+
 fn main() {
     let mut records = Vec::new();
     boot_storm(&mut records);
     prefetch_overlap(&mut records);
     tenant_mix(&mut records);
+    retimed_prefetch(&mut records);
 
     section("hot path: Fabric::transfer");
     let mut f = fabric(16, 4);

@@ -15,7 +15,7 @@
 use dockerssd::benchkit::{emit_json, section, BenchRecord};
 use dockerssd::config::{EtherOnConfig, PoolConfig, SsdConfig};
 use dockerssd::docker::{MiniDocker, Registry};
-use dockerssd::fabric::{Endpoint, Fabric, Priority};
+use dockerssd::fabric::{Fabric, LinkClass};
 use dockerssd::firmware::VirtualFw;
 use dockerssd::lambdafs::{LambdaFs, LockSide};
 use dockerssd::layerstore::{LayerStore, PoolLayerCache};
@@ -75,26 +75,27 @@ fn registry() -> (Registry, u64) {
 
 /// Seed path: every replica pulls the whole image from the registry
 /// into its node's private namespace, then materializes the overlay.
-fn boot_registry_only(replicas: u32, nnodes: u32, reg: &Registry, image_bytes: u64) -> (u64, SimTime) {
+/// Since ISSUE 3 `MiniDocker::pull` itself routes the registry bytes
+/// over the shared fabric, so the WAN/uplink contention between
+/// concurrent pulls needs no manual layering here — the fabric's own
+/// `RegistryWan` byte counter is the ground truth.
+fn boot_registry_only(
+    replicas: u32,
+    nnodes: u32,
+    reg: &Registry,
+    _image_bytes: u64,
+) -> (u64, SimTime) {
     let (_topo, mut fabric, mut nodes) = pool(nnodes);
-    let mut wan_bytes = 0u64;
     let mut total = SimTime::ZERO;
     for r in 0..replicas {
         let nid = r % nnodes;
         let node = &mut nodes[nid as usize];
-        let wan = fabric
-            .transfer(
-                SimTime::ZERO,
-                Endpoint::Registry,
-                Endpoint::Node(nid),
-                image_bytes,
-                Priority::Foreground,
-            )
-            .finish;
-        wan_bytes += image_bytes;
         let pulled = node
             .md
-            .pull(&mut node.fw, &mut node.fs, &mut node.dev, reg, wan, "svc")
+            .pull(
+                &mut node.fw, &mut node.fs, &mut node.dev, reg, &mut fabric, nid, SimTime::ZERO,
+                "svc",
+            )
             .expect("pull");
         let ran = node
             .md
@@ -102,6 +103,7 @@ fn boot_registry_only(replicas: u32, nnodes: u32, reg: &Registry, image_bytes: u
             .expect("run");
         total += ran.done;
     }
+    let wan_bytes = fabric.link(LinkClass::RegistryWan).map_or(0, |q| q.bytes);
     (wan_bytes, total.scale(1.0 / replicas as f64))
 }
 

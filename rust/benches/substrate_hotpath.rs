@@ -130,15 +130,18 @@ fn main() {
         router.complete(n);
     });
     bench("batcher push+form (width 4)", || {
-        let mut b = Batcher::new(4, 32, std::time::Duration::ZERO);
+        let mut b = Batcher::new(4, 32, SimTime::ZERO);
         for id in 0..4 {
-            b.push(InferenceRequest {
-                id,
-                prompt: vec![1; 32],
-                max_new_tokens: 8,
-            });
+            b.push(
+                InferenceRequest {
+                    id,
+                    prompt: vec![1; 32],
+                    max_new_tokens: 8,
+                },
+                SimTime::ZERO,
+            );
         }
-        std::hint::black_box(b.form(false).unwrap());
+        std::hint::black_box(b.form(SimTime::ZERO, false).unwrap());
     });
 
     section("JSON");

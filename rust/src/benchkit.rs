@@ -102,6 +102,74 @@ pub fn emit_json(path: &str, records: &[BenchRecord]) -> std::io::Result<()> {
     Ok(())
 }
 
+/// Parse a `BENCH_*.json` file back into records.
+pub fn parse_records(text: &str) -> Result<Vec<BenchRecord>, String> {
+    let root = crate::json::parse(text)?;
+    let arr = root.as_arr().ok_or("expected a JSON array of records")?;
+    arr.iter()
+        .map(|o| {
+            Ok(BenchRecord::new(
+                o.get("name").and_then(Json::as_str).ok_or("record missing name")?,
+                o.get("metric").and_then(Json::as_str).ok_or("record missing metric")?,
+                o.get("value").and_then(Json::as_f64).ok_or("record missing value")?,
+            ))
+        })
+        .collect()
+}
+
+/// Direction heuristic for [`diff`]: durations and waits regress when
+/// they grow; everything else (throughput, reduction factors, hidden
+/// bytes) regresses when it shrinks.  Markers are matched as whole
+/// `_`-separated segments, never bare substrings — `retimed_transfers`
+/// is a count (no `ns`/`time` segment), not a duration.
+pub fn lower_is_better(metric: &str) -> bool {
+    metric
+        .split('_')
+        .any(|seg| matches!(seg, "ms" | "ns" | "us" | "time" | "wait" | "latency"))
+}
+
+/// One (name, metric) pair compared across PRs.
+#[derive(Clone, Debug)]
+pub struct BenchDelta {
+    pub name: String,
+    pub metric: String,
+    pub base: f64,
+    pub fresh: f64,
+    /// Signed fractional change, positive = improvement (direction via
+    /// [`lower_is_better`]).
+    pub gain: f64,
+    /// The bad direction moved more than the tolerance.
+    pub regression: bool,
+}
+
+/// Compare fresh records against a committed baseline: every (name,
+/// metric) pair present in both is scored; a move of more than
+/// `tolerance` (fraction, e.g. 0.10) in the bad direction is flagged as
+/// a regression.  Fresh records with no baseline are skipped — they are
+/// new benches, recorded but not compared.
+pub fn diff(base: &[BenchRecord], fresh: &[BenchRecord], tolerance: f64) -> Vec<BenchDelta> {
+    let mut out = Vec::new();
+    for f in fresh {
+        let Some(b) = base.iter().find(|b| b.name == f.name && b.metric == f.metric) else {
+            continue;
+        };
+        if b.value.abs() < 1e-12 {
+            continue; // a zero baseline has no meaningful ratio
+        }
+        let change = (f.value - b.value) / b.value;
+        let gain = if lower_is_better(&f.metric) { -change } else { change };
+        out.push(BenchDelta {
+            name: f.name.clone(),
+            metric: f.metric.clone(),
+            base: b.value,
+            fresh: f.value,
+            gain,
+            regression: gain < -tolerance,
+        });
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -114,6 +182,45 @@ mod tests {
         });
         assert!(r.iters >= 10);
         assert!(r.min <= r.mean && r.mean <= r.max);
+    }
+
+    #[test]
+    fn parse_records_round_trips_emit_json_format() {
+        let recs = vec![
+            BenchRecord::new("boot", "makespan_ms", 12.5),
+            BenchRecord::new("boot", "wan_reduction", 4.0),
+        ];
+        let doc = Json::Arr(recs.iter().map(BenchRecord::to_json).collect());
+        let back = parse_records(&doc.dump()).unwrap();
+        assert_eq!(back, recs);
+        assert!(parse_records("[{\"name\": \"x\"}]").is_err(), "missing fields rejected");
+    }
+
+    #[test]
+    fn diff_flags_regressions_in_the_bad_direction_only() {
+        let base = vec![
+            BenchRecord::new("boot", "makespan_ms", 100.0),
+            BenchRecord::new("boot", "wan_reduction", 4.0),
+            BenchRecord::new("mix", "congestion_factor", 2.0),
+        ];
+        // makespan (lower-better) +20% = regression; reduction
+        // (higher-better) -50% = regression; new bench skipped
+        let fresh = vec![
+            BenchRecord::new("boot", "makespan_ms", 120.0),
+            BenchRecord::new("boot", "wan_reduction", 2.0),
+            BenchRecord::new("new_bench", "ops", 1.0),
+        ];
+        let deltas = diff(&base, &fresh, 0.10);
+        assert_eq!(deltas.len(), 2, "unmatched records are skipped");
+        assert!(deltas.iter().all(|d| d.regression));
+        // improvements and small moves pass
+        let ok = vec![
+            BenchRecord::new("boot", "makespan_ms", 95.0),
+            BenchRecord::new("boot", "wan_reduction", 4.1),
+        ];
+        assert!(diff(&base, &ok, 0.10).iter().all(|d| !d.regression && d.gain > 0.0));
+        let small = vec![BenchRecord::new("boot", "makespan_ms", 105.0)];
+        assert!(!diff(&base, &small, 0.10)[0].regression, "within tolerance");
     }
 
     #[test]

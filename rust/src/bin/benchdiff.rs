@@ -1,0 +1,102 @@
+//! Cross-PR bench differ: compare fresh `BENCH_*.json` records against
+//! the committed baselines and exit nonzero on any >tolerance
+//! regression — the CI gate that keeps the bench trajectory monotone.
+//!
+//! Usage: `benchdiff <baseline-dir> <fresh-dir> [tolerance]`
+//! (tolerance is a fraction; default 0.10 = 10%).
+//!
+//! A fresh file or record with no committed baseline is reported as new
+//! and not compared — commit it under the baseline dir to start
+//! tracking it.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use dockerssd::benchkit::{diff, parse_records};
+use dockerssd::metrics::Table;
+
+fn load(path: &Path) -> Result<Vec<dockerssd::benchkit::BenchRecord>, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    parse_records(&text).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.len() < 2 {
+        eprintln!("usage: benchdiff <baseline-dir> <fresh-dir> [tolerance]");
+        return ExitCode::from(2);
+    }
+    let baseline_dir = Path::new(&args[0]);
+    let fresh_dir = Path::new(&args[1]);
+    let tolerance: f64 = args
+        .get(2)
+        .map(|s| s.parse().expect("tolerance must be a fraction like 0.10"))
+        .unwrap_or(0.10);
+
+    let mut fresh_files: Vec<_> = match std::fs::read_dir(fresh_dir) {
+        Ok(rd) => rd
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+            .collect(),
+        Err(e) => {
+            eprintln!("cannot read {}: {e}", fresh_dir.display());
+            return ExitCode::from(2);
+        }
+    };
+    fresh_files.sort();
+    if fresh_files.is_empty() {
+        eprintln!(
+            "no BENCH_*.json in {} — run the benches first (cargo bench)",
+            fresh_dir.display()
+        );
+        return ExitCode::from(2);
+    }
+
+    let mut regressions = 0usize;
+    let mut compared = 0usize;
+    for name in &fresh_files {
+        let base_path = baseline_dir.join(name);
+        if !base_path.exists() {
+            println!(
+                "{name}: no committed baseline — new bench, commit it to {} to track",
+                baseline_dir.display()
+            );
+            continue;
+        }
+        let (base, fresh) = match (load(&base_path), load(&fresh_dir.join(name))) {
+            (Ok(b), Ok(f)) => (b, f),
+            (Err(e), _) | (_, Err(e)) => {
+                eprintln!("{e}");
+                return ExitCode::from(2);
+            }
+        };
+        let deltas = diff(&base, &fresh, tolerance);
+        if deltas.is_empty() {
+            println!("{name}: no overlapping records with the baseline");
+            continue;
+        }
+        let mut t = Table::new(vec!["bench", "metric", "baseline", "fresh", "gain", "verdict"]);
+        for d in &deltas {
+            compared += 1;
+            if d.regression {
+                regressions += 1;
+            }
+            t.row(vec![
+                d.name.clone(),
+                d.metric.clone(),
+                format!("{:.4}", d.base),
+                format!("{:.4}", d.fresh),
+                format!("{:+.1}%", d.gain * 100.0),
+                if d.regression { "REGRESSION".into() } else { "ok".to_string() },
+            ]);
+        }
+        println!("{name} (tolerance {:.0}%):\n{}", tolerance * 100.0, t.render());
+    }
+    println!("{compared} records compared, {regressions} regression(s)");
+    if regressions > 0 {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}

@@ -169,7 +169,9 @@ impl PoolConfig {
     }
 }
 
-/// Serving coordinator parameters (the E9 case study).
+/// Serving coordinator parameters (the E9 case study).  The loop runs
+/// on the pool's simulated clock, so every duration here is simulated
+/// time, not wallclock.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServeConfig {
     /// Artifact directory with HLO text + weights.
@@ -178,8 +180,18 @@ pub struct ServeConfig {
     pub max_new_tokens: u32,
     /// Number of pool nodes to serve from.
     pub nodes: u32,
-    /// Batch window before a partial batch launches (us of wallclock).
+    /// Batch window before a partial batch launches (simulated us).
     pub batch_timeout_us: u64,
+    /// Engine batch width the batcher packs to.
+    pub batch_width: u32,
+    /// Engine prompt length requests are fit to.
+    pub prompt_len: u32,
+    /// Simulated prefill compute per batch (us).
+    pub prefill_compute_us: u64,
+    /// Simulated decode compute per generated token (us).
+    pub token_compute_us: u64,
+    /// Per-node KV capacity in MiB; 0 means unbounded.
+    pub kv_capacity_mib: u64,
     /// Echo generated tokens to stdout.
     pub verbose: bool,
 }
@@ -191,6 +203,11 @@ impl Default for ServeConfig {
             max_new_tokens: 32,
             nodes: 2,
             batch_timeout_us: 2000,
+            batch_width: 4,
+            prompt_len: 32,
+            prefill_compute_us: 500,
+            token_compute_us: 50,
+            kv_capacity_mib: 0,
             verbose: true,
         }
     }
@@ -289,6 +306,11 @@ impl SystemConfig {
             get_field!(s, cfg.serve, max_new_tokens, u32);
             get_field!(s, cfg.serve, nodes, u32);
             get_field!(s, cfg.serve, batch_timeout_us, u64);
+            get_field!(s, cfg.serve, batch_width, u32);
+            get_field!(s, cfg.serve, prompt_len, u32);
+            get_field!(s, cfg.serve, prefill_compute_us, u64);
+            get_field!(s, cfg.serve, token_compute_us, u64);
+            get_field!(s, cfg.serve, kv_capacity_mib, u64);
             get_field!(s, cfg.serve, verbose, bool);
         }
         Ok(cfg)
@@ -362,6 +384,14 @@ impl SystemConfig {
                     ("max_new_tokens", Json::Int(self.serve.max_new_tokens as i64)),
                     ("nodes", Json::Int(self.serve.nodes as i64)),
                     ("batch_timeout_us", Json::Int(self.serve.batch_timeout_us as i64)),
+                    ("batch_width", Json::Int(self.serve.batch_width as i64)),
+                    ("prompt_len", Json::Int(self.serve.prompt_len as i64)),
+                    (
+                        "prefill_compute_us",
+                        Json::Int(self.serve.prefill_compute_us as i64),
+                    ),
+                    ("token_compute_us", Json::Int(self.serve.token_compute_us as i64)),
+                    ("kv_capacity_mib", Json::Int(self.serve.kv_capacity_mib as i64)),
                     ("verbose", Json::Bool(self.serve.verbose)),
                 ]),
             ),
@@ -410,5 +440,17 @@ mod tests {
     #[test]
     fn bad_json_is_an_error() {
         assert!(SystemConfig::from_json_str("{nope").is_err());
+    }
+
+    #[test]
+    fn serve_config_simulated_fields_load() {
+        let c = SystemConfig::from_json_str(
+            r#"{"serve": {"batch_width": 8, "token_compute_us": 75, "kv_capacity_mib": 256}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.serve.batch_width, 8);
+        assert_eq!(c.serve.token_compute_us, 75);
+        assert_eq!(c.serve.kv_capacity_mib, 256);
+        assert_eq!(c.serve.prompt_len, 32, "untouched fields keep defaults");
     }
 }

@@ -1,15 +1,18 @@
 //! Request batcher: packs incoming requests into the engine's fixed
-//! batch width.
+//! batch width, on the pool's simulated clock.
 //!
 //! The AOT executables have a static [batch, prompt_len] signature, so a
-//! batch launches when full, or when `max_wait` expires with at least one
-//! request pending (the partial batch is padded by repeating the last
-//! request's prompt; padding rows are dropped from responses).
+//! batch launches when full, or once the oldest pending request has
+//! waited `max_wait` of *simulated* time (the partial batch is padded by
+//! repeating the last request's prompt; padding rows are dropped from
+//! responses).  There is no wallclock anywhere: the serve loop feeds
+//! `now` in from its event queue, which is what makes two same-seed
+//! runs form byte-identical batches.
 
 use std::collections::VecDeque;
-use std::time::{Duration, Instant};
 
 use super::InferenceRequest;
+use crate::util::SimTime;
 
 /// A formed batch: `live` of the `prompts.len()` rows carry real requests.
 #[derive(Clone, Debug)]
@@ -24,15 +27,15 @@ pub struct Batch {
 pub struct Batcher {
     width: usize,
     prompt_len: usize,
-    max_wait: Duration,
-    queue: VecDeque<(InferenceRequest, Instant)>,
+    max_wait: SimTime,
+    queue: VecDeque<(InferenceRequest, SimTime)>,
     pub batches_formed: u64,
     pub requests_seen: u64,
     pub padded_rows: u64,
 }
 
 impl Batcher {
-    pub fn new(width: usize, prompt_len: usize, max_wait: Duration) -> Self {
+    pub fn new(width: usize, prompt_len: usize, max_wait: SimTime) -> Self {
         assert!(width > 0);
         Batcher {
             width,
@@ -45,13 +48,19 @@ impl Batcher {
         }
     }
 
-    pub fn push(&mut self, req: InferenceRequest) {
+    pub fn push(&mut self, req: InferenceRequest, now: SimTime) {
         self.requests_seen += 1;
-        self.queue.push_back((req, Instant::now()));
+        self.queue.push_back((req, now));
     }
 
     pub fn pending(&self) -> usize {
         self.queue.len()
+    }
+
+    /// Arrival time of the oldest pending request — its `+ max_wait` is
+    /// when a partial batch becomes launchable.
+    pub fn oldest_arrival(&self) -> Option<SimTime> {
+        self.queue.front().map(|(_, t)| *t)
     }
 
     /// Normalize a prompt to exactly `prompt_len` tokens (left-truncate,
@@ -66,14 +75,12 @@ impl Batcher {
         p
     }
 
-    /// Try to form a batch: full-width immediately, partial only once the
-    /// oldest request has waited `max_wait` (or `force` is set).
-    pub fn form(&mut self, force: bool) -> Option<Batch> {
-        if self.queue.is_empty() {
-            return None;
-        }
-        let oldest_wait = self.queue.front().map(|(_, t)| t.elapsed()).unwrap_or_default();
-        if self.queue.len() < self.width && !force && oldest_wait < self.max_wait {
+    /// Try to form a batch at simulated time `now`: full-width
+    /// immediately, partial only once the oldest request has waited
+    /// `max_wait` (or `force` is set).
+    pub fn form(&mut self, now: SimTime, force: bool) -> Option<Batch> {
+        let oldest = self.oldest_arrival()?;
+        if self.queue.len() < self.width && !force && now.saturating_sub(oldest) < self.max_wait {
             return None;
         }
         let take = self.queue.len().min(self.width);
@@ -111,11 +118,11 @@ mod tests {
 
     #[test]
     fn full_batch_forms_immediately() {
-        let mut b = Batcher::new(4, 8, Duration::from_secs(100));
+        let mut b = Batcher::new(4, 8, SimTime::ms(100));
         for i in 0..4 {
-            b.push(req(i, 8));
+            b.push(req(i, 8), SimTime::ZERO);
         }
-        let batch = b.form(false).expect("full batch");
+        let batch = b.form(SimTime::ZERO, false).expect("full batch");
         assert_eq!(batch.live, 4);
         assert_eq!(batch.prompts.len(), 4);
         assert_eq!(b.pending(), 0);
@@ -123,29 +130,30 @@ mod tests {
 
     #[test]
     fn partial_batch_waits_unless_forced() {
-        let mut b = Batcher::new(4, 8, Duration::from_secs(100));
-        b.push(req(1, 8));
-        assert!(b.form(false).is_none(), "should wait for more requests");
-        let batch = b.form(true).expect("forced partial");
+        let mut b = Batcher::new(4, 8, SimTime::ms(100));
+        b.push(req(1, 8), SimTime::ZERO);
+        assert!(b.form(SimTime::ZERO, false).is_none(), "should wait for more requests");
+        let batch = b.form(SimTime::ZERO, true).expect("forced partial");
         assert_eq!(batch.live, 1);
         assert_eq!(batch.prompts.len(), 4, "padded to width");
         assert_eq!(b.padded_rows, 3);
     }
 
     #[test]
-    fn partial_batch_fires_after_timeout() {
-        let mut b = Batcher::new(4, 8, Duration::from_millis(1));
-        b.push(req(1, 8));
-        std::thread::sleep(Duration::from_millis(5));
-        assert!(b.form(false).is_some());
+    fn partial_batch_fires_after_simulated_timeout() {
+        let mut b = Batcher::new(4, 8, SimTime::us(50));
+        b.push(req(1, 8), SimTime::us(10));
+        assert_eq!(b.oldest_arrival(), Some(SimTime::us(10)));
+        assert!(b.form(SimTime::us(59), false).is_none(), "one tick short of the window");
+        assert!(b.form(SimTime::us(60), false).is_some(), "window elapsed in simulated time");
     }
 
     #[test]
     fn prompts_are_fit_to_length() {
-        let mut b = Batcher::new(2, 8, Duration::ZERO);
-        b.push(req(1, 3)); // short -> padded
-        b.push(req(2, 20)); // long -> left-truncated (keep the tail)
-        let batch = b.form(true).unwrap();
+        let mut b = Batcher::new(2, 8, SimTime::ZERO);
+        b.push(req(1, 3), SimTime::ZERO); // short -> padded
+        b.push(req(2, 20), SimTime::ZERO); // long -> left-truncated (keep the tail)
+        let batch = b.form(SimTime::ZERO, true).unwrap();
         assert_eq!(batch.prompts[0].len(), 8);
         assert_eq!(&batch.prompts[0][3..], &[0, 0, 0, 0, 0]);
         assert_eq!(batch.prompts[1], (12..20).collect::<Vec<i32>>());
@@ -153,12 +161,12 @@ mod tests {
 
     #[test]
     fn conservation_every_request_in_exactly_one_batch() {
-        let mut b = Batcher::new(4, 8, Duration::ZERO);
+        let mut b = Batcher::new(4, 8, SimTime::ZERO);
         for i in 0..10 {
-            b.push(req(i, 8));
+            b.push(req(i, 8), SimTime::ZERO);
         }
         let mut seen = Vec::new();
-        while let Some(batch) = b.form(true) {
+        while let Some(batch) = b.form(SimTime::ZERO, true) {
             for r in &batch.requests {
                 seen.push(r.id);
             }
@@ -170,11 +178,11 @@ mod tests {
 
     #[test]
     fn queue_order_is_fifo() {
-        let mut b = Batcher::new(2, 4, Duration::ZERO);
+        let mut b = Batcher::new(2, 4, SimTime::ZERO);
         for i in 0..4 {
-            b.push(req(i, 4));
+            b.push(req(i, 4), SimTime::us(i));
         }
-        let first = b.form(false).unwrap();
+        let first = b.form(SimTime::us(4), false).unwrap();
         assert_eq!(first.requests[0].id, 0);
         assert_eq!(first.requests[1].id, 1);
     }

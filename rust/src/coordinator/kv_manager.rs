@@ -35,6 +35,13 @@ impl KvManager {
         (n_layers * batch * n_heads * max_seq * head_dim * 2 * bytes_per_elem) as u64
     }
 
+    /// Whether `node` has headroom for `bytes` more of resident KV.
+    pub fn fits(&self, node: u32, bytes: u64) -> bool {
+        self.used[node as usize]
+            .checked_add(bytes)
+            .is_some_and(|u| u <= self.capacity)
+    }
+
     /// Try to reserve `bytes` on `node`.
     pub fn reserve(&mut self, node: u32, bytes: u64) -> bool {
         let u = &mut self.used[node as usize];
@@ -117,11 +124,16 @@ mod tests {
     #[test]
     fn reserve_until_capacity() {
         let mut kv = KvManager::new(2, 1000);
+        assert!(kv.fits(0, 600));
         assert!(kv.reserve(0, 600));
+        assert!(!kv.fits(0, 600));
         assert!(!kv.reserve(0, 600), "over capacity");
         assert!(kv.reserve(1, 600), "other node unaffected");
         assert_eq!(kv.admitted, 2);
         assert_eq!(kv.rejected, 1);
+        // unbounded capacity never overflows the headroom check
+        let kv = KvManager::new(1, u64::MAX);
+        assert!(kv.fits(0, u64::MAX));
     }
 
     #[test]

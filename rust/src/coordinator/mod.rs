@@ -3,10 +3,14 @@
 //! them to the AOT engine's fixed batch width, and accounts per-node KV
 //! residency against flash capacity.
 //!
-//! Offline-build note (DESIGN.md §4): tokio is unavailable in this
-//! environment, so the server uses std threads + channels; the design
-//! (leader dispatch queue, per-node workers, response collector) is the
-//! same shape a tokio runtime would host.
+//! Since ISSUE 3 the whole loop runs on the pool's *simulated* clock
+//! ([`crate::sim::PoolSim`]): request arrivals, batch windows, dispatch
+//! and response transfers (over the shared [`crate::fabric::Fabric`]),
+//! per-node compute occupancy, and KV migrations are all events on one
+//! deterministic queue — no wallclock threads, no `Instant`, no sleeps.
+//! Two runs with the same seed produce byte-identical `serve.*` and
+//! `fabric.*` counters, and serving traffic contends with docker pulls,
+//! layer prefetch, and LLM collectives on the same wires.
 
 pub mod batcher;
 pub mod kv_manager;
@@ -16,7 +20,9 @@ pub mod server;
 pub use batcher::{Batch, Batcher};
 pub use kv_manager::KvManager;
 pub use router::Router;
-pub use server::{serve, BatchExecutor, ServeReport};
+pub use server::{serve, BatchExecutor, EchoExecutor, ServeParams, ServeReport};
+
+use crate::util::SimTime;
 
 /// One inference request entering the system.
 #[derive(Clone, Debug, PartialEq)]
@@ -34,6 +40,7 @@ pub struct InferenceResponse {
     pub tokens: Vec<i32>,
     /// Which pool node served it.
     pub node: u32,
-    /// Wallclock latency of the whole batch this request rode in.
-    pub latency: std::time::Duration,
+    /// Simulated end-to-end latency: arrival event to the last response
+    /// byte landing at the host over the fabric.
+    pub latency: SimTime,
 }

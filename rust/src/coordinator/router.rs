@@ -73,6 +73,34 @@ impl Router {
         (node, receipt)
     }
 
+    /// Assign a batch to an externally chosen node (capacity-aware
+    /// callers like the serve loop filter candidates by KV headroom
+    /// first, then account the choice here).
+    pub fn assign(&mut self, node: u32) {
+        self.outstanding[node as usize] += 1;
+        self.dispatched[node as usize] += 1;
+    }
+
+    /// Like [`Router::dispatch`], but for an externally chosen node:
+    /// account the assignment and charge the batch's prompt bytes
+    /// host -> node over the shared fabric.
+    pub fn dispatch_to(
+        &mut self,
+        fabric: &mut Fabric,
+        now: SimTime,
+        node: u32,
+        prompt_bytes: u64,
+    ) -> TransferReceipt {
+        self.assign(node);
+        fabric.transfer(
+            now,
+            Endpoint::Host,
+            Endpoint::Node(node),
+            prompt_bytes,
+            Priority::Foreground,
+        )
+    }
+
     /// A node finished a batch.
     pub fn complete(&mut self, node: u32) {
         let o = &mut self.outstanding[node as usize];
@@ -139,6 +167,27 @@ mod tests {
         for n in 0..4 {
             assert_eq!(r.dispatched_of(n), 100);
         }
+    }
+
+    #[test]
+    fn assign_and_dispatch_to_account_like_pick() {
+        use crate::config::{EtherOnConfig, PoolConfig};
+
+        let mut r = Router::new(3);
+        r.assign(2);
+        assert_eq!(r.outstanding_of(2), 1);
+        assert_eq!(r.dispatched_of(2), 1);
+        let mut f = Fabric::new(
+            &PoolConfig {
+                nodes_per_array: 4,
+                arrays: 1,
+                ..Default::default()
+            },
+            &EtherOnConfig::default(),
+        );
+        let rc = r.dispatch_to(&mut f, SimTime::ZERO, 1, 1 << 20);
+        assert!(rc.finish > SimTime::ZERO, "dispatch pays the uplink");
+        assert_eq!(r.outstanding_of(1), 1);
     }
 
     #[test]

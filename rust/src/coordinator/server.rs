@@ -1,22 +1,42 @@
-//! The serving loop: leader thread batches + routes, per-node worker
-//! threads execute batches on their engines, a collector aggregates
-//! responses and latency statistics.
+//! The serving loop, event-driven on the pool's shared simulated clock.
+//!
+//! Lifecycle of one request: an *arrival event* pushes it into the
+//! batcher; a full batch (or a partial one whose window expired) is
+//! dispatched to the least-loaded node with KV headroom via
+//! [`Router::dispatch_to`] — its prompt bytes cross the host uplink and
+//! the node's array backplane on the shared [`crate::fabric::Fabric`],
+//! contending with everything else on the wire; batch execution
+//! occupies the node's
+//! [`crate::sim::BusyResource`] compute; a *done event* collects the
+//! generated tokens, charges the response bytes back over the fabric,
+//! and converts the batch's KV reservation into a resident *session*.
+//! Session KV migrates between nodes ([`KvManager::migrate`], real
+//! fabric traffic) when residency skews, and is evicted to admit new
+//! batches under capacity pressure — the Figure 12 capacity story.
+//!
+//! Determinism: the only clock is the [`PoolSim`] event queue.  There is
+//! no `std::time::Instant`, no `thread::sleep`, and no thread scheduling
+//! anywhere in this path, so two runs with the same seed produce
+//! byte-identical schedules, latencies, and `serve.*`/`fabric.*`
+//! counters.
 
-use std::sync::mpsc;
-use std::thread;
-use std::time::{Duration, Instant};
+use std::collections::{BTreeMap, VecDeque};
 
 use super::batcher::{Batch, Batcher};
 use super::kv_manager::KvManager;
 use super::router::Router;
 use super::{InferenceRequest, InferenceResponse};
+use crate::config::ServeConfig;
+use crate::metrics::{names, Counters, LatencyHistogram};
+use crate::sim::{tag, tag_kind, tag_payload, PoolSim};
+use crate::util::SimTime;
 
 /// Anything that can run a full batch to completion.  Implemented by
-/// `runtime::Engine` (real PJRT execution) and by mock executors in tests.
+/// `runtime::Engine` (real PJRT execution), [`EchoExecutor`] (the
+/// deterministic offline stand-in), and mock executors in tests.
 ///
-/// Executors are *not* required to be `Send`: PJRT handles hold raw
-/// pointers, so each worker thread constructs its own executor via the
-/// factory passed to [`serve`].
+/// Executors produce *token content* only; batch timing comes from
+/// [`ServeParams`] compute costs on the simulated clock.
 pub trait BatchExecutor {
     /// Generate `new_tokens` tokens for every prompt row.
     fn run_batch(&mut self, prompts: &[Vec<i32>], new_tokens: usize) -> anyhow::Result<Vec<Vec<i32>>>;
@@ -35,224 +55,585 @@ impl BatchExecutor for crate::runtime::Engine {
     }
 }
 
-/// Final report from a serving run.
+/// Deterministic offline executor: row `r` "generates" `prompt[0] + i`
+/// for token `i`.  Lets the full serving loop (and the `repro serve`
+/// CLI) run without the PJRT runtime.
+pub struct EchoExecutor;
+
+impl BatchExecutor for EchoExecutor {
+    fn run_batch(&mut self, prompts: &[Vec<i32>], new_tokens: usize) -> anyhow::Result<Vec<Vec<i32>>> {
+        Ok(prompts
+            .iter()
+            .map(|p| {
+                let base = p.first().copied().unwrap_or(0);
+                (0..new_tokens as i32).map(|i| base + i).collect()
+            })
+            .collect())
+    }
+
+    fn kv_bytes(&self) -> u64 {
+        1024
+    }
+}
+
+/// Tunables of the simulated serving loop.
+#[derive(Clone, Debug)]
+pub struct ServeParams {
+    pub batch_width: usize,
+    pub prompt_len: usize,
+    /// Simulated window a partial batch waits before launching.
+    pub batch_window: SimTime,
+    pub kv_capacity_per_node: u64,
+    /// KV bytes one batch pins on its node (and leaves resident as a
+    /// session after completion).
+    pub kv_bytes_per_batch: u64,
+    /// Simulated prefill compute per batch.
+    pub prefill_compute: SimTime,
+    /// Simulated decode compute per generated token (batch-wide step).
+    pub token_compute: SimTime,
+    /// Wire bytes per token id, for dispatch/response fabric traffic.
+    pub bytes_per_token: u64,
+}
+
+impl Default for ServeParams {
+    fn default() -> Self {
+        ServeParams {
+            batch_width: 4,
+            prompt_len: 32,
+            batch_window: SimTime::us(2000),
+            kv_capacity_per_node: u64::MAX,
+            kv_bytes_per_batch: 1 << 20,
+            prefill_compute: SimTime::us(500),
+            token_compute: SimTime::us(50),
+            bytes_per_token: 4,
+        }
+    }
+}
+
+impl ServeParams {
+    pub fn from_config(c: &ServeConfig) -> Self {
+        ServeParams {
+            batch_width: c.batch_width.max(1) as usize,
+            prompt_len: c.prompt_len.max(1) as usize,
+            batch_window: SimTime::us(c.batch_timeout_us),
+            kv_capacity_per_node: if c.kv_capacity_mib == 0 {
+                u64::MAX
+            } else {
+                c.kv_capacity_mib << 20
+            },
+            kv_bytes_per_batch: 1 << 20,
+            prefill_compute: SimTime::us(c.prefill_compute_us),
+            token_compute: SimTime::us(c.token_compute_us),
+            bytes_per_token: 4,
+        }
+    }
+}
+
+/// Final report from a serving run, all in simulated time.
 #[derive(Debug)]
 pub struct ServeReport {
     pub responses: Vec<InferenceResponse>,
-    pub wall: Duration,
+    /// First arrival event to last byte landed.
+    pub makespan: SimTime,
+    pub requests: u64,
     pub batches: u64,
     pub padded_rows: u64,
     /// Total generated tokens across live rows.
     pub tokens_out: u64,
+    pub failed_batches: u64,
+    pub kv_migrations: u64,
+    pub kv_evictions: u64,
+    pub latency: LatencyHistogram,
 }
 
 impl ServeReport {
     pub fn throughput_tok_s(&self) -> f64 {
-        self.tokens_out as f64 / self.wall.as_secs_f64().max(1e-9)
+        self.tokens_out as f64 / self.makespan.as_secs_f64().max(1e-9)
     }
 
-    pub fn mean_latency(&self) -> Duration {
-        if self.responses.is_empty() {
-            return Duration::ZERO;
-        }
-        let total: Duration = self.responses.iter().map(|r| r.latency).sum();
-        total / self.responses.len() as u32
+    pub fn mean_latency(&self) -> SimTime {
+        self.latency.mean()
+    }
+
+    /// Export the canonical `serve.*` counters; with the fabric's
+    /// export, this is the byte-comparable fingerprint of a run.
+    pub fn export_counters(&self, c: &mut Counters) {
+        c.add(names::SERVE_REQUESTS, self.requests);
+        c.add(names::SERVE_RESPONSES, self.responses.len() as u64);
+        c.add(names::SERVE_BATCHES, self.batches);
+        c.add(names::SERVE_PADDED_ROWS, self.padded_rows);
+        c.add(names::SERVE_TOKENS_OUT, self.tokens_out);
+        c.add(names::SERVE_FAILED_BATCHES, self.failed_batches);
+        c.add(names::SERVE_KV_MIGRATIONS, self.kv_migrations);
+        c.add(names::SERVE_KV_EVICTIONS, self.kv_evictions);
+        c.add(names::SERVE_MAKESPAN_NS, self.makespan.as_ns());
+        c.add(names::SERVE_LATENCY_MEAN_NS, self.latency.mean().as_ns());
+        c.add(names::SERVE_LATENCY_P99_NS, self.latency.quantile(0.99).as_ns());
     }
 }
 
-/// Serve `requests` over one node per entry of `factories`, batching to
-/// `batch_width` x `prompt_len`.  Each worker thread constructs its own
-/// executor (PJRT handles are not `Send`).  Blocks until all requests
-/// complete.
-pub fn serve<E, F>(
-    factories: Vec<F>,
-    requests: Vec<InferenceRequest>,
-    batch_width: usize,
-    prompt_len: usize,
-    kv_capacity_per_node: u64,
-) -> ServeReport
-where
-    E: BatchExecutor,
-    F: FnOnce() -> anyhow::Result<E> + Send + 'static,
-{
-    let nodes = factories.len();
-    assert!(nodes > 0, "need at least one node");
-    let start = Instant::now();
+const EV_ARRIVE: u8 = 1;
+const EV_DEADLINE: u8 = 2;
+const EV_DONE: u8 = 3;
 
-    let mut batcher = Batcher::new(batch_width, prompt_len, Duration::from_millis(2));
-    let mut router = Router::new(nodes);
-    let mut kv = KvManager::new(nodes, kv_capacity_per_node);
+struct InFlight {
+    batch: Batch,
+    node: u32,
+    reserved: bool,
+}
 
-    // worker threads: one per node, each building its engine in-thread
-    let mut senders = Vec::new();
-    let (resp_tx, resp_rx) = mpsc::channel::<(u32, Batch, anyhow::Result<Vec<Vec<i32>>>, Duration)>();
-    let mut handles = Vec::new();
-    for (node_id, factory) in factories.into_iter().enumerate() {
-        let (tx, rx) = mpsc::channel::<Batch>();
-        senders.push(tx);
-        let resp_tx = resp_tx.clone();
-        handles.push(thread::spawn(move || {
-            let mut exe = match factory() {
-                Ok(e) => e,
-                Err(e) => {
-                    eprintln!("node {node_id}: engine init failed: {e:#}");
-                    while let Ok(batch) = rx.recv() {
-                        let _ = resp_tx.send((
-                            node_id as u32,
-                            batch,
-                            Err(anyhow::anyhow!("engine unavailable")),
-                            Duration::ZERO,
-                        ));
-                    }
-                    return;
+struct ServeLoop<'p, E> {
+    params: &'p ServeParams,
+    batcher: Batcher,
+    router: Router,
+    kv: KvManager,
+    exes: Vec<Option<E>>,
+    inflight: Vec<Option<InFlight>>,
+    blocked: VecDeque<Batch>,
+    /// Completed batches whose KV stays resident on a node (oldest first).
+    sessions: VecDeque<u32>,
+    arrivals: BTreeMap<u64, SimTime>,
+    responses: Vec<InferenceResponse>,
+    latency: LatencyHistogram,
+    tokens_out: u64,
+    failed_batches: u64,
+    kv_migrations: u64,
+    kv_evictions: u64,
+    end: SimTime,
+}
+
+impl<E: BatchExecutor> ServeLoop<'_, E> {
+    fn nodes(&self) -> u32 {
+        self.router.nodes() as u32
+    }
+
+    /// Dispatch everything dispatchable at `now`: blocked batches first
+    /// (FIFO), then newly formable ones.
+    fn pump(&mut self, sim: &mut PoolSim, now: SimTime) {
+        while let Some(batch) = self.blocked.pop_front() {
+            match self.try_dispatch(sim, now, batch) {
+                Ok(()) => {}
+                Err(batch) => {
+                    self.blocked.push_front(batch);
+                    break;
                 }
-            };
-            while let Ok(batch) = rx.recv() {
-                let t0 = Instant::now();
-                let result = exe.run_batch(&batch.prompts, batch.max_new_tokens);
-                let _ = resp_tx.send((node_id as u32, batch, result, t0.elapsed()));
             }
-        }));
-    }
-    drop(resp_tx);
-
-    // leader loop: enqueue everything, dispatch, collect
-    for r in requests {
-        batcher.push(r);
-    }
-    let mut in_flight = 0u64;
-    let mut responses = Vec::new();
-    let mut tokens_out = 0u64;
-
-    loop {
-        // dispatch as many batches as we can form
-        while let Some(batch) = batcher.form(in_flight == 0 || batcher.pending() > 0) {
-            let node = router.pick();
-            let bytes = KvManager::kv_bytes(1, 1, 1, 1, 1, 1).max(1); // placeholder granularity
-            let _ = bytes;
-            kv.reserve(node, 1); // one batch-slot unit; capacity enforced upstream
-            senders[node as usize]
-                .send(batch)
-                .expect("worker alive");
-            in_flight += 1;
         }
-        if in_flight == 0 && batcher.pending() == 0 {
-            break;
+        while self.blocked.is_empty() {
+            let Some(batch) = self.batcher.form(now, false) else { break };
+            if let Err(batch) = self.try_dispatch(sim, now, batch) {
+                self.blocked.push_back(batch);
+            }
         }
-        // collect one completion
-        let (node, batch, result, lat) = resp_rx.recv().expect("workers alive");
-        router.complete(node);
-        kv.release(node, 1);
-        in_flight -= 1;
+        // capacity valve: a pool that cannot fit even one batch anywhere
+        // (capacity < kv_bytes_per_batch) must still make progress
+        if !self.blocked.is_empty() && self.inflight.iter().all(|s| s.is_none()) {
+            let batch = self.blocked.pop_front().expect("checked non-empty");
+            let node = (0..self.nodes())
+                .min_by_key(|n| (self.router.outstanding_of(*n), *n))
+                .expect("at least one node");
+            self.dispatch_on(sim, now, node, batch);
+        }
+    }
+
+    fn try_dispatch(&mut self, sim: &mut PoolSim, now: SimTime, batch: Batch) -> Result<(), Batch> {
+        let per = self.params.kv_bytes_per_batch;
+        let n = self.nodes();
+        // KV-pressure rebalance: when residency skews by two batches or
+        // more, the oldest session on the fullest node migrates to the
+        // emptiest over the fabric before placement
+        let hi = (0..n).rev().max_by_key(|i| self.kv.used_of(*i)).expect("nodes > 0");
+        let lo = (0..n).min_by_key(|i| self.kv.used_of(*i)).expect("nodes > 0");
+        if hi != lo
+            && self.kv.used_of(hi) >= self.kv.used_of(lo) + 2 * per
+            && self.kv.fits(lo, per)
+        {
+            if let Some(pos) = self.sessions.iter().position(|&s| s == hi) {
+                let _ = self.sessions.remove(pos);
+                if self.kv.migrate(&mut sim.fabric, now, hi, lo, per).is_some() {
+                    self.sessions.push_front(lo);
+                    self.kv_migrations += 1;
+                }
+            }
+        }
+        let pick = |kv: &KvManager, router: &Router| {
+            (0..n)
+                .filter(|i| kv.fits(*i, per))
+                .min_by_key(|i| (router.outstanding_of(*i), *i))
+        };
+        let node = match pick(&self.kv, &self.router) {
+            Some(node) => node,
+            None => {
+                // a waiting batch outranks an idle session: evict the
+                // oldest resident session to make room
+                let Some(victim) = self.sessions.pop_front() else {
+                    return Err(batch);
+                };
+                self.kv.release(victim, per);
+                self.kv_evictions += 1;
+                match pick(&self.kv, &self.router) {
+                    Some(node) => node,
+                    None => return Err(batch),
+                }
+            }
+        };
+        self.dispatch_on(sim, now, node, batch);
+        Ok(())
+    }
+
+    fn dispatch_on(&mut self, sim: &mut PoolSim, now: SimTime, node: u32, batch: Batch) {
+        let prompt_bytes =
+            (batch.prompts.len() * self.params.prompt_len) as u64 * self.params.bytes_per_token;
+        let receipt = self
+            .router
+            .dispatch_to(&mut sim.fabric, now, node, prompt_bytes.max(1));
+        let reserved = self.kv.reserve(node, self.params.kv_bytes_per_batch);
+        let compute = self.params.prefill_compute
+            + SimTime::ns(self.params.token_compute.as_ns() * batch.max_new_tokens as u64);
+        let done_at = sim.compute_mut(node).occupy(receipt.finish, compute);
+        let slot = self.inflight.len();
+        self.inflight.push(Some(InFlight { batch, node, reserved }));
+        sim.queue.schedule_at(done_at, tag(EV_DONE, slot as u64));
+        self.end = self.end.max(done_at);
+    }
+
+    fn on_done(&mut self, sim: &mut PoolSim, now: SimTime, slot: usize) {
+        let InFlight { batch, node, reserved } =
+            self.inflight[slot].take().expect("each done event fires once");
+        let result = match self.exes[node as usize].as_mut() {
+            Some(exe) => exe.run_batch(&batch.prompts, batch.max_new_tokens),
+            None => Err(anyhow::anyhow!("engine unavailable")),
+        };
+        let resp_bytes =
+            (batch.live * batch.max_new_tokens) as u64 * self.params.bytes_per_token;
+        let receipt =
+            self.router
+                .complete_costed(&mut sim.fabric, now, node, resp_bytes.max(1));
+        self.end = self.end.max(receipt.finish);
+        if reserved {
+            // the batch's KV stays resident as a session until migrated
+            // or evicted
+            self.sessions.push_back(node);
+        }
         match result {
             Ok(rows) => {
                 for (i, req) in batch.requests.iter().enumerate() {
                     let tokens = rows.get(i).cloned().unwrap_or_default();
                     let want = req.max_new_tokens.min(tokens.len());
                     let tokens = tokens[..want].to_vec();
-                    tokens_out += tokens.len() as u64;
-                    responses.push(InferenceResponse {
+                    self.tokens_out += tokens.len() as u64;
+                    let arrived = self.arrivals.get(&req.id).copied().unwrap_or(now);
+                    let latency = receipt.finish.saturating_sub(arrived);
+                    self.latency.record(latency);
+                    self.responses.push(InferenceResponse {
                         id: req.id,
                         tokens,
                         node,
-                        latency: lat,
+                        latency,
                     });
                 }
             }
             Err(e) => {
                 eprintln!("batch failed on node {node}: {e:#}");
+                self.failed_batches += 1;
+            }
+        }
+    }
+}
+
+/// Serve `requests` (each tagged with its simulated arrival time) over
+/// one node per entry of `factories`, on `sim`'s shared clock and
+/// fabric.  Drains `sim.queue`; returns once every request completed.
+///
+/// The loop owns the queue for the duration of the call: events with a
+/// tag kind it does not recognize are popped (their time still advances
+/// the clock) and otherwise ignored, so schedule foreign work either
+/// before (and pop it yourself, as `Orchestrator::deploy_sim` callers
+/// do) or after serving.
+pub fn serve<E, F>(
+    sim: &mut PoolSim,
+    factories: Vec<F>,
+    requests: Vec<(SimTime, InferenceRequest)>,
+    params: &ServeParams,
+) -> ServeReport
+where
+    E: BatchExecutor,
+    F: FnOnce() -> anyhow::Result<E>,
+{
+    let nodes = factories.len();
+    assert!(nodes > 0, "need at least one node");
+    let start = sim.now();
+
+    let mut exes: Vec<Option<E>> = Vec::with_capacity(nodes);
+    for (node, factory) in factories.into_iter().enumerate() {
+        match factory() {
+            Ok(e) => exes.push(Some(e)),
+            Err(e) => {
+                eprintln!("node {node}: engine init failed: {e:#}");
+                exes.push(None);
             }
         }
     }
 
-    drop(senders);
-    for h in handles {
-        let _ = h.join();
+    for (i, (at, _)) in requests.iter().enumerate() {
+        sim.queue.schedule_at((*at).max(start), tag(EV_ARRIVE, i as u64));
+    }
+
+    let mut lp = ServeLoop {
+        params,
+        batcher: Batcher::new(params.batch_width, params.prompt_len, params.batch_window),
+        router: Router::new(nodes),
+        kv: KvManager::new(nodes, params.kv_capacity_per_node),
+        exes,
+        inflight: Vec::new(),
+        blocked: VecDeque::new(),
+        sessions: VecDeque::new(),
+        arrivals: BTreeMap::new(),
+        responses: Vec::new(),
+        latency: LatencyHistogram::new(),
+        tokens_out: 0,
+        failed_batches: 0,
+        kv_migrations: 0,
+        kv_evictions: 0,
+        end: start,
+    };
+
+    while let Some(ev) = sim.queue.pop() {
+        let now = ev.at;
+        match tag_kind(ev.tag) {
+            EV_ARRIVE => {
+                let req = requests[tag_payload(ev.tag) as usize].1.clone();
+                lp.arrivals.insert(req.id, now);
+                lp.batcher.push(req, now);
+                // the partial-batch window: by this instant the request
+                // must have launched or launch now
+                sim.queue
+                    .schedule_at(now + params.batch_window, tag(EV_DEADLINE, 0));
+                lp.pump(sim, now);
+            }
+            EV_DEADLINE => lp.pump(sim, now),
+            EV_DONE => {
+                lp.on_done(sim, now, tag_payload(ev.tag) as usize);
+                lp.pump(sim, now);
+            }
+            // a foreign event kind left on the shared queue: not ours to
+            // interpret — the pop advanced the clock, nothing else
+            _ => {}
+        }
     }
 
     ServeReport {
-        responses,
-        wall: start.elapsed(),
-        batches: batcher.batches_formed,
-        padded_rows: batcher.padded_rows,
-        tokens_out,
+        responses: lp.responses,
+        makespan: lp.end.saturating_sub(start),
+        requests: lp.batcher.requests_seen,
+        batches: lp.batcher.batches_formed,
+        padded_rows: lp.batcher.padded_rows,
+        tokens_out: lp.tokens_out,
+        failed_batches: lp.failed_batches,
+        kv_migrations: lp.kv_migrations,
+        kv_evictions: lp.kv_evictions,
+        latency: lp.latency,
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::{EtherOnConfig, PoolConfig};
 
-    /// Mock executor: echoes prompt[0] + i as "generated" tokens.
-    struct MockExe {
-        delay: Duration,
+    fn sim(nodes: u32) -> PoolSim {
+        PoolSim::with_pool(
+            &PoolConfig {
+                nodes_per_array: nodes.max(4),
+                arrays: 1,
+                ..Default::default()
+            },
+            &EtherOnConfig::default(),
+        )
     }
 
-    impl BatchExecutor for MockExe {
-        fn run_batch(&mut self, prompts: &[Vec<i32>], new_tokens: usize) -> anyhow::Result<Vec<Vec<i32>>> {
-            thread::sleep(self.delay);
-            Ok(prompts
-                .iter()
-                .map(|p| (0..new_tokens as i32).map(|i| p[0] + i).collect())
-                .collect())
-        }
-
-        fn kv_bytes(&self) -> u64 {
-            1024
-        }
-    }
-
-    fn reqs(n: u64) -> Vec<InferenceRequest> {
+    fn reqs(n: u64) -> Vec<(SimTime, InferenceRequest)> {
         (0..n)
-            .map(|id| InferenceRequest {
-                id,
-                prompt: vec![id as i32 * 100; 8],
-                max_new_tokens: 3,
+            .map(|id| {
+                (
+                    SimTime::us(id * 10),
+                    InferenceRequest {
+                        id,
+                        prompt: vec![id as i32 * 100; 8],
+                        max_new_tokens: 3,
+                    },
+                )
             })
             .collect()
     }
 
-    fn mk(delay_ms: u64) -> impl FnOnce() -> anyhow::Result<MockExe> + Send + 'static {
-        move || Ok(MockExe { delay: Duration::from_millis(delay_ms) })
+    fn mk() -> impl FnOnce() -> anyhow::Result<EchoExecutor> {
+        || Ok(EchoExecutor)
+    }
+
+    fn params() -> ServeParams {
+        ServeParams {
+            batch_width: 4,
+            prompt_len: 8,
+            batch_window: SimTime::us(100),
+            ..Default::default()
+        }
     }
 
     #[test]
     fn all_requests_complete_exactly_once() {
-        let report = serve(vec![mk(0), mk(0)], reqs(10), 4, 8, u64::MAX);
+        let mut s = sim(2);
+        let report = serve(&mut s, vec![mk(), mk()], reqs(10), &params());
         let mut ids: Vec<u64> = report.responses.iter().map(|r| r.id).collect();
         ids.sort();
         assert_eq!(ids, (0..10).collect::<Vec<u64>>());
+        assert_eq!(report.requests, 10);
+        assert!(s.queue.is_empty(), "serve drains the queue");
     }
 
     #[test]
     fn responses_carry_request_specific_tokens() {
-        let report = serve(vec![mk(0)], reqs(4), 4, 8, u64::MAX);
+        let mut s = sim(1);
+        let report = serve(&mut s, vec![mk()], reqs(4), &params());
         for r in &report.responses {
-            assert_eq!(r.tokens, vec![r.id as i32 * 100, r.id as i32 * 100 + 1, r.id as i32 * 100 + 2]);
+            assert_eq!(
+                r.tokens,
+                vec![r.id as i32 * 100, r.id as i32 * 100 + 1, r.id as i32 * 100 + 2]
+            );
         }
     }
 
     #[test]
     fn work_spreads_across_nodes() {
-        let report = serve(vec![mk(5), mk(5)], reqs(16), 2, 8, u64::MAX);
+        let mut s = sim(2);
+        let mut p = params();
+        p.batch_width = 2;
+        let report = serve(&mut s, vec![mk(), mk()], reqs(16), &p);
         let nodes: std::collections::HashSet<u32> =
             report.responses.iter().map(|r| r.node).collect();
         assert_eq!(nodes.len(), 2, "both nodes should serve");
     }
 
     #[test]
-    fn throughput_and_latency_reported() {
-        let report = serve(vec![mk(1)], reqs(4), 4, 8, u64::MAX);
+    fn throughput_and_latency_are_simulated() {
+        let mut s = sim(1);
+        let mut rs = reqs(4);
+        for (at, _) in rs.iter_mut() {
+            *at = SimTime::ZERO; // one full batch at t=0
+        }
+        let p = params();
+        let report = serve(&mut s, vec![mk()], rs, &p);
         assert_eq!(report.tokens_out, 12);
-        assert!(report.throughput_tok_s() > 0.0);
-        assert!(report.mean_latency() >= Duration::from_millis(1));
         assert_eq!(report.batches, 1);
+        // compute = prefill + 3 tokens; latency adds dispatch + response wire
+        let compute = p.prefill_compute + SimTime::ns(p.token_compute.as_ns() * 3);
+        assert!(report.mean_latency() >= compute);
+        assert!(report.makespan >= compute);
+        assert!(report.throughput_tok_s() > 0.0);
+        let mut c = Counters::new();
+        report.export_counters(&mut c);
+        assert_eq!(c.get(names::SERVE_TOKENS_OUT), 12);
+        assert_eq!(c.get(names::SERVE_RESPONSES), 4);
+        assert!(c.get(names::SERVE_MAKESPAN_NS) > 0);
     }
 
     #[test]
     fn partial_batches_are_padded_not_lost() {
-        let report = serve(vec![mk(0)], reqs(5), 4, 8, u64::MAX);
+        let mut s = sim(1);
+        let report = serve(&mut s, vec![mk()], reqs(5), &params());
         assert_eq!(report.responses.len(), 5);
         assert!(report.padded_rows >= 3, "second batch padded");
+    }
+
+    #[test]
+    fn dispatch_and_response_bytes_cross_the_fabric() {
+        let mut s = sim(2);
+        let report = serve(&mut s, vec![mk(), mk()], reqs(8), &params());
+        assert_eq!(report.responses.len(), 8);
+        let mut c = Counters::new();
+        s.fabric.export_counters(&mut c);
+        assert!(c.get(names::FABRIC_BYTES_HOST_UPLINK) > 0, "dispatch + response on the wire");
+        assert!(c.get(names::FABRIC_BYTES_ARRAY) > 0);
+    }
+
+    #[test]
+    fn same_seed_runs_are_byte_identical() {
+        let run = || {
+            let mut s = sim(2);
+            let report = serve(&mut s, vec![mk(), mk()], reqs(12), &params());
+            let mut c = Counters::new();
+            report.export_counters(&mut c);
+            s.export_counters(&mut c);
+            let lats: Vec<(u64, SimTime)> =
+                report.responses.iter().map(|r| (r.id, r.latency)).collect();
+            (c, lats)
+        };
+        let (c1, l1) = run();
+        let (c2, l2) = run();
+        assert_eq!(c1, c2, "serve.* and fabric.* counters must match byte-for-byte");
+        assert_eq!(l1, l2, "per-request simulated latencies must match");
+    }
+
+    #[test]
+    fn failed_engine_counts_failed_batches() {
+        let mut s = sim(1);
+        let bad = || Err::<EchoExecutor, _>(anyhow::anyhow!("no engine"));
+        let report = serve(&mut s, vec![bad], reqs(4), &params());
+        assert!(report.responses.is_empty());
+        assert!(report.failed_batches >= 1);
+    }
+
+    #[test]
+    fn kv_pressure_migrates_sessions() {
+        // node 0 chews on one long batch while node 1 clears several
+        // short ones, accumulating resident sessions; the skew triggers
+        // a session migration back toward node 0
+        let mut s = sim(2);
+        let p = ServeParams {
+            batch_width: 1,
+            prompt_len: 8,
+            batch_window: SimTime::us(10),
+            token_compute: SimTime::us(50),
+            ..Default::default()
+        };
+        let mut rs = vec![(
+            SimTime::ZERO,
+            InferenceRequest { id: 0, prompt: vec![1; 8], max_new_tokens: 400 },
+        )];
+        for k in 1..=4u64 {
+            rs.push((
+                SimTime::us(k * 2000),
+                InferenceRequest { id: k, prompt: vec![1; 8], max_new_tokens: 1 },
+            ));
+        }
+        let report = serve(&mut s, vec![mk(), mk()], rs, &p);
+        assert_eq!(report.responses.len(), 5);
+        assert!(
+            report.kv_migrations >= 1,
+            "session skew should trigger a migration: {report:?}"
+        );
+    }
+
+    #[test]
+    fn kv_capacity_evicts_sessions_to_admit_batches() {
+        let mut s = sim(1);
+        let p = ServeParams {
+            batch_width: 1,
+            prompt_len: 8,
+            batch_window: SimTime::us(10),
+            kv_capacity_per_node: 1 << 20, // exactly one batch resident
+            ..Default::default()
+        };
+        let rs: Vec<_> = (0..3u64)
+            .map(|id| {
+                (
+                    SimTime::us(id * 5000),
+                    InferenceRequest { id, prompt: vec![1; 8], max_new_tokens: 1 },
+                )
+            })
+            .collect();
+        let report = serve(&mut s, vec![mk()], rs, &p);
+        assert_eq!(report.responses.len(), 3, "capacity pressure must not drop requests");
+        assert!(report.kv_evictions >= 1, "old sessions evicted for new batches: {report:?}");
     }
 }

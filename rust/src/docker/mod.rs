@@ -10,9 +10,11 @@ pub mod registry;
 
 use std::collections::HashMap;
 
+use crate::fabric::{Endpoint, Fabric, Priority};
 use crate::firmware::{Syscall, VirtualFw};
 use crate::lambdafs::{LambdaFs, LockSide};
 use crate::layerstore::{CowStore, LayerId, LayerStore};
+use crate::pool::topology::NodeId;
 use crate::ssd::SsdDevice;
 use crate::util::SimTime;
 
@@ -132,22 +134,39 @@ impl MiniDocker {
         reference.strip_suffix(":latest").unwrap_or(reference)
     }
 
-    /// `docker pull`: fetch blobs + manifest from the registry over
-    /// Ether-oN and store them in λFS (`/images/blobs/<digest>`,
-    /// `/images/manifest/<name>`).
+    /// `docker pull`: fetch blobs + manifest from the registry and store
+    /// them in λFS (`/images/blobs/<digest>`, `/images/manifest/<name>`).
+    ///
+    /// Every registry byte crosses the shared pool [`Fabric`]
+    /// (RegistryWan + HostUplink + the node's Array backplane) before
+    /// the device-side Ether-oN frame costs are charged — so concurrent
+    /// pulls contend on the WAN/uplink with each other and with serving
+    /// traffic, and `fabric.bytes_wan` counts them.
+    #[allow(clippy::too_many_arguments)]
     pub fn pull(
         &mut self,
         fw: &mut VirtualFw,
         fs: &mut LambdaFs,
         dev: &mut SsdDevice,
         reg: &Registry,
+        fabric: &mut Fabric,
+        node: NodeId,
         at: SimTime,
         image: &str,
     ) -> Result<CmdResult, DockerError> {
         let (manifest, blobs) = reg.fetch(image).ok_or(DockerError::NoSuchImage)?;
         let mut done = at;
-        // each blob arrives as Ether-oN frames, then lands in λFS
+        // each blob crosses the pool fabric, arrives as Ether-oN frames,
+        // then lands in λFS
         for blob in blobs {
+            let wire = fabric.transfer(
+                done,
+                Endpoint::Registry,
+                Endpoint::Node(node),
+                blob.bytes.len() as u64,
+                Priority::Foreground,
+            );
+            done = wire.finish;
             let frames = (blob.bytes.len() as u64).div_ceil(1448).max(1);
             done += SimTime::ns(frames * fw.costs.t_pkt_ethon_ns);
             let path = format!("/images/blobs/{:016x}", blob.digest);
@@ -166,9 +185,11 @@ impl MiniDocker {
 
     /// `docker pull` through the content-addressed layerstore: layers
     /// already resident (from any image, any prior pull) are metadata
-    /// hits — no Ether-oN frames, no flash programs.  Only missing
-    /// layers cross the wire, and they land dedup'd via the firmware's
-    /// install handler.
+    /// hits — no fabric traffic, no Ether-oN frames, no flash programs.
+    /// Only missing layers cross the registry WAN on the shared
+    /// [`Fabric`], and they land dedup'd via the firmware's install
+    /// handler.
+    #[allow(clippy::too_many_arguments)]
     pub fn pull_via_store(
         &mut self,
         fw: &mut VirtualFw,
@@ -176,6 +197,8 @@ impl MiniDocker {
         dev: &mut SsdDevice,
         reg: &Registry,
         store: &mut LayerStore,
+        fabric: &mut Fabric,
+        node: NodeId,
         at: SimTime,
         image: &str,
     ) -> Result<CmdResult, DockerError> {
@@ -195,7 +218,16 @@ impl MiniDocker {
                     continue;
                 }
             } else {
-                // only missing layers arrive as Ether-oN frames
+                // only missing layers cross the fabric and arrive as
+                // Ether-oN frames
+                let wire = fabric.transfer(
+                    done,
+                    Endpoint::Registry,
+                    Endpoint::Node(node),
+                    blob.bytes.len() as u64,
+                    Priority::Foreground,
+                );
+                done = wire.finish;
                 let frames = (blob.bytes.len() as u64).div_ceil(1448).max(1);
                 done += SimTime::ns(frames * fw.costs.t_pkt_ethon_ns);
                 fetched_bytes += blob.bytes.len() as u64;
@@ -603,22 +635,25 @@ impl MiniDocker {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::SsdConfig;
+    use crate::config::{EtherOnConfig, PoolConfig, SsdConfig};
 
-    fn setup() -> (MiniDocker, VirtualFw, LambdaFs, SsdDevice, Registry) {
+    fn setup() -> (MiniDocker, VirtualFw, LambdaFs, SsdDevice, Registry, Fabric) {
         let cfg = SsdConfig::default();
         let dev = SsdDevice::new(cfg.clone());
         let fs = LambdaFs::over_device(&dev);
         let fw = VirtualFw::new(&cfg);
         let mut reg = Registry::new();
         reg.publish("mariadb", "latest", "mariadbd --datadir=/data", &[64 << 10, 32 << 10], 7);
-        (MiniDocker::new(), fw, fs, dev, reg)
+        let fab = Fabric::new(&PoolConfig::default(), &EtherOnConfig::default());
+        (MiniDocker::new(), fw, fs, dev, reg, fab)
     }
 
     #[test]
     fn pull_stores_blobs_and_manifest() {
-        let (mut md, mut fw, mut fs, mut dev, reg) = setup();
-        let r = md.pull(&mut fw, &mut fs, &mut dev, &reg, SimTime::ZERO, "mariadb").unwrap();
+        let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
+        let r = md
+            .pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab, 0, SimTime::ZERO, "mariadb")
+            .unwrap();
         assert!(r.done > SimTime::ZERO);
         let blobs = fs.list("/images/blobs").unwrap();
         assert_eq!(blobs.len(), 2);
@@ -626,10 +661,66 @@ mod tests {
     }
 
     #[test]
-    fn pull_unknown_image_fails() {
-        let (mut md, mut fw, mut fs, mut dev, reg) = setup();
+    fn pull_charges_the_registry_wan_on_the_fabric() {
+        use crate::metrics::{names, Counters};
+
+        let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
+        let r1 = md
+            .pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab, 0, SimTime::ZERO, "mariadb")
+            .unwrap();
+        let mut c = Counters::new();
+        fab.export_counters(&mut c);
         assert_eq!(
-            md.pull(&mut fw, &mut fs, &mut dev, &reg, SimTime::ZERO, "nope")
+            c.get(names::FABRIC_BYTES_WAN),
+            96 << 10,
+            "docker pulls are no longer invisible to fabric.bytes_wan"
+        );
+        assert_eq!(c.get(names::FABRIC_BYTES_HOST_UPLINK), 96 << 10);
+        // a second concurrent pull (same instant, other node) queues on
+        // the shared WAN/uplink instead of seeing an idle wire
+        let mut md2 = MiniDocker::new();
+        let mut dev2 = SsdDevice::new(SsdConfig::default());
+        let mut fs2 = LambdaFs::over_device(&dev2);
+        let mut fw2 = VirtualFw::new(&SsdConfig::default());
+        let r2 = md2
+            .pull(&mut fw2, &mut fs2, &mut dev2, &reg, &mut fab, 1, SimTime::ZERO, "mariadb")
+            .unwrap();
+        assert!(
+            r2.done > r1.done,
+            "concurrent pulls must contend: {} !> {}",
+            r2.done,
+            r1.done
+        );
+    }
+
+    #[test]
+    fn pull_via_store_warm_repull_moves_no_wan_bytes() {
+        use crate::metrics::{names, Counters};
+
+        let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
+        let mut store = LayerStore::default();
+        md.pull_via_store(
+            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, SimTime::ZERO, "mariadb",
+        )
+        .unwrap();
+        let mut c = Counters::new();
+        fab.export_counters(&mut c);
+        assert_eq!(c.get(names::FABRIC_BYTES_WAN), 96 << 10, "cold pull crosses the WAN");
+        // warm re-pull: every layer is a store hit; no fabric traffic
+        md.pull_via_store(
+            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, SimTime::ZERO, "mariadb",
+        )
+        .unwrap();
+        let mut c2 = Counters::new();
+        fab.export_counters(&mut c2);
+        assert_eq!(c2.get(names::FABRIC_BYTES_WAN), 96 << 10, "no new WAN bytes");
+    }
+
+    #[test]
+    fn pull_unknown_image_fails() {
+        let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
+        assert_eq!(
+            md.pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab, 0, SimTime::ZERO, "nope")
                 .unwrap_err(),
             DockerError::NoSuchImage
         );
@@ -637,8 +728,8 @@ mod tests {
 
     #[test]
     fn full_lifecycle_pull_run_logs_stop_rm() {
-        let (mut md, mut fw, mut fs, mut dev, reg) = setup();
-        md.pull(&mut fw, &mut fs, &mut dev, &reg, SimTime::ZERO, "mariadb").unwrap();
+        let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
+        md.pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab, 0, SimTime::ZERO, "mariadb").unwrap();
         let r = md.run(&mut fw, &mut fs, &mut dev, SimTime::ZERO, "mariadb").unwrap();
         let id = r.output.clone();
         assert_eq!(md.containers()[0].state, ContainerState::Running);
@@ -659,8 +750,8 @@ mod tests {
 
     #[test]
     fn cannot_rm_running_container() {
-        let (mut md, mut fw, mut fs, mut dev, reg) = setup();
-        md.pull(&mut fw, &mut fs, &mut dev, &reg, SimTime::ZERO, "mariadb").unwrap();
+        let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
+        md.pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab, 0, SimTime::ZERO, "mariadb").unwrap();
         let id = md.run(&mut fw, &mut fs, &mut dev, SimTime::ZERO, "mariadb").unwrap().output;
         assert!(matches!(
             md.rm(&mut fs, SimTime::ZERO, &id).unwrap_err(),
@@ -670,8 +761,8 @@ mod tests {
 
     #[test]
     fn kill_sets_killed_and_restart_revives() {
-        let (mut md, mut fw, mut fs, mut dev, reg) = setup();
-        md.pull(&mut fw, &mut fs, &mut dev, &reg, SimTime::ZERO, "mariadb").unwrap();
+        let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
+        md.pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab, 0, SimTime::ZERO, "mariadb").unwrap();
         let id = md.run(&mut fw, &mut fs, &mut dev, SimTime::ZERO, "mariadb").unwrap().output;
         md.kill(&mut fw, &mut fs, &mut dev, SimTime::ZERO, &id).unwrap();
         assert_eq!(md.containers()[0].state, ContainerState::Killed);
@@ -681,8 +772,8 @@ mod tests {
 
     #[test]
     fn rmi_removes_image_files() {
-        let (mut md, mut fw, mut fs, mut dev, reg) = setup();
-        md.pull(&mut fw, &mut fs, &mut dev, &reg, SimTime::ZERO, "mariadb").unwrap();
+        let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
+        md.pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab, 0, SimTime::ZERO, "mariadb").unwrap();
         md.rmi(&mut fs, &mut dev, SimTime::ZERO, "mariadb").unwrap();
         assert!(fs.walk("/images/manifest/mariadb").is_err());
         assert!(fs.list("/images/blobs").unwrap().is_empty());
@@ -690,8 +781,8 @@ mod tests {
 
     #[test]
     fn ps_lists_containers() {
-        let (mut md, mut fw, mut fs, mut dev, reg) = setup();
-        md.pull(&mut fw, &mut fs, &mut dev, &reg, SimTime::ZERO, "mariadb").unwrap();
+        let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
+        md.pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab, 0, SimTime::ZERO, "mariadb").unwrap();
         md.run(&mut fw, &mut fs, &mut dev, SimTime::ZERO, "mariadb").unwrap();
         let out = md.ps().output;
         assert!(out.contains("c0001"));
@@ -721,10 +812,12 @@ mod tests {
 
     #[test]
     fn pull_via_store_dedups_second_pull() {
-        let (mut md, mut fw, mut fs, mut dev, reg) = setup();
+        let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
         let mut store = LayerStore::default();
         let r1 = md
-            .pull_via_store(&mut fw, &mut fs, &mut dev, &reg, &mut store, SimTime::ZERO, "mariadb")
+            .pull_via_store(
+                &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, SimTime::ZERO, "mariadb",
+            )
             .unwrap();
         assert!(r1.done > SimTime::ZERO);
         let (manifest, _) = reg.fetch("mariadb").unwrap();
@@ -734,7 +827,9 @@ mod tests {
         // second pull of the same image: zero bytes fetched or written,
         // and no extra blob refs (refs mirror "manifest present")
         let r2 = md
-            .pull_via_store(&mut fw, &mut fs, &mut dev, &reg, &mut store, r1.done, "mariadb")
+            .pull_via_store(
+                &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, r1.done, "mariadb",
+            )
             .unwrap();
         assert_eq!(store.stats.bytes_written, written);
         assert!(r2.output.contains("2 reused"));
@@ -744,13 +839,17 @@ mod tests {
 
     #[test]
     fn rmi_with_store_reclaims_image_chunks() {
-        let (mut md, mut fw, mut fs, mut dev, reg) = setup();
+        let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
         let mut store = LayerStore::default();
-        md.pull_via_store(&mut fw, &mut fs, &mut dev, &reg, &mut store, SimTime::ZERO, "mariadb")
-            .unwrap();
+        md.pull_via_store(
+            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, SimTime::ZERO, "mariadb",
+        )
+        .unwrap();
         // re-pull must not leak a second reference (rmi releases once)
-        md.pull_via_store(&mut fw, &mut fs, &mut dev, &reg, &mut store, SimTime::ZERO, "mariadb")
-            .unwrap();
+        md.pull_via_store(
+            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, SimTime::ZERO, "mariadb",
+        )
+        .unwrap();
         assert!(store.unique_bytes() > 0);
         md.rmi_with_store(&mut fs, &mut dev, &mut store, SimTime::ZERO, "mariadb")
             .unwrap();
@@ -761,10 +860,12 @@ mod tests {
 
     #[test]
     fn rmi_with_store_keeps_chunks_live_containers_share() {
-        let (mut md, mut fw, mut fs, mut dev, reg) = setup();
+        let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
         let mut store = LayerStore::default();
-        md.pull_via_store(&mut fw, &mut fs, &mut dev, &reg, &mut store, SimTime::ZERO, "mariadb")
-            .unwrap();
+        md.pull_via_store(
+            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, SimTime::ZERO, "mariadb",
+        )
+        .unwrap();
         let id = md
             .run_cow(&mut fw, &mut fs, &mut dev, &mut store, SimTime::ZERO, "mariadb")
             .unwrap()
@@ -783,9 +884,9 @@ mod tests {
 
     #[test]
     fn tagged_and_untagged_references_are_one_image() {
-        let (mut md, mut fw, mut fs, mut dev, reg) = setup();
+        let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
         // pull with the explicit :latest tag, create with the bare name
-        md.pull(&mut fw, &mut fs, &mut dev, &reg, SimTime::ZERO, "mariadb:latest")
+        md.pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab, 0, SimTime::ZERO, "mariadb:latest")
             .unwrap();
         let id = md.create(&mut fw, &mut fs, &mut dev, SimTime::ZERO, "mariadb").unwrap().output;
         assert_eq!(md.containers()[0].id, id);
@@ -795,10 +896,12 @@ mod tests {
 
     #[test]
     fn create_cow_mounts_writable_layer_without_copying() {
-        let (mut md, mut fw, mut fs, mut dev, reg) = setup();
+        let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
         let mut store = LayerStore::default();
-        md.pull_via_store(&mut fw, &mut fs, &mut dev, &reg, &mut store, SimTime::ZERO, "mariadb")
-            .unwrap();
+        md.pull_via_store(
+            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, SimTime::ZERO, "mariadb",
+        )
+        .unwrap();
         let unique = store.unique_bytes();
         let r = md
             .run_cow(&mut fw, &mut fs, &mut dev, &mut store, SimTime::ZERO, "mariadb")
@@ -815,10 +918,12 @@ mod tests {
 
     #[test]
     fn rm_with_store_releases_the_writable_layer() {
-        let (mut md, mut fw, mut fs, mut dev, reg) = setup();
+        let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
         let mut store = LayerStore::default();
-        md.pull_via_store(&mut fw, &mut fs, &mut dev, &reg, &mut store, SimTime::ZERO, "mariadb")
-            .unwrap();
+        md.pull_via_store(
+            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, SimTime::ZERO, "mariadb",
+        )
+        .unwrap();
         let id = md
             .run_cow(&mut fw, &mut fs, &mut dev, &mut store, SimTime::ZERO, "mariadb")
             .unwrap()
@@ -838,10 +943,10 @@ mod tests {
 
     #[test]
     fn create_cow_requires_store_resident_image() {
-        let (mut md, mut fw, mut fs, mut dev, reg) = setup();
+        let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
         let mut store = LayerStore::default();
         // classic pull: blobs land as files, not in the store
-        md.pull(&mut fw, &mut fs, &mut dev, &reg, SimTime::ZERO, "mariadb").unwrap();
+        md.pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab, 0, SimTime::ZERO, "mariadb").unwrap();
         assert_eq!(
             md.create_cow(&mut fw, &mut fs, &mut dev, &mut store, SimTime::ZERO, "mariadb")
                 .unwrap_err(),
@@ -851,8 +956,8 @@ mod tests {
 
     #[test]
     fn create_materializes_overlay_rootfs() {
-        let (mut md, mut fw, mut fs, mut dev, reg) = setup();
-        md.pull(&mut fw, &mut fs, &mut dev, &reg, SimTime::ZERO, "mariadb").unwrap();
+        let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
+        md.pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab, 0, SimTime::ZERO, "mariadb").unwrap();
         let id = md.create(&mut fw, &mut fs, &mut dev, SimTime::ZERO, "mariadb").unwrap().output;
         let root = format!("/containers/{id}/rootfs");
         let entries = fs.list(&root).unwrap();

@@ -1,15 +1,19 @@
 //! Shared driver for the serving case study, used by `repro serve` and
 //! the `llm_pool_serving` example: spin up N pool-node engines (real PJRT
 //! execution of the AOT artifacts), push batched requests through the
-//! coordinator, and report latency/throughput.
+//! simulated-time coordinator on a [`PoolSim`] clock, and report
+//! simulated latency/throughput.
 
 use std::path::PathBuf;
 
 use anyhow::Result;
 
-use crate::coordinator::{serve, InferenceRequest};
+use crate::config::SystemConfig;
+use crate::coordinator::{serve, InferenceRequest, ServeParams};
+use crate::metrics::Counters;
 use crate::runtime::{Engine, Manifest};
-use crate::util::Rng;
+use crate::sim::PoolSim;
+use crate::util::{Rng, SimTime};
 
 /// Run the serving demo.  Returns Err if artifacts are missing.
 pub fn run_serve(artifacts: &str, nodes: usize, n_requests: usize, tokens: usize) -> Result<()> {
@@ -20,17 +24,23 @@ pub fn run_serve(artifacts: &str, nodes: usize, n_requests: usize, tokens: usize
         "model: {} params, {} layers, d_model {}, batch {}, prompt {}, max_seq {}",
         c.param_count, c.n_layers, c.d_model, c.batch, c.prompt_len, c.max_seq
     );
-    println!("pool: {nodes} DockerSSD nodes (PJRT CPU engines)");
+    println!("pool: {nodes} DockerSSD nodes (PJRT CPU engines, simulated-time coordinator)");
 
-    // deterministic synthetic prompts over the model's vocab
+    // deterministic synthetic prompts over the model's vocab, arriving
+    // across a simulated 5ms window
     let mut rng = Rng::new(42);
-    let requests: Vec<InferenceRequest> = (0..n_requests as u64)
-        .map(|id| InferenceRequest {
-            id,
-            prompt: (0..c.prompt_len)
-                .map(|_| rng.below(c.vocab as u64) as i32)
-                .collect(),
-            max_new_tokens: tokens,
+    let requests: Vec<(SimTime, InferenceRequest)> = (0..n_requests as u64)
+        .map(|id| {
+            (
+                SimTime::us(rng.below(5_000)),
+                InferenceRequest {
+                    id,
+                    prompt: (0..c.prompt_len)
+                        .map(|_| rng.below(c.vocab as u64) as i32)
+                        .collect(),
+                    max_new_tokens: tokens,
+                },
+            )
         })
         .collect();
 
@@ -41,8 +51,17 @@ pub fn run_serve(artifacts: &str, nodes: usize, n_requests: usize, tokens: usize
         })
         .collect();
 
+    let cfg = SystemConfig::default();
     let kv_bytes = (manifest.kv_cache_elems() * 2 * 4) as u64;
-    let report = serve(factories, requests, c.batch, c.prompt_len, kv_bytes * 4);
+    let params = ServeParams {
+        batch_width: c.batch,
+        prompt_len: c.prompt_len,
+        kv_capacity_per_node: kv_bytes * 4,
+        kv_bytes_per_batch: kv_bytes,
+        ..ServeParams::from_config(&cfg.serve)
+    };
+    let mut sim = PoolSim::new(&cfg);
+    let report = serve(&mut sim, factories, requests, &params);
 
     println!("\nresults:");
     for r in report.responses.iter().take(4) {
@@ -52,17 +71,23 @@ pub fn run_serve(artifacts: &str, nodes: usize, n_requests: usize, tokens: usize
         println!("  ... ({} total)", report.responses.len());
     }
     println!(
-        "\n{} requests, {} batches ({} padded rows), {} tokens in {:?}",
+        "\n{} requests, {} batches ({} padded rows), {} tokens in {} simulated",
         report.responses.len(),
         report.batches,
         report.padded_rows,
         report.tokens_out,
-        report.wall
+        report.makespan
     );
     println!(
-        "throughput {:.1} tok/s, mean batch latency {:?}",
+        "throughput {:.1} tok/s (simulated), mean batch latency {}",
         report.throughput_tok_s(),
         report.mean_latency()
     );
+    let mut counters = Counters::new();
+    report.export_counters(&mut counters);
+    sim.export_counters(&mut counters);
+    for (k, v) in counters.iter() {
+        println!("  {k} = {v}");
+    }
     Ok(())
 }

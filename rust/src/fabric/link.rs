@@ -41,14 +41,52 @@ impl LinkClass {
 }
 
 /// Transfer priority class.
+///
+/// Two tiers exist.  The *foreground tier* ([`Priority::Foreground`] and
+/// the weighted [`Priority::Tenant`] classes) holds the wire it is
+/// granted; on the event-driven engine, concurrent foreground-tier
+/// tenants share a contended link in proportion to their weights
+/// (weighted fair queuing at transfer granularity) instead of strictly
+/// serializing.  The *background tier* only gets the wire when the
+/// foreground tier leaves it idle, and yields within one MTU frame
+/// quantum when foreground traffic arrives.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Priority {
     /// Latency-sensitive traffic: boot-blocking layer fetches, request
-    /// dispatch, KV migration, collective steps.
+    /// dispatch, KV migration, collective steps.  Equivalent to a
+    /// weight-1 tenant class.
     Foreground,
     /// Best-effort traffic that yields the wire to foreground within one
     /// frame quantum: placement-time layer prefetch.
     Background,
+    /// A weighted per-tenant QoS class: foreground-tier traffic that
+    /// shares a contended wire with other tenants in proportion to
+    /// `weight` (>= 1).  The synchronous busy-until path treats it as
+    /// plain foreground; the event-driven engine schedules it by weight.
+    Tenant { id: u8, weight: u8 },
+}
+
+impl Priority {
+    pub fn is_background(self) -> bool {
+        matches!(self, Priority::Background)
+    }
+
+    /// The WFQ class this transfer is accounted under.
+    pub(crate) fn class_key(self) -> u16 {
+        match self {
+            Priority::Foreground => 0,
+            Priority::Tenant { id, .. } => 1 + id as u16,
+            Priority::Background => u16::MAX,
+        }
+    }
+
+    /// Weighted share of a contended link (foreground tier only).
+    pub fn weight(self) -> u64 {
+        match self {
+            Priority::Tenant { weight, .. } => weight.max(1) as u64,
+            _ => 1,
+        }
+    }
 }
 
 /// Busy-until bandwidth queue for one link.
@@ -99,15 +137,12 @@ impl LinkQueue {
     /// bottleneck link that delayed the transfer, not here.
     pub(crate) fn occupy(&mut self, pri: Priority, begin: SimTime, bytes: u64) {
         let wire = self.wire_time(bytes);
-        match pri {
-            Priority::Foreground => {
-                self.fg_busy_until = begin + wire;
-                if self.bg_busy_until > begin {
-                    self.bg_busy_until += wire;
-                }
-            }
-            Priority::Background => {
-                self.bg_busy_until = begin + wire;
+        if pri.is_background() {
+            self.bg_busy_until = begin + wire;
+        } else {
+            self.fg_busy_until = begin + wire;
+            if self.bg_busy_until > begin {
+                self.bg_busy_until += wire;
             }
         }
         self.bytes += bytes;
@@ -144,6 +179,21 @@ mod tests {
         assert_eq!(q.fg_busy_until, SimTime::ns(2000));
         assert_eq!(q.bytes, 2000);
         assert_eq!(q.transfers, 2);
+    }
+
+    #[test]
+    fn tenant_classes_are_foreground_tier() {
+        let t = Priority::Tenant { id: 3, weight: 4 };
+        assert!(!t.is_background());
+        assert_eq!(t.weight(), 4);
+        assert_eq!(Priority::Tenant { id: 0, weight: 0 }.weight(), 1, "weight floor");
+        assert_eq!(Priority::Foreground.weight(), 1);
+        assert_ne!(t.class_key(), Priority::Foreground.class_key());
+        // a tenant occupies the foreground lane on the sync path
+        let mut q = LinkQueue::new(1.0);
+        q.occupy(t, SimTime::ZERO, 500);
+        assert_eq!(q.fg_busy_until, SimTime::ns(500));
+        assert_eq!(q.bg_busy_until, SimTime::ZERO);
     }
 
     #[test]

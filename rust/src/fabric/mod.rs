@@ -23,22 +23,37 @@
 //! * `coordinator` — request dispatch and response collection cross
 //!   `HostUplink` + `Array`; KV migrations cross node-to-node paths.
 //!
-//! Two priority lanes exist per link: `Foreground` (boot-blocking
-//! fetches, dispatch, collectives) and `Background` (prefetch).  A
-//! background transfer holds the wire for at most one MTU frame quantum
-//! once foreground traffic arrives, then yields and resumes after — so
-//! prefetch can never delay a foreground fetch by more than one frame
-//! time per link.  (Receipts already issued for a preempted background
-//! transfer are not retroactively extended; their finish times are
-//! optimistic lower bounds.)
+//! Two scheduling tiers exist per link: the foreground tier
+//! ([`Priority::Foreground`] plus weighted [`Priority::Tenant`] QoS
+//! classes) and `Background` (prefetch).  A background transfer holds
+//! the wire for at most one MTU frame quantum once foreground traffic
+//! arrives, then yields and resumes after — so prefetch can never delay
+//! a foreground fetch by more than one frame time per link.
+//!
+//! Two ways to put bytes on the wire:
+//!
+//! * [`Fabric::transfer`] — synchronous busy-until arithmetic.  Exact
+//!   for foreground traffic issued in nondecreasing time order (which is
+//!   how every event-loop caller issues it); for a background transfer
+//!   later preempted by foreground traffic the receipt it already
+//!   returned is an optimistic lower bound.
+//! * [`Fabric::schedule`] + [`Fabric::advance_to`]/[`Fabric::run_to_idle`]
+//!   — the event-driven engine (see [`sched`]): transfers become
+//!   arrival/release/preemption events at frame-quantum granularity on a
+//!   [`crate::sim::EventQueue`], a preempted background transfer is
+//!   *re-timed* instead of keeping its optimistic receipt, and
+//!   concurrent foreground-tier tenants share a contended link by
+//!   weight.  This closes the ROADMAP retro-causality item.
 //!
 //! Intranet traffic (`Array`/`Tray` links) is frame-accounted against
 //! the Ether-oN driver path: each transfer is chopped into MTU frames
 //! and charged to [`EtherOnStats`] as TransmitFrame/ReceiveFrame pairs.
 
 pub mod link;
+pub mod sched;
 
 pub use link::{LinkClass, LinkQueue, Priority};
+pub use sched::TransferId;
 
 use std::collections::BTreeMap;
 
@@ -108,6 +123,8 @@ pub struct FabricStats {
     /// Prefetch bytes that started with zero queue wait — fully hidden
     /// behind otherwise-idle links.
     pub prefetch_bytes_hidden: u64,
+    /// Engine transfers whose completion was re-timed by a preemption.
+    pub retimed_transfers: u64,
 }
 
 /// The pool fabric: topology-keyed link queues + accounting.
@@ -125,6 +142,8 @@ pub struct Fabric {
     /// Frame-level accounting charged to the Ether-oN driver path for
     /// intranet traffic.
     pub ether: EtherOnStats,
+    /// The event-driven transfer scheduler (see [`sched`]).
+    pub(crate) engine: sched::Engine,
 }
 
 impl Fabric {
@@ -141,6 +160,7 @@ impl Fabric {
             links: BTreeMap::new(),
             stats: FabricStats::default(),
             ether: EtherOnStats::default(),
+            engine: sched::Engine::default(),
         }
     }
 
@@ -266,35 +286,32 @@ impl Fabric {
         // remembering which link the grant ultimately waited on
         let mut begin = now;
         let mut bottleneck: Option<LinkClass> = None;
-        match pri {
-            Priority::Foreground => {
-                for &c in &path {
-                    let avail = self.links[&c].fg_busy_until;
-                    if avail > begin {
-                        begin = avail;
-                        bottleneck = Some(c);
-                    }
-                }
-                // an in-flight background transfer finishes its current
-                // frame quantum, then yields the wire
-                let fg_begin = begin;
-                for &c in &path {
-                    let q = &self.links[&c];
-                    if q.bg_busy_until > begin {
-                        let capped = q.bg_busy_until.min(fg_begin + q.frame_quantum(self.mtu));
-                        if capped > begin {
-                            begin = capped;
-                            bottleneck = Some(c);
-                        }
-                    }
+        if pri.is_background() {
+            for &c in &path {
+                let q = &self.links[&c];
+                let avail = q.fg_busy_until.max(q.bg_busy_until);
+                if avail > begin {
+                    begin = avail;
+                    bottleneck = Some(c);
                 }
             }
-            Priority::Background => {
-                for &c in &path {
-                    let q = &self.links[&c];
-                    let avail = q.fg_busy_until.max(q.bg_busy_until);
-                    if avail > begin {
-                        begin = avail;
+        } else {
+            for &c in &path {
+                let avail = self.links[&c].fg_busy_until;
+                if avail > begin {
+                    begin = avail;
+                    bottleneck = Some(c);
+                }
+            }
+            // an in-flight background transfer finishes its current
+            // frame quantum, then yields the wire
+            let fg_begin = begin;
+            for &c in &path {
+                let q = &self.links[&c];
+                if q.bg_busy_until > begin {
+                    let capped = q.bg_busy_until.min(fg_begin + q.frame_quantum(self.mtu));
+                    if capped > begin {
+                        begin = capped;
                         bottleneck = Some(c);
                     }
                 }
@@ -326,15 +343,14 @@ impl Fabric {
         } else {
             0
         };
-        match pri {
-            Priority::Foreground => self.stats.transfers_fg += 1,
-            Priority::Background => {
-                self.stats.transfers_bg += 1;
-                self.stats.prefetch_bytes += bytes;
-                if begin == now {
-                    self.stats.prefetch_bytes_hidden += bytes;
-                }
+        if pri.is_background() {
+            self.stats.transfers_bg += 1;
+            self.stats.prefetch_bytes += bytes;
+            if begin == now {
+                self.stats.prefetch_bytes_hidden += bytes;
             }
+        } else {
+            self.stats.transfers_fg += 1;
         }
 
         TransferReceipt {
@@ -375,6 +391,8 @@ impl Fabric {
         c.add(names::FABRIC_FRAMES, self.ether.tx_frames);
         c.add(names::FABRIC_PREFETCH_BYTES, self.stats.prefetch_bytes);
         c.add(names::FABRIC_PREFETCH_HIDDEN, self.stats.prefetch_bytes_hidden);
+        c.add(names::FABRIC_RETIMED_TRANSFERS, self.stats.retimed_transfers);
+        c.add(names::SIM_CLAMPED_EVENTS, self.engine_clamped_events());
     }
 }
 

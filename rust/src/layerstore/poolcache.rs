@@ -197,37 +197,34 @@ impl PoolLayerCache {
         let (src, _) = self.plan(fabric, topo, node, digest, bytes);
         let receipt = match src {
             FetchSource::Local => {
-                match pri {
-                    Priority::Foreground => {
-                        self.local_hits += 1;
-                        // first hit on a prefetched layer: wait for the
-                        // prefetch's in-flight tail, and don't re-count
-                        // bytes the prefetch already accounted
-                        match self.prefetched.remove(&(node, digest)) {
-                            Some(ready) => TransferReceipt {
-                                issued: now,
-                                begin: now,
-                                finish: ready.max(now),
-                                bytes: 0,
-                                frames: 0,
-                            },
-                            None => {
-                                self.bytes_local += bytes;
-                                TransferReceipt::immediate(now)
-                            }
-                        }
-                    }
+                if pri.is_background() {
                     // a background prefetch of a resident (or already
                     // in-flight) layer is a no-op: nothing moves, nothing
                     // is saved, and any live marker stays live
-                    Priority::Background => {
-                        let ready = self.prefetched.get(&(node, digest)).copied();
-                        TransferReceipt {
+                    let ready = self.prefetched.get(&(node, digest)).copied();
+                    TransferReceipt {
+                        issued: now,
+                        begin: now,
+                        finish: ready.unwrap_or(now).max(now),
+                        bytes: 0,
+                        frames: 0,
+                    }
+                } else {
+                    self.local_hits += 1;
+                    // first hit on a prefetched layer: wait for the
+                    // prefetch's in-flight tail, and don't re-count
+                    // bytes the prefetch already accounted
+                    match self.prefetched.remove(&(node, digest)) {
+                        Some(ready) => TransferReceipt {
                             issued: now,
                             begin: now,
-                            finish: ready.unwrap_or(now).max(now),
+                            finish: ready.max(now),
                             bytes: 0,
                             frames: 0,
+                        },
+                        None => {
+                            self.bytes_local += bytes;
+                            TransferReceipt::immediate(now)
                         }
                     }
                 }

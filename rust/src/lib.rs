@@ -11,14 +11,19 @@
 //!   copy-on-write writable layers, and the pool-wide layer-presence
 //!   cache that turns replica boots into peer fetches instead of
 //!   registry round trips), [`fabric`] (the pool-wide message fabric:
-//!   contention-aware per-link bandwidth queues that every cross-node
-//!   and host/WAN transfer routes through).
+//!   contention-aware per-link bandwidth queues — with an event-driven
+//!   re-timing engine — that every cross-node and host/WAN transfer
+//!   routes through).
+//! * Simulation core: [`sim`] (the deterministic event queue and
+//!   [`sim::PoolSim`], the one clock + fabric + per-node compute bundle
+//!   every timing consumer shares).
 //! * Evaluation substrates: [`models`] (the six data-processing models),
 //!   [`workloads`] (Table 2 generators), [`llm`] (the analytic
 //!   distributed-inference simulator), [`pool`] (disaggregated storage pool).
 //! * Serving: `runtime` (PJRT artifact execution, behind the `pjrt`
 //!   feature — the xla bindings are unavailable offline), [`coordinator`]
-//!   (router + batcher + KV manager driving real token generation).
+//!   (router + batcher + KV manager on the simulated clock, driving real
+//!   token generation deterministically).
 
 pub mod benchkit;
 pub mod config;

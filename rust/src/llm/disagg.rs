@@ -11,7 +11,7 @@ use super::device::DeviceProfile;
 use super::models::{all_llms, LlmConfig};
 use super::parallelism::{find_optimal, OptimalChoice, Parallelism};
 use super::InferenceTime;
-use crate::fabric::{Endpoint, Fabric, Priority};
+use crate::fabric::{Endpoint, Fabric, Priority, TransferId};
 use crate::pool::topology::NodeId;
 use crate::util::SimTime;
 
@@ -226,6 +226,24 @@ pub fn pool_step_time(
     finish.saturating_sub(now)
 }
 
+/// Schedule one decode step's traffic on the fabric's *event-driven
+/// engine* (see [`Fabric::schedule`]) instead of resolving it
+/// synchronously: the step's transfers become arrival events on the
+/// shared clock, interleaving — and being re-timed — against docker
+/// pulls, KV migrations, and background layer prefetch already in
+/// flight on the same wires.  Resolve the receipts after
+/// [`Fabric::advance_to`]/[`Fabric::run_to_idle`].
+pub fn schedule_step(
+    fabric: &mut Fabric,
+    now: SimTime,
+    traffic: &[(Endpoint, Endpoint, u64)],
+) -> Vec<TransferId> {
+    traffic
+        .iter()
+        .map(|&(from, to, bytes)| fabric.schedule(now, from, to, bytes, Priority::Foreground))
+        .collect()
+}
+
 /// Re-price a scenario's communication on the shared fabric: compute
 /// and memory come from the analytic model, but `comm` becomes the time
 /// the fabric actually granted one step's traffic (scaled to the full
@@ -380,6 +398,37 @@ mod tests {
         f.export_counters(&mut c);
         assert!(c.get(names::FABRIC_BYTES_HOST_UPLINK) > 0);
         assert!(c.get(names::FABRIC_BYTES_ARRAY) > 0);
+    }
+
+    #[test]
+    fn scheduled_step_retimes_an_inflight_prefetch() {
+        let llm = all_llms().remove(0);
+        let par = Parallelism { dp: 1, tp: 8, pp: 1 };
+        let traffic = step_traffic(&llm, par, 32_768, 1, true, false);
+        // alone on an idle engine
+        let mut fa = fabric16();
+        let ids = schedule_step(&mut fa, SimTime::ZERO, &traffic);
+        fa.run_to_idle();
+        let alone: SimTime = ids.iter().map(|&i| fa.receipt_of(i).unwrap().finish).max().unwrap();
+        // behind a large background layer prefetch on the same array
+        let mut fb = fabric16();
+        let optimistic = fb.estimate(Endpoint::Node(8), Endpoint::Node(9), 64 << 20);
+        let bg = fb.schedule(
+            SimTime::ZERO,
+            Endpoint::Node(8),
+            Endpoint::Node(9),
+            64 << 20,
+            Priority::Background,
+        );
+        let ids = schedule_step(&mut fb, SimTime::us(100), &traffic);
+        fb.run_to_idle();
+        let mixed: SimTime = ids.iter().map(|&i| fb.receipt_of(i).unwrap().finish).max().unwrap();
+        assert!(mixed > alone, "sharing the wire cannot be free: {mixed} vs {alone}");
+        assert!(
+            fb.receipt_of(bg).unwrap().finish > optimistic,
+            "the collective step re-times the prefetch instead of leaving its receipt optimistic"
+        );
+        assert!(fb.stats.retimed_transfers >= 1);
     }
 
     #[test]

@@ -13,7 +13,10 @@
 //! repro fig13ab           # Fig 13a/b: sequence-length sensitivity
 //! repro fig13cd           # Fig 13c/d: batch-size sensitivity
 //! repro docker-demo       # pull/run/logs lifecycle on the simulated SSD
-//! repro serve [--nodes N --requests R --tokens T --artifacts DIR]
+//! repro serve [--nodes N --requests R --tokens T --seed S]
+//!                         # simulated-time pool serving storm (PoolSim);
+//!                         # with --features pjrt also [--artifacts DIR]
+//!                         # for real PJRT token generation
 //! repro config            # print the default config as JSON
 //! ```
 //!
@@ -21,6 +24,7 @@
 
 use dockerssd::config::SystemConfig;
 use dockerssd::docker::{MiniDocker, Registry};
+use dockerssd::fabric::Fabric;
 use dockerssd::firmware::{fw_image, linux_image, CostModel, VirtualFw};
 use dockerssd::lambdafs::LambdaFs;
 use dockerssd::llm::disagg::{
@@ -268,9 +272,12 @@ fn docker_demo() {
     let mut fw = VirtualFw::new(&cfg.ssd);
     let reg = Registry::with_benchmark_images();
     let mut md = MiniDocker::new();
+    let mut fab = Fabric::of(&cfg);
 
-    println!("# docker pull mariadb (over Ether-oN into λFS)");
-    let r = md.pull(&mut fw, &mut fs, &mut dev, &reg, SimTime::ZERO, "mariadb").unwrap();
+    println!("# docker pull mariadb (over the pool fabric + Ether-oN into λFS)");
+    let r = md
+        .pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab, 0, SimTime::ZERO, "mariadb")
+        .unwrap();
     println!("{} (simulated {:?})", r.output, r.done);
 
     println!("# docker run mariadb");
@@ -291,17 +298,110 @@ fn docker_demo() {
     println!("stopped + removed; fw syscalls emulated: {}", fw.syscalls.total());
 }
 
-/// Without the `pjrt` feature there is no Engine to serve with (the xla
-/// bindings are unavailable offline); keep the CLI surface but say so.
+/// Without the `pjrt` feature the serving loop still runs end-to-end in
+/// simulated time (PoolSim clock + shared fabric), with the
+/// deterministic `EchoExecutor` standing in for real PJRT engines.
 #[cfg(not(feature = "pjrt"))]
-fn serve_cmd(_rest: &[String]) {
-    eprintln!("serve requires the real PJRT runtime: rebuild with --features pjrt");
-    eprintln!("(offline builds exclude the xla bindings; see Cargo.toml)");
-    std::process::exit(2);
+fn serve_cmd(rest: &[String]) {
+    use dockerssd::coordinator::{serve, EchoExecutor, InferenceRequest, ServeParams};
+    use dockerssd::metrics::{Counters, Table};
+    use dockerssd::sim::PoolSim;
+    use dockerssd::util::Rng;
+
+    let value_of = |i: usize, flag: &str| -> String {
+        rest.get(i + 1).cloned().unwrap_or_else(|| {
+            eprintln!("{flag} needs a value");
+            std::process::exit(2);
+        })
+    };
+    let mut nodes = 0usize;
+    let mut requests = 32usize;
+    let mut tokens = 0usize;
+    let mut seed = 42u64;
+    let mut i = 0;
+    while i < rest.len() {
+        match rest[i].as_str() {
+            "--nodes" => {
+                nodes = value_of(i, "--nodes").parse().expect("--nodes N");
+                i += 2;
+            }
+            "--requests" => {
+                requests = value_of(i, "--requests").parse().expect("--requests R");
+                i += 2;
+            }
+            "--tokens" => {
+                tokens = value_of(i, "--tokens").parse().expect("--tokens T");
+                i += 2;
+            }
+            "--seed" => {
+                seed = value_of(i, "--seed").parse().expect("--seed S");
+                i += 2;
+            }
+            other => {
+                eprintln!("unknown flag {other}");
+                std::process::exit(2);
+            }
+        }
+    }
+    let cfg = SystemConfig::default();
+    let nodes = if nodes == 0 { cfg.serve.nodes as usize } else { nodes };
+    let tokens = if tokens == 0 { cfg.serve.max_new_tokens as usize } else { tokens };
+    let params = ServeParams::from_config(&cfg.serve);
+    println!(
+        "simulated serve storm: {nodes} nodes, {requests} requests x {tokens} tokens, seed {seed}"
+    );
+
+    let mut sim = PoolSim::new(&cfg);
+    let mut rng = Rng::new(seed);
+    let reqs: Vec<(SimTime, InferenceRequest)> = (0..requests as u64)
+        .map(|id| {
+            (
+                SimTime::us(rng.below(5_000)),
+                InferenceRequest {
+                    id,
+                    prompt: (0..params.prompt_len).map(|_| rng.below(32_000) as i32).collect(),
+                    max_new_tokens: tokens,
+                },
+            )
+        })
+        .collect();
+    let factories: Vec<_> = (0..nodes)
+        .map(|_| || Ok::<_, anyhow::Error>(EchoExecutor))
+        .collect();
+    let report = serve(&mut sim, factories, reqs, &params);
+
+    println!(
+        "\n{} responses, {} batches ({} padded rows), {} tokens in {} simulated",
+        report.responses.len(),
+        report.batches,
+        report.padded_rows,
+        report.tokens_out,
+        report.makespan
+    );
+    println!(
+        "throughput {:.1} tok/s (simulated), mean latency {}, p99 {}",
+        report.throughput_tok_s(),
+        report.mean_latency(),
+        report.latency.quantile(0.99)
+    );
+    let mut c = Counters::new();
+    report.export_counters(&mut c);
+    sim.export_counters(&mut c);
+    let mut t = Table::new(vec!["counter", "value"]);
+    for (k, v) in c.iter() {
+        t.row(vec![k.to_string(), format!("{v}")]);
+    }
+    println!("\n{}", t.render());
 }
 
 #[cfg(feature = "pjrt")]
 fn serve_cmd(rest: &[String]) {
+    let value_of = |i: usize, flag: &str| -> String {
+        rest.get(i + 1).cloned().unwrap_or_else(|| {
+            eprintln!("{flag} needs a value");
+            std::process::exit(2);
+        })
+    };
     let mut nodes = 2usize;
     let mut requests = 8usize;
     let mut tokens = 16usize;
@@ -310,19 +410,19 @@ fn serve_cmd(rest: &[String]) {
     while i < rest.len() {
         match rest[i].as_str() {
             "--nodes" => {
-                nodes = rest[i + 1].parse().expect("--nodes N");
+                nodes = value_of(i, "--nodes").parse().expect("--nodes N");
                 i += 2;
             }
             "--requests" => {
-                requests = rest[i + 1].parse().expect("--requests R");
+                requests = value_of(i, "--requests").parse().expect("--requests R");
                 i += 2;
             }
             "--tokens" => {
-                tokens = rest[i + 1].parse().expect("--tokens T");
+                tokens = value_of(i, "--tokens").parse().expect("--tokens T");
                 i += 2;
             }
             "--artifacts" => {
-                artifacts = rest[i + 1].clone();
+                artifacts = value_of(i, "--artifacts");
                 i += 2;
             }
             other => {

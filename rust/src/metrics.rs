@@ -128,10 +128,37 @@ pub mod names {
     pub const FABRIC_PREFETCH_BYTES: &str = "fabric.prefetch_bytes";
     /// Prefetch bytes that never waited behind foreground traffic.
     pub const FABRIC_PREFETCH_HIDDEN: &str = "fabric.prefetch_bytes_hidden";
+    /// Transfers the event-driven engine re-timed after a preemption
+    /// (the receipt is strictly later than the optimistic busy-until
+    /// figure would have been).
+    pub const FABRIC_RETIMED_TRANSFERS: &str = "fabric.retimed_transfers";
+
+    // Canonical names for the [`crate::sim`] event core.
+    /// Events whose requested firing time was in the past and got
+    /// clamped to the queue's `now`.
+    pub const SIM_CLAMPED_EVENTS: &str = "sim.clamped_events";
+    pub const SIM_EVENTS_PROCESSED: &str = "sim.events_processed";
+
+    // Canonical names for the [`crate::coordinator`] serving loop, so a
+    // serve storm's schedule is comparable byte-for-byte across runs.
+    pub const SERVE_REQUESTS: &str = "serve.requests";
+    pub const SERVE_RESPONSES: &str = "serve.responses";
+    pub const SERVE_BATCHES: &str = "serve.batches";
+    pub const SERVE_PADDED_ROWS: &str = "serve.padded_rows";
+    pub const SERVE_TOKENS_OUT: &str = "serve.tokens_out";
+    pub const SERVE_FAILED_BATCHES: &str = "serve.failed_batches";
+    /// Resident session KV moved between nodes to relieve pressure.
+    pub const SERVE_KV_MIGRATIONS: &str = "serve.kv_migrations";
+    /// Resident session KV dropped to admit a waiting batch.
+    pub const SERVE_KV_EVICTIONS: &str = "serve.kv_evictions";
+    pub const SERVE_MAKESPAN_NS: &str = "serve.makespan_ns";
+    pub const SERVE_LATENCY_MEAN_NS: &str = "serve.latency_mean_ns";
+    pub const SERVE_LATENCY_P99_NS: &str = "serve.latency_p99_ns";
 }
 
-/// Named counters for substrate statistics.
-#[derive(Clone, Debug, Default)]
+/// Named counters for substrate statistics.  `PartialEq` so two runs'
+/// exports can be compared byte-for-byte (the determinism gate).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct Counters {
     map: BTreeMap<&'static str, u64>,
 }

@@ -8,6 +8,7 @@ use std::collections::HashMap;
 use super::topology::{NodeId, PoolTopology};
 use crate::fabric::Fabric;
 use crate::layerstore::PoolLayerCache;
+use crate::sim::PoolSim;
 use crate::util::SimTime;
 
 /// Restart policy (compose-like).
@@ -145,6 +146,23 @@ impl Orchestrator {
             }
         }
         Ok(placed)
+    }
+
+    /// [`Orchestrator::deploy_with_layers`] on the pool's shared clock:
+    /// `now` comes from the [`PoolSim`] event queue and the placement's
+    /// background prefetches land on its fabric, so deployment traffic
+    /// shares the timeline with serving, docker pulls, and collectives
+    /// instead of living at a private t=0.
+    pub fn deploy_sim(
+        &mut self,
+        sim: &mut PoolSim,
+        topo: &PoolTopology,
+        spec: &DeploymentSpec,
+        cache: &mut PoolLayerCache,
+        layers: &[(u64, u64)],
+    ) -> Result<Vec<NodeId>, String> {
+        let now = sim.now();
+        self.deploy_with_layers(topo, &mut sim.fabric, spec, cache, layers, now)
     }
 
     /// Run pool-wide layer GC with this orchestrator's replica counts as
@@ -370,6 +388,28 @@ mod tests {
                 assert_eq!(lat2, SimTime::ZERO, "resident once the tail has landed");
             }
         }
+    }
+
+    #[test]
+    fn deploy_sim_rides_the_shared_clock() {
+        use crate::config::SystemConfig;
+
+        let cfg = SystemConfig::default();
+        let mut sim = crate::sim::PoolSim::new(&cfg);
+        // the pool clock has already advanced when placement happens
+        sim.queue.schedule_at(SimTime::us(500), 0);
+        sim.queue.pop();
+        let t = topo(16);
+        let mut orch = Orchestrator::new();
+        let mut cache = PoolLayerCache::new();
+        cache.register(0, 0xA);
+        let placed = orch
+            .deploy_sim(&mut sim, &t, &spec("infer", 2), &mut cache, &[(0xA, 1 << 20)])
+            .unwrap();
+        assert_eq!(placed.len(), 2);
+        // prefetch traffic landed on the shared fabric at the clock's now
+        assert!(sim.fabric.stats.transfers_bg >= 1);
+        assert!(sim.fabric.stats.prefetch_bytes >= 1 << 20);
     }
 
     #[test]

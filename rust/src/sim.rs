@@ -1,14 +1,29 @@
-//! Minimal discrete-event simulation core shared by the SSD backend, NVMe
-//! controller, and firmware timing models.
+//! The pool-wide simulation core: one deterministic event-driven clock
+//! shared by the SSD backend, NVMe controller, firmware timing models,
+//! the message fabric, and the serving coordinator.
 //!
 //! The simulator is synchronous and deterministic: events are (time, seq,
 //! tag) tuples popped in order; components advance per-resource
 //! `busy_until` clocks.  Tags are opaque u64s interpreted by the caller —
 //! substrates that need richer payloads keep a side table keyed by tag.
+//! The [`tag`]/[`tag_kind`]/[`tag_payload`] helpers carve a one-byte
+//! kind out of the tag space for callers multiplexing several event
+//! kinds on one queue (the serve loop does).
+//!
+//! [`PoolSim`] bundles the three pool-wide resources every timing
+//! consumer shares: the event queue (the clock), the contention-aware
+//! [`Fabric`], and one [`BusyResource`] of compute per DockerSSD.  A
+//! subsystem that prices time against anything else in the pool takes a
+//! `&mut PoolSim` (or its fabric) instead of keeping a private clock —
+//! that is what makes two runs with the same seed produce byte-identical
+//! schedules.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
+use crate::config::{EtherOnConfig, PoolConfig, SystemConfig};
+use crate::fabric::Fabric;
+use crate::metrics::{names, Counters};
 use crate::util::SimTime;
 
 /// A scheduled event: fires at `at`, carries an opaque `tag`.
@@ -32,6 +47,21 @@ impl PartialOrd for Event {
     }
 }
 
+/// Pack a one-byte event kind and a 56-bit payload into an event tag.
+pub fn tag(kind: u8, payload: u64) -> u64 {
+    ((kind as u64) << 56) | (payload & ((1 << 56) - 1))
+}
+
+/// The kind byte of a tag built by [`tag`].
+pub fn tag_kind(t: u64) -> u8 {
+    (t >> 56) as u8
+}
+
+/// The payload bits of a tag built by [`tag`].
+pub fn tag_payload(t: u64) -> u64 {
+    t & ((1 << 56) - 1)
+}
+
 /// Deterministic event queue with a monotonically advancing clock.
 #[derive(Default)]
 pub struct EventQueue {
@@ -39,6 +69,7 @@ pub struct EventQueue {
     now: SimTime,
     next_seq: u64,
     processed: u64,
+    clamped: u64,
 }
 
 impl EventQueue {
@@ -62,14 +93,29 @@ impl EventQueue {
         self.processed
     }
 
+    /// Events whose requested time was in the past and got clamped to
+    /// `now` (see [`EventQueue::schedule_at`]).
+    pub fn clamped(&self) -> u64 {
+        self.clamped
+    }
+
     /// Schedule `tag` to fire `delay` after the current time.
     pub fn schedule_in(&mut self, delay: SimTime, tag: u64) {
         self.schedule_at(self.now + delay, tag);
     }
 
-    /// Schedule `tag` at an absolute time (must not be in the past).
+    /// Schedule `tag` at an absolute time.  Scheduling into the past
+    /// cannot be honored on a monotonic clock; rather than corrupting
+    /// event order (or silently relying on a debug-only assert), the
+    /// event is clamped to `now` and counted in
+    /// [`EventQueue::clamped`] / the `sim.clamped_events` counter.
     pub fn schedule_at(&mut self, at: SimTime, tag: u64) {
-        debug_assert!(at >= self.now, "scheduling into the past");
+        let at = if at < self.now {
+            self.clamped += 1;
+            self.now
+        } else {
+            at
+        };
         let ev = Event {
             at,
             seq: self.next_seq,
@@ -77,6 +123,11 @@ impl EventQueue {
         };
         self.next_seq += 1;
         self.heap.push(Reverse(ev));
+    }
+
+    /// The firing time of the next event without popping it.
+    pub fn peek_at(&self) -> Option<SimTime> {
+        self.heap.peek().map(|Reverse(ev)| ev.at)
     }
 
     /// Pop the next event, advancing the clock to its time.
@@ -94,6 +145,11 @@ impl EventQueue {
         if t > self.now {
             self.now = t;
         }
+    }
+
+    pub fn export_counters(&self, c: &mut Counters) {
+        c.add(names::SIM_CLAMPED_EVENTS, self.clamped);
+        c.add(names::SIM_EVENTS_PROCESSED, self.processed);
     }
 }
 
@@ -127,6 +183,65 @@ impl BusyResource {
     }
 }
 
+/// The pool-wide simulation: one clock (the event queue), the shared
+/// message fabric, and one compute resource per DockerSSD.
+///
+/// Everything that used to live in a private time domain — the fabric's
+/// busy-until arithmetic, `coordinator::serve`'s wallclock threads,
+/// `MiniDocker::pull`'s device-only packet costs — now prices its time
+/// against this one structure, so cross-subsystem contention (a docker
+/// pull delaying an LLM collective, a KV migration queuing behind a
+/// layer prefetch) is visible instead of assumed away.
+pub struct PoolSim {
+    /// The clock: every event in the pool pops from here in time order.
+    pub queue: EventQueue,
+    /// The shared wire: every cross-node/host/WAN byte crosses it.
+    pub fabric: Fabric,
+    /// Per-node compute (batch execution, ISP work).
+    compute: Vec<BusyResource>,
+}
+
+impl PoolSim {
+    pub fn new(cfg: &SystemConfig) -> Self {
+        Self::with_pool(&cfg.pool, &cfg.etheron)
+    }
+
+    pub fn with_pool(pool: &PoolConfig, etheron: &EtherOnConfig) -> Self {
+        PoolSim {
+            queue: EventQueue::new(),
+            fabric: Fabric::new(pool, etheron),
+            compute: vec![BusyResource::default(); pool.total_nodes() as usize],
+        }
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.queue.now()
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.compute.len()
+    }
+
+    /// Node `node`'s compute resource, growing the pool if a caller
+    /// serves from more nodes than the config declared.
+    pub fn compute_mut(&mut self, node: u32) -> &mut BusyResource {
+        let idx = node as usize;
+        if idx >= self.compute.len() {
+            self.compute.resize(idx + 1, BusyResource::default());
+        }
+        &mut self.compute[idx]
+    }
+
+    pub fn compute(&self, node: u32) -> Option<&BusyResource> {
+        self.compute.get(node as usize)
+    }
+
+    pub fn export_counters(&self, c: &mut Counters) {
+        self.queue.export_counters(c);
+        self.fabric.export_counters(c);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -137,6 +252,7 @@ mod tests {
         q.schedule_at(SimTime::ns(30), 3);
         q.schedule_at(SimTime::ns(10), 1);
         q.schedule_at(SimTime::ns(20), 2);
+        assert_eq!(q.peek_at(), Some(SimTime::ns(10)));
         let order: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|e| e.tag).collect();
         assert_eq!(order, vec![1, 2, 3]);
         assert_eq!(q.now(), SimTime::ns(30));
@@ -163,6 +279,29 @@ mod tests {
     }
 
     #[test]
+    fn past_scheduling_clamps_to_now_and_counts() {
+        let mut q = EventQueue::new();
+        q.schedule_at(SimTime::ns(100), 1);
+        q.pop();
+        assert_eq!(q.now(), SimTime::ns(100));
+        q.schedule_at(SimTime::ns(40), 2); // in the past: clamped
+        assert_eq!(q.clamped(), 1);
+        let e = q.pop().unwrap();
+        assert_eq!(e.at, SimTime::ns(100), "clamped to now, not reordered");
+        let mut c = Counters::new();
+        q.export_counters(&mut c);
+        assert_eq!(c.get(names::SIM_CLAMPED_EVENTS), 1);
+    }
+
+    #[test]
+    fn tag_helpers_round_trip() {
+        let t = tag(7, 0x00AB_CDEF_1234);
+        assert_eq!(tag_kind(t), 7);
+        assert_eq!(tag_payload(t), 0x00AB_CDEF_1234);
+        assert_eq!(tag_kind(tag(255, 0)), 255);
+    }
+
+    #[test]
     fn busy_resource_serializes() {
         let mut r = BusyResource::default();
         let e1 = r.occupy(SimTime::ns(0), SimTime::ns(100));
@@ -182,5 +321,31 @@ mod tests {
         let mut r = BusyResource::default();
         r.occupy(SimTime::ZERO, SimTime::ns(250));
         assert!((r.utilization(SimTime::ns(1000)) - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pool_sim_bundles_clock_fabric_compute() {
+        let cfg = SystemConfig::default();
+        let mut sim = PoolSim::new(&cfg);
+        assert_eq!(sim.nodes(), 16);
+        assert_eq!(sim.now(), SimTime::ZERO);
+        let end = sim.compute_mut(3).occupy(SimTime::us(1), SimTime::us(4));
+        assert_eq!(end, SimTime::us(5));
+        // compute grows on demand for oversized serving setups
+        sim.compute_mut(40).occupy(SimTime::ZERO, SimTime::us(1));
+        assert!(sim.nodes() >= 41);
+        // the fabric rides the same struct
+        use crate::fabric::{Endpoint, Priority};
+        let r = sim.fabric.transfer(
+            SimTime::ZERO,
+            Endpoint::Node(0),
+            Endpoint::Node(1),
+            4096,
+            Priority::Foreground,
+        );
+        assert!(r.finish > SimTime::ZERO);
+        let mut c = Counters::new();
+        sim.export_counters(&mut c);
+        assert!(c.get(names::FABRIC_TRANSFERS) == 1);
     }
 }

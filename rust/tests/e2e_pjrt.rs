@@ -4,8 +4,10 @@
 
 use std::path::PathBuf;
 
-use dockerssd::coordinator::{serve, InferenceRequest};
+use dockerssd::coordinator::{serve, InferenceRequest, ServeParams};
 use dockerssd::runtime::Engine;
+use dockerssd::sim::PoolSim;
+use dockerssd::util::SimTime;
 
 fn art_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -80,11 +82,18 @@ fn pool_serving_over_two_engines() {
     let dir = art_dir();
     let manifest = dockerssd::runtime::Manifest::load(&dir).unwrap();
     let c = manifest.config;
-    let requests: Vec<InferenceRequest> = (0..6u64)
-        .map(|id| InferenceRequest {
-            id,
-            prompt: (0..c.prompt_len).map(|i| ((id as usize * 13 + i) % c.vocab) as i32).collect(),
-            max_new_tokens: 4,
+    let requests: Vec<(SimTime, InferenceRequest)> = (0..6u64)
+        .map(|id| {
+            (
+                SimTime::us(id * 100),
+                InferenceRequest {
+                    id,
+                    prompt: (0..c.prompt_len)
+                        .map(|i| ((id as usize * 13 + i) % c.vocab) as i32)
+                        .collect(),
+                    max_new_tokens: 4,
+                },
+            )
         })
         .collect();
     let factories: Vec<_> = (0..2)
@@ -93,7 +102,13 @@ fn pool_serving_over_two_engines() {
             move || Engine::load(&dir)
         })
         .collect();
-    let report = serve(factories, requests, c.batch, c.prompt_len, u64::MAX);
+    let params = ServeParams {
+        batch_width: c.batch,
+        prompt_len: c.prompt_len,
+        ..Default::default()
+    };
+    let mut sim = PoolSim::new(&dockerssd::config::SystemConfig::default());
+    let report = serve(&mut sim, factories, requests, &params);
     assert_eq!(report.responses.len(), 6);
     let mut ids: Vec<u64> = report.responses.iter().map(|r| r.id).collect();
     ids.sort();

@@ -5,6 +5,7 @@
 use std::net::Ipv4Addr;
 
 use dockerssd::config::SystemConfig;
+use dockerssd::coordinator::{serve, EchoExecutor, InferenceRequest, ServeParams};
 use dockerssd::docker::{DockerCmd, MiniDocker, Registry};
 use dockerssd::etheron::{EtherOnDriver, MacAddr, TcpStack};
 use dockerssd::etheron::frame::{tcp_frame, EthFrame, Ipv4Packet, TcpSegment};
@@ -12,26 +13,30 @@ use dockerssd::fabric::{Endpoint, Fabric, LinkClass};
 use dockerssd::firmware::VirtualFw;
 use dockerssd::lambdafs::{LambdaFs, LockSide};
 use dockerssd::layerstore::{FetchSource, LayerStore, PoolLayerCache};
+use dockerssd::llm::{all_llms, Parallelism};
+use dockerssd::llm::disagg::{pool_step_time, step_traffic};
 use dockerssd::metrics::{names, Counters};
 use dockerssd::nvme::{NvmeController, NvmeSubsystem, PcieFunction, QueuePair};
 use dockerssd::pool::{DeploymentSpec, Orchestrator, PoolTopology, RestartPolicy};
+use dockerssd::sim::PoolSim;
 use dockerssd::ssd::SsdDevice;
-use dockerssd::util::SimTime;
+use dockerssd::util::{Rng, SimTime};
 
-fn rig() -> (MiniDocker, VirtualFw, LambdaFs, SsdDevice, Registry) {
+fn rig() -> (MiniDocker, VirtualFw, LambdaFs, SsdDevice, Registry, Fabric) {
     let cfg = SystemConfig::default();
     let dev = SsdDevice::new(cfg.ssd.clone());
     let fs = LambdaFs::over_device(&dev);
     let fw = VirtualFw::new(&cfg.ssd);
-    (MiniDocker::new(), fw, fs, dev, Registry::with_benchmark_images())
+    let fabric = Fabric::of(&cfg);
+    (MiniDocker::new(), fw, fs, dev, Registry::with_benchmark_images(), fabric)
 }
 
 #[test]
 fn docker_lifecycle_over_simulated_ssd() {
-    let (mut md, mut fw, mut fs, mut dev, reg) = rig();
+    let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = rig();
     // pull every benchmark image, run one container each
     for img in ["embed", "mariadb", "rocksdb", "pattern", "nginx", "vsftpd"] {
-        md.pull(&mut fw, &mut fs, &mut dev, &reg, SimTime::ZERO, img).unwrap();
+        md.pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab, 0, SimTime::ZERO, img).unwrap();
         let id = md.run(&mut fw, &mut fs, &mut dev, SimTime::ZERO, img).unwrap().output;
         md.log_line(&mut fs, &mut dev, SimTime::ZERO, &id, "ready").unwrap();
     }
@@ -52,8 +57,8 @@ fn docker_lifecycle_over_simulated_ssd() {
 
 #[test]
 fn isp_processing_respects_inode_locks_end_to_end() {
-    let (mut md, mut fw, mut fs, mut dev, reg) = rig();
-    md.pull(&mut fw, &mut fs, &mut dev, &reg, SimTime::ZERO, "pattern").unwrap();
+    let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = rig();
+    md.pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab, 0, SimTime::ZERO, "pattern").unwrap();
     let id = md.run(&mut fw, &mut fs, &mut dev, SimTime::ZERO, "pattern").unwrap().output;
 
     // host stages data
@@ -83,8 +88,8 @@ fn isp_processing_respects_inode_locks_end_to_end() {
 #[test]
 fn docker_cli_over_etheron_tcp_http() {
     // host docker-cli -> TCP over Ether-oN -> mini-docker HTTP parse
-    let (mut md, mut fw, mut fs, mut dev, reg) = rig();
-    md.pull(&mut fw, &mut fs, &mut dev, &reg, SimTime::ZERO, "nginx").unwrap();
+    let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = rig();
+    md.pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab, 0, SimTime::ZERO, "nginx").unwrap();
 
     let mut host = TcpStack::new();
     fw.tcp().listen(2375);
@@ -405,4 +410,130 @@ fn fabric_contention_replica_boot_storm() {
     let mut c2 = Counters::new();
     disjoint_fabric.export_counters(&mut c2);
     assert_eq!(c2.get(names::FABRIC_QUEUE_WAIT_NS), 0, "disjoint links never queue");
+}
+
+/// ISSUE 3 acceptance, part 1: `coordinator::serve` is a deterministic
+/// simulated-time loop — a serve storm run twice with the same seed
+/// produces byte-identical `serve.*` and `fabric.*` counters and
+/// identical per-request simulated latencies.
+#[test]
+fn serve_storm_same_seed_is_byte_identical() {
+    let storm = |seed: u64| {
+        let mut sim = PoolSim::with_pool(
+            &dockerssd::config::PoolConfig {
+                nodes_per_array: 4,
+                arrays: 1,
+                ..Default::default()
+            },
+            &dockerssd::config::EtherOnConfig::default(),
+        );
+        let mut rng = Rng::new(seed);
+        let requests: Vec<(SimTime, InferenceRequest)> = (0..32u64)
+            .map(|id| {
+                (
+                    SimTime::us(rng.below(2_000)),
+                    InferenceRequest {
+                        id,
+                        prompt: vec![(rng.next_u64() & 0x7FFF) as i32; 8],
+                        max_new_tokens: 1 + rng.below(4) as usize,
+                    },
+                )
+            })
+            .collect();
+        let factories: Vec<_> = (0..4)
+            .map(|_| || Ok::<_, anyhow::Error>(EchoExecutor))
+            .collect();
+        let params = ServeParams {
+            batch_width: 4,
+            prompt_len: 8,
+            batch_window: SimTime::us(150),
+            ..Default::default()
+        };
+        let report = serve(&mut sim, factories, requests, &params);
+        let mut c = Counters::new();
+        report.export_counters(&mut c);
+        sim.export_counters(&mut c);
+        let lats: Vec<(u64, SimTime)> =
+            report.responses.iter().map(|r| (r.id, r.latency)).collect();
+        (c, lats)
+    };
+    let (c1, l1) = storm(42);
+    let (c2, l2) = storm(42);
+    assert_eq!(c1, c2, "serve.* and fabric.* counters must be byte-identical");
+    assert_eq!(l1, l2, "per-request simulated latencies must be identical");
+    assert_eq!(c1.get(names::SERVE_RESPONSES), 32, "every request served");
+    assert!(c1.get(names::SERVE_BATCHES) >= 8, "storm formed real batches");
+    assert!(
+        c1.get(names::FABRIC_BYTES_HOST_UPLINK) > 0,
+        "dispatch/response traffic is visible to fabric.* counters"
+    );
+    assert!(c1.get(names::SERVE_MAKESPAN_NS) > 0);
+}
+
+/// ISSUE 3 acceptance, part 2: concurrent docker pulls and LLM
+/// collective steps contend on a shared link — the combined makespan
+/// exceeds the larger of either running alone, because both now price
+/// their bytes on the one pool fabric.
+#[test]
+fn docker_pull_and_llm_step_contend_on_shared_link() {
+    let cfg = SystemConfig::default(); // 16 nodes, one array
+    let llm = all_llms().remove(0);
+    let par = Parallelism { dp: 1, tp: 8, pp: 1 };
+    let traffic = step_traffic(&llm, par, 32_768, 1, true, false); // ring on nodes 0..7
+
+    let node_stack = || {
+        let dev = SsdDevice::new(cfg.ssd.clone());
+        let fs = LambdaFs::over_device(&dev);
+        (MiniDocker::new(), VirtualFw::new(&cfg.ssd), fs, dev)
+    };
+    let reg = Registry::with_benchmark_images();
+    let image_bytes: u64 = reg
+        .fetch("mariadb")
+        .unwrap()
+        .1
+        .iter()
+        .map(|b| b.bytes.len() as u64)
+        .sum();
+
+    // pull alone on an idle fabric
+    let mut fa = Fabric::of(&cfg);
+    let (mut md, mut fw, mut fs, mut dev) = node_stack();
+    let pull_alone = md
+        .pull(&mut fw, &mut fs, &mut dev, &reg, &mut fa, 0, SimTime::ZERO, "mariadb")
+        .unwrap()
+        .done;
+
+    // collective step alone on an idle fabric
+    let mut fb = Fabric::of(&cfg);
+    let step_alone = pool_step_time(&mut fb, SimTime::ZERO, &traffic);
+
+    // combined on ONE fabric: the step occupies the array backplane,
+    // the pull (same instant, node 0 on that array) queues behind it
+    let mut fc = Fabric::of(&cfg);
+    let step_combined = pool_step_time(&mut fc, SimTime::ZERO, &traffic);
+    let (mut md2, mut fw2, mut fs2, mut dev2) = node_stack();
+    let pull_combined = md2
+        .pull(&mut fw2, &mut fs2, &mut dev2, &reg, &mut fc, 0, SimTime::ZERO, "mariadb")
+        .unwrap()
+        .done;
+    let combined = step_combined.max(pull_combined);
+
+    assert_eq!(step_combined, step_alone, "the step was issued first and is undisturbed");
+    assert!(
+        pull_combined > pull_alone,
+        "the pull must queue behind the collective: {pull_combined} !> {pull_alone}"
+    );
+    assert!(
+        combined > pull_alone.max(step_alone),
+        "combined {combined} must exceed max(pull alone {pull_alone}, step alone {step_alone})"
+    );
+
+    // and the pull's registry bytes are no longer invisible to fabric.*
+    let mut c = Counters::new();
+    fc.export_counters(&mut c);
+    assert_eq!(
+        c.get(names::FABRIC_BYTES_WAN),
+        image_bytes,
+        "the whole mariadb image crossed the WAN"
+    );
 }

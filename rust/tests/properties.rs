@@ -177,16 +177,19 @@ fn prop_batcher_conservation() {
     for _ in 0..CASES {
         let width = 1 + rng.below(8) as usize;
         let n = rng.below(50);
-        let mut b = Batcher::new(width, 16, std::time::Duration::ZERO);
+        let mut b = Batcher::new(width, 16, SimTime::ZERO);
         for id in 0..n {
-            b.push(InferenceRequest {
-                id,
-                prompt: vec![1; rng.below(40) as usize],
-                max_new_tokens: 1 + rng.below(8) as usize,
-            });
+            b.push(
+                InferenceRequest {
+                    id,
+                    prompt: vec![1; rng.below(40) as usize],
+                    max_new_tokens: 1 + rng.below(8) as usize,
+                },
+                SimTime::ns(id),
+            );
         }
         let mut seen = Vec::new();
-        while let Some(batch) = b.form(true) {
+        while let Some(batch) = b.form(SimTime::ns(n), true) {
             assert!(batch.live <= width);
             assert_eq!(batch.prompts.len(), width);
             for p in &batch.prompts {
@@ -451,6 +454,127 @@ fn prop_fabric_receipts_causal_and_conserving() {
         }
         let q = fabric.link(LinkClass::Array(0)).unwrap();
         assert_eq!(q.bytes, offered, "case {case}: all bytes serialized on the backplane");
+    }
+}
+
+/// Event-driven re-timing (ISSUE 3): a background transfer preempted by
+/// later-arriving foreground traffic never completes *earlier* than the
+/// old optimistic busy-until receipt would have claimed, and strictly
+/// later whenever the foreground burst actually cut in before the
+/// optimistic finish.
+#[test]
+fn prop_retimed_background_never_beats_optimistic_receipt() {
+    use dockerssd::config::{EtherOnConfig, PoolConfig};
+    use dockerssd::fabric::{Endpoint, Fabric, LinkClass, Priority};
+
+    let mut rng = Rng::new(79);
+    for case in 0..100u64 {
+        let cfg = PoolConfig {
+            nodes_per_array: 4,
+            arrays: 1,
+            ..Default::default()
+        };
+        let mut fabric = Fabric::new(&cfg, &EtherOnConfig::default());
+        let bytes = rng.below(32 << 20) + 4096;
+        // what the sync path would have promised on the idle wire
+        let optimistic = fabric.estimate(Endpoint::Node(0), Endpoint::Node(1), bytes);
+        let bg = fabric.schedule(
+            SimTime::ZERO,
+            Endpoint::Node(0),
+            Endpoint::Node(1),
+            bytes,
+            Priority::Background,
+        );
+        // foreground traffic lands later on the same backplane
+        let mut t = SimTime::ZERO;
+        let mut first_fg = None;
+        for _ in 0..(1 + rng.below(3)) {
+            t += SimTime::ns(rng.below(10_000_000));
+            first_fg.get_or_insert(t);
+            fabric.schedule(
+                t,
+                Endpoint::Node(2),
+                Endpoint::Node(3),
+                rng.below(8 << 20) + 1,
+                Priority::Foreground,
+            );
+        }
+        fabric.run_to_idle();
+        let r = fabric.receipt_of(bg).expect("engine drained");
+        assert!(
+            r.finish >= optimistic,
+            "case {case}: re-timed finish {} beat the optimistic receipt {optimistic}",
+            r.finish
+        );
+        let quantum = fabric.link(LinkClass::Array(0)).unwrap().frame_quantum(1500);
+        // strictness only when the quantum cut lands before the wire
+        // release (optimistic minus the switch-hop tail)
+        let wire_release = optimistic.saturating_sub(SimTime::ns(300));
+        if first_fg.expect("at least one fg") + quantum < wire_release {
+            assert!(
+                r.finish > optimistic,
+                "case {case}: a mid-flight preemption must push the finish out"
+            );
+            assert!(fabric.stats.retimed_transfers >= 1, "case {case}");
+        }
+    }
+}
+
+/// Serve determinism (ISSUE 3): two serve storms with the same seed
+/// produce identical simulated latencies and byte-identical
+/// `serve.*`/`fabric.*`/`sim.*` counters.
+#[test]
+fn prop_serve_same_seed_same_schedule() {
+    use dockerssd::config::{EtherOnConfig, PoolConfig};
+    use dockerssd::coordinator::{serve, EchoExecutor, ServeParams};
+    use dockerssd::metrics::Counters;
+    use dockerssd::sim::PoolSim;
+
+    for seed in [1u64, 7, 42] {
+        let run = |seed: u64| {
+            let mut sim = PoolSim::with_pool(
+                &PoolConfig {
+                    nodes_per_array: 4,
+                    arrays: 1,
+                    ..Default::default()
+                },
+                &EtherOnConfig::default(),
+            );
+            let mut rng = Rng::new(seed);
+            let requests: Vec<_> = (0..24u64)
+                .map(|id| {
+                    (
+                        SimTime::us(rng.below(3_000)),
+                        InferenceRequest {
+                            id,
+                            prompt: vec![rng.next_u64() as i32 & 0x7FFF; 8],
+                            max_new_tokens: 1 + rng.below(4) as usize,
+                        },
+                    )
+                })
+                .collect();
+            let factories: Vec<_> = (0..3)
+                .map(|_| || Ok::<_, anyhow::Error>(EchoExecutor))
+                .collect();
+            let params = ServeParams {
+                batch_width: 4,
+                prompt_len: 8,
+                batch_window: SimTime::us(200),
+                ..Default::default()
+            };
+            let report = serve(&mut sim, factories, requests, &params);
+            let mut c = Counters::new();
+            report.export_counters(&mut c);
+            sim.export_counters(&mut c);
+            let lats: Vec<(u64, SimTime)> =
+                report.responses.iter().map(|r| (r.id, r.latency)).collect();
+            (c, lats)
+        };
+        let (c1, l1) = run(seed);
+        let (c2, l2) = run(seed);
+        assert_eq!(c1, c2, "seed {seed}: counters diverged");
+        assert_eq!(l1, l2, "seed {seed}: latencies diverged");
+        assert_eq!(l1.len(), 24, "seed {seed}: all requests served");
     }
 }
 
