@@ -1,0 +1,47 @@
+#!/usr/bin/env bash
+# CI smoke: replay one I/O-heavy Table 2 row through the serve loop
+# (EchoExecutor, PoolSim clock) while a boot storm runs on the same
+# clock, and gate on the deterministic `serve.*` / `fabric.*` / `sim.*`
+# counters:
+#
+#   1. determinism — two same-seed runs must emit byte-identical
+#      counter lines (always enforced);
+#   2. golden — the counters must match the committed
+#      ci/golden/serve_smoke.txt byte-for-byte.  If no golden is
+#      committed yet, the fresh counters are printed for seeding (the
+#      workflow also uploads them as an artifact) and only gate 1
+#      applies, mirroring benchdiff's "new bench — not compared" rule.
+#
+# Refresh the golden after an intentional scheduling change by copying
+# the uploaded artifact (or the block printed below) over
+# ci/golden/serve_smoke.txt.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+golden=ci/golden/serve_smoke.txt
+out=${SMOKE_OUT:-/tmp/serve_smoke}
+mkdir -p "$out"
+
+run() {
+  cargo run --release --bin repro -- serve \
+    --workload nginx-filedown --nodes 4 --scale 2000 --seed 42 --boot-storm 2 \
+    | grep -E '^(serve|fabric|sim)\.'
+}
+
+run > "$out/counters_a.txt"
+run > "$out/counters_b.txt"
+
+echo "== gate 1: same-seed determinism =="
+diff -u "$out/counters_a.txt" "$out/counters_b.txt"
+echo "ok: two same-seed replays are byte-identical"
+
+echo "== gate 2: committed golden =="
+if [ -f "$golden" ]; then
+  diff -u "$golden" "$out/counters_a.txt"
+  echo "ok: counters match $golden"
+else
+  echo "no committed golden at $golden — seed it with these counters:"
+  echo "----------------------------------------------------------------"
+  cat "$out/counters_a.txt"
+  echo "----------------------------------------------------------------"
+fi

@@ -1,0 +1,174 @@
+//! Trace-driven serving on PoolSim: replay Table 2 rows through
+//! `coordinator::serve`, alone and while a replica boot storm runs on
+//! the same clock.
+//!
+//! Emits machine-readable `BENCH_serve.json` ({name, metric, value})
+//! records so perf is tracked across PRs.  Two record families:
+//!
+//! * invariant metrics the committed baselines gate now —
+//!   `served_fraction` (conservation: every request answered),
+//!   `same_seed_identical` (two same-seed replays byte-identical), and
+//!   `storm_visible` (a boot storm inflates serve p99) are 1.0 by
+//!   construction and regress to 0.x only when the property breaks;
+//! * simulation-shape metrics (`makespan_ms`, `latency_p99_ns`,
+//!   `queue_wait_ms`) — deterministic and machine-independent, reported
+//!   as new benches until committed to `bench_baselines/`.
+
+use dockerssd::benchkit::{bench, emit_json, section, BenchRecord};
+use dockerssd::config::{EtherOnConfig, PoolConfig};
+use dockerssd::coordinator::{serve, EchoExecutor, ServeParams, ServeReport};
+use dockerssd::layerstore::PoolLayerCache;
+use dockerssd::metrics::{names, Counters, Table};
+use dockerssd::pool::{DeploymentSpec, Orchestrator, PoolTopology, RestartPolicy};
+use dockerssd::sim::PoolSim;
+use dockerssd::util::SimTime;
+use dockerssd::workloads::{trace_arrivals, workload_named, ArrivalParams};
+
+const ROWS: [&str; 3] = ["mariadb-tpch4", "nginx-filedown", "rocksdb-write"];
+
+fn pool_cfg() -> PoolConfig {
+    PoolConfig {
+        nodes_per_array: 8,
+        arrays: 1,
+        ..Default::default()
+    }
+}
+
+/// One replay: `row`'s trace through `nodes` EchoExecutor nodes, with an
+/// optional `storm`-replica boot storm sharing the clock.
+fn replay(row: &str, seed: u64, scale: u64, nodes: usize, storm: u32) -> (ServeReport, Counters) {
+    let pcfg = pool_cfg();
+    let mut sim = PoolSim::with_pool(&pcfg, &EtherOnConfig::default());
+    let spec = workload_named(row).expect("a Table 2 row");
+    let ap = ArrivalParams { scale, ..Default::default() };
+    let arr = trace_arrivals(&spec, seed, &ap);
+    if storm > 0 {
+        let topo = PoolTopology::build(&pcfg);
+        let mut orch = Orchestrator::new();
+        let mut cache = PoolLayerCache::new();
+        let layers: Vec<(u64, u64)> = (0..4u64).map(|i| (0xB007 + i, 24 << 20)).collect();
+        orch.boot_storm_sim(
+            &mut sim,
+            &topo,
+            &DeploymentSpec {
+                name: "storm".into(),
+                image: "llm-worker".into(),
+                replicas: storm,
+                restart: RestartPolicy::OnFailure,
+            },
+            &mut cache,
+            &layers,
+        )
+        .expect("storm placement");
+    }
+    let factories: Vec<_> = (0..nodes)
+        .map(|_| || Ok::<_, anyhow::Error>(EchoExecutor))
+        .collect();
+    let params = ServeParams {
+        batch_width: 4,
+        // full write payloads stay in the prompt (no clipping)
+        prompt_len: ap.engine_prompt_len(),
+        batch_window: SimTime::us(200),
+        ..Default::default()
+    };
+    let report = serve(&mut sim, factories, arr.requests, &params);
+    let mut c = Counters::new();
+    report.export_counters(&mut c);
+    sim.export_counters(&mut c);
+    (report, c)
+}
+
+fn fingerprint(report: &ServeReport, c: &Counters) -> (Vec<(&'static str, u64)>, Vec<(u64, u64)>) {
+    (
+        c.iter().collect(),
+        report.responses.iter().map(|r| (r.id, r.latency.as_ns())).collect(),
+    )
+}
+
+fn trace_replays(records: &mut Vec<BenchRecord>) {
+    section("trace replay: Table 2 rows through the serve loop");
+    let mut table = Table::new(vec![
+        "row", "requests", "batches", "makespan", "p99", "host_uplink_bytes",
+    ]);
+    for row in ROWS {
+        let (r1, c1) = replay(row, 42, 5_000, 4, 0);
+        let (r2, c2) = replay(row, 42, 5_000, 4, 0);
+        let identical = fingerprint(&r1, &c1) == fingerprint(&r2, &c2);
+        assert!(identical, "{row}: same-seed replays diverged");
+        let served = r1.responses.len() as f64 / r1.requests.max(1) as f64;
+        assert!((served - 1.0).abs() < 1e-9, "{row}: dropped requests");
+        table.row(vec![
+            row.to_string(),
+            format!("{}", r1.requests),
+            format!("{}", r1.batches),
+            format!("{}", r1.makespan),
+            format!("{}", r1.latency.quantile(0.99)),
+            format!("{}", c1.get(names::FABRIC_BYTES_HOST_UPLINK)),
+        ]);
+        let name = format!("trace_replay_{row}");
+        records.push(BenchRecord::new(name.clone(), "served_fraction", served));
+        records.push(BenchRecord::new(
+            name.clone(),
+            "same_seed_identical",
+            if identical { 1.0 } else { 0.0 },
+        ));
+        records.push(BenchRecord::new(name.clone(), "makespan_ms", r1.makespan.as_ms_f64()));
+        records.push(BenchRecord::new(
+            name,
+            "latency_p99_ns",
+            r1.latency.quantile(0.99).as_ns() as f64,
+        ));
+    }
+    println!("{}", table.render());
+}
+
+fn boot_storm_interference(records: &mut Vec<BenchRecord>) {
+    section("serve-while-deploy: boot storm vs quiet pool");
+    let row = "nginx-filedown";
+    let (quiet, cq) = replay(row, 42, 2_000, 4, 0);
+    let (stormy, cs) = replay(row, 42, 2_000, 4, 2);
+    let p99_q = quiet.latency.quantile(0.99);
+    let p99_s = stormy.latency.quantile(0.99);
+    let inflation = p99_s.as_ns() as f64 / p99_q.as_ns().max(1) as f64;
+    let wait_q = cq.get(names::FABRIC_QUEUE_WAIT_NS);
+    let wait_s = cs.get(names::FABRIC_QUEUE_WAIT_NS);
+    println!(
+        "quiet p99 {p99_q}, under a 2-replica boot storm {p99_s} ({inflation:.2}x); \
+         fabric queue wait {} -> {}",
+        SimTime::ns(wait_q),
+        SimTime::ns(wait_s)
+    );
+    assert!(p99_s > p99_q, "a boot storm must visibly inflate serve p99");
+    assert!(wait_s > wait_q, "storm contention must be visible in queue wait");
+    records.push(BenchRecord::new(
+        "boot_storm_serve",
+        "storm_visible",
+        if p99_s > p99_q { 1.0 } else { 0.0 },
+    ));
+    records.push(BenchRecord::new("boot_storm_serve", "p99_inflation", inflation));
+    records.push(BenchRecord::new(
+        "boot_storm_serve",
+        "queue_wait_ms",
+        SimTime::ns(wait_s).as_ms_f64(),
+    ));
+}
+
+fn main() {
+    let mut records = Vec::new();
+    trace_replays(&mut records);
+    boot_storm_interference(&mut records);
+
+    section("hot path: trace arrivals generation");
+    let spec = workload_named("mariadb-tpch4").expect("row");
+    let r = bench("trace_arrivals_tpch4_scale5000", || {
+        let arr = trace_arrivals(&spec, 42, &ArrivalParams { scale: 5_000, ..Default::default() });
+        std::hint::black_box(arr.requests.len());
+    });
+    records.push(BenchRecord::new(
+        "trace_arrivals_tpch4_scale5000",
+        "ns_per_op",
+        r.mean.as_nanos() as f64,
+    ));
+
+    emit_json("BENCH_serve.json", &records).expect("write BENCH_serve.json");
+}

@@ -192,6 +192,17 @@ pub struct ServeConfig {
     pub token_compute_us: u64,
     /// Per-node KV capacity in MiB; 0 means unbounded.
     pub kv_capacity_mib: u64,
+    /// Table 2 row to replay as the arrival process (e.g.
+    /// "mariadb-tpch4"); empty means a uniform-random storm.
+    pub workload: String,
+    /// Trace scale factor for `workload` replays (ops = counts / scale).
+    pub trace_scale: u64,
+    /// Replicas to boot on the shared clock while serving; 0 disables
+    /// the serve-while-deploy experiment.
+    pub boot_storm: u32,
+    /// LLM whose geometry sizes per-token KV (an `llm::all_llms` name);
+    /// empty means the default synthetic per-token footprint.
+    pub kv_model: String,
     /// Echo generated tokens to stdout.
     pub verbose: bool,
 }
@@ -208,6 +219,10 @@ impl Default for ServeConfig {
             prefill_compute_us: 500,
             token_compute_us: 50,
             kv_capacity_mib: 0,
+            workload: String::new(),
+            trace_scale: 10_000,
+            boot_storm: 0,
+            kv_model: String::new(),
             verbose: true,
         }
     }
@@ -311,6 +326,10 @@ impl SystemConfig {
             get_field!(s, cfg.serve, prefill_compute_us, u64);
             get_field!(s, cfg.serve, token_compute_us, u64);
             get_field!(s, cfg.serve, kv_capacity_mib, u64);
+            get_field!(s, cfg.serve, workload, String);
+            get_field!(s, cfg.serve, trace_scale, u64);
+            get_field!(s, cfg.serve, boot_storm, u32);
+            get_field!(s, cfg.serve, kv_model, String);
             get_field!(s, cfg.serve, verbose, bool);
         }
         Ok(cfg)
@@ -392,6 +411,10 @@ impl SystemConfig {
                     ),
                     ("token_compute_us", Json::Int(self.serve.token_compute_us as i64)),
                     ("kv_capacity_mib", Json::Int(self.serve.kv_capacity_mib as i64)),
+                    ("workload", Json::str(self.serve.workload.clone())),
+                    ("trace_scale", Json::Int(self.serve.trace_scale as i64)),
+                    ("boot_storm", Json::Int(self.serve.boot_storm as i64)),
+                    ("kv_model", Json::str(self.serve.kv_model.clone())),
                     ("verbose", Json::Bool(self.serve.verbose)),
                 ]),
             ),
@@ -452,5 +475,21 @@ mod tests {
         assert_eq!(c.serve.token_compute_us, 75);
         assert_eq!(c.serve.kv_capacity_mib, 256);
         assert_eq!(c.serve.prompt_len, 32, "untouched fields keep defaults");
+    }
+
+    #[test]
+    fn serve_config_trace_fields_load() {
+        let c = SystemConfig::from_json_str(
+            r#"{"serve": {"workload": "nginx-filedown", "trace_scale": 2000,
+                          "boot_storm": 4, "kv_model": "lamda-137B"}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.serve.workload, "nginx-filedown");
+        assert_eq!(c.serve.trace_scale, 2000);
+        assert_eq!(c.serve.boot_storm, 4);
+        assert_eq!(c.serve.kv_model, "lamda-137B");
+        let d = SystemConfig::default();
+        assert!(d.serve.workload.is_empty(), "default is the uniform storm");
+        assert_eq!(d.serve.boot_storm, 0);
     }
 }

@@ -23,6 +23,20 @@ pub struct Batch {
     pub max_new_tokens: usize,
 }
 
+impl Batch {
+    /// KV-context tokens the live rows pin on a node: each request's
+    /// clipped prompt plus its *own* generation budget (padding rows
+    /// write no KV, and a short request never pays for the batch-wide
+    /// `max_new_tokens`).  Multiplied by a model's per-token KV bytes
+    /// this is the batch's per-request-sized KV reservation.
+    pub fn kv_tokens(&self, prompt_cap: usize) -> u64 {
+        self.requests
+            .iter()
+            .map(|r| (r.prompt.len().min(prompt_cap) + r.max_new_tokens) as u64)
+            .sum()
+    }
+}
+
 /// The batching queue.
 pub struct Batcher {
     width: usize,
@@ -174,6 +188,16 @@ mod tests {
         seen.sort();
         assert_eq!(seen, (0..10).collect::<Vec<u64>>());
         assert_eq!(b.batches_formed, 3);
+    }
+
+    #[test]
+    fn kv_tokens_count_live_rows_per_request() {
+        let mut b = Batcher::new(4, 8, SimTime::ZERO);
+        b.push(req(1, 3), SimTime::ZERO); // 3 prompt + 4 new
+        b.push(req(2, 20), SimTime::ZERO); // clipped to 8 + 4 new
+        let batch = b.form(SimTime::ZERO, true).unwrap();
+        assert_eq!(batch.kv_tokens(8), (3 + 4) + (8 + 4));
+        assert_eq!(batch.prompts.len(), 4, "padding rows exist but pin no KV");
     }
 
     #[test]

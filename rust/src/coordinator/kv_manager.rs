@@ -35,11 +35,28 @@ impl KvManager {
         (n_layers * batch * n_heads * max_seq * head_dim * 2 * bytes_per_elem) as u64
     }
 
+    /// KV bytes one token of context pins for a model geometry: a K and
+    /// a V vector of `d_model` elements per layer.  A request's resident
+    /// KV is this times its (clipped prompt + generation budget) tokens
+    /// — the per-request sizing `coordinator::serve` reserves with,
+    /// consistent with [`crate::llm::LlmConfig::kv_bytes`] at seq 1.
+    pub fn kv_bytes_per_token(n_layers: u64, d_model: u64, bytes_per_elem: u64) -> u64 {
+        n_layers * 2 * d_model * bytes_per_elem
+    }
+
     /// Whether `node` has headroom for `bytes` more of resident KV.
     pub fn fits(&self, node: u32, bytes: u64) -> bool {
         self.used[node as usize]
             .checked_add(bytes)
             .is_some_and(|u| u <= self.capacity)
+    }
+
+    /// Whether `bytes` could fit on a completely empty node — the
+    /// feasibility bound eviction policies check before sacrificing
+    /// resident sessions for a reservation no amount of evicting can
+    /// satisfy.
+    pub fn fits_empty(&self, bytes: u64) -> bool {
+        bytes <= self.capacity
     }
 
     /// Try to reserve `bytes` on `node`.
@@ -122,6 +139,19 @@ mod tests {
     }
 
     #[test]
+    fn kv_bytes_per_token_matches_model_geometry() {
+        // lamda-137B at f16: 64 layers x 2 x 8192 x 2B
+        let per_token = KvManager::kv_bytes_per_token(64, 8192, 2);
+        assert_eq!(per_token, 64 * 2 * 8192 * 2);
+        let llm = crate::llm::all_llms().remove(0);
+        assert_eq!(
+            per_token as f64,
+            llm.kv_bytes(1, 1, 2.0),
+            "per-token sizing agrees with the analytic LLM KV model"
+        );
+    }
+
+    #[test]
     fn reserve_until_capacity() {
         let mut kv = KvManager::new(2, 1000);
         assert!(kv.fits(0, 600));
@@ -134,6 +164,10 @@ mod tests {
         // unbounded capacity never overflows the headroom check
         let kv = KvManager::new(1, u64::MAX);
         assert!(kv.fits(0, u64::MAX));
+        // feasibility bound: what an empty node could ever hold
+        let kv = KvManager::new(1, 1000);
+        assert!(kv.fits_empty(1000));
+        assert!(!kv.fits_empty(1001));
     }
 
     #[test]

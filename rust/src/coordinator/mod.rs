@@ -11,6 +11,11 @@
 //! Two runs with the same seed produce byte-identical `serve.*` and
 //! `fabric.*` counters, and serving traffic contends with docker pulls,
 //! layer prefetch, and LLM collectives on the same wires.
+//!
+//! Since ISSUE 4 the arrival process can be a Table 2 trace replay
+//! (`workloads::arrivals`: per-request prompt/output shapes at the
+//! row's measured I/O rate) and KV is sized per request from the model
+//! config ([`ServeParams::kv_need`]) instead of per batch.
 
 pub mod batcher;
 pub mod kv_manager;

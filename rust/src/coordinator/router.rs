@@ -15,6 +15,9 @@ use crate::util::SimTime;
 pub struct Router {
     outstanding: Vec<u64>,
     dispatched: Vec<u64>,
+    /// Prompt + response bytes this router charged to the fabric, per
+    /// node — the per-node wire-traffic split the serve report exposes.
+    wire_bytes: Vec<u64>,
     /// Rotating cursor so ties round-robin instead of piling on node 0.
     cursor: usize,
 }
@@ -25,6 +28,7 @@ impl Router {
         Router {
             outstanding: vec![0; nodes],
             dispatched: vec![0; nodes],
+            wire_bytes: vec![0; nodes],
             cursor: 0,
         }
     }
@@ -63,6 +67,7 @@ impl Router {
         prompt_bytes: u64,
     ) -> (u32, TransferReceipt) {
         let node = self.pick();
+        self.wire_bytes[node as usize] += prompt_bytes;
         let receipt = fabric.transfer(
             now,
             Endpoint::Host,
@@ -92,6 +97,7 @@ impl Router {
         prompt_bytes: u64,
     ) -> TransferReceipt {
         self.assign(node);
+        self.wire_bytes[node as usize] += prompt_bytes;
         fabric.transfer(
             now,
             Endpoint::Host,
@@ -117,6 +123,7 @@ impl Router {
         response_bytes: u64,
     ) -> TransferReceipt {
         self.complete(node);
+        self.wire_bytes[node as usize] += response_bytes;
         fabric.transfer(
             now,
             Endpoint::Node(node),
@@ -132,6 +139,11 @@ impl Router {
 
     pub fn dispatched_of(&self, node: u32) -> u64 {
         self.dispatched[node as usize]
+    }
+
+    /// Total dispatch + response bytes charged for `node`.
+    pub fn wire_bytes_of(&self, node: u32) -> u64 {
+        self.wire_bytes[node as usize]
     }
 }
 
@@ -188,6 +200,10 @@ mod tests {
         let rc = r.dispatch_to(&mut f, SimTime::ZERO, 1, 1 << 20);
         assert!(rc.finish > SimTime::ZERO, "dispatch pays the uplink");
         assert_eq!(r.outstanding_of(1), 1);
+        assert_eq!(r.wire_bytes_of(1), 1 << 20);
+        r.complete_costed(&mut f, rc.finish, 1, 1 << 10);
+        assert_eq!(r.wire_bytes_of(1), (1 << 20) + (1 << 10), "responses counted too");
+        assert_eq!(r.wire_bytes_of(0), 0);
     }
 
     #[test]

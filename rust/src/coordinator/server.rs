@@ -10,6 +10,11 @@
 //! [`crate::sim::BusyResource`] compute; a *done event* collects the
 //! generated tokens, charges the response bytes back over the fabric,
 //! and converts the batch's KV reservation into a resident *session*.
+//! KV is sized *per request* from the model config's per-token footprint
+//! ([`ServeParams::kv_need`]): a prompt-heavy row of a Table 2 trace
+//! (see `workloads::arrivals`) pins more resident KV than a short query,
+//! so capacity pressure tracks the request mix instead of a flat
+//! per-batch constant.
 //! Session KV migrates between nodes ([`KvManager::migrate`], real
 //! fabric traffic) when residency skews, and is evicted to admit new
 //! batches under capacity pressure — the Figure 12 capacity story.
@@ -84,9 +89,12 @@ pub struct ServeParams {
     /// Simulated window a partial batch waits before launching.
     pub batch_window: SimTime,
     pub kv_capacity_per_node: u64,
-    /// KV bytes one batch pins on its node (and leaves resident as a
-    /// session after completion).
-    pub kv_bytes_per_batch: u64,
+    /// KV bytes one token of context pins on a node, derived from the
+    /// model config ([`KvManager::kv_bytes_per_token`]).  A batch's
+    /// reservation is sized *per request*: the sum over its live rows of
+    /// (clipped prompt + that row's generation budget) tokens, times
+    /// this — not one flat per-batch figure.
+    pub kv_bytes_per_token: u64,
     /// Simulated prefill compute per batch.
     pub prefill_compute: SimTime,
     /// Simulated decode compute per generated token (batch-wide step).
@@ -102,7 +110,7 @@ impl Default for ServeParams {
             prompt_len: 32,
             batch_window: SimTime::us(2000),
             kv_capacity_per_node: u64::MAX,
-            kv_bytes_per_batch: 1 << 20,
+            kv_bytes_per_token: 4096,
             prefill_compute: SimTime::us(500),
             token_compute: SimTime::us(50),
             bytes_per_token: 4,
@@ -112,6 +120,20 @@ impl Default for ServeParams {
 
 impl ServeParams {
     pub fn from_config(c: &ServeConfig) -> Self {
+        let kv_bytes_per_token = if c.kv_model.is_empty() {
+            4096
+        } else {
+            match crate::llm::all_llms().into_iter().find(|m| m.name == c.kv_model) {
+                Some(m) => KvManager::kv_bytes_per_token(m.layers as u64, m.d_model as u64, 2),
+                None => {
+                    eprintln!(
+                        "unknown serve.kv_model {:?}; using the default per-token KV",
+                        c.kv_model
+                    );
+                    4096
+                }
+            }
+        };
         ServeParams {
             batch_width: c.batch_width.max(1) as usize,
             prompt_len: c.prompt_len.max(1) as usize,
@@ -121,11 +143,17 @@ impl ServeParams {
             } else {
                 c.kv_capacity_mib << 20
             },
-            kv_bytes_per_batch: 1 << 20,
+            kv_bytes_per_token,
             prefill_compute: SimTime::us(c.prefill_compute_us),
             token_compute: SimTime::us(c.token_compute_us),
             bytes_per_token: 4,
         }
+    }
+
+    /// Per-request-sized KV reservation for `batch` (at least 1 byte, so
+    /// capacity accounting always has something to conserve).
+    pub fn kv_need(&self, batch: &Batch) -> u64 {
+        (self.kv_bytes_per_token * batch.kv_tokens(self.prompt_len)).max(1)
     }
 }
 
@@ -140,10 +168,17 @@ pub struct ServeReport {
     pub padded_rows: u64,
     /// Total generated tokens across live rows.
     pub tokens_out: u64,
+    /// Live prompt tokens dispatched (clipped to the engine prompt
+    /// length; padding rows excluded).
+    pub prompt_tokens: u64,
+    /// KV bytes reserved across all batches, per-request sized.
+    pub kv_reserved_bytes: u64,
     pub failed_batches: u64,
     pub kv_migrations: u64,
     pub kv_evictions: u64,
     pub latency: LatencyHistogram,
+    /// Dispatch + response wire bytes per node, from the router.
+    pub node_wire_bytes: Vec<u64>,
 }
 
 impl ServeReport {
@@ -163,6 +198,8 @@ impl ServeReport {
         c.add(names::SERVE_BATCHES, self.batches);
         c.add(names::SERVE_PADDED_ROWS, self.padded_rows);
         c.add(names::SERVE_TOKENS_OUT, self.tokens_out);
+        c.add(names::SERVE_PROMPT_TOKENS, self.prompt_tokens);
+        c.add(names::SERVE_KV_RESERVED_BYTES, self.kv_reserved_bytes);
         c.add(names::SERVE_FAILED_BATCHES, self.failed_batches);
         c.add(names::SERVE_KV_MIGRATIONS, self.kv_migrations);
         c.add(names::SERVE_KV_EVICTIONS, self.kv_evictions);
@@ -180,6 +217,16 @@ struct InFlight {
     batch: Batch,
     node: u32,
     reserved: bool,
+    /// Per-request-sized KV bytes this batch reserved (and leaves
+    /// resident as a session).
+    kv_bytes: u64,
+}
+
+/// A completed batch whose KV stays resident on `node` until migrated
+/// or evicted — sized from its requests, not a flat per-batch figure.
+struct Session {
+    node: u32,
+    bytes: u64,
 }
 
 struct ServeLoop<'p, E> {
@@ -190,12 +237,14 @@ struct ServeLoop<'p, E> {
     exes: Vec<Option<E>>,
     inflight: Vec<Option<InFlight>>,
     blocked: VecDeque<Batch>,
-    /// Completed batches whose KV stays resident on a node (oldest first).
-    sessions: VecDeque<u32>,
+    /// Resident sessions, oldest first.
+    sessions: VecDeque<Session>,
     arrivals: BTreeMap<u64, SimTime>,
     responses: Vec<InferenceResponse>,
     latency: LatencyHistogram,
     tokens_out: u64,
+    prompt_tokens: u64,
+    kv_reserved_bytes: u64,
     failed_batches: u64,
     kv_migrations: u64,
     kv_evictions: u64,
@@ -226,7 +275,8 @@ impl<E: BatchExecutor> ServeLoop<'_, E> {
             }
         }
         // capacity valve: a pool that cannot fit even one batch anywhere
-        // (capacity < kv_bytes_per_batch) must still make progress
+        // (capacity below the batch's per-request KV need) must still
+        // make progress
         if !self.blocked.is_empty() && self.inflight.iter().all(|s| s.is_none()) {
             let batch = self.blocked.pop_front().expect("checked non-empty");
             let node = (0..self.nodes())
@@ -237,75 +287,96 @@ impl<E: BatchExecutor> ServeLoop<'_, E> {
     }
 
     fn try_dispatch(&mut self, sim: &mut PoolSim, now: SimTime, batch: Batch) -> Result<(), Batch> {
-        let per = self.params.kv_bytes_per_batch;
+        let need = self.params.kv_need(&batch);
         let n = self.nodes();
-        // KV-pressure rebalance: when residency skews by two batches or
-        // more, the oldest session on the fullest node migrates to the
-        // emptiest over the fabric before placement
+        // KV-pressure rebalance: when residency skews by two of this
+        // batch's reservations or more, the oldest migratable session on
+        // the fullest node moves to the emptiest over the fabric before
+        // placement
         let hi = (0..n).rev().max_by_key(|i| self.kv.used_of(*i)).expect("nodes > 0");
         let lo = (0..n).min_by_key(|i| self.kv.used_of(*i)).expect("nodes > 0");
-        if hi != lo
-            && self.kv.used_of(hi) >= self.kv.used_of(lo) + 2 * per
-            && self.kv.fits(lo, per)
-        {
-            if let Some(pos) = self.sessions.iter().position(|&s| s == hi) {
-                let _ = self.sessions.remove(pos);
-                if self.kv.migrate(&mut sim.fabric, now, hi, lo, per).is_some() {
-                    self.sessions.push_front(lo);
+        if hi != lo && self.kv.used_of(hi) >= self.kv.used_of(lo) + 2 * need {
+            if let Some(pos) = self
+                .sessions
+                .iter()
+                .position(|s| s.node == hi && self.kv.fits(lo, s.bytes))
+            {
+                let sess = self.sessions.remove(pos).expect("position is in range");
+                if self.kv.migrate(&mut sim.fabric, now, hi, lo, sess.bytes).is_some() {
+                    self.sessions.push_front(Session { node: lo, bytes: sess.bytes });
                     self.kv_migrations += 1;
                 }
             }
         }
         let pick = |kv: &KvManager, router: &Router| {
             (0..n)
-                .filter(|i| kv.fits(*i, per))
+                .filter(|i| kv.fits(*i, need))
                 .min_by_key(|i| (router.outstanding_of(*i), *i))
         };
-        let node = match pick(&self.kv, &self.router) {
-            Some(node) => node,
-            None => {
-                // a waiting batch outranks an idle session: evict the
-                // oldest resident session to make room
-                let Some(victim) = self.sessions.pop_front() else {
-                    return Err(batch);
-                };
-                self.kv.release(victim, per);
-                self.kv_evictions += 1;
-                match pick(&self.kv, &self.router) {
-                    Some(node) => node,
-                    None => return Err(batch),
-                }
+        // a waiting batch outranks idle sessions: evict oldest-first
+        // until the batch fits somewhere (sessions vary in size now, so
+        // one eviction is not always enough) — but never sacrifice
+        // resident sessions for a batch no amount of evicting can fit
+        // (the capacity valve in `pump` handles that case)
+        let node = loop {
+            if let Some(node) = pick(&self.kv, &self.router) {
+                break node;
             }
+            if !self.kv.fits_empty(need) {
+                return Err(batch);
+            }
+            let Some(victim) = self.sessions.pop_front() else {
+                return Err(batch);
+            };
+            self.kv.release(victim.node, victim.bytes);
+            self.kv_evictions += 1;
         };
         self.dispatch_on(sim, now, node, batch);
         Ok(())
     }
 
     fn dispatch_on(&mut self, sim: &mut PoolSim, now: SimTime, node: u32, batch: Batch) {
+        // the AOT batch shape is static, so padding rows cross the wire
+        // too; only live tokens count toward the prompt-token total
         let prompt_bytes =
             (batch.prompts.len() * self.params.prompt_len) as u64 * self.params.bytes_per_token;
+        self.prompt_tokens += batch
+            .requests
+            .iter()
+            .map(|r| r.prompt.len().min(self.params.prompt_len) as u64)
+            .sum::<u64>();
         let receipt = self
             .router
             .dispatch_to(&mut sim.fabric, now, node, prompt_bytes.max(1));
-        let reserved = self.kv.reserve(node, self.params.kv_bytes_per_batch);
+        let kv_bytes = self.params.kv_need(&batch);
+        let reserved = self.kv.reserve(node, kv_bytes);
+        if reserved {
+            self.kv_reserved_bytes += kv_bytes;
+        }
         let compute = self.params.prefill_compute
             + SimTime::ns(self.params.token_compute.as_ns() * batch.max_new_tokens as u64);
         let done_at = sim.compute_mut(node).occupy(receipt.finish, compute);
         let slot = self.inflight.len();
-        self.inflight.push(Some(InFlight { batch, node, reserved }));
+        self.inflight.push(Some(InFlight { batch, node, reserved, kv_bytes }));
         sim.queue.schedule_at(done_at, tag(EV_DONE, slot as u64));
         self.end = self.end.max(done_at);
     }
 
     fn on_done(&mut self, sim: &mut PoolSim, now: SimTime, slot: usize) {
-        let InFlight { batch, node, reserved } =
+        let InFlight { batch, node, reserved, kv_bytes } =
             self.inflight[slot].take().expect("each done event fires once");
         let result = match self.exes[node as usize].as_mut() {
             Some(exe) => exe.run_batch(&batch.prompts, batch.max_new_tokens),
             None => Err(anyhow::anyhow!("engine unavailable")),
         };
-        let resp_bytes =
-            (batch.live * batch.max_new_tokens) as u64 * self.params.bytes_per_token;
+        // each live row ships its own generation budget back, not the
+        // batch-wide maximum
+        let resp_bytes = batch
+            .requests
+            .iter()
+            .map(|r| r.max_new_tokens as u64)
+            .sum::<u64>()
+            * self.params.bytes_per_token;
         let receipt =
             self.router
                 .complete_costed(&mut sim.fabric, now, node, resp_bytes.max(1));
@@ -313,7 +384,7 @@ impl<E: BatchExecutor> ServeLoop<'_, E> {
         if reserved {
             // the batch's KV stays resident as a session until migrated
             // or evicted
-            self.sessions.push_back(node);
+            self.sessions.push_back(Session { node, bytes: kv_bytes });
         }
         match result {
             Ok(rows) => {
@@ -392,6 +463,8 @@ where
         responses: Vec::new(),
         latency: LatencyHistogram::new(),
         tokens_out: 0,
+        prompt_tokens: 0,
+        kv_reserved_bytes: 0,
         failed_batches: 0,
         kv_migrations: 0,
         kv_evictions: 0,
@@ -429,10 +502,13 @@ where
         batches: lp.batcher.batches_formed,
         padded_rows: lp.batcher.padded_rows,
         tokens_out: lp.tokens_out,
+        prompt_tokens: lp.prompt_tokens,
+        kv_reserved_bytes: lp.kv_reserved_bytes,
         failed_batches: lp.failed_batches,
         kv_migrations: lp.kv_migrations,
         kv_evictions: lp.kv_evictions,
         latency: lp.latency,
+        node_wire_bytes: (0..nodes as u32).map(|n| lp.router.wire_bytes_of(n)).collect(),
     }
 }
 
@@ -585,9 +661,10 @@ mod tests {
 
     #[test]
     fn kv_pressure_migrates_sessions() {
-        // node 0 chews on one long batch while node 1 clears several
-        // short ones, accumulating resident sessions; the skew triggers
-        // a session migration back toward node 0
+        // node 0's one long request leaves a big resident session
+        // ((8+400) tokens of KV) while node 1 clears short ones (9
+        // tokens each); once the big session exists, the skew triggers a
+        // migration toward the emptier node
         let mut s = sim(2);
         let p = ServeParams {
             batch_width: 1,
@@ -600,9 +677,11 @@ mod tests {
             SimTime::ZERO,
             InferenceRequest { id: 0, prompt: vec![1; 8], max_new_tokens: 400 },
         )];
+        // the long batch computes for ~20.5ms; later short requests land
+        // both before and after its session forms
         for k in 1..=4u64 {
             rs.push((
-                SimTime::us(k * 2000),
+                SimTime::us(k * 7000),
                 InferenceRequest { id: k, prompt: vec![1; 8], max_new_tokens: 1 },
             ));
         }
@@ -621,7 +700,8 @@ mod tests {
             batch_width: 1,
             prompt_len: 8,
             batch_window: SimTime::us(10),
-            kv_capacity_per_node: 1 << 20, // exactly one batch resident
+            // exactly one (8 prompt + 1 new)-token batch resident
+            kv_capacity_per_node: 9 * 4096,
             ..Default::default()
         };
         let rs: Vec<_> = (0..3u64)
@@ -635,5 +715,39 @@ mod tests {
         let report = serve(&mut s, vec![mk()], rs, &p);
         assert_eq!(report.responses.len(), 3, "capacity pressure must not drop requests");
         assert!(report.kv_evictions >= 1, "old sessions evicted for new batches: {report:?}");
+    }
+
+    #[test]
+    fn kv_reservations_are_sized_per_request() {
+        let mut s = sim(1);
+        let p = ServeParams {
+            batch_width: 2,
+            prompt_len: 8,
+            batch_window: SimTime::us(10),
+            kv_bytes_per_token: 1000,
+            ..Default::default()
+        };
+        // one prompt-heavy and one output-heavy request in one batch
+        let rs = vec![
+            (
+                SimTime::ZERO,
+                InferenceRequest { id: 0, prompt: vec![1; 8], max_new_tokens: 2 },
+            ),
+            (
+                SimTime::ZERO,
+                InferenceRequest { id: 1, prompt: vec![1; 3], max_new_tokens: 5 },
+            ),
+        ];
+        let report = serve(&mut s, vec![mk()], rs, &p);
+        assert_eq!(report.responses.len(), 2);
+        // (8 + 2) + (3 + 5) tokens of context at 1000 B/token — not a
+        // flat per-batch figure
+        assert_eq!(report.kv_reserved_bytes, 18_000);
+        assert_eq!(report.prompt_tokens, 11, "live clipped prompt tokens only");
+        let mut c = Counters::new();
+        report.export_counters(&mut c);
+        assert_eq!(c.get(names::SERVE_KV_RESERVED_BYTES), 18_000);
+        assert_eq!(c.get(names::SERVE_PROMPT_TOKENS), 11);
+        assert!(report.node_wire_bytes[0] > 0, "per-node wire split exposed");
     }
 }

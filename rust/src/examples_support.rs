@@ -9,7 +9,7 @@ use std::path::PathBuf;
 use anyhow::Result;
 
 use crate::config::SystemConfig;
-use crate::coordinator::{serve, InferenceRequest, ServeParams};
+use crate::coordinator::{serve, InferenceRequest, KvManager, ServeParams};
 use crate::metrics::Counters;
 use crate::runtime::{Engine, Manifest};
 use crate::sim::PoolSim;
@@ -52,12 +52,14 @@ pub fn run_serve(artifacts: &str, nodes: usize, n_requests: usize, tokens: usize
         .collect();
 
     let cfg = SystemConfig::default();
+    // per-token KV from the artifact's model config (K+V f32 vectors per
+    // layer); node capacity still spans four full-context batches
     let kv_bytes = (manifest.kv_cache_elems() * 2 * 4) as u64;
     let params = ServeParams {
         batch_width: c.batch,
         prompt_len: c.prompt_len,
         kv_capacity_per_node: kv_bytes * 4,
-        kv_bytes_per_batch: kv_bytes,
+        kv_bytes_per_token: KvManager::kv_bytes_per_token(c.n_layers as u64, c.d_model as u64, 4),
         ..ServeParams::from_config(&cfg.serve)
     };
     let mut sim = PoolSim::new(&cfg);

@@ -14,9 +14,13 @@
 //! repro fig13cd           # Fig 13c/d: batch-size sensitivity
 //! repro docker-demo       # pull/run/logs lifecycle on the simulated SSD
 //! repro serve [--nodes N --requests R --tokens T --seed S]
-//!                         # simulated-time pool serving storm (PoolSim);
-//!                         # with --features pjrt also [--artifacts DIR]
-//!                         # for real PJRT token generation
+//!             [--workload ROW --scale K --boot-storm B]
+//!                         # simulated-time pool serving (PoolSim): a
+//!                         # uniform-random storm, or a Table-2 trace
+//!                         # replay (--workload mariadb-tpch4) optionally
+//!                         # contending with B replica boots on the same
+//!                         # clock; with --features pjrt also
+//!                         # [--artifacts DIR] for real PJRT generation
 //! repro config            # print the default config as JSON
 //! ```
 //!
@@ -298,15 +302,34 @@ fn docker_demo() {
     println!("stopped + removed; fw syscalls emulated: {}", fw.syscalls.total());
 }
 
+/// Synthetic "llm-worker" image the boot storm deploys: four 24 MiB
+/// layers, sized so a cold registry pull visibly occupies the host
+/// uplink while requests are being dispatched.
+#[cfg(not(feature = "pjrt"))]
+fn boot_storm_layers() -> Vec<(u64, u64)> {
+    (0..4u64).map(|i| (0x11A9_E500 + i, 24 << 20)).collect()
+}
+
 /// Without the `pjrt` feature the serving loop still runs end-to-end in
 /// simulated time (PoolSim clock + shared fabric), with the
 /// deterministic `EchoExecutor` standing in for real PJRT engines.
+///
+/// With `--workload <row>` the arrival process is a Table 2 trace
+/// replay (`workloads::arrivals`) instead of a uniform-random storm;
+/// `--boot-storm B` boots B replicas of a synthetic model image on the
+/// same clock, so docker-pull and prefetch bytes contend with dispatch
+/// and response traffic on the shared wires.  Everything is
+/// deterministic: the CI smoke job diffs the counter table of two
+/// same-seed runs (and a committed golden) byte-for-byte.
 #[cfg(not(feature = "pjrt"))]
 fn serve_cmd(rest: &[String]) {
     use dockerssd::coordinator::{serve, EchoExecutor, InferenceRequest, ServeParams};
+    use dockerssd::layerstore::PoolLayerCache;
     use dockerssd::metrics::{Counters, Table};
+    use dockerssd::pool::{DeploymentSpec, Orchestrator, PoolTopology, RestartPolicy};
     use dockerssd::sim::PoolSim;
     use dockerssd::util::Rng;
+    use dockerssd::workloads::{trace_arrivals, workload_named, ArrivalParams};
 
     let value_of = |i: usize, flag: &str| -> String {
         rest.get(i + 1).cloned().unwrap_or_else(|| {
@@ -314,10 +337,15 @@ fn serve_cmd(rest: &[String]) {
             std::process::exit(2);
         })
     };
+    let cfg = SystemConfig::default();
     let mut nodes = 0usize;
     let mut requests = 32usize;
     let mut tokens = 0usize;
+    let mut storm_flags = false;
     let mut seed = 42u64;
+    let mut workload = cfg.serve.workload.clone();
+    let mut scale = cfg.serve.trace_scale;
+    let mut boot_storm = cfg.serve.boot_storm;
     let mut i = 0;
     while i < rest.len() {
         match rest[i].as_str() {
@@ -327,14 +355,28 @@ fn serve_cmd(rest: &[String]) {
             }
             "--requests" => {
                 requests = value_of(i, "--requests").parse().expect("--requests R");
+                storm_flags = true;
                 i += 2;
             }
             "--tokens" => {
                 tokens = value_of(i, "--tokens").parse().expect("--tokens T");
+                storm_flags = true;
                 i += 2;
             }
             "--seed" => {
                 seed = value_of(i, "--seed").parse().expect("--seed S");
+                i += 2;
+            }
+            "--workload" => {
+                workload = value_of(i, "--workload");
+                i += 2;
+            }
+            "--scale" => {
+                scale = value_of(i, "--scale").parse().expect("--scale K");
+                i += 2;
+            }
+            "--boot-storm" => {
+                boot_storm = value_of(i, "--boot-storm").parse().expect("--boot-storm B");
                 i += 2;
             }
             other => {
@@ -343,38 +385,93 @@ fn serve_cmd(rest: &[String]) {
             }
         }
     }
-    let cfg = SystemConfig::default();
     let nodes = if nodes == 0 { cfg.serve.nodes as usize } else { nodes };
     let tokens = if tokens == 0 { cfg.serve.max_new_tokens as usize } else { tokens };
-    let params = ServeParams::from_config(&cfg.serve);
-    println!(
-        "simulated serve storm: {nodes} nodes, {requests} requests x {tokens} tokens, seed {seed}"
-    );
+    let mut params = ServeParams::from_config(&cfg.serve);
 
     let mut sim = PoolSim::new(&cfg);
-    let mut rng = Rng::new(seed);
-    let reqs: Vec<(SimTime, InferenceRequest)> = (0..requests as u64)
-        .map(|id| {
-            (
-                SimTime::us(rng.below(5_000)),
-                InferenceRequest {
-                    id,
-                    prompt: (0..params.prompt_len).map(|_| rng.below(32_000) as i32).collect(),
-                    max_new_tokens: tokens,
-                },
-            )
-        })
-        .collect();
+    let reqs: Vec<(SimTime, InferenceRequest)> = if workload.is_empty() {
+        println!(
+            "simulated serve storm: {nodes} nodes, {requests} requests x {tokens} tokens, seed {seed}"
+        );
+        let mut rng = Rng::new(seed);
+        (0..requests as u64)
+            .map(|id| {
+                (
+                    SimTime::us(rng.below(5_000)),
+                    InferenceRequest {
+                        id,
+                        prompt: (0..params.prompt_len).map(|_| rng.below(32_000) as i32).collect(),
+                        max_new_tokens: tokens,
+                    },
+                )
+            })
+            .collect()
+    } else {
+        let Some(spec) = workload_named(&workload) else {
+            eprintln!("unknown workload {workload:?}; Table 2 rows:");
+            for w in all_workloads() {
+                eprintln!("  {}", w.full_name());
+            }
+            std::process::exit(2);
+        };
+        let ap = ArrivalParams { scale, ..Default::default() };
+        // request count and shapes come from the trace, not the CLI knobs
+        if storm_flags {
+            eprintln!("note: --requests/--tokens are ignored for a trace replay");
+        }
+        // don't clip prompt-heavy (write) requests to the storm default
+        params.prompt_len = ap.engine_prompt_len();
+        let arr = trace_arrivals(&spec, seed, &ap);
+        println!(
+            "trace replay {}: {} requests ({} read-shaped, {} write-shaped) arriving over {}, \
+             {} nodes, seed {seed}, scale {scale}",
+            spec.full_name(),
+            arr.requests.len(),
+            arr.read_requests,
+            arr.write_requests,
+            arr.span,
+            nodes
+        );
+        arr.requests
+    };
+
+    if boot_storm > 0 {
+        let topo = PoolTopology::build(&cfg.pool);
+        let mut orch = Orchestrator::new();
+        let mut cache = PoolLayerCache::new();
+        let layers = boot_storm_layers();
+        let spec = DeploymentSpec {
+            name: "storm".into(),
+            image: "llm-worker".into(),
+            replicas: boot_storm,
+            restart: RestartPolicy::OnFailure,
+        };
+        let rep = orch
+            .boot_storm_sim(&mut sim, &topo, &spec, &mut cache, &layers)
+            .expect("boot storm placement");
+        println!(
+            "boot storm: {} replicas placed, {} registry pulls (foreground) + {} peer prefetches \
+             (background); pulls land at {}",
+            rep.placed.len(),
+            rep.registry_pulls,
+            rep.peer_prefetches,
+            rep.pulls_done
+        );
+    }
+
     let factories: Vec<_> = (0..nodes)
         .map(|_| || Ok::<_, anyhow::Error>(EchoExecutor))
         .collect();
     let report = serve(&mut sim, factories, reqs, &params);
 
     println!(
-        "\n{} responses, {} batches ({} padded rows), {} tokens in {} simulated",
+        "\n{} responses, {} batches ({} padded rows), {} prompt tokens in / {} tokens out \
+         in {} simulated",
         report.responses.len(),
         report.batches,
         report.padded_rows,
+        report.prompt_tokens,
         report.tokens_out,
         report.makespan
     );
@@ -384,6 +481,11 @@ fn serve_cmd(rest: &[String]) {
         report.mean_latency(),
         report.latency.quantile(0.99)
     );
+    let mut t = Table::new(vec!["node", "wire_bytes"]);
+    for (n, bytes) in report.node_wire_bytes.iter().enumerate() {
+        t.row(vec![format!("{n}"), format!("{bytes}")]);
+    }
+    println!("\nper-node dispatch+response traffic\n{}", t.render());
     let mut c = Counters::new();
     report.export_counters(&mut c);
     sim.export_counters(&mut c);

@@ -146,6 +146,11 @@ pub mod names {
     pub const SERVE_BATCHES: &str = "serve.batches";
     pub const SERVE_PADDED_ROWS: &str = "serve.padded_rows";
     pub const SERVE_TOKENS_OUT: &str = "serve.tokens_out";
+    /// Live (non-padding) prompt tokens dispatched to nodes.
+    pub const SERVE_PROMPT_TOKENS: &str = "serve.prompt_tokens";
+    /// KV bytes reserved across all batches, sized per request from the
+    /// model's per-token KV footprint.
+    pub const SERVE_KV_RESERVED_BYTES: &str = "serve.kv_reserved_bytes";
     pub const SERVE_FAILED_BATCHES: &str = "serve.failed_batches";
     /// Resident session KV moved between nodes to relieve pressure.
     pub const SERVE_KV_MIGRATIONS: &str = "serve.kv_migrations";

@@ -6,5 +6,5 @@
 pub mod orchestrator;
 pub mod topology;
 
-pub use orchestrator::{DeploymentSpec, Orchestrator, RestartPolicy};
+pub use orchestrator::{BootStormReport, DeploymentSpec, Orchestrator, RestartPolicy};
 pub use topology::{NodeId, PoolNode, PoolTopology};

@@ -7,7 +7,7 @@ use std::collections::HashMap;
 
 use super::topology::{NodeId, PoolTopology};
 use crate::fabric::Fabric;
-use crate::layerstore::PoolLayerCache;
+use crate::layerstore::{FetchSource, PoolLayerCache};
 use crate::sim::PoolSim;
 use crate::util::SimTime;
 
@@ -27,6 +27,18 @@ pub struct DeploymentSpec {
     pub image: String,
     pub replicas: u32,
     pub restart: RestartPolicy,
+}
+
+/// What a [`Orchestrator::boot_storm_sim`] deployment put on the wire.
+#[derive(Clone, Debug, Default)]
+pub struct BootStormReport {
+    pub placed: Vec<NodeId>,
+    /// Layers pulled from the registry in the foreground (pool-cold).
+    pub registry_pulls: u64,
+    /// Layers prefetched from a peer on the background lane (pool-warm).
+    pub peer_prefetches: u64,
+    /// When the last foreground pull byte lands.
+    pub pulls_done: SimTime,
 }
 
 /// One placed replica.
@@ -163,6 +175,59 @@ impl Orchestrator {
     ) -> Result<Vec<NodeId>, String> {
         let now = sim.now();
         self.deploy_with_layers(topo, &mut sim.fabric, spec, cache, layers, now)
+    }
+
+    /// A replica boot storm on the pool's shared clock — the
+    /// interference generator for serve-while-deploy experiments
+    /// (`repro serve --boot-storm N`).  Replicas are placed with the
+    /// spread strategy, then each replica's missing layers start moving
+    /// at the clock's `now`:
+    ///
+    /// * a layer *no* pool node holds is pulled from the registry in the
+    ///   **foreground** — the [`crate::docker::MiniDocker::pull`] wire
+    ///   path (RegistryWan + HostUplink + Array), so the pull visibly
+    ///   contends with serve dispatch/response traffic on the host
+    ///   uplink;
+    /// * a layer some node already holds is prefetched from the nearest
+    ///   peer on the **background** lane, yielding the wire to
+    ///   foreground traffic within one frame quantum.
+    ///
+    /// Both kinds land in `cache`, so a later storm of the same image is
+    /// pool-warm.  Serving alongside reads the contention off the shared
+    /// fabric's `fabric.queue_wait_ns` / `serve.latency_p99_ns`.
+    pub fn boot_storm_sim(
+        &mut self,
+        sim: &mut PoolSim,
+        topo: &PoolTopology,
+        spec: &DeploymentSpec,
+        cache: &mut PoolLayerCache,
+        layers: &[(u64, u64)],
+    ) -> Result<BootStormReport, String> {
+        let now = sim.now();
+        let placed = self.deploy(topo, spec)?;
+        let mut report = BootStormReport {
+            placed: placed.clone(),
+            pulls_done: now,
+            ..Default::default()
+        };
+        for &node in &placed {
+            for &(digest, bytes) in layers {
+                match cache.plan(&sim.fabric, topo, node, digest, bytes).0 {
+                    FetchSource::Local => {}
+                    FetchSource::Peer(_) => {
+                        cache.prefetch(&mut sim.fabric, topo, now, node, digest, bytes);
+                        report.peer_prefetches += 1;
+                    }
+                    FetchSource::Registry => {
+                        let (_, latency) =
+                            cache.fetch(&mut sim.fabric, topo, now, node, digest, bytes);
+                        report.registry_pulls += 1;
+                        report.pulls_done = report.pulls_done.max(now + latency);
+                    }
+                }
+            }
+        }
+        Ok(report)
     }
 
     /// Run pool-wide layer GC with this orchestrator's replica counts as
@@ -410,6 +475,43 @@ mod tests {
         // prefetch traffic landed on the shared fabric at the clock's now
         assert!(sim.fabric.stats.transfers_bg >= 1);
         assert!(sim.fabric.stats.prefetch_bytes >= 1 << 20);
+    }
+
+    #[test]
+    fn boot_storm_pulls_cold_layers_then_prefetches_warm_ones() {
+        use crate::config::SystemConfig;
+        use crate::metrics::{names, Counters};
+
+        let cfg = SystemConfig::default();
+        let mut sim = crate::sim::PoolSim::new(&cfg);
+        let t = topo(16);
+        let mut orch = Orchestrator::new();
+        let mut cache = PoolLayerCache::new();
+        let layers = [(0xAA, 4u64 << 20), (0xBB, 2u64 << 20)];
+        let rep = orch
+            .boot_storm_sim(&mut sim, &t, &spec("infer", 3), &mut cache, &layers)
+            .unwrap();
+        assert_eq!(rep.placed.len(), 3);
+        assert_eq!(rep.registry_pulls, 2, "the first replica cold-pulls each layer once");
+        assert_eq!(rep.peer_prefetches, 4, "later replicas prefetch from the pool");
+        assert!(rep.pulls_done > SimTime::ZERO, "pulls pay real wire time");
+        let mut c = Counters::new();
+        sim.export_counters(&mut c);
+        assert_eq!(c.get(names::FABRIC_BYTES_WAN), 6 << 20, "cold pulls cross the WAN once");
+        assert!(
+            c.get(names::FABRIC_BYTES_HOST_UPLINK) >= 6 << 20,
+            "pulls occupy the host uplink foreground"
+        );
+        assert!(sim.fabric.stats.transfers_bg >= 4, "warm copies ride the background lane");
+        // a second storm of the same image is fully pool-warm: no new
+        // WAN bytes
+        let rep2 = orch
+            .boot_storm_sim(&mut sim, &t, &spec("again", 2), &mut cache, &layers)
+            .unwrap();
+        assert_eq!(rep2.registry_pulls, 0);
+        let mut c2 = Counters::new();
+        sim.export_counters(&mut c2);
+        assert_eq!(c2.get(names::FABRIC_BYTES_WAN), 6 << 20);
     }
 
     #[test]

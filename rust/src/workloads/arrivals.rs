@@ -1,0 +1,235 @@
+//! Trace-driven arrival processes: a Table 2 workload row replayed as a
+//! timestamped inference-request stream for `coordinator::serve`.
+//!
+//! This closes the serve-side half of the trace story (ROADMAP serve
+//! follow-ons): instead of uniform-random arrival seeds, the Op mix of a
+//! [`TraceGenerator`] trace maps onto per-request shapes — a read op
+//! becomes an *output-heavy* request (the data flows device → host as
+//! generated tokens), a write op becomes a *prompt-heavy* request (the
+//! data flows host → device as prompt tokens) — and requests arrive at
+//! the row's measured I/O rate (mean inter-arrival `exec_time_s /
+//! io_count`, which is invariant under trace scaling), so an
+//! I/O-intensive row stresses the host uplink and array backplanes the
+//! way Table 2 says it should.
+//!
+//! Everything is deterministic for a given seed: two calls with the same
+//! `(spec, seed, params)` produce identical request streams, which is
+//! what lets `repro serve --workload <row>` be a byte-comparable CI
+//! smoke scenario.
+
+use super::spec::WorkloadSpec;
+use super::trace::{Op, TraceGenerator};
+use crate::coordinator::InferenceRequest;
+use crate::util::{Rng, SimTime};
+
+/// Tunables of the trace → request mapping.
+#[derive(Clone, Debug)]
+pub struct ArrivalParams {
+    /// Trace scale factor: the replay carries `io_count / scale` requests
+    /// (the op *mix* and the arrival *rate* are preserved; only the span
+    /// shrinks).
+    pub scale: u64,
+    /// Bytes of workload I/O one prompt/output token stands for.
+    pub bytes_per_token: u64,
+    /// Token floor: the query side of a read, the ack side of a write.
+    pub min_tokens: usize,
+    /// Token ceiling, so one huge I/O cannot dwarf the whole replay.
+    pub max_tokens: usize,
+}
+
+impl Default for ArrivalParams {
+    fn default() -> Self {
+        ArrivalParams {
+            scale: 10_000,
+            bytes_per_token: 4096,
+            min_tokens: 4,
+            max_tokens: 256,
+        }
+    }
+}
+
+impl ArrivalParams {
+    fn tokens_of(&self, bytes: u64) -> usize {
+        ((bytes / self.bytes_per_token.max(1)) as usize).clamp(self.min_tokens, self.max_tokens)
+    }
+
+    /// The engine prompt length a serve loop replaying this stream
+    /// should use.  The batcher clips prompts to the engine's
+    /// `prompt_len`, so anything smaller than `max_tokens` silently
+    /// truncates write-heavy payloads — erasing exactly the
+    /// prompt/output asymmetry the trace mapping exists to model.  The
+    /// CLI, benches, and tests all feed this into their `ServeParams`.
+    pub fn engine_prompt_len(&self) -> usize {
+        self.max_tokens
+    }
+}
+
+/// A workload row rendered as an arrival stream, plus the shape counts
+/// the CLI and benches report.
+#[derive(Debug)]
+pub struct TraceArrivals {
+    pub requests: Vec<(SimTime, InferenceRequest)>,
+    /// Requests derived from read ops (short prompt, long output).
+    pub read_requests: u64,
+    /// Requests derived from write ops (long prompt, short output).
+    pub write_requests: u64,
+    /// Arrival time of the last request.
+    pub span: SimTime,
+}
+
+/// Convert a Table 2 row into timestamped [`InferenceRequest`]s.
+///
+/// Each I/O op of the scaled trace becomes one request; its prompt and
+/// output lengths derive from the op's byte count (so `rocksdb-write`
+/// yields prompt-heavy traffic and `nginx-filedown` output-heavy
+/// traffic), and consecutive requests are spaced by the row's mean I/O
+/// inter-arrival time with deterministic ±50% jitter.  Non-I/O ops
+/// (syscalls, path walks, TCP packets) shape the *trace*, not the
+/// request stream — their costs live in the analytic models.
+pub fn trace_arrivals(spec: &WorkloadSpec, seed: u64, params: &ArrivalParams) -> TraceArrivals {
+    let ops = TraceGenerator::new(spec.clone(), seed, params.scale).generate();
+    // independent stream so arrival jitter never perturbs the trace mix
+    let mut rng = Rng::new(seed.wrapping_add(0x5EED));
+    let inter = SimTime::secs_f64(spec.exec_time_s / spec.io_count.max(1) as f64);
+
+    let mut requests = Vec::new();
+    let mut at = SimTime::ZERO;
+    let (mut reads, mut writes) = (0u64, 0u64);
+    for op in &ops {
+        let (prompt_tokens, new_tokens) = match op {
+            // data flows device → host: the response carries it
+            Op::Read { bytes, .. } => {
+                reads += 1;
+                (params.min_tokens, params.tokens_of(*bytes))
+            }
+            // data flows host → device: the prompt carries it
+            Op::Write { bytes, .. } => {
+                writes += 1;
+                (params.tokens_of(*bytes), params.min_tokens)
+            }
+            _ => continue,
+        };
+        at += inter.scale(0.5 + rng.f64());
+        let prompt: Vec<i32> = (0..prompt_tokens).map(|_| rng.below(32_000) as i32).collect();
+        requests.push((
+            at,
+            InferenceRequest {
+                id: requests.len() as u64,
+                prompt,
+                max_new_tokens: new_tokens,
+            },
+        ));
+    }
+    TraceArrivals {
+        span: at,
+        requests,
+        read_requests: reads,
+        write_requests: writes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::spec::{all_workloads, workload_named};
+
+    #[test]
+    fn every_table2_row_yields_requests() {
+        for spec in all_workloads() {
+            let arr = trace_arrivals(&spec, 7, &ArrivalParams::default());
+            assert!(!arr.requests.is_empty(), "{}", spec.full_name());
+            assert_eq!(
+                arr.read_requests + arr.write_requests,
+                arr.requests.len() as u64,
+                "{}",
+                spec.full_name()
+            );
+            for (i, (_, req)) in arr.requests.iter().enumerate() {
+                assert_eq!(req.id, i as u64, "ids are sequential");
+                assert!(!req.prompt.is_empty());
+                assert!(req.max_new_tokens > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn same_seed_same_stream() {
+        let spec = workload_named("mariadb-tpch4").unwrap();
+        let a = trace_arrivals(&spec, 42, &ArrivalParams::default());
+        let b = trace_arrivals(&spec, 42, &ArrivalParams::default());
+        assert_eq!(a.requests, b.requests);
+        let c = trace_arrivals(&spec, 43, &ArrivalParams::default());
+        assert_ne!(a.requests, c.requests, "different seeds must differ");
+    }
+
+    #[test]
+    fn arrivals_are_nondecreasing_at_the_rows_io_rate() {
+        let spec = workload_named("nginx-filedown").unwrap();
+        let p = ArrivalParams {
+            scale: 2_000,
+            ..Default::default()
+        };
+        let arr = trace_arrivals(&spec, 11, &p);
+        let mut prev = SimTime::ZERO;
+        for (at, _) in &arr.requests {
+            assert!(*at >= prev, "arrivals must be time-ordered");
+            prev = *at;
+        }
+        // rate faithfulness: the span tracks exec_time_s / scale (the
+        // jitter is ±50% around the mean, so the sum concentrates)
+        let want = spec.exec_time_s / p.scale as f64;
+        let got = arr.span.as_secs_f64();
+        assert!(
+            got > 0.5 * want && got < 1.5 * want,
+            "span {got}s vs expected ~{want}s"
+        );
+    }
+
+    #[test]
+    fn write_heavy_rows_are_prompt_heavy() {
+        let spec = workload_named("rocksdb-write").unwrap(); // write_frac 0.9
+        // scale 100 keeps enough requests for the ratio to concentrate
+        let arr = trace_arrivals(
+            &spec,
+            3,
+            &ArrivalParams {
+                scale: 100,
+                ..Default::default()
+            },
+        );
+        assert!(
+            arr.write_requests as f64 > 0.8 * arr.requests.len() as f64,
+            "write row must produce mostly prompt-heavy requests"
+        );
+        // a write carries its bytes in the prompt
+        let heavy = arr
+            .requests
+            .iter()
+            .filter(|(_, r)| r.prompt.len() > r.max_new_tokens)
+            .count();
+        assert!(heavy as f64 > 0.8 * arr.requests.len() as f64);
+    }
+
+    #[test]
+    fn read_only_rows_are_output_heavy() {
+        let spec = workload_named("pattern-find").unwrap(); // write_frac 0
+        let arr = trace_arrivals(&spec, 3, &ArrivalParams::default());
+        assert_eq!(arr.write_requests, 0);
+        assert!(arr
+            .requests
+            .iter()
+            .all(|(_, r)| r.max_new_tokens >= r.prompt.len()));
+    }
+
+    #[test]
+    fn token_counts_respect_bounds() {
+        for spec in all_workloads() {
+            let p = ArrivalParams::default();
+            let arr = trace_arrivals(&spec, 5, &p);
+            for (_, r) in &arr.requests {
+                assert!((p.min_tokens..=p.max_tokens).contains(&r.prompt.len()));
+                assert!((p.min_tokens..=p.max_tokens).contains(&r.max_new_tokens));
+            }
+        }
+    }
+}

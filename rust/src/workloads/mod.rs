@@ -1,10 +1,14 @@
 //! Workload suite (DESIGN.md S8): the six benchmarks / 13 workloads of
-//! Table 2, as both (a) characteristic vectors driving the latency models
-//! of Figure 3/11 and (b) deterministic operation-trace generators that
-//! exercise the substrates (λFS, SSD, TCP) with real operations.
+//! Table 2, as (a) characteristic vectors driving the latency models of
+//! Figure 3/11, (b) deterministic operation-trace generators that
+//! exercise the substrates (λFS, SSD, TCP) with real operations, and
+//! (c) trace-driven arrival streams feeding `coordinator::serve` with
+//! per-request shapes at the row's measured I/O rate.
 
+pub mod arrivals;
 pub mod spec;
 pub mod trace;
 
-pub use spec::{all_workloads, Benchmark, WorkloadSpec};
+pub use arrivals::{trace_arrivals, ArrivalParams, TraceArrivals};
+pub use spec::{all_workloads, workload_named, Benchmark, WorkloadSpec};
 pub use trace::{Op, TraceGenerator};

@@ -69,6 +69,21 @@ impl WorkloadSpec {
     }
 }
 
+/// Look up a Table 2 row by its `full_name` ("mariadb-tpch4") or, when
+/// unambiguous, by its bare row name ("tpch4").  The CLI, benches, and
+/// CI smoke scenario all resolve `--workload` through this.
+pub fn workload_named(name: &str) -> Option<WorkloadSpec> {
+    let ws = all_workloads();
+    if let Some(w) = ws.iter().find(|w| w.full_name() == name) {
+        return Some(w.clone());
+    }
+    let mut hits = ws.iter().filter(|w| w.name == name);
+    match (hits.next(), hits.next()) {
+        (Some(w), None) => Some(w.clone()),
+        _ => None,
+    }
+}
+
 const GB: f64 = 1_073_741_824.0;
 
 fn gb(x: f64) -> u64 {
@@ -282,6 +297,17 @@ mod tests {
             let bpio = w.bytes_per_io();
             assert!(bpio > 100.0 && bpio < 1_000_000_000.0, "{}: {bpio}", w.full_name());
         }
+    }
+
+    #[test]
+    fn workload_lookup_by_full_or_row_name() {
+        assert_eq!(workload_named("mariadb-tpch4").unwrap().name, "tpch4");
+        assert_eq!(workload_named("tpch4").unwrap().benchmark, Benchmark::MariaDb);
+        assert_eq!(workload_named("filedown").unwrap().benchmark, Benchmark::Nginx);
+        assert!(workload_named("no-such-row").is_none());
+        // "rm1" is unique, but a benchmark name alone is not a row
+        assert!(workload_named("rm1").is_some());
+        assert!(workload_named("nginx").is_none());
     }
 
     #[test]

@@ -470,6 +470,97 @@ fn serve_storm_same_seed_is_byte_identical() {
     assert!(c1.get(names::SERVE_MAKESPAN_NS) > 0);
 }
 
+/// ISSUE 4 acceptance: serving a Table 2 trace while a deployment boots
+/// on the same clock.  The storm's cold registry pulls (foreground,
+/// RegistryWan + HostUplink + Array) and warm peer prefetches
+/// (background) overlap dispatch/response traffic on the host uplink,
+/// so serve p99 and `fabric.queue_wait_ns` must measurably inflate
+/// versus the same replay on a quiet pool.
+#[test]
+fn boot_storm_inflates_serve_p99_via_host_uplink_contention() {
+    use dockerssd::workloads::{trace_arrivals, workload_named, ArrivalParams};
+
+    let spec = workload_named("nginx-filedown").unwrap();
+    let run = |storm: u32| {
+        let pcfg = dockerssd::config::PoolConfig {
+            nodes_per_array: 8,
+            arrays: 1,
+            ..Default::default()
+        };
+        let mut sim = PoolSim::with_pool(&pcfg, &dockerssd::config::EtherOnConfig::default());
+        if storm > 0 {
+            let topo = PoolTopology::build(&pcfg);
+            let mut orch = Orchestrator::new();
+            let mut cache = PoolLayerCache::new();
+            let layers: Vec<(u64, u64)> = (0..2u64).map(|i| (0xB007 + i, 24 << 20)).collect();
+            let rep = orch
+                .boot_storm_sim(
+                    &mut sim,
+                    &topo,
+                    &DeploymentSpec {
+                        name: "storm".into(),
+                        image: "llm-worker".into(),
+                        replicas: storm,
+                        restart: RestartPolicy::OnFailure,
+                    },
+                    &mut cache,
+                    &layers,
+                )
+                .unwrap();
+            assert_eq!(rep.registry_pulls, 2, "one cold pull per layer");
+            assert!(rep.peer_prefetches >= 1, "later replicas prefetch from the pool");
+        }
+        let ap = ArrivalParams { scale: 2_000, ..Default::default() };
+        let arr = trace_arrivals(&spec, 42, &ap);
+        assert!(arr.requests.len() >= 20, "replay must carry a real request stream");
+        let factories: Vec<_> = (0..4)
+            .map(|_| || Ok::<_, anyhow::Error>(EchoExecutor))
+            .collect();
+        let params = ServeParams {
+            batch_width: 4,
+            prompt_len: ap.engine_prompt_len(),
+            batch_window: SimTime::us(200),
+            ..Default::default()
+        };
+        let report = serve(&mut sim, factories, arr.requests, &params);
+        let mut c = Counters::new();
+        report.export_counters(&mut c);
+        sim.export_counters(&mut c);
+        (report, c)
+    };
+
+    let (quiet, cq) = run(0);
+    let (stormy, cs) = run(2);
+    assert_eq!(
+        quiet.responses.len(),
+        stormy.responses.len(),
+        "the storm must not drop requests"
+    );
+    // the pull crossed the WAN and occupied the host uplink foreground
+    assert_eq!(cq.get(names::FABRIC_BYTES_WAN), 0);
+    assert_eq!(cs.get(names::FABRIC_BYTES_WAN), 2 * (24 << 20));
+    assert!(
+        cs.get(names::FABRIC_BYTES_HOST_UPLINK)
+            > cq.get(names::FABRIC_BYTES_HOST_UPLINK) + 2 * (24 << 20) - 1,
+        "pull bytes must show on the uplink on top of serve traffic"
+    );
+    // dispatches queued behind the pull: contention is visible in both
+    // the fabric's queue-wait accounting and the latency tail
+    assert!(
+        cs.get(names::FABRIC_QUEUE_WAIT_NS) > cq.get(names::FABRIC_QUEUE_WAIT_NS),
+        "storm queue wait {} must exceed quiet {}",
+        cs.get(names::FABRIC_QUEUE_WAIT_NS),
+        cq.get(names::FABRIC_QUEUE_WAIT_NS)
+    );
+    let p99_quiet = quiet.latency.quantile(0.99);
+    let p99_storm = stormy.latency.quantile(0.99);
+    assert!(
+        p99_storm > p99_quiet,
+        "boot storm must inflate serve p99: {p99_storm} !> {p99_quiet}"
+    );
+    assert!(stormy.makespan > quiet.makespan, "delayed dispatches stretch the makespan");
+}
+
 /// ISSUE 3 acceptance, part 2: concurrent docker pulls and LLM
 /// collective steps contend on a shared link — the combined makespan
 /// exceeds the larger of either running alone, because both now price

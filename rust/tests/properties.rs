@@ -578,6 +578,64 @@ fn prop_serve_same_seed_same_schedule() {
     }
 }
 
+/// Trace-replay determinism (ISSUE 4): for *every* Table 2 row, two
+/// same-seed replays of the trace-driven arrival stream through the
+/// serve loop yield a byte-identical `ServeReport` — identical
+/// counters (per-request KV reservations included), identical response
+/// tokens, identical per-request simulated latencies.
+#[test]
+fn prop_trace_replay_same_seed_byte_identical_for_every_row() {
+    use dockerssd::config::{EtherOnConfig, PoolConfig};
+    use dockerssd::coordinator::{serve, EchoExecutor, ServeParams};
+    use dockerssd::metrics::Counters;
+    use dockerssd::sim::PoolSim;
+    use dockerssd::workloads::{all_workloads, trace_arrivals, ArrivalParams};
+
+    for spec in all_workloads() {
+        let run = || {
+            let mut sim = PoolSim::with_pool(
+                &PoolConfig {
+                    nodes_per_array: 4,
+                    arrays: 1,
+                    ..Default::default()
+                },
+                &EtherOnConfig::default(),
+            );
+            let ap = ArrivalParams {
+                scale: 20_000,
+                ..Default::default()
+            };
+            let arr = trace_arrivals(&spec, 42, &ap);
+            let factories: Vec<_> = (0..4)
+                .map(|_| || Ok::<_, anyhow::Error>(EchoExecutor))
+                .collect();
+            let params = ServeParams {
+                batch_width: 4,
+                prompt_len: ap.engine_prompt_len(),
+                batch_window: SimTime::us(200),
+                ..Default::default()
+            };
+            let report = serve(&mut sim, factories, arr.requests, &params);
+            let mut c = Counters::new();
+            report.export_counters(&mut c);
+            sim.export_counters(&mut c);
+            let responses: Vec<(u64, Vec<i32>, u32, SimTime)> = report
+                .responses
+                .iter()
+                .map(|r| (r.id, r.tokens.clone(), r.node, r.latency))
+                .collect();
+            (c, responses, report.requests, report.kv_reserved_bytes)
+        };
+        let (c1, r1, n1, kv1) = run();
+        let (c2, r2, n2, kv2) = run();
+        assert_eq!(c1, c2, "{}: counters diverged", spec.full_name());
+        assert_eq!(r1, r2, "{}: responses diverged", spec.full_name());
+        assert_eq!((n1, kv1), (n2, kv2), "{}", spec.full_name());
+        assert_eq!(r1.len() as u64, n1, "{}: every request served", spec.full_name());
+        assert!(kv1 > 0, "{}: per-request KV must be accounted", spec.full_name());
+    }
+}
+
 /// Fabric: a foreground transfer is never delayed by background traffic
 /// by more than one frame quantum, for random prefetch loads.
 #[test]
