@@ -12,9 +12,12 @@
 #      workflow also uploads them as an artifact) and only gate 1
 #      applies, mirroring benchdiff's "new bench — not compared" rule.
 #
-# Refresh the golden after an intentional scheduling change by copying
-# the uploaded artifact (or the block printed below) over
-# ci/golden/serve_smoke.txt.
+# Refresh the golden after an intentional scheduling change with
+#   UPDATE_GOLDEN=1 cargo test --test golden
+# (rust/tests/golden.rs re-derives the same lines in-process through
+# dockerssd::smoke) — or by copying the uploaded artifact over
+# ci/golden/serve_smoke.txt.  The CI smoke job cross-diffs the two
+# derivations, so the binary and the test cannot drift apart.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 

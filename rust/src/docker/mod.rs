@@ -13,10 +13,10 @@ use std::collections::HashMap;
 use crate::fabric::{Endpoint, Fabric, Priority};
 use crate::firmware::{Syscall, VirtualFw};
 use crate::lambdafs::{LambdaFs, LockSide};
-use crate::layerstore::{CowStore, LayerId, LayerStore};
+use crate::layerstore::{CowStore, LayerId, LayerStore, PoolLayerCache};
 use crate::pool::topology::NodeId;
 use crate::ssd::SsdDevice;
-use crate::util::SimTime;
+use crate::util::{fnv1a, SimTime};
 
 pub use container::{Container, ContainerState};
 pub use image::{Blob, ImageManifest};
@@ -189,6 +189,14 @@ impl MiniDocker {
     /// Only missing layers cross the registry WAN on the shared
     /// [`Fabric`], and they land dedup'd via the firmware's install
     /// handler.
+    ///
+    /// With `pool` set, the pull advertises chunk-level presence to the
+    /// pool cache *as the chunks land*: each missing layer is described
+    /// to the [`PoolLayerCache`], its bytes cross the wire chunk by
+    /// chunk, and every landed chunk is registered immediately — so a
+    /// peer can fetch the front of a layer from this node while its tail
+    /// is still crossing the WAN (mid-pull peer serving).  Resident
+    /// layers register as full holders.
     #[allow(clippy::too_many_arguments)]
     pub fn pull_via_store(
         &mut self,
@@ -201,6 +209,7 @@ impl MiniDocker {
         node: NodeId,
         at: SimTime,
         image: &str,
+        pool: Option<&mut PoolLayerCache>,
     ) -> Result<CmdResult, DockerError> {
         let (manifest, blobs) = reg.fetch(image).ok_or(DockerError::NoSuchImage)?;
         let mpath = format!("/images/manifest/{}", Self::manifest_key(image));
@@ -208,26 +217,76 @@ impl MiniDocker {
         // manifest file exists, so rmi_with_store can release them 1:1 —
         // a warm re-pull of an already-installed image refs nothing
         let repull = fs.walk(&mpath).is_ok();
+        let mut pool = pool;
         let mut done = at;
         let mut fetched_bytes = 0u64;
         let mut reused = 0usize;
         for blob in blobs {
             if store.has_blob(blob.digest) {
                 reused += 1;
+                if let Some(p) = pool.as_deref_mut() {
+                    if let Some(recipe) = store.blob_chunk_recipe(blob.digest) {
+                        if !recipe.is_empty() {
+                            // a conflicting recipe (another node chunked
+                            // differently) keeps the pool's first; the
+                            // blob-level registration below is correct
+                            // under either recipe
+                            let _ = p.describe_chunks(blob.digest, &recipe);
+                        }
+                    }
+                    p.register(node, blob.digest);
+                }
                 if repull {
                     continue;
                 }
             } else {
                 // only missing layers cross the fabric and arrive as
                 // Ether-oN frames
-                let wire = fabric.transfer(
-                    done,
-                    Endpoint::Registry,
-                    Endpoint::Node(node),
-                    blob.bytes.len() as u64,
-                    Priority::Foreground,
-                );
-                done = wire.finish;
+                // chunk-granular wire only when the pool accepted this
+                // node's chunking of the layer (a conflicting recipe from
+                // a different chunk size keeps the pool's first and falls
+                // back to a blob-granular transfer + registration)
+                let mut chunked = false;
+                if let Some(p) = pool.as_deref_mut() {
+                    if !blob.bytes.is_empty() {
+                        let recipe: Vec<(u64, u64)> = blob
+                            .bytes
+                            .chunks(store.chunk_bytes())
+                            .map(|c| (fnv1a(c), c.len() as u64))
+                            .collect();
+                        if p.describe_chunks(blob.digest, &recipe) {
+                            // register each chunk as it lands so peers
+                            // can serve it mid-pull
+                            for &(chunk, len) in &recipe {
+                                let wire = fabric.transfer(
+                                    done,
+                                    Endpoint::Registry,
+                                    Endpoint::Node(node),
+                                    len,
+                                    Priority::Foreground,
+                                );
+                                done = wire.finish;
+                                p.register_chunk(node, blob.digest, chunk);
+                            }
+                            chunked = true;
+                        }
+                    }
+                }
+                if !chunked {
+                    let wire = fabric.transfer(
+                        done,
+                        Endpoint::Registry,
+                        Endpoint::Node(node),
+                        blob.bytes.len() as u64,
+                        Priority::Foreground,
+                    );
+                    done = wire.finish;
+                    // empty or conflicting-recipe layers still land:
+                    // keep presence consistent with the warm path
+                    if let Some(p) = pool.as_deref_mut() {
+                        p.register(node, blob.digest);
+                    }
+                }
                 let frames = (blob.bytes.len() as u64).div_ceil(1448).max(1);
                 done += SimTime::ns(frames * fw.costs.t_pkt_ethon_ns);
                 fetched_bytes += blob.bytes.len() as u64;
@@ -700,7 +759,8 @@ mod tests {
         let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
         let mut store = LayerStore::default();
         md.pull_via_store(
-            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, SimTime::ZERO, "mariadb",
+            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, SimTime::ZERO,
+            "mariadb", None,
         )
         .unwrap();
         let mut c = Counters::new();
@@ -708,7 +768,8 @@ mod tests {
         assert_eq!(c.get(names::FABRIC_BYTES_WAN), 96 << 10, "cold pull crosses the WAN");
         // warm re-pull: every layer is a store hit; no fabric traffic
         md.pull_via_store(
-            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, SimTime::ZERO, "mariadb",
+            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, SimTime::ZERO,
+            "mariadb", None,
         )
         .unwrap();
         let mut c2 = Counters::new();
@@ -816,7 +877,8 @@ mod tests {
         let mut store = LayerStore::default();
         let r1 = md
             .pull_via_store(
-                &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, SimTime::ZERO, "mariadb",
+                &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, SimTime::ZERO,
+                "mariadb", None,
             )
             .unwrap();
         assert!(r1.done > SimTime::ZERO);
@@ -828,7 +890,7 @@ mod tests {
         // and no extra blob refs (refs mirror "manifest present")
         let r2 = md
             .pull_via_store(
-                &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, r1.done, "mariadb",
+                &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, r1.done, "mariadb", None,
             )
             .unwrap();
         assert_eq!(store.stats.bytes_written, written);
@@ -838,16 +900,62 @@ mod tests {
     }
 
     #[test]
+    fn pull_via_store_records_chunk_presence_as_chunks_land() {
+        let cfg = SsdConfig::default();
+        let mut dev = SsdDevice::new(cfg.clone());
+        let mut fs = LambdaFs::over_device(&dev);
+        let mut fw = VirtualFw::new(&cfg);
+        let mut md = MiniDocker::new();
+        let mut store = LayerStore::default();
+        let mut fab = Fabric::new(&PoolConfig::default(), &EtherOnConfig::default());
+        let mut pool = PoolLayerCache::new();
+        // a 160KiB layer chunks into 64 + 64 + 32 KiB at the default size
+        let mut reg = Registry::new();
+        reg.publish("big", "latest", "big --serve", &[160 << 10], 21);
+        md.pull_via_store(
+            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, SimTime::ZERO, "big",
+            Some(&mut pool),
+        )
+        .unwrap();
+        let (_, blobs) = reg.fetch("big").unwrap();
+        let blob = &blobs[0];
+        assert!(pool.node_has(0, blob.digest), "full holder after the pull");
+        let recipe: Vec<(u64, u64)> = pool.chunk_recipe(blob.digest).unwrap().to_vec();
+        assert_eq!(recipe.len(), 3);
+        assert_eq!(recipe.iter().map(|(_, b)| *b).sum::<u64>(), 160 << 10);
+        for (c, _) in &recipe {
+            assert!(pool.node_has_chunk(0, *c), "chunk {c:016x} registered as it landed");
+        }
+        // the pool recipe matches the store's own chunking
+        assert_eq!(recipe, store.blob_chunk_recipe(blob.digest).unwrap());
+        // a warm pull on another node registers it as a second full holder
+        // without re-crossing the WAN
+        let mut dev2 = SsdDevice::new(cfg.clone());
+        let mut fs2 = LambdaFs::over_device(&dev2);
+        let mut fw2 = VirtualFw::new(&cfg);
+        let mut md2 = MiniDocker::new();
+        md2.pull_via_store(
+            &mut fw2, &mut fs2, &mut dev2, &reg, &mut store, &mut fab, 1, SimTime::ZERO, "big",
+            Some(&mut pool),
+        )
+        .unwrap();
+        assert!(pool.node_has(1, blob.digest));
+        assert_eq!(pool.chunk_holders_of(recipe[0].0), vec![0, 1]);
+    }
+
+    #[test]
     fn rmi_with_store_reclaims_image_chunks() {
         let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
         let mut store = LayerStore::default();
         md.pull_via_store(
-            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, SimTime::ZERO, "mariadb",
+            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, SimTime::ZERO,
+            "mariadb", None,
         )
         .unwrap();
         // re-pull must not leak a second reference (rmi releases once)
         md.pull_via_store(
-            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, SimTime::ZERO, "mariadb",
+            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, SimTime::ZERO,
+            "mariadb", None,
         )
         .unwrap();
         assert!(store.unique_bytes() > 0);
@@ -863,7 +971,8 @@ mod tests {
         let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
         let mut store = LayerStore::default();
         md.pull_via_store(
-            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, SimTime::ZERO, "mariadb",
+            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, SimTime::ZERO,
+            "mariadb", None,
         )
         .unwrap();
         let id = md
@@ -899,7 +1008,8 @@ mod tests {
         let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
         let mut store = LayerStore::default();
         md.pull_via_store(
-            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, SimTime::ZERO, "mariadb",
+            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, SimTime::ZERO,
+            "mariadb", None,
         )
         .unwrap();
         let unique = store.unique_bytes();
@@ -921,7 +1031,8 @@ mod tests {
         let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
         let mut store = LayerStore::default();
         md.pull_via_store(
-            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, SimTime::ZERO, "mariadb",
+            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, SimTime::ZERO,
+            "mariadb", None,
         )
         .unwrap();
         let id = md

@@ -37,13 +37,17 @@
 //!   how every event-loop caller issues it); for a background transfer
 //!   later preempted by foreground traffic the receipt it already
 //!   returned is an optimistic lower bound.
-//! * [`Fabric::schedule`] + [`Fabric::advance_to`]/[`Fabric::run_to_idle`]
-//!   — the event-driven engine (see [`sched`]): transfers become
-//!   arrival/release/preemption events at frame-quantum granularity on a
-//!   [`crate::sim::EventQueue`], a preempted background transfer is
-//!   *re-timed* instead of keeping its optimistic receipt, and
-//!   concurrent foreground-tier tenants share a contended link by
-//!   weight.  This closes the ROADMAP retro-causality item.
+//! * [`Fabric::schedule`] + [`Fabric::advance_to`]/[`Fabric::run_to_idle`]/
+//!   [`Fabric::settle`] — the event-driven engine (see [`sched`]):
+//!   transfers become arrival/release/preemption events at frame-quantum
+//!   granularity on a [`crate::sim::EventQueue`], a preempted background
+//!   transfer is *re-timed* instead of keeping its optimistic receipt,
+//!   and concurrent foreground-tier tenants share a contended link by
+//!   weight.  `settle` resolves one scheduled transfer without draining
+//!   unrelated future events — how the layerstore waits on an in-flight
+//!   chunk prefetch.  This closes the ROADMAP retro-causality item, and
+//!   since the chunk-granular layerstore refactor every
+//!   [`crate::layerstore::PoolLayerCache::prefetch`] rides it.
 //!
 //! Intranet traffic (`Array`/`Tray` links) is frame-accounted against
 //! the Ether-oN driver path: each transfer is chopped into MTU frames

@@ -8,6 +8,12 @@
 
 use std::collections::HashMap;
 
+/// A chunk's content digest (FNV-1a over the chunk bytes).  The same id
+/// space is used device-locally by the [`DedupIndex`] and pool-wide by
+/// [`crate::layerstore::PoolLayerCache`]'s per-node chunk presence map —
+/// a chunk is the unit of dedup *and* the unit of peer transfer.
+pub type ChunkId = u64;
+
 /// One live chunk.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ChunkEntry {

@@ -16,10 +16,13 @@
 //! * [`cow`]: writable per-container layers.  A write to a chunk with
 //!   refcount > 1 copies first (CoW break); exclusive chunks are
 //!   rewritten in place.
-//! * [`poolcache`]: pool-wide layer-presence map.  A node that needs a
-//!   layer fetches it from the nearest healthy peer over the Ether-oN
-//!   intranet instead of re-crossing the registry WAN; every byte it
-//!   moves rides the shared [`crate::fabric`] link queues.
+//! * [`poolcache`]: pool-wide layer-presence map at *chunk* granularity.
+//!   A node that needs a layer fetches only the chunks it misses, each
+//!   from its nearest healthy holder (full or partial) over the Ether-oN
+//!   intranet instead of re-crossing the registry WAN; every byte a
+//!   fetch moves rides the shared [`crate::fabric`] link queues, and
+//!   prefetch traffic is scheduled on the fabric's event-driven engine
+//!   so its receipts are re-timed under contention.
 
 pub mod cow;
 pub mod dedup;
@@ -33,8 +36,8 @@ use crate::ssd::SsdDevice;
 use crate::util::{fnv1a, SimTime};
 
 pub use cow::{CowStore, LayerId};
-pub use dedup::{ChunkEntry, Decref, DedupIndex};
-pub use poolcache::{FetchSource, PoolLayerCache};
+pub use dedup::{ChunkEntry, ChunkId, Decref, DedupIndex};
+pub use poolcache::{ChunkPlan, FetchSource, PoolLayerCache, PrefetchHandle};
 
 /// Default chunk size: 64KiB, the nrfs embedded-data threshold — small
 /// enough that single-file edits don't rewrite whole layers, large
@@ -119,6 +122,19 @@ impl LayerStore {
     /// Chunk digests of a stored blob, bottom-up order.
     pub fn blob_chunks(&self, digest: u64) -> Option<&[u64]> {
         self.recipes.get(&digest).map(|r| r.chunks.as_slice())
+    }
+
+    /// A stored blob's chunk recipe as (digest, bytes) pairs — the shape
+    /// [`crate::layerstore::PoolLayerCache::describe_chunks`] takes, so
+    /// a node can advertise its chunk-level presence pool-wide.
+    pub fn blob_chunk_recipe(&self, digest: u64) -> Option<Vec<(ChunkId, u64)>> {
+        let r = self.recipes.get(&digest)?;
+        Some(
+            r.chunks
+                .iter()
+                .map(|c| (*c, self.dedup.bytes_of(*c).unwrap_or(0)))
+                .collect(),
+        )
     }
 
     /// Bytes of distinct content on flash.
@@ -389,6 +405,21 @@ mod tests {
         assert!(st.has_blob(d), "one reference remains");
         st.unref_blob(&mut fs, d).unwrap();
         assert!(!st.has_blob(d));
+    }
+
+    #[test]
+    fn blob_chunk_recipe_partitions_the_blob() {
+        let (mut st, mut fs, mut dev) = rig();
+        let data = body(11, 10_000); // 4KiB chunks: 4096 + 4096 + 1808
+        let d = st.put_blob(&mut fs, &mut dev, SimTime::ZERO, &data).unwrap().value;
+        let recipe = st.blob_chunk_recipe(d).expect("stored blob has a recipe");
+        assert_eq!(recipe.len(), 3);
+        assert_eq!(recipe.iter().map(|(_, b)| *b).sum::<u64>(), 10_000);
+        assert_eq!(
+            recipe.iter().map(|(c, _)| *c).collect::<Vec<_>>(),
+            st.blob_chunks(d).unwrap()
+        );
+        assert!(st.blob_chunk_recipe(0xBAD).is_none());
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Pool-wide layer-presence map: which nodes hold which blob digests.
+//! Pool-wide layer-presence map: which nodes hold which blobs — and,
+//! since the chunk-granular refactor, which *chunks* of each blob.
 //!
 //! In the seed flow every `docker pull` on every node re-crossed the
 //! registry WAN (paper Figure 2b step 1).  With the presence map, a node
@@ -9,18 +10,41 @@
 //! Serverless Computing", PAPERS.md, makes the same cold-start
 //! locality argument).
 //!
-//! Every byte a fetch moves is routed through [`Fabric::transfer`], so
+//! Presence is tracked per chunk ([`crate::layerstore::ChunkId`]):
+//! blob-level presence is *derived* — a node "has" a blob exactly when
+//! it holds every chunk of the blob's recipe
+//! ([`PoolLayerCache::describe_chunks`]; an undescribed blob is one
+//! implicit chunk).  That makes three things possible that a blob-level
+//! map cannot express:
+//!
+//! * a node missing one chunk re-fetches one chunk, not the layer;
+//! * a *partial* holder (a node mid-pull, see
+//!   [`PoolLayerCache::register_chunk`]) serves exactly the chunks it
+//!   holds while the registry serves the rest;
+//! * one fetch splits a layer across multiple peers — the nearest
+//!   holder *per chunk* — so pulls from disjoint arrays overlap on
+//!   disjoint links while same-link pulls contend.
+//!
+//! Every byte a foreground fetch moves is routed through
+//! [`Fabric::transfer`] (exact for in-order foreground traffic), so
 //! concurrent fetches contend for the shared array/tray/WAN links
 //! instead of each seeing an idle wire.  [`PoolLayerCache::prefetch`]
-//! issues the same traffic at background priority — it yields the wire
-//! to foreground fetches within one frame quantum.
+//! schedules the same per-chunk traffic on the fabric's *event-driven
+//! engine* ([`Fabric::schedule`], background lane): its receipts come
+//! from [`Fabric::settle`]/[`Fabric::receipt_of`], so a prefetch
+//! preempted by later foreground traffic is re-timed
+//! (`fabric.retimed_transfers`) instead of keeping an optimistic
+//! busy-until figure — closing the ROADMAP item that sync background
+//! receipts were optimistic lower bounds.
 
-use std::collections::{BTreeSet, HashMap};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 
-use crate::fabric::{Endpoint, Fabric, Priority, TransferReceipt};
+use crate::fabric::{Endpoint, Fabric, Priority, TransferId};
 use crate::metrics::{names, Counters};
 use crate::pool::topology::{NodeId, PoolTopology};
 use crate::util::SimTime;
+
+pub use super::dedup::ChunkId;
 
 /// Where a needed layer comes from.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -31,18 +55,90 @@ pub enum FetchSource {
     Peer(NodeId),
     /// Pulled across the WAN from the registry.
     Registry,
+    /// Chunk-granular split: served by more than one remote source
+    /// (several peers, or peers plus the registry for the chunks no
+    /// peer holds).
+    Mixed,
+}
+
+/// One chunk's planned transfer (the unit [`PoolLayerCache::plan_chunks`]
+/// returns).  `source` is never [`FetchSource::Mixed`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkPlan {
+    pub chunk: ChunkId,
+    pub bytes: u64,
+    pub source: FetchSource,
+}
+
+/// Handle to an engine-scheduled prefetch: the per-chunk transfer ids
+/// plus a floor time.  [`PrefetchHandle::settle`] pumps the fabric
+/// engine just far enough to resolve every transfer and returns the
+/// (possibly re-timed) time the last byte lands.
+#[derive(Clone, Debug, Default)]
+pub struct PrefetchHandle {
+    ids: Vec<TransferId>,
+    ready: SimTime,
+}
+
+impl PrefetchHandle {
+    fn at(ready: SimTime) -> Self {
+        PrefetchHandle { ids: Vec::new(), ready }
+    }
+
+    /// The engine transfers this prefetch issued (empty for a local
+    /// no-op).
+    pub fn ids(&self) -> &[TransferId] {
+        &self.ids
+    }
+
+    /// Resolve every transfer on the engine and return when the last
+    /// byte lands.  Idempotent; a no-op handle returns its floor time.
+    pub fn settle(&self, fabric: &mut Fabric) -> SimTime {
+        let mut t = self.ready;
+        for id in &self.ids {
+            if let Some(r) = fabric.settle(*id) {
+                t = t.max(r.finish);
+            }
+        }
+        t
+    }
 }
 
 /// The presence map plus fetch accounting.
 #[derive(Default)]
 pub struct PoolLayerCache {
+    /// blob -> nodes holding *every* chunk of it (derived view).
     presence: HashMap<u64, BTreeSet<NodeId>>,
+    /// blob -> nodes that took a blob-level registration (the copies GC
+    /// and [`PoolLayerCache::evict`] can drop).  A node can be present
+    /// in `presence` but not here when other blobs' registrations pin
+    /// all of this blob's chunks.
+    registered: HashMap<u64, BTreeSet<NodeId>>,
+    /// blob -> distinct chunk recipe, first-occurrence order.
+    recipes: HashMap<u64, Vec<(ChunkId, u64)>>,
+    /// chunk -> per-node registration refcounts (a node referencing a
+    /// shared chunk through two blobs holds two refs; the chunk stays
+    /// present until both are dropped).
+    chunk_holders: HashMap<ChunkId, BTreeMap<NodeId, u32>>,
+    /// chunk -> blobs whose recipe contains it (for derived-presence
+    /// updates).
+    chunk_blobs: HashMap<ChunkId, BTreeSet<u64>>,
+    /// (node, blob) -> chunks held via partial (mid-pull) registration.
+    partial: HashMap<(NodeId, u64), BTreeSet<ChunkId>>,
     pub local_hits: u64,
     pub peer_fetches: u64,
     pub registry_fetches: u64,
     pub bytes_local: u64,
     pub bytes_from_peers: u64,
     pub bytes_from_registry: u64,
+    /// Chunk transfers actually issued (fetch + prefetch).
+    pub chunk_fetches: u64,
+    /// Chunk bytes served by peers over the intranet.
+    pub chunk_bytes_peer: u64,
+    /// Chunk bytes that crossed the registry WAN.
+    pub chunk_bytes_registry: u64,
+    /// Distinct partial holders that served chunks, summed over ops.
+    pub partial_holders_used: u64,
     /// Bytes moved by background prefetch (also counted in the
     /// peer/registry totals above).
     pub prefetch_bytes: u64,
@@ -50,10 +146,10 @@ pub struct PoolLayerCache {
     pub gc_evictions: u64,
     /// Layers whose presence came from a prefetch and whose first
     /// boot-path fetch hasn't consumed it yet, mapped to the prefetch's
-    /// fabric finish time.  The first local hit waits for that tail (the
-    /// bytes may still be in flight) and must not re-count bytes the
-    /// prefetch already accounted.
-    prefetched: HashMap<(NodeId, u64), SimTime>,
+    /// in-flight engine transfers.  The first local hit settles that
+    /// tail (the bytes may still be in flight) and must not re-count
+    /// bytes the prefetch already accounted.
+    prefetched: HashMap<(NodeId, u64), PrefetchHandle>,
 }
 
 impl PoolLayerCache {
@@ -61,17 +157,231 @@ impl PoolLayerCache {
         Self::default()
     }
 
-    /// Record that `node` now holds `digest`.
-    pub fn register(&mut self, node: NodeId, digest: u64) {
-        self.presence.entry(digest).or_default().insert(node);
+    /// The chunk ids a blob decomposes into: its described recipe, or
+    /// the blob digest itself as one implicit chunk.
+    fn recipe_chunk_ids(&self, blob: u64) -> Vec<ChunkId> {
+        match self.recipes.get(&blob) {
+            Some(r) => r.iter().map(|(c, _)| *c).collect(),
+            None => vec![blob],
+        }
     }
 
-    /// Record that `node` dropped `digest` (image removed / GC).
+    /// Whether `node` holds every chunk of `blob`.  O(recipe) per call —
+    /// chunk registration is therefore O(recipe^2) per layer, fine at
+    /// this simulation's chunk counts (a per-(node, blob) held-chunk
+    /// counter would make it O(1) if layers ever grow to many thousands
+    /// of chunks).
+    fn holds_all_chunks(&self, node: NodeId, blob: u64) -> bool {
+        match self.recipes.get(&blob) {
+            Some(r) => r.iter().all(|(c, _)| self.node_has_chunk(node, *c)),
+            None => self.node_has_chunk(node, blob),
+        }
+    }
+
+    fn incref_chunk(&mut self, node: NodeId, chunk: ChunkId) {
+        *self
+            .chunk_holders
+            .entry(chunk)
+            .or_default()
+            .entry(node)
+            .or_insert(0) += 1;
+        // re-derive presence for every blob containing this chunk — on
+        // every ref add, not just the 0->1 transition: a registration
+        // whose chunks were already pinned through *other* blobs (refs
+        // going 1->2) still completes a blob here, and the backfill in
+        // describe_chunks relies on this to restore presence it dropped
+        let blobs: Vec<u64> = self
+            .chunk_blobs
+            .get(&chunk)
+            .map(|s| s.iter().copied().collect())
+            .unwrap_or_default();
+        for b in blobs {
+            if self.holds_all_chunks(node, b) {
+                self.presence.entry(b).or_default().insert(node);
+            }
+        }
+    }
+
+    fn decref_chunk(&mut self, node: NodeId, chunk: ChunkId) {
+        let now_empty = {
+            let Some(holders) = self.chunk_holders.get_mut(&chunk) else {
+                return;
+            };
+            let Some(refs) = holders.get_mut(&node) else {
+                return;
+            };
+            *refs -= 1;
+            if *refs > 0 {
+                return;
+            }
+            holders.remove(&node);
+            holders.is_empty()
+        };
+        if now_empty {
+            self.chunk_holders.remove(&chunk);
+        }
+        // the node no longer holds this chunk, so it no longer holds any
+        // blob whose recipe needs it
+        let blobs: Vec<u64> = self
+            .chunk_blobs
+            .get(&chunk)
+            .map(|s| s.iter().copied().collect())
+            .unwrap_or_default();
+        for b in blobs {
+            if let Some(set) = self.presence.get_mut(&b) {
+                set.remove(&node);
+                if set.is_empty() {
+                    self.presence.remove(&b);
+                }
+            }
+        }
+    }
+
+    /// Declare `blob`'s chunk composition (digest + length per chunk, in
+    /// blob order; duplicates dedup to their first occurrence).  Must be
+    /// called before per-chunk operations on the blob; idempotent for
+    /// the same recipe.  Nodes already registered blob-level are
+    /// backfilled as holding every chunk.
+    ///
+    /// Returns whether the pool's recipe now matches the given one: a
+    /// blob already described with a *different* recipe (e.g. two nodes
+    /// chunking with different sizes) keeps the first — the pool's chunk
+    /// ids must be one shared namespace — and the caller should fall
+    /// back to blob-granular registration.
+    #[must_use = "a false return means the recipe conflicted and per-chunk ops will not match"]
+    pub fn describe_chunks(&mut self, blob: u64, recipe: &[(ChunkId, u64)]) -> bool {
+        let mut seen = BTreeSet::new();
+        let distinct: Vec<(ChunkId, u64)> = recipe
+            .iter()
+            .filter(|(c, _)| seen.insert(*c))
+            .copied()
+            .collect();
+        if let Some(existing) = self.recipes.get(&blob) {
+            return *existing == distinct;
+        }
+        let holders: Vec<NodeId> = self
+            .registered
+            .get(&blob)
+            .map(|s| s.iter().copied().collect())
+            .unwrap_or_default();
+        // migrate existing holders' implicit single-chunk refs onto the
+        // real recipe
+        for &n in &holders {
+            self.decref_chunk(n, blob);
+        }
+        let mut implicit_gone = false;
+        if let Some(set) = self.chunk_blobs.get_mut(&blob) {
+            set.remove(&blob);
+            implicit_gone = set.is_empty();
+        }
+        if implicit_gone {
+            self.chunk_blobs.remove(&blob);
+        }
+        for (c, _) in &distinct {
+            self.chunk_blobs.entry(*c).or_default().insert(blob);
+        }
+        self.recipes.insert(blob, distinct.clone());
+        for &n in &holders {
+            for (c, _) in &distinct {
+                self.incref_chunk(n, *c);
+            }
+        }
+        // nodes already holding every recipe chunk through *other* blobs
+        // derive presence of this one immediately (a candidate must hold
+        // the first chunk, so that holder set bounds the search)
+        if let Some((c0, _)) = distinct.first() {
+            let cands: Vec<NodeId> = self
+                .chunk_holders
+                .get(c0)
+                .map(|m| m.keys().copied().collect())
+                .unwrap_or_default();
+            for n in cands {
+                if self.holds_all_chunks(n, blob) {
+                    self.presence.entry(blob).or_default().insert(n);
+                }
+            }
+        }
+        true
+    }
+
+    /// The described chunk recipe of `blob`, if any.
+    pub fn chunk_recipe(&self, blob: u64) -> Option<&[(ChunkId, u64)]> {
+        self.recipes.get(&blob).map(Vec::as_slice)
+    }
+
+    /// Record that `node` now holds all of `digest` (a blob-level
+    /// registration; idempotent).  Any partial registration for the
+    /// same (node, blob) is absorbed — its chunk refs carry over.
+    pub fn register(&mut self, node: NodeId, digest: u64) {
+        if !self.recipes.contains_key(&digest) {
+            self.chunk_blobs.entry(digest).or_default().insert(digest);
+        }
+        if !self.registered.entry(digest).or_default().insert(node) {
+            return;
+        }
+        let part = self.partial.remove(&(node, digest)).unwrap_or_default();
+        for c in self.recipe_chunk_ids(digest) {
+            if !part.contains(&c) {
+                self.incref_chunk(node, c);
+            }
+        }
+    }
+
+    /// Record that `node` holds one chunk of `digest` — a mid-pull
+    /// partial registration ([`describe_chunks`](Self::describe_chunks)
+    /// first).  The node becomes a chunk-level peer immediately; when
+    /// its partial set covers the whole recipe it is promoted to a full
+    /// blob-level registration.
+    pub fn register_chunk(&mut self, node: NodeId, blob: u64, chunk: ChunkId) {
+        {
+            let recipe = self
+                .recipes
+                .get(&blob)
+                .unwrap_or_else(|| panic!("describe_chunks({blob:016x}) before register_chunk"));
+            debug_assert!(
+                recipe.iter().any(|(c, _)| *c == chunk),
+                "chunk {chunk:016x} is not in blob {blob:016x}'s recipe"
+            );
+        }
+        if self.registered.get(&blob).is_some_and(|s| s.contains(&node)) {
+            return; // already a full holder
+        }
+        let part = self.partial.entry((node, blob)).or_default();
+        if !part.insert(chunk) {
+            return;
+        }
+        self.incref_chunk(node, chunk);
+        let complete = {
+            let part = &self.partial[&(node, blob)];
+            self.recipes[&blob].iter().all(|(c, _)| part.contains(c))
+        };
+        if complete {
+            // promotion: the partial refs become the blob registration's
+            self.partial.remove(&(node, blob));
+            self.registered.entry(blob).or_default().insert(node);
+        }
+    }
+
+    /// Record that `node` dropped `digest` (image removed / GC): drops
+    /// the blob-level registration's chunk refs plus any partial refs.
+    /// Chunks the node still references through *other* blobs stay
+    /// present — and so does any blob presence they derive.
     pub fn evict(&mut self, node: NodeId, digest: u64) {
-        if let Some(set) = self.presence.get_mut(&digest) {
-            set.remove(&node);
-            if set.is_empty() {
-                self.presence.remove(&digest);
+        let was_registered = self
+            .registered
+            .get_mut(&digest)
+            .is_some_and(|s| s.remove(&node));
+        if was_registered {
+            for c in self.recipe_chunk_ids(digest) {
+                self.decref_chunk(node, c);
+            }
+        }
+        if self.registered.get(&digest).is_some_and(|s| s.is_empty()) {
+            self.registered.remove(&digest);
+        }
+        if let Some(part) = self.partial.remove(&(node, digest)) {
+            for c in part {
+                self.decref_chunk(node, c);
             }
         }
         // a dropped layer's prefetch marker must not suppress the byte
@@ -83,10 +393,25 @@ impl PoolLayerCache {
         self.presence.get(&digest).is_some_and(|s| s.contains(&node))
     }
 
+    pub fn node_has_chunk(&self, node: NodeId, chunk: ChunkId) -> bool {
+        self.chunk_holders
+            .get(&chunk)
+            .is_some_and(|m| m.contains_key(&node))
+    }
+
     pub fn holders(&self, digest: u64) -> Vec<NodeId> {
         self.presence
             .get(&digest)
             .map(|s| s.iter().copied().collect())
+            .unwrap_or_default()
+    }
+
+    /// All holders of one chunk — full blob holders and partial
+    /// (mid-pull) holders alike.
+    pub fn chunk_holders_of(&self, chunk: ChunkId) -> Vec<NodeId> {
+        self.chunk_holders
+            .get(&chunk)
+            .map(|m| m.keys().copied().collect())
             .unwrap_or_default()
     }
 
@@ -96,9 +421,9 @@ impl PoolLayerCache {
         digests.iter().filter(|d| self.node_has(node, **d)).count()
     }
 
-    /// Nearest healthy holder of `digest` by idle-wire fabric estimate
-    /// (ties broken by lowest node id via BTreeSet iteration order +
-    /// strict `<`).
+    /// Nearest healthy *full* holder of `digest` by idle-wire fabric
+    /// estimate (ties broken by lowest node id via BTreeSet iteration
+    /// order + strict `<`).
     pub fn nearest_peer(
         &self,
         fabric: &Fabric,
@@ -108,8 +433,31 @@ impl PoolLayerCache {
         bytes: u64,
     ) -> Option<(NodeId, SimTime)> {
         let holders = self.presence.get(&digest)?;
+        Self::best_holder(fabric, topo, node, bytes, holders.iter().copied())
+    }
+
+    /// Nearest healthy holder of one *chunk* — partial holders count.
+    pub fn nearest_chunk_peer(
+        &self,
+        fabric: &Fabric,
+        topo: &PoolTopology,
+        node: NodeId,
+        chunk: ChunkId,
+        bytes: u64,
+    ) -> Option<(NodeId, SimTime)> {
+        let holders = self.chunk_holders.get(&chunk)?;
+        Self::best_holder(fabric, topo, node, bytes, holders.keys().copied())
+    }
+
+    fn best_holder<I: Iterator<Item = NodeId>>(
+        fabric: &Fabric,
+        topo: &PoolTopology,
+        node: NodeId,
+        bytes: u64,
+        holders: I,
+    ) -> Option<(NodeId, SimTime)> {
         let mut best: Option<(NodeId, SimTime)> = None;
-        for &h in holders {
+        for h in holders {
             if h == node || !topo.node(h).is_some_and(|n| n.healthy) {
                 continue;
             }
@@ -121,8 +469,74 @@ impl PoolLayerCache {
         best
     }
 
-    /// Decide where `node` would get `digest` from, and the idle-wire
-    /// transfer estimate.  Does not mutate state or occupy links.
+    /// Plan `digest`'s transfer chunk by chunk: for every chunk `node`
+    /// is missing, the nearest healthy holder — full *or* partial — or
+    /// the registry when no peer holds it.  Chunks the node already
+    /// holds plan as `Local` (nothing moves).  Does not mutate state.
+    pub fn plan_chunks(
+        &self,
+        fabric: &Fabric,
+        topo: &PoolTopology,
+        node: NodeId,
+        digest: u64,
+        bytes: u64,
+    ) -> Vec<ChunkPlan> {
+        let recipe: Vec<(ChunkId, u64)> = match self.recipes.get(&digest) {
+            Some(r) => r.clone(),
+            None => vec![(digest, bytes)],
+        };
+        recipe
+            .into_iter()
+            .map(|(chunk, b)| {
+                let source = if self.node_has_chunk(node, chunk) {
+                    FetchSource::Local
+                } else {
+                    match self.nearest_chunk_peer(fabric, topo, node, chunk, b) {
+                        Some((p, _)) => FetchSource::Peer(p),
+                        None => FetchSource::Registry,
+                    }
+                };
+                ChunkPlan {
+                    chunk,
+                    bytes: b,
+                    source,
+                }
+            })
+            .collect()
+    }
+
+    /// Group a per-chunk plan by remote source: bytes per peer, registry
+    /// bytes, and the one-source summary ([`FetchSource::Mixed`] when
+    /// more than one remote source serves).  The single classification
+    /// both [`PoolLayerCache::plan`] and the fetch/prefetch accounting
+    /// report from.
+    fn summarize_sources(plans: &[ChunkPlan]) -> (BTreeMap<NodeId, u64>, u64, FetchSource) {
+        let mut peer_bytes: BTreeMap<NodeId, u64> = BTreeMap::new();
+        let mut reg_bytes = 0u64;
+        for p in plans {
+            match p.source {
+                FetchSource::Local => {}
+                FetchSource::Peer(n) => *peer_bytes.entry(n).or_insert(0) += p.bytes,
+                FetchSource::Registry => reg_bytes += p.bytes,
+                FetchSource::Mixed => unreachable!("per-chunk plans are never Mixed"),
+            }
+        }
+        let src = match (
+            peer_bytes.len(),
+            plans.iter().any(|p| p.source == FetchSource::Registry),
+        ) {
+            (0, false) => FetchSource::Local,
+            (1, false) => FetchSource::Peer(*peer_bytes.keys().next().expect("one peer")),
+            (0, true) => FetchSource::Registry,
+            _ => FetchSource::Mixed,
+        };
+        (peer_bytes, reg_bytes, src)
+    }
+
+    /// Summarize a per-chunk plan into one source + the idle-wire
+    /// estimate: bytes are grouped by source, per-source transfers are
+    /// assumed to overlap (they serialize only where their paths share a
+    /// link, which planning ignores just as it ignores queue occupancy).
     pub fn plan(
         &self,
         fabric: &Fabric,
@@ -134,20 +548,72 @@ impl PoolLayerCache {
         if self.node_has(node, digest) {
             return (FetchSource::Local, SimTime::ZERO);
         }
-        if let Some((peer, t)) = self.nearest_peer(fabric, topo, node, digest, bytes) {
-            return (FetchSource::Peer(peer), t);
+        let plans = self.plan_chunks(fabric, topo, node, digest, bytes);
+        let (peer_bytes, reg_bytes, src) = Self::summarize_sources(&plans);
+        let mut t = SimTime::ZERO;
+        for (&p, &b) in &peer_bytes {
+            t = t.max(fabric.estimate(Endpoint::Node(p), Endpoint::Node(node), b));
         }
-        (
-            FetchSource::Registry,
-            fabric.estimate(Endpoint::Registry, Endpoint::Node(node), bytes),
-        )
+        if reg_bytes > 0 {
+            t = t.max(fabric.estimate(Endpoint::Registry, Endpoint::Node(node), reg_bytes));
+        }
+        (src, t)
     }
 
-    /// Execute a foreground fetch over the shared fabric: account for
-    /// it, mark `node` as a holder, and return the source + the latency
-    /// the fabric actually granted (including queue wait behind other
-    /// in-flight transfers).  Fetching a layer whose prefetch is still
-    /// in flight waits for the prefetch's tail instead of being free.
+    /// Account one op's per-chunk plans — chunk counters, op-level
+    /// peer/registry counters, partial-holder usage — and return the
+    /// op's summary source.  Shared by [`PoolLayerCache::fetch`] and
+    /// [`PoolLayerCache::prefetch`] so foreground and background byte
+    /// accounting can never diverge.  Must run *before*
+    /// `register(node, digest)` so partial holders are classified
+    /// against pre-op presence.
+    fn account_chunk_plans(&mut self, plans: &[ChunkPlan], digest: u64) -> FetchSource {
+        let (peer_bytes, reg_bytes, src) = Self::summarize_sources(plans);
+        self.chunk_fetches += plans
+            .iter()
+            .filter(|p| p.source != FetchSource::Local)
+            .count() as u64;
+        for (&peer, &b) in &peer_bytes {
+            self.chunk_bytes_peer += b;
+            self.bytes_from_peers += b;
+            if !self.node_has(peer, digest) {
+                self.partial_holders_used += 1;
+            }
+        }
+        self.chunk_bytes_registry += reg_bytes;
+        self.bytes_from_registry += reg_bytes;
+        if !peer_bytes.is_empty() {
+            self.peer_fetches += 1;
+        }
+        if plans.iter().any(|p| p.source == FetchSource::Registry) {
+            self.registry_fetches += 1;
+        }
+        src
+    }
+
+    /// Settle the in-flight prefetch tail of `(node, digest)` if one
+    /// exists, returning when that copy is fully landed (or `now`).
+    fn source_ready(
+        &self,
+        fabric: &mut Fabric,
+        now: SimTime,
+        node: NodeId,
+        digest: u64,
+    ) -> SimTime {
+        match self.prefetched.get(&(node, digest)) {
+            Some(tail) => tail.settle(fabric).max(now),
+            None => now,
+        }
+    }
+
+    /// Execute a foreground fetch over the shared fabric, chunk by
+    /// chunk: each missing chunk comes from its nearest holder (peer
+    /// chunks over Array links, registry chunks over the WAN — one
+    /// layer can split across several peers), `node` is marked a full
+    /// holder, and the returned latency is when the *last* chunk lands
+    /// (including queue wait behind other in-flight transfers).
+    /// Fetching a layer whose prefetch is still in flight settles the
+    /// prefetch's tail instead of being free.
     pub fn fetch(
         &mut self,
         fabric: &mut Fabric,
@@ -157,15 +623,65 @@ impl PoolLayerCache {
         digest: u64,
         bytes: u64,
     ) -> (FetchSource, SimTime) {
-        let (src, receipt) =
-            self.transfer(fabric, topo, now, node, digest, bytes, Priority::Foreground);
-        (src, receipt.latency())
+        if self.node_has(node, digest) {
+            self.local_hits += 1;
+            // first hit on a prefetched layer: wait for the prefetch's
+            // in-flight tail, and don't re-count bytes the prefetch
+            // already accounted
+            let lat = match self.prefetched.remove(&(node, digest)) {
+                Some(tail) => tail.settle(fabric).max(now).saturating_sub(now),
+                None => {
+                    self.bytes_local += bytes;
+                    SimTime::ZERO
+                }
+            };
+            return (FetchSource::Local, lat);
+        }
+        let plans = self.plan_chunks(fabric, topo, node, digest, bytes);
+        let src = self.account_chunk_plans(&plans, digest);
+        let mut finish = now;
+        for p in &plans {
+            match p.source {
+                FetchSource::Local => {}
+                FetchSource::Peer(peer) => {
+                    // a peer whose own copy is still arriving (in-flight
+                    // prefetch) can only start serving once its bytes land
+                    let src_ready = self.source_ready(fabric, now, peer, digest);
+                    let r = fabric.transfer(
+                        src_ready,
+                        Endpoint::Node(peer),
+                        Endpoint::Node(node),
+                        p.bytes,
+                        Priority::Foreground,
+                    );
+                    finish = finish.max(r.finish);
+                }
+                FetchSource::Registry => {
+                    let r = fabric.transfer(
+                        now,
+                        Endpoint::Registry,
+                        Endpoint::Node(node),
+                        p.bytes,
+                        Priority::Foreground,
+                    );
+                    finish = finish.max(r.finish);
+                }
+                FetchSource::Mixed => unreachable!("per-chunk plans are never Mixed"),
+            }
+        }
+        self.register(node, digest);
+        (src, finish.saturating_sub(now))
     }
 
-    /// Kick off a background prefetch of `digest` toward `node`: same
-    /// source choice and accounting as [`PoolLayerCache::fetch`], but
-    /// the bytes ride the background lane — they yield the wire to any
-    /// foreground fetch within one frame quantum.
+    /// Kick off a background prefetch of `digest` toward `node`: the
+    /// same per-chunk source choice and accounting as
+    /// [`PoolLayerCache::fetch`], but every transfer is *scheduled on
+    /// the fabric's event-driven engine* at background priority — the
+    /// bytes yield the wire to foreground traffic within one frame
+    /// quantum, and a preempted transfer's receipt is re-timed
+    /// (`fabric.retimed_transfers`) rather than staying an optimistic
+    /// lower bound.  Settle the returned handle (or let the boot-path
+    /// fetch settle the marker) to observe the real landing time.
     pub fn prefetch(
         &mut self,
         fabric: &mut Fabric,
@@ -174,109 +690,117 @@ impl PoolLayerCache {
         node: NodeId,
         digest: u64,
         bytes: u64,
-    ) -> (FetchSource, TransferReceipt) {
-        let (src, receipt) =
-            self.transfer(fabric, topo, now, node, digest, bytes, Priority::Background);
-        if src != FetchSource::Local {
-            self.prefetch_bytes += bytes;
+    ) -> (FetchSource, PrefetchHandle) {
+        if self.node_has(node, digest) {
+            // a background prefetch of a resident (or already in-flight)
+            // layer is a no-op: nothing moves, nothing is saved, and any
+            // live marker stays live
+            let handle = self
+                .prefetched
+                .get(&(node, digest))
+                .cloned()
+                .unwrap_or_else(|| PrefetchHandle::at(now));
+            return (FetchSource::Local, handle);
         }
-        (src, receipt)
-    }
-
-    #[allow(clippy::too_many_arguments)]
-    fn transfer(
-        &mut self,
-        fabric: &mut Fabric,
-        topo: &PoolTopology,
-        now: SimTime,
-        node: NodeId,
-        digest: u64,
-        bytes: u64,
-        pri: Priority,
-    ) -> (FetchSource, TransferReceipt) {
-        let (src, _) = self.plan(fabric, topo, node, digest, bytes);
-        let receipt = match src {
-            FetchSource::Local => {
-                if pri.is_background() {
-                    // a background prefetch of a resident (or already
-                    // in-flight) layer is a no-op: nothing moves, nothing
-                    // is saved, and any live marker stays live
-                    let ready = self.prefetched.get(&(node, digest)).copied();
-                    TransferReceipt {
-                        issued: now,
-                        begin: now,
-                        finish: ready.unwrap_or(now).max(now),
-                        bytes: 0,
-                        frames: 0,
+        let plans = self.plan_chunks(fabric, topo, node, digest, bytes);
+        let src = self.account_chunk_plans(&plans, digest);
+        let mut ids = Vec::new();
+        let mut moved = 0u64;
+        // Two phases: independent chunks first, marker-dependent chunks
+        // after.  Settling a source's in-flight marker pins the engine
+        // clock at its finish, and the engine cannot schedule into its
+        // own past — issuing the independent transfers first keeps them
+        // from being clamped behind a dependency they don't have.
+        let independent = |p: &ChunkPlan, pc: &Self| match p.source {
+            FetchSource::Peer(peer) => !pc.prefetched.contains_key(&(peer, digest)),
+            _ => true,
+        };
+        for phase in [true, false] {
+            for p in plans.iter().filter(|p| independent(p, self) == phase) {
+                match p.source {
+                    FetchSource::Local => {}
+                    FetchSource::Peer(peer) => {
+                        let src_ready = self.source_ready(fabric, now, peer, digest);
+                        ids.push(fabric.schedule(
+                            src_ready,
+                            Endpoint::Node(peer),
+                            Endpoint::Node(node),
+                            p.bytes,
+                            Priority::Background,
+                        ));
+                        moved += p.bytes;
                     }
-                } else {
-                    self.local_hits += 1;
-                    // first hit on a prefetched layer: wait for the
-                    // prefetch's in-flight tail, and don't re-count
-                    // bytes the prefetch already accounted
-                    match self.prefetched.remove(&(node, digest)) {
-                        Some(ready) => TransferReceipt {
-                            issued: now,
-                            begin: now,
-                            finish: ready.max(now),
-                            bytes: 0,
-                            frames: 0,
-                        },
-                        None => {
-                            self.bytes_local += bytes;
-                            TransferReceipt::immediate(now)
-                        }
+                    FetchSource::Registry => {
+                        ids.push(fabric.schedule(
+                            now,
+                            Endpoint::Registry,
+                            Endpoint::Node(node),
+                            p.bytes,
+                            Priority::Background,
+                        ));
+                        moved += p.bytes;
                     }
+                    FetchSource::Mixed => unreachable!("per-chunk plans are never Mixed"),
                 }
             }
-            FetchSource::Peer(peer) => {
-                self.peer_fetches += 1;
-                self.bytes_from_peers += bytes;
-                // a peer whose own copy is still arriving (in-flight
-                // prefetch) can only start serving once its bytes land
-                let src_ready = self
-                    .prefetched
-                    .get(&(peer, digest))
-                    .copied()
-                    .unwrap_or(now)
-                    .max(now);
-                let mut receipt =
-                    fabric.transfer(src_ready, Endpoint::Node(peer), Endpoint::Node(node), bytes, pri);
-                receipt.issued = now;
-                receipt
-            }
-            FetchSource::Registry => {
-                self.registry_fetches += 1;
-                self.bytes_from_registry += bytes;
-                fabric.transfer(now, Endpoint::Registry, Endpoint::Node(node), bytes, pri)
-            }
-        };
-        self.register(node, digest);
-        if pri == Priority::Background && src != FetchSource::Local {
-            self.prefetched.insert((node, digest), receipt.finish);
         }
-        (src, receipt)
+        self.prefetch_bytes += moved;
+        self.register(node, digest);
+        let handle = PrefetchHandle { ids, ready: now };
+        if moved > 0 {
+            self.prefetched.insert((node, digest), handle.clone());
+        }
+        (src, handle)
+    }
+
+    /// Whether evicting `node`'s copy of `blob` keeps every chunk of the
+    /// blob at >= `k` holders.  A chunk the node also references through
+    /// another blob (refcount > 1) survives the eviction, so it never
+    /// blocks one.
+    fn eviction_keeps_chunks_at_k(&self, blob: u64, node: NodeId, k: usize) -> bool {
+        for c in self.recipe_chunk_ids(blob) {
+            let Some(holders) = self.chunk_holders.get(&c) else {
+                continue;
+            };
+            if holders.get(&node) == Some(&1) && holders.len() - 1 < k {
+                return false;
+            }
+        }
+        true
     }
 
     /// Pool-wide garbage collection (the placement-side half lives in
-    /// the orchestrator): for every layer held by more than `k` nodes,
-    /// drop copies from the most-loaded holders until exactly `k`
-    /// remain — ties evict the higher node id, so the lowest-id holders
-    /// survive deterministically.  Layers at or below `k` holders are
+    /// the orchestrator): for every blob held by more than `k` nodes,
+    /// drop registrations from the most-loaded holders until `k` remain
+    /// — ties evict the higher node id, so the lowest-id holders
+    /// survive deterministically.  Eviction refuses to drop a node that
+    /// would leave any *chunk* of the blob below `k` holders (partial
+    /// holders count; a chunk the node also holds via another blob
+    /// survives regardless).  Blobs at or below `k` holders are
     /// untouched.  Returns the (node, digest) pairs evicted so callers
     /// can reclaim the bytes from each node's store.
     pub fn gc<L: Fn(NodeId) -> u64>(&mut self, k: usize, load: L) -> Vec<(NodeId, u64)> {
-        let digests: Vec<u64> = self.presence.keys().copied().collect();
+        let mut digests: Vec<u64> = self.presence.keys().copied().collect();
+        digests.sort_unstable();
         let mut evicted = Vec::new();
         for digest in digests {
-            let mut holders = self.holders(digest);
-            if holders.len() <= k {
-                continue;
-            }
-            let excess = holders.len() - k;
-            // most-loaded first; ties evict the higher id
-            holders.sort_by(|a, b| load(*b).cmp(&load(*a)).then(b.cmp(a)));
-            for &node in holders.iter().take(excess) {
+            loop {
+                if self.holders(digest).len() <= k {
+                    break;
+                }
+                // most-loaded registration first; ties evict the higher id
+                let mut cands: Vec<NodeId> = self
+                    .registered
+                    .get(&digest)
+                    .map(|s| s.iter().copied().collect())
+                    .unwrap_or_default();
+                cands.sort_by(|a, b| load(*b).cmp(&load(*a)).then(b.cmp(a)));
+                let Some(&node) = cands
+                    .iter()
+                    .find(|n| self.eviction_keeps_chunks_at_k(digest, **n, k))
+                else {
+                    break;
+                };
                 self.evict(node, digest);
                 evicted.push((node, digest));
             }
@@ -297,6 +821,10 @@ impl PoolLayerCache {
         c.add(names::BYTES_FROM_REGISTRY, self.bytes_from_registry);
         c.add(names::BYTES_NOT_TRANSFERRED, self.wan_bytes_saved());
         c.add(names::GC_EVICTIONS, self.gc_evictions);
+        c.add(names::CHUNK_FETCHES, self.chunk_fetches);
+        c.add(names::CHUNK_BYTES_PEER, self.chunk_bytes_peer);
+        c.add(names::CHUNK_BYTES_REGISTRY, self.chunk_bytes_registry);
+        c.add(names::PARTIAL_HOLDERS_USED, self.partial_holders_used);
     }
 }
 
@@ -403,10 +931,10 @@ mod tests {
         let (t, mut f) = rig(4, 1);
         let mut pc = PoolLayerCache::new();
         pc.register(0, 0xAB);
-        // large background prefetch toward node 1
-        let (src, receipt) = pc.prefetch(&mut f, &t, SimTime::ZERO, 1, 0xAB, 64 << 20);
+        // large background prefetch toward node 1, granted the wire at t=0
+        let (src, handle) = pc.prefetch(&mut f, &t, SimTime::ZERO, 1, 0xAB, 64 << 20);
         assert_eq!(src, FetchSource::Peer(0));
-        assert!(receipt.finish > SimTime::ZERO);
+        f.advance_to(SimTime::ZERO); // grant the background flight
         assert!(pc.node_has(1, 0xAB), "prefetch registers the holder");
         assert_eq!(pc.prefetch_bytes, 64 << 20);
         // a foreground fetch on the same link is delayed by at most one
@@ -420,6 +948,8 @@ mod tests {
             lat <= idle + quantum,
             "foreground lat {lat} exceeds idle {idle} + quantum {quantum}"
         );
+        // the prefetch eventually lands with a real (settled) receipt
+        assert!(handle.settle(&mut f) > SimTime::ZERO);
     }
 
     #[test]
@@ -427,13 +957,19 @@ mod tests {
         let (t, mut f) = rig(3, 1);
         let mut pc = PoolLayerCache::new();
         pc.register(0, 0x33);
-        let (_, receipt) = pc.prefetch(&mut f, &t, SimTime::ZERO, 1, 0x33, 16 << 20);
+        let (_, handle) = pc.prefetch(&mut f, &t, SimTime::ZERO, 1, 0x33, 16 << 20);
         // fetching before the prefetch lands waits exactly its tail
         let (src, lat) = pc.fetch(&mut f, &t, SimTime::ZERO, 1, 0x33, 16 << 20);
         assert_eq!(src, FetchSource::Local);
-        assert_eq!(lat, receipt.finish, "boot blocks until the prefetched bytes arrive");
+        let finish = handle.settle(&mut f);
+        assert_eq!(lat, finish, "boot blocks until the prefetched bytes arrive");
+        assert_eq!(
+            finish,
+            f.estimate(Endpoint::Node(0), Endpoint::Node(1), 16 << 20),
+            "an unpreempted engine prefetch lands at the idle-wire estimate"
+        );
         // after the tail, the layer is simply resident
-        let (_, lat2) = pc.fetch(&mut f, &t, receipt.finish, 1, 0x33, 16 << 20);
+        let (_, lat2) = pc.fetch(&mut f, &t, finish, 1, 0x33, 16 << 20);
         assert_eq!(lat2, SimTime::ZERO);
     }
 
@@ -460,9 +996,10 @@ mod tests {
         let (t, mut f) = rig(2, 1);
         let mut pc = PoolLayerCache::new();
         pc.register(0, 0x11);
-        let (src, receipt) = pc.prefetch(&mut f, &t, SimTime::ZERO, 0, 0x11, 1 << 20);
+        let (src, handle) = pc.prefetch(&mut f, &t, SimTime::ZERO, 0, 0x11, 1 << 20);
         assert_eq!(src, FetchSource::Local);
-        assert_eq!(receipt.latency(), SimTime::ZERO);
+        assert!(handle.ids().is_empty(), "nothing was scheduled");
+        assert_eq!(handle.settle(&mut f), SimTime::ZERO);
         assert_eq!(pc.prefetch_bytes, 0);
         assert_eq!(pc.local_hits, 0, "a redundant prefetch is a no-op, not a hit");
         assert_eq!(pc.wan_bytes_saved(), 0, "nothing moved, nothing saved");
@@ -473,15 +1010,15 @@ mod tests {
         let (mut t, mut f) = rig(3, 1);
         let mut pc = PoolLayerCache::new();
         pc.register(0, 0x55);
-        let (_, receipt) = pc.prefetch(&mut f, &t, SimTime::ZERO, 1, 0x55, 16 << 20);
+        let (_, handle) = pc.prefetch(&mut f, &t, SimTime::ZERO, 1, 0x55, 16 << 20);
         // only the in-flight copy remains reachable
         t.node_mut(0).unwrap().healthy = false;
         let (src, lat) = pc.fetch(&mut f, &t, SimTime::ZERO, 2, 0x55, 16 << 20);
         assert_eq!(src, FetchSource::Peer(1));
+        let finish = handle.settle(&mut f);
         assert!(
-            lat > receipt.finish,
-            "peer serves only after its own bytes land: {lat} vs {}",
-            receipt.finish
+            lat > finish,
+            "peer serves only after its own bytes land: {lat} vs {finish}"
         );
     }
 
@@ -543,5 +1080,216 @@ mod tests {
         }
         // a second pass is a no-op
         assert!(pc.gc(3, |n| n as u64).is_empty());
+    }
+
+    // --- chunk-granular behavior --------------------------------------------
+
+    /// A 4-chunk recipe of 1 MiB chunks.
+    fn recipe4() -> Vec<(ChunkId, u64)> {
+        (0..4u64).map(|i| (0xC000 + i, 1 << 20)).collect()
+    }
+
+    #[test]
+    fn register_chunk_promotes_to_blob_presence() {
+        let mut pc = PoolLayerCache::new();
+        assert!(pc.describe_chunks(0xB10B, &recipe4()));
+        for (i, (c, _)) in recipe4().iter().enumerate() {
+            assert!(!pc.node_has(1, 0xB10B), "not a full holder after {i} chunks");
+            pc.register_chunk(1, 0xB10B, *c);
+            assert!(pc.node_has_chunk(1, *c));
+        }
+        assert!(pc.node_has(1, 0xB10B), "all chunks held implies blob presence");
+        // and the registration is evictable like a blob-level one
+        pc.evict(1, 0xB10B);
+        assert!(!pc.node_has(1, 0xB10B));
+        assert!(!pc.node_has_chunk(1, 0xC000));
+    }
+
+    #[test]
+    fn chunked_fetch_moves_only_missing_chunks() {
+        let (t, mut f) = rig(4, 1);
+        let mut pc = PoolLayerCache::new();
+        let recipe = recipe4();
+        assert!(pc.describe_chunks(0xB10B, &recipe));
+        pc.register(0, 0xB10B);
+        // node 1 already holds half the chunks
+        pc.register_chunk(1, 0xB10B, recipe[0].0);
+        pc.register_chunk(1, 0xB10B, recipe[1].0);
+        let (src, lat) = pc.fetch(&mut f, &t, SimTime::ZERO, 1, 0xB10B, 4 << 20);
+        assert_eq!(src, FetchSource::Peer(0));
+        assert!(lat > SimTime::ZERO);
+        assert_eq!(pc.chunk_fetches, 2, "only the two missing chunks moved");
+        assert_eq!(pc.chunk_bytes_peer, 2 << 20);
+        assert_eq!(pc.bytes_from_peers, 2 << 20);
+        assert!(pc.node_has(1, 0xB10B));
+    }
+
+    #[test]
+    fn mixed_fetch_splits_between_partial_peer_and_registry() {
+        let (t, mut f) = rig(4, 1);
+        let mut pc = PoolLayerCache::new();
+        let recipe = recipe4();
+        assert!(pc.describe_chunks(0xB10B, &recipe));
+        // node 1 is a *partial* holder of half the chunks; nobody else
+        // holds anything
+        pc.register_chunk(1, 0xB10B, recipe[0].0);
+        pc.register_chunk(1, 0xB10B, recipe[1].0);
+        let (psrc, _) = pc.plan(&f, &t, 2, 0xB10B, 4 << 20);
+        assert_eq!(psrc, FetchSource::Mixed);
+        let (src, _) = pc.fetch(&mut f, &t, SimTime::ZERO, 2, 0xB10B, 4 << 20);
+        assert_eq!(src, FetchSource::Mixed);
+        assert_eq!(pc.chunk_bytes_peer, 2 << 20, "held chunks come over the intranet");
+        assert_eq!(pc.chunk_bytes_registry, 2 << 20, "missing chunks cross the WAN");
+        assert_eq!(pc.partial_holders_used, 1);
+        assert_eq!(pc.peer_fetches, 1);
+        assert_eq!(pc.registry_fetches, 1);
+    }
+
+    #[test]
+    fn chunk_fetch_splits_across_peers_on_disjoint_links() {
+        // peers in different arrays each hold half the chunks: the two
+        // halves transfer on disjoint array backplanes and overlap
+        let (t, mut f) = rig(2, 2); // nodes 0,1 in array 0; 2,3 in array 1
+        let mut pc = PoolLayerCache::new();
+        let recipe = recipe4();
+        assert!(pc.describe_chunks(0xB10B, &recipe));
+        pc.register_chunk(0, 0xB10B, recipe[0].0);
+        pc.register_chunk(0, 0xB10B, recipe[1].0);
+        pc.register_chunk(3, 0xB10B, recipe[2].0);
+        pc.register_chunk(3, 0xB10B, recipe[3].0);
+        let (src, lat) = pc.fetch(&mut f, &t, SimTime::ZERO, 1, 0xB10B, 4 << 20);
+        assert_eq!(src, FetchSource::Mixed, "two peers served the layer");
+        // node 0 -> 1 is same-array; 3 -> 1 crosses the tray.  Both
+        // halves overlap, so the fetch ends with the cross-array half —
+        // well under the serialized time of all four chunks on one link.
+        let serialized = f
+            .estimate(Endpoint::Node(0), Endpoint::Node(1), 4 << 20)
+            .max(f.estimate(Endpoint::Node(3), Endpoint::Node(1), 4 << 20));
+        let cross = f.estimate(Endpoint::Node(3), Endpoint::Node(1), 2 << 20);
+        assert!(
+            lat >= cross && lat < serialized,
+            "split halves overlap: {lat} (cross-half {cross}, whole-layer {serialized})"
+        );
+        assert_eq!(pc.chunk_bytes_peer, 4 << 20);
+        assert_eq!(pc.partial_holders_used, 2);
+    }
+
+    #[test]
+    fn gc_shared_chunk_across_blobs_keeps_presence() {
+        // regression (ISSUE 5 satellite): a chunk shared by two blobs
+        // must survive on a node whose copy of *one* blob is GC'd while
+        // the other blob still pins it — blob-level set removal dropped
+        // it and undercounted chunk holders
+        let mut pc = PoolLayerCache::new();
+        let shared = 0xC5;
+        assert!(pc.describe_chunks(0xA, &[(shared, 1 << 20), (0xCA, 1 << 20)]));
+        assert!(pc.describe_chunks(0xB, &[(shared, 1 << 20), (0xCB, 1 << 20)]));
+        for n in 0..4 {
+            pc.register(n, 0xA);
+        }
+        pc.register(2, 0xB);
+        pc.register(3, 0xB);
+        // loads drive gc to evict nodes 2 and 3 from blob A
+        let loads: HashMap<NodeId, u64> = [(0, 0), (1, 0), (2, 9), (3, 8)].into();
+        let evicted = pc.gc(2, |n| loads.get(&n).copied().unwrap_or(0));
+        assert!(evicted.contains(&(2, 0xA)) && evicted.contains(&(3, 0xA)), "{evicted:?}");
+        assert_eq!(pc.holders(0xA), vec![0, 1]);
+        // nodes 2 and 3 still hold the shared chunk through blob B
+        assert!(pc.node_has_chunk(2, shared), "blob B still pins the shared chunk");
+        assert!(pc.node_has_chunk(3, shared));
+        assert_eq!(pc.chunk_holders_of(shared), vec![0, 1, 2, 3]);
+        assert!(pc.node_has(2, 0xB) && pc.node_has(3, 0xB));
+        // and every chunk of both blobs kept >= k holders
+        for c in [shared, 0xCA, 0xCB] {
+            assert!(pc.chunk_holders_of(c).len() >= 2, "chunk {c:#x} below k");
+        }
+    }
+
+    #[test]
+    fn presence_derives_across_blobs_sharing_chunks() {
+        let mut pc = PoolLayerCache::new();
+        assert!(pc.describe_chunks(0xA, &[(0xC1, 1 << 20)]));
+        pc.register(0, 0xA);
+        // a blob described later, fully covered by chunks node 0 already
+        // holds, derives immediately
+        assert!(pc.describe_chunks(0xB, &[(0xC1, 1 << 20)]));
+        assert!(pc.node_has(0, 0xB), "existing chunk holders derive new blobs");
+        // a partial registration completing over an already-pinned chunk
+        // (refs 1 -> 2, no 0 -> 1 transition) still promotes
+        assert!(pc.describe_chunks(0xD, &[(0xC1, 1 << 20), (0xC2, 1 << 20)]));
+        pc.register_chunk(1, 0xD, 0xC2);
+        pc.register(1, 0xB); // pins c1 on node 1
+        pc.register_chunk(1, 0xD, 0xC1);
+        assert!(pc.node_has(1, 0xD), "1->2 refcount transition still derives presence");
+        assert!(pc.node_has(1, 0xA), "...for every blob the chunk completes");
+        // evicting D keeps c1 pinned through B
+        pc.evict(1, 0xD);
+        assert!(pc.node_has_chunk(1, 0xC1));
+        assert!(!pc.node_has_chunk(1, 0xC2), "c2's only ref went with D");
+        assert!(pc.node_has(1, 0xA) && pc.node_has(1, 0xB));
+        assert!(!pc.node_has(1, 0xD));
+    }
+
+    #[test]
+    fn gc_counts_derived_holders_through_shared_chunks() {
+        let mut pc = PoolLayerCache::new();
+        // blobs A and B are the same single chunk under two names, so
+        // every holder of the chunk derives presence of BOTH blobs
+        assert!(pc.describe_chunks(0xA, &[(0xC1, 1 << 20)]));
+        assert!(pc.describe_chunks(0xB, &[(0xC1, 1 << 20)]));
+        for n in 0..3 {
+            pc.register(n, 0xA);
+        }
+        pc.register(3, 0xB);
+        assert_eq!(pc.holders(0xA), vec![0, 1, 2, 3]);
+        assert_eq!(pc.holders(0xB), vec![0, 1, 2, 3]);
+        // gc drops *registrations* until the derived holder count hits k
+        let evicted = pc.gc(2, |n| n as u64);
+        assert_eq!(evicted, vec![(2, 0xA), (1, 0xA)], "most-loaded registrations go first");
+        assert_eq!(pc.holders(0xA), vec![0, 3], "node 3 still derives A through B's chunk");
+        assert_eq!(pc.holders(0xB), vec![0, 3]);
+        assert!(pc.chunk_holders_of(0xC1).len() >= 2, "chunk never drops below k");
+    }
+
+    #[test]
+    fn describe_after_register_backfills_chunk_presence() {
+        let mut pc = PoolLayerCache::new();
+        pc.register(0, 0xB10B);
+        pc.register(1, 0xB10B);
+        assert!(pc.describe_chunks(0xB10B, &recipe4()));
+        for (c, _) in recipe4() {
+            assert!(pc.node_has_chunk(0, c));
+            assert!(pc.node_has_chunk(1, c));
+        }
+        assert!(pc.node_has(0, 0xB10B) && pc.node_has(1, 0xB10B));
+        pc.evict(0, 0xB10B);
+        assert!(!pc.node_has_chunk(0, 0xC000));
+        assert!(pc.node_has_chunk(1, 0xC000));
+    }
+
+    #[test]
+    fn conflicting_recipe_keeps_the_first() {
+        let mut pc = PoolLayerCache::new();
+        assert!(pc.describe_chunks(0xE, &[(0xC1, 1 << 20)]));
+        assert!(pc.describe_chunks(0xE, &[(0xC1, 1 << 20)]), "same recipe is idempotent");
+        assert!(
+            !pc.describe_chunks(0xE, &[(0xC2, 512 << 10), (0xC3, 512 << 10)]),
+            "a different chunking is rejected, not merged"
+        );
+        assert_eq!(pc.chunk_recipe(0xE).unwrap(), &[(0xC1, 1 << 20)]);
+    }
+
+    #[test]
+    fn duplicate_chunks_in_a_recipe_transfer_once() {
+        let (t, mut f) = rig(3, 1);
+        let mut pc = PoolLayerCache::new();
+        // the blob repeats one chunk three times: only distinct content
+        // moves
+        assert!(pc.describe_chunks(0xD0B, &[(0xC9, 1 << 20), (0xC9, 1 << 20), (0xC9, 1 << 20)]));
+        pc.register(0, 0xD0B);
+        let (src, _) = pc.fetch(&mut f, &t, SimTime::ZERO, 1, 0xD0B, 3 << 20);
+        assert_eq!(src, FetchSource::Peer(0));
+        assert_eq!(pc.chunk_fetches, 1, "dedup'd on the wire");
+        assert_eq!(pc.bytes_from_peers, 1 << 20);
     }
 }

@@ -23,7 +23,9 @@
 //! * Serving: `runtime` (PJRT artifact execution, behind the `pjrt`
 //!   feature — the xla bindings are unavailable offline), [`coordinator`]
 //!   (router + batcher + KV manager on the simulated clock, driving real
-//!   token generation deterministically).
+//!   token generation deterministically), [`smoke`] (the deterministic
+//!   trace-replay scenario shared by the `repro serve` CLI and the CI
+//!   golden gate).
 
 pub mod benchkit;
 pub mod config;
@@ -45,6 +47,7 @@ pub mod pool;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
+pub mod smoke;
 pub mod ssd;
 pub mod util;
 pub mod workloads;

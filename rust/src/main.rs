@@ -302,34 +302,59 @@ fn docker_demo() {
     println!("stopped + removed; fw syscalls emulated: {}", fw.syscalls.total());
 }
 
-/// Synthetic "llm-worker" image the boot storm deploys: four 24 MiB
-/// layers, sized so a cold registry pull visibly occupies the host
-/// uplink while requests are being dispatched.
-#[cfg(not(feature = "pjrt"))]
-fn boot_storm_layers() -> Vec<(u64, u64)> {
-    (0..4u64).map(|i| (0x11A9_E500 + i, 24 << 20)).collect()
-}
-
 /// Without the `pjrt` feature the serving loop still runs end-to-end in
 /// simulated time (PoolSim clock + shared fabric), with the
 /// deterministic `EchoExecutor` standing in for real PJRT engines.
 ///
-/// With `--workload <row>` the arrival process is a Table 2 trace
-/// replay (`workloads::arrivals`) instead of a uniform-random storm;
-/// `--boot-storm B` boots B replicas of a synthetic model image on the
-/// same clock, so docker-pull and prefetch bytes contend with dispatch
-/// and response traffic on the shared wires.  Everything is
-/// deterministic: the CI smoke job diffs the counter table of two
-/// same-seed runs (and a committed golden) byte-for-byte.
+/// With `--workload <row>` the whole replay runs through
+/// `dockerssd::smoke::run` — the *same* module the tier-1 golden test
+/// re-derives `ci/golden/serve_smoke.txt` from, so the binary and the
+/// in-process test cannot drift apart.  `--boot-storm B` boots B
+/// replicas of a synthetic model image on the same clock, so
+/// docker-pull and prefetch bytes contend with dispatch and response
+/// traffic on the shared wires.  Everything is deterministic: the CI
+/// smoke job diffs the counter table of two same-seed runs (and the
+/// committed golden) byte-for-byte.
 #[cfg(not(feature = "pjrt"))]
 fn serve_cmd(rest: &[String]) {
-    use dockerssd::coordinator::{serve, EchoExecutor, InferenceRequest, ServeParams};
+    use dockerssd::coordinator::{serve, EchoExecutor, InferenceRequest, ServeParams, ServeReport};
     use dockerssd::layerstore::PoolLayerCache;
     use dockerssd::metrics::{Counters, Table};
     use dockerssd::pool::{DeploymentSpec, Orchestrator, PoolTopology, RestartPolicy};
     use dockerssd::sim::PoolSim;
+    use dockerssd::smoke::{self, SmokeParams};
     use dockerssd::util::Rng;
-    use dockerssd::workloads::{trace_arrivals, workload_named, ArrivalParams};
+
+    /// The tail every serve run prints: response summary, per-node wire
+    /// bytes, and the deterministic counter table the smoke job greps.
+    fn print_report(report: &ServeReport, c: &Counters) {
+        println!(
+            "\n{} responses, {} batches ({} padded rows), {} prompt tokens in / {} tokens out \
+             in {} simulated",
+            report.responses.len(),
+            report.batches,
+            report.padded_rows,
+            report.prompt_tokens,
+            report.tokens_out,
+            report.makespan
+        );
+        println!(
+            "throughput {:.1} tok/s (simulated), mean latency {}, p99 {}",
+            report.throughput_tok_s(),
+            report.mean_latency(),
+            report.latency.quantile(0.99)
+        );
+        let mut t = Table::new(vec!["node", "wire_bytes"]);
+        for (n, bytes) in report.node_wire_bytes.iter().enumerate() {
+            t.row(vec![format!("{n}"), format!("{bytes}")]);
+        }
+        println!("\nper-node dispatch+response traffic\n{}", t.render());
+        let mut t = Table::new(vec!["counter", "value"]);
+        for (k, v) in c.iter() {
+            t.row(vec![k.to_string(), format!("{v}")]);
+        }
+        println!("\n{}", t.render());
+    }
 
     let value_of = |i: usize, flag: &str| -> String {
         rest.get(i + 1).cloned().unwrap_or_else(|| {
@@ -387,60 +412,76 @@ fn serve_cmd(rest: &[String]) {
     }
     let nodes = if nodes == 0 { cfg.serve.nodes as usize } else { nodes };
     let tokens = if tokens == 0 { cfg.serve.max_new_tokens as usize } else { tokens };
-    let mut params = ServeParams::from_config(&cfg.serve);
 
-    let mut sim = PoolSim::new(&cfg);
-    let reqs: Vec<(SimTime, InferenceRequest)> = if workload.is_empty() {
-        println!(
-            "simulated serve storm: {nodes} nodes, {requests} requests x {tokens} tokens, seed {seed}"
-        );
-        let mut rng = Rng::new(seed);
-        (0..requests as u64)
-            .map(|id| {
-                (
-                    SimTime::us(rng.below(5_000)),
-                    InferenceRequest {
-                        id,
-                        prompt: (0..params.prompt_len).map(|_| rng.below(32_000) as i32).collect(),
-                        max_new_tokens: tokens,
-                    },
-                )
-            })
-            .collect()
-    } else {
-        let Some(spec) = workload_named(&workload) else {
-            eprintln!("unknown workload {workload:?}; Table 2 rows:");
-            for w in all_workloads() {
-                eprintln!("  {}", w.full_name());
-            }
-            std::process::exit(2);
-        };
-        let ap = ArrivalParams { scale, ..Default::default() };
+    if !workload.is_empty() {
         // request count and shapes come from the trace, not the CLI knobs
         if storm_flags {
             eprintln!("note: --requests/--tokens are ignored for a trace replay");
         }
-        // don't clip prompt-heavy (write) requests to the storm default
-        params.prompt_len = ap.engine_prompt_len();
-        let arr = trace_arrivals(&spec, seed, &ap);
+        // the whole replay is the shared smoke scenario — identical code
+        // path to the tier-1 golden re-derivation test
+        let p = SmokeParams {
+            workload,
+            nodes,
+            scale,
+            seed,
+            boot_storm,
+        };
+        let out = match smoke::run(&p) {
+            Ok(out) => out,
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+        };
         println!(
             "trace replay {}: {} requests ({} read-shaped, {} write-shaped) arriving over {}, \
              {} nodes, seed {seed}, scale {scale}",
-            spec.full_name(),
-            arr.requests.len(),
-            arr.read_requests,
-            arr.write_requests,
-            arr.span,
+            out.workload_name,
+            out.arrivals.requests,
+            out.arrivals.read_requests,
+            out.arrivals.write_requests,
+            out.arrivals.span,
             nodes
         );
-        arr.requests
-    };
+        if let Some(rep) = &out.storm {
+            println!(
+                "boot storm: {} replicas placed, {} registry pulls (foreground) + {} peer \
+                 prefetches (background); pulls land at {}",
+                rep.placed.len(),
+                rep.registry_pulls,
+                rep.peer_prefetches,
+                rep.pulls_done
+            );
+        }
+        print_report(&out.report, &out.counters);
+        return;
+    }
+
+    let params = ServeParams::from_config(&cfg.serve);
+    let mut sim = PoolSim::new(&cfg);
+    println!(
+        "simulated serve storm: {nodes} nodes, {requests} requests x {tokens} tokens, seed {seed}"
+    );
+    let mut rng = Rng::new(seed);
+    let reqs: Vec<(SimTime, InferenceRequest)> = (0..requests as u64)
+        .map(|id| {
+            (
+                SimTime::us(rng.below(5_000)),
+                InferenceRequest {
+                    id,
+                    prompt: (0..params.prompt_len).map(|_| rng.below(32_000) as i32).collect(),
+                    max_new_tokens: tokens,
+                },
+            )
+        })
+        .collect();
 
     if boot_storm > 0 {
         let topo = PoolTopology::build(&cfg.pool);
         let mut orch = Orchestrator::new();
         let mut cache = PoolLayerCache::new();
-        let layers = boot_storm_layers();
+        let layers = smoke::boot_storm_layers();
         let spec = DeploymentSpec {
             name: "storm".into(),
             image: "llm-worker".into(),
@@ -464,36 +505,13 @@ fn serve_cmd(rest: &[String]) {
         .map(|_| || Ok::<_, anyhow::Error>(EchoExecutor))
         .collect();
     let report = serve(&mut sim, factories, reqs, &params);
-
-    println!(
-        "\n{} responses, {} batches ({} padded rows), {} prompt tokens in / {} tokens out \
-         in {} simulated",
-        report.responses.len(),
-        report.batches,
-        report.padded_rows,
-        report.prompt_tokens,
-        report.tokens_out,
-        report.makespan
-    );
-    println!(
-        "throughput {:.1} tok/s (simulated), mean latency {}, p99 {}",
-        report.throughput_tok_s(),
-        report.mean_latency(),
-        report.latency.quantile(0.99)
-    );
-    let mut t = Table::new(vec!["node", "wire_bytes"]);
-    for (n, bytes) in report.node_wire_bytes.iter().enumerate() {
-        t.row(vec![format!("{n}"), format!("{bytes}")]);
-    }
-    println!("\nper-node dispatch+response traffic\n{}", t.render());
+    // drain engine-scheduled background prefetches before exporting, so
+    // fabric.* counters account every storm byte (re-timed or not)
+    sim.fabric.run_to_idle();
     let mut c = Counters::new();
     report.export_counters(&mut c);
     sim.export_counters(&mut c);
-    let mut t = Table::new(vec!["counter", "value"]);
-    for (k, v) in c.iter() {
-        t.row(vec![k.to_string(), format!("{v}")]);
-    }
-    println!("\n{}", t.render());
+    print_report(&report, &c);
 }
 
 #[cfg(feature = "pjrt")]

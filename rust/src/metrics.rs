@@ -112,6 +112,16 @@ pub mod names {
     pub const BYTES_NOT_TRANSFERRED: &str = "layerstore.bytes_not_transferred";
     /// Layers dropped by pool-wide GC.
     pub const GC_EVICTIONS: &str = "layerstore.gc_evictions";
+    /// Chunk-granular transfers issued by the pool cache (fetch and
+    /// prefetch; one per chunk actually moved, local chunks excluded).
+    pub const CHUNK_FETCHES: &str = "layerstore.chunk_fetches";
+    /// Chunk bytes served by peer DockerSSDs over the intranet.
+    pub const CHUNK_BYTES_PEER: &str = "layerstore.chunk_bytes_peer";
+    /// Chunk bytes that had to cross the registry WAN (no peer held them).
+    pub const CHUNK_BYTES_REGISTRY: &str = "layerstore.chunk_bytes_registry";
+    /// Distinct *partial* holders (nodes holding some but not all of a
+    /// layer's chunks) that served chunks to a fetch.
+    pub const PARTIAL_HOLDERS_USED: &str = "layerstore.partial_holders_used";
 
     // Canonical names for the [`crate::fabric`] subsystem: bytes
     // serialized per link class, queueing delay, and prefetch volume.

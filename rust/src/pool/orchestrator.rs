@@ -97,11 +97,15 @@ impl Orchestrator {
     /// the dedup story.
     ///
     /// Each placement immediately kicks off *background prefetches* for
-    /// the layers the chosen node is missing: the bytes start moving on
-    /// the fabric's background lane while the container is still being
-    /// created, and they yield the wire to any foreground fetch within
-    /// one frame quantum.  By boot time the layers are (being) resident,
-    /// so the boot-path fetch is a local hit.
+    /// the layers the chosen node is missing: the per-chunk transfers
+    /// are scheduled on the fabric's event-driven engine
+    /// ([`crate::fabric::Fabric::schedule`], background lane), so they
+    /// start moving while the container is still being created, yield
+    /// the wire to any foreground traffic within one frame quantum, and
+    /// — unlike the old synchronous path — get *re-timed* receipts when
+    /// preempted (`fabric.retimed_transfers`).  By boot time the layers
+    /// are (being) resident, so the boot-path fetch is a local hit that
+    /// settles the in-flight tail.
     ///
     /// `layers` is the image's (blob digest, bytes) list.
     pub fn deploy_with_layers(
@@ -212,18 +216,25 @@ impl Orchestrator {
         };
         for &node in &placed {
             for &(digest, bytes) in layers {
-                match cache.plan(&sim.fabric, topo, node, digest, bytes).0 {
-                    FetchSource::Local => {}
-                    FetchSource::Peer(_) => {
-                        cache.prefetch(&mut sim.fabric, topo, now, node, digest, bytes);
-                        report.peer_prefetches += 1;
-                    }
-                    FetchSource::Registry => {
-                        let (_, latency) =
-                            cache.fetch(&mut sim.fabric, topo, now, node, digest, bytes);
-                        report.registry_pulls += 1;
-                        report.pulls_done = report.pulls_done.max(now + latency);
-                    }
+                let plans = cache.plan_chunks(&sim.fabric, topo, node, digest, bytes);
+                let missing = plans.iter().any(|p| p.source != FetchSource::Local);
+                let wan = plans.iter().any(|p| p.source == FetchSource::Registry);
+                if !missing {
+                    continue;
+                }
+                if wan {
+                    // any chunk no pool node holds boots like a cold
+                    // pull: fetch foreground (peer-held chunks still ride
+                    // the intranet; only the missing ones cross the WAN)
+                    let (_, latency) =
+                        cache.fetch(&mut sim.fabric, topo, now, node, digest, bytes);
+                    report.registry_pulls += 1;
+                    report.pulls_done = report.pulls_done.max(now + latency);
+                } else {
+                    // every chunk is pool-warm (one peer or several):
+                    // background prefetch
+                    cache.prefetch(&mut sim.fabric, topo, now, node, digest, bytes);
+                    report.peer_prefetches += 1;
                 }
             }
         }
@@ -441,6 +452,8 @@ mod tests {
             .deploy_with_layers(&t, &mut f, &spec("infer", 2), &mut cache, &layers, SimTime::ZERO)
             .unwrap();
         assert_eq!(cache.prefetch_bytes, 2 * (4096 + 8192), "both replicas prefetched");
+        assert!(f.transfers_in_flight() >= 1, "prefetch is scheduled on the engine");
+        f.run_to_idle();
         assert!(f.stats.transfers_bg >= 4, "prefetch rides the background lane");
         // the boot-path fetch rides the prefetch: it hits locally and at
         // most waits for the in-flight tail, never re-transfers
@@ -472,7 +485,9 @@ mod tests {
             .deploy_sim(&mut sim, &t, &spec("infer", 2), &mut cache, &[(0xA, 1 << 20)])
             .unwrap();
         assert_eq!(placed.len(), 2);
-        // prefetch traffic landed on the shared fabric at the clock's now
+        // prefetch traffic landed on the shared fabric's engine at the
+        // clock's now; drain it to observe the completed-transfer stats
+        sim.fabric.run_to_idle();
         assert!(sim.fabric.stats.transfers_bg >= 1);
         assert!(sim.fabric.stats.prefetch_bytes >= 1 << 20);
     }
@@ -495,6 +510,7 @@ mod tests {
         assert_eq!(rep.registry_pulls, 2, "the first replica cold-pulls each layer once");
         assert_eq!(rep.peer_prefetches, 4, "later replicas prefetch from the pool");
         assert!(rep.pulls_done > SimTime::ZERO, "pulls pay real wire time");
+        sim.fabric.run_to_idle(); // drain the engine-scheduled prefetches
         let mut c = Counters::new();
         sim.export_counters(&mut c);
         assert_eq!(c.get(names::FABRIC_BYTES_WAN), 6 << 20, "cold pulls cross the WAN once");

@@ -1,0 +1,193 @@
+//! The deterministic serve-smoke scenario, shared by `repro serve
+//! --workload ...` and the CI golden gate.
+//!
+//! `ci/serve_smoke.sh` runs the `repro` binary and greps the
+//! `serve.*`/`fabric.*`/`sim.*` counter lines; the tier-1 test
+//! `rust/tests/golden.rs` re-derives the *same* lines in-process through
+//! [`run`] + [`counter_lines`].  Because both arms call this one module
+//! with the same inputs, the committed golden at
+//! `ci/golden/serve_smoke.txt` is pinned twice: the binary replay must
+//! match it byte-for-byte, and the in-process replay must regenerate it
+//! (seed or refresh it with `UPDATE_GOLDEN=1 cargo test --test golden`).
+
+use crate::config::SystemConfig;
+use crate::coordinator::{serve, EchoExecutor, ServeParams, ServeReport};
+use crate::layerstore::PoolLayerCache;
+use crate::metrics::{Counters, Table};
+use crate::pool::{BootStormReport, DeploymentSpec, Orchestrator, PoolTopology, RestartPolicy};
+use crate::sim::PoolSim;
+use crate::util::SimTime;
+use crate::workloads::{all_workloads, trace_arrivals, workload_named, ArrivalParams};
+
+/// Inputs of one trace-replay serve run (the `repro serve` CLI knobs
+/// that matter for a workload replay).
+#[derive(Clone, Debug)]
+pub struct SmokeParams {
+    /// A Table 2 row name (`workloads::workload_named`).
+    pub workload: String,
+    /// Number of EchoExecutor serving nodes.
+    pub nodes: usize,
+    /// Trace scale divisor ([`ArrivalParams::scale`]).
+    pub scale: u64,
+    pub seed: u64,
+    /// Replicas booted on the same clock; 0 disables the storm.
+    pub boot_storm: u32,
+}
+
+impl SmokeParams {
+    /// The CI smoke scenario: `repro serve --workload nginx-filedown
+    /// --nodes 4 --scale 2000 --seed 42 --boot-storm 2`.
+    pub fn ci() -> Self {
+        SmokeParams {
+            workload: "nginx-filedown".into(),
+            nodes: 4,
+            scale: 2000,
+            seed: 42,
+            boot_storm: 2,
+        }
+    }
+}
+
+/// Shape summary of the generated arrival stream, for CLI reporting.
+#[derive(Clone, Copy, Debug)]
+pub struct ArrivalSummary {
+    pub requests: usize,
+    pub read_requests: u64,
+    pub write_requests: u64,
+    pub span: SimTime,
+}
+
+/// Everything one smoke run produced.
+pub struct SmokeOutcome {
+    pub report: ServeReport,
+    /// `serve.*` + `fabric.*` + `sim.*` counters, with the fabric engine
+    /// drained first so in-flight prefetches are fully accounted.
+    pub counters: Counters,
+    pub storm: Option<BootStormReport>,
+    pub arrivals: ArrivalSummary,
+    pub workload_name: String,
+}
+
+/// Synthetic "llm-worker" image the boot storm deploys: four 24 MiB
+/// layers, sized so a cold registry pull visibly occupies the host
+/// uplink while requests are being dispatched.
+pub fn boot_storm_layers() -> Vec<(u64, u64)> {
+    (0..4u64).map(|i| (0x11A9_E500 + i, 24 << 20)).collect()
+}
+
+/// Run the trace-replay serve scenario deterministically: Table 2
+/// arrivals through `coordinator::serve` on one `PoolSim` clock, with an
+/// optional boot storm contending on the same fabric.  Two calls with
+/// the same params produce byte-identical counters.  `Err` carries the
+/// valid workload names when `workload` is unknown.
+pub fn run(p: &SmokeParams) -> Result<SmokeOutcome, String> {
+    let Some(spec) = workload_named(&p.workload) else {
+        let rows: Vec<String> = all_workloads().iter().map(|w| w.full_name()).collect();
+        return Err(format!(
+            "unknown workload {:?}; Table 2 rows:\n  {}",
+            p.workload,
+            rows.join("\n  ")
+        ));
+    };
+    let cfg = SystemConfig::default();
+    let mut params = ServeParams::from_config(&cfg.serve);
+    let ap = ArrivalParams {
+        scale: p.scale,
+        ..Default::default()
+    };
+    // don't clip prompt-heavy (write) requests to the storm default
+    params.prompt_len = ap.engine_prompt_len();
+    let arr = trace_arrivals(&spec, p.seed, &ap);
+    let arrivals = ArrivalSummary {
+        requests: arr.requests.len(),
+        read_requests: arr.read_requests,
+        write_requests: arr.write_requests,
+        span: arr.span,
+    };
+
+    let mut sim = PoolSim::new(&cfg);
+    let storm = if p.boot_storm > 0 {
+        let topo = PoolTopology::build(&cfg.pool);
+        let mut orch = Orchestrator::new();
+        let mut cache = PoolLayerCache::new();
+        let spec = DeploymentSpec {
+            name: "storm".into(),
+            image: "llm-worker".into(),
+            replicas: p.boot_storm,
+            restart: RestartPolicy::OnFailure,
+        };
+        let rep = orch
+            .boot_storm_sim(&mut sim, &topo, &spec, &mut cache, &boot_storm_layers())
+            .map_err(|e| format!("boot storm placement: {e}"))?;
+        Some(rep)
+    } else {
+        None
+    };
+
+    let factories: Vec<_> = (0..p.nodes)
+        .map(|_| || Ok::<_, anyhow::Error>(EchoExecutor))
+        .collect();
+    let report = serve(&mut sim, factories, arr.requests, &params);
+    // settle engine-scheduled background prefetches so the exported
+    // fabric counters cover the whole storm, re-timed receipts included
+    sim.fabric.run_to_idle();
+    let mut counters = Counters::new();
+    report.export_counters(&mut counters);
+    sim.export_counters(&mut counters);
+    Ok(SmokeOutcome {
+        report,
+        counters,
+        storm,
+        arrivals,
+        workload_name: spec.full_name(),
+    })
+}
+
+/// Render counters exactly as `repro serve` prints them (a two-column
+/// `counter value` table), keeping only the deterministic
+/// `serve.*`/`fabric.*`/`sim.*` rows — the same filter
+/// `ci/serve_smoke.sh` applies with grep, so this string is directly
+/// comparable to the smoke job's `counters_a.txt` and to the committed
+/// golden.
+pub fn counter_lines(c: &Counters) -> String {
+    let mut t = Table::new(vec!["counter", "value"]);
+    for (k, v) in c.iter() {
+        t.row(vec![k.to_string(), format!("{v}")]);
+    }
+    t.render()
+        .lines()
+        .filter(|l| {
+            l.starts_with("serve.") || l.starts_with("fabric.") || l.starts_with("sim.")
+        })
+        .map(|l| format!("{l}\n"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_workload_lists_rows() {
+        let err = run(&SmokeParams {
+            workload: "no-such-row".into(),
+            ..SmokeParams::ci()
+        })
+        .unwrap_err();
+        assert!(err.contains("no-such-row"));
+        assert!(err.contains("nginx-filedown"), "error lists the valid rows");
+    }
+
+    #[test]
+    fn counter_lines_filters_to_deterministic_counters() {
+        let mut c = Counters::new();
+        c.add(crate::metrics::names::SERVE_RESPONSES, 7);
+        c.add(crate::metrics::names::FABRIC_BYTES_WAN, 9);
+        c.add(crate::metrics::names::BYTES_WRITTEN, 3); // layerstore.*: filtered out
+        let lines = counter_lines(&c);
+        assert!(lines.contains("serve.responses"));
+        assert!(lines.contains("fabric.bytes_wan"));
+        assert!(!lines.contains("layerstore."));
+        assert!(lines.ends_with('\n'));
+    }
+}

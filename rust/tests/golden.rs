@@ -1,0 +1,71 @@
+//! Golden-file gate for the CI serve-smoke scenario (ISSUE 5).
+//!
+//! `ci/serve_smoke.sh` runs `repro serve --workload nginx-filedown
+//! --nodes 4 --scale 2000 --seed 42 --boot-storm 2` and greps the
+//! deterministic `serve.*`/`fabric.*`/`sim.*` counter lines; this test
+//! re-derives exactly those lines in-process through the shared
+//! [`dockerssd::smoke`] module, so the committed golden at
+//! `ci/golden/serve_smoke.txt` is gated from two independent directions
+//! (binary replay and library replay) and can be (re)seeded from a
+//! local deterministic run:
+//!
+//! ```sh
+//! UPDATE_GOLDEN=1 cargo test --test golden
+//! ```
+//!
+//! Env knobs: `UPDATE_GOLDEN=1` rewrites the committed golden;
+//! `GOLDEN_OUT=<path>` additionally writes the fresh lines to `<path>`
+//! (CI uses it to diff against the binary's grep output).
+
+use dockerssd::smoke::{self, SmokeParams};
+
+fn golden_path() -> String {
+    format!("{}/ci/golden/serve_smoke.txt", env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+fn golden_serve_smoke_is_rederivable_and_deterministic() {
+    let p = SmokeParams::ci();
+    let a = smoke::run(&p).expect("the CI workload row exists");
+    let b = smoke::run(&p).expect("the CI workload row exists");
+    assert_eq!(a.counters, b.counters, "same-seed smoke replays diverged");
+    assert_eq!(
+        a.report.responses.len() as u64,
+        a.report.requests,
+        "the smoke replay must serve every request"
+    );
+    let storm = a.storm.as_ref().expect("the CI scenario boots a storm");
+    assert!(storm.registry_pulls > 0, "a cold pool pulls at least one layer");
+
+    let lines = smoke::counter_lines(&a.counters);
+    assert!(
+        lines.lines().count() >= 10,
+        "expected a full serve./fabric./sim. counter block, got:\n{lines}"
+    );
+    for must in ["serve.responses", "fabric.bytes_wan", "sim.events_processed"] {
+        assert!(lines.contains(must), "missing {must} in:\n{lines}");
+    }
+
+    if let Ok(out) = std::env::var("GOLDEN_OUT") {
+        std::fs::write(&out, &lines).expect("write GOLDEN_OUT");
+        eprintln!("fresh smoke counters written to {out}");
+    }
+    let path = golden_path();
+    if std::env::var("UPDATE_GOLDEN").is_ok() {
+        std::fs::write(&path, &lines).expect("write golden");
+        eprintln!("golden refreshed at {path}");
+        return;
+    }
+    match std::fs::read_to_string(&path) {
+        Ok(golden) => assert_eq!(
+            golden, lines,
+            "counters diverged from the committed golden — if the scheduling change is \
+             intentional, refresh with `UPDATE_GOLDEN=1 cargo test --test golden`"
+        ),
+        // Not yet committed: determinism and the binary cross-check still
+        // gate; the golden arm arms itself the moment the file lands.
+        Err(_) => eprintln!(
+            "no golden committed at {path}; seed it with `UPDATE_GOLDEN=1 cargo test --test golden`"
+        ),
+    }
+}

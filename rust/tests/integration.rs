@@ -306,6 +306,80 @@ fn replica_boot_scales_with_unique_bytes_not_replicas() {
     );
 }
 
+/// ISSUE 5 acceptance: chunk-granular peer fetch.  A node holding half a
+/// layer's chunks (degraded / mid-pull) serves exactly those chunks over
+/// Array links while the registry serves the rest over RegistryWan; the
+/// byte split is visible in the new `layerstore.chunk_*` counters, total
+/// WAN bytes are strictly fewer than the whole-blob refetch the old
+/// blob-granular path would move, and two same-seed runs are
+/// byte-identical.
+#[test]
+fn degraded_peer_serves_only_chunks_it_holds() {
+    let layer = 0x1A7E4u64;
+    let layer_bytes = 8u64 << 20;
+    let recipe: Vec<(u64, u64)> = (0..8u64).map(|i| (0xC40 + i, 1 << 20)).collect();
+
+    let run = || {
+        let pcfg = dockerssd::config::PoolConfig {
+            nodes_per_array: 4,
+            arrays: 1,
+            ..Default::default()
+        };
+        let topo = PoolTopology::build(&pcfg);
+        let mut fabric = Fabric::new(&pcfg, &dockerssd::config::EtherOnConfig::default());
+        let mut cache = PoolLayerCache::new();
+        assert!(cache.describe_chunks(layer, &recipe));
+        // node 1 holds only the first half of the layer's chunks — with
+        // the blob-granular map it would not be a holder at all and the
+        // whole layer would re-cross the WAN
+        for (c, _) in &recipe[..4] {
+            cache.register_chunk(1, layer, *c);
+        }
+        assert!(!cache.node_has(1, layer), "a partial holder is not a full holder");
+        let (src, lat) = cache.fetch(&mut fabric, &topo, SimTime::ZERO, 2, layer, layer_bytes);
+        assert_eq!(src, dockerssd::layerstore::FetchSource::Mixed);
+        assert!(lat > SimTime::ZERO);
+        assert!(cache.node_has(2, layer), "the fetcher assembled the full layer");
+        // boot two more replicas: every chunk now has a pool holder, so
+        // nothing more crosses the WAN
+        for node in [3u32, 0] {
+            let (src, _) = cache.fetch(&mut fabric, &topo, SimTime::ZERO, node, layer, layer_bytes);
+            assert!(
+                !matches!(src, FetchSource::Registry),
+                "warm chunks must come from peers, got {src:?}"
+            );
+        }
+        let mut c = Counters::new();
+        cache.export_counters(&mut c);
+        fabric.export_counters(&mut c);
+        (c, lat)
+    };
+
+    let (c, lat) = run();
+    let (c2, lat2) = run();
+    assert_eq!(c, c2, "same-seed chunk-granular boots must be byte-identical");
+    assert_eq!(lat, lat2);
+
+    // the degraded fetch split the layer: half over the intranet from
+    // the partial peer, half over the WAN from the registry
+    assert_eq!(c.get(names::CHUNK_BYTES_REGISTRY), 4 << 20);
+    assert!(c.get(names::PARTIAL_HOLDERS_USED) > 0, "partial holders served");
+    assert_eq!(
+        c.get(names::FABRIC_BYTES_WAN),
+        4 << 20,
+        "only the chunks no peer held crossed the WAN"
+    );
+    assert!(
+        c.get(names::FABRIC_BYTES_WAN) < layer_bytes,
+        "strictly fewer WAN bytes than a whole-blob refetch"
+    );
+    // node 2's fetch: 4 MiB from the peer; replicas 3 and 0: 8 MiB each
+    // from peers
+    assert_eq!(c.get(names::CHUNK_BYTES_PEER), (4 << 20) + 2 * layer_bytes);
+    assert_eq!(c.get(names::CHUNK_FETCHES), 8 + 2 * 8);
+    assert_eq!(c.get(names::BYTES_FROM_REGISTRY), 4 << 20);
+}
+
 #[test]
 fn pool_fabric_latency_model_consistency() {
     let cfg = SystemConfig::default();
@@ -390,6 +464,7 @@ fn fabric_contention_replica_boot_storm() {
     let mut pf_cache = PoolLayerCache::new();
     pf_cache.register(0, digest);
     pf_cache.prefetch(&mut pf_fabric, &shared_topo, SimTime::ZERO, 1, digest, 64 << 20);
+    pf_fabric.advance_to(SimTime::ZERO); // grant the engine-scheduled prefetch the wire
     pf_cache.register(2, 0xFEED);
     let (_, fg_lat) = pf_cache.fetch(&mut pf_fabric, &shared_topo, SimTime::ZERO, 3, 0xFEED, bytes);
     let idle = pf_fabric.estimate(Endpoint::Node(2), Endpoint::Node(3), bytes);

@@ -4,6 +4,12 @@
 //! properties are driven by the deterministic in-crate PRNG across many
 //! random cases per property (seeded, reproducible).  Each test states
 //! its invariant explicitly.
+//!
+//! Case counts honor the `PROPTEST_CASES` env var (proptest's knob, kept
+//! for CI muscle memory): the deep CI job runs the suite with
+//! `PROPTEST_CASES=1024`, scaling every property's case count
+//! proportionally.  Failures name their base seed and case index, so a
+//! deep-run counterexample reproduces locally with the same env.
 
 use dockerssd::config::SsdConfig;
 use dockerssd::coordinator::{Batcher, InferenceRequest, Router};
@@ -15,13 +21,25 @@ use dockerssd::nvme::{NvmeCommand, SubmissionQueue};
 use dockerssd::ssd::{Ftl, SsdDevice};
 use dockerssd::util::{fnv1a, Rng, SimTime};
 
-const CASES: u64 = 200;
+/// Base case count at the default budget (`PROPTEST_CASES` unset = 200).
+fn cases() -> u64 {
+    std::env::var("PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200)
+}
+
+/// A property whose default budget is `base` cases, scaled by the same
+/// `PROPTEST_CASES / 200` factor as the 200-case properties.
+fn scaled(base: u64) -> u64 {
+    (base.saturating_mul(cases()) / 200).max(1)
+}
 
 /// NVMe SQ: commands are never lost, duplicated, or reordered.
 #[test]
 fn prop_nvme_queue_preserves_commands() {
     let mut rng = Rng::new(1);
-    for case in 0..CASES {
+    for case in 0..cases() {
         let depth = 2 + rng.below(62) as usize;
         let mut sq = SubmissionQueue::new(depth);
         let n = rng.below(depth as u64 * 2) as u16;
@@ -43,7 +61,7 @@ fn prop_nvme_queue_preserves_commands() {
 #[test]
 fn prop_frame_codecs_round_trip() {
     let mut rng = Rng::new(2);
-    for _ in 0..CASES {
+    for _ in 0..cases() {
         let len = rng.below(1400) as usize;
         let payload: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
         let seg = TcpSegment {
@@ -85,7 +103,7 @@ fn prop_ftl_mappings_never_alias() {
         pages_per_block: 32,
         ..Default::default()
     };
-    for _ in 0..40 {
+    for _ in 0..scaled(40) {
         let mut ftl = Ftl::new(&cfg);
         let universe = 256u64;
         for _ in 0..1500 {
@@ -141,7 +159,7 @@ fn prop_ssd_read_after_write() {
 #[test]
 fn prop_inode_lock_mutual_exclusion() {
     let mut rng = Rng::new(5);
-    for _ in 0..CASES {
+    for _ in 0..cases() {
         let mut t = InodeLockTable::new();
         let mut host_refs = 0i64;
         let mut isp_refs = 0i64;
@@ -174,7 +192,7 @@ fn prop_inode_lock_mutual_exclusion() {
 #[test]
 fn prop_batcher_conservation() {
     let mut rng = Rng::new(6);
-    for _ in 0..CASES {
+    for _ in 0..cases() {
         let width = 1 + rng.below(8) as usize;
         let n = rng.below(50);
         let mut b = Batcher::new(width, 16, SimTime::ZERO);
@@ -207,7 +225,7 @@ fn prop_batcher_conservation() {
 #[test]
 fn prop_router_balance() {
     let mut rng = Rng::new(7);
-    for _ in 0..CASES {
+    for _ in 0..cases() {
         let nodes = 1 + rng.below(16) as usize;
         let mut r = Router::new(nodes);
         let picks = rng.below(200);
@@ -258,7 +276,7 @@ fn layerstore_rig(chunk_bytes: usize) -> (LayerStore, LambdaFs, SsdDevice) {
 fn prop_layerstore_round_trips_digests() {
     let mut rng = Rng::new(21);
     let (mut st, mut fs, mut dev) = layerstore_rig(4 << 10);
-    for case in 0..60 {
+    for case in 0..scaled(60) {
         let len = rng.below(40_000) as usize;
         let body: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
         let w = st.put_blob(&mut fs, &mut dev, SimTime::ZERO, &body).unwrap();
@@ -287,7 +305,7 @@ fn prop_dedup_preserves_readback() {
         })
         .collect();
     let mut shadow = Vec::new();
-    for _ in 0..40 {
+    for _ in 0..scaled(40) {
         let nchunks = 1 + rng.below(5) as usize;
         let mut body = Vec::new();
         for _ in 0..nchunks {
@@ -313,7 +331,7 @@ fn prop_dedup_preserves_readback() {
 #[test]
 fn prop_cow_writes_never_mutate_parent() {
     let mut rng = Rng::new(23);
-    for case in 0..15 {
+    for case in 0..scaled(15) {
         let (mut st, mut fs, mut dev) = layerstore_rig(4 << 10);
         let mut cow = CowStore::new();
         let len = (8_000 + rng.below(30_000)) as usize;
@@ -345,7 +363,7 @@ fn prop_cow_writes_never_mutate_parent() {
 #[test]
 fn prop_refcount_zero_reclaims_chunks() {
     let mut rng = Rng::new(24);
-    for case in 0..15 {
+    for case in 0..scaled(15) {
         let (mut st, mut fs, mut dev) = layerstore_rig(4 << 10);
         let mut cow = CowStore::new();
         let mut blobs = Vec::new();
@@ -419,7 +437,7 @@ fn prop_fabric_receipts_causal_and_conserving() {
     use dockerssd::fabric::{Endpoint, Fabric, LinkClass, Priority};
 
     let mut rng = Rng::new(77);
-    for case in 0..50u64 {
+    for case in 0..scaled(50) {
         let cfg = PoolConfig {
             nodes_per_array: 4,
             arrays: 1,
@@ -468,7 +486,7 @@ fn prop_retimed_background_never_beats_optimistic_receipt() {
     use dockerssd::fabric::{Endpoint, Fabric, LinkClass, Priority};
 
     let mut rng = Rng::new(79);
-    for case in 0..100u64 {
+    for case in 0..scaled(100) {
         let cfg = PoolConfig {
             nodes_per_array: 4,
             arrays: 1,
@@ -644,7 +662,7 @@ fn prop_fabric_foreground_isolation() {
     use dockerssd::fabric::{Endpoint, Fabric, LinkClass, Priority};
 
     let mut rng = Rng::new(78);
-    for case in 0..CASES {
+    for case in 0..cases() {
         let cfg = PoolConfig {
             nodes_per_array: 4,
             arrays: 1,
@@ -673,5 +691,227 @@ fn prop_fabric_foreground_isolation() {
             "case {case}: foreground waited {} behind prefetch (quantum {quantum})",
             r.queue_wait()
         );
+    }
+}
+
+// --- chunk-granular poolcache invariants (ISSUE 5) --------------------------
+
+/// Chunk/blob presence consistency: after any sequence of blob
+/// registrations, partial (mid-pull) chunk registrations, fetches,
+/// prefetches, evictions, and GC passes, a node "has" a blob exactly
+/// when it holds every chunk of the blob's recipe — and GC never drops
+/// any chunk below min(k, its pre-GC holder count).
+#[test]
+fn prop_chunk_presence_iff_all_chunks_held() {
+    use dockerssd::config::{EtherOnConfig, PoolConfig};
+    use dockerssd::fabric::Fabric;
+    use dockerssd::layerstore::PoolLayerCache;
+    use dockerssd::pool::PoolTopology;
+
+    let mut rng = Rng::new(31);
+    for case in 0..scaled(40) {
+        let pcfg = PoolConfig {
+            nodes_per_array: 4,
+            arrays: 1,
+            ..Default::default()
+        };
+        let topo = PoolTopology::build(&pcfg);
+        let mut fabric = Fabric::new(&pcfg, &EtherOnConfig::default());
+        let mut pc = PoolLayerCache::new();
+        // three blobs drawing on a shared pool of six chunks
+        let chunk_pool: Vec<(u64, u64)> = (0..6u64).map(|i| (0xC00 + i, 64 << 10)).collect();
+        let mut blobs = Vec::new();
+        for b in 0..3u64 {
+            let n = 1 + rng.below(4) as usize;
+            let recipe: Vec<(u64, u64)> = (0..n)
+                .map(|_| chunk_pool[rng.below(6) as usize])
+                .collect();
+            let blob = 0xB10B_0000 + b;
+            assert!(pc.describe_chunks(blob, &recipe));
+            blobs.push(blob);
+        }
+        let check = |pc: &PoolLayerCache, when: &str| {
+            for &b in &blobs {
+                let recipe = pc.chunk_recipe(b).expect("described").to_vec();
+                for n in 0..4u32 {
+                    let all = recipe.iter().all(|(c, _)| pc.node_has_chunk(n, *c));
+                    assert_eq!(
+                        pc.node_has(n, b),
+                        all,
+                        "case {case} ({when}): blob {b:#x} node {n}: presence != all-chunks-held"
+                    );
+                }
+            }
+        };
+        for _ in 0..40 {
+            let node = rng.below(4) as u32;
+            let blob = blobs[rng.below(3) as usize];
+            match rng.below(5) {
+                0 => pc.register(node, blob),
+                1 => {
+                    let recipe = pc.chunk_recipe(blob).expect("described").to_vec();
+                    let (c, _) = recipe[rng.below(recipe.len() as u64) as usize];
+                    pc.register_chunk(node, blob, c);
+                }
+                2 => {
+                    pc.fetch(&mut fabric, &topo, SimTime::ZERO, node, blob, 256 << 10);
+                }
+                3 => {
+                    pc.prefetch(&mut fabric, &topo, SimTime::ZERO, node, blob, 256 << 10);
+                }
+                _ => pc.evict(node, blob),
+            }
+            check(&pc, "after op");
+        }
+        let before: std::collections::HashMap<u64, usize> = chunk_pool
+            .iter()
+            .map(|(c, _)| (*c, pc.chunk_holders_of(*c).len()))
+            .collect();
+        pc.gc(2, |n| n as u64);
+        check(&pc, "after gc");
+        for (c, _) in &chunk_pool {
+            let after = pc.chunk_holders_of(*c).len();
+            assert!(
+                after >= before[c].min(2),
+                "case {case}: gc dropped chunk {c:#x} below k ({} -> {after})",
+                before[c]
+            );
+        }
+    }
+}
+
+/// Chunk-granular fetch never moves more bytes than blob-granular fetch
+/// for the same miss set — on the intranet *or* on the WAN.  (The
+/// blob-granular baseline re-fetches the whole layer from a full holder
+/// or the registry; the chunk path moves only the missing chunks.)
+#[test]
+fn prop_chunk_fetch_never_moves_more_than_blob_fetch() {
+    use dockerssd::config::{EtherOnConfig, PoolConfig};
+    use dockerssd::fabric::Fabric;
+    use dockerssd::layerstore::PoolLayerCache;
+    use dockerssd::pool::PoolTopology;
+
+    let mut rng = Rng::new(32);
+    const NCHUNKS: u64 = 8;
+    const CHUNK: u64 = 256 << 10;
+    for case in 0..scaled(100) {
+        let pcfg = PoolConfig {
+            nodes_per_array: 4,
+            arrays: 1,
+            ..Default::default()
+        };
+        let topo = PoolTopology::build(&pcfg);
+        let blob = 0xB10B;
+        let recipe: Vec<(u64, u64)> = (0..NCHUNKS).map(|i| (0xC00 + i, CHUNK)).collect();
+        let bytes = NCHUNKS * CHUNK;
+
+        // random chunk-level presence on nodes 0..=3 (node 0 fetches, so
+        // its own partial holdings shrink the chunk-path miss set)
+        let mut chunked = PoolLayerCache::new();
+        assert!(chunked.describe_chunks(blob, &recipe));
+        let mut blobbed = PoolLayerCache::new(); // blob-granular twin
+        for n in 0..=3u32 {
+            let mut held_all = true;
+            let hold_p = if n == 0 { 0.3 } else { 0.4 };
+            for (c, _) in &recipe {
+                if rng.chance(hold_p) {
+                    chunked.register_chunk(n, blob, *c);
+                } else {
+                    held_all = false;
+                }
+            }
+            if held_all && n != 0 {
+                blobbed.register(n, blob); // only full holders exist blob-granularly
+            }
+        }
+        if chunked.node_has(0, blob) {
+            continue; // degenerate: nothing to fetch on the chunk path
+        }
+
+        let mut fab_c = Fabric::new(&pcfg, &EtherOnConfig::default());
+        chunked.fetch(&mut fab_c, &topo, SimTime::ZERO, 0, blob, bytes);
+        let moved_chunk = chunked.bytes_from_peers + chunked.bytes_from_registry;
+        let wan_chunk = chunked.bytes_from_registry;
+
+        let mut fab_b = Fabric::new(&pcfg, &EtherOnConfig::default());
+        blobbed.fetch(&mut fab_b, &topo, SimTime::ZERO, 0, blob, bytes);
+        let moved_blob = blobbed.bytes_from_peers + blobbed.bytes_from_registry;
+        let wan_blob = blobbed.bytes_from_registry;
+
+        assert!(
+            moved_chunk <= moved_blob,
+            "case {case}: chunk path moved {moved_chunk} > blob path {moved_blob}"
+        );
+        assert!(
+            wan_chunk <= wan_blob,
+            "case {case}: chunk path put {wan_chunk} on the WAN > blob path {wan_blob}"
+        );
+        assert_eq!(moved_blob, bytes, "blob-granular always re-moves the whole layer");
+    }
+}
+
+/// Engine-scheduled prefetch re-timing (ISSUE 5, extending
+/// `prop_retimed_background_never_beats_optimistic_receipt` to the
+/// *prefetch path*): a placement-time prefetch scheduled through
+/// `PoolLayerCache::prefetch` and preempted by later foreground traffic
+/// settles no earlier than the optimistic idle-wire receipt, strictly
+/// later (and counted in `fabric.retimed_transfers`) whenever the
+/// foreground burst cut in before the optimistic finish.
+#[test]
+fn prop_engine_prefetch_settles_no_earlier_than_optimistic() {
+    use dockerssd::config::{EtherOnConfig, PoolConfig};
+    use dockerssd::fabric::{Endpoint, Fabric, LinkClass, Priority};
+    use dockerssd::layerstore::PoolLayerCache;
+    use dockerssd::pool::PoolTopology;
+
+    let mut rng = Rng::new(33);
+    for case in 0..scaled(100) {
+        let pcfg = PoolConfig {
+            nodes_per_array: 4,
+            arrays: 1,
+            ..Default::default()
+        };
+        let topo = PoolTopology::build(&pcfg);
+        let mut fabric = Fabric::new(&pcfg, &EtherOnConfig::default());
+        let mut cache = PoolLayerCache::new();
+        cache.register(0, 0xFE7C);
+        let bytes = rng.below(32 << 20) + 4096;
+        let optimistic = fabric.estimate(Endpoint::Node(0), Endpoint::Node(1), bytes);
+        let (_, handle) = cache.prefetch(&mut fabric, &topo, SimTime::ZERO, 1, 0xFE7C, bytes);
+        assert!(!handle.ids().is_empty(), "case {case}: prefetch rides the engine");
+        fabric.advance_to(SimTime::ZERO); // grant the background flight
+        // foreground traffic lands later on the same backplane
+        let mut t = SimTime::ZERO;
+        let mut first_fg = None;
+        for _ in 0..(1 + rng.below(3)) {
+            t += SimTime::ns(rng.below(10_000_000));
+            first_fg.get_or_insert(t);
+            fabric.schedule(
+                t,
+                Endpoint::Node(2),
+                Endpoint::Node(3),
+                rng.below(8 << 20) + 1,
+                Priority::Foreground,
+            );
+        }
+        let finish = handle.settle(&mut fabric);
+        assert!(
+            finish >= optimistic,
+            "case {case}: settled prefetch {finish} beat the optimistic receipt {optimistic}"
+        );
+        let quantum = fabric.link(LinkClass::Array(0)).unwrap().frame_quantum(1500);
+        // strictness only when the quantum cut lands before the wire
+        // release (optimistic minus the switch-hop tail)
+        let wire_release = optimistic.saturating_sub(SimTime::ns(300));
+        if first_fg.expect("at least one fg") + quantum < wire_release {
+            assert!(
+                finish > optimistic,
+                "case {case}: a mid-flight preemption must push the prefetch's finish out"
+            );
+            assert!(
+                fabric.stats.retimed_transfers >= 1,
+                "case {case}: the re-time must be counted"
+            );
+        }
     }
 }
