@@ -2,7 +2,7 @@
 # CI smoke: replay one I/O-heavy Table 2 row through the serve loop
 # (EchoExecutor, PoolSim clock) while a boot storm runs on the same
 # clock, and gate on the deterministic `serve.*` / `fabric.*` / `sim.*`
-# counters:
+# counters (plus `chaos.*` / `heal.*` when a fault schedule is active):
 #
 #   1. determinism — two same-seed runs must emit byte-identical
 #      counter lines (always enforced);
@@ -28,7 +28,7 @@ mkdir -p "$out"
 run() {
   cargo run --release --bin repro -- serve \
     --workload nginx-filedown --nodes 4 --scale 2000 --seed 42 --boot-storm 2 \
-    | grep -E '^(serve|fabric|sim)\.'
+    | grep -E '^(serve|fabric|sim|chaos|heal)\.'
 }
 
 run > "$out/counters_a.txt"

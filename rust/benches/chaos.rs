@@ -1,0 +1,93 @@
+//! Chaos under serve: replay the CI trace scenario while a seeded fault
+//! schedule kills nodes, browns out links, and stalls the registry —
+//! then measure what the self-healing loop preserved.
+//!
+//! Emits machine-readable `BENCH_chaos.json` ({name, metric, value})
+//! records so resilience is tracked across PRs.  Two record families:
+//!
+//! * invariant metrics the committed baselines gate now —
+//!   `same_seed_identical` (two same-seed chaos runs byte-identical),
+//!   `healed_to_k` (every live chunk back to >=k holders post-run), and
+//!   `served_fraction` (churn never loses a request) are 1.0 by
+//!   construction and regress to 0.x only when the property breaks;
+//! * simulation-shape metrics (`availability_fraction`,
+//!   `latency_p99_under_churn_ns`, `heal_hidden_fraction`,
+//!   `heal_bytes`) — deterministic and machine-independent, reported as
+//!   new benches until committed to `bench_baselines/`.
+
+use dockerssd::benchkit::{emit_json, section, BenchRecord};
+use dockerssd::metrics::Table;
+use dockerssd::smoke::{run, SmokeOutcome, SmokeParams, CHAOS_HEAL_K};
+
+const SEEDS: [u64; 3] = [7, 42, 1984];
+
+fn chaos_run(seed: u64) -> SmokeOutcome {
+    run(&SmokeParams {
+        chaos: Some(seed),
+        ..SmokeParams::ci()
+    })
+    .expect("the CI smoke scenario runs")
+}
+
+fn main() {
+    section("chaos replay: seeded fault schedules against the CI trace");
+    let mut records = Vec::new();
+    let mut table = Table::new(vec![
+        "seed",
+        "faults",
+        "deaths",
+        "availability",
+        "p99_churn",
+        "heal_bytes",
+        "hidden",
+    ]);
+    for seed in SEEDS {
+        let a = chaos_run(seed);
+        let b = chaos_run(seed);
+        let identical = a.counters == b.counters;
+        assert!(identical, "seed {seed}: same-seed chaos runs diverged");
+        let ch = a.chaos.as_ref().expect("chaos outcome present");
+        let healed = ch.healed_to_k(CHAOS_HEAL_K);
+        assert!(healed, "seed {seed}: pool not healed back to k holders");
+        let served = a.report.responses.len() as f64 / a.arrivals.requests.max(1) as f64;
+        assert!((served - 1.0).abs() < 1e-9, "seed {seed}: dropped requests");
+        let p99 = a.report.latency.quantile(0.99);
+        let hidden = ch.heal.bytes_hidden as f64 / ch.heal.bytes.max(1) as f64;
+        table.row(vec![
+            format!("{seed}"),
+            format!("{}", ch.report.faults_injected),
+            format!("{}", ch.report.node_deaths + ch.report.array_losses),
+            format!("{:.4}", ch.report.availability_fraction()),
+            format!("{p99}"),
+            format!("{}", ch.heal.bytes),
+            format!("{:.2}", hidden),
+        ]);
+        let name = format!("chaos_serve_seed{seed}");
+        records.push(BenchRecord::new(
+            name.clone(),
+            "same_seed_identical",
+            if identical { 1.0 } else { 0.0 },
+        ));
+        records.push(BenchRecord::new(
+            name.clone(),
+            "healed_to_k",
+            if healed { 1.0 } else { 0.0 },
+        ));
+        records.push(BenchRecord::new(name.clone(), "served_fraction", served));
+        records.push(BenchRecord::new(
+            name.clone(),
+            "availability_fraction",
+            ch.report.availability_fraction(),
+        ));
+        records.push(BenchRecord::new(
+            name.clone(),
+            "latency_p99_under_churn_ns",
+            p99.as_ns() as f64,
+        ));
+        records.push(BenchRecord::new(name.clone(), "heal_hidden_fraction", hidden));
+        records.push(BenchRecord::new(name, "heal_bytes", ch.heal.bytes as f64));
+    }
+    println!("{}", table.render());
+
+    emit_json("BENCH_chaos.json", &records).expect("write BENCH_chaos.json");
+}

@@ -1,0 +1,115 @@
+//! The healing ledger: everything the self-healing loop moved or
+//! restarted while chaos was running, rolled up across passes.
+
+use crate::fabric::{Fabric, TransferId};
+use crate::layerstore::HealStats;
+use crate::metrics::{names, Counters};
+
+/// Repair-side summary of one chaos run, exported under the canonical
+/// `heal.*` names.  Accumulates one [`HealStats`] per healing pass
+/// (reactive passes at each death, plus the final sweep), then settles
+/// the background transfers to learn how many heal bytes were fully
+/// hidden behind foreground traffic.
+#[derive(Clone, Debug, Default)]
+pub struct HealReport {
+    pub chunks_rereplicated: u64,
+    pub copies_made: u64,
+    /// Bytes scheduled on background lanes to restore the k invariant.
+    pub bytes: u64,
+    /// Heal bytes whose transfer was granted the wire the instant it
+    /// was issued — repair traffic foreground serving never waited on.
+    pub bytes_hidden: u64,
+    /// Chunks whose every copy died: their first new copy re-crossed
+    /// the registry WAN.
+    pub registry_chunks: u64,
+    /// Replicas re-placed off dead nodes via `replica_failed`.
+    pub replicas_restarted: u64,
+    pub dead_nodes_purged: u64,
+    /// In-flight heal transfers, settled by [`HealReport::settle`].
+    transfers: Vec<TransferId>,
+}
+
+impl HealReport {
+    /// Fold one healing pass into the ledger.
+    pub fn absorb(&mut self, stats: HealStats) {
+        self.chunks_rereplicated += stats.chunks_rereplicated;
+        self.copies_made += stats.copies_made;
+        self.bytes += stats.bytes;
+        self.registry_chunks += stats.registry_chunks;
+        self.transfers.extend(stats.transfers);
+    }
+
+    /// Settle every heal transfer on the fabric engine; a transfer that
+    /// began the instant it was issued never queued behind foreground
+    /// traffic, so its bytes count as hidden.
+    pub fn settle(&mut self, fabric: &mut Fabric) {
+        for id in std::mem::take(&mut self.transfers) {
+            if let Some(r) = fabric.settle(id) {
+                if r.begin == r.issued {
+                    self.bytes_hidden += r.bytes;
+                }
+            }
+        }
+    }
+
+    /// Heal transfers not yet settled.
+    pub fn in_flight(&self) -> usize {
+        self.transfers.len()
+    }
+
+    pub fn export_counters(&self, c: &mut Counters) {
+        c.add(names::HEAL_CHUNKS_REREPLICATED, self.chunks_rereplicated);
+        c.add(names::HEAL_COPIES_MADE, self.copies_made);
+        c.add(names::HEAL_BYTES, self.bytes);
+        c.add(names::HEAL_BYTES_HIDDEN, self.bytes_hidden);
+        c.add(names::HEAL_REGISTRY_CHUNKS, self.registry_chunks);
+        c.add(names::HEAL_REPLICAS_RESTARTED, self.replicas_restarted);
+        c.add(names::HEAL_DEAD_NODES_PURGED, self.dead_nodes_purged);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EtherOnConfig, PoolConfig};
+    use crate::fabric::{Endpoint, Priority};
+    use crate::util::SimTime;
+
+    #[test]
+    fn absorb_accumulates_and_settle_classifies_hidden_bytes() {
+        let mut f = Fabric::new(&PoolConfig::default(), &EtherOnConfig::default());
+        // an idle-wire background transfer begins at issue: hidden
+        let id = f.schedule(
+            SimTime::ZERO,
+            Endpoint::Node(0),
+            Endpoint::Node(1),
+            1 << 20,
+            Priority::Background,
+        );
+        let mut h = HealReport::default();
+        h.absorb(HealStats {
+            chunks_rereplicated: 1,
+            copies_made: 1,
+            bytes: 1 << 20,
+            registry_chunks: 0,
+            transfers: vec![id],
+        });
+        h.absorb(HealStats {
+            chunks_rereplicated: 2,
+            copies_made: 3,
+            bytes: 64,
+            registry_chunks: 1,
+            transfers: vec![],
+        });
+        assert_eq!(h.chunks_rereplicated, 3);
+        assert_eq!(h.copies_made, 4);
+        assert_eq!(h.in_flight(), 1);
+        h.settle(&mut f);
+        assert_eq!(h.in_flight(), 0);
+        assert_eq!(h.bytes_hidden, 1 << 20, "idle-wire heal bytes are hidden");
+        let mut c = Counters::new();
+        h.export_counters(&mut c);
+        assert_eq!(c.get(names::HEAL_COPIES_MADE), 4);
+        assert_eq!(c.get(names::HEAL_BYTES_HIDDEN), 1 << 20);
+    }
+}

@@ -1,0 +1,504 @@
+//! The injector: replays a [`ChaosSchedule`] into a live serving run
+//! and drives the self-healing loop after every wound.
+//!
+//! The injector *owns* the pool-management triple — topology,
+//! orchestrator, layer cache — for the duration of the run, and plugs
+//! into the serving loop as a [`ServeHook`]: every fault is an ordinary
+//! event on the [`PoolSim`] queue, popped in deterministic time order
+//! between arrivals, batch completions, and deadlines.  When a node
+//! dies mid-run the reaction is immediate and on-clock:
+//!
+//! 1. the topology marks it unhealthy (planning stops picking it),
+//! 2. the orchestrator re-places its replicas on survivors
+//!    ([`Orchestrator::node_failed`] → `replica_failed` per replica),
+//! 3. the layer cache purges its registrations
+//!    ([`PoolLayerCache::purge_node`]) so no plan counts a ghost, and
+//! 4. a healing pass re-replicates every under-`k` chunk over the
+//!    fabric's *background* lanes
+//!    ([`PoolLayerCache::rereplicate_chunks`]) — repair traffic
+//!    contends with (and yields to) the foreground serving it protects.
+//!
+//! Brownouts open a degraded-bandwidth window on one link
+//! ([`crate::fabric::Fabric::begin_brownout`]) and schedule their own
+//! restore event; [`ChaosInjector::finish`] closes anything still open,
+//! runs a final heal sweep, settles the heal transfers, and folds the
+//! run into a [`ChaosOutcome`].
+
+use std::collections::BTreeMap;
+
+use super::heal::HealReport;
+use super::report::{availability_ppm, ChaosReport};
+use super::schedule::{ChaosSchedule, FaultKind};
+use crate::coordinator::ServeHook;
+use crate::fabric::LinkClass;
+use crate::layerstore::PoolLayerCache;
+use crate::pool::{NodeId, Orchestrator, PoolTopology, RestartPolicy};
+use crate::sim::{tag, tag_kind, tag_payload, PoolSim};
+use crate::util::SimTime;
+
+/// Event-tag kind of a fault firing (payload: schedule index).
+pub const EV_CHAOS_FAULT: u8 = 0xC4;
+/// Event-tag kind of a brownout window closing (payload: schedule
+/// index of the fault that opened it).
+pub const EV_CHAOS_RESTORE: u8 = 0xC5;
+
+/// Everything a finished chaos run hands back: the two reports plus
+/// the (healed) pool state, returned to the caller for invariant
+/// checks and continued use.
+pub struct ChaosOutcome {
+    pub report: ChaosReport,
+    pub heal: HealReport,
+    pub topo: PoolTopology,
+    pub orch: Orchestrator,
+    pub cache: PoolLayerCache,
+}
+
+impl ChaosOutcome {
+    /// Post-run invariant: every live chunk is held by at least
+    /// `min(k, healthy-nodes)` *healthy* holders.
+    pub fn healed_to_k(&self, k: usize) -> bool {
+        let healthy = self.topo.healthy_nodes().count();
+        let want = k.min(healthy);
+        self.cache.chunks().into_iter().all(|c| {
+            self.cache
+                .chunk_holders_of(c)
+                .into_iter()
+                .filter(|&n| self.topo.node(n).is_some_and(|pn| pn.healthy))
+                .count()
+                >= want
+        })
+    }
+}
+
+/// See the module docs.  Build with [`ChaosInjector::new`], arm on the
+/// sim queue, pass as the hook to
+/// [`crate::coordinator::serve_with_hook`], then [`ChaosInjector::finish`].
+pub struct ChaosInjector {
+    schedule: ChaosSchedule,
+    topo: PoolTopology,
+    orch: Orchestrator,
+    cache: PoolLayerCache,
+    /// The chunk-holder invariant healing restores.
+    k: usize,
+    policy: RestartPolicy,
+    report: ChaosReport,
+    heal: HealReport,
+    /// Open brownout windows: which fault's restore closes each class.
+    active: BTreeMap<LinkClass, u64>,
+    /// `(instant, healthy nodes from that instant)` steps.
+    timeline: Vec<(SimTime, u32)>,
+    start: SimTime,
+}
+
+impl ChaosInjector {
+    /// Take ownership of the pool-management state for the run.
+    /// `k` is the chunk-holder invariant to heal back to; `policy`
+    /// governs replica re-placement off dead nodes.
+    pub fn new(
+        schedule: ChaosSchedule,
+        topo: PoolTopology,
+        orch: Orchestrator,
+        cache: PoolLayerCache,
+        k: usize,
+        policy: RestartPolicy,
+    ) -> Self {
+        let report = ChaosReport {
+            seed: schedule.seed,
+            ..Default::default()
+        };
+        ChaosInjector {
+            schedule,
+            topo,
+            orch,
+            cache,
+            k,
+            policy,
+            report,
+            heal: HealReport::default(),
+            active: BTreeMap::new(),
+            timeline: Vec::new(),
+            start: SimTime::ZERO,
+        }
+    }
+
+    /// Schedule every fault on the sim queue, offset from `sim.now()`.
+    pub fn arm(&mut self, sim: &mut PoolSim) {
+        self.start = sim.now();
+        let healthy = self.topo.healthy_nodes().count() as u32;
+        self.timeline.push((self.start, healthy));
+        for (i, f) in self.schedule.faults.iter().enumerate() {
+            sim.queue.schedule_at(self.start + f.at, tag(EV_CHAOS_FAULT, i as u64));
+        }
+    }
+
+    /// The faults this run will inject (for logging / verification).
+    pub fn schedule(&self) -> &ChaosSchedule {
+        &self.schedule
+    }
+
+    /// Pool state mid-run (the live topology, for assertions).
+    pub fn topo(&self) -> &PoolTopology {
+        &self.topo
+    }
+
+    fn inject(&mut self, sim: &mut PoolSim, now: SimTime, idx: usize) {
+        let Some(fault) = self.schedule.faults.get(idx).copied() else {
+            return;
+        };
+        self.report.faults_injected += 1;
+        match fault.kind {
+            FaultKind::NodeDeath { node } => {
+                self.report.node_deaths += 1;
+                self.kill_nodes(sim, now, &[node]);
+            }
+            FaultKind::ArrayLoss { array } => {
+                self.report.array_losses += 1;
+                let victims: Vec<NodeId> = self
+                    .topo
+                    .healthy_nodes()
+                    .filter(|n| n.array == array)
+                    .map(|n| n.id)
+                    .collect();
+                self.kill_nodes(sim, now, &victims);
+            }
+            FaultKind::LinkBrownout {
+                class,
+                keep_pct,
+                duration,
+            } => {
+                self.report.link_brownouts += 1;
+                self.open_window(sim, now, idx, class, keep_pct, duration);
+            }
+            FaultKind::RegistryStall { keep_pct, duration } => {
+                self.report.registry_stalls += 1;
+                self.open_window(sim, now, idx, LinkClass::RegistryWan, keep_pct, duration);
+            }
+        }
+    }
+
+    fn open_window(
+        &mut self,
+        sim: &mut PoolSim,
+        now: SimTime,
+        idx: usize,
+        class: LinkClass,
+        keep_pct: u32,
+        duration: SimTime,
+    ) {
+        sim.fabric.begin_brownout(now, class, keep_pct);
+        // latest window wins the class; a superseded restore is ignored
+        self.active.insert(class, idx as u64);
+        sim.queue.schedule_at(now + duration, tag(EV_CHAOS_RESTORE, idx as u64));
+    }
+
+    fn close_window(&mut self, sim: &mut PoolSim, now: SimTime, idx: usize) {
+        let class = match self.schedule.faults.get(idx).map(|f| f.kind) {
+            Some(FaultKind::LinkBrownout { class, .. }) => class,
+            Some(FaultKind::RegistryStall { .. }) => LinkClass::RegistryWan,
+            _ => return,
+        };
+        if self.active.get(&class) == Some(&(idx as u64)) {
+            sim.fabric.end_brownout(now, class);
+            self.active.remove(&class);
+        }
+    }
+
+    /// Simultaneous death of `nodes` + one reactive healing pass, all at
+    /// `now`.  Every victim is marked dead and purged *before* anything
+    /// heals, so a correlated loss (whole array) can never re-replicate
+    /// out of a node that is dying in the same instant — chunks whose
+    /// every copy died re-pull from the registry instead.
+    fn kill_nodes(&mut self, sim: &mut PoolSim, now: SimTime, nodes: &[NodeId]) {
+        let mut victims = Vec::new();
+        for &node in nodes {
+            if let Some(n) = self.topo.node_mut(node) {
+                if n.healthy {
+                    n.healthy = false;
+                    victims.push(node);
+                }
+            }
+        }
+        if victims.is_empty() {
+            return; // unknown or already dead: nothing to do
+        }
+        let healthy = self.topo.healthy_nodes().count() as u32;
+        self.timeline.push((now, healthy));
+        let mut orphans = Vec::new();
+        for &node in &victims {
+            let moved = self.orch.node_failed(&self.topo, node, self.policy);
+            self.heal.replicas_restarted += moved.len() as u64;
+            let purge = self.cache.purge_node(node);
+            self.heal.dead_nodes_purged += 1;
+            orphans.extend(purge.orphaned_chunks);
+        }
+        let stats =
+            self.cache.rereplicate_chunks(&mut sim.fabric, &self.topo, now, self.k, &orphans);
+        self.heal.absorb(stats);
+    }
+
+    /// Close out the run: end any window still open, run the final heal
+    /// sweep (a later death can re-wound chunks an earlier pass fixed),
+    /// settle the heal transfers, and integrate availability.
+    pub fn finish(mut self, sim: &mut PoolSim) -> ChaosOutcome {
+        let now = sim.now();
+        let open: Vec<usize> = self.active.values().map(|&i| i as usize).collect();
+        for idx in open {
+            self.close_window(sim, now, idx);
+        }
+        let stats = self.cache.rereplicate_chunks(&mut sim.fabric, &self.topo, now, self.k, &[]);
+        self.heal.absorb(stats);
+        self.heal.settle(&mut sim.fabric);
+        let cfg = self.topo.config();
+        let total = cfg.nodes_per_array * cfg.arrays;
+        self.report.availability_ppm =
+            availability_ppm(&self.timeline, total, self.start, now.max(self.start));
+        ChaosOutcome {
+            report: self.report,
+            heal: self.heal,
+            topo: self.topo,
+            orch: self.orch,
+            cache: self.cache,
+        }
+    }
+}
+
+impl ServeHook for ChaosInjector {
+    fn on_event(&mut self, sim: &mut PoolSim, now: SimTime, tag: u64) {
+        match tag_kind(tag) {
+            EV_CHAOS_FAULT => self.inject(sim, now, tag_payload(tag) as usize),
+            EV_CHAOS_RESTORE => self.close_window(sim, now, tag_payload(tag) as usize),
+            _ => {} // someone else's event
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chaos::schedule::Fault;
+    use crate::config::{EtherOnConfig, PoolConfig};
+    use crate::coordinator::{serve_with_hook, EchoExecutor, InferenceRequest, ServeParams};
+    use crate::metrics::Counters;
+    use crate::pool::DeploymentSpec;
+
+    fn pool_cfg(nodes: u32, arrays: u32) -> PoolConfig {
+        PoolConfig {
+            nodes_per_array: nodes,
+            arrays,
+            ..Default::default()
+        }
+    }
+
+    /// A 4×1 pool with a described 4-chunk blob at 2 healthy holders
+    /// and one replica per node.
+    fn rig() -> (PoolSim, PoolTopology, Orchestrator, PoolLayerCache) {
+        let cfg = pool_cfg(4, 1);
+        let mut sim = PoolSim::with_pool(&cfg, &EtherOnConfig::default());
+        let topo = PoolTopology::build(&cfg);
+        let mut orch = Orchestrator::new();
+        let mut cache = PoolLayerCache::new();
+        let recipe: Vec<(u64, u64)> = (0..4u64).map(|i| (0xC40 + i, 1 << 20)).collect();
+        assert!(cache.describe_chunks(0xB10B, &recipe));
+        for node in [0u32, 1] {
+            cache.fetch(&mut sim.fabric, &topo, SimTime::ZERO, node, 0xB10B, 4 << 20);
+        }
+        orch.deploy(
+            &topo,
+            &DeploymentSpec {
+                name: "infer".into(),
+                image: "llm-worker".into(),
+                replicas: 4,
+                restart: RestartPolicy::OnFailure,
+            },
+        )
+        .unwrap();
+        (sim, topo, orch, cache)
+    }
+
+    fn reqs(n: u64) -> Vec<(SimTime, InferenceRequest)> {
+        (0..n)
+            .map(|id| {
+                (
+                    SimTime::us(id * 200),
+                    InferenceRequest {
+                        id,
+                        prompt: vec![id as i32; 8],
+                        max_new_tokens: 3,
+                    },
+                )
+            })
+            .collect()
+    }
+
+    fn params() -> ServeParams {
+        ServeParams {
+            batch_width: 4,
+            prompt_len: 8,
+            batch_window: SimTime::us(100),
+            ..Default::default()
+        }
+    }
+
+    fn mk() -> impl FnOnce() -> anyhow::Result<EchoExecutor> {
+        || Ok(EchoExecutor)
+    }
+
+    #[test]
+    fn node_death_mid_serve_heals_back_to_k_without_losing_requests() {
+        let (mut sim, topo, orch, cache) = rig();
+        let schedule = ChaosSchedule {
+            seed: 0,
+            faults: vec![Fault {
+                at: SimTime::us(300),
+                kind: FaultKind::NodeDeath { node: 1 },
+            }],
+        };
+        let mut inj = ChaosInjector::new(schedule, topo, orch, cache, 2, RestartPolicy::OnFailure);
+        inj.arm(&mut sim);
+        let report = serve_with_hook(
+            &mut sim,
+            vec![mk(), mk(), mk(), mk()],
+            reqs(12),
+            &params(),
+            &mut inj,
+        );
+        assert_eq!(report.responses.len(), 12, "no request is lost to the fault");
+        let out = inj.finish(&mut sim);
+        assert_eq!(out.report.node_deaths, 1);
+        assert!(out.healed_to_k(2), "every chunk back at 2 healthy holders");
+        assert!(!out.topo.node(1).unwrap().healthy);
+        assert!(out.heal.copies_made >= 4, "node 1's four chunk copies re-replicated");
+        assert_eq!(out.heal.dead_nodes_purged, 1);
+        assert_eq!(out.heal.replicas_restarted, 1, "node 1's replica moved");
+        assert!(out.heal.bytes >= 4 << 20);
+        assert!(
+            out.report.availability_ppm < 1_000_000,
+            "a dead node shows up in availability: {}",
+            out.report.availability_ppm
+        );
+        assert!(sim.fabric.stats.transfers_bg >= 4, "heal rides the background lane");
+    }
+
+    #[test]
+    fn array_loss_repulls_orphans_across_the_wan() {
+        let cfg = pool_cfg(2, 2);
+        let mut sim = PoolSim::with_pool(&cfg, &EtherOnConfig::default());
+        let topo = PoolTopology::build(&cfg);
+        let mut cache = PoolLayerCache::new();
+        // both copies live in array 0 (nodes 0 and 1)
+        for node in [0u32, 1] {
+            cache.fetch(&mut sim.fabric, &topo, SimTime::ZERO, node, 0x99, 2 << 20);
+        }
+        let schedule = ChaosSchedule {
+            seed: 0,
+            faults: vec![Fault {
+                at: SimTime::us(300),
+                kind: FaultKind::ArrayLoss { array: 0 },
+            }],
+        };
+        let mut inj = ChaosInjector::new(
+            schedule,
+            topo,
+            Orchestrator::new(),
+            cache,
+            2,
+            RestartPolicy::OnFailure,
+        );
+        inj.arm(&mut sim);
+        let report = serve_with_hook(&mut sim, vec![mk(), mk()], reqs(6), &params(), &mut inj);
+        assert_eq!(report.responses.len(), 6);
+        let out = inj.finish(&mut sim);
+        assert_eq!(out.report.array_losses, 1);
+        assert_eq!(out.heal.dead_nodes_purged, 2);
+        assert!(
+            out.heal.registry_chunks >= 1,
+            "the orphaned blob's first new copy re-crossed the WAN"
+        );
+        assert!(out.healed_to_k(2));
+        assert_eq!(out.cache.chunk_holders_of(0x99), vec![2, 3]);
+    }
+
+    #[test]
+    fn brownout_windows_open_and_close_on_schedule() {
+        let (mut sim, topo, orch, cache) = rig();
+        let schedule = ChaosSchedule {
+            seed: 0,
+            faults: vec![
+                Fault {
+                    at: SimTime::us(200),
+                    kind: FaultKind::LinkBrownout {
+                        class: LinkClass::HostUplink,
+                        keep_pct: 10,
+                        duration: SimTime::us(400),
+                    },
+                },
+                Fault {
+                    at: SimTime::us(500),
+                    kind: FaultKind::RegistryStall {
+                        keep_pct: 20,
+                        duration: SimTime::us(300),
+                    },
+                },
+            ],
+        };
+        let mut inj = ChaosInjector::new(schedule, topo, orch, cache, 2, RestartPolicy::OnFailure);
+        inj.arm(&mut sim);
+        let report = serve_with_hook(
+            &mut sim,
+            vec![mk(), mk(), mk(), mk()],
+            reqs(10),
+            &params(),
+            &mut inj,
+        );
+        assert_eq!(report.responses.len(), 10);
+        let out = inj.finish(&mut sim);
+        assert_eq!(out.report.link_brownouts, 1);
+        assert_eq!(out.report.registry_stalls, 1);
+        assert_eq!(sim.fabric.stats.link_flaps, 2);
+        assert_eq!(
+            sim.fabric.stats.brownout_ns,
+            SimTime::us(700).as_ns(),
+            "both windows closed at their scheduled width"
+        );
+        assert!(!sim.fabric.brownout_active(LinkClass::HostUplink));
+        assert!(!sim.fabric.brownout_active(LinkClass::RegistryWan));
+        assert_eq!(out.report.availability_ppm, 1_000_000, "no node died");
+    }
+
+    #[test]
+    fn generated_same_seed_runs_are_byte_identical() {
+        let run = |seed: u64| {
+            let (mut sim, topo, orch, cache) = rig();
+            let schedule = ChaosSchedule::generate(seed, &topo, SimTime::ms(3));
+            let mut inj =
+                ChaosInjector::new(schedule, topo, orch, cache, 2, RestartPolicy::OnFailure);
+            inj.arm(&mut sim);
+            let report = serve_with_hook(
+                &mut sim,
+                vec![mk(), mk(), mk(), mk()],
+                reqs(12),
+                &params(),
+                &mut inj,
+            );
+            let out = inj.finish(&mut sim);
+            sim.fabric.run_to_idle();
+            let mut c = Counters::new();
+            report.export_counters(&mut c);
+            sim.export_counters(&mut c);
+            out.report.export_counters(&mut c);
+            out.heal.export_counters(&mut c);
+            (c, out)
+        };
+        for seed in [7u64, 42, 1984] {
+            let (c1, o1) = run(seed);
+            let (c2, o2) = run(seed);
+            assert_eq!(c1, c2, "seed {seed} replays must match byte-for-byte");
+            assert_eq!(o1.report, o2.report);
+            assert!(o1.healed_to_k(2), "seed {seed} pool healed");
+            assert_eq!(o1.report.faults_injected, o2.report.faults_injected);
+        }
+        let (ca, _) = run(7);
+        let (cb, _) = run(42);
+        assert_ne!(ca, cb, "different seeds must actually differ");
+    }
+}

@@ -1,0 +1,38 @@
+//! Chaos engine: deterministic fault injection + pool self-healing on
+//! the shared [`crate::sim::PoolSim`] clock (ROADMAP direction 2).
+//!
+//! The paper's disaggregation claim only holds if the pool survives the
+//! failures disaggregation invites — node death, PCIe-switch/array
+//! loss, link brownouts, registry-WAN stalls — without losing the
+//! chunk-level ≥k-holder invariant GC pins.  This module closes the
+//! loop from failure → detection → repair → re-verified invariant:
+//!
+//! * [`ChaosSchedule`] — a seeded fault schedule, generated entirely
+//!   from one seed + the pool shape + a horizon.  Same seed, same
+//!   faults, same instants: chaos runs are byte-replayable tests, not
+//!   ambient randomness.
+//! * [`ChaosInjector`] — replays the schedule into a serving run as a
+//!   [`crate::coordinator::ServeHook`]: faults are ordinary events on
+//!   the one queue, and each node death immediately triggers replica
+//!   re-placement, presence purge, and background re-replication while
+//!   requests are still in flight.
+//! * [`HealReport`] / [`ChaosReport`] — the repair and injection
+//!   ledgers, exported under canonical `heal.*` / `chaos.*` counter
+//!   names; availability is integrated as integer ppm so the
+//!   determinism gate stays byte-exact.
+//!
+//! Run one from the CLI:
+//!
+//! ```sh
+//! repro serve --workload nginx-filedown --nodes 8 --chaos 42
+//! ```
+
+pub mod heal;
+pub mod injector;
+pub mod report;
+pub mod schedule;
+
+pub use heal::HealReport;
+pub use injector::{ChaosInjector, ChaosOutcome, EV_CHAOS_FAULT, EV_CHAOS_RESTORE};
+pub use report::{availability_ppm, ChaosReport};
+pub use schedule::{ChaosSchedule, Fault, FaultKind};

@@ -1,0 +1,109 @@
+//! What a chaos run did to the pool, in canonical counters.
+
+use crate::metrics::{names, Counters};
+use crate::util::SimTime;
+
+/// Injection-side summary of one chaos run.  All integers, exported
+/// under the canonical `chaos.*` names, so two same-seed runs compare
+/// byte-for-byte.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ChaosReport {
+    pub seed: u64,
+    /// Faults that actually fired (every scheduled fault fires).
+    pub faults_injected: u64,
+    /// Individual node-death faults (array losses count separately).
+    pub node_deaths: u64,
+    pub array_losses: u64,
+    pub link_brownouts: u64,
+    pub registry_stalls: u64,
+    /// Time-averaged healthy-node fraction over the run, in parts per
+    /// million — integer so the determinism gate stays byte-exact.
+    pub availability_ppm: u64,
+}
+
+impl ChaosReport {
+    pub fn availability_fraction(&self) -> f64 {
+        self.availability_ppm as f64 / 1e6
+    }
+
+    pub fn export_counters(&self, c: &mut Counters) {
+        c.add(names::CHAOS_FAULTS_INJECTED, self.faults_injected);
+        c.add(names::CHAOS_NODE_DEATHS, self.node_deaths);
+        c.add(names::CHAOS_ARRAY_LOSSES, self.array_losses);
+        c.add(names::CHAOS_LINK_BROWNOUTS, self.link_brownouts);
+        c.add(names::CHAOS_REGISTRY_STALLS, self.registry_stalls);
+        c.add(names::CHAOS_AVAILABILITY_PPM, self.availability_ppm);
+    }
+}
+
+/// Integrate a healthy-node timeline into parts-per-million
+/// availability over `[start, end]`.
+///
+/// `timeline` holds `(instant, healthy-count-from-that-instant)` steps,
+/// first entry at `start`; `total` is the pool size.  All arithmetic is
+/// u128 integer, so equal inputs produce equal output bit-for-bit.  An
+/// empty window (or pool) reports full availability — nothing was
+/// unavailable for any amount of time.
+pub fn availability_ppm(
+    timeline: &[(SimTime, u32)],
+    total: u32,
+    start: SimTime,
+    end: SimTime,
+) -> u64 {
+    let span = end.saturating_sub(start).as_ns();
+    if span == 0 || total == 0 || timeline.is_empty() {
+        return 1_000_000;
+    }
+    let mut weighted: u128 = 0;
+    for (i, &(at, healthy)) in timeline.iter().enumerate() {
+        let from = at.max(start).as_ns().min(end.as_ns());
+        let to = match timeline.get(i + 1) {
+            Some(&(next, _)) => next.max(start).as_ns().min(end.as_ns()),
+            None => end.as_ns(),
+        };
+        weighted += (to.saturating_sub(from)) as u128 * healthy as u128;
+    }
+    (weighted * 1_000_000 / (span as u128 * total as u128)) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_health_is_a_million_ppm() {
+        let tl = [(SimTime::ZERO, 8u32)];
+        assert_eq!(availability_ppm(&tl, 8, SimTime::ZERO, SimTime::ms(10)), 1_000_000);
+    }
+
+    #[test]
+    fn half_dead_for_half_the_run_averages_three_quarters() {
+        // 4 of 8 die at the midpoint of a 10ms run
+        let tl = [(SimTime::ZERO, 8u32), (SimTime::ms(5), 4)];
+        assert_eq!(availability_ppm(&tl, 8, SimTime::ZERO, SimTime::ms(10)), 750_000);
+    }
+
+    #[test]
+    fn empty_windows_report_full_availability() {
+        assert_eq!(availability_ppm(&[], 8, SimTime::ZERO, SimTime::ms(1)), 1_000_000);
+        let tl = [(SimTime::ZERO, 8u32)];
+        assert_eq!(availability_ppm(&tl, 8, SimTime::ms(3), SimTime::ms(3)), 1_000_000);
+    }
+
+    #[test]
+    fn counters_export_under_canonical_names() {
+        let r = ChaosReport {
+            seed: 42,
+            faults_injected: 5,
+            node_deaths: 2,
+            array_losses: 1,
+            link_brownouts: 1,
+            registry_stalls: 1,
+            availability_ppm: 812_500,
+        };
+        let mut c = Counters::new();
+        r.export_counters(&mut c);
+        assert_eq!(c.get(names::CHAOS_FAULTS_INJECTED), 5);
+        assert_eq!(c.get(names::CHAOS_AVAILABILITY_PPM), 812_500);
+    }
+}

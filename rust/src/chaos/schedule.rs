@@ -1,0 +1,248 @@
+//! Seeded fault schedules — the adversarial input a chaos run replays.
+//!
+//! A schedule is generated *entirely* from one seed plus the pool shape
+//! and a time horizon, through the crate's [`Rng`]: the same seed always
+//! yields the same faults at the same instants, so a chaos run is as
+//! replayable as any other scenario on the [`crate::sim::PoolSim`]
+//! clock (the Norost fuzz-harness discipline: adversarial schedules are
+//! first-class deterministic tests, not ambient randomness).
+//!
+//! Generation respects a *kill budget*: fewer than half the pool may
+//! die, so the surviving majority can always absorb re-placed replicas
+//! and re-replicated chunks.  A death (or whole-array loss) the budget
+//! cannot afford degrades to a brownout of that array's backplane — the
+//! schedule stays the same length, the pool stays healable.
+
+use std::collections::BTreeSet;
+
+use crate::fabric::LinkClass;
+use crate::pool::{NodeId, PoolTopology};
+use crate::util::{Rng, SimTime};
+
+/// One injectable fault.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// A DockerSSD dies, permanently: its replicas re-place, its chunk
+    /// registrations purge, its copies re-replicate.
+    NodeDeath { node: NodeId },
+    /// Every node of one array dies at once (a PCIe-switch/backplane
+    /// loss) — the correlated-failure case that forces cross-array and
+    /// registry re-replication.
+    ArrayLoss { array: u32 },
+    /// A link runs at `keep_pct`% of its configured bandwidth for
+    /// `duration` — a flap/brownout window priced by the fabric engine.
+    LinkBrownout {
+        class: LinkClass,
+        keep_pct: u32,
+        duration: SimTime,
+    },
+    /// The registry WAN slows to `keep_pct`% for `duration` — cold
+    /// pulls and orphan re-pulls crawl while the intranet stays fast.
+    RegistryStall { keep_pct: u32, duration: SimTime },
+}
+
+/// A fault and the instant it fires on the shared clock.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fault {
+    pub at: SimTime,
+    pub kind: FaultKind,
+}
+
+/// A full seeded schedule, sorted by fire time.
+#[derive(Clone, Debug)]
+pub struct ChaosSchedule {
+    pub seed: u64,
+    pub faults: Vec<Fault>,
+}
+
+impl ChaosSchedule {
+    /// How many nodes may die in total: strictly fewer than half the
+    /// pool, and never the last node.
+    pub fn kill_budget(pool_nodes: usize) -> usize {
+        pool_nodes.saturating_sub(1) / 2
+    }
+
+    /// Generate the schedule for `seed` over `[5%, 85%]` of `horizon`.
+    /// 3–7 faults, roughly 35% node deaths / 30% brownouts / 20%
+    /// registry stalls / 15% array losses, kill-budget capped.
+    pub fn generate(seed: u64, topo: &PoolTopology, horizon: SimTime) -> Self {
+        let mut rng = Rng::new(seed ^ 0xC4A0_5EED);
+        let cfg = topo.config();
+        let pool: Vec<NodeId> = topo.healthy_nodes().map(|n| n.id).collect();
+        let budget = Self::kill_budget(pool.len());
+        let mut dead: BTreeSet<NodeId> = BTreeSet::new();
+        let horizon_ns = horizon.as_ns().max(1000);
+        let n_faults = 3 + rng.below(5);
+        let mut faults = Vec::new();
+        for _ in 0..n_faults {
+            let at = SimTime::ns(rng.range(horizon_ns / 20, horizon_ns * 17 / 20));
+            let roll = rng.below(100);
+            let kind = if roll < 35 {
+                Self::node_death(&mut rng, &pool, &mut dead, budget, cfg.arrays)
+            } else if roll < 65 {
+                Self::brownout(&mut rng, cfg.arrays, horizon_ns)
+            } else if roll < 85 {
+                FaultKind::RegistryStall {
+                    keep_pct: 10 + rng.below(21) as u32,
+                    duration: Self::window(&mut rng, horizon_ns),
+                }
+            } else {
+                Self::array_loss(&mut rng, topo, &mut dead, budget)
+            };
+            faults.push(Fault { at, kind });
+        }
+        // stable: equal fire times keep generation order
+        faults.sort_by_key(|f| f.at);
+        ChaosSchedule { seed, faults }
+    }
+
+    /// Nodes this schedule kills (directly or via array loss), sorted.
+    pub fn doomed_nodes(&self, topo: &PoolTopology) -> Vec<NodeId> {
+        let mut dead = BTreeSet::new();
+        for f in &self.faults {
+            match f.kind {
+                FaultKind::NodeDeath { node } => {
+                    dead.insert(node);
+                }
+                FaultKind::ArrayLoss { array } => {
+                    dead.extend(topo.healthy_nodes().filter(|n| n.array == array).map(|n| n.id));
+                }
+                _ => {}
+            }
+        }
+        dead.into_iter().collect()
+    }
+
+    fn window(rng: &mut Rng, horizon_ns: u64) -> SimTime {
+        SimTime::ns(rng.range(horizon_ns / 50, horizon_ns / 8))
+    }
+
+    fn node_death(
+        rng: &mut Rng,
+        pool: &[NodeId],
+        dead: &mut BTreeSet<NodeId>,
+        budget: usize,
+        arrays: u32,
+    ) -> FaultKind {
+        let alive: Vec<NodeId> = pool.iter().copied().filter(|n| !dead.contains(n)).collect();
+        if dead.len() >= budget || alive.is_empty() {
+            // budget spent: degrade to a short total blackout of a
+            // random array instead of losing another node
+            return FaultKind::LinkBrownout {
+                class: LinkClass::Array(rng.below(arrays.max(1) as u64) as u32),
+                keep_pct: 1,
+                duration: SimTime::ns(1_000_000),
+            };
+        }
+        let node = alive[rng.below(alive.len() as u64) as usize];
+        dead.insert(node);
+        FaultKind::NodeDeath { node }
+    }
+
+    fn array_loss(
+        rng: &mut Rng,
+        topo: &PoolTopology,
+        dead: &mut BTreeSet<NodeId>,
+        budget: usize,
+    ) -> FaultKind {
+        let arrays = topo.config().arrays.max(1);
+        let array = rng.below(arrays as u64) as u32;
+        let victims: Vec<NodeId> = topo
+            .healthy_nodes()
+            .filter(|n| n.array == array && !dead.contains(&n.id))
+            .map(|n| n.id)
+            .collect();
+        if victims.is_empty() || dead.len() + victims.len() > budget {
+            // losing the whole array would overrun the kill budget:
+            // brown its backplane out hard instead
+            return FaultKind::LinkBrownout {
+                class: LinkClass::Array(array),
+                keep_pct: 1 + rng.below(5) as u32,
+                duration: SimTime::ns(2_000_000),
+            };
+        }
+        dead.extend(victims);
+        FaultKind::ArrayLoss { array }
+    }
+
+    fn brownout(rng: &mut Rng, arrays: u32, horizon_ns: u64) -> FaultKind {
+        let class = match rng.below(4) {
+            0 => LinkClass::Array(rng.below(arrays.max(1) as u64) as u32),
+            1 => LinkClass::Tray,
+            _ => LinkClass::HostUplink,
+        };
+        FaultKind::LinkBrownout {
+            class,
+            keep_pct: 5 + rng.below(26) as u32,
+            duration: Self::window(rng, horizon_ns),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PoolConfig;
+
+    fn topo(nodes: u32, arrays: u32) -> PoolTopology {
+        PoolTopology::build(&PoolConfig {
+            nodes_per_array: nodes,
+            arrays,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn same_seed_generates_identical_schedules() {
+        let t = topo(4, 2);
+        let a = ChaosSchedule::generate(7, &t, SimTime::ms(100));
+        let b = ChaosSchedule::generate(7, &t, SimTime::ms(100));
+        assert_eq!(a.faults, b.faults);
+        assert!(!a.faults.is_empty());
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let t = topo(4, 2);
+        let a = ChaosSchedule::generate(1, &t, SimTime::ms(100));
+        let b = ChaosSchedule::generate(2, &t, SimTime::ms(100));
+        assert_ne!(a.faults, b.faults, "seed must steer the schedule");
+    }
+
+    #[test]
+    fn schedules_are_sorted_and_inside_the_horizon() {
+        let t = topo(8, 2);
+        for seed in 0..64 {
+            let s = ChaosSchedule::generate(seed, &t, SimTime::ms(50));
+            assert!(s.faults.len() >= 3 && s.faults.len() <= 7, "{}", s.faults.len());
+            for w in s.faults.windows(2) {
+                assert!(w[0].at <= w[1].at);
+            }
+            for f in &s.faults {
+                assert!(f.at >= SimTime::ms(50).scale(0.05) && f.at < SimTime::ms(50));
+            }
+        }
+    }
+
+    #[test]
+    fn kill_budget_spares_a_majority_for_every_seed() {
+        let t = topo(4, 2); // 8 nodes: at most 3 may die
+        for seed in 0..256 {
+            let s = ChaosSchedule::generate(seed, &t, SimTime::ms(100));
+            let doomed = s.doomed_nodes(&t);
+            assert!(
+                doomed.len() <= ChaosSchedule::kill_budget(8),
+                "seed {seed} kills {doomed:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn tiny_pools_never_lose_their_last_node() {
+        let t = topo(1, 1);
+        for seed in 0..64 {
+            let s = ChaosSchedule::generate(seed, &t, SimTime::ms(10));
+            assert!(s.doomed_nodes(&t).is_empty(), "seed {seed}");
+        }
+    }
+}

@@ -25,7 +25,9 @@ pub mod server;
 pub use batcher::{Batch, Batcher};
 pub use kv_manager::KvManager;
 pub use router::Router;
-pub use server::{serve, BatchExecutor, EchoExecutor, ServeParams, ServeReport};
+pub use server::{
+    serve, serve_with_hook, BatchExecutor, EchoExecutor, ServeHook, ServeParams, ServeReport,
+};
 
 use crate::util::SimTime;
 

@@ -412,6 +412,28 @@ impl<E: BatchExecutor> ServeLoop<'_, E> {
     }
 }
 
+/// Observer for event-queue entries the serving loop does not own.
+///
+/// The serve loop pops *every* event on the shared queue; tag kinds it
+/// recognizes (arrivals, deadlines, completions) drive the request
+/// lifecycle, and anything else is handed to the run's hook — with
+/// mutable access to the whole [`PoolSim`], so the hook can degrade
+/// links, fail nodes, or schedule follow-up events of its own while
+/// requests are mid-flight.  This is the seam the chaos engine
+/// ([`crate::chaos`]) injects through.
+pub trait ServeHook {
+    /// One foreign event, after its pop advanced the clock to `now`.
+    fn on_event(&mut self, sim: &mut PoolSim, now: SimTime, tag: u64);
+}
+
+/// What [`serve`] runs with: foreign events still advance the clock,
+/// nothing else (the pre-hook behavior, verbatim).
+struct NoHook;
+
+impl ServeHook for NoHook {
+    fn on_event(&mut self, _sim: &mut PoolSim, _now: SimTime, _tag: u64) {}
+}
+
 /// Serve `requests` (each tagged with its simulated arrival time) over
 /// one node per entry of `factories`, on `sim`'s shared clock and
 /// fabric.  Drains `sim.queue`; returns once every request completed.
@@ -420,12 +442,30 @@ impl<E: BatchExecutor> ServeLoop<'_, E> {
 /// tag kind it does not recognize are popped (their time still advances
 /// the clock) and otherwise ignored, so schedule foreign work either
 /// before (and pop it yourself, as `Orchestrator::deploy_sim` callers
-/// do) or after serving.
+/// do) or after serving — or use [`serve_with_hook`] to be called back
+/// on each one.
 pub fn serve<E, F>(
     sim: &mut PoolSim,
     factories: Vec<F>,
     requests: Vec<(SimTime, InferenceRequest)>,
     params: &ServeParams,
+) -> ServeReport
+where
+    E: BatchExecutor,
+    F: FnOnce() -> anyhow::Result<E>,
+{
+    serve_with_hook(sim, factories, requests, params, &mut NoHook)
+}
+
+/// [`serve`], with a [`ServeHook`] receiving every foreign event on the
+/// queue as the run replays — fault injection and healing interleave
+/// with serving on the one clock instead of running at a private t=0.
+pub fn serve_with_hook<E, F>(
+    sim: &mut PoolSim,
+    factories: Vec<F>,
+    requests: Vec<(SimTime, InferenceRequest)>,
+    params: &ServeParams,
+    hook: &mut dyn ServeHook,
 ) -> ServeReport
 where
     E: BatchExecutor,
@@ -489,9 +529,13 @@ where
                 lp.on_done(sim, now, tag_payload(ev.tag) as usize);
                 lp.pump(sim, now);
             }
-            // a foreign event kind left on the shared queue: not ours to
-            // interpret — the pop advanced the clock, nothing else
-            _ => {}
+            // a foreign event kind on the shared queue: not ours to
+            // interpret — the pop advanced the clock; the hook decides
+            // what (if anything) it means
+            _ => {
+                hook.on_event(sim, now, ev.tag);
+                lp.pump(sim, now);
+            }
         }
     }
 
@@ -648,6 +692,33 @@ mod tests {
         let (c2, l2) = run();
         assert_eq!(c1, c2, "serve.* and fabric.* counters must match byte-for-byte");
         assert_eq!(l1, l2, "per-request simulated latencies must match");
+    }
+
+    #[test]
+    fn hook_sees_foreign_events_at_their_scheduled_time() {
+        struct Spy(Vec<(SimTime, u64)>);
+        impl ServeHook for Spy {
+            fn on_event(&mut self, sim: &mut PoolSim, now: SimTime, tag: u64) {
+                // a hook may mutate the sim: schedule a follow-up once
+                if tag_payload(tag) == 1 {
+                    sim.queue.schedule_at(now + SimTime::us(5), crate::sim::tag(9, 2));
+                }
+                self.0.push((now, tag));
+            }
+        }
+        let mut s = sim(1);
+        s.queue.schedule_at(SimTime::us(30), crate::sim::tag(9, 1));
+        let mut spy = Spy(Vec::new());
+        let report = serve_with_hook(&mut s, vec![mk()], reqs(4), &params(), &mut spy);
+        assert_eq!(report.responses.len(), 4, "serving is undisturbed");
+        assert_eq!(
+            spy.0,
+            vec![
+                (SimTime::us(30), crate::sim::tag(9, 1)),
+                (SimTime::us(35), crate::sim::tag(9, 2)),
+            ],
+            "every foreign event reaches the hook, including hook-scheduled ones"
+        );
     }
 
     #[test]

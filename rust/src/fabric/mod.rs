@@ -129,6 +129,10 @@ pub struct FabricStats {
     pub prefetch_bytes_hidden: u64,
     /// Engine transfers whose completion was re-timed by a preemption.
     pub retimed_transfers: u64,
+    /// Times a link entered a degraded-bandwidth window (a flap).
+    pub link_flaps: u64,
+    /// Total time links spent degraded, accumulated as windows close.
+    pub brownout_ns: u64,
 }
 
 /// The pool fabric: topology-keyed link queues + accounting.
@@ -142,6 +146,9 @@ pub struct Fabric {
     host_gbps: f64,
     wan_gbps: f64,
     links: BTreeMap<LinkClass, LinkQueue>,
+    /// Links currently in a degraded-bandwidth window: when the window
+    /// opened and the full-rate bandwidth to restore on close.
+    brownouts: BTreeMap<LinkClass, (SimTime, f64)>,
     pub stats: FabricStats,
     /// Frame-level accounting charged to the Ether-oN driver path for
     /// intranet traffic.
@@ -162,6 +169,7 @@ impl Fabric {
             host_gbps: pool.host_gbps,
             wan_gbps: pool.wan_gbps,
             links: BTreeMap::new(),
+            brownouts: BTreeMap::new(),
             stats: FabricStats::default(),
             ether: EtherOnStats::default(),
             engine: sched::Engine::default(),
@@ -366,6 +374,41 @@ impl Fabric {
         }
     }
 
+    /// Open a degraded-bandwidth window on `class`: the link keeps
+    /// `keep_pct`% of its configured bandwidth until [`Fabric::end_brownout`].
+    /// Both the synchronous path and the event-driven engine price wire
+    /// time from the live link bandwidth at grant time, so every grant
+    /// inside the window pays the degraded rate; [`Fabric::estimate`]
+    /// stays on the configured rate — planning is deliberately blind to
+    /// transient brownouts, the same way placement scoring ignores
+    /// queue occupancy.  Re-opening an already-degraded link closes the
+    /// prior window first, so each call counts as one flap.
+    pub fn begin_brownout(&mut self, now: SimTime, class: LinkClass, keep_pct: u32) {
+        self.end_brownout(now, class);
+        self.ensure_link(class);
+        let base = self.gbps_of(class);
+        let keep = keep_pct.clamp(1, 100);
+        self.links.get_mut(&class).expect("link ensured above").gbps =
+            base * keep as f64 / 100.0;
+        self.brownouts.insert(class, (now, base));
+        self.stats.link_flaps += 1;
+    }
+
+    /// Close the degraded-bandwidth window on `class`, restoring the
+    /// configured bandwidth and accumulating the window's duration into
+    /// `fabric.brownout_ns`.  A link with no open window is a no-op.
+    pub fn end_brownout(&mut self, now: SimTime, class: LinkClass) {
+        if let Some((since, base)) = self.brownouts.remove(&class) {
+            self.stats.brownout_ns += now.saturating_sub(since).as_ns();
+            self.links.get_mut(&class).expect("degraded link exists").gbps = base;
+        }
+    }
+
+    /// Whether `class` is currently inside a degraded-bandwidth window.
+    pub fn brownout_active(&self, class: LinkClass) -> bool {
+        self.brownouts.contains_key(&class)
+    }
+
     /// Per-link state, for tests and reporting.
     pub fn link(&self, class: LinkClass) -> Option<&LinkQueue> {
         self.links.get(&class)
@@ -396,6 +439,8 @@ impl Fabric {
         c.add(names::FABRIC_PREFETCH_BYTES, self.stats.prefetch_bytes);
         c.add(names::FABRIC_PREFETCH_HIDDEN, self.stats.prefetch_bytes_hidden);
         c.add(names::FABRIC_RETIMED_TRANSFERS, self.stats.retimed_transfers);
+        c.add(names::FABRIC_LINK_FLAPS, self.stats.link_flaps);
+        c.add(names::FABRIC_BROWNOUT_NS, self.stats.brownout_ns);
         c.add(names::SIM_CLAMPED_EVENTS, self.engine_clamped_events());
     }
 }
@@ -553,6 +598,72 @@ mod tests {
         assert_eq!(f.stats.transfers_bg, 1);
         assert_eq!(f.stats.prefetch_bytes, 1 << 20);
         assert_eq!(f.stats.prefetch_bytes_hidden, 0, "queued prefetch is not hidden");
+    }
+
+    #[test]
+    fn brownout_degrades_live_wire_time_then_restores() {
+        let mut f = fabric(4, 1);
+        let healthy = f.transfer(
+            SimTime::ZERO,
+            Endpoint::Node(0),
+            Endpoint::Node(1),
+            8 << 20,
+            Priority::Foreground,
+        );
+        // a 10%-bandwidth window makes the same transfer ~10x slower
+        let t1 = f.link(LinkClass::Array(0)).unwrap().fg_busy_until;
+        f.begin_brownout(t1, LinkClass::Array(0), 10);
+        assert!(f.brownout_active(LinkClass::Array(0)));
+        let degraded = f.transfer(t1, Endpoint::Node(0), Endpoint::Node(1), 8 << 20, Priority::Foreground);
+        let ratio = degraded.latency().as_ns() as f64 / healthy.latency().as_ns() as f64;
+        assert!((8.0..12.0).contains(&ratio), "degraded/healthy = {ratio:.2}");
+        // restore: bandwidth and latency come back, duration accumulates
+        let t2 = degraded.finish;
+        f.end_brownout(t2, LinkClass::Array(0));
+        assert!(!f.brownout_active(LinkClass::Array(0)));
+        let restored = f.transfer(t2, Endpoint::Node(0), Endpoint::Node(1), 8 << 20, Priority::Foreground);
+        assert_eq!(restored.latency(), healthy.latency());
+        assert_eq!(f.stats.link_flaps, 1);
+        assert_eq!(f.stats.brownout_ns, (t2 - t1).as_ns());
+    }
+
+    #[test]
+    fn reopened_brownout_counts_two_flaps_and_splits_the_window() {
+        let mut f = fabric(4, 1);
+        f.begin_brownout(SimTime::ms(1), LinkClass::Tray, 50);
+        f.begin_brownout(SimTime::ms(3), LinkClass::Tray, 20);
+        f.end_brownout(SimTime::ms(6), LinkClass::Tray);
+        f.end_brownout(SimTime::ms(9), LinkClass::Tray); // no window: no-op
+        assert_eq!(f.stats.link_flaps, 2);
+        assert_eq!(f.stats.brownout_ns, SimTime::ms(5).as_ns());
+        // bandwidth restored to the configured rate, not 50% of it
+        let idle = Fabric::new(&PoolConfig::default(), &EtherOnConfig::default());
+        assert_eq!(f.link(LinkClass::Tray).unwrap().gbps, idle.gbps_of(LinkClass::Tray));
+        let mut c = Counters::new();
+        f.export_counters(&mut c);
+        assert_eq!(c.get(names::FABRIC_LINK_FLAPS), 2);
+        assert_eq!(c.get(names::FABRIC_BROWNOUT_NS), SimTime::ms(5).as_ns());
+    }
+
+    #[test]
+    fn brownout_prices_engine_grants_too() {
+        let mut f = fabric(4, 1);
+        let quiet = f.estimate(Endpoint::Node(0), Endpoint::Node(1), 8 << 20);
+        f.begin_brownout(SimTime::ZERO, LinkClass::Array(0), 10);
+        let id = f.schedule(
+            SimTime::ZERO,
+            Endpoint::Node(0),
+            Endpoint::Node(1),
+            8 << 20,
+            Priority::Foreground,
+        );
+        f.run_to_idle();
+        let r = f.receipt_of(id).unwrap();
+        assert!(
+            r.finish > quiet.scale(5.0),
+            "engine grant inside the window pays the degraded rate: {} vs {quiet}",
+            r.finish
+        );
     }
 
     #[test]

@@ -37,7 +37,9 @@ use crate::util::{fnv1a, SimTime};
 
 pub use cow::{CowStore, LayerId};
 pub use dedup::{ChunkEntry, ChunkId, Decref, DedupIndex};
-pub use poolcache::{ChunkPlan, FetchSource, PoolLayerCache, PrefetchHandle};
+pub use poolcache::{
+    ChunkPlan, FetchSource, HealStats, PoolLayerCache, PrefetchHandle, PurgeSummary,
+};
 
 /// Default chunk size: 64KiB, the nrfs embedded-data threshold — small
 /// enough that single-file edits don't rewrite whole layers, large

@@ -70,6 +70,36 @@ pub struct ChunkPlan {
     pub source: FetchSource,
 }
 
+/// What [`PoolLayerCache::purge_node`] removed for a dead node.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PurgeSummary {
+    /// Blob-level registrations the node held.
+    pub registrations_dropped: u64,
+    /// Mid-pull partial registrations the node held.
+    pub partials_dropped: u64,
+    /// Chunks whose *last* holder was the purged node — gone from the
+    /// pool entirely; healing must re-pull them across the registry WAN.
+    pub orphaned_chunks: Vec<ChunkId>,
+}
+
+/// What one [`PoolLayerCache::rereplicate_chunks`] pass moved.
+#[derive(Clone, Debug, Default)]
+pub struct HealStats {
+    /// Distinct chunks that were below `k` healthy holders.
+    pub chunks_rereplicated: u64,
+    /// Replica copies created (one per transfer issued).
+    pub copies_made: u64,
+    /// Bytes put on background lanes (chunks of unknown size register
+    /// holders without wire traffic and contribute 0 here).
+    pub bytes: u64,
+    /// Chunks no healthy peer held — their first copy crossed the WAN.
+    pub registry_chunks: u64,
+    /// The engine-scheduled background transfers; settle them to learn
+    /// the re-timed landing times (and which bytes were fully hidden
+    /// behind foreground traffic).
+    pub transfers: Vec<TransferId>,
+}
+
 /// Handle to an engine-scheduled prefetch: the per-chunk transfer ids
 /// plus a floor time.  [`PrefetchHandle::settle`] pumps the fabric
 /// engine just far enough to resolve every transfer and returns the
@@ -125,6 +155,11 @@ pub struct PoolLayerCache {
     chunk_blobs: HashMap<ChunkId, BTreeSet<u64>>,
     /// (node, blob) -> chunks held via partial (mid-pull) registration.
     partial: HashMap<(NodeId, u64), BTreeSet<ChunkId>>,
+    /// chunk -> byte size, learned from recipes and from planned
+    /// transfers.  The heal loop sizes re-replication traffic from this;
+    /// a chunk that never moved and was never described heals with zero
+    /// wire bytes (the holder is still registered).
+    chunk_sizes: HashMap<ChunkId, u64>,
     pub local_hits: u64,
     pub peer_fetches: u64,
     pub registry_fetches: u64,
@@ -277,8 +312,9 @@ impl PoolLayerCache {
         if implicit_gone {
             self.chunk_blobs.remove(&blob);
         }
-        for (c, _) in &distinct {
+        for (c, b) in &distinct {
             self.chunk_blobs.entry(*c).or_default().insert(blob);
+            self.chunk_sizes.entry(*c).or_insert(*b);
         }
         self.recipes.insert(blob, distinct.clone());
         for &n in &holders {
@@ -639,6 +675,9 @@ impl PoolLayerCache {
         }
         let plans = self.plan_chunks(fabric, topo, node, digest, bytes);
         let src = self.account_chunk_plans(&plans, digest);
+        for p in &plans {
+            self.chunk_sizes.entry(p.chunk).or_insert(p.bytes);
+        }
         let mut finish = now;
         for p in &plans {
             match p.source {
@@ -704,6 +743,9 @@ impl PoolLayerCache {
         }
         let plans = self.plan_chunks(fabric, topo, node, digest, bytes);
         let src = self.account_chunk_plans(&plans, digest);
+        for p in &plans {
+            self.chunk_sizes.entry(p.chunk).or_insert(p.bytes);
+        }
         let mut ids = Vec::new();
         let mut moved = 0u64;
         // Two phases: independent chunks first, marker-dependent chunks
@@ -751,6 +793,193 @@ impl PoolLayerCache {
             self.prefetched.insert((node, digest), handle.clone());
         }
         (src, handle)
+    }
+
+    /// All chunks currently held by at least one node, sorted — the
+    /// live-chunk set heal invariants are checked over.
+    pub fn chunks(&self) -> Vec<ChunkId> {
+        let mut v: Vec<ChunkId> = self.chunk_holders.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Forget everything `node` holds — the presence-map half of node
+    /// death.  Every blob-level registration, every mid-pull partial
+    /// registration, and every prefetch marker of the node is dropped,
+    /// so the derived k-holder counts GC enforces and the sources
+    /// [`PoolLayerCache::plan_chunks`] picks can never count the dead
+    /// node again.  Iteration is over sorted keys, so two same-seed runs
+    /// purge byte-identically.  Returns what was dropped, including the
+    /// chunks whose last copy died with the node (healing re-pulls those
+    /// from the registry).
+    pub fn purge_node(&mut self, node: NodeId) -> PurgeSummary {
+        let mut held_before: Vec<ChunkId> = self
+            .chunk_holders
+            .iter()
+            .filter(|(_, holders)| holders.contains_key(&node))
+            .map(|(c, _)| *c)
+            .collect();
+        held_before.sort_unstable();
+        let mut blobs: BTreeSet<u64> = BTreeSet::new();
+        let mut registrations = 0u64;
+        for (b, nodes) in &self.registered {
+            if nodes.contains(&node) {
+                blobs.insert(*b);
+                registrations += 1;
+            }
+        }
+        let mut partials = 0u64;
+        for (n, b) in self.partial.keys() {
+            if *n == node {
+                blobs.insert(*b);
+                partials += 1;
+            }
+        }
+        for b in blobs {
+            self.evict(node, b);
+        }
+        self.prefetched.retain(|(n, _), _| *n != node);
+        PurgeSummary {
+            registrations_dropped: registrations,
+            partials_dropped: partials,
+            orphaned_chunks: held_before
+                .into_iter()
+                .filter(|c| !self.chunk_holders.contains_key(c))
+                .collect(),
+        }
+    }
+
+    /// Register a healed chunk copy on `node` through the normal
+    /// registration machinery, so derived blob presence and the gc
+    /// invariants see it like any other copy: chunks of a described blob
+    /// become partial registrations (promoted to full when complete),
+    /// implicit single-chunk blobs become blob registrations.
+    fn heal_register(&mut self, node: NodeId, chunk: ChunkId) {
+        let blob = self
+            .chunk_blobs
+            .get(&chunk)
+            .and_then(|s| s.iter().next().copied())
+            .unwrap_or(chunk);
+        if self.recipes.contains_key(&blob) {
+            self.register_chunk(node, blob, chunk);
+        } else {
+            self.register(node, blob);
+        }
+    }
+
+    /// One self-healing pass: every chunk held by fewer than `k` healthy
+    /// nodes (capped by how many healthy nodes exist) gets copies
+    /// scheduled on the fabric's *background* lanes until the invariant
+    /// holds again — from the nearest surviving holder, or across the
+    /// registry WAN for chunks the pool lost entirely (`orphans` from
+    /// [`PoolLayerCache::purge_node`], plus any live chunk whose every
+    /// holder is unhealthy).  Targets are the least-loaded healthy
+    /// non-holders (by chunk-registration count, ties to the lowest id),
+    /// so repeated churn spreads copies instead of piling them on one
+    /// node.  Heal traffic yields to foreground serving within one frame
+    /// quantum like any background transfer; settle the returned
+    /// transfer ids to learn the re-timed landing times.
+    pub fn rereplicate_chunks(
+        &mut self,
+        fabric: &mut Fabric,
+        topo: &PoolTopology,
+        now: SimTime,
+        k: usize,
+        orphans: &[ChunkId],
+    ) -> HealStats {
+        let mut stats = HealStats::default();
+        let healthy: Vec<NodeId> = topo.healthy_nodes().map(|n| n.id).collect();
+        let want = k.min(healthy.len());
+        if want == 0 {
+            return stats;
+        }
+        // commutative sum per node: HashMap iteration order cannot leak
+        let mut load: BTreeMap<NodeId, u64> = healthy.iter().map(|&n| (n, 0)).collect();
+        for holders in self.chunk_holders.values() {
+            for n in holders.keys() {
+                if let Some(l) = load.get_mut(n) {
+                    *l += 1;
+                }
+            }
+        }
+        let mut all: BTreeSet<ChunkId> = self.chunk_holders.keys().copied().collect();
+        all.extend(orphans.iter().copied());
+        for chunk in all {
+            let mut healthy_holders: BTreeSet<NodeId> = self
+                .chunk_holders_of(chunk)
+                .into_iter()
+                .filter(|&n| topo.node(n).is_some_and(|pn| pn.healthy))
+                .collect();
+            if healthy_holders.len() >= want {
+                continue;
+            }
+            stats.chunks_rereplicated += 1;
+            if healthy_holders.is_empty() {
+                stats.registry_chunks += 1;
+            }
+            let bytes = self.chunk_sizes.get(&chunk).copied().unwrap_or(0);
+            while healthy_holders.len() < want {
+                let Some(&target) = healthy
+                    .iter()
+                    .filter(|n| !healthy_holders.contains(n))
+                    .min_by_key(|&&n| (load[&n], n))
+                else {
+                    break;
+                };
+                let from = match self.nearest_chunk_peer(fabric, topo, target, chunk, bytes) {
+                    Some((p, _)) => Endpoint::Node(p),
+                    None => Endpoint::Registry,
+                };
+                if bytes > 0 {
+                    stats.transfers.push(fabric.schedule(
+                        now,
+                        from,
+                        Endpoint::Node(target),
+                        bytes,
+                        Priority::Background,
+                    ));
+                    stats.bytes += bytes;
+                }
+                stats.copies_made += 1;
+                self.heal_register(target, chunk);
+                healthy_holders.insert(target);
+                *load.get_mut(&target).expect("target is healthy") += 1;
+            }
+        }
+        stats
+    }
+
+    /// Re-point a per-chunk plan at surviving holders: any chunk planned
+    /// from a peer that has since died (or no longer holds the chunk) is
+    /// re-planned to the nearest healthy holder, falling back to the
+    /// registry — how a mid-flight pull survives its source's death
+    /// instead of fetching from a ghost.  Local and registry plans pass
+    /// through unchanged.
+    pub fn reroute_chunk_plans(
+        &self,
+        fabric: &Fabric,
+        topo: &PoolTopology,
+        node: NodeId,
+        plans: &[ChunkPlan],
+    ) -> Vec<ChunkPlan> {
+        plans
+            .iter()
+            .map(|p| {
+                let source = match p.source {
+                    FetchSource::Peer(peer)
+                        if !topo.node(peer).is_some_and(|n| n.healthy)
+                            || !self.node_has_chunk(peer, p.chunk) =>
+                    {
+                        match self.nearest_chunk_peer(fabric, topo, node, p.chunk, p.bytes) {
+                            Some((q, _)) => FetchSource::Peer(q),
+                            None => FetchSource::Registry,
+                        }
+                    }
+                    s => s,
+                };
+                ChunkPlan { source, ..*p }
+            })
+            .collect()
     }
 
     /// Whether evicting `node`'s copy of `blob` keeps every chunk of the
@@ -1277,6 +1506,148 @@ mod tests {
             "a different chunking is rejected, not merged"
         );
         assert_eq!(pc.chunk_recipe(0xE).unwrap(), &[(0xC1, 1 << 20)]);
+    }
+
+    // --- node death, purge, and self-healing --------------------------------
+
+    #[test]
+    fn purge_node_forgets_registrations_partials_and_markers() {
+        let (t, mut f) = rig(4, 1);
+        let mut pc = PoolLayerCache::new();
+        let recipe = recipe4();
+        assert!(pc.describe_chunks(0xB10B, &recipe));
+        assert!(pc.describe_chunks(0xD, &[(0xDC, 1 << 20), (0xDD, 1 << 20)]));
+        pc.register(1, 0xB10B); // full holder
+        pc.register(2, 0xB10B); // survivor
+        pc.register_chunk(1, 0xD, 0xDC); // mid-pull partial, only copy of 0xDC
+        pc.register(1, 0x77); // implicit blob, only copy
+        pc.register(2, 0x88);
+        pc.prefetch(&mut f, &t, SimTime::ZERO, 1, 0x88, 1 << 20); // in-flight marker on node 1
+        let s = pc.purge_node(1);
+        assert_eq!(s.registrations_dropped, 3, "0xB10B + 0x77 + the in-flight 0x88");
+        assert_eq!(s.partials_dropped, 1);
+        assert_eq!(s.orphaned_chunks, vec![0x77, 0xDC], "last-copy chunks are reported lost");
+        assert!(!pc.node_has(1, 0xB10B));
+        assert!(!pc.node_has(1, 0x88), "the prefetch-registered copy is gone too");
+        for (c, _) in &recipe {
+            assert!(!pc.node_has_chunk(1, *c), "no chunk of the dead node survives");
+            assert_eq!(pc.chunk_holders_of(*c), vec![2], "the survivor still holds");
+        }
+        // plan_chunks can never pick the purged node again
+        let plans = pc.plan_chunks(&f, &t, 3, 0xB10B, 4 << 20);
+        assert!(plans.iter().all(|p| p.source == FetchSource::Peer(2)), "{plans:?}");
+        let plans = pc.plan_chunks(&f, &t, 3, 0x88, 1 << 20);
+        assert!(plans.iter().all(|p| p.source == FetchSource::Peer(2)), "{plans:?}");
+    }
+
+    #[test]
+    fn purge_then_gc_never_counts_the_dead_holder() {
+        // regression (ISSUE 6 satellite): gc's derived k-holder count
+        // must not keep a layer "at k" through a dead node's copy
+        let mut pc = PoolLayerCache::new();
+        for n in 0..3 {
+            pc.register(n, 0xF7);
+        }
+        pc.purge_node(0);
+        assert_eq!(pc.holders(0xF7), vec![1, 2]);
+        // at k=2 with only live holders counted, gc must not evict
+        assert!(pc.gc(2, |_| 0).is_empty(), "both survivors are load-bearing");
+        assert_eq!(pc.holders(0xF7), vec![1, 2]);
+    }
+
+    #[test]
+    fn rereplicate_restores_chunk_k_from_surviving_peers() {
+        let (mut t, mut f) = rig(4, 1);
+        let mut pc = PoolLayerCache::new();
+        let recipe = recipe4();
+        assert!(pc.describe_chunks(0xB10B, &recipe));
+        pc.register(0, 0xB10B);
+        pc.register(1, 0xB10B);
+        t.node_mut(1).unwrap().healthy = false;
+        pc.purge_node(1);
+        let stats = pc.rereplicate_chunks(&mut f, &t, SimTime::ZERO, 2, &[]);
+        assert_eq!(stats.chunks_rereplicated, 4, "every chunk fell below k");
+        assert_eq!(stats.copies_made, 4);
+        assert_eq!(stats.bytes, 4 << 20);
+        assert_eq!(stats.registry_chunks, 0, "node 0 still held everything");
+        f.run_to_idle();
+        for (c, _) in &recipe {
+            let holders = pc.chunk_holders_of(*c);
+            assert!(holders.len() >= 2, "chunk {c:#x} healed to k: {holders:?}");
+            assert!(!holders.contains(&1), "the dead node is not a holder");
+        }
+        // bytes rode the background lane
+        assert!(f.stats.prefetch_bytes >= 4 << 20);
+        // a second pass is a no-op: the invariant already holds
+        let again = pc.rereplicate_chunks(&mut f, &t, SimTime::ZERO, 2, &[]);
+        assert_eq!(again.copies_made, 0);
+    }
+
+    #[test]
+    fn rereplicate_repulls_orphaned_chunks_from_the_registry() {
+        let (mut t, mut f) = rig(2, 2);
+        let mut pc = PoolLayerCache::new();
+        // the whole of array 0 (nodes 0,1) holds the only copies
+        pc.fetch(&mut f, &t, SimTime::ZERO, 0, 0x99, 2 << 20);
+        pc.fetch(&mut f, &t, SimTime::ZERO, 1, 0x99, 2 << 20);
+        t.node_mut(0).unwrap().healthy = false;
+        t.node_mut(1).unwrap().healthy = false;
+        let mut orphans = Vec::new();
+        for n in [0, 1] {
+            orphans.extend(pc.purge_node(n).orphaned_chunks);
+        }
+        assert_eq!(orphans, vec![0x99], "array loss orphaned the blob");
+        let stats = pc.rereplicate_chunks(&mut f, &t, SimTime::ZERO, 2, &orphans);
+        assert_eq!(stats.registry_chunks, 1, "first copy re-crossed the WAN");
+        assert_eq!(stats.copies_made, 2, "then a peer copy restored k");
+        assert_eq!(stats.bytes, 4 << 20, "sizes learned from the original fetch");
+        f.run_to_idle();
+        assert_eq!(pc.chunk_holders_of(0x99), vec![2, 3]);
+        assert!(pc.node_has(2, 0x99), "implicit blob presence derives on the target");
+    }
+
+    #[test]
+    fn rereplicate_spreads_copies_by_load() {
+        let (mut t, mut f) = rig(6, 1);
+        let mut pc = PoolLayerCache::new();
+        assert!(pc.describe_chunks(0xA, &[(0xC1, 1 << 20)]));
+        assert!(pc.describe_chunks(0xB, &[(0xC2, 1 << 20)]));
+        pc.register(0, 0xA);
+        pc.register(0, 0xB);
+        pc.register(1, 0xA);
+        pc.register(1, 0xB);
+        t.node_mut(1).unwrap().healthy = false;
+        pc.purge_node(1);
+        let stats = pc.rereplicate_chunks(&mut f, &t, SimTime::ZERO, 2, &[]);
+        assert_eq!(stats.copies_made, 2);
+        // least-loaded healthy non-holders get the copies: one each on
+        // nodes 2 and 3, not both piled on node 2
+        assert_eq!(pc.chunk_holders_of(0xC1), vec![0, 2]);
+        assert_eq!(pc.chunk_holders_of(0xC2), vec![0, 3]);
+    }
+
+    #[test]
+    fn reroute_chunk_plans_survives_the_source_dying_mid_pull() {
+        let (mut t, mut f) = rig(4, 1);
+        let mut pc = PoolLayerCache::new();
+        let recipe = recipe4();
+        assert!(pc.describe_chunks(0xB10B, &recipe));
+        pc.register(1, 0xB10B);
+        pc.register(2, 0xB10B);
+        let plans = pc.plan_chunks(&f, &t, 3, 0xB10B, 4 << 20);
+        assert!(plans.iter().all(|p| p.source == FetchSource::Peer(1)), "nearest first");
+        // node 1 dies while the pull is mid-flight
+        t.node_mut(1).unwrap().healthy = false;
+        pc.purge_node(1);
+        let rerouted = pc.reroute_chunk_plans(&f, &t, 3, &plans);
+        assert!(
+            rerouted.iter().all(|p| p.source == FetchSource::Peer(2)),
+            "plans re-point at the surviving holder: {rerouted:?}"
+        );
+        // with no surviving holder the plan falls back to the registry
+        t.node_mut(2).unwrap().healthy = false;
+        let rerouted = pc.reroute_chunk_plans(&f, &t, 3, &plans);
+        assert!(rerouted.iter().all(|p| p.source == FetchSource::Registry), "{rerouted:?}");
     }
 
     #[test]

@@ -26,8 +26,13 @@
 //!   token generation deterministically), [`smoke`] (the deterministic
 //!   trace-replay scenario shared by the `repro serve` CLI and the CI
 //!   golden gate).
+//! * Robustness: [`chaos`] (seeded deterministic fault injection — node
+//!   death, array loss, link brownouts, registry stalls — plus the
+//!   self-healing loop that re-places replicas and re-replicates chunks
+//!   back to the k-holder invariant over background lanes).
 
 pub mod benchkit;
+pub mod chaos;
 pub mod config;
 pub mod coordinator;
 pub mod docker;

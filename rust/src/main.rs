@@ -14,12 +14,16 @@
 //! repro fig13cd           # Fig 13c/d: batch-size sensitivity
 //! repro docker-demo       # pull/run/logs lifecycle on the simulated SSD
 //! repro serve [--nodes N --requests R --tokens T --seed S]
-//!             [--workload ROW --scale K --boot-storm B]
+//!             [--workload ROW --scale K --boot-storm B --chaos S]
 //!                         # simulated-time pool serving (PoolSim): a
 //!                         # uniform-random storm, or a Table-2 trace
 //!                         # replay (--workload mariadb-tpch4) optionally
 //!                         # contending with B replica boots on the same
-//!                         # clock; with --features pjrt also
+//!                         # clock; --chaos S replays a seeded fault
+//!                         # schedule (node deaths, array loss, link
+//!                         # brownouts, registry stalls) against the
+//!                         # replay and reports availability + healing;
+//!                         # with --features pjrt also
 //!                         # [--artifacts DIR] for real PJRT generation
 //! repro config            # print the default config as JSON
 //! ```
@@ -371,6 +375,7 @@ fn serve_cmd(rest: &[String]) {
     let mut workload = cfg.serve.workload.clone();
     let mut scale = cfg.serve.trace_scale;
     let mut boot_storm = cfg.serve.boot_storm;
+    let mut chaos: Option<u64> = None;
     let mut i = 0;
     while i < rest.len() {
         match rest[i].as_str() {
@@ -404,6 +409,10 @@ fn serve_cmd(rest: &[String]) {
                 boot_storm = value_of(i, "--boot-storm").parse().expect("--boot-storm B");
                 i += 2;
             }
+            "--chaos" => {
+                chaos = Some(value_of(i, "--chaos").parse().expect("--chaos S"));
+                i += 2;
+            }
             other => {
                 eprintln!("unknown flag {other}");
                 std::process::exit(2);
@@ -426,6 +435,7 @@ fn serve_cmd(rest: &[String]) {
             scale,
             seed,
             boot_storm,
+            chaos,
         };
         let out = match smoke::run(&p) {
             Ok(out) => out,
@@ -454,12 +464,48 @@ fn serve_cmd(rest: &[String]) {
                 rep.pulls_done
             );
         }
+        if let Some(ch) = &out.chaos {
+            let invariant = if ch.healed_to_k(smoke::CHAOS_HEAL_K) {
+                "held"
+            } else {
+                "VIOLATED"
+            };
+            println!(
+                "chaos seed {}: {} faults ({} node deaths, {} array losses, {} brownouts, \
+                 {} registry stalls); availability {:.4}%, p99 under churn {}",
+                ch.report.seed,
+                ch.report.faults_injected,
+                ch.report.node_deaths,
+                ch.report.array_losses,
+                ch.report.link_brownouts,
+                ch.report.registry_stalls,
+                100.0 * ch.report.availability_fraction(),
+                out.report.latency.quantile(0.99)
+            );
+            println!(
+                "healing: {} chunks re-replicated ({} copies, {} bytes, {} hidden behind \
+                 foreground), {} registry re-pulls, {} replicas restarted, {} nodes purged; \
+                 k>={} invariant {}",
+                ch.heal.chunks_rereplicated,
+                ch.heal.copies_made,
+                ch.heal.bytes,
+                ch.heal.bytes_hidden,
+                ch.heal.registry_chunks,
+                ch.heal.replicas_restarted,
+                ch.heal.dead_nodes_purged,
+                smoke::CHAOS_HEAL_K,
+                invariant
+            );
+        }
         print_report(&out.report, &out.counters);
         return;
     }
 
     let params = ServeParams::from_config(&cfg.serve);
     let mut sim = PoolSim::new(&cfg);
+    if chaos.is_some() {
+        eprintln!("note: --chaos only applies to a trace replay (--workload ROW); ignored");
+    }
     println!(
         "simulated serve storm: {nodes} nodes, {requests} requests x {tokens} tokens, seed {seed}"
     );

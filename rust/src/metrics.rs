@@ -142,6 +142,10 @@ pub mod names {
     /// (the receipt is strictly later than the optimistic busy-until
     /// figure would have been).
     pub const FABRIC_RETIMED_TRANSFERS: &str = "fabric.retimed_transfers";
+    /// Times a link entered a degraded-bandwidth window (a flap).
+    pub const FABRIC_LINK_FLAPS: &str = "fabric.link_flaps";
+    /// Total time any link spent in a degraded-bandwidth window.
+    pub const FABRIC_BROWNOUT_NS: &str = "fabric.brownout_ns";
 
     // Canonical names for the [`crate::sim`] event core.
     /// Events whose requested firing time was in the past and got
@@ -169,6 +173,35 @@ pub mod names {
     pub const SERVE_MAKESPAN_NS: &str = "serve.makespan_ns";
     pub const SERVE_LATENCY_MEAN_NS: &str = "serve.latency_mean_ns";
     pub const SERVE_LATENCY_P99_NS: &str = "serve.latency_p99_ns";
+
+    // Canonical names for the [`crate::chaos`] fault-injection engine
+    // and the self-healing loop it drives.  Chaos counters describe the
+    // *injected* schedule (what went wrong, when, how often); heal
+    // counters describe the repair traffic that brought the pool back
+    // to the chunk-level >=k-holder invariant.
+    pub const CHAOS_FAULTS_INJECTED: &str = "chaos.faults_injected";
+    pub const CHAOS_NODE_DEATHS: &str = "chaos.node_deaths";
+    pub const CHAOS_ARRAY_LOSSES: &str = "chaos.array_losses";
+    pub const CHAOS_LINK_BROWNOUTS: &str = "chaos.link_brownouts";
+    pub const CHAOS_REGISTRY_STALLS: &str = "chaos.registry_stalls";
+    /// Time-weighted healthy-node fraction over the serve window, in
+    /// parts per million (integer so two same-seed runs compare
+    /// byte-identically).
+    pub const CHAOS_AVAILABILITY_PPM: &str = "chaos.availability_ppm";
+    /// Distinct chunks that fell below k healthy holders and were healed.
+    pub const HEAL_CHUNKS_REREPLICATED: &str = "heal.chunks_rereplicated";
+    /// Replica copies created by the heal loop (one per transfer).
+    pub const HEAL_COPIES_MADE: &str = "heal.copies_made";
+    /// Bytes the heal loop moved over background lanes.
+    pub const HEAL_BYTES: &str = "heal.bytes";
+    /// Heal bytes that never waited behind foreground traffic.
+    pub const HEAL_BYTES_HIDDEN: &str = "heal.bytes_hidden";
+    /// Chunks no surviving peer held — re-pulled across the registry WAN.
+    pub const HEAL_REGISTRY_CHUNKS: &str = "heal.registry_chunks";
+    /// Replicas re-placed off dead nodes via `replica_failed`.
+    pub const HEAL_REPLICAS_RESTARTED: &str = "heal.replicas_restarted";
+    /// Dead nodes whose load entries and chunk registrations were purged.
+    pub const HEAL_DEAD_NODES_PURGED: &str = "heal.dead_nodes_purged";
 }
 
 /// Named counters for substrate statistics.  `PartialEq` so two runs'

@@ -284,7 +284,16 @@ impl Orchestrator {
         let target = if topo.node(node).is_some_and(|n| n.healthy) {
             node
         } else {
-            *self.load.entry(node).or_insert(1) -= 1;
+            // drop the dead node's load share; at zero the entry goes
+            // away entirely so spread/locality scoring and gc never see
+            // a ghost holder (the old `or_insert(1) -= 1` could leave a
+            // permanent zero — or underflow on a double fault)
+            if let Some(l) = self.load.get_mut(&node) {
+                *l = l.saturating_sub(1);
+                if *l == 0 {
+                    self.load.remove(&node);
+                }
+            }
             let mut healthy: Vec<NodeId> = topo.healthy_nodes().map(|n| n.id).collect();
             if healthy.is_empty() {
                 return false;
@@ -299,6 +308,36 @@ impl Orchestrator {
         p.running = true;
         p.restarts += 1;
         true
+    }
+
+    /// A whole node died.  Every replica it ran fails at once and is
+    /// re-placed per `policy` (the caller marks the node unhealthy in
+    /// `topo` *first*, so [`Orchestrator::replica_failed`] moves each one
+    /// to a surviving node), then the node's residual load entry is
+    /// purged so no future placement decision counts a dead node.
+    ///
+    /// Returns the `(deployment, replica)` pairs that were re-placed —
+    /// the chaos heal loop's restart ledger.
+    pub fn node_failed(
+        &mut self,
+        topo: &PoolTopology,
+        node: NodeId,
+        policy: RestartPolicy,
+    ) -> Vec<(String, u32)> {
+        let doomed: Vec<(String, u32)> = self
+            .placements
+            .iter()
+            .filter(|p| p.node == node && p.running)
+            .map(|p| (p.deployment.clone(), p.replica))
+            .collect();
+        let mut moved = Vec::new();
+        for (dep, r) in doomed {
+            if self.replica_failed(topo, &dep, r, policy) {
+                moved.push((dep, r));
+            }
+        }
+        self.load.remove(&node);
+        moved
     }
 
     /// Replicas running per deployment (health summary the host monitors
@@ -570,6 +609,52 @@ mod tests {
         assert!(orch.replica_failed(&t, "infer", 0, RestartPolicy::Always));
         let moved = orch.placements("infer")[0].node;
         assert_ne!(moved, original);
+    }
+
+    #[test]
+    fn node_failure_replaces_every_replica_and_purges_its_load() {
+        let mut t = topo(3);
+        let mut orch = Orchestrator::new();
+        orch.deploy(&t, &spec("infer", 3)).unwrap();
+        orch.deploy(&t, &spec("web", 3)).unwrap(); // two replicas per node
+        t.node_mut(1).unwrap().healthy = false;
+        let moved = orch.node_failed(&t, 1, RestartPolicy::OnFailure);
+        assert_eq!(moved.len(), 2, "both of node 1's replicas re-placed: {moved:?}");
+        // regression (ISSUE 6 satellite): no residual load entry on the
+        // dead node — gc_pool's load signal and spread scoring must
+        // never count a dead holder
+        assert_eq!(orch.load_of(1), 0);
+        assert_eq!(orch.load_of(0) + orch.load_of(2), 6, "survivors absorb the work");
+        assert_eq!(orch.running_count("infer"), 3);
+        assert_eq!(orch.running_count("web"), 3);
+        assert!(orch.placements("infer").iter().all(|p| p.node != 1));
+        assert!(orch.placements("web").iter().all(|p| p.node != 1));
+    }
+
+    #[test]
+    fn repeated_node_failure_reports_are_idempotent() {
+        let mut t = topo(2);
+        let mut orch = Orchestrator::new();
+        orch.deploy(&t, &spec("infer", 2)).unwrap();
+        t.node_mut(0).unwrap().healthy = false;
+        assert_eq!(orch.node_failed(&t, 0, RestartPolicy::OnFailure).len(), 1);
+        // a second report of the same dead node is a no-op, not an
+        // underflow panic on the (already purged) load entry
+        assert!(orch.node_failed(&t, 0, RestartPolicy::OnFailure).is_empty());
+        assert_eq!(orch.load_of(0), 0);
+        assert_eq!(orch.load_of(1), 2);
+        assert_eq!(orch.running_count("infer"), 2);
+    }
+
+    #[test]
+    fn node_failure_with_no_survivors_leaves_replicas_down() {
+        let mut t = topo(1);
+        let mut orch = Orchestrator::new();
+        orch.deploy(&t, &spec("infer", 2)).unwrap();
+        t.node_mut(0).unwrap().healthy = false;
+        assert!(orch.node_failed(&t, 0, RestartPolicy::OnFailure).is_empty());
+        assert_eq!(orch.running_count("infer"), 0);
+        assert_eq!(orch.load_of(0), 0, "the dead node's load is still purged");
     }
 
     #[test]

@@ -10,14 +10,20 @@
 //! match it byte-for-byte, and the in-process replay must regenerate it
 //! (seed or refresh it with `UPDATE_GOLDEN=1 cargo test --test golden`).
 
+use crate::chaos::{ChaosInjector, ChaosOutcome, ChaosSchedule};
 use crate::config::SystemConfig;
-use crate::coordinator::{serve, EchoExecutor, ServeParams, ServeReport};
+use crate::coordinator::{serve, serve_with_hook, EchoExecutor, ServeParams, ServeReport};
 use crate::layerstore::PoolLayerCache;
 use crate::metrics::{Counters, Table};
-use crate::pool::{BootStormReport, DeploymentSpec, Orchestrator, PoolTopology, RestartPolicy};
+use crate::pool::{
+    BootStormReport, DeploymentSpec, NodeId, Orchestrator, PoolTopology, RestartPolicy,
+};
 use crate::sim::PoolSim;
 use crate::util::SimTime;
 use crate::workloads::{all_workloads, trace_arrivals, workload_named, ArrivalParams};
+
+/// The chunk-holder invariant chaos runs heal back to.
+pub const CHAOS_HEAL_K: usize = 2;
 
 /// Inputs of one trace-replay serve run (the `repro serve` CLI knobs
 /// that matter for a workload replay).
@@ -32,6 +38,9 @@ pub struct SmokeParams {
     pub seed: u64,
     /// Replicas booted on the same clock; 0 disables the storm.
     pub boot_storm: u32,
+    /// Seed of a [`ChaosSchedule`] to replay while serving; `None`
+    /// (the CI smoke path) serves undisturbed.
+    pub chaos: Option<u64>,
 }
 
 impl SmokeParams {
@@ -44,6 +53,7 @@ impl SmokeParams {
             scale: 2000,
             seed: 42,
             boot_storm: 2,
+            chaos: None,
         }
     }
 }
@@ -64,6 +74,10 @@ pub struct SmokeOutcome {
     /// drained first so in-flight prefetches are fully accounted.
     pub counters: Counters,
     pub storm: Option<BootStormReport>,
+    /// The chaos run's reports plus the healed pool state, when a
+    /// `--chaos` seed was set — invariant checks read the pool from
+    /// here.
+    pub chaos: Option<ChaosOutcome>,
     pub arrivals: ArrivalSummary,
     pub workload_name: String,
 }
@@ -106,10 +120,26 @@ pub fn run(p: &SmokeParams) -> Result<SmokeOutcome, String> {
     };
 
     let mut sim = PoolSim::new(&cfg);
+    let topo = PoolTopology::build(&cfg.pool);
+    let mut orch = Orchestrator::new();
+    let mut cache = PoolLayerCache::new();
+    if p.chaos.is_some() {
+        // the heal invariant needs live content even without a storm:
+        // pre-warm the storm image onto the first k nodes at t=0, so
+        // every chunk starts at exactly the invariant the healing loop
+        // must restore
+        let warm: Vec<NodeId> = topo
+            .healthy_nodes()
+            .take(CHAOS_HEAL_K)
+            .map(|n| n.id)
+            .collect();
+        for node in warm {
+            for (d, b) in boot_storm_layers() {
+                cache.fetch(&mut sim.fabric, &topo, SimTime::ZERO, node, d, b);
+            }
+        }
+    }
     let storm = if p.boot_storm > 0 {
-        let topo = PoolTopology::build(&cfg.pool);
-        let mut orch = Orchestrator::new();
-        let mut cache = PoolLayerCache::new();
         let spec = DeploymentSpec {
             name: "storm".into(),
             image: "llm-worker".into(),
@@ -127,17 +157,38 @@ pub fn run(p: &SmokeParams) -> Result<SmokeOutcome, String> {
     let factories: Vec<_> = (0..p.nodes)
         .map(|_| || Ok::<_, anyhow::Error>(EchoExecutor))
         .collect();
-    let report = serve(&mut sim, factories, arr.requests, &params);
+    let (report, chaos) = match p.chaos {
+        Some(chaos_seed) => {
+            let schedule = ChaosSchedule::generate(chaos_seed, &topo, arr.span);
+            let mut inj = ChaosInjector::new(
+                schedule,
+                topo,
+                orch,
+                cache,
+                CHAOS_HEAL_K,
+                RestartPolicy::OnFailure,
+            );
+            inj.arm(&mut sim);
+            let report = serve_with_hook(&mut sim, factories, arr.requests, &params, &mut inj);
+            (report, Some(inj.finish(&mut sim)))
+        }
+        None => (serve(&mut sim, factories, arr.requests, &params), None),
+    };
     // settle engine-scheduled background prefetches so the exported
     // fabric counters cover the whole storm, re-timed receipts included
     sim.fabric.run_to_idle();
     let mut counters = Counters::new();
     report.export_counters(&mut counters);
     sim.export_counters(&mut counters);
+    if let Some(out) = &chaos {
+        out.report.export_counters(&mut counters);
+        out.heal.export_counters(&mut counters);
+    }
     Ok(SmokeOutcome {
         report,
         counters,
         storm,
+        chaos,
         arrivals,
         workload_name: spec.full_name(),
     })
@@ -145,10 +196,10 @@ pub fn run(p: &SmokeParams) -> Result<SmokeOutcome, String> {
 
 /// Render counters exactly as `repro serve` prints them (a two-column
 /// `counter value` table), keeping only the deterministic
-/// `serve.*`/`fabric.*`/`sim.*` rows — the same filter
-/// `ci/serve_smoke.sh` applies with grep, so this string is directly
-/// comparable to the smoke job's `counters_a.txt` and to the committed
-/// golden.
+/// `serve.*`/`fabric.*`/`sim.*`/`chaos.*`/`heal.*` rows — the same
+/// filter `ci/serve_smoke.sh` applies with grep, so this string is
+/// directly comparable to the smoke job's `counters_a.txt` and to the
+/// committed golden.
 pub fn counter_lines(c: &Counters) -> String {
     let mut t = Table::new(vec!["counter", "value"]);
     for (k, v) in c.iter() {
@@ -157,7 +208,11 @@ pub fn counter_lines(c: &Counters) -> String {
     t.render()
         .lines()
         .filter(|l| {
-            l.starts_with("serve.") || l.starts_with("fabric.") || l.starts_with("sim.")
+            l.starts_with("serve.")
+                || l.starts_with("fabric.")
+                || l.starts_with("sim.")
+                || l.starts_with("chaos.")
+                || l.starts_with("heal.")
         })
         .map(|l| format!("{l}\n"))
         .collect()
@@ -176,6 +231,45 @@ mod tests {
         .unwrap_err();
         assert!(err.contains("no-such-row"));
         assert!(err.contains("nginx-filedown"), "error lists the valid rows");
+    }
+
+    #[test]
+    fn chaos_smoke_is_deterministic_and_heals_back_to_k() {
+        let p = SmokeParams {
+            chaos: Some(7),
+            ..SmokeParams::ci()
+        };
+        let a = run(&p).unwrap();
+        let b = run(&p).unwrap();
+        assert_eq!(
+            a.counters, b.counters,
+            "same chaos seed must replay byte-identically"
+        );
+        assert_eq!(counter_lines(&a.counters), counter_lines(&b.counters));
+        let out = a.chaos.expect("chaos run carries its outcome");
+        assert!(out.report.faults_injected > 0, "the schedule actually fired");
+        assert!(
+            out.healed_to_k(CHAOS_HEAL_K),
+            "every live chunk is back to >=k holders after the run"
+        );
+        assert_eq!(
+            a.report.responses.len(),
+            a.arrivals.requests,
+            "churn never loses a request"
+        );
+        assert!(
+            a.counters.get(crate::metrics::names::CHAOS_AVAILABILITY_PPM) > 0,
+            "availability is reported"
+        );
+    }
+
+    #[test]
+    fn chaos_off_leaves_the_ci_golden_path_untouched() {
+        let a = run(&SmokeParams::ci()).unwrap();
+        assert!(a.chaos.is_none());
+        let lines = counter_lines(&a.counters);
+        assert!(!lines.contains("chaos."), "no chaos rows without a seed");
+        assert!(!lines.contains("heal."), "no heal rows without a seed");
     }
 
     #[test]

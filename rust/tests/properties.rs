@@ -850,6 +850,80 @@ fn prop_chunk_fetch_never_moves_more_than_blob_fetch() {
     }
 }
 
+// --- chaos + self-healing invariants (ISSUE 6) ------------------------------
+
+/// Chaos healing (ISSUE 6): for any seeded fault schedule replayed
+/// against the CI trace scenario, the post-run pool holds every live
+/// chunk on at least min(k, healthy-nodes) holders — node deaths, array
+/// losses, brownouts, and registry stalls included.
+#[test]
+fn prop_chaos_any_schedule_heals_back_to_k() {
+    use dockerssd::smoke::{run, SmokeParams, CHAOS_HEAL_K};
+
+    for seed in 0..scaled(8) {
+        let out = run(&SmokeParams {
+            chaos: Some(seed),
+            ..SmokeParams::ci()
+        })
+        .unwrap();
+        let ch = out.chaos.expect("chaos outcome present");
+        assert!(ch.report.faults_injected > 0, "seed {seed}: schedule fired");
+        assert!(
+            ch.healed_to_k(CHAOS_HEAL_K),
+            "seed {seed}: a live chunk is below the k-holder invariant after healing"
+        );
+    }
+}
+
+/// Chaos serving (ISSUE 6): churn never loses a request and never
+/// serves one twice — the response set is exactly the arrival set, with
+/// unique ids, for any seeded fault schedule.
+#[test]
+fn prop_chaos_never_loses_or_duplicates_a_request() {
+    use dockerssd::smoke::{run, SmokeParams};
+
+    for seed in 0..scaled(8) {
+        let out = run(&SmokeParams {
+            chaos: Some(0xFA17 + seed),
+            ..SmokeParams::ci()
+        })
+        .unwrap();
+        let mut ids: Vec<u64> = out.report.responses.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        let before = ids.len();
+        ids.dedup();
+        assert_eq!(ids.len(), before, "seed {seed}: a request was served twice");
+        assert_eq!(
+            ids.len(),
+            out.arrivals.requests,
+            "seed {seed}: churn lost a request"
+        );
+    }
+}
+
+/// Chaos determinism (ISSUE 6): the same chaos seed replays to
+/// byte-identical counters — faults, healing traffic, and availability
+/// ppm included — across independent runs.
+#[test]
+fn prop_chaos_same_seed_byte_identical_counters() {
+    use dockerssd::smoke::{counter_lines, run, SmokeParams};
+
+    for seed in 0..scaled(4) {
+        let p = SmokeParams {
+            chaos: Some(0xC4A0 + seed),
+            ..SmokeParams::ci()
+        };
+        let a = run(&p).unwrap();
+        let b = run(&p).unwrap();
+        assert_eq!(a.counters, b.counters, "seed {seed}: counters diverged");
+        assert_eq!(
+            counter_lines(&a.counters),
+            counter_lines(&b.counters),
+            "seed {seed}: rendered counter table diverged"
+        );
+    }
+}
+
 /// Engine-scheduled prefetch re-timing (ISSUE 5, extending
 /// `prop_retimed_background_never_beats_optimistic_receipt` to the
 /// *prefetch path*): a placement-time prefetch scheduled through
