@@ -1,18 +1,26 @@
 //! Substrate hot-path microbenchmarks (§Perf, L3): the pieces that sit
-//! on the simulated request path — NVMe queue service, Ether-oN frame
-//! round-trip, flash timing model, FTL mapping, λFS path walk, TCP
-//! segment processing, JSON manifest parse, batcher/router.
+//! on the simulated request path — the calendar event queue, the WFQ
+//! fabric engine, NVMe queue service, Ether-oN frame round-trip, flash
+//! timing model, FTL mapping, λFS path walk, TCP segment processing,
+//! JSON manifest parse, batcher/router.
+//!
+//! Emits `BENCH_substrate_hotpath.json` for the sections on the
+//! millions-of-events/sec path (event queue, WFQ engine); wall-clock
+//! ns/op figures, reported as new benches until a CI-runner baseline
+//! is committed.
 
 use std::net::Ipv4Addr;
 
-use dockerssd::benchkit::{bench, section};
-use dockerssd::config::{EtherOnConfig, SsdConfig};
+use dockerssd::benchkit::{bench, emit_json, section, BenchRecord};
+use dockerssd::config::{EtherOnConfig, PoolConfig, SsdConfig};
 use dockerssd::coordinator::{Batcher, InferenceRequest, Router};
 use dockerssd::etheron::{EthFrame, EtherType, EtherOnDriver, MacAddr, TcpSegment, TcpFlags, TcpStack};
+use dockerssd::fabric::{Endpoint, Fabric, Priority};
 use dockerssd::lambdafs::{LambdaFs, LockSide};
 use dockerssd::nvme::{BlockBackend, FrameSink, NvmeCommand, NvmeController, NvmeSubsystem, PcieFunction, QueuePair};
+use dockerssd::sim::EventQueue;
 use dockerssd::ssd::SsdDevice;
-use dockerssd::util::SimTime;
+use dockerssd::util::{Rng, SimTime};
 
 struct NullBackend;
 impl BlockBackend for NullBackend {
@@ -35,6 +43,71 @@ impl FrameSink for NullSink {
 }
 
 fn main() {
+    let mut records = Vec::new();
+
+    section("event queue");
+    // steady-state churn: the queue holds 4k pending events (a busy
+    // mid-replay pool) and every op pops the next event and reschedules
+    // it a sub-millisecond hop ahead — the calendar ring's fast path
+    let mut q = EventQueue::new();
+    let mut rng = Rng::new(7);
+    for i in 0..4096u64 {
+        q.schedule_at(SimTime::ns(1 + rng.below(4_000_000)), i);
+    }
+    let r = bench("pop+reschedule churn (4k deep, near-future)", || {
+        for _ in 0..64 {
+            let ev = q.pop().unwrap();
+            q.schedule_at(ev.at + SimTime::ns(1 + rng.below(1_000_000)), ev.tag);
+        }
+    });
+    records.push(BenchRecord::new(
+        "event_queue_churn_4k",
+        "ns_per_op",
+        r.mean.as_nanos() as f64 / 64.0,
+    ));
+    // far-future reschedules land beyond the ring span, exercising the
+    // overflow heap and its migration back into the ring
+    let r = bench("pop+reschedule churn (4k deep, 10ms ahead)", || {
+        for _ in 0..64 {
+            let ev = q.pop().unwrap();
+            q.schedule_at(ev.at + SimTime::ms(10), ev.tag);
+        }
+    });
+    records.push(BenchRecord::new(
+        "event_queue_churn_4k_overflow",
+        "ns_per_op",
+        r.mean.as_nanos() as f64 / 64.0,
+    ));
+
+    section("WFQ engine");
+    // 64 flights contend for two arrays' links, 1:3 fg:bg, drained to
+    // idle — grant evaluation cost is O(active flights), not O(pool)
+    let pcfg = PoolConfig {
+        nodes_per_array: 8,
+        arrays: 2,
+        ..Default::default()
+    };
+    let ecfg = EtherOnConfig::default();
+    let r = bench("64 contending flights, run_to_idle", || {
+        let mut f = Fabric::new(&pcfg, &ecfg);
+        for i in 0..64u32 {
+            let pri = if i % 4 == 0 { Priority::Foreground } else { Priority::Background };
+            f.schedule(
+                SimTime::ZERO,
+                Endpoint::Node(i % 16),
+                Endpoint::Node((i + 7) % 16),
+                1 << 16,
+                pri,
+            );
+        }
+        std::hint::black_box(f.run_to_idle());
+    });
+    records.push(BenchRecord::new(
+        "wfq_64_flights_to_idle",
+        "ns_per_flight",
+        r.mean.as_nanos() as f64 / 64.0,
+    ));
+
     section("NVMe");
     let mut ctl = NvmeController::new(NvmeSubsystem::standard(1_000_000, 0.3));
     let mut qp = QueuePair::new(1, 64);
@@ -151,4 +224,6 @@ fn main() {
             std::hint::black_box(dockerssd::json::parse(&text).unwrap());
         });
     }
+
+    emit_json("BENCH_substrate_hotpath.json", &records).expect("write BENCH_substrate_hotpath.json");
 }

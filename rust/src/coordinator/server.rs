@@ -236,6 +236,12 @@ struct ServeLoop<'p, E> {
     kv: KvManager,
     exes: Vec<Option<E>>,
     inflight: Vec<Option<InFlight>>,
+    /// Done-event slots available for reuse, so `inflight` stays sized
+    /// to the in-flight high-water mark instead of growing per batch
+    /// over a million-request storm.
+    free_slots: Vec<usize>,
+    /// Batches currently in flight (`inflight` entries that are `Some`).
+    inflight_active: usize,
     blocked: VecDeque<Batch>,
     /// Resident sessions, oldest first.
     sessions: VecDeque<Session>,
@@ -277,7 +283,7 @@ impl<E: BatchExecutor> ServeLoop<'_, E> {
         // capacity valve: a pool that cannot fit even one batch anywhere
         // (capacity below the batch's per-request KV need) must still
         // make progress
-        if !self.blocked.is_empty() && self.inflight.iter().all(|s| s.is_none()) {
+        if !self.blocked.is_empty() && self.inflight_active == 0 {
             let batch = self.blocked.pop_front().expect("checked non-empty");
             let node = (0..self.nodes())
                 .min_by_key(|n| (self.router.outstanding_of(*n), *n))
@@ -356,8 +362,15 @@ impl<E: BatchExecutor> ServeLoop<'_, E> {
         let compute = self.params.prefill_compute
             + SimTime::ns(self.params.token_compute.as_ns() * batch.max_new_tokens as u64);
         let done_at = sim.compute_mut(node).occupy(receipt.finish, compute);
-        let slot = self.inflight.len();
-        self.inflight.push(Some(InFlight { batch, node, reserved, kv_bytes }));
+        let slot = match self.free_slots.pop() {
+            Some(s) => s,
+            None => {
+                self.inflight.push(None);
+                self.inflight.len() - 1
+            }
+        };
+        self.inflight[slot] = Some(InFlight { batch, node, reserved, kv_bytes });
+        self.inflight_active += 1;
         sim.queue.schedule_at(done_at, tag(EV_DONE, slot as u64));
         self.end = self.end.max(done_at);
     }
@@ -365,6 +378,8 @@ impl<E: BatchExecutor> ServeLoop<'_, E> {
     fn on_done(&mut self, sim: &mut PoolSim, now: SimTime, slot: usize) {
         let InFlight { batch, node, reserved, kv_bytes } =
             self.inflight[slot].take().expect("each done event fires once");
+        self.inflight_active -= 1;
+        self.free_slots.push(slot);
         let result = match self.exes[node as usize].as_mut() {
             Some(exe) => exe.run_batch(&batch.prompts, batch.max_new_tokens),
             None => Err(anyhow::anyhow!("engine unavailable")),
@@ -497,6 +512,8 @@ where
         kv: KvManager::new(nodes, params.kv_capacity_per_node),
         exes,
         inflight: Vec::new(),
+        free_slots: Vec::new(),
+        inflight_active: 0,
         blocked: VecDeque::new(),
         sessions: VecDeque::new(),
         arrivals: BTreeMap::new(),

@@ -1,16 +1,18 @@
 //! Host-side image registry — the "user-defined location" docker pull
 //! retrieves blobs from (paper Figure 2b step 1).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use super::image::{Blob, ImageManifest};
 
 /// An in-memory registry of published images, keyed by `name:tag`.
 /// (Keying by name alone silently overwrote older tags and made `fetch`
 /// ignore the tag entirely — `publish("app", "v2", ...)` clobbered v1.)
+/// Sorted map, so listing order can never leak hash-iteration
+/// nondeterminism into anything derived from it.
 #[derive(Default)]
 pub struct Registry {
-    images: HashMap<String, (ImageManifest, Vec<Blob>)>,
+    images: BTreeMap<String, (ImageManifest, Vec<Blob>)>,
 }
 
 impl Registry {
@@ -60,7 +62,7 @@ impl Registry {
             .map(|(m, b)| (m, b.as_slice()))
     }
 
-    /// All published `name:tag` references.
+    /// All published `name:tag` references, in sorted order.
     pub fn list(&self) -> Vec<&str> {
         self.images.keys().map(String::as_str).collect()
     }
@@ -129,6 +131,31 @@ mod tests {
         r.publish("tool", "v9", "/bin/tool", &[100], 6);
         assert!(r.fetch("tool").is_none());
         assert!(r.fetch("tool:v9").is_some());
+    }
+
+    #[test]
+    fn listing_order_is_stable_and_sorted() {
+        // regression (ISSUE 7 satellite): the registry used to iterate a
+        // HashMap, so two runs could list images in different orders —
+        // any consumer deriving state from the listing would diverge
+        let mut r = Registry::new();
+        r.publish("zeta", "v1", "/bin/z", &[100], 1);
+        r.publish("alpha", "v2", "/bin/a", &[100], 2);
+        r.publish("alpha", "v1", "/bin/a", &[100], 3);
+        r.publish("mid", "latest", "/bin/m", &[100], 4);
+        assert_eq!(r.list(), vec!["alpha:v1", "alpha:v2", "mid:latest", "zeta:v1"]);
+        let bench = Registry::with_benchmark_images();
+        assert_eq!(
+            bench.list(),
+            vec![
+                "embed:latest",
+                "mariadb:latest",
+                "nginx:latest",
+                "pattern:latest",
+                "rocksdb:latest",
+                "vsftpd:latest"
+            ]
+        );
     }
 
     #[test]

@@ -135,20 +135,36 @@ pub struct FabricStats {
     pub brownout_ns: u64,
 }
 
-/// The pool fabric: topology-keyed link queues + accounting.
+/// The pool fabric: link queues indexed by a dense per-class slot
+/// (`Array(0..arrays)`, then `Tray`, `HostUplink`, `RegistryWan`) so the
+/// hot transfer path never hashes or walks a tree to find a link.
 pub struct Fabric {
     nodes_per_array: u32,
     total_nodes: u32,
+    /// Arrays in the pool — the dense index stride: `Array(i)` lives at
+    /// slot `i`, the three fixed classes right after.
+    arrays: u32,
     switch_hop_ns: u64,
     mtu: u32,
     link_gbps: f64,
     tray_gbps: f64,
     host_gbps: f64,
     wan_gbps: f64,
-    links: BTreeMap<LinkClass, LinkQueue>,
+    links: Vec<LinkQueue>,
+    /// Whether each slot's link has ever carried (or been offered)
+    /// traffic.  Un-ensured links stay invisible to [`Fabric::link`] and
+    /// counter export, exactly like the absent map entries they replace.
+    ensured: Vec<bool>,
+    /// Slot index back to its class, for counter export.
+    classes: Vec<LinkClass>,
+    /// Out-of-topology classes (an `Array(x)` beyond the configured
+    /// arrays) interned past the fixed slots — never on the hot path.
+    exotic: BTreeMap<LinkClass, usize>,
     /// Links currently in a degraded-bandwidth window: when the window
     /// opened and the full-rate bandwidth to restore on close.
     brownouts: BTreeMap<LinkClass, (SimTime, f64)>,
+    /// Reusable path buffer so `transfer` does not allocate per call.
+    path_scratch: Vec<LinkClass>,
     pub stats: FabricStats,
     /// Frame-level accounting charged to the Ether-oN driver path for
     /// intranet traffic.
@@ -159,21 +175,33 @@ pub struct Fabric {
 
 impl Fabric {
     pub fn new(pool: &PoolConfig, etheron: &EtherOnConfig) -> Self {
-        Fabric {
-            nodes_per_array: pool.nodes_per_array.max(1),
-            total_nodes: pool.total_nodes(),
+        let nodes_per_array = pool.nodes_per_array.max(1);
+        let total_nodes = pool.total_nodes();
+        let arrays = total_nodes.div_ceil(nodes_per_array);
+        let mut classes: Vec<LinkClass> = (0..arrays).map(LinkClass::Array).collect();
+        classes.extend([LinkClass::Tray, LinkClass::HostUplink, LinkClass::RegistryWan]);
+        let mut f = Fabric {
+            nodes_per_array,
+            total_nodes,
+            arrays,
             switch_hop_ns: pool.switch_hop_ns,
             mtu: etheron.mtu.max(1),
             link_gbps: pool.link_gbps,
             tray_gbps: pool.tray_gbps,
             host_gbps: pool.host_gbps,
             wan_gbps: pool.wan_gbps,
-            links: BTreeMap::new(),
+            links: Vec::new(),
+            ensured: vec![false; classes.len()],
+            classes,
+            exotic: BTreeMap::new(),
             brownouts: BTreeMap::new(),
+            path_scratch: Vec::new(),
             stats: FabricStats::default(),
             ether: EtherOnStats::default(),
             engine: sched::Engine::default(),
-        }
+        };
+        f.links = f.classes.iter().map(|&c| LinkQueue::new(f.gbps_of(c))).collect();
+        f
     }
 
     pub fn of(cfg: &SystemConfig) -> Self {
@@ -189,9 +217,37 @@ impl Fabric {
         }
     }
 
-    fn ensure_link(&mut self, class: LinkClass) {
-        let gbps = self.gbps_of(class);
-        self.links.entry(class).or_insert_with(|| LinkQueue::new(gbps));
+    /// The dense slot of `class`, if it is part of the topology (or has
+    /// been interned as an exotic class).
+    pub(crate) fn link_idx(&self, class: LinkClass) -> Option<usize> {
+        let a = self.arrays as usize;
+        match class {
+            LinkClass::Array(x) if (x as usize) < a => Some(x as usize),
+            LinkClass::Tray => Some(a),
+            LinkClass::HostUplink => Some(a + 1),
+            LinkClass::RegistryWan => Some(a + 2),
+            LinkClass::Array(_) => self.exotic.get(&class).copied(),
+        }
+    }
+
+    /// The dense slot of `class`, interning an out-of-topology class on
+    /// first sight.
+    fn intern_link(&mut self, class: LinkClass) -> usize {
+        if let Some(idx) = self.link_idx(class) {
+            return idx;
+        }
+        let idx = self.links.len();
+        self.links.push(LinkQueue::new(self.gbps_of(class)));
+        self.ensured.push(false);
+        self.classes.push(class);
+        self.exotic.insert(class, idx);
+        idx
+    }
+
+    fn ensure_link(&mut self, class: LinkClass) -> usize {
+        let idx = self.intern_link(class);
+        self.ensured[idx] = true;
+        idx
     }
 
     /// The array a node sits behind, if the id names a real node.
@@ -204,48 +260,71 @@ impl Fabric {
         (n < self.total_nodes).then_some(n / self.nodes_per_array)
     }
 
-    fn node_path(&self, a: NodeId, b: NodeId) -> (Vec<LinkClass>, u64) {
+    fn node_path_into(&self, a: NodeId, b: NodeId, out: &mut Vec<LinkClass>) -> u64 {
         if a == b {
-            return (Vec::new(), 0);
+            return 0;
         }
         match (self.array_of(a), self.array_of(b)) {
-            (Some(x), Some(y)) if x == y => (vec![LinkClass::Array(x)], 1),
+            (Some(x), Some(y)) if x == y => {
+                out.push(LinkClass::Array(x));
+                1
+            }
             (Some(x), Some(y)) => {
-                (vec![LinkClass::Array(x), LinkClass::Tray, LinkClass::Array(y)], 3)
+                out.extend([LinkClass::Array(x), LinkClass::Tray, LinkClass::Array(y)]);
+                3
             }
             // Unknown endpoint: assume the worst-case cross-array path so
             // an out-of-range node id is never a free transfer.
-            (Some(x), None) | (None, Some(x)) => (vec![LinkClass::Array(x), LinkClass::Tray], 3),
-            (None, None) => (vec![LinkClass::Tray], 3),
+            (Some(x), None) | (None, Some(x)) => {
+                out.extend([LinkClass::Array(x), LinkClass::Tray]);
+                3
+            }
+            (None, None) => {
+                out.push(LinkClass::Tray);
+                3
+            }
+        }
+    }
+
+    /// Fill `out` with the ordered link classes a transfer crosses and
+    /// return the switch-hop count — the allocation-free core of
+    /// [`Fabric::path`] the hot transfer path uses with a scratch buffer.
+    fn path_into(&self, from: Endpoint, to: Endpoint, out: &mut Vec<LinkClass>) -> u64 {
+        out.clear();
+        match (from, to) {
+            (Endpoint::Node(a), Endpoint::Node(b)) => self.node_path_into(a, b, out),
+            (Endpoint::Host, Endpoint::Node(n)) | (Endpoint::Node(n), Endpoint::Host) => {
+                out.push(LinkClass::HostUplink);
+                match self.array_of(n) {
+                    Some(arr) => out.push(LinkClass::Array(arr)),
+                    // unknown node: worst case, route through the tray
+                    None => out.push(LinkClass::Tray),
+                }
+                2
+            }
+            (Endpoint::Registry, Endpoint::Node(n)) | (Endpoint::Node(n), Endpoint::Registry) => {
+                out.push(LinkClass::RegistryWan);
+                out.push(LinkClass::HostUplink);
+                match self.array_of(n) {
+                    Some(arr) => out.push(LinkClass::Array(arr)),
+                    None => out.push(LinkClass::Tray),
+                }
+                2
+            }
+            (Endpoint::Host, Endpoint::Registry) | (Endpoint::Registry, Endpoint::Host) => {
+                out.extend([LinkClass::RegistryWan, LinkClass::HostUplink]);
+                1
+            }
+            (Endpoint::Host, Endpoint::Host) | (Endpoint::Registry, Endpoint::Registry) => 0,
         }
     }
 
     /// The ordered link classes a transfer crosses, plus the switch-hop
     /// count charged per-hop latency.
     pub fn path(&self, from: Endpoint, to: Endpoint) -> (Vec<LinkClass>, u64) {
-        match (from, to) {
-            (Endpoint::Node(a), Endpoint::Node(b)) => self.node_path(a, b),
-            (Endpoint::Host, Endpoint::Node(n)) | (Endpoint::Node(n), Endpoint::Host) => {
-                let mut links = vec![LinkClass::HostUplink];
-                match self.array_of(n) {
-                    Some(arr) => links.push(LinkClass::Array(arr)),
-                    // unknown node: worst case, route through the tray
-                    None => links.push(LinkClass::Tray),
-                }
-                (links, 2)
-            }
-            (Endpoint::Registry, Endpoint::Node(n)) | (Endpoint::Node(n), Endpoint::Registry) => {
-                let (mut links, hops) = self.path(Endpoint::Host, Endpoint::Node(n));
-                links.insert(0, LinkClass::RegistryWan);
-                (links, hops)
-            }
-            (Endpoint::Host, Endpoint::Registry) | (Endpoint::Registry, Endpoint::Host) => {
-                (vec![LinkClass::RegistryWan, LinkClass::HostUplink], 1)
-            }
-            (Endpoint::Host, Endpoint::Host) | (Endpoint::Registry, Endpoint::Registry) => {
-                (Vec::new(), 0)
-            }
-        }
+        let mut links = Vec::new();
+        let hops = self.path_into(from, to, &mut links);
+        (links, hops)
     }
 
     /// Idle-wire latency: per-hop switch latency plus store-and-forward
@@ -280,8 +359,10 @@ impl Fabric {
         bytes: u64,
         pri: Priority,
     ) -> TransferReceipt {
-        let (path, hops) = self.path(from, to);
+        let mut path = std::mem::take(&mut self.path_scratch);
+        let hops = self.path_into(from, to, &mut path);
         if path.is_empty() {
+            self.path_scratch = path;
             return TransferReceipt {
                 issued: now,
                 begin: now,
@@ -290,41 +371,44 @@ impl Fabric {
                 frames: 0,
             };
         }
-        for &c in &path {
-            self.ensure_link(c);
+        // resolve each class to its dense slot once, up front
+        let mut idxs = [0usize; 4];
+        for (i, &c) in path.iter().enumerate() {
+            idxs[i] = self.ensure_link(c);
         }
+        let slots = &idxs[..path.len()];
 
         // wire grant: wait for earlier traffic on every shared link,
         // remembering which link the grant ultimately waited on
         let mut begin = now;
-        let mut bottleneck: Option<LinkClass> = None;
+        let mut bottleneck: Option<usize> = None;
         if pri.is_background() {
-            for &c in &path {
-                let q = &self.links[&c];
+            for &li in slots {
+                let q = &self.links[li];
                 let avail = q.fg_busy_until.max(q.bg_busy_until);
                 if avail > begin {
                     begin = avail;
-                    bottleneck = Some(c);
+                    bottleneck = Some(li);
                 }
             }
         } else {
-            for &c in &path {
-                let avail = self.links[&c].fg_busy_until;
+            for &li in slots {
+                let avail = self.links[li].fg_busy_until;
                 if avail > begin {
                     begin = avail;
-                    bottleneck = Some(c);
+                    bottleneck = Some(li);
                 }
             }
             // an in-flight background transfer finishes its current
             // frame quantum, then yields the wire
             let fg_begin = begin;
-            for &c in &path {
-                let q = &self.links[&c];
+            for &li in slots {
+                let q = &self.links[li];
                 if q.bg_busy_until > begin {
                     let capped = q.bg_busy_until.min(fg_begin + q.frame_quantum(self.mtu));
                     if capped > begin {
                         begin = capped;
-                        bottleneck = Some(c);
+                        bottleneck = Some(li);
                     }
                 }
             }
@@ -334,19 +418,20 @@ impl Fabric {
         // queue wait is charged once, to the link that caused it
         let mut wire = SimTime::ZERO;
         let mut intranet = false;
-        for &c in &path {
-            let q = self.links.get_mut(&c).expect("link ensured above");
+        for (i, &li) in slots.iter().enumerate() {
+            let q = &mut self.links[li];
             wire += q.wire_time(bytes);
             q.occupy(pri, begin, bytes);
-            intranet |= c.is_intranet();
+            intranet |= path[i].is_intranet();
         }
         let wait = begin.saturating_sub(now);
         if wait > SimTime::ZERO {
             if let Some(b) = bottleneck {
-                self.links.get_mut(&b).expect("link ensured above").queue_wait += wait;
+                self.links[b].queue_wait += wait;
             }
         }
         let finish = begin + SimTime::ns(hops * self.switch_hop_ns) + wire;
+        self.path_scratch = path;
 
         let frames = if intranet {
             let f = bytes.div_ceil(self.mtu as u64).max(1);
@@ -385,11 +470,10 @@ impl Fabric {
     /// prior window first, so each call counts as one flap.
     pub fn begin_brownout(&mut self, now: SimTime, class: LinkClass, keep_pct: u32) {
         self.end_brownout(now, class);
-        self.ensure_link(class);
+        let idx = self.ensure_link(class);
         let base = self.gbps_of(class);
         let keep = keep_pct.clamp(1, 100);
-        self.links.get_mut(&class).expect("link ensured above").gbps =
-            base * keep as f64 / 100.0;
+        self.links[idx].gbps = base * keep as f64 / 100.0;
         self.brownouts.insert(class, (now, base));
         self.stats.link_flaps += 1;
     }
@@ -400,7 +484,8 @@ impl Fabric {
     pub fn end_brownout(&mut self, now: SimTime, class: LinkClass) {
         if let Some((since, base)) = self.brownouts.remove(&class) {
             self.stats.brownout_ns += now.saturating_sub(since).as_ns();
-            self.links.get_mut(&class).expect("degraded link exists").gbps = base;
+            let idx = self.link_idx(class).expect("degraded link exists");
+            self.links[idx].gbps = base;
         }
     }
 
@@ -409,23 +494,31 @@ impl Fabric {
         self.brownouts.contains_key(&class)
     }
 
-    /// Per-link state, for tests and reporting.
+    /// Per-link state, for tests and reporting.  Only links that have
+    /// carried (or been offered) traffic are visible, matching the old
+    /// lazily-populated map.
     pub fn link(&self, class: LinkClass) -> Option<&LinkQueue> {
-        self.links.get(&class)
+        let idx = self.link_idx(class)?;
+        self.ensured[idx].then(|| &self.links[idx])
     }
 
     /// Total queue-wait accumulated across all links.
     pub fn total_queue_wait(&self) -> SimTime {
         let mut t = SimTime::ZERO;
-        for q in self.links.values() {
-            t += q.queue_wait;
+        for (idx, q) in self.links.iter().enumerate() {
+            if self.ensured[idx] {
+                t += q.queue_wait;
+            }
         }
         t
     }
 
     pub fn export_counters(&self, c: &mut Counters) {
-        for (class, q) in &self.links {
-            let key = match class {
+        for (idx, q) in self.links.iter().enumerate() {
+            if !self.ensured[idx] {
+                continue;
+            }
+            let key = match self.classes[idx] {
                 LinkClass::Array(_) => names::FABRIC_BYTES_ARRAY,
                 LinkClass::Tray => names::FABRIC_BYTES_TRAY,
                 LinkClass::HostUplink => names::FABRIC_BYTES_HOST_UPLINK,

@@ -29,8 +29,6 @@
 //! path, so planning estimates and sync transfers see engine traffic and
 //! vice versa.
 
-use std::collections::BTreeMap;
-
 use super::link::{LinkClass, Priority};
 use super::{Endpoint, Fabric, TransferReceipt};
 use crate::sim::EventQueue;
@@ -79,21 +77,69 @@ struct Flight {
 }
 
 /// The engine's queues and bookkeeping, embedded in [`Fabric`].
+///
+/// Transfer ids are handed out sequentially and flights are never
+/// removed (receipts stay queryable), so the flight table is a flat
+/// slab indexed by id.  Link holders and per-class virtual times are
+/// dense vectors indexed by [`Fabric::link_idx`] slot / WFQ class key —
+/// no tree walks on the grant path.
 #[derive(Default)]
 pub(crate) struct Engine {
     pub(crate) queue: EventQueue,
-    flights: BTreeMap<u64, Flight>,
+    flights: Vec<Flight>,
     /// Arrival-ordered ids not currently granted the wire.
     waiting: Vec<u64>,
-    /// Which flight currently holds each link.
-    holders: BTreeMap<LinkClass, u64>,
-    /// Per-QoS-class virtual time for weighted fair queuing.
-    class_vtime: BTreeMap<u16, u128>,
+    /// Which flight currently holds each link, by dense link slot
+    /// (grown lazily to the highest slot touched).
+    holders: Vec<Option<u64>>,
+    /// Per-QoS-class virtual time for weighted fair queuing, by class
+    /// key (foreground 0, tenants 1..=256; background never enters).
+    class_vtime: Vec<u128>,
     global_vtime: u128,
     next_id: u64,
+    /// Reusable candidate buffers for `pick_grantable`, so the grant
+    /// loop does not allocate per evaluation.
+    scratch_fg: Vec<(u128, usize)>,
+    scratch_bg: Vec<usize>,
 }
 
 impl Fabric {
+    fn holder_of(&self, slot: usize) -> Option<u64> {
+        self.engine.holders.get(slot).copied().flatten()
+    }
+
+    fn set_holder(&mut self, slot: usize, id: u64) {
+        if slot >= self.engine.holders.len() {
+            self.engine.holders.resize(slot + 1, None);
+        }
+        self.engine.holders[slot] = Some(id);
+    }
+
+    /// Release `slot` if `id` is the one holding it.
+    fn clear_holder(&mut self, slot: usize, id: u64) {
+        if let Some(h) = self.engine.holders.get_mut(slot) {
+            if *h == Some(id) {
+                *h = None;
+            }
+        }
+    }
+
+    fn class_vtime_of(&self, key: u16) -> u128 {
+        self.engine.class_vtime.get(key as usize).copied().unwrap_or(0)
+    }
+
+    fn set_class_vtime(&mut self, key: u16, v: u128) {
+        let idx = key as usize;
+        if idx >= self.engine.class_vtime.len() {
+            self.engine.class_vtime.resize(idx + 1, 0);
+        }
+        self.engine.class_vtime[idx] = v;
+    }
+
+    /// The dense link slot of a class on a scheduled flight's path.
+    fn slot_of(&self, c: LinkClass) -> usize {
+        self.link_idx(c).expect("path links interned at schedule")
+    }
     /// Schedule a transfer on the event-driven engine.  `now` is clamped
     /// to the engine clock (counted under `sim.clamped_events`); the
     /// receipt becomes available from [`Fabric::receipt_of`] once the
@@ -140,10 +186,12 @@ impl Fabric {
                 bytes,
                 frames: 0,
             });
-            self.engine.flights.insert(id, flight);
+            debug_assert_eq!(self.engine.flights.len() as u64, id);
+            self.engine.flights.push(flight);
             return TransferId(id);
         }
-        self.engine.flights.insert(id, flight);
+        debug_assert_eq!(self.engine.flights.len() as u64, id);
+        self.engine.flights.push(flight);
         self.engine.queue.schedule_at(now, tag(EV_ARRIVE, 0, id));
         TransferId(id)
     }
@@ -155,7 +203,7 @@ impl Fabric {
 
     /// Engine transfers not yet completed.
     pub fn transfers_in_flight(&self) -> usize {
-        self.engine.flights.values().filter(|f| f.done.is_none()).count()
+        self.engine.flights.iter().filter(|f| f.done.is_none()).count()
     }
 
     pub(crate) fn engine_clamped_events(&self) -> u64 {
@@ -164,7 +212,7 @@ impl Fabric {
 
     /// The receipt of an engine transfer, once it has completed.
     pub fn receipt_of(&self, id: TransferId) -> Option<TransferReceipt> {
-        self.engine.flights.get(&id.0).and_then(|f| f.done)
+        self.engine.flights.get(id.0 as usize).and_then(|f| f.done)
     }
 
     /// Process engine events, in deterministic time order, until the
@@ -174,7 +222,7 @@ impl Fabric {
     /// the engine clock advances exactly as far as this flight's finish.
     /// Returns `None` for an id the engine never saw.
     pub fn settle(&mut self, id: TransferId) -> Option<TransferReceipt> {
-        self.engine.flights.get(&id.0)?;
+        self.engine.flights.get(id.0 as usize)?;
         loop {
             if let Some(r) = self.receipt_of(id) {
                 return Some(r);
@@ -217,7 +265,7 @@ impl Fabric {
                 let live = self
                     .engine
                     .flights
-                    .get(&id)
+                    .get(id as usize)
                     .is_some_and(|f| f.active && f.gen == gen);
                 if live {
                     self.finish_flight(now, id);
@@ -228,7 +276,7 @@ impl Fabric {
                 let live = self
                     .engine
                     .flights
-                    .get(&id)
+                    .get(id as usize)
                     .is_some_and(|f| f.active && f.gen == gen && now < f.grant_end);
                 if live {
                     self.preempt_flight(now, id);
@@ -236,7 +284,7 @@ impl Fabric {
                 }
             }
             EV_RETRY => {
-                if let Some(f) = self.engine.flights.get_mut(&id) {
+                if let Some(f) = self.engine.flights.get_mut(id as usize) {
                     f.retry_at = None;
                 }
                 self.try_grant(now);
@@ -259,32 +307,42 @@ impl Fabric {
     /// arrival order.  Side effects on the blocked: preemption and retry
     /// events get scheduled here.
     fn pick_grantable(&mut self, now: SimTime) -> Option<usize> {
-        let mut fg: Vec<(u128, usize)> = Vec::new();
-        let mut bg: Vec<usize> = Vec::new();
+        let mut fg = std::mem::take(&mut self.engine.scratch_fg);
+        let mut bg = std::mem::take(&mut self.engine.scratch_bg);
+        fg.clear();
+        bg.clear();
         for (pos, id) in self.engine.waiting.iter().enumerate() {
-            let f = &self.engine.flights[id];
+            let f = &self.engine.flights[*id as usize];
             if f.pri.is_background() {
                 bg.push(pos);
             } else {
                 let v = self
-                    .engine
-                    .class_vtime
-                    .get(&f.pri.class_key())
-                    .copied()
-                    .unwrap_or(0)
+                    .class_vtime_of(f.pri.class_key())
                     .max(self.engine.global_vtime);
                 fg.push((v, pos));
             }
         }
         fg.sort();
-        let candidates: Vec<usize> = fg.into_iter().map(|(_, p)| p).chain(bg).collect();
-        for pos in candidates {
+        let mut found = None;
+        for &(_, pos) in &fg {
             let id = self.engine.waiting[pos];
             if self.can_grant(now, id) {
-                return Some(pos);
+                found = Some(pos);
+                break;
             }
         }
-        None
+        if found.is_none() {
+            for &pos in &bg {
+                let id = self.engine.waiting[pos];
+                if self.can_grant(now, id) {
+                    found = Some(pos);
+                    break;
+                }
+            }
+        }
+        self.engine.scratch_fg = fg;
+        self.engine.scratch_bg = bg;
+        found
     }
 
     /// Whether `id` can take every link on its path right now.  When it
@@ -294,21 +352,23 @@ impl Fabric {
     /// at the sync lanes' availability time when no engine holder is
     /// involved.
     fn can_grant(&mut self, now: SimTime, id: u64) -> bool {
-        let (path, fg_tier) = {
-            let f = &self.engine.flights[&id];
-            (f.path.clone(), !f.pri.is_background())
+        let (path_len, fg_tier) = {
+            let f = &self.engine.flights[id as usize];
+            (f.path.len(), !f.pri.is_background())
         };
         let mut ok = true;
         let mut blocked: Option<LinkClass> = None;
         let mut retry: Option<SimTime> = None;
         let mut preempts: Vec<(u64, SimTime)> = Vec::new();
-        for &c in &path {
-            if let Some(&holder) = self.engine.holders.get(&c) {
+        for i in 0..path_len {
+            let c = self.engine.flights[id as usize].path[i];
+            let slot = self.slot_of(c);
+            if let Some(holder) = self.holder_of(slot) {
                 ok = false;
                 blocked = Some(c);
-                let hf = &self.engine.flights[&holder];
+                let hf = &self.engine.flights[holder as usize];
                 if fg_tier && hf.pri.is_background() && !hf.preempt_scheduled {
-                    let quantum = self.links[&c].frame_quantum(self.mtu);
+                    let quantum = self.links[slot].frame_quantum(self.mtu);
                     preempts.push((holder, hf.grant_end.min(now + quantum)));
                 }
                 continue;
@@ -319,7 +379,7 @@ impl Fabric {
             // quantum anyway, and engine background holders are handled
             // above by real preemption.  Background tier queues behind
             // everything.
-            let q = &self.links[&c];
+            let q = &self.links[slot];
             let avail = if fg_tier {
                 now.max(q.fg_busy_until)
             } else {
@@ -332,13 +392,21 @@ impl Fabric {
             }
         }
         for (holder, cut) in preempts {
-            let hf = self.engine.flights.get_mut(&holder).expect("holder exists");
+            let hf = self
+                .engine
+                .flights
+                .get_mut(holder as usize)
+                .expect("holder exists");
             hf.preempt_scheduled = true;
             let gen = hf.gen;
             self.engine.queue.schedule_at(cut, tag(EV_PREEMPT, gen, holder));
         }
         if !ok {
-            let f = self.engine.flights.get_mut(&id).expect("candidate exists");
+            let f = self
+                .engine
+                .flights
+                .get_mut(id as usize)
+                .expect("candidate exists");
             f.blocked_on = blocked;
             if let Some(at) = retry {
                 if f.retry_at.is_none_or(|r| r > at) {
@@ -351,17 +419,22 @@ impl Fabric {
     }
 
     fn grant(&mut self, now: SimTime, id: u64) {
-        let (path, pri, remaining, first) = {
-            let f = &self.engine.flights[&id];
-            (f.path.clone(), f.pri, f.remaining, f.begin.is_none())
+        let (path_len, pri, remaining, first) = {
+            let f = &self.engine.flights[id as usize];
+            (f.path.len(), f.pri, f.remaining, f.begin.is_none())
         };
         let mut wire = SimTime::ZERO;
-        for &c in &path {
-            wire += self.links[&c].wire_time(remaining);
+        for i in 0..path_len {
+            let c = self.engine.flights[id as usize].path[i];
+            wire += self.links[self.slot_of(c)].wire_time(remaining);
         }
         let end = now + wire;
         {
-            let f = self.engine.flights.get_mut(&id).expect("granted flight exists");
+            let f = self
+                .engine
+                .flights
+                .get_mut(id as usize)
+                .expect("granted flight exists");
             if first {
                 f.begin = Some(now);
             }
@@ -374,9 +447,11 @@ impl Fabric {
             let gen = f.gen;
             self.engine.queue.schedule_at(end, tag(EV_RELEASE, gen, id));
         }
-        for &c in &path {
-            self.engine.holders.insert(c, id);
-            let q = self.links.get_mut(&c).expect("link ensured at schedule");
+        for i in 0..path_len {
+            let c = self.engine.flights[id as usize].path[i];
+            let slot = self.slot_of(c);
+            self.set_holder(slot, id);
+            let q = &mut self.links[slot];
             if first {
                 q.transfers += 1;
             }
@@ -390,16 +465,8 @@ impl Fabric {
         if !pri.is_background() {
             // start-time WFQ: the class pays remaining/weight virtual time
             let key = pri.class_key();
-            let start = self
-                .engine
-                .class_vtime
-                .get(&key)
-                .copied()
-                .unwrap_or(0)
-                .max(self.engine.global_vtime);
-            self.engine
-                .class_vtime
-                .insert(key, start + (remaining as u128) * 256 / pri.weight() as u128);
+            let start = self.class_vtime_of(key).max(self.engine.global_vtime);
+            self.set_class_vtime(key, start + (remaining as u128) * 256 / pri.weight() as u128);
             self.engine.global_vtime = start;
         }
     }
@@ -410,8 +477,12 @@ impl Fabric {
     /// eventual receipt is strictly later than the optimistic figure —
     /// this is the re-timing the synchronous path cannot do.
     fn preempt_flight(&mut self, now: SimTime, id: u64) {
-        let (path, served, old_grant_end) = {
-            let f = self.engine.flights.get_mut(&id).expect("preempted flight exists");
+        let (path_len, served, old_grant_end) = {
+            let f = self
+                .engine
+                .flights
+                .get_mut(id as usize)
+                .expect("preempted flight exists");
             let span = f.grant_end.saturating_sub(f.grant_begin).as_ns().max(1);
             let elapsed = now.saturating_sub(f.grant_begin).as_ns();
             let s = ((f.remaining as u128 * elapsed as u128) / span as u128) as u64;
@@ -422,13 +493,13 @@ impl Fabric {
             f.gen += 1; // invalidates the pending release event
             f.preempt_scheduled = false;
             f.retimed = true;
-            (f.path.clone(), served, old_grant_end)
+            (f.path.len(), served, old_grant_end)
         };
-        for &c in &path {
-            if self.engine.holders.get(&c) == Some(&id) {
-                self.engine.holders.remove(&c);
-            }
-            let q = self.links.get_mut(&c).expect("link ensured at schedule");
+        for i in 0..path_len {
+            let c = self.engine.flights[id as usize].path[i];
+            let slot = self.slot_of(c);
+            self.clear_holder(slot, id);
+            let q = &mut self.links[slot];
             q.bytes += served;
             // roll back exactly our own lane extension so sync callers
             // don't see a phantom background occupancy
@@ -441,39 +512,47 @@ impl Fabric {
     }
 
     fn finish_flight(&mut self, now: SimTime, id: u64) {
-        let (path, served, receipt, pri, retimed) = {
-            let f = self.engine.flights.get_mut(&id).expect("finished flight exists");
+        let mtu = self.mtu;
+        let switch_hop_ns = self.switch_hop_ns;
+        let (path_len, served, receipt, pri, retimed) = {
+            let f = self
+                .engine
+                .flights
+                .get_mut(id as usize)
+                .expect("finished flight exists");
             f.active = false;
             let served = f.remaining;
             f.remaining = 0;
             let begin = f.begin.unwrap_or(f.issued);
             let intranet = f.path.iter().any(|c| c.is_intranet());
             let frames = if intranet {
-                f.bytes.div_ceil(self.mtu as u64).max(1)
+                f.bytes.div_ceil(mtu as u64).max(1)
             } else {
                 0
             };
             let receipt = TransferReceipt {
                 issued: f.issued,
                 begin,
-                finish: now + SimTime::ns(f.hops * self.switch_hop_ns),
+                finish: now + SimTime::ns(f.hops * switch_hop_ns),
                 bytes: f.bytes,
                 frames,
             };
             f.done = Some(receipt);
-            (f.path.clone(), served, receipt, f.pri, f.retimed)
+            (f.path.len(), served, receipt, f.pri, f.retimed)
         };
-        for &c in &path {
-            if self.engine.holders.get(&c) == Some(&id) {
-                self.engine.holders.remove(&c);
-            }
-            self.links.get_mut(&c).expect("link ensured at schedule").bytes += served;
+        for i in 0..path_len {
+            let c = self.engine.flights[id as usize].path[i];
+            let slot = self.slot_of(c);
+            self.clear_holder(slot, id);
+            self.links[slot].bytes += served;
         }
         let wait = receipt.begin.saturating_sub(receipt.issued);
         if wait > SimTime::ZERO {
-            let blocked = self.engine.flights[&id].blocked_on.or_else(|| path.first().copied());
+            let f = &self.engine.flights[id as usize];
+            let blocked = f.blocked_on.or_else(|| f.path.first().copied());
             if let Some(b) = blocked {
-                self.links.get_mut(&b).expect("link ensured at schedule").queue_wait += wait;
+                let slot = self.slot_of(b);
+                self.links[slot].queue_wait += wait;
             }
         }
         if receipt.frames > 0 {

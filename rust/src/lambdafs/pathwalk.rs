@@ -1,13 +1,15 @@
 //! I/O-node cache: path -> inode LRU, the firmware I/O handler's
 //! "caches these mappings for faster access" feature.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use super::Ino;
 
-/// Bounded LRU of resolved paths.
+/// Bounded LRU of resolved paths.  Sorted map: stamps are unique so the
+/// LRU victim never depended on iteration order, but a sorted scan keeps
+/// the eviction walk deterministic by construction.
 pub struct PathWalkCache {
-    map: HashMap<String, (Ino, u64)>,
+    map: BTreeMap<String, (Ino, u64)>,
     cap: usize,
     tick: u64,
     hits: u64,
@@ -17,7 +19,7 @@ pub struct PathWalkCache {
 impl PathWalkCache {
     pub fn new(cap: usize) -> Self {
         PathWalkCache {
-            map: HashMap::with_capacity(cap),
+            map: BTreeMap::new(),
             cap: cap.max(1),
             tick: 0,
             hits: 0,

@@ -14,6 +14,43 @@ use std::collections::HashMap;
 /// a chunk is the unit of dedup *and* the unit of peer transfer.
 pub type ChunkId = u64;
 
+/// Dense interner over the pool's chunk-id namespace: every chunk id
+/// ever seen gets a stable slot, so per-chunk state can live in parallel
+/// `Vec`s indexed by slot instead of maps hashed per access.  Slots are
+/// never reclaimed — "no longer present" is expressed by the indexed
+/// state (an empty holder list), not by forgetting the id.
+#[derive(Default)]
+pub(crate) struct ChunkInterner {
+    idx: HashMap<ChunkId, u32>,
+    ids: Vec<ChunkId>,
+}
+
+impl ChunkInterner {
+    pub(crate) fn intern(&mut self, chunk: ChunkId) -> usize {
+        match self.idx.get(&chunk) {
+            Some(&i) => i as usize,
+            None => {
+                let i = self.ids.len() as u32;
+                self.idx.insert(chunk, i);
+                self.ids.push(chunk);
+                i as usize
+            }
+        }
+    }
+
+    pub(crate) fn get(&self, chunk: ChunkId) -> Option<usize> {
+        self.idx.get(&chunk).map(|&i| i as usize)
+    }
+
+    pub(crate) fn id(&self, slot: usize) -> ChunkId {
+        self.ids[slot]
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.ids.len()
+    }
+}
+
 /// One live chunk.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ChunkEntry {

@@ -39,6 +39,7 @@
 
 use std::collections::{BTreeMap, BTreeSet, HashMap};
 
+use super::dedup::ChunkInterner;
 use crate::fabric::{Endpoint, Fabric, Priority, TransferId};
 use crate::metrics::{names, Counters};
 use crate::pool::topology::{NodeId, PoolTopology};
@@ -146,20 +147,29 @@ pub struct PoolLayerCache {
     registered: HashMap<u64, BTreeSet<NodeId>>,
     /// blob -> distinct chunk recipe, first-occurrence order.
     recipes: HashMap<u64, Vec<(ChunkId, u64)>>,
-    /// chunk -> per-node registration refcounts (a node referencing a
-    /// shared chunk through two blobs holds two refs; the chunk stays
-    /// present until both are dropped).
-    chunk_holders: HashMap<ChunkId, BTreeMap<NodeId, u32>>,
-    /// chunk -> blobs whose recipe contains it (for derived-presence
-    /// updates).
-    chunk_blobs: HashMap<ChunkId, BTreeSet<u64>>,
-    /// (node, blob) -> chunks held via partial (mid-pull) registration.
-    partial: HashMap<(NodeId, u64), BTreeSet<ChunkId>>,
-    /// chunk -> byte size, learned from recipes and from planned
+    /// The pool's chunk-id namespace interned to dense slots; the
+    /// per-chunk `Vec`s below are indexed by slot, so the hot
+    /// plan/fetch/heal paths index instead of hashing per chunk.
+    chunks: ChunkInterner,
+    /// slot -> (holder node, registration refcount), sorted by node id.
+    /// A node referencing a shared chunk through two blobs holds two
+    /// refs; the chunk stays present until both are dropped.  An empty
+    /// list is the old map's absent entry.
+    holder_refs: Vec<Vec<(NodeId, u32)>>,
+    /// slot -> blobs whose recipe contains the chunk (for
+    /// derived-presence updates).
+    blobs_of: Vec<BTreeSet<u64>>,
+    /// slot -> byte size, learned from recipes and from planned
     /// transfers.  The heal loop sizes re-replication traffic from this;
     /// a chunk that never moved and was never described heals with zero
     /// wire bytes (the holder is still registered).
-    chunk_sizes: HashMap<ChunkId, u64>,
+    size_of: Vec<Option<u64>>,
+    /// node -> live holder entries across all chunks, maintained on the
+    /// 0->1 and 1->0 refcount transitions — the heal loop's spread
+    /// signal, no longer rebuilt from the whole holder table per pass.
+    node_load: Vec<u64>,
+    /// (node, blob) -> chunks held via partial (mid-pull) registration.
+    partial: HashMap<(NodeId, u64), BTreeSet<ChunkId>>,
     pub local_hits: u64,
     pub peer_fetches: u64,
     pub registry_fetches: u64,
@@ -192,6 +202,41 @@ impl PoolLayerCache {
         Self::default()
     }
 
+    /// Intern `chunk` and grow the parallel per-chunk columns to cover
+    /// its slot.
+    fn intern_chunk(&mut self, chunk: ChunkId) -> usize {
+        let slot = self.chunks.intern(chunk);
+        if self.holder_refs.len() <= slot {
+            self.holder_refs.resize_with(slot + 1, Vec::new);
+            self.blobs_of.resize_with(slot + 1, BTreeSet::new);
+            self.size_of.resize(slot + 1, None);
+        }
+        slot
+    }
+
+    fn bump_node_load(&mut self, node: NodeId) {
+        let n = node as usize;
+        if self.node_load.len() <= n {
+            self.node_load.resize(n + 1, 0);
+        }
+        self.node_load[n] += 1;
+    }
+
+    /// Live holder entries of `node` across all chunks (the heal loop's
+    /// spread signal).
+    fn node_load_of(&self, node: NodeId) -> u64 {
+        self.node_load.get(node as usize).copied().unwrap_or(0)
+    }
+
+    /// Record `chunk`'s byte size if not already known (first writer
+    /// wins, like the old `entry().or_insert`).
+    fn learn_size(&mut self, chunk: ChunkId, bytes: u64) {
+        let slot = self.intern_chunk(chunk);
+        if self.size_of[slot].is_none() {
+            self.size_of[slot] = Some(bytes);
+        }
+    }
+
     /// The chunk ids a blob decomposes into: its described recipe, or
     /// the blob digest itself as one implicit chunk.
     fn recipe_chunk_ids(&self, blob: u64) -> Vec<ChunkId> {
@@ -214,22 +259,21 @@ impl PoolLayerCache {
     }
 
     fn incref_chunk(&mut self, node: NodeId, chunk: ChunkId) {
-        *self
-            .chunk_holders
-            .entry(chunk)
-            .or_default()
-            .entry(node)
-            .or_insert(0) += 1;
+        let slot = self.intern_chunk(chunk);
+        let holders = &mut self.holder_refs[slot];
+        match holders.binary_search_by_key(&node, |&(n, _)| n) {
+            Ok(p) => holders[p].1 += 1,
+            Err(p) => {
+                holders.insert(p, (node, 1));
+                self.bump_node_load(node);
+            }
+        }
         // re-derive presence for every blob containing this chunk — on
         // every ref add, not just the 0->1 transition: a registration
         // whose chunks were already pinned through *other* blobs (refs
         // going 1->2) still completes a blob here, and the backfill in
         // describe_chunks relies on this to restore presence it dropped
-        let blobs: Vec<u64> = self
-            .chunk_blobs
-            .get(&chunk)
-            .map(|s| s.iter().copied().collect())
-            .unwrap_or_default();
+        let blobs: Vec<u64> = self.blobs_of[slot].iter().copied().collect();
         for b in blobs {
             if self.holds_all_chunks(node, b) {
                 self.presence.entry(b).or_default().insert(node);
@@ -238,30 +282,22 @@ impl PoolLayerCache {
     }
 
     fn decref_chunk(&mut self, node: NodeId, chunk: ChunkId) {
-        let now_empty = {
-            let Some(holders) = self.chunk_holders.get_mut(&chunk) else {
-                return;
-            };
-            let Some(refs) = holders.get_mut(&node) else {
-                return;
-            };
-            *refs -= 1;
-            if *refs > 0 {
-                return;
-            }
-            holders.remove(&node);
-            holders.is_empty()
+        let Some(slot) = self.chunks.get(chunk) else {
+            return;
         };
-        if now_empty {
-            self.chunk_holders.remove(&chunk);
+        let holders = &mut self.holder_refs[slot];
+        let Ok(p) = holders.binary_search_by_key(&node, |&(n, _)| n) else {
+            return;
+        };
+        holders[p].1 -= 1;
+        if holders[p].1 > 0 {
+            return;
         }
+        holders.remove(p);
+        self.node_load[node as usize] -= 1;
         // the node no longer holds this chunk, so it no longer holds any
         // blob whose recipe needs it
-        let blobs: Vec<u64> = self
-            .chunk_blobs
-            .get(&chunk)
-            .map(|s| s.iter().copied().collect())
-            .unwrap_or_default();
+        let blobs: Vec<u64> = self.blobs_of[slot].iter().copied().collect();
         for b in blobs {
             if let Some(set) = self.presence.get_mut(&b) {
                 set.remove(&node);
@@ -304,17 +340,15 @@ impl PoolLayerCache {
         for &n in &holders {
             self.decref_chunk(n, blob);
         }
-        let mut implicit_gone = false;
-        if let Some(set) = self.chunk_blobs.get_mut(&blob) {
-            set.remove(&blob);
-            implicit_gone = set.is_empty();
-        }
-        if implicit_gone {
-            self.chunk_blobs.remove(&blob);
+        if let Some(slot) = self.chunks.get(blob) {
+            self.blobs_of[slot].remove(&blob);
         }
         for (c, b) in &distinct {
-            self.chunk_blobs.entry(*c).or_default().insert(blob);
-            self.chunk_sizes.entry(*c).or_insert(*b);
+            let slot = self.intern_chunk(*c);
+            self.blobs_of[slot].insert(blob);
+            if self.size_of[slot].is_none() {
+                self.size_of[slot] = Some(*b);
+            }
         }
         self.recipes.insert(blob, distinct.clone());
         for &n in &holders {
@@ -326,11 +360,7 @@ impl PoolLayerCache {
         // derive presence of this one immediately (a candidate must hold
         // the first chunk, so that holder set bounds the search)
         if let Some((c0, _)) = distinct.first() {
-            let cands: Vec<NodeId> = self
-                .chunk_holders
-                .get(c0)
-                .map(|m| m.keys().copied().collect())
-                .unwrap_or_default();
+            let cands: Vec<NodeId> = self.chunk_holders_of(*c0);
             for n in cands {
                 if self.holds_all_chunks(n, blob) {
                     self.presence.entry(blob).or_default().insert(n);
@@ -350,7 +380,8 @@ impl PoolLayerCache {
     /// same (node, blob) is absorbed — its chunk refs carry over.
     pub fn register(&mut self, node: NodeId, digest: u64) {
         if !self.recipes.contains_key(&digest) {
-            self.chunk_blobs.entry(digest).or_default().insert(digest);
+            let slot = self.intern_chunk(digest);
+            self.blobs_of[slot].insert(digest);
         }
         if !self.registered.entry(digest).or_default().insert(node) {
             return;
@@ -430,9 +461,11 @@ impl PoolLayerCache {
     }
 
     pub fn node_has_chunk(&self, node: NodeId, chunk: ChunkId) -> bool {
-        self.chunk_holders
-            .get(&chunk)
-            .is_some_and(|m| m.contains_key(&node))
+        self.chunks.get(chunk).is_some_and(|slot| {
+            self.holder_refs[slot]
+                .binary_search_by_key(&node, |&(n, _)| n)
+                .is_ok()
+        })
     }
 
     pub fn holders(&self, digest: u64) -> Vec<NodeId> {
@@ -445,10 +478,10 @@ impl PoolLayerCache {
     /// All holders of one chunk — full blob holders and partial
     /// (mid-pull) holders alike.
     pub fn chunk_holders_of(&self, chunk: ChunkId) -> Vec<NodeId> {
-        self.chunk_holders
-            .get(&chunk)
-            .map(|m| m.keys().copied().collect())
-            .unwrap_or_default()
+        match self.chunks.get(chunk) {
+            Some(slot) => self.holder_refs[slot].iter().map(|&(n, _)| n).collect(),
+            None => Vec::new(),
+        }
     }
 
     /// Nodes in the pool holding at least one byte of the image —
@@ -481,8 +514,14 @@ impl PoolLayerCache {
         chunk: ChunkId,
         bytes: u64,
     ) -> Option<(NodeId, SimTime)> {
-        let holders = self.chunk_holders.get(&chunk)?;
-        Self::best_holder(fabric, topo, node, bytes, holders.keys().copied())
+        let slot = self.chunks.get(chunk)?;
+        Self::best_holder(
+            fabric,
+            topo,
+            node,
+            bytes,
+            self.holder_refs[slot].iter().map(|&(n, _)| n),
+        )
     }
 
     fn best_holder<I: Iterator<Item = NodeId>>(
@@ -676,7 +715,7 @@ impl PoolLayerCache {
         let plans = self.plan_chunks(fabric, topo, node, digest, bytes);
         let src = self.account_chunk_plans(&plans, digest);
         for p in &plans {
-            self.chunk_sizes.entry(p.chunk).or_insert(p.bytes);
+            self.learn_size(p.chunk, p.bytes);
         }
         let mut finish = now;
         for p in &plans {
@@ -744,7 +783,7 @@ impl PoolLayerCache {
         let plans = self.plan_chunks(fabric, topo, node, digest, bytes);
         let src = self.account_chunk_plans(&plans, digest);
         for p in &plans {
-            self.chunk_sizes.entry(p.chunk).or_insert(p.bytes);
+            self.learn_size(p.chunk, p.bytes);
         }
         let mut ids = Vec::new();
         let mut moved = 0u64;
@@ -798,7 +837,10 @@ impl PoolLayerCache {
     /// All chunks currently held by at least one node, sorted — the
     /// live-chunk set heal invariants are checked over.
     pub fn chunks(&self) -> Vec<ChunkId> {
-        let mut v: Vec<ChunkId> = self.chunk_holders.keys().copied().collect();
+        let mut v: Vec<ChunkId> = (0..self.chunks.len())
+            .filter(|&slot| !self.holder_refs[slot].is_empty())
+            .map(|slot| self.chunks.id(slot))
+            .collect();
         v.sort_unstable();
         v
     }
@@ -813,11 +855,13 @@ impl PoolLayerCache {
     /// chunks whose last copy died with the node (healing re-pulls those
     /// from the registry).
     pub fn purge_node(&mut self, node: NodeId) -> PurgeSummary {
-        let mut held_before: Vec<ChunkId> = self
-            .chunk_holders
-            .iter()
-            .filter(|(_, holders)| holders.contains_key(&node))
-            .map(|(c, _)| *c)
+        let mut held_before: Vec<ChunkId> = (0..self.chunks.len())
+            .filter(|&slot| {
+                self.holder_refs[slot]
+                    .binary_search_by_key(&node, |&(n, _)| n)
+                    .is_ok()
+            })
+            .map(|slot| self.chunks.id(slot))
             .collect();
         held_before.sort_unstable();
         let mut blobs: BTreeSet<u64> = BTreeSet::new();
@@ -844,7 +888,11 @@ impl PoolLayerCache {
             partials_dropped: partials,
             orphaned_chunks: held_before
                 .into_iter()
-                .filter(|c| !self.chunk_holders.contains_key(c))
+                .filter(|&c| {
+                    self.chunks
+                        .get(c)
+                        .is_none_or(|slot| self.holder_refs[slot].is_empty())
+                })
                 .collect(),
         }
     }
@@ -856,9 +904,9 @@ impl PoolLayerCache {
     /// implicit single-chunk blobs become blob registrations.
     fn heal_register(&mut self, node: NodeId, chunk: ChunkId) {
         let blob = self
-            .chunk_blobs
-            .get(&chunk)
-            .and_then(|s| s.iter().next().copied())
+            .chunks
+            .get(chunk)
+            .and_then(|slot| self.blobs_of[slot].iter().next().copied())
             .unwrap_or(chunk);
         if self.recipes.contains_key(&blob) {
             self.register_chunk(node, blob, chunk);
@@ -893,16 +941,10 @@ impl PoolLayerCache {
         if want == 0 {
             return stats;
         }
-        // commutative sum per node: HashMap iteration order cannot leak
-        let mut load: BTreeMap<NodeId, u64> = healthy.iter().map(|&n| (n, 0)).collect();
-        for holders in self.chunk_holders.values() {
-            for n in holders.keys() {
-                if let Some(l) = load.get_mut(n) {
-                    *l += 1;
-                }
-            }
-        }
-        let mut all: BTreeSet<ChunkId> = self.chunk_holders.keys().copied().collect();
+        let mut all: BTreeSet<ChunkId> = (0..self.chunks.len())
+            .filter(|&slot| !self.holder_refs[slot].is_empty())
+            .map(|slot| self.chunks.id(slot))
+            .collect();
         all.extend(orphans.iter().copied());
         for chunk in all {
             let mut healthy_holders: BTreeSet<NodeId> = self
@@ -917,12 +959,19 @@ impl PoolLayerCache {
             if healthy_holders.is_empty() {
                 stats.registry_chunks += 1;
             }
-            let bytes = self.chunk_sizes.get(&chunk).copied().unwrap_or(0);
+            let bytes = self
+                .chunks
+                .get(chunk)
+                .and_then(|slot| self.size_of[slot])
+                .unwrap_or(0);
             while healthy_holders.len() < want {
+                // the incrementally maintained load index replaces the
+                // old per-pass recount; heal_register's new holder entry
+                // bumps it, preserving the old manual increment
                 let Some(&target) = healthy
                     .iter()
                     .filter(|n| !healthy_holders.contains(n))
-                    .min_by_key(|&&n| (load[&n], n))
+                    .min_by_key(|&&n| (self.node_load_of(n), n))
                 else {
                     break;
                 };
@@ -943,7 +992,6 @@ impl PoolLayerCache {
                 stats.copies_made += 1;
                 self.heal_register(target, chunk);
                 healthy_holders.insert(target);
-                *load.get_mut(&target).expect("target is healthy") += 1;
             }
         }
         stats
@@ -988,11 +1036,14 @@ impl PoolLayerCache {
     /// blocks one.
     fn eviction_keeps_chunks_at_k(&self, blob: u64, node: NodeId, k: usize) -> bool {
         for c in self.recipe_chunk_ids(blob) {
-            let Some(holders) = self.chunk_holders.get(&c) else {
+            let Some(slot) = self.chunks.get(c) else {
                 continue;
             };
-            if holders.get(&node) == Some(&1) && holders.len() - 1 < k {
-                return false;
+            let holders = &self.holder_refs[slot];
+            if let Ok(p) = holders.binary_search_by_key(&node, |&(n, _)| n) {
+                if holders[p].1 == 1 && holders.len() - 1 < k {
+                    return false;
+                }
             }
         }
         true
@@ -1624,6 +1675,43 @@ mod tests {
         // nodes 2 and 3, not both piled on node 2
         assert_eq!(pc.chunk_holders_of(0xC1), vec![0, 2]);
         assert_eq!(pc.chunk_holders_of(0xC2), vec![0, 3]);
+    }
+
+    #[test]
+    fn incremental_load_index_matches_recount_after_churn() {
+        // regression (ISSUE 7 satellite): the heal loop's spread signal
+        // is now maintained incrementally instead of recounted per pass
+        // — after arbitrary churn it must equal the from-scratch count
+        // of live holder entries, or heal targeting would drift
+        let (mut t, mut f) = rig(6, 1);
+        let mut pc = PoolLayerCache::new();
+        let recipe = recipe4();
+        assert!(pc.describe_chunks(0xB10B, &recipe));
+        assert!(pc.describe_chunks(0xA, &[(0xC000, 1 << 20), (0xAA, 1 << 20)]));
+        pc.register(0, 0xB10B);
+        pc.register(1, 0xB10B);
+        pc.register(1, 0xA); // shares chunk 0xC000: refs 1 -> 2 on node 1
+        pc.register_chunk(2, 0xB10B, recipe[0].0); // mid-pull partial
+        pc.register(3, 0x77); // implicit single-chunk blob
+        pc.fetch(&mut f, &t, SimTime::ZERO, 4, 0x77, 1 << 20);
+        pc.evict(1, 0xB10B); // 0xC000 stays pinned on 1 through 0xA
+        t.node_mut(0).unwrap().healthy = false;
+        pc.purge_node(0);
+        pc.rereplicate_chunks(&mut f, &t, SimTime::ZERO, 2, &[]);
+        pc.gc(2, |n| n as u64);
+        let mut recount: HashMap<NodeId, u64> = HashMap::new();
+        for c in pc.chunks() {
+            for n in pc.chunk_holders_of(c) {
+                *recount.entry(n).or_insert(0) += 1;
+            }
+        }
+        for n in 0..6 {
+            assert_eq!(
+                pc.node_load_of(n),
+                recount.get(&n).copied().unwrap_or(0),
+                "node {n} load index drifted from the holder table"
+            );
+        }
     }
 
     #[test]

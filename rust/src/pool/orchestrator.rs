@@ -3,8 +3,6 @@
 //! replicas on healthy nodes, monitor them through mini-docker logs,
 //! restart per policy.
 
-use std::collections::HashMap;
-
 use super::topology::{NodeId, PoolTopology};
 use crate::fabric::Fabric;
 use crate::layerstore::{FetchSource, PoolLayerCache};
@@ -55,12 +53,22 @@ pub struct Placement {
 #[derive(Default)]
 pub struct Orchestrator {
     placements: Vec<Placement>,
-    load: HashMap<NodeId, u32>,
+    /// Replicas per node, dense by node id; a missing slot reads as 0,
+    /// same as the absent-entry convention of the old map.
+    load: Vec<u32>,
 }
 
 impl Orchestrator {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    fn bump_load(&mut self, node: NodeId) {
+        let i = node as usize;
+        if self.load.len() <= i {
+            self.load.resize(i + 1, 0);
+        }
+        self.load[i] += 1;
     }
 
     /// Place replicas on the least-loaded healthy nodes (spread strategy).
@@ -72,9 +80,9 @@ impl Orchestrator {
         }
         let mut placed = Vec::new();
         for r in 0..spec.replicas {
-            healthy.sort_by_key(|id| (self.load.get(id).copied().unwrap_or(0), *id));
+            healthy.sort_by_key(|id| (self.load_of(*id), *id));
             let node = healthy[0];
-            *self.load.entry(node).or_insert(0) += 1;
+            self.bump_load(node);
             self.placements.push(Placement {
                 deployment: spec.name.clone(),
                 replica: r,
@@ -134,7 +142,7 @@ impl Orchestrator {
             let node = *healthy
                 .iter()
                 .min_by_key(|id| {
-                    let load = self.load.get(*id).copied().unwrap_or(0) as u64;
+                    let load = self.load_of(**id) as u64;
                     let missing: SimTime = layers
                         .iter()
                         .filter(|(d, _)| !cache.node_has(**id, *d))
@@ -144,7 +152,7 @@ impl Orchestrator {
                     (missing + queued_cost.scale(load as f64), load, **id)
                 })
                 .expect("healthy is non-empty");
-            *self.load.entry(node).or_insert(0) += 1;
+            self.bump_load(node);
             self.placements.push(Placement {
                 deployment: spec.name.clone(),
                 replica: r,
@@ -256,7 +264,7 @@ impl Orchestrator {
     }
 
     pub fn load_of(&self, node: NodeId) -> u32 {
-        self.load.get(&node).copied().unwrap_or(0)
+        self.load.get(node as usize).copied().unwrap_or(0)
     }
 
     /// A replica died (container exited / node fault).  Applies the
@@ -284,23 +292,19 @@ impl Orchestrator {
         let target = if topo.node(node).is_some_and(|n| n.healthy) {
             node
         } else {
-            // drop the dead node's load share; at zero the entry goes
-            // away entirely so spread/locality scoring and gc never see
-            // a ghost holder (the old `or_insert(1) -= 1` could leave a
-            // permanent zero — or underflow on a double fault)
-            if let Some(l) = self.load.get_mut(&node) {
+            // drop the dead node's load share so spread/locality scoring
+            // and gc never see a ghost holder (saturating: a double
+            // fault must not underflow)
+            if let Some(l) = self.load.get_mut(node as usize) {
                 *l = l.saturating_sub(1);
-                if *l == 0 {
-                    self.load.remove(&node);
-                }
             }
             let mut healthy: Vec<NodeId> = topo.healthy_nodes().map(|n| n.id).collect();
             if healthy.is_empty() {
                 return false;
             }
-            healthy.sort_by_key(|id| (self.load.get(id).copied().unwrap_or(0), *id));
+            healthy.sort_by_key(|id| (self.load_of(*id), *id));
             let t = healthy[0];
-            *self.load.entry(t).or_insert(0) += 1;
+            self.bump_load(t);
             t
         };
         let p = &mut self.placements[idx];
@@ -336,7 +340,9 @@ impl Orchestrator {
                 moved.push((dep, r));
             }
         }
-        self.load.remove(&node);
+        if let Some(l) = self.load.get_mut(node as usize) {
+            *l = 0;
+        }
         moved
     }
 

@@ -19,7 +19,7 @@
 //! schedules.
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 
 use crate::config::{EtherOnConfig, PoolConfig, SystemConfig};
 use crate::fabric::Fabric;
@@ -62,14 +62,59 @@ pub fn tag_payload(t: u64) -> u64 {
     t & ((1 << 56) - 1)
 }
 
+/// Nanoseconds covered by one calendar bucket (as a shift amount).
+const BUCKET_BITS: u32 = 12; // 4096 ns
+/// Ring size; together with [`BUCKET_BITS`] this spans ~4.2 ms.
+const NUM_BUCKETS: usize = 1024;
+/// Nanoseconds covered by one bucket.
+const BUCKET_QUANTUM: u64 = 1 << BUCKET_BITS;
+/// Nanoseconds covered by the whole ring.
+const RING_SPAN: u64 = (NUM_BUCKETS as u64) << BUCKET_BITS;
+
 /// Deterministic event queue with a monotonically advancing clock.
-#[derive(Default)]
+///
+/// Implemented as a calendar queue: a ring of [`NUM_BUCKETS`] buckets of
+/// [`BUCKET_QUANTUM`] ns each, with a [`BinaryHeap`] overflow for events
+/// beyond the ring's horizon.  Each bucket keeps its events sorted
+/// ascending by `(at, seq)` (inserts are `partition_point` + usually a
+/// tail push, pops are `pop_front`), which preserves the exact total
+/// order the old single-heap implementation produced — FIFO within a
+/// timestamp, globally ordered by time.  Overflow events migrate into
+/// the ring as the ring's base advances past their quantum, so outside
+/// of `pop` the invariant holds: every overflow event fires at or after
+/// `base + RING_SPAN`, strictly later than every ring event.
 pub struct EventQueue {
-    heap: BinaryHeap<Reverse<Event>>,
+    buckets: Vec<VecDeque<Event>>,
+    /// Ring index of the bucket whose quantum starts at `base`.
+    cursor: usize,
+    /// Quantum-aligned lower bound (ns) of the bucket at `cursor`.
+    /// Advances only as pops drain buckets — deliberately decoupled from
+    /// `now`, which `advance_to` can move without touching the ring.
+    base: u64,
+    /// Events currently in the ring (across all buckets).
+    ring_len: usize,
+    /// Events at or beyond `base + RING_SPAN`.
+    overflow: BinaryHeap<Reverse<Event>>,
     now: SimTime,
     next_seq: u64,
     processed: u64,
     clamped: u64,
+}
+
+impl Default for EventQueue {
+    fn default() -> Self {
+        EventQueue {
+            buckets: vec![VecDeque::new(); NUM_BUCKETS],
+            cursor: 0,
+            base: 0,
+            ring_len: 0,
+            overflow: BinaryHeap::new(),
+            now: SimTime::ZERO,
+            next_seq: 0,
+            processed: 0,
+            clamped: 0,
+        }
+    }
 }
 
 impl EventQueue {
@@ -82,11 +127,11 @@ impl EventQueue {
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.ring_len + self.overflow.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len() == 0
     }
 
     pub fn processed(&self) -> u64 {
@@ -122,17 +167,82 @@ impl EventQueue {
             tag,
         };
         self.next_seq += 1;
-        self.heap.push(Reverse(ev));
+        self.insert(ev);
+    }
+
+    /// Place an event into its calendar bucket (or the overflow heap).
+    fn insert(&mut self, ev: Event) {
+        let at_ns = ev.at.as_ns();
+        if at_ns >= self.base + RING_SPAN {
+            self.overflow.push(Reverse(ev));
+            return;
+        }
+        // `at_ns >= base` always holds: unclamped events fire at or
+        // after `now >= base`, clamped ones exactly at `now`, and
+        // migrated overflow events at or after their old horizon.
+        // Within [base, base + RING_SPAN) each quantum owns one slot,
+        // so absolute slot indexing cannot alias two quanta.
+        let slot = ((at_ns >> BUCKET_BITS) as usize) % NUM_BUCKETS;
+        let bucket = &mut self.buckets[slot];
+        let key = (ev.at, ev.seq);
+        if bucket.back().is_none_or(|b| (b.at, b.seq) < key) {
+            bucket.push_back(ev);
+        } else {
+            let i = bucket.partition_point(|e| (e.at, e.seq) < key);
+            bucket.insert(i, ev);
+        }
+        self.ring_len += 1;
+    }
+
+    /// Move overflow events whose quantum now falls inside the ring's
+    /// horizon into their buckets.
+    fn migrate_overflow(&mut self) {
+        let horizon = self.base + RING_SPAN;
+        while let Some(Reverse(ev)) = self.overflow.peek() {
+            if ev.at.as_ns() >= horizon {
+                break;
+            }
+            let Reverse(ev) = self.overflow.pop().unwrap();
+            self.insert(ev);
+        }
     }
 
     /// The firing time of the next event without popping it.
     pub fn peek_at(&self) -> Option<SimTime> {
-        self.heap.peek().map(|Reverse(ev)| ev.at)
+        if self.ring_len == 0 {
+            return self.overflow.peek().map(|Reverse(ev)| ev.at);
+        }
+        // Ring events always fire before overflow events (the horizon
+        // invariant), and the first nonempty bucket from the cursor
+        // holds the earliest quantum; its front is the (at, seq) min.
+        let mut slot = self.cursor;
+        loop {
+            if let Some(ev) = self.buckets[slot].front() {
+                return Some(ev.at);
+            }
+            slot = (slot + 1) % NUM_BUCKETS;
+        }
     }
 
     /// Pop the next event, advancing the clock to its time.
     pub fn pop(&mut self) -> Option<Event> {
-        let Reverse(ev) = self.heap.pop()?;
+        if self.ring_len == 0 {
+            let Reverse(next) = self.overflow.peek()?;
+            // The ring is idle: rebase it onto the earliest overflow
+            // quantum, then pull that quantum's events in.
+            let at_ns = next.at.as_ns();
+            self.base = (at_ns >> BUCKET_BITS) << BUCKET_BITS;
+            self.cursor = ((at_ns >> BUCKET_BITS) as usize) % NUM_BUCKETS;
+        }
+        self.migrate_overflow();
+        while self.buckets[self.cursor].is_empty() {
+            self.cursor = (self.cursor + 1) % NUM_BUCKETS;
+            self.base += BUCKET_QUANTUM;
+            // Advancing the horizon may make far-future events eligible.
+            self.migrate_overflow();
+        }
+        let ev = self.buckets[self.cursor].pop_front().unwrap();
+        self.ring_len -= 1;
         debug_assert!(ev.at >= self.now);
         self.now = ev.at;
         self.processed += 1;
@@ -291,6 +401,71 @@ mod tests {
         let mut c = Counters::new();
         q.export_counters(&mut c);
         assert_eq!(c.get(names::SIM_CLAMPED_EVENTS), 1);
+    }
+
+    #[test]
+    fn far_future_events_overflow_and_pop_in_order() {
+        let mut q = EventQueue::new();
+        // Beyond the ~4.2ms ring horizon: lands in the overflow heap.
+        q.schedule_at(SimTime::ms(50), 4);
+        q.schedule_at(SimTime::ns(10), 1);
+        q.schedule_at(SimTime::ms(5), 3);
+        q.schedule_at(SimTime::ns(20), 2);
+        assert_eq!(q.len(), 4);
+        assert_eq!(q.peek_at(), Some(SimTime::ns(10)));
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|e| e.tag).collect();
+        assert_eq!(order, vec![1, 2, 3, 4]);
+        assert_eq!(q.now(), SimTime::ms(50));
+        assert_eq!(q.processed(), 4);
+    }
+
+    #[test]
+    fn ring_wraps_across_many_horizons() {
+        let mut q = EventQueue::new();
+        // 40 events 1ms apart cover ~10 ring spans; schedule reversed.
+        for i in (0..40u64).rev() {
+            q.schedule_at(SimTime::ms(i), i);
+        }
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|e| e.tag).collect();
+        assert_eq!(order, (0..40).collect::<Vec<_>>());
+        // the ring rebases cleanly for a burst after a long idle gap
+        q.schedule_at(SimTime::ms(400), 100);
+        q.schedule_at(SimTime::ms(400), 101);
+        assert_eq!(q.peek_at(), Some(SimTime::ms(400)));
+        assert_eq!(q.pop().unwrap().tag, 100);
+        assert_eq!(q.pop().unwrap().tag, 101);
+    }
+
+    #[test]
+    fn insertion_into_partially_drained_bucket_keeps_fifo() {
+        let mut q = EventQueue::new();
+        for tag in 0..5 {
+            q.schedule_at(SimTime::ns(5), tag);
+        }
+        assert_eq!(q.pop().unwrap().tag, 0);
+        assert_eq!(q.pop().unwrap().tag, 1);
+        // same timestamp, scheduled mid-drain: fires after the rest
+        q.schedule_at(SimTime::ns(5), 99);
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|e| e.tag).collect();
+        assert_eq!(order, vec![2, 3, 4, 99]);
+    }
+
+    #[test]
+    fn dense_random_schedule_pops_in_total_order() {
+        let mut q = EventQueue::new();
+        let mut state = 0x2545_F491_4F6C_DD1Du64;
+        for _ in 0..5000 {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            // cluster within ~20ms so ring, overflow and wrap all engage
+            q.schedule_at(SimTime::ns(state % 20_000_000), state % 1000);
+        }
+        let popped: Vec<Event> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(popped.len(), 5000);
+        for w in popped.windows(2) {
+            assert!((w[0].at, w[0].seq) < (w[1].at, w[1].seq), "total (time, seq) order");
+        }
     }
 
     #[test]

@@ -989,3 +989,96 @@ fn prop_engine_prefetch_settles_no_earlier_than_optimistic() {
         }
     }
 }
+
+/// Calendar event queue equivalence (ISSUE 7 tentpole): under randomized
+/// schedules mixing dense near-future times (bucket collisions and FIFO
+/// ties), far-future times (the overflow heap), scheduling into the past
+/// (clamped to `now`), and interleaved pops, the calendar queue pops the
+/// exact (time, seq, tag) sequence of the old single `BinaryHeap` — and
+/// counts the same number of clamped events.
+#[test]
+fn prop_calendar_queue_matches_reference_heap() {
+    use dockerssd::sim::EventQueue;
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    /// The pre-calendar implementation, verbatim: one min-heap ordered
+    /// by (time, insertion seq), clock advancing on pop, past schedules
+    /// clamped to `now`.
+    struct RefHeap {
+        heap: BinaryHeap<Reverse<(SimTime, u64, u64)>>,
+        now: SimTime,
+        next_seq: u64,
+        clamped: u64,
+    }
+    impl RefHeap {
+        fn schedule_at(&mut self, at: SimTime, tag: u64) {
+            let at = if at < self.now {
+                self.clamped += 1;
+                self.now
+            } else {
+                at
+            };
+            self.heap.push(Reverse((at, self.next_seq, tag)));
+            self.next_seq += 1;
+        }
+        fn pop(&mut self) -> Option<(SimTime, u64, u64)> {
+            let Reverse(e) = self.heap.pop()?;
+            self.now = e.0;
+            Some(e)
+        }
+    }
+
+    let mut rng = Rng::new(44);
+    for case in 0..scaled(100) {
+        let mut q = EventQueue::new();
+        let mut r = RefHeap {
+            heap: BinaryHeap::new(),
+            now: SimTime::ZERO,
+            next_seq: 0,
+            clamped: 0,
+        };
+        let ops = 200 + rng.below(800);
+        for _ in 0..ops {
+            match rng.below(10) {
+                // dense near future: same-bucket pileups and (at, seq) ties
+                0..=4 => {
+                    let at = q.now() + SimTime::ns(rng.below(20_000));
+                    let tag = rng.next_u64();
+                    q.schedule_at(at, tag);
+                    r.schedule_at(at, tag);
+                }
+                // far future: beyond the ring span, lands in overflow
+                5..=6 => {
+                    let at = q.now() + SimTime::ns(5_000_000 + rng.below(500_000_000));
+                    let tag = rng.next_u64();
+                    q.schedule_at(at, tag);
+                    r.schedule_at(at, tag);
+                }
+                // the past: clamped to now, identically counted
+                7 => {
+                    let back = rng.below(1 + q.now().as_ns());
+                    let at = SimTime::ns(q.now().as_ns() - back);
+                    let tag = rng.next_u64();
+                    q.schedule_at(at, tag);
+                    r.schedule_at(at, tag);
+                }
+                // interleaved pops advance the clock mid-schedule
+                _ => {
+                    let got = q.pop().map(|e| (e.at, e.seq, e.tag));
+                    assert_eq!(got, r.pop(), "case {case}: mid-drain pop diverged");
+                }
+            }
+        }
+        loop {
+            let got = q.pop().map(|e| (e.at, e.seq, e.tag));
+            let want = r.pop();
+            assert_eq!(got, want, "case {case}: drain diverged");
+            if got.is_none() {
+                break;
+            }
+        }
+        assert_eq!(q.clamped(), r.clamped, "case {case}: clamped count diverged");
+        assert_eq!(q.len(), 0);
+    }
+}
