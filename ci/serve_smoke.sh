@@ -12,6 +12,12 @@
 #      workflow also uploads them as an artifact) and only gate 1
 #      applies, mirroring benchdiff's "new bench — not compared" rule.
 #
+# The device-to-device streaming counters (`serve.host_bytes_per_token`,
+# `fabric.bytes_p2p`, `fabric.stream_quanta`, `fabric.stream_overlap_ns`)
+# ride the existing `serve.`/`fabric.` grep prefixes below — no golden
+# protocol change; they appear as new rows the next time the golden is
+# seeded or refreshed.
+#
 # Refresh the golden after an intentional scheduling change with
 #   UPDATE_GOLDEN=1 cargo test --test golden
 # (rust/tests/golden.rs re-derives the same lines in-process through

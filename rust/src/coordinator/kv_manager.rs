@@ -4,11 +4,16 @@
 //! that would not fit — the capacity story behind Figure 12.
 //!
 //! Moving resident KV between nodes (rebalancing, draining a node) is
-//! real node-to-node traffic: [`KvManager::migrate`] charges it to the
-//! shared [`Fabric`] so migrations contend with layer fetches and
-//! collective steps on the same links.
+//! real node-to-node traffic: [`KvManager::migrate`] carries it as a
+//! pipelined device-to-device stream ([`Fabric::stream`], riding the
+//! [`KV_STREAM_CLASS`] WFQ class) so migrations contend with layer
+//! fetches and collective steps on the same links without ever holding
+//! a wire for the whole move — and without touching the host uplink.
+//! [`KvManager::migrate_monolithic`] keeps the pre-stream shape (one
+//! synchronous foreground transfer) as the A/B baseline the benches and
+//! the host-uplink regression test compare against.
 
-use crate::fabric::{Endpoint, Fabric, Priority, TransferReceipt};
+use crate::fabric::{Endpoint, Fabric, Priority, TransferReceipt, DEFAULT_QUANTUM, KV_STREAM_CLASS};
 use crate::util::SimTime;
 
 /// Per-node KV accounting (bytes).
@@ -76,13 +81,13 @@ impl KvManager {
         *u = u.saturating_sub(bytes);
     }
 
-    /// Move `bytes` of resident KV from `from` to `to`, charging the
-    /// node-to-node transfer to the shared fabric.  Fails (returning
-    /// `None`, with the rejection counted) if `from` doesn't hold that
-    /// much or `to` lacks capacity; residency accounting moves with the
-    /// bytes on success.  A same-node "move" is a free no-op (the
-    /// destination never needs transient headroom for bytes it already
-    /// holds).
+    /// Move `bytes` of resident KV from `from` to `to` as a pipelined
+    /// device-to-device stream of [`DEFAULT_QUANTUM`] chunk quanta on
+    /// the [`KV_STREAM_CLASS`] WFQ class.  Fails (returning `None`,
+    /// with the rejection counted) if `from` doesn't hold that much or
+    /// `to` lacks capacity; residency accounting moves with the bytes
+    /// on success.  A same-node "move" is a free no-op (the destination
+    /// never needs transient headroom for bytes it already holds).
     pub fn migrate(
         &mut self,
         fabric: &mut Fabric,
@@ -91,11 +96,7 @@ impl KvManager {
         to: u32,
         bytes: u64,
     ) -> Option<TransferReceipt> {
-        if self.used_of(from) < bytes {
-            self.rejected += 1;
-            return None;
-        }
-        if from == to {
+        if !self.book_move(from, to, bytes)? {
             // nothing moves; the fabric path is empty for same endpoints
             return Some(fabric.transfer(
                 now,
@@ -105,10 +106,31 @@ impl KvManager {
                 Priority::Foreground,
             ));
         }
-        if !self.reserve(to, bytes) {
-            return None;
-        }
-        self.release(from, bytes);
+        let handle = fabric.stream(
+            now,
+            Endpoint::Node(from),
+            Endpoint::Node(to),
+            bytes,
+            DEFAULT_QUANTUM,
+            KV_STREAM_CLASS,
+        );
+        Some(fabric.settle_stream(&handle).summary())
+    }
+
+    /// The pre-stream migration shape: one synchronous foreground
+    /// transfer holding the node-to-node path end-to-end.  Identical
+    /// residency semantics to [`KvManager::migrate`]; kept as the
+    /// baseline the d2d-stream bench and the host-uplink regression
+    /// test run against.
+    pub fn migrate_monolithic(
+        &mut self,
+        fabric: &mut Fabric,
+        now: SimTime,
+        from: u32,
+        to: u32,
+        bytes: u64,
+    ) -> Option<TransferReceipt> {
+        self.book_move(from, to, bytes)?;
         Some(fabric.transfer(
             now,
             Endpoint::Node(from),
@@ -116,6 +138,25 @@ impl KvManager {
             bytes,
             Priority::Foreground,
         ))
+    }
+
+    /// Shared residency bookkeeping for a migration: `None` refuses the
+    /// move (counted), `Some(false)` is the free same-node case, and
+    /// `Some(true)` means the accounting moved and the bytes must cross
+    /// the wire.
+    fn book_move(&mut self, from: u32, to: u32, bytes: u64) -> Option<bool> {
+        if self.used_of(from) < bytes {
+            self.rejected += 1;
+            return None;
+        }
+        if from == to {
+            return Some(false);
+        }
+        if !self.reserve(to, bytes) {
+            return None;
+        }
+        self.release(from, bytes);
+        Some(true)
     }
 
     pub fn used_of(&self, node: u32) -> u64 {
@@ -216,5 +257,57 @@ mod tests {
         assert_eq!(r.latency(), SimTime::ZERO);
         assert_eq!(kv.used_of(0), 300);
         assert_eq!(kv.rejected, 2);
+    }
+
+    #[test]
+    fn migration_streams_stay_off_the_host_uplink() {
+        use crate::config::{EtherOnConfig, PoolConfig};
+        use crate::metrics::{names, Counters};
+
+        let mut f = Fabric::new(
+            &PoolConfig {
+                nodes_per_array: 4,
+                arrays: 2,
+                ..Default::default()
+            },
+            &EtherOnConfig::default(),
+        );
+        let bytes = 3 * DEFAULT_QUANTUM + 1; // forces a multi-quantum stream
+        let mut kv = KvManager::new(8, u64::MAX);
+        kv.reserve(0, bytes);
+        // cross-array: Array(0) + Tray + Array(1), never HostUplink
+        let r = kv.migrate(&mut f, SimTime::ZERO, 0, 5, bytes).unwrap();
+        assert_eq!(r.bytes, bytes);
+        let mut c = Counters::new();
+        f.export_counters(&mut c);
+        assert_eq!(c.get(names::FABRIC_BYTES_HOST_UPLINK), 0);
+        assert_eq!(c.get(names::FABRIC_BYTES_P2P), bytes);
+        assert_eq!(c.get(names::FABRIC_STREAM_QUANTA), 4);
+        assert!(c.get(names::FABRIC_STREAM_OVERLAP_NS) > 0);
+
+        // the monolithic baseline books residency identically and puts
+        // the same bytes on the same links, just as one grant
+        let mut f2 = Fabric::new(
+            &PoolConfig {
+                nodes_per_array: 4,
+                arrays: 2,
+                ..Default::default()
+            },
+            &EtherOnConfig::default(),
+        );
+        let mut kv2 = KvManager::new(8, u64::MAX);
+        kv2.reserve(0, bytes);
+        let m = kv2.migrate_monolithic(&mut f2, SimTime::ZERO, 0, 5, bytes).unwrap();
+        assert_eq!(m.bytes, bytes);
+        assert_eq!(kv2.used_of(5), kv.used_of(5));
+        let mut c2 = Counters::new();
+        f2.export_counters(&mut c2);
+        assert_eq!(c2.get(names::FABRIC_BYTES_HOST_UPLINK), 0);
+        assert_eq!(c2.get(names::FABRIC_BYTES_ARRAY), c.get(names::FABRIC_BYTES_ARRAY));
+        assert_eq!(c2.get(names::FABRIC_BYTES_P2P), 0, "monolithic path is not a stream");
+        // the stream tracks the monolithic wire: no earlier (modulo
+        // per-quantum truncation), within per-quantum hop tails
+        assert!(r.finish + SimTime::ns(3 * 4) >= m.finish);
+        assert!(r.finish <= m.finish + SimTime::ns(3 * 300 * 4));
     }
 }

@@ -27,6 +27,7 @@ pub use kv_manager::KvManager;
 pub use router::Router;
 pub use server::{
     serve, serve_with_hook, BatchExecutor, EchoExecutor, ServeHook, ServeParams, ServeReport,
+    WirePolicy, BATCH_CONTROL_BYTES,
 };
 
 use crate::util::SimTime;

@@ -7,8 +7,21 @@
 //! other transfer in flight.  [`Router::dispatch`] and
 //! [`Router::complete_costed`] charge that traffic to the shared
 //! [`Fabric`].
+//!
+//! Response accounting distinguishes *control* from *payload*.  An
+//! audit of the serve response path found every completed batch charged
+//! end-to-end over `HostUplink` even when the bulky part of the result
+//! — the session's KV, which stays resident in the pool — never had a
+//! reason to leave it: in-pool payloads were double-riding the uplink
+//! on top of their real device-to-device move.
+//! [`Router::complete_split`] fixes the split: only the host-bound
+//! control bytes (token ids, batch header) cross `HostUplink`, while an
+//! in-pool payload streams device-to-device over `Array` (+ `Tray`).
+//! [`Router::complete_costed`] keeps the old conflated shape for
+//! callers whose response really is all host-bound, and as the A/B
+//! baseline for the host-uplink regression tests.
 
-use crate::fabric::{Endpoint, Fabric, Priority, TransferReceipt};
+use crate::fabric::{Endpoint, Fabric, Priority, TransferReceipt, DEFAULT_QUANTUM, KV_STREAM_CLASS};
 use crate::util::SimTime;
 
 /// Router over `n` nodes tracking outstanding batches per node.
@@ -115,6 +128,10 @@ impl Router {
 
     /// A node finished a batch: release its slot and charge the response
     /// bytes node -> host over the shared fabric.
+    ///
+    /// This conflates control and payload — everything crosses
+    /// `HostUplink`.  Use [`Router::complete_split`] when part of the
+    /// response (session KV, handoff state) stays in the pool.
     pub fn complete_costed(
         &mut self,
         fabric: &mut Fabric,
@@ -131,6 +148,50 @@ impl Router {
             response_bytes,
             Priority::Foreground,
         )
+    }
+
+    /// A node finished a batch whose response splits into host-bound
+    /// *control* bytes (token ids, batch header — crosses `HostUplink`)
+    /// and an in-pool *payload* (session KV / handoff state).  The
+    /// payload streams device-to-device to `payload_to` over
+    /// `Array` (+ `Tray`) quanta — `None` (or the node itself) means it
+    /// stays resident where it was computed, costing no wire at all.
+    /// Either way the payload never touches the host uplink.
+    ///
+    /// Returns the control receipt: `finish` is when the host saw the
+    /// batch complete.
+    pub fn complete_split(
+        &mut self,
+        fabric: &mut Fabric,
+        now: SimTime,
+        node: u32,
+        control_bytes: u64,
+        payload_bytes: u64,
+        payload_to: Option<u32>,
+    ) -> TransferReceipt {
+        self.complete(node);
+        self.wire_bytes[node as usize] += control_bytes + payload_bytes;
+        let control = fabric.transfer(
+            now,
+            Endpoint::Node(node),
+            Endpoint::Host,
+            control_bytes,
+            Priority::Foreground,
+        );
+        if payload_bytes > 0 {
+            if let Some(peer) = payload_to {
+                let h = fabric.stream(
+                    now,
+                    Endpoint::Node(node),
+                    Endpoint::Node(peer),
+                    payload_bytes,
+                    DEFAULT_QUANTUM,
+                    KV_STREAM_CLASS,
+                );
+                fabric.settle_stream(&h);
+            }
+        }
+        control
     }
 
     pub fn outstanding_of(&self, node: u32) -> u64 {
@@ -240,5 +301,62 @@ mod tests {
         let mut c = Counters::new();
         f.export_counters(&mut c);
         assert_eq!(c.get(names::FABRIC_BYTES_HOST_UPLINK), (2 << 20) + (1 << 10));
+    }
+
+    #[test]
+    fn in_pool_payloads_never_cross_the_host_uplink() {
+        // regression for the response-path audit: complete_costed used
+        // to be the only completion primitive, so a response whose bulk
+        // stays in the pool (session KV handed to a peer) was charged
+        // end-to-end over HostUplink on top of its real device-to-device
+        // move — double-riding the uplink
+        use crate::config::{EtherOnConfig, PoolConfig};
+        use crate::metrics::{names, Counters};
+
+        let pool = PoolConfig {
+            nodes_per_array: 4,
+            arrays: 1,
+            ..Default::default()
+        };
+        let (control, payload) = (1 << 10, 8 << 20);
+
+        // old shape: everything hairpins through the host
+        let mut f_old = Fabric::new(&pool, &EtherOnConfig::default());
+        let mut r_old = Router::new(4);
+        r_old.assign(0);
+        r_old.complete_costed(&mut f_old, SimTime::ZERO, 0, control + payload);
+        let mut c_old = Counters::new();
+        f_old.export_counters(&mut c_old);
+        assert_eq!(c_old.get(names::FABRIC_BYTES_HOST_UPLINK), control + payload);
+
+        // split shape: control to the host, payload streamed to a peer
+        let mut f = Fabric::new(&pool, &EtherOnConfig::default());
+        let mut r = Router::new(4);
+        r.assign(0);
+        let rc = r.complete_split(&mut f, SimTime::ZERO, 0, control, payload, Some(2));
+        assert_eq!(r.outstanding_of(0), 0);
+        assert!(rc.finish > SimTime::ZERO, "control still pays the uplink");
+        let mut c = Counters::new();
+        f.export_counters(&mut c);
+        assert_eq!(
+            c.get(names::FABRIC_BYTES_HOST_UPLINK),
+            control,
+            "payload bytes must stay off the uplink"
+        );
+        assert_eq!(c.get(names::FABRIC_BYTES_P2P), payload);
+        assert!(c.get(names::FABRIC_STREAM_QUANTA) > 1, "payload moved as stream quanta");
+        // per-node wire accounting still sees the whole response
+        assert_eq!(r.wire_bytes_of(0), control + payload);
+
+        // payload staying resident costs no wire at all
+        let mut f2 = Fabric::new(&pool, &EtherOnConfig::default());
+        let mut r2 = Router::new(4);
+        r2.assign(1);
+        r2.complete_split(&mut f2, SimTime::ZERO, 1, control, payload, None);
+        let mut c2 = Counters::new();
+        f2.export_counters(&mut c2);
+        assert_eq!(c2.get(names::FABRIC_BYTES_HOST_UPLINK), control);
+        assert_eq!(c2.get(names::FABRIC_BYTES_ARRAY), control, "only the control's array hop");
+        assert_eq!(c2.get(names::FABRIC_BYTES_P2P), 0);
     }
 }

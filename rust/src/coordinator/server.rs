@@ -19,6 +19,17 @@
 //! fabric traffic) when residency skews, and is evicted to admit new
 //! batches under capacity pressure — the Figure 12 capacity story.
 //!
+//! What rides the host uplink is a policy ([`WirePolicy`]).  The
+//! historical shape ([`WirePolicy::Hairpin`]) ships the *padded* AOT
+//! batch host → node and hairpins every completion end-to-end through
+//! the host; the default ([`WirePolicy::Streamed`]) sends only live
+//! clipped prompt tokens plus a fixed batch-control header (padding is
+//! materialized at the node), completes via the control/payload split
+//! ([`Router::complete_split`]), and moves session KV between nodes as
+//! pipelined device-to-device streams — the uplink carries control and
+//! ingress bytes only, summarized per run as
+//! `serve.host_bytes_per_token`.
+//!
 //! Determinism: the only clock is the [`PoolSim`] event queue.  There is
 //! no `std::time::Instant`, no `thread::sleep`, and no thread scheduling
 //! anywhere in this path, so two runs with the same seed produce
@@ -81,6 +92,37 @@ impl BatchExecutor for EchoExecutor {
     }
 }
 
+/// Fixed batch-control header the host still sends per dispatch under
+/// [`WirePolicy::Streamed`]: batch shape, per-row generation budgets,
+/// padding spec — everything a node needs to materialize the padded AOT
+/// batch locally instead of receiving the padding over the wire.
+pub const BATCH_CONTROL_BYTES: u64 = 64;
+
+/// How serve-loop traffic rides the fabric.
+///
+/// Both policies serve identical token content on the identical
+/// simulated clock discipline; they differ only in which bytes are put
+/// on which links — which is exactly what the host-uplink regression
+/// tests and the `d2d_stream` bench A/B.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum WirePolicy {
+    /// The pre-stream shape: the padded AOT batch crosses the host
+    /// uplink on dispatch, completions hairpin end-to-end through the
+    /// host ([`Router::complete_costed`]), and KV migrations move as
+    /// one monolithic foreground transfer
+    /// ([`KvManager::migrate_monolithic`]).
+    Hairpin,
+    /// Device-to-device streaming: dispatch carries live clipped prompt
+    /// tokens plus [`BATCH_CONTROL_BYTES`] (padding is materialized at
+    /// the node), completions split control from payload
+    /// ([`Router::complete_split`]) so only token ids ride the uplink,
+    /// and KV migrations pipeline as chunk quanta on the
+    /// [`crate::fabric::KV_STREAM_CLASS`] WFQ class
+    /// ([`KvManager::migrate`]).
+    #[default]
+    Streamed,
+}
+
 /// Tunables of the simulated serving loop.
 #[derive(Clone, Debug)]
 pub struct ServeParams {
@@ -101,6 +143,9 @@ pub struct ServeParams {
     pub token_compute: SimTime,
     /// Wire bytes per token id, for dispatch/response fabric traffic.
     pub bytes_per_token: u64,
+    /// Which bytes ride which links ([`WirePolicy::Streamed`] by
+    /// default; [`WirePolicy::Hairpin`] is the pre-stream baseline).
+    pub wire: WirePolicy,
 }
 
 impl Default for ServeParams {
@@ -114,6 +159,7 @@ impl Default for ServeParams {
             prefill_compute: SimTime::us(500),
             token_compute: SimTime::us(50),
             bytes_per_token: 4,
+            wire: WirePolicy::Streamed,
         }
     }
 }
@@ -147,6 +193,7 @@ impl ServeParams {
             prefill_compute: SimTime::us(c.prefill_compute_us),
             token_compute: SimTime::us(c.token_compute_us),
             bytes_per_token: 4,
+            wire: WirePolicy::Streamed,
         }
     }
 
@@ -179,6 +226,12 @@ pub struct ServeReport {
     pub latency: LatencyHistogram,
     /// Dispatch + response wire bytes per node, from the router.
     pub node_wire_bytes: Vec<u64>,
+    /// Bytes that actually crossed the host uplink (dispatch control +
+    /// prompt ingress + response control) — the numerator of
+    /// `serve.host_bytes_per_token`.  Under [`WirePolicy::Streamed`]
+    /// this excludes padding and in-pool KV moves; under
+    /// [`WirePolicy::Hairpin`] it is the full historical hairpin.
+    pub host_bytes: u64,
 }
 
 impl ServeReport {
@@ -206,6 +259,14 @@ impl ServeReport {
         c.add(names::SERVE_MAKESPAN_NS, self.makespan.as_ns());
         c.add(names::SERVE_LATENCY_MEAN_NS, self.latency.mean().as_ns());
         c.add(names::SERVE_LATENCY_P99_NS, self.latency.quantile(0.99).as_ns());
+        c.add(names::SERVE_HOST_BYTES_PER_TOKEN, self.host_bytes_per_token());
+    }
+
+    /// Host-uplink bytes per generated token — the per-run figure the
+    /// Table 2 host-traffic comparison pins (floor-divided; byte-exact
+    /// across same-seed runs).
+    pub fn host_bytes_per_token(&self) -> u64 {
+        self.host_bytes / self.tokens_out.max(1)
     }
 }
 
@@ -254,6 +315,7 @@ struct ServeLoop<'p, E> {
     failed_batches: u64,
     kv_migrations: u64,
     kv_evictions: u64,
+    host_bytes: u64,
     end: SimTime,
 }
 
@@ -308,7 +370,15 @@ impl<E: BatchExecutor> ServeLoop<'_, E> {
                 .position(|s| s.node == hi && self.kv.fits(lo, s.bytes))
             {
                 let sess = self.sessions.remove(pos).expect("position is in range");
-                if self.kv.migrate(&mut sim.fabric, now, hi, lo, sess.bytes).is_some() {
+                let moved = match self.params.wire {
+                    WirePolicy::Streamed => {
+                        self.kv.migrate(&mut sim.fabric, now, hi, lo, sess.bytes)
+                    }
+                    WirePolicy::Hairpin => {
+                        self.kv.migrate_monolithic(&mut sim.fabric, now, hi, lo, sess.bytes)
+                    }
+                };
+                if moved.is_some() {
                     self.sessions.push_front(Session { node: lo, bytes: sess.bytes });
                     self.kv_migrations += 1;
                 }
@@ -342,15 +412,24 @@ impl<E: BatchExecutor> ServeLoop<'_, E> {
     }
 
     fn dispatch_on(&mut self, sim: &mut PoolSim, now: SimTime, node: u32, batch: Batch) {
-        // the AOT batch shape is static, so padding rows cross the wire
-        // too; only live tokens count toward the prompt-token total
-        let prompt_bytes =
-            (batch.prompts.len() * self.params.prompt_len) as u64 * self.params.bytes_per_token;
-        self.prompt_tokens += batch
+        let live_prompt_tokens = batch
             .requests
             .iter()
             .map(|r| r.prompt.len().min(self.params.prompt_len) as u64)
             .sum::<u64>();
+        // the AOT batch shape is static either way; Hairpin ships the
+        // padding over the wire, Streamed sends live tokens plus a
+        // fixed control header and materializes the padding at the node
+        let prompt_bytes = match self.params.wire {
+            WirePolicy::Hairpin => {
+                (batch.prompts.len() * self.params.prompt_len) as u64 * self.params.bytes_per_token
+            }
+            WirePolicy::Streamed => {
+                live_prompt_tokens * self.params.bytes_per_token + BATCH_CONTROL_BYTES
+            }
+        };
+        self.prompt_tokens += live_prompt_tokens;
+        self.host_bytes += prompt_bytes.max(1);
         let receipt = self
             .router
             .dispatch_to(&mut sim.fabric, now, node, prompt_bytes.max(1));
@@ -392,9 +471,25 @@ impl<E: BatchExecutor> ServeLoop<'_, E> {
             .map(|r| r.max_new_tokens as u64)
             .sum::<u64>()
             * self.params.bytes_per_token;
-        let receipt =
-            self.router
-                .complete_costed(&mut sim.fabric, now, node, resp_bytes.max(1));
+        // token ids ARE the host-bound control; the batch's KV is the
+        // in-pool payload and stays resident on the node (it moves
+        // later, if at all, as a migration stream) — under Streamed the
+        // split makes that explicit instead of hairpinning everything
+        let receipt = match self.params.wire {
+            WirePolicy::Hairpin => {
+                self.router
+                    .complete_costed(&mut sim.fabric, now, node, resp_bytes.max(1))
+            }
+            WirePolicy::Streamed => self.router.complete_split(
+                &mut sim.fabric,
+                now,
+                node,
+                resp_bytes.max(1),
+                0,
+                None,
+            ),
+        };
+        self.host_bytes += resp_bytes.max(1);
         self.end = self.end.max(receipt.finish);
         if reserved {
             // the batch's KV stays resident as a session until migrated
@@ -525,6 +620,7 @@ where
         failed_batches: 0,
         kv_migrations: 0,
         kv_evictions: 0,
+        host_bytes: 0,
         end: start,
     };
 
@@ -570,6 +666,7 @@ where
         kv_evictions: lp.kv_evictions,
         latency: lp.latency,
         node_wire_bytes: (0..nodes as u32).map(|n| lp.router.wire_bytes_of(n)).collect(),
+        host_bytes: lp.host_bytes,
     }
 }
 
@@ -691,6 +788,40 @@ mod tests {
         s.fabric.export_counters(&mut c);
         assert!(c.get(names::FABRIC_BYTES_HOST_UPLINK) > 0, "dispatch + response on the wire");
         assert!(c.get(names::FABRIC_BYTES_ARRAY) > 0);
+    }
+
+    #[test]
+    fn streamed_wire_cuts_host_uplink_vs_hairpin() {
+        // same requests, same clock discipline, two wire policies: the
+        // streamed shape must serve identical tokens while shipping a
+        // small fraction of the hairpin's host-uplink bytes (8 live
+        // prompt tokens + a 64B header vs a padded 256-token row)
+        let run = |wire: WirePolicy| {
+            let mut s = sim(2);
+            let mut p = params();
+            p.prompt_len = 256;
+            p.wire = wire;
+            let report = serve(&mut s, vec![mk(), mk()], reqs(12), &p);
+            let mut c = Counters::new();
+            s.fabric.export_counters(&mut c);
+            (report, c)
+        };
+        let (hr, hc) = run(WirePolicy::Hairpin);
+        let (sr, sc) = run(WirePolicy::Streamed);
+        assert_eq!(sr.tokens_out, hr.tokens_out, "wire policy never changes content");
+        assert_eq!(sr.responses.len(), hr.responses.len());
+        assert!(
+            hc.get(names::FABRIC_BYTES_HOST_UPLINK)
+                > 3 * sc.get(names::FABRIC_BYTES_HOST_UPLINK),
+            "padding off the uplink: hairpin {} vs streamed {}",
+            hc.get(names::FABRIC_BYTES_HOST_UPLINK),
+            sc.get(names::FABRIC_BYTES_HOST_UPLINK)
+        );
+        assert!(hr.host_bytes > 3 * sr.host_bytes);
+        assert!(sr.host_bytes_per_token() < hr.host_bytes_per_token());
+        let mut c = Counters::new();
+        sr.export_counters(&mut c);
+        assert_eq!(c.get(names::SERVE_HOST_BYTES_PER_TOKEN), sr.host_bytes_per_token());
     }
 
     #[test]

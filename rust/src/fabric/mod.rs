@@ -19,9 +19,12 @@
 //!   placement kicks off `Background` prefetches for missing layers.
 //! * `llm::disagg` — tensor-parallel all-reduce and pipeline boundary
 //!   hops cross `Array`/`Tray`; host-coordinated models also cross
-//!   `HostUplink` per step.
-//! * `coordinator` — request dispatch and response collection cross
-//!   `HostUplink` + `Array`; KV migrations cross node-to-node paths.
+//!   `HostUplink` per step; the D-* prefill→decode KV handoff is a
+//!   pipelined device-to-device [`stream`] over `Array` (+ `Tray`).
+//! * `coordinator` — request dispatch (control + live prompt ingress)
+//!   and response control cross `HostUplink` + `Array`; KV migrations
+//!   and session handoff are node-to-node [`stream`]s that never touch
+//!   the uplink (`fabric.bytes_p2p`).
 //!
 //! Two scheduling tiers exist per link: the foreground tier
 //! ([`Priority::Foreground`] plus weighted [`Priority::Tenant`] QoS
@@ -55,9 +58,11 @@
 
 pub mod link;
 pub mod sched;
+pub mod stream;
 
 pub use link::{LinkClass, LinkQueue, Priority};
 pub use sched::TransferId;
+pub use stream::{StreamHandle, StreamReceipt, DEFAULT_QUANTUM, KV_STREAM_CLASS};
 
 use std::collections::BTreeMap;
 
@@ -133,6 +138,13 @@ pub struct FabricStats {
     pub link_flaps: u64,
     /// Total time links spent degraded, accumulated as windows close.
     pub brownout_ns: u64,
+    /// Bytes streamed device-to-device (both endpoints pool nodes).
+    pub bytes_p2p: u64,
+    /// Chunk quanta issued by [`stream`] pipelines.
+    pub stream_quanta: u64,
+    /// Consumer head start settled streams exposed (see
+    /// [`StreamReceipt::overlap`]).
+    pub stream_overlap_ns: u64,
 }
 
 /// The pool fabric: link queues indexed by a dense per-class slot
@@ -534,6 +546,9 @@ impl Fabric {
         c.add(names::FABRIC_RETIMED_TRANSFERS, self.stats.retimed_transfers);
         c.add(names::FABRIC_LINK_FLAPS, self.stats.link_flaps);
         c.add(names::FABRIC_BROWNOUT_NS, self.stats.brownout_ns);
+        c.add(names::FABRIC_BYTES_P2P, self.stats.bytes_p2p);
+        c.add(names::FABRIC_STREAM_QUANTA, self.stats.stream_quanta);
+        c.add(names::FABRIC_STREAM_OVERLAP_NS, self.stats.stream_overlap_ns);
         c.add(names::SIM_CLAMPED_EVENTS, self.engine_clamped_events());
     }
 }

@@ -1,0 +1,406 @@
+//! Device-to-device streams: a logical transfer carried as a pipeline
+//! of fixed-size chunk quanta on the event-driven engine.
+//!
+//! A monolithic [`Fabric::transfer`] delivers nothing until its last
+//! byte lands, and while granted it holds the wire against every other
+//! foreground transfer.  A stream splits the same bytes into
+//! [`StreamHandle::quanta`] chunk quanta, each scheduled with
+//! [`Fabric::schedule`], so:
+//!
+//! * the consumer can start on quantum `i` while quantum `i+1` is still
+//!   on the wire ([`StreamReceipt::pipelined_finish`] prices exactly
+//!   that overlap — the disaggregated prefill→decode KV handoff in
+//!   [`crate::llm::disagg`] rides it);
+//! * quanta are granted through the engine's per-tenant WFQ classes, so
+//!   a long KV stream shares a contended backplane with dispatch
+//!   traffic by weight instead of holding it for the whole transfer.
+//!
+//! A stream never finishes *earlier* than the equivalent monolithic
+//! transfer (same bytes, same wire; quantization only adds boundaries —
+//! the property suite pins this), but everything already delivered is
+//! usable while the tail is still in flight, and that head start is
+//! what `fabric.stream_overlap_ns` accounts.
+//!
+//! Both endpoints in the pool ⇒ the bytes count as `fabric.bytes_p2p`:
+//! device-to-device traffic that never touched the host uplink.
+
+use super::sched::TransferId;
+use super::{Endpoint, Fabric, Priority, TransferReceipt};
+use crate::util::SimTime;
+
+/// Default chunk quantum: 256 KiB, a few hundred MTU frames — small
+/// enough to pipeline KV-sized transfers, large enough that per-quantum
+/// switch-hop latency stays noise.
+pub const DEFAULT_QUANTUM: u64 = 256 << 10;
+
+/// The WFQ class KV streams ride: device-to-device session/KV traffic
+/// shares contended links with request dispatch by weight instead of
+/// serializing a whole migration ahead of it.
+pub const KV_STREAM_CLASS: Priority = Priority::Tenant { id: 200, weight: 4 };
+
+/// An in-flight stream: the quanta of one logical transfer, in issue
+/// order.  Resolve it with [`Fabric::settle_stream`].
+#[derive(Clone, Debug)]
+pub struct StreamHandle {
+    pub from: Endpoint,
+    pub to: Endpoint,
+    pub bytes: u64,
+    /// Chunk size the bytes were split at (last quantum carries the
+    /// remainder).
+    pub quantum: u64,
+    pub issued: SimTime,
+    ids: Vec<TransferId>,
+}
+
+impl StreamHandle {
+    /// Chunk quanta this stream was split into.
+    pub fn quanta(&self) -> u64 {
+        self.ids.len() as u64
+    }
+
+    /// The engine transfer ids of the quanta, in issue order.
+    pub fn quantum_ids(&self) -> &[TransferId] {
+        &self.ids
+    }
+}
+
+/// What the fabric granted a settled stream.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StreamReceipt {
+    /// When the stream was requested.
+    pub issued: SimTime,
+    /// When the first quantum was granted the wire.
+    pub begin: SimTime,
+    /// When the last quantum's final byte arrived.
+    pub finish: SimTime,
+    pub bytes: u64,
+    pub quanta: u64,
+    /// MTU frames charged to the Ether-oN path across all quanta.
+    pub frames: u64,
+    /// Consumer head start the pipeline exposed: Σ over non-final
+    /// quanta of (stream finish − quantum finish).  A monolithic
+    /// transfer — one quantum — exposes zero.
+    pub overlap: SimTime,
+    /// Per-quantum arrival times, in issue order (nondecreasing: quanta
+    /// of one stream serialize on their shared path).
+    pub quantum_finishes: Vec<SimTime>,
+}
+
+impl StreamReceipt {
+    /// End-to-end latency of the whole stream.
+    pub fn latency(&self) -> SimTime {
+        self.finish.saturating_sub(self.issued)
+    }
+
+    /// Completion time for a consumer that spends `decode` per quantum
+    /// and processes quantum `i` while quantum `i+1` is on the wire:
+    /// the classic two-stage pipeline `done_i = max(arrive_i,
+    /// done_{i-1}) + decode`.  Always ≤ [`StreamReceipt::serial_finish`].
+    pub fn pipelined_finish(&self, decode: SimTime) -> SimTime {
+        let mut done = self.issued;
+        for &at in &self.quantum_finishes {
+            done = done.max(at) + decode;
+        }
+        done
+    }
+
+    /// Completion time for the monolithic shape: all decode work starts
+    /// only after the last byte lands.
+    pub fn serial_finish(&self, decode: SimTime) -> SimTime {
+        self.finish + SimTime::ns(decode.as_ns() * self.quanta)
+    }
+
+    /// The stream summarized as a single transfer receipt (first grant,
+    /// last byte), for callers that account streams and monolithic
+    /// transfers uniformly.
+    pub fn summary(&self) -> TransferReceipt {
+        TransferReceipt {
+            issued: self.issued,
+            begin: self.begin,
+            finish: self.finish,
+            bytes: self.bytes,
+            frames: self.frames,
+        }
+    }
+}
+
+impl Fabric {
+    /// Open a stream: split `bytes` into `quantum`-sized chunks and
+    /// schedule every quantum on the engine at `now` under `pri`.  The
+    /// quanta serialize among themselves (same path, same class) but
+    /// interleave with other tenants' traffic in WFQ order — the wire is
+    /// never held for more than one quantum at a time.
+    ///
+    /// `fabric.bytes_p2p` accrues when both endpoints are pool nodes;
+    /// `fabric.stream_quanta` counts the quanta issued.
+    pub fn stream(
+        &mut self,
+        now: SimTime,
+        from: Endpoint,
+        to: Endpoint,
+        bytes: u64,
+        quantum: u64,
+        pri: Priority,
+    ) -> StreamHandle {
+        let quantum = quantum.max(1);
+        let n = bytes.div_ceil(quantum).max(1);
+        let mut ids = Vec::with_capacity(n as usize);
+        let mut left = bytes;
+        for _ in 0..n {
+            let chunk = left.min(quantum);
+            ids.push(self.schedule(now, from, to, chunk, pri));
+            left -= chunk;
+        }
+        debug_assert_eq!(left, 0);
+        self.stats.stream_quanta += n;
+        if matches!((from, to), (Endpoint::Node(a), Endpoint::Node(b)) if a != b) {
+            self.stats.bytes_p2p += bytes;
+        }
+        StreamHandle {
+            from,
+            to,
+            bytes,
+            quantum,
+            issued: now,
+            ids,
+        }
+    }
+
+    /// Settle every quantum of `handle` (advancing the engine only as
+    /// far as the last quantum's finish) and account the pipeline
+    /// overlap under `fabric.stream_overlap_ns`.
+    pub fn settle_stream(&mut self, handle: &StreamHandle) -> StreamReceipt {
+        let mut finishes = Vec::with_capacity(handle.ids.len());
+        let mut begin = SimTime::ZERO;
+        let mut finish = handle.issued;
+        let mut frames = 0;
+        for (i, &id) in handle.ids.iter().enumerate() {
+            let r = self.settle(id).expect("stream quantum was scheduled");
+            if i == 0 {
+                begin = r.begin;
+            }
+            finish = finish.max(r.finish);
+            frames += r.frames;
+            finishes.push(r.finish);
+        }
+        let mut overlap = SimTime::ZERO;
+        for &at in finishes.iter().take(finishes.len().saturating_sub(1)) {
+            overlap += finish.saturating_sub(at);
+        }
+        self.stats.stream_overlap_ns += overlap.as_ns();
+        StreamReceipt {
+            issued: handle.issued,
+            begin,
+            finish,
+            bytes: handle.bytes,
+            quanta: handle.quanta(),
+            frames,
+            overlap,
+            quantum_finishes: finishes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EtherOnConfig, PoolConfig};
+    use crate::metrics::{names, Counters};
+
+    fn fabric(nodes_per_array: u32, arrays: u32) -> Fabric {
+        Fabric::new(
+            &PoolConfig {
+                nodes_per_array,
+                arrays,
+                ..Default::default()
+            },
+            &EtherOnConfig::default(),
+        )
+    }
+
+    #[test]
+    fn single_quantum_stream_matches_monolithic() {
+        let mut a = fabric(4, 1);
+        let mut b = fabric(4, 1);
+        let bytes = 100 << 10;
+        let mono = b.schedule(
+            SimTime::ZERO,
+            Endpoint::Node(0),
+            Endpoint::Node(1),
+            bytes,
+            Priority::Foreground,
+        );
+        b.run_to_idle();
+        let h = a.stream(
+            SimTime::ZERO,
+            Endpoint::Node(0),
+            Endpoint::Node(1),
+            bytes,
+            DEFAULT_QUANTUM,
+            Priority::Foreground,
+        );
+        let r = a.settle_stream(&h);
+        assert_eq!(r.quanta, 1);
+        assert_eq!(r.overlap, SimTime::ZERO, "one quantum exposes no head start");
+        assert_eq!(r.finish, b.receipt_of(mono).unwrap().finish);
+    }
+
+    #[test]
+    fn uncontended_stream_finishes_with_the_monolithic_transfer() {
+        let mut a = fabric(4, 2);
+        let mut b = fabric(4, 2);
+        let bytes = 8 << 20;
+        let quantum = 512 << 10;
+        let mono = b.schedule(
+            SimTime::ZERO,
+            Endpoint::Node(0),
+            Endpoint::Node(5), // cross-array: 3-link path
+            bytes,
+            Priority::Foreground,
+        );
+        b.run_to_idle();
+        let mono_finish = b.receipt_of(mono).unwrap().finish;
+        let h = a.stream(
+            SimTime::ZERO,
+            Endpoint::Node(0),
+            Endpoint::Node(5),
+            bytes,
+            quantum,
+            Priority::Foreground,
+        );
+        let r = a.settle_stream(&h);
+        assert_eq!(r.quanta, bytes.div_ceil(quantum));
+        // no earlier than the monolithic wire (modulo per-quantum ns
+        // truncation of wire_time), and within per-quantum hop tails of it
+        let trunc = SimTime::ns(3 * r.quanta);
+        assert!(
+            r.finish + trunc >= mono_finish,
+            "stream must not beat the wire: {} vs {mono_finish}",
+            r.finish
+        );
+        let tails = SimTime::ns(3 * 300 * r.quanta);
+        assert!(
+            r.finish <= mono_finish + tails,
+            "uncontended stream should track the monolithic finish: {} vs {mono_finish}",
+            r.finish
+        );
+        // every delivered quantum is a head start over the monolithic shape
+        assert!(r.overlap > SimTime::ZERO);
+        assert!(r.quantum_finishes.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn pipelined_consumption_beats_the_serial_shape() {
+        let mut f = fabric(4, 1);
+        let h = f.stream(
+            SimTime::ZERO,
+            Endpoint::Node(0),
+            Endpoint::Node(1),
+            4 << 20,
+            256 << 10,
+            KV_STREAM_CLASS,
+        );
+        let r = f.settle_stream(&h);
+        assert!(r.quanta > 1);
+        let decode = SimTime::us(50);
+        let pipelined = r.pipelined_finish(decode);
+        let serial = r.serial_finish(decode);
+        assert!(
+            pipelined < serial,
+            "decode under the next fetch must shrink completion: {pipelined} vs {serial}"
+        );
+        // the pipeline can never finish before the wire or the decode work
+        assert!(pipelined >= r.finish + decode);
+        assert!(pipelined >= SimTime::ns(decode.as_ns() * r.quanta));
+    }
+
+    #[test]
+    fn stream_counters_account_p2p_quanta_and_overlap() {
+        let mut f = fabric(4, 1);
+        let h = f.stream(
+            SimTime::ZERO,
+            Endpoint::Node(0),
+            Endpoint::Node(1),
+            1 << 20,
+            256 << 10,
+            KV_STREAM_CLASS,
+        );
+        let r = f.settle_stream(&h);
+        // ingress is not device-to-device
+        let hi = f.stream(
+            f.engine_now(),
+            Endpoint::Host,
+            Endpoint::Node(2),
+            1 << 20,
+            256 << 10,
+            Priority::Foreground,
+        );
+        let ri = f.settle_stream(&hi);
+        let mut c = Counters::new();
+        f.export_counters(&mut c);
+        assert_eq!(c.get(names::FABRIC_BYTES_P2P), 1 << 20);
+        assert_eq!(c.get(names::FABRIC_STREAM_QUANTA), 8);
+        assert_eq!(
+            c.get(names::FABRIC_STREAM_OVERLAP_NS),
+            (r.overlap + ri.overlap).as_ns()
+        );
+        assert!(r.overlap > SimTime::ZERO);
+    }
+
+    #[test]
+    fn stream_quanta_share_the_wire_with_a_competing_tenant() {
+        // a monolithic foreground transfer issued first would hold the
+        // link end-to-end; stream quanta let the competing tenant's
+        // transfer through long before the stream's own tail
+        let mut f = fabric(4, 1);
+        let h = f.stream(
+            SimTime::ZERO,
+            Endpoint::Node(0),
+            Endpoint::Node(1),
+            16 << 20,
+            256 << 10,
+            KV_STREAM_CLASS,
+        );
+        let rival = f.schedule(
+            SimTime::ZERO,
+            Endpoint::Node(2),
+            Endpoint::Node(3),
+            256 << 10,
+            Priority::Tenant { id: 7, weight: 4 },
+        );
+        let r = f.settle_stream(&h);
+        let rv = f.receipt_of(rival).unwrap();
+        assert!(
+            rv.finish < r.finish.scale(0.5),
+            "rival should interleave early: {} vs stream {}",
+            rv.finish,
+            r.finish
+        );
+    }
+
+    #[test]
+    fn same_endpoint_stream_is_free() {
+        let mut f = fabric(4, 1);
+        let h = f.stream(
+            SimTime::us(7),
+            Endpoint::Node(2),
+            Endpoint::Node(2),
+            1 << 20,
+            64 << 10,
+            Priority::Foreground,
+        );
+        let r = f.settle_stream(&h);
+        assert_eq!(r.latency(), SimTime::ZERO);
+        assert_eq!(f.stats.bytes_p2p, 0, "nothing crossed the fabric");
+        let z = f.stream(
+            SimTime::us(7),
+            Endpoint::Node(0),
+            Endpoint::Node(1),
+            0,
+            64 << 10,
+            Priority::Foreground,
+        );
+        assert_eq!(z.quanta(), 1, "zero-byte stream still yields a receipt");
+        assert_eq!(f.settle_stream(&z).bytes, 0);
+    }
+}

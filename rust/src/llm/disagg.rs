@@ -11,7 +11,7 @@ use super::device::DeviceProfile;
 use super::models::{all_llms, LlmConfig};
 use super::parallelism::{find_optimal, OptimalChoice, Parallelism};
 use super::InferenceTime;
-use crate::fabric::{Endpoint, Fabric, Priority, TransferId};
+use crate::fabric::{Endpoint, Fabric, Priority, TransferId, DEFAULT_QUANTUM, KV_STREAM_CLASS};
 use crate::pool::topology::NodeId;
 use crate::util::SimTime;
 
@@ -244,6 +244,88 @@ pub fn schedule_step(
         .collect()
 }
 
+/// One prefill→decode KV handoff priced on the shared fabric, as seen
+/// by the decode side.  All times are makespans from the issue instant.
+#[derive(Clone, Debug)]
+pub struct HandoffReceipt {
+    pub bytes: u64,
+    /// Chunk quanta the handoff was pipelined into.
+    pub quanta: u64,
+    /// Last KV byte landed.
+    pub wire: SimTime,
+    /// Decode consuming quantum `i` while quantum `i+1` is in flight —
+    /// the pipelined shape ([`crate::fabric::StreamReceipt::pipelined_finish`]).
+    pub effective: SimTime,
+    /// The unpipelined shape: decode starts only after the last byte.
+    pub serial: SimTime,
+}
+
+impl HandoffReceipt {
+    /// How much the pipeline shrank the handoff+decode critical path.
+    pub fn speedup(&self) -> f64 {
+        self.serial.as_ns() as f64 / self.effective.as_ns().max(1) as f64
+    }
+}
+
+/// The prefill→decode KV handoff of one disaggregated generation turn:
+/// replica `k`'s prompt KV moves from its last prefill rank
+/// (`base + group - 1`, the rank that finished the prefix — the same
+/// packed-placement simplification as [`step_traffic`]) to its first
+/// decode rank (`base`).  For the D-* scenarios that is one direct
+/// node-to-node leg; with `host_coordinated` (the H-* scenarios) the KV
+/// round-trips through the host instead, paying the uplink twice.
+pub fn handoff_traffic(
+    llm: &LlmConfig,
+    par: Parallelism,
+    seq: u64,
+    batch: u64,
+    host_coordinated: bool,
+) -> Vec<(Endpoint, Endpoint, u64)> {
+    let b_local = ((batch as f64 / par.dp as f64).max(1.0)) as u64;
+    let group = par.tp * par.pp;
+    let mut out = Vec::new();
+    for k in 0..par.dp {
+        let base = k * group;
+        let last = (base + group - 1) as NodeId;
+        let bytes = llm.kv_bytes(seq, b_local, 2.0) as u64;
+        if host_coordinated {
+            out.push((Endpoint::Node(last), Endpoint::Host, bytes));
+            out.push((Endpoint::Host, Endpoint::Node(base as NodeId), bytes));
+        } else {
+            out.push((Endpoint::Node(last), Endpoint::Node(base as NodeId), bytes));
+        }
+    }
+    out
+}
+
+/// Carry each handoff leg as a pipelined stream of [`DEFAULT_QUANTUM`]
+/// chunk quanta on the [`KV_STREAM_CLASS`] WFQ class, and price the
+/// decode side both ways: `effective` overlaps decoding quantum `i`
+/// with the fetch of quantum `i+1` (`decode_step` of compute per
+/// quantum), `serial` waits for the last byte.  The overlap between the
+/// two is the step-time reduction the fig12/13 extension reports.
+pub fn stream_handoffs(
+    fabric: &mut Fabric,
+    now: SimTime,
+    traffic: &[(Endpoint, Endpoint, u64)],
+    decode_step: SimTime,
+) -> Vec<HandoffReceipt> {
+    traffic
+        .iter()
+        .map(|&(from, to, bytes)| {
+            let h = fabric.stream(now, from, to, bytes, DEFAULT_QUANTUM, KV_STREAM_CLASS);
+            let r = fabric.settle_stream(&h);
+            HandoffReceipt {
+                bytes,
+                quanta: r.quanta,
+                wire: r.finish.saturating_sub(now),
+                effective: r.pipelined_finish(decode_step).saturating_sub(now),
+                serial: r.serial_finish(decode_step).saturating_sub(now),
+            }
+        })
+        .collect()
+}
+
 /// Re-price a scenario's communication on the shared fabric: compute
 /// and memory come from the analytic model, but `comm` becomes the time
 /// the fabric actually granted one step's traffic (scaled to the full
@@ -398,6 +480,45 @@ mod tests {
         f.export_counters(&mut c);
         assert!(c.get(names::FABRIC_BYTES_HOST_UPLINK) > 0);
         assert!(c.get(names::FABRIC_BYTES_ARRAY) > 0);
+    }
+
+    #[test]
+    fn pipelined_handoff_overlaps_decode_with_fetch() {
+        use crate::metrics::{names, Counters};
+        let llm = all_llms().remove(0);
+        let par = Parallelism { dp: 1, tp: 4, pp: 1 };
+        // a 64-token prefix of the 137B model is ~128MiB of KV —
+        // hundreds of chunk quanta
+        let traffic = handoff_traffic(&llm, par, 64, 1, false);
+        assert_eq!(traffic.len(), 1, "one direct leg per replica");
+        let mut f = fabric16();
+        let rs = stream_handoffs(&mut f, SimTime::ZERO, &traffic, SimTime::us(50));
+        let r = &rs[0];
+        assert!(r.quanta > 1);
+        assert!(r.wire > SimTime::ZERO);
+        assert!(r.effective < r.serial, "pipelining must shrink the critical path");
+        assert!(r.speedup() > 1.0);
+        let mut c = Counters::new();
+        f.export_counters(&mut c);
+        assert_eq!(c.get(names::FABRIC_BYTES_HOST_UPLINK), 0, "D-* handoff stays in the pool");
+        assert_eq!(c.get(names::FABRIC_BYTES_P2P), r.bytes);
+        assert_eq!(c.get(names::FABRIC_STREAM_QUANTA), r.quanta);
+    }
+
+    #[test]
+    fn host_coordinated_handoff_pays_the_uplink_twice() {
+        use crate::metrics::{names, Counters};
+        let llm = all_llms().remove(0);
+        let par = Parallelism { dp: 2, tp: 2, pp: 1 };
+        let traffic = handoff_traffic(&llm, par, 64, 2, true);
+        assert_eq!(traffic.len(), 4, "two replicas x two host legs each");
+        let mut f = fabric16();
+        let rs = stream_handoffs(&mut f, SimTime::ZERO, &traffic, SimTime::us(50));
+        let total: u64 = rs.iter().map(|r| r.bytes).sum();
+        let mut c = Counters::new();
+        f.export_counters(&mut c);
+        assert_eq!(c.get(names::FABRIC_BYTES_HOST_UPLINK), total, "KV rides the uplink twice");
+        assert_eq!(c.get(names::FABRIC_BYTES_P2P), 0, "host legs are not peer streams");
     }
 
     #[test]

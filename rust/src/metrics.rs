@@ -146,6 +146,15 @@ pub mod names {
     pub const FABRIC_LINK_FLAPS: &str = "fabric.link_flaps";
     /// Total time any link spent in a degraded-bandwidth window.
     pub const FABRIC_BROWNOUT_NS: &str = "fabric.brownout_ns";
+    /// Bytes that moved device-to-device (both stream endpoints in the
+    /// pool) — traffic that never touched the host uplink.
+    pub const FABRIC_BYTES_P2P: &str = "fabric.bytes_p2p";
+    /// Chunk quanta issued by `fabric::stream` pipelines.
+    pub const FABRIC_STREAM_QUANTA: &str = "fabric.stream_quanta";
+    /// Consumer head start exposed by stream pipelining: for each settled
+    /// stream, the sum over its non-final quanta of (stream finish −
+    /// quantum finish).  A monolithic transfer exposes zero.
+    pub const FABRIC_STREAM_OVERLAP_NS: &str = "fabric.stream_overlap_ns";
 
     // Canonical names for the [`crate::sim`] event core.
     /// Events whose requested firing time was in the past and got
@@ -173,6 +182,10 @@ pub mod names {
     pub const SERVE_MAKESPAN_NS: &str = "serve.makespan_ns";
     pub const SERVE_LATENCY_MEAN_NS: &str = "serve.latency_mean_ns";
     pub const SERVE_LATENCY_P99_NS: &str = "serve.latency_p99_ns";
+    /// Host-uplink bytes the serve loop charged (ingress prompts +
+    /// response control) divided by tokens served — the headline
+    /// device-to-device streaming metric.
+    pub const SERVE_HOST_BYTES_PER_TOKEN: &str = "serve.host_bytes_per_token";
 
     // Canonical names for the [`crate::chaos`] fault-injection engine
     // and the self-healing loop it drives.  Chaos counters describe the

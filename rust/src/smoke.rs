@@ -273,6 +273,23 @@ mod tests {
     }
 
     #[test]
+    fn smoke_reports_host_bytes_and_stream_counters() {
+        // the CI scenario serves under the default streamed wire policy,
+        // so the new stream/host-traffic counters must ride the existing
+        // serve./fabric. grep prefixes of ci/serve_smoke.sh untouched
+        let a = run(&SmokeParams::ci()).unwrap();
+        let lines = counter_lines(&a.counters);
+        assert!(lines.contains("serve.host_bytes_per_token"));
+        assert!(lines.contains("fabric.bytes_p2p"));
+        assert!(lines.contains("fabric.stream_quanta"));
+        assert!(lines.contains("fabric.stream_overlap_ns"));
+        assert!(
+            a.counters.get(crate::metrics::names::SERVE_HOST_BYTES_PER_TOKEN) > 0,
+            "responses alone put host bytes on every served token"
+        );
+    }
+
+    #[test]
     fn counter_lines_filters_to_deterministic_counters() {
         let mut c = Counters::new();
         c.add(crate::metrics::names::SERVE_RESPONSES, 7);

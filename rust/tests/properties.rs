@@ -1082,3 +1082,216 @@ fn prop_calendar_queue_matches_reference_heap() {
         assert_eq!(q.len(), 0);
     }
 }
+
+// --- device-to-device stream invariants (ISSUE 8) ---------------------------
+
+/// Stream conservation (ISSUE 8): a pipelined stream is a *schedule* of
+/// the same bytes, not a discount — under arbitrary competing traffic
+/// it never completes earlier than the equivalent monolithic transfer
+/// on an identically loaded twin fabric.  Tolerance: `wire_time`
+/// truncates to whole ns per quantum per link, so a stream may
+/// legitimately land up to `path_len x quanta` ns early.
+#[test]
+fn prop_stream_never_beats_monolithic_under_contention() {
+    use dockerssd::config::{EtherOnConfig, PoolConfig};
+    use dockerssd::fabric::{Endpoint, Fabric, Priority};
+
+    let mut rng = Rng::new(88);
+    for case in 0..scaled(100) {
+        let pcfg = PoolConfig {
+            nodes_per_array: 4,
+            arrays: 2,
+            ..Default::default()
+        };
+        let mut fs = Fabric::new(&pcfg, &EtherOnConfig::default());
+        let mut fm = Fabric::new(&pcfg, &EtherOnConfig::default());
+        // identical competing traffic lands on both fabrics
+        for _ in 0..rng.below(5) {
+            let at = SimTime::ns(rng.below(2_000_000));
+            let (a, b) = (rng.below(8) as u32, rng.below(8) as u32);
+            let bytes = rng.below(16 << 20) + 1;
+            let pri = match rng.below(3) {
+                0 => Priority::Foreground,
+                1 => Priority::Background,
+                _ => Priority::Tenant {
+                    id: rng.below(4) as u8,
+                    weight: 1 + rng.below(8) as u8,
+                },
+            };
+            fs.schedule(at, Endpoint::Node(a), Endpoint::Node(b), bytes, pri);
+            fm.schedule(at, Endpoint::Node(a), Endpoint::Node(b), bytes, pri);
+        }
+        let bytes = rng.below(8 << 20) + 1;
+        let quantum = 1 + rng.below(1 << 20);
+        // cross-array: the longest (3-link) path
+        let (from, to) = (Endpoint::Node(0), Endpoint::Node(5));
+        let h = fs.stream(SimTime::ZERO, from, to, bytes, quantum, Priority::Foreground);
+        let r = fs.settle_stream(&h);
+        let id = fm.schedule(SimTime::ZERO, from, to, bytes, Priority::Foreground);
+        let m = fm.settle(id).expect("freshly scheduled id settles");
+        let tolerance = SimTime::ns(3 * r.quanta);
+        assert!(
+            r.finish + tolerance >= m.finish,
+            "case {case}: stream finished {} vs monolithic {} (bytes {bytes}, quantum \
+             {quantum}, {} quanta) — pipelining must not create bandwidth",
+            r.finish,
+            m.finish,
+            r.quanta
+        );
+    }
+}
+
+/// Stream determinism (ISSUE 8): a serve run whose KV skew forces
+/// streamed migrations replays byte-identically — `fabric.bytes_p2p`,
+/// `fabric.stream_quanta`, `fabric.stream_overlap_ns`, and
+/// `serve.host_bytes_per_token` included — and the streams verifiably
+/// ran (quanta on the wire, zero uplink bytes beyond dispatch/response
+/// control).
+#[test]
+fn prop_streamed_serve_same_seed_byte_identical() {
+    use dockerssd::config::{EtherOnConfig, PoolConfig};
+    use dockerssd::coordinator::{serve, EchoExecutor, ServeParams};
+    use dockerssd::metrics::{names, Counters};
+    use dockerssd::sim::PoolSim;
+
+    for seed in [3u64, 11, 77] {
+        let run = |seed: u64| {
+            let mut sim = PoolSim::with_pool(
+                &PoolConfig {
+                    nodes_per_array: 4,
+                    arrays: 1,
+                    ..Default::default()
+                },
+                &EtherOnConfig::default(),
+            );
+            let mut rng = Rng::new(seed);
+            // one KV-heavy request leaves a multi-quantum resident
+            // session; the short tail skews residency and triggers
+            // streamed migrations
+            let mut requests = vec![(
+                SimTime::ZERO,
+                InferenceRequest { id: 0, prompt: vec![1; 8], max_new_tokens: 400 },
+            )];
+            for k in 1..=6u64 {
+                requests.push((
+                    SimTime::us(k * 7_000 + rng.below(1_000)),
+                    InferenceRequest {
+                        id: k,
+                        prompt: vec![rng.next_u64() as i32 & 0x7FFF; 8],
+                        max_new_tokens: 1 + rng.below(3) as usize,
+                    },
+                ));
+            }
+            let factories: Vec<_> = (0..2)
+                .map(|_| || Ok::<_, anyhow::Error>(EchoExecutor))
+                .collect();
+            let params = ServeParams {
+                batch_width: 1,
+                prompt_len: 8,
+                batch_window: SimTime::us(10),
+                ..Default::default()
+            };
+            let report = serve(&mut sim, factories, requests, &params);
+            let mut c = Counters::new();
+            report.export_counters(&mut c);
+            sim.export_counters(&mut c);
+            (c, report.kv_migrations)
+        };
+        let (c1, mig1) = run(seed);
+        let (c2, mig2) = run(seed);
+        assert_eq!(c1, c2, "seed {seed}: streamed counters diverged");
+        assert_eq!(mig1, mig2, "seed {seed}: migration count diverged");
+        assert!(mig1 >= 1, "seed {seed}: the skew must force a migration");
+        assert!(
+            c1.get(names::FABRIC_STREAM_QUANTA) > 1,
+            "seed {seed}: the migration must pipeline into quanta"
+        );
+        assert!(c1.get(names::FABRIC_BYTES_P2P) > 0, "seed {seed}");
+        assert!(c1.get(names::SERVE_HOST_BYTES_PER_TOKEN) > 0, "seed {seed}");
+    }
+}
+
+/// Chaos mid-stream (ISSUE 8): a node death landing while session KV is
+/// migrating as stream quanta neither loses nor double-delivers any
+/// session's response, for random death times and victims — and the
+/// streamed migration path verifiably ran.
+#[test]
+fn prop_chaos_node_death_mid_stream_never_loses_a_session() {
+    use dockerssd::chaos::{ChaosInjector, ChaosSchedule, Fault, FaultKind};
+    use dockerssd::config::{EtherOnConfig, PoolConfig};
+    use dockerssd::coordinator::{serve_with_hook, EchoExecutor, ServeParams};
+    use dockerssd::layerstore::PoolLayerCache;
+    use dockerssd::metrics::{names, Counters};
+    use dockerssd::pool::{Orchestrator, PoolTopology, RestartPolicy};
+    use dockerssd::sim::PoolSim;
+
+    let mut rng = Rng::new(0x5EED);
+    for case in 0..scaled(8) {
+        let pcfg = PoolConfig {
+            nodes_per_array: 4,
+            arrays: 1,
+            ..Default::default()
+        };
+        let topo = PoolTopology::build(&pcfg);
+        let mut sim = PoolSim::with_pool(&pcfg, &EtherOnConfig::default());
+        // same KV-pressure shape as the determinism property: the big
+        // session streams between nodes while the fault fires
+        let mut requests = vec![(
+            SimTime::ZERO,
+            InferenceRequest { id: 0, prompt: vec![1; 8], max_new_tokens: 400 },
+        )];
+        for k in 1..=6u64 {
+            requests.push((
+                SimTime::us(k * 7_000),
+                InferenceRequest {
+                    id: k,
+                    prompt: vec![k as i32; 8],
+                    max_new_tokens: 1 + rng.below(3) as usize,
+                },
+            ));
+        }
+        let n = requests.len();
+        // death lands inside the serve window, on a random victim
+        let schedule = ChaosSchedule {
+            seed: case,
+            faults: vec![Fault {
+                at: SimTime::us(15_000 + rng.below(30_000)),
+                kind: FaultKind::NodeDeath { node: rng.below(4) as u32 },
+            }],
+        };
+        let mut inj = ChaosInjector::new(
+            schedule,
+            topo,
+            Orchestrator::new(),
+            PoolLayerCache::new(),
+            2,
+            RestartPolicy::OnFailure,
+        );
+        inj.arm(&mut sim);
+        let factories: Vec<_> = (0..2)
+            .map(|_| || Ok::<_, anyhow::Error>(EchoExecutor))
+            .collect();
+        let params = ServeParams {
+            batch_width: 1,
+            prompt_len: 8,
+            batch_window: SimTime::us(10),
+            ..Default::default()
+        };
+        let report = serve_with_hook(&mut sim, factories, requests, &params, &mut inj);
+        let out = inj.finish(&mut sim);
+        assert_eq!(out.report.node_deaths, 1, "case {case}: the fault fired");
+        let mut ids: Vec<u64> = report.responses.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        let before = ids.len();
+        ids.dedup();
+        assert_eq!(ids.len(), before, "case {case}: a session was double-delivered");
+        assert_eq!(ids.len(), n, "case {case}: the death lost a session");
+        assert!(report.kv_migrations >= 1, "case {case}: the skew must force a migration");
+        let mut c = Counters::new();
+        sim.export_counters(&mut c);
+        assert!(
+            c.get(names::FABRIC_STREAM_QUANTA) > 1,
+            "case {case}: the migration must have streamed"
+        );
+    }
+}
