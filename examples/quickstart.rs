@@ -10,8 +10,8 @@
 
 use dockerssd::config::SystemConfig;
 use dockerssd::docker::{MiniDocker, Registry};
-use dockerssd::fabric::Fabric;
 use dockerssd::firmware::VirtualFw;
+use dockerssd::pool::WireRig;
 use dockerssd::lambdafs::{LambdaFs, LockSide};
 use dockerssd::ssd::SsdDevice;
 use dockerssd::util::SimTime;
@@ -41,9 +41,9 @@ fn main() {
     // 3. pull + run the ISP container (registry bytes cross the pool fabric)
     let reg = Registry::with_benchmark_images();
     let mut md = MiniDocker::new();
-    let mut fab = Fabric::of(&cfg);
+    let mut rig = WireRig::new(&cfg.pool, &cfg.etheron);
     let pulled = md
-        .pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab, 0, w.done, "pattern")
+        .pull(&mut fw, &mut fs, &mut dev, &reg, &mut rig.ctx(w.done), 0, "pattern")
         .unwrap();
     let run = md.run(&mut fw, &mut fs, &mut dev, pulled.done, "pattern").unwrap();
     let id = run.output.clone();

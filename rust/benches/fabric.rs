@@ -12,7 +12,7 @@ use dockerssd::layerstore::PoolLayerCache;
 use dockerssd::llm::disagg::{pool_step_time, step_traffic};
 use dockerssd::llm::{all_llms, Parallelism};
 use dockerssd::metrics::Table;
-use dockerssd::pool::PoolTopology;
+use dockerssd::pool::{FtlBank, PoolTopology, WireCtx};
 use dockerssd::util::SimTime;
 
 fn pool_cfg(nodes_per_array: u32, arrays: u32) -> PoolConfig {
@@ -141,7 +141,13 @@ fn tenant_mix(records: &mut Vec<BenchRecord>) {
     let mut cache = PoolLayerCache::new();
     cache.register(8, 0xF00D);
     let layer_bytes = 8 << 20;
-    let (_, fetch_lat) = cache.fetch(&mut mixed, &topo, SimTime::ZERO, 9, 0xF00D, layer_bytes);
+    let mut bank = FtlBank::default();
+    let (_, fetch_lat) = cache.fetch(
+        &mut WireCtx::at(&mut mixed, &topo, &mut bank, SimTime::ZERO),
+        9,
+        0xF00D,
+        layer_bytes,
+    );
     let step_mixed = pool_step_time(&mut mixed, SimTime::ZERO, &traffic);
 
     println!(

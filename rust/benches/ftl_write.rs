@@ -1,0 +1,130 @@
+//! FTL write-path economics: fill vs churn on the per-node flash
+//! ledger ([`dockerssd::pool::FtlBank`]).
+//!
+//! A sequential fill of the logical span programs every page exactly
+//! once (WAF 1.0, no GC); sustained churn past the span forces garbage
+//! collection, so relocated pages inflate WAF above 1.0 and block
+//! erases raise `wear_max`.  The invariant metrics (`waf_floor`,
+//! `wear_monotone`, `same_seed_identical`) are pinned at 1.0 in
+//! `bench_baselines/BENCH_ftl_write.json`; the shape metrics
+//! (`waf_milli`, `wear_max`, `gc_relocated_pages`, `ns_per_op`) are
+//! recorded but not compared, tracking the model as it evolves.
+//! Emits machine-readable `BENCH_ftl_write.json`.
+
+use dockerssd::benchkit::{bench, emit_json, section, BenchRecord};
+use dockerssd::metrics::{names, Counters, Table};
+use dockerssd::pool::FtlBank;
+use dockerssd::util::SimTime;
+
+const PAGE: u64 = 64 << 10;
+
+/// Sequential fill: one pass over the logical span, 1 MiB writes.
+fn fill(records: &mut Vec<BenchRecord>) {
+    section("fill: one sequential pass, no GC");
+    let mut bank = FtlBank::default();
+    let span_bytes = bank.logical_span() * PAGE;
+    let mut t = SimTime::ZERO;
+    let mut written = 0u64;
+    while written < span_bytes {
+        let r = bank.write(0, t, 1 << 20);
+        t = r.done;
+        written += 1 << 20;
+    }
+    let waf = bank.waf_milli_of(0);
+    println!(
+        "filled {written} bytes, WAF {:.3}x, wear_max {}",
+        waf as f64 / 1000.0,
+        bank.wear_max_of(0)
+    );
+    assert_eq!(waf, 1000, "a single sequential pass relocates nothing");
+    records.push(BenchRecord::new("ftl_fill", "waf_milli", waf as f64));
+}
+
+/// Churn: 3x the logical span in 4 MiB writes — GC must run, WAF
+/// rises above 1.0, wear accrues monotonically.
+fn churn(records: &mut Vec<BenchRecord>) {
+    section("churn: 3x span overwrite forces GC");
+    let run = || {
+        let mut bank = FtlBank::default();
+        let span_bytes = bank.logical_span() * PAGE;
+        let mut t = SimTime::ZERO;
+        let mut written = 0u64;
+        let mut wear_floor = 0u64;
+        let mut monotone = true;
+        while written < 3 * span_bytes {
+            let r = bank.write(0, t, 4 << 20);
+            t = r.done;
+            written += 4 << 20;
+            let w = bank.wear_max_of(0);
+            monotone &= w >= wear_floor;
+            wear_floor = w;
+        }
+        let mut c = Counters::new();
+        bank.export_counters(&mut c);
+        (c, monotone)
+    };
+    let (c, monotone) = run();
+    let (c2, monotone2) = run();
+
+    let mut table = Table::new(vec!["counter", "value"]);
+    for key in [
+        names::FTL_WAF,
+        names::FTL_WEAR_MAX,
+        names::FTL_GC_RELOCATED,
+        names::FTL_HOST_PAGES,
+        names::FTL_ERASES,
+    ] {
+        table.row(vec![key.to_string(), format!("{}", c.get(key))]);
+    }
+    println!("{}", table.render());
+
+    let waf = c.get(names::FTL_WAF);
+    assert!(waf > 1000, "3x-span churn must relocate live pages: WAF {waf}");
+    assert!(c.get(names::FTL_GC_RELOCATED) > 0, "GC must have run");
+    assert!(c.get(names::FTL_ERASES) > 0, "GC must erase victim blocks");
+    assert!(monotone && monotone2, "wear_max must never decrease");
+    assert_eq!(c, c2, "same traffic must price to the same ledger");
+
+    // invariants: pinned at 1.0 in the committed baseline, so any
+    // violation shows up as a benchdiff regression too
+    records.push(BenchRecord::new(
+        "ftl_churn",
+        "waf_floor",
+        if waf >= 1000 { 1.0 } else { 0.0 },
+    ));
+    records.push(BenchRecord::new(
+        "ftl_churn",
+        "wear_monotone",
+        if monotone && monotone2 { 1.0 } else { 0.0 },
+    ));
+    records.push(BenchRecord::new(
+        "ftl_churn",
+        "same_seed_identical",
+        if c == c2 { 1.0 } else { 0.0 },
+    ));
+    // shape: recorded, not compared — the flash model will move these
+    records.push(BenchRecord::new("ftl_churn", "waf_milli", waf as f64));
+    records.push(BenchRecord::new("ftl_churn", "wear_max", c.get(names::FTL_WEAR_MAX) as f64));
+    records.push(BenchRecord::new(
+        "ftl_churn",
+        "gc_relocated_pages",
+        c.get(names::FTL_GC_RELOCATED) as f64,
+    ));
+}
+
+fn main() {
+    let mut records = Vec::new();
+    fill(&mut records);
+    churn(&mut records);
+
+    section("hot path: FtlBank::write");
+    let mut bank = FtlBank::default();
+    let mut t = SimTime::ZERO;
+    let r = bench("ftl_bank_write_64k", || {
+        let w = bank.write(0, t, 64 << 10);
+        t = w.done;
+    });
+    records.push(BenchRecord::new("ftl_bank_write_64k", "ns_per_op", r.mean.as_nanos() as f64));
+
+    emit_json("BENCH_ftl_write.json", &records).expect("write BENCH_ftl_write.json");
+}

@@ -20,7 +20,9 @@ use dockerssd::firmware::VirtualFw;
 use dockerssd::lambdafs::{LambdaFs, LockSide};
 use dockerssd::layerstore::{LayerStore, PoolLayerCache};
 use dockerssd::metrics::{names, Counters, Table};
-use dockerssd::pool::{DeploymentSpec, Orchestrator, PoolTopology, RestartPolicy};
+use dockerssd::pool::{
+    DeploymentSpec, FtlBank, Orchestrator, PoolTopology, RestartPolicy, WireCtx,
+};
 use dockerssd::ssd::SsdDevice;
 use dockerssd::util::{human_bytes, SimTime};
 
@@ -85,7 +87,8 @@ fn boot_registry_only(
     reg: &Registry,
     _image_bytes: u64,
 ) -> (u64, SimTime) {
-    let (_topo, mut fabric, mut nodes) = pool(nnodes);
+    let (topo, mut fabric, mut nodes) = pool(nnodes);
+    let mut bank = FtlBank::default();
     let mut total = SimTime::ZERO;
     for r in 0..replicas {
         let nid = r % nnodes;
@@ -93,7 +96,12 @@ fn boot_registry_only(
         let pulled = node
             .md
             .pull(
-                &mut node.fw, &mut node.fs, &mut node.dev, reg, &mut fabric, nid, SimTime::ZERO,
+                &mut node.fw,
+                &mut node.fs,
+                &mut node.dev,
+                reg,
+                &mut WireCtx::at(&mut fabric, &topo, &mut bank, SimTime::ZERO),
+                nid,
                 "svc",
             )
             .expect("pull");
@@ -130,8 +138,14 @@ fn boot_via_layerstore(
         replicas,
         restart: RestartPolicy::OnFailure,
     };
+    let mut bank = FtlBank::default();
     let placed = orch
-        .deploy_with_layers(&topo, &mut fabric, &spec, cache, &layers, SimTime::ZERO)
+        .deploy_with_layers(
+            &mut WireCtx::at(&mut fabric, &topo, &mut bank, SimTime::ZERO),
+            &spec,
+            cache,
+            &layers,
+        )
         .expect("placement");
 
     let mut total = SimTime::ZERO;
@@ -142,9 +156,7 @@ fn boot_via_layerstore(
             // placement already prefetched the layer over the fabric's
             // background lane; boot-time fetch is a (free) local hit
             let (_src, xfer) = cache.fetch(
-                &mut fabric,
-                &topo,
-                t,
+                &mut WireCtx::at(&mut fabric, &topo, &mut bank, t),
                 nid,
                 blob.digest,
                 blob.bytes.len() as u64,
@@ -195,6 +207,7 @@ fn boot_via_layerstore(
     }
     cache.export_counters(counters);
     fabric.export_counters(counters);
+    bank.export_counters(counters);
     (cache.bytes_from_registry, total.scale(1.0 / replicas as f64))
 }
 
@@ -271,6 +284,8 @@ fn main() {
                 names::FABRIC_QUEUE_WAIT_NS,
                 names::FABRIC_PREFETCH_BYTES,
                 names::FABRIC_PREFETCH_HIDDEN,
+                names::FTL_HOST_PAGES,
+                names::FTL_WAF,
             ] {
                 ct.row(vec![key.to_string(), format!("{}", counters.get(key))]);
             }

@@ -32,7 +32,7 @@ use super::schedule::{ChaosSchedule, FaultKind};
 use crate::coordinator::ServeHook;
 use crate::fabric::LinkClass;
 use crate::layerstore::PoolLayerCache;
-use crate::pool::{NodeId, Orchestrator, PoolTopology, RestartPolicy};
+use crate::pool::{NodeId, Orchestrator, PoolTopology, RestartPolicy, WireCtx};
 use crate::sim::{tag, tag_kind, tag_payload, PoolSim};
 use crate::util::SimTime;
 
@@ -231,8 +231,11 @@ impl ChaosInjector {
             self.heal.dead_nodes_purged += 1;
             orphans.extend(purge.orphaned_chunks);
         }
-        let stats =
-            self.cache.rereplicate_chunks(&mut sim.fabric, &self.topo, now, self.k, &orphans);
+        let stats = self.cache.rereplicate_chunks(
+            &mut WireCtx::at(&mut sim.fabric, &self.topo, &mut sim.ftls, now),
+            self.k,
+            &orphans,
+        );
         self.heal.absorb(stats);
     }
 
@@ -245,7 +248,11 @@ impl ChaosInjector {
         for idx in open {
             self.close_window(sim, now, idx);
         }
-        let stats = self.cache.rereplicate_chunks(&mut sim.fabric, &self.topo, now, self.k, &[]);
+        let stats = self.cache.rereplicate_chunks(
+            &mut WireCtx::at(&mut sim.fabric, &self.topo, &mut sim.ftls, now),
+            self.k,
+            &[],
+        );
         self.heal.absorb(stats);
         self.heal.settle(&mut sim.fabric);
         let cfg = self.topo.config();
@@ -300,7 +307,12 @@ mod tests {
         let recipe: Vec<(u64, u64)> = (0..4u64).map(|i| (0xC40 + i, 1 << 20)).collect();
         assert!(cache.describe_chunks(0xB10B, &recipe));
         for node in [0u32, 1] {
-            cache.fetch(&mut sim.fabric, &topo, SimTime::ZERO, node, 0xB10B, 4 << 20);
+            cache.fetch(
+                &mut WireCtx::at(&mut sim.fabric, &topo, &mut sim.ftls, SimTime::ZERO),
+                node,
+                0xB10B,
+                4 << 20,
+            );
         }
         orch.deploy(
             &topo,
@@ -387,7 +399,12 @@ mod tests {
         let mut cache = PoolLayerCache::new();
         // both copies live in array 0 (nodes 0 and 1)
         for node in [0u32, 1] {
-            cache.fetch(&mut sim.fabric, &topo, SimTime::ZERO, node, 0x99, 2 << 20);
+            cache.fetch(
+                &mut WireCtx::at(&mut sim.fabric, &topo, &mut sim.ftls, SimTime::ZERO),
+                node,
+                0x99,
+                2 << 20,
+            );
         }
         let schedule = ChaosSchedule {
             seed: 0,

@@ -203,6 +203,9 @@ pub struct ServeConfig {
     /// LLM whose geometry sizes per-token KV (an `llm::all_llms` name);
     /// empty means the default synthetic per-token footprint.
     pub kv_model: String,
+    /// Which bytes ride which links: "streamed" (default) or "hairpin"
+    /// (the pre-stream baseline shape).
+    pub wire: String,
     /// Echo generated tokens to stdout.
     pub verbose: bool,
 }
@@ -223,8 +226,90 @@ impl Default for ServeConfig {
             trace_scale: 10_000,
             boot_storm: 0,
             kv_model: String::new(),
+            wire: "streamed".into(),
             verbose: true,
         }
+    }
+}
+
+impl ServeConfig {
+    /// Start a serve config for one Table 2 trace row (or `""` for the
+    /// uniform-random storm) and tune it with the consuming builder:
+    ///
+    /// ```
+    /// use dockerssd::config::ServeConfig;
+    /// let c = ServeConfig::for_workload("rocksdb-write")
+    ///     .batch_width(8)
+    ///     .nodes(4)
+    ///     .wire("streamed");
+    /// assert_eq!(c.workload, "rocksdb-write");
+    /// assert_eq!(c.batch_width, 8);
+    /// ```
+    ///
+    /// Every field stays `pub`; the builder is sugar over struct-update
+    /// syntax, not an encapsulation layer.
+    pub fn for_workload(row: impl Into<String>) -> Self {
+        ServeConfig { workload: row.into(), ..Default::default() }
+    }
+
+    /// Engine batch width the batcher packs to (clamped to >= 1 at use).
+    pub fn batch_width(mut self, w: u32) -> Self {
+        self.batch_width = w;
+        self
+    }
+
+    /// Number of pool nodes to serve from.
+    pub fn nodes(mut self, n: u32) -> Self {
+        self.nodes = n;
+        self
+    }
+
+    /// Per-node KV capacity in MiB; 0 means unbounded.
+    pub fn kv_capacity_mib(mut self, mib: u64) -> Self {
+        self.kv_capacity_mib = mib;
+        self
+    }
+
+    /// Replicas to boot on the shared clock while serving.
+    pub fn boot_storm(mut self, replicas: u32) -> Self {
+        self.boot_storm = replicas;
+        self
+    }
+
+    /// Trace scale factor for workload replays (ops = counts / scale).
+    pub fn trace_scale(mut self, scale: u64) -> Self {
+        self.trace_scale = scale;
+        self
+    }
+
+    /// LLM whose geometry sizes per-token KV.
+    pub fn kv_model(mut self, model: impl Into<String>) -> Self {
+        self.kv_model = model.into();
+        self
+    }
+
+    /// Wire policy name: "streamed" or "hairpin".
+    pub fn wire(mut self, policy: impl Into<String>) -> Self {
+        self.wire = policy.into();
+        self
+    }
+
+    /// Batch window before a partial batch launches (simulated us).
+    pub fn batch_timeout_us(mut self, us: u64) -> Self {
+        self.batch_timeout_us = us;
+        self
+    }
+
+    /// Max new tokens per request.
+    pub fn max_new_tokens(mut self, n: u32) -> Self {
+        self.max_new_tokens = n;
+        self
+    }
+
+    /// Echo generated tokens to stdout.
+    pub fn verbose(mut self, on: bool) -> Self {
+        self.verbose = on;
+        self
     }
 }
 
@@ -330,6 +415,7 @@ impl SystemConfig {
             get_field!(s, cfg.serve, trace_scale, u64);
             get_field!(s, cfg.serve, boot_storm, u32);
             get_field!(s, cfg.serve, kv_model, String);
+            get_field!(s, cfg.serve, wire, String);
             get_field!(s, cfg.serve, verbose, bool);
         }
         Ok(cfg)
@@ -415,6 +501,7 @@ impl SystemConfig {
                     ("trace_scale", Json::Int(self.serve.trace_scale as i64)),
                     ("boot_storm", Json::Int(self.serve.boot_storm as i64)),
                     ("kv_model", Json::str(self.serve.kv_model.clone())),
+                    ("wire", Json::str(self.serve.wire.clone())),
                     ("verbose", Json::Bool(self.serve.verbose)),
                 ]),
             ),
@@ -475,6 +562,44 @@ mod tests {
         assert_eq!(c.serve.token_compute_us, 75);
         assert_eq!(c.serve.kv_capacity_mib, 256);
         assert_eq!(c.serve.prompt_len, 32, "untouched fields keep defaults");
+    }
+
+    #[test]
+    fn builder_matches_struct_literal() {
+        let built = ServeConfig::for_workload("rocksdb-write")
+            .batch_width(8)
+            .nodes(4)
+            .kv_capacity_mib(256)
+            .boot_storm(2)
+            .trace_scale(5000)
+            .kv_model("lamda-137B")
+            .wire("hairpin")
+            .batch_timeout_us(1500)
+            .max_new_tokens(16)
+            .verbose(false);
+        let literal = ServeConfig {
+            workload: "rocksdb-write".into(),
+            batch_width: 8,
+            nodes: 4,
+            kv_capacity_mib: 256,
+            boot_storm: 2,
+            trace_scale: 5000,
+            kv_model: "lamda-137B".into(),
+            wire: "hairpin".into(),
+            batch_timeout_us: 1500,
+            max_new_tokens: 16,
+            verbose: false,
+            ..Default::default()
+        };
+        assert_eq!(built, literal, "builder is sugar, not a second code path");
+        assert_eq!(ServeConfig::default().wire, "streamed");
+    }
+
+    #[test]
+    fn serve_wire_field_loads() {
+        let c = SystemConfig::from_json_str(r#"{"serve": {"wire": "hairpin"}}"#).unwrap();
+        assert_eq!(c.serve.wire, "hairpin");
+        assert_eq!(SystemConfig::default().serve.wire, "streamed");
     }
 
     #[test]

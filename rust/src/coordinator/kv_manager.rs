@@ -14,6 +14,7 @@
 //! the host-uplink regression test compare against.
 
 use crate::fabric::{Endpoint, Fabric, Priority, TransferReceipt, DEFAULT_QUANTUM, KV_STREAM_CLASS};
+use crate::pool::devices::FtlBank;
 use crate::util::SimTime;
 
 /// Per-node KV accounting (bytes).
@@ -88,9 +89,16 @@ impl KvManager {
     /// `to` lacks capacity; residency accounting moves with the bytes
     /// on success.  A same-node "move" is a free no-op (the destination
     /// never needs transient headroom for bytes it already holds).
+    ///
+    /// KV that lands on `to` re-programs its flash: the moved bytes are
+    /// charged to the destination's FTL ledger (`ftls`) on its
+    /// write-back lane, so rebalancing churn shows up as pool-level WAF
+    /// and wear without touching the stream's wire timing.
+    #[allow(clippy::too_many_arguments)]
     pub fn migrate(
         &mut self,
         fabric: &mut Fabric,
+        ftls: &mut FtlBank,
         now: SimTime,
         from: u32,
         to: u32,
@@ -106,6 +114,7 @@ impl KvManager {
                 Priority::Foreground,
             ));
         }
+        ftls.write(to, now, bytes);
         let handle = fabric.stream(
             now,
             Endpoint::Node(from),
@@ -122,15 +131,19 @@ impl KvManager {
     /// residency semantics to [`KvManager::migrate`]; kept as the
     /// baseline the d2d-stream bench and the host-uplink regression
     /// test run against.
+    #[allow(clippy::too_many_arguments)]
     pub fn migrate_monolithic(
         &mut self,
         fabric: &mut Fabric,
+        ftls: &mut FtlBank,
         now: SimTime,
         from: u32,
         to: u32,
         bytes: u64,
     ) -> Option<TransferReceipt> {
-        self.book_move(from, to, bytes)?;
+        if self.book_move(from, to, bytes)? {
+            ftls.write(to, now, bytes);
+        }
         Some(fabric.transfer(
             now,
             Endpoint::Node(from),
@@ -239,24 +252,29 @@ mod tests {
             },
             &EtherOnConfig::default(),
         );
+        let mut bank = FtlBank::default();
         let mut kv = KvManager::new(4, 1000);
         kv.reserve(0, 800);
-        let r = kv.migrate(&mut f, SimTime::ZERO, 0, 1, 500).unwrap();
+        let r = kv.migrate(&mut f, &mut bank, SimTime::ZERO, 0, 1, 500).unwrap();
         assert!(r.finish > SimTime::ZERO, "migration pays wire time");
         assert_eq!(kv.used_of(0), 300);
         assert_eq!(kv.used_of(1), 500);
         // not resident: refused and counted
-        assert!(kv.migrate(&mut f, SimTime::ZERO, 2, 3, 100).is_none());
+        assert!(kv.migrate(&mut f, &mut bank, SimTime::ZERO, 2, 3, 100).is_none());
         // destination over capacity: refused
         kv.reserve(3, 900);
-        assert!(kv.migrate(&mut f, SimTime::ZERO, 1, 3, 400).is_none());
+        assert!(kv.migrate(&mut f, &mut bank, SimTime::ZERO, 1, 3, 400).is_none());
         assert_eq!(kv.used_of(1), 500, "failed migration leaves residency intact");
         assert_eq!(kv.rejected, 2);
         // a same-node move is a free no-op, not a capacity rejection
-        let r = kv.migrate(&mut f, SimTime::ZERO, 0, 0, 300).unwrap();
+        let r = kv.migrate(&mut f, &mut bank, SimTime::ZERO, 0, 0, 300).unwrap();
         assert_eq!(r.latency(), SimTime::ZERO);
         assert_eq!(kv.used_of(0), 300);
         assert_eq!(kv.rejected, 2);
+        // only the landed move charged flash: node 1's ledger saw the
+        // bytes, the refused and same-node moves charged nothing
+        assert_eq!(bank.wear_max_of(3), 0);
+        assert!(bank.waf_milli_of(1) >= 1000);
     }
 
     #[test]
@@ -273,10 +291,11 @@ mod tests {
             &EtherOnConfig::default(),
         );
         let bytes = 3 * DEFAULT_QUANTUM + 1; // forces a multi-quantum stream
+        let mut bank = FtlBank::default();
         let mut kv = KvManager::new(8, u64::MAX);
         kv.reserve(0, bytes);
         // cross-array: Array(0) + Tray + Array(1), never HostUplink
-        let r = kv.migrate(&mut f, SimTime::ZERO, 0, 5, bytes).unwrap();
+        let r = kv.migrate(&mut f, &mut bank, SimTime::ZERO, 0, 5, bytes).unwrap();
         assert_eq!(r.bytes, bytes);
         let mut c = Counters::new();
         f.export_counters(&mut c);
@@ -295,9 +314,12 @@ mod tests {
             },
             &EtherOnConfig::default(),
         );
+        let mut bank2 = FtlBank::default();
         let mut kv2 = KvManager::new(8, u64::MAX);
         kv2.reserve(0, bytes);
-        let m = kv2.migrate_monolithic(&mut f2, SimTime::ZERO, 0, 5, bytes).unwrap();
+        let m = kv2
+            .migrate_monolithic(&mut f2, &mut bank2, SimTime::ZERO, 0, 5, bytes)
+            .unwrap();
         assert_eq!(m.bytes, bytes);
         assert_eq!(kv2.used_of(5), kv.used_of(5));
         let mut c2 = Counters::new();

@@ -193,7 +193,14 @@ impl ServeParams {
             prefill_compute: SimTime::us(c.prefill_compute_us),
             token_compute: SimTime::us(c.token_compute_us),
             bytes_per_token: 4,
-            wire: WirePolicy::Streamed,
+            wire: match c.wire.as_str() {
+                "hairpin" => WirePolicy::Hairpin,
+                "streamed" | "" => WirePolicy::Streamed,
+                other => {
+                    eprintln!("unknown serve.wire {other:?}; using \"streamed\"");
+                    WirePolicy::Streamed
+                }
+            },
         }
     }
 
@@ -372,11 +379,17 @@ impl<E: BatchExecutor> ServeLoop<'_, E> {
                 let sess = self.sessions.remove(pos).expect("position is in range");
                 let moved = match self.params.wire {
                     WirePolicy::Streamed => {
-                        self.kv.migrate(&mut sim.fabric, now, hi, lo, sess.bytes)
+                        self.kv
+                            .migrate(&mut sim.fabric, &mut sim.ftls, now, hi, lo, sess.bytes)
                     }
-                    WirePolicy::Hairpin => {
-                        self.kv.migrate_monolithic(&mut sim.fabric, now, hi, lo, sess.bytes)
-                    }
+                    WirePolicy::Hairpin => self.kv.migrate_monolithic(
+                        &mut sim.fabric,
+                        &mut sim.ftls,
+                        now,
+                        hi,
+                        lo,
+                        sess.bytes,
+                    ),
                 };
                 if moved.is_some() {
                     self.sessions.push_front(Session { node: lo, bytes: sess.bytes });
@@ -493,7 +506,10 @@ impl<E: BatchExecutor> ServeLoop<'_, E> {
         self.end = self.end.max(receipt.finish);
         if reserved {
             // the batch's KV stays resident as a session until migrated
-            // or evicted
+            // or evicted — and resident KV is flash it *programs*: the
+            // spill charges the node's FTL write ledger (async, on the
+            // device's own flush lane, so serve latency is untouched)
+            sim.ftls.write(node, now, kv_bytes);
             self.sessions.push_back(Session { node, bytes: kv_bytes });
         }
         match result {

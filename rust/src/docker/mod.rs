@@ -10,10 +10,11 @@ pub mod registry;
 
 use std::collections::HashMap;
 
-use crate::fabric::{Endpoint, Fabric, Priority};
+use crate::fabric::{Endpoint, Priority};
 use crate::firmware::{Syscall, VirtualFw};
 use crate::lambdafs::{LambdaFs, LockSide};
 use crate::layerstore::{CowStore, LayerId, LayerStore, PoolLayerCache};
+use crate::pool::devices::WireCtx;
 use crate::pool::topology::NodeId;
 use crate::ssd::SsdDevice;
 use crate::util::{fnv1a, SimTime};
@@ -137,11 +138,14 @@ impl MiniDocker {
     /// `docker pull`: fetch blobs + manifest from the registry and store
     /// them in λFS (`/images/blobs/<digest>`, `/images/manifest/<name>`).
     ///
-    /// Every registry byte crosses the shared pool [`Fabric`]
+    /// Every registry byte crosses the shared pool fabric
     /// (RegistryWan + HostUplink + the node's Array backplane) before
     /// the device-side Ether-oN frame costs are charged — so concurrent
     /// pulls contend on the WAN/uplink with each other and with serving
-    /// traffic, and `fabric.bytes_wan` counts them.
+    /// traffic, and `fabric.bytes_wan` counts them.  The landed blob
+    /// bytes are charged to the node's FTL ledger (`wire.ftls`) —
+    /// whole-blob pulls re-program every byte, which is what the
+    /// dedup'd [`Self::pull_via_store`] path avoids.
     #[allow(clippy::too_many_arguments)]
     pub fn pull(
         &mut self,
@@ -149,29 +153,33 @@ impl MiniDocker {
         fs: &mut LambdaFs,
         dev: &mut SsdDevice,
         reg: &Registry,
-        fabric: &mut Fabric,
+        wire: &mut WireCtx,
         node: NodeId,
-        at: SimTime,
         image: &str,
     ) -> Result<CmdResult, DockerError> {
         let (manifest, blobs) = reg.fetch(image).ok_or(DockerError::NoSuchImage)?;
-        let mut done = at;
+        let mut done = wire.now;
+        let mut landed = 0u64;
         // each blob crosses the pool fabric, arrives as Ether-oN frames,
         // then lands in λFS
         for blob in blobs {
-            let wire = fabric.transfer(
+            let hop = wire.fabric.transfer(
                 done,
                 Endpoint::Registry,
                 Endpoint::Node(node),
                 blob.bytes.len() as u64,
                 Priority::Foreground,
             );
-            done = wire.finish;
+            done = hop.finish;
             let frames = (blob.bytes.len() as u64).div_ceil(1448).max(1);
             done += SimTime::ns(frames * fw.costs.t_pkt_ethon_ns);
             let path = format!("/images/blobs/{:016x}", blob.digest);
             let r = fs.write_file(dev, done, &path, &blob.bytes, LockSide::Isp)?;
             done = r.done;
+            landed += blob.bytes.len() as u64;
+        }
+        if landed > 0 {
+            wire.ftls.write(node, wire.now, landed);
         }
         // keyed by the canonical reference, so tagged pulls resolve on create
         let mpath = format!("/images/manifest/{}", Self::manifest_key(image));
@@ -187,8 +195,8 @@ impl MiniDocker {
     /// already resident (from any image, any prior pull) are metadata
     /// hits — no fabric traffic, no Ether-oN frames, no flash programs.
     /// Only missing layers cross the registry WAN on the shared
-    /// [`Fabric`], and they land dedup'd via the firmware's install
-    /// handler.
+    /// [`crate::fabric::Fabric`], and they land dedup'd via the
+    /// firmware's install handler.
     ///
     /// With `pool` set, the pull advertises chunk-level presence to the
     /// pool cache *as the chunks land*: each missing layer is described
@@ -205,9 +213,8 @@ impl MiniDocker {
         dev: &mut SsdDevice,
         reg: &Registry,
         store: &mut LayerStore,
-        fabric: &mut Fabric,
+        wire: &mut WireCtx,
         node: NodeId,
-        at: SimTime,
         image: &str,
         pool: Option<&mut PoolLayerCache>,
     ) -> Result<CmdResult, DockerError> {
@@ -218,7 +225,7 @@ impl MiniDocker {
         // a warm re-pull of an already-installed image refs nothing
         let repull = fs.walk(&mpath).is_ok();
         let mut pool = pool;
-        let mut done = at;
+        let mut done = wire.now;
         let mut fetched_bytes = 0u64;
         let mut reused = 0usize;
         for blob in blobs {
@@ -258,14 +265,14 @@ impl MiniDocker {
                             // register each chunk as it lands so peers
                             // can serve it mid-pull
                             for &(chunk, len) in &recipe {
-                                let wire = fabric.transfer(
+                                let hop = wire.fabric.transfer(
                                     done,
                                     Endpoint::Registry,
                                     Endpoint::Node(node),
                                     len,
                                     Priority::Foreground,
                                 );
-                                done = wire.finish;
+                                done = hop.finish;
                                 p.register_chunk(node, blob.digest, chunk);
                             }
                             chunked = true;
@@ -273,14 +280,14 @@ impl MiniDocker {
                     }
                 }
                 if !chunked {
-                    let wire = fabric.transfer(
+                    let hop = wire.fabric.transfer(
                         done,
                         Endpoint::Registry,
                         Endpoint::Node(node),
                         blob.bytes.len() as u64,
                         Priority::Foreground,
                     );
-                    done = wire.finish;
+                    done = hop.finish;
                     // empty or conflicting-recipe layers still land:
                     // keep presence consistent with the warm path
                     if let Some(p) = pool.as_deref_mut() {
@@ -294,6 +301,12 @@ impl MiniDocker {
             // the install handler owns store-hit vs install accounting
             let r = fw.install.install_blob(fs, dev, store, done, &blob.bytes)?;
             done = r.done;
+        }
+        // only the wire-landed bytes program flash: reused (dedup'd)
+        // layers cost this node zero programs — the whole point of the
+        // store-backed pull, now visible in ftl.* instead of implicit
+        if fetched_bytes > 0 {
+            wire.ftls.write(node, wire.now, fetched_bytes);
         }
         let r = fs.write_file(dev, done, &mpath, manifest.to_json().dump().as_bytes(), LockSide::Isp)?;
         done = r.done;
@@ -695,23 +708,24 @@ impl MiniDocker {
 mod tests {
     use super::*;
     use crate::config::{EtherOnConfig, PoolConfig, SsdConfig};
+    use crate::pool::WireRig;
 
-    fn setup() -> (MiniDocker, VirtualFw, LambdaFs, SsdDevice, Registry, Fabric) {
+    fn setup() -> (MiniDocker, VirtualFw, LambdaFs, SsdDevice, Registry, WireRig) {
         let cfg = SsdConfig::default();
         let dev = SsdDevice::new(cfg.clone());
         let fs = LambdaFs::over_device(&dev);
         let fw = VirtualFw::new(&cfg);
         let mut reg = Registry::new();
         reg.publish("mariadb", "latest", "mariadbd --datadir=/data", &[64 << 10, 32 << 10], 7);
-        let fab = Fabric::new(&PoolConfig::default(), &EtherOnConfig::default());
-        (MiniDocker::new(), fw, fs, dev, reg, fab)
+        let rig = WireRig::new(&PoolConfig::default(), &EtherOnConfig::default());
+        (MiniDocker::new(), fw, fs, dev, reg, rig)
     }
 
     #[test]
     fn pull_stores_blobs_and_manifest() {
         let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
         let r = md
-            .pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab, 0, SimTime::ZERO, "mariadb")
+            .pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab.ctx(SimTime::ZERO), 0, "mariadb")
             .unwrap();
         assert!(r.done > SimTime::ZERO);
         let blobs = fs.list("/images/blobs").unwrap();
@@ -725,10 +739,10 @@ mod tests {
 
         let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
         let r1 = md
-            .pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab, 0, SimTime::ZERO, "mariadb")
+            .pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab.ctx(SimTime::ZERO), 0, "mariadb")
             .unwrap();
         let mut c = Counters::new();
-        fab.export_counters(&mut c);
+        fab.fabric.export_counters(&mut c);
         assert_eq!(
             c.get(names::FABRIC_BYTES_WAN),
             96 << 10,
@@ -742,7 +756,7 @@ mod tests {
         let mut fs2 = LambdaFs::over_device(&dev2);
         let mut fw2 = VirtualFw::new(&SsdConfig::default());
         let r2 = md2
-            .pull(&mut fw2, &mut fs2, &mut dev2, &reg, &mut fab, 1, SimTime::ZERO, "mariadb")
+            .pull(&mut fw2, &mut fs2, &mut dev2, &reg, &mut fab.ctx(SimTime::ZERO), 1, "mariadb")
             .unwrap();
         assert!(
             r2.done > r1.done,
@@ -759,21 +773,21 @@ mod tests {
         let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
         let mut store = LayerStore::default();
         md.pull_via_store(
-            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, SimTime::ZERO,
+            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab.ctx(SimTime::ZERO), 0,
             "mariadb", None,
         )
         .unwrap();
         let mut c = Counters::new();
-        fab.export_counters(&mut c);
+        fab.fabric.export_counters(&mut c);
         assert_eq!(c.get(names::FABRIC_BYTES_WAN), 96 << 10, "cold pull crosses the WAN");
         // warm re-pull: every layer is a store hit; no fabric traffic
         md.pull_via_store(
-            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, SimTime::ZERO,
+            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab.ctx(SimTime::ZERO), 0,
             "mariadb", None,
         )
         .unwrap();
         let mut c2 = Counters::new();
-        fab.export_counters(&mut c2);
+        fab.fabric.export_counters(&mut c2);
         assert_eq!(c2.get(names::FABRIC_BYTES_WAN), 96 << 10, "no new WAN bytes");
     }
 
@@ -781,7 +795,7 @@ mod tests {
     fn pull_unknown_image_fails() {
         let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
         assert_eq!(
-            md.pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab, 0, SimTime::ZERO, "nope")
+            md.pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab.ctx(SimTime::ZERO), 0, "nope")
                 .unwrap_err(),
             DockerError::NoSuchImage
         );
@@ -790,7 +804,7 @@ mod tests {
     #[test]
     fn full_lifecycle_pull_run_logs_stop_rm() {
         let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
-        md.pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab, 0, SimTime::ZERO, "mariadb").unwrap();
+        md.pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab.ctx(SimTime::ZERO), 0, "mariadb").unwrap();
         let r = md.run(&mut fw, &mut fs, &mut dev, SimTime::ZERO, "mariadb").unwrap();
         let id = r.output.clone();
         assert_eq!(md.containers()[0].state, ContainerState::Running);
@@ -812,7 +826,7 @@ mod tests {
     #[test]
     fn cannot_rm_running_container() {
         let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
-        md.pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab, 0, SimTime::ZERO, "mariadb").unwrap();
+        md.pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab.ctx(SimTime::ZERO), 0, "mariadb").unwrap();
         let id = md.run(&mut fw, &mut fs, &mut dev, SimTime::ZERO, "mariadb").unwrap().output;
         assert!(matches!(
             md.rm(&mut fs, SimTime::ZERO, &id).unwrap_err(),
@@ -823,7 +837,7 @@ mod tests {
     #[test]
     fn kill_sets_killed_and_restart_revives() {
         let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
-        md.pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab, 0, SimTime::ZERO, "mariadb").unwrap();
+        md.pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab.ctx(SimTime::ZERO), 0, "mariadb").unwrap();
         let id = md.run(&mut fw, &mut fs, &mut dev, SimTime::ZERO, "mariadb").unwrap().output;
         md.kill(&mut fw, &mut fs, &mut dev, SimTime::ZERO, &id).unwrap();
         assert_eq!(md.containers()[0].state, ContainerState::Killed);
@@ -834,7 +848,7 @@ mod tests {
     #[test]
     fn rmi_removes_image_files() {
         let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
-        md.pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab, 0, SimTime::ZERO, "mariadb").unwrap();
+        md.pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab.ctx(SimTime::ZERO), 0, "mariadb").unwrap();
         md.rmi(&mut fs, &mut dev, SimTime::ZERO, "mariadb").unwrap();
         assert!(fs.walk("/images/manifest/mariadb").is_err());
         assert!(fs.list("/images/blobs").unwrap().is_empty());
@@ -843,7 +857,7 @@ mod tests {
     #[test]
     fn ps_lists_containers() {
         let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
-        md.pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab, 0, SimTime::ZERO, "mariadb").unwrap();
+        md.pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab.ctx(SimTime::ZERO), 0, "mariadb").unwrap();
         md.run(&mut fw, &mut fs, &mut dev, SimTime::ZERO, "mariadb").unwrap();
         let out = md.ps().output;
         assert!(out.contains("c0001"));
@@ -877,7 +891,7 @@ mod tests {
         let mut store = LayerStore::default();
         let r1 = md
             .pull_via_store(
-                &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, SimTime::ZERO,
+                &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab.ctx(SimTime::ZERO), 0,
                 "mariadb", None,
             )
             .unwrap();
@@ -890,7 +904,8 @@ mod tests {
         // and no extra blob refs (refs mirror "manifest present")
         let r2 = md
             .pull_via_store(
-                &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, r1.done, "mariadb", None,
+                &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab.ctx(r1.done), 0,
+                "mariadb", None,
             )
             .unwrap();
         assert_eq!(store.stats.bytes_written, written);
@@ -907,13 +922,13 @@ mod tests {
         let mut fw = VirtualFw::new(&cfg);
         let mut md = MiniDocker::new();
         let mut store = LayerStore::default();
-        let mut fab = Fabric::new(&PoolConfig::default(), &EtherOnConfig::default());
+        let mut fab = WireRig::new(&PoolConfig::default(), &EtherOnConfig::default());
         let mut pool = PoolLayerCache::new();
         // a 160KiB layer chunks into 64 + 64 + 32 KiB at the default size
         let mut reg = Registry::new();
         reg.publish("big", "latest", "big --serve", &[160 << 10], 21);
         md.pull_via_store(
-            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, SimTime::ZERO, "big",
+            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab.ctx(SimTime::ZERO), 0, "big",
             Some(&mut pool),
         )
         .unwrap();
@@ -935,7 +950,7 @@ mod tests {
         let mut fw2 = VirtualFw::new(&cfg);
         let mut md2 = MiniDocker::new();
         md2.pull_via_store(
-            &mut fw2, &mut fs2, &mut dev2, &reg, &mut store, &mut fab, 1, SimTime::ZERO, "big",
+            &mut fw2, &mut fs2, &mut dev2, &reg, &mut store, &mut fab.ctx(SimTime::ZERO), 1, "big",
             Some(&mut pool),
         )
         .unwrap();
@@ -948,13 +963,13 @@ mod tests {
         let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
         let mut store = LayerStore::default();
         md.pull_via_store(
-            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, SimTime::ZERO,
+            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab.ctx(SimTime::ZERO), 0,
             "mariadb", None,
         )
         .unwrap();
         // re-pull must not leak a second reference (rmi releases once)
         md.pull_via_store(
-            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, SimTime::ZERO,
+            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab.ctx(SimTime::ZERO), 0,
             "mariadb", None,
         )
         .unwrap();
@@ -971,7 +986,7 @@ mod tests {
         let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
         let mut store = LayerStore::default();
         md.pull_via_store(
-            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, SimTime::ZERO,
+            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab.ctx(SimTime::ZERO), 0,
             "mariadb", None,
         )
         .unwrap();
@@ -995,7 +1010,7 @@ mod tests {
     fn tagged_and_untagged_references_are_one_image() {
         let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
         // pull with the explicit :latest tag, create with the bare name
-        md.pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab, 0, SimTime::ZERO, "mariadb:latest")
+        md.pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab.ctx(SimTime::ZERO), 0, "mariadb:latest")
             .unwrap();
         let id = md.create(&mut fw, &mut fs, &mut dev, SimTime::ZERO, "mariadb").unwrap().output;
         assert_eq!(md.containers()[0].id, id);
@@ -1008,7 +1023,7 @@ mod tests {
         let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
         let mut store = LayerStore::default();
         md.pull_via_store(
-            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, SimTime::ZERO,
+            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab.ctx(SimTime::ZERO), 0,
             "mariadb", None,
         )
         .unwrap();
@@ -1031,7 +1046,7 @@ mod tests {
         let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
         let mut store = LayerStore::default();
         md.pull_via_store(
-            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab, 0, SimTime::ZERO,
+            &mut fw, &mut fs, &mut dev, &reg, &mut store, &mut fab.ctx(SimTime::ZERO), 0,
             "mariadb", None,
         )
         .unwrap();
@@ -1057,7 +1072,7 @@ mod tests {
         let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
         let mut store = LayerStore::default();
         // classic pull: blobs land as files, not in the store
-        md.pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab, 0, SimTime::ZERO, "mariadb").unwrap();
+        md.pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab.ctx(SimTime::ZERO), 0, "mariadb").unwrap();
         assert_eq!(
             md.create_cow(&mut fw, &mut fs, &mut dev, &mut store, SimTime::ZERO, "mariadb")
                 .unwrap_err(),
@@ -1068,7 +1083,7 @@ mod tests {
     #[test]
     fn create_materializes_overlay_rootfs() {
         let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = setup();
-        md.pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab, 0, SimTime::ZERO, "mariadb").unwrap();
+        md.pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab.ctx(SimTime::ZERO), 0, "mariadb").unwrap();
         let id = md.create(&mut fw, &mut fs, &mut dev, SimTime::ZERO, "mariadb").unwrap().output;
         let root = format!("/containers/{id}/rootfs");
         let entries = fs.list(&root).unwrap();

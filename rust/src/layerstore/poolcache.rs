@@ -42,6 +42,7 @@ use std::collections::{BTreeMap, BTreeSet, HashMap};
 use super::dedup::ChunkInterner;
 use crate::fabric::{Endpoint, Fabric, Priority, TransferId};
 use crate::metrics::{names, Counters};
+use crate::pool::devices::WireCtx;
 use crate::pool::topology::{NodeId, PoolTopology};
 use crate::util::SimTime;
 
@@ -612,10 +613,10 @@ impl PoolLayerCache {
     /// estimate: bytes are grouped by source, per-source transfers are
     /// assumed to overlap (they serialize only where their paths share a
     /// link, which planning ignores just as it ignores queue occupancy).
+    /// Planning never mutates: no wire traffic, no flash charge.
     pub fn plan(
         &self,
-        fabric: &Fabric,
-        topo: &PoolTopology,
+        wire: &WireCtx,
         node: NodeId,
         digest: u64,
         bytes: u64,
@@ -623,14 +624,14 @@ impl PoolLayerCache {
         if self.node_has(node, digest) {
             return (FetchSource::Local, SimTime::ZERO);
         }
-        let plans = self.plan_chunks(fabric, topo, node, digest, bytes);
+        let plans = self.plan_chunks(wire.fabric, wire.topo, node, digest, bytes);
         let (peer_bytes, reg_bytes, src) = Self::summarize_sources(&plans);
         let mut t = SimTime::ZERO;
         for (&p, &b) in &peer_bytes {
-            t = t.max(fabric.estimate(Endpoint::Node(p), Endpoint::Node(node), b));
+            t = t.max(wire.fabric.estimate(Endpoint::Node(p), Endpoint::Node(node), b));
         }
         if reg_bytes > 0 {
-            t = t.max(fabric.estimate(Endpoint::Registry, Endpoint::Node(node), reg_bytes));
+            t = t.max(wire.fabric.estimate(Endpoint::Registry, Endpoint::Node(node), reg_bytes));
         }
         (src, t)
     }
@@ -689,22 +690,26 @@ impl PoolLayerCache {
     /// (including queue wait behind other in-flight transfers).
     /// Fetching a layer whose prefetch is still in flight settles the
     /// prefetch's tail instead of being free.
+    ///
+    /// Every byte that lands installs as chunks on `node`'s flash: the
+    /// moved total is charged to the node's FTL ledger (`wire.ftls`) on
+    /// its write-back lane, so sustained pulls show up as WAF and wear
+    /// without perturbing the wire latency returned here.
     pub fn fetch(
         &mut self,
-        fabric: &mut Fabric,
-        topo: &PoolTopology,
-        now: SimTime,
+        wire: &mut WireCtx,
         node: NodeId,
         digest: u64,
         bytes: u64,
     ) -> (FetchSource, SimTime) {
+        let now = wire.now;
         if self.node_has(node, digest) {
             self.local_hits += 1;
             // first hit on a prefetched layer: wait for the prefetch's
             // in-flight tail, and don't re-count bytes the prefetch
             // already accounted
             let lat = match self.prefetched.remove(&(node, digest)) {
-                Some(tail) => tail.settle(fabric).max(now).saturating_sub(now),
+                Some(tail) => tail.settle(wire.fabric).max(now).saturating_sub(now),
                 None => {
                     self.bytes_local += bytes;
                     SimTime::ZERO
@@ -712,20 +717,21 @@ impl PoolLayerCache {
             };
             return (FetchSource::Local, lat);
         }
-        let plans = self.plan_chunks(fabric, topo, node, digest, bytes);
+        let plans = self.plan_chunks(wire.fabric, wire.topo, node, digest, bytes);
         let src = self.account_chunk_plans(&plans, digest);
         for p in &plans {
             self.learn_size(p.chunk, p.bytes);
         }
         let mut finish = now;
+        let mut moved = 0u64;
         for p in &plans {
             match p.source {
                 FetchSource::Local => {}
                 FetchSource::Peer(peer) => {
                     // a peer whose own copy is still arriving (in-flight
                     // prefetch) can only start serving once its bytes land
-                    let src_ready = self.source_ready(fabric, now, peer, digest);
-                    let r = fabric.transfer(
+                    let src_ready = self.source_ready(wire.fabric, now, peer, digest);
+                    let r = wire.fabric.transfer(
                         src_ready,
                         Endpoint::Node(peer),
                         Endpoint::Node(node),
@@ -733,9 +739,10 @@ impl PoolLayerCache {
                         Priority::Foreground,
                     );
                     finish = finish.max(r.finish);
+                    moved += p.bytes;
                 }
                 FetchSource::Registry => {
-                    let r = fabric.transfer(
+                    let r = wire.fabric.transfer(
                         now,
                         Endpoint::Registry,
                         Endpoint::Node(node),
@@ -743,11 +750,15 @@ impl PoolLayerCache {
                         Priority::Foreground,
                     );
                     finish = finish.max(r.finish);
+                    moved += p.bytes;
                 }
                 FetchSource::Mixed => unreachable!("per-chunk plans are never Mixed"),
             }
         }
         self.register(node, digest);
+        if moved > 0 {
+            wire.ftls.write(node, now, moved);
+        }
         (src, finish.saturating_sub(now))
     }
 
@@ -762,13 +773,12 @@ impl PoolLayerCache {
     /// fetch settle the marker) to observe the real landing time.
     pub fn prefetch(
         &mut self,
-        fabric: &mut Fabric,
-        topo: &PoolTopology,
-        now: SimTime,
+        wire: &mut WireCtx,
         node: NodeId,
         digest: u64,
         bytes: u64,
     ) -> (FetchSource, PrefetchHandle) {
+        let now = wire.now;
         if self.node_has(node, digest) {
             // a background prefetch of a resident (or already in-flight)
             // layer is a no-op: nothing moves, nothing is saved, and any
@@ -780,7 +790,7 @@ impl PoolLayerCache {
                 .unwrap_or_else(|| PrefetchHandle::at(now));
             return (FetchSource::Local, handle);
         }
-        let plans = self.plan_chunks(fabric, topo, node, digest, bytes);
+        let plans = self.plan_chunks(wire.fabric, wire.topo, node, digest, bytes);
         let src = self.account_chunk_plans(&plans, digest);
         for p in &plans {
             self.learn_size(p.chunk, p.bytes);
@@ -801,8 +811,8 @@ impl PoolLayerCache {
                 match p.source {
                     FetchSource::Local => {}
                     FetchSource::Peer(peer) => {
-                        let src_ready = self.source_ready(fabric, now, peer, digest);
-                        ids.push(fabric.schedule(
+                        let src_ready = self.source_ready(wire.fabric, now, peer, digest);
+                        ids.push(wire.fabric.schedule(
                             src_ready,
                             Endpoint::Node(peer),
                             Endpoint::Node(node),
@@ -812,7 +822,7 @@ impl PoolLayerCache {
                         moved += p.bytes;
                     }
                     FetchSource::Registry => {
-                        ids.push(fabric.schedule(
+                        ids.push(wire.fabric.schedule(
                             now,
                             Endpoint::Registry,
                             Endpoint::Node(node),
@@ -829,6 +839,9 @@ impl PoolLayerCache {
         self.register(node, digest);
         let handle = PrefetchHandle { ids, ready: now };
         if moved > 0 {
+            // prefetched chunks install on the destination's flash like
+            // any other landing bytes
+            wire.ftls.write(node, now, moved);
             self.prefetched.insert((node, digest), handle.clone());
         }
         (src, handle)
@@ -929,14 +942,13 @@ impl PoolLayerCache {
     /// transfer ids to learn the re-timed landing times.
     pub fn rereplicate_chunks(
         &mut self,
-        fabric: &mut Fabric,
-        topo: &PoolTopology,
-        now: SimTime,
+        wire: &mut WireCtx,
         k: usize,
         orphans: &[ChunkId],
     ) -> HealStats {
+        let now = wire.now;
         let mut stats = HealStats::default();
-        let healthy: Vec<NodeId> = topo.healthy_nodes().map(|n| n.id).collect();
+        let healthy: Vec<NodeId> = wire.topo.healthy_nodes().map(|n| n.id).collect();
         let want = k.min(healthy.len());
         if want == 0 {
             return stats;
@@ -950,7 +962,7 @@ impl PoolLayerCache {
             let mut healthy_holders: BTreeSet<NodeId> = self
                 .chunk_holders_of(chunk)
                 .into_iter()
-                .filter(|&n| topo.node(n).is_some_and(|pn| pn.healthy))
+                .filter(|&n| wire.topo.node(n).is_some_and(|pn| pn.healthy))
                 .collect();
             if healthy_holders.len() >= want {
                 continue;
@@ -975,12 +987,12 @@ impl PoolLayerCache {
                 else {
                     break;
                 };
-                let from = match self.nearest_chunk_peer(fabric, topo, target, chunk, bytes) {
+                let from = match self.nearest_chunk_peer(wire.fabric, wire.topo, target, chunk, bytes) {
                     Some((p, _)) => Endpoint::Node(p),
                     None => Endpoint::Registry,
                 };
                 if bytes > 0 {
-                    stats.transfers.push(fabric.schedule(
+                    stats.transfers.push(wire.fabric.schedule(
                         now,
                         from,
                         Endpoint::Node(target),
@@ -988,6 +1000,8 @@ impl PoolLayerCache {
                         Priority::Background,
                     ));
                     stats.bytes += bytes;
+                    // the healed copy installs on the target's flash
+                    wire.ftls.write(target, now, bytes);
                 }
                 stats.copies_made += 1;
                 self.heal_register(target, chunk);
@@ -1051,15 +1065,22 @@ impl PoolLayerCache {
 
     /// Pool-wide garbage collection (the placement-side half lives in
     /// the orchestrator): for every blob held by more than `k` nodes,
-    /// drop registrations from the most-loaded holders until `k` remain
-    /// — ties evict the higher node id, so the lowest-id holders
-    /// survive deterministically.  Eviction refuses to drop a node that
-    /// would leave any *chunk* of the blob below `k` holders (partial
-    /// holders count; a chunk the node also holds via another blob
-    /// survives regardless).  Blobs at or below `k` holders are
-    /// untouched.  Returns the (node, digest) pairs evicted so callers
-    /// can reclaim the bytes from each node's store.
-    pub fn gc<L: Fn(NodeId) -> u64>(&mut self, k: usize, load: L) -> Vec<(NodeId, u64)> {
+    /// drop registrations from the most-worn holders first (by
+    /// `wear` — max per-block erase count, so flash-tired nodes shed
+    /// copies and stop absorbing re-install churn), then the
+    /// most-loaded, until `k` remain — remaining ties evict the higher
+    /// node id, so the lowest-id holders survive deterministically.
+    /// Eviction refuses to drop a node that would leave any *chunk* of
+    /// the blob below `k` holders (partial holders count; a chunk the
+    /// node also holds via another blob survives regardless).  Blobs at
+    /// or below `k` holders are untouched.  Returns the (node, digest)
+    /// pairs evicted so callers can reclaim the bytes from each node's
+    /// store.
+    pub fn gc<L, W>(&mut self, k: usize, load: L, wear: W) -> Vec<(NodeId, u64)>
+    where
+        L: Fn(NodeId) -> u64,
+        W: Fn(NodeId) -> u64,
+    {
         let mut digests: Vec<u64> = self.presence.keys().copied().collect();
         digests.sort_unstable();
         let mut evicted = Vec::new();
@@ -1068,13 +1089,19 @@ impl PoolLayerCache {
                 if self.holders(digest).len() <= k {
                     break;
                 }
-                // most-loaded registration first; ties evict the higher id
+                // most-worn registration first, then most-loaded; ties
+                // evict the higher id
                 let mut cands: Vec<NodeId> = self
                     .registered
                     .get(&digest)
                     .map(|s| s.iter().copied().collect())
                     .unwrap_or_default();
-                cands.sort_by(|a, b| load(*b).cmp(&load(*a)).then(b.cmp(a)));
+                cands.sort_by(|a, b| {
+                    wear(*b)
+                        .cmp(&wear(*a))
+                        .then(load(*b).cmp(&load(*a)))
+                        .then(b.cmp(a))
+                });
                 let Some(&node) = cands
                     .iter()
                     .find(|n| self.eviction_keeps_chunks_at_k(digest, **n, k))
@@ -1113,37 +1140,56 @@ mod tests {
     use super::*;
     use crate::config::{EtherOnConfig, PoolConfig};
     use crate::fabric::LinkClass;
+    use crate::pool::devices::FtlBank;
 
-    fn rig(nodes: u32, arrays: u32) -> (PoolTopology, Fabric) {
+    fn rig(nodes: u32, arrays: u32) -> (PoolTopology, Fabric, FtlBank) {
         let cfg = PoolConfig {
             nodes_per_array: nodes,
             arrays,
             ..Default::default()
         };
-        (PoolTopology::build(&cfg), Fabric::new(&cfg, &EtherOnConfig::default()))
+        (
+            PoolTopology::build(&cfg),
+            Fabric::new(&cfg, &EtherOnConfig::default()),
+            FtlBank::default(),
+        )
+    }
+
+    /// A throwaway [`WireCtx`] over a rig's parts, clocked at
+    /// `SimTime::ZERO` unless `$at` is given.
+    macro_rules! wire {
+        ($f:ident, $t:ident, $b:ident) => {
+            &mut WireCtx::at(&mut $f, &$t, &mut $b, SimTime::ZERO)
+        };
+        ($f:ident, $t:ident, $b:ident, $at:expr) => {
+            &mut WireCtx::at(&mut $f, &$t, &mut $b, $at)
+        };
     }
 
     #[test]
     fn cold_pool_goes_to_registry_then_peers() {
-        let (t, mut f) = rig(4, 1);
+        let (t, mut f, mut b) = rig(4, 1);
         let mut pc = PoolLayerCache::new();
-        let (src, lat) = pc.fetch(&mut f, &t, SimTime::ZERO, 0, 0xD1, 1 << 20);
+        let (src, lat) = pc.fetch(wire!(f, t, b), 0, 0xD1, 1 << 20);
         assert_eq!(src, FetchSource::Registry);
         assert!(lat > SimTime::ZERO);
-        let (src2, lat2) = pc.fetch(&mut f, &t, SimTime::ZERO, 1, 0xD1, 1 << 20);
+        let (src2, lat2) = pc.fetch(wire!(f, t, b), 1, 0xD1, 1 << 20);
         assert_eq!(src2, FetchSource::Peer(0));
         assert!(lat2 < lat, "intranet beats WAN even queued behind it");
-        let (src3, _) = pc.fetch(&mut f, &t, SimTime::ZERO, 0, 0xD1, 1 << 20);
+        let (src3, _) = pc.fetch(wire!(f, t, b), 0, 0xD1, 1 << 20);
         assert_eq!(src3, FetchSource::Local);
         assert_eq!(pc.registry_fetches, 1);
         assert_eq!(pc.peer_fetches, 1);
         assert_eq!(pc.local_hits, 1);
         assert_eq!(pc.wan_bytes_saved(), 2 << 20);
+        let mut c = Counters::new();
+        b.export_counters(&mut c);
+        assert!(c.get(names::FTL_HOST_PAGES) > 0, "landed bytes charged the flash ledgers");
     }
 
     #[test]
     fn nearest_peer_prefers_same_array() {
-        let (t, f) = rig(2, 2); // nodes 0,1 in array 0; 2,3 in array 1
+        let (t, f, _) = rig(2, 2); // nodes 0,1 in array 0; 2,3 in array 1
         let mut pc = PoolLayerCache::new();
         pc.register(1, 0xD2); // same array as 0
         pc.register(2, 0xD2); // cross array
@@ -1153,24 +1199,24 @@ mod tests {
 
     #[test]
     fn unhealthy_holders_are_skipped() {
-        let (mut t, f) = rig(3, 1);
+        let (mut t, mut f, mut b) = rig(3, 1);
         let mut pc = PoolLayerCache::new();
         pc.register(1, 0xD3);
         t.node_mut(1).unwrap().healthy = false;
         assert!(pc.nearest_peer(&f, &t, 0, 0xD3, 4096).is_none());
-        let (src, _) = pc.plan(&f, &t, 0, 0xD3, 4096);
+        let (src, _) = pc.plan(wire!(f, t, b), 0, 0xD3, 4096);
         assert_eq!(src, FetchSource::Registry);
     }
 
     #[test]
     fn evict_forgets_presence() {
-        let (t, f) = rig(2, 1);
+        let (t, mut f, mut b) = rig(2, 1);
         let mut pc = PoolLayerCache::new();
         pc.register(0, 0xD4);
         assert!(pc.node_has(0, 0xD4));
         pc.evict(0, 0xD4);
         assert!(!pc.node_has(0, 0xD4));
-        let (src, _) = pc.plan(&f, &t, 1, 0xD4, 64);
+        let (src, _) = pc.plan(wire!(f, t, b), 1, 0xD4, 64);
         assert_eq!(src, FetchSource::Registry);
     }
 
@@ -1187,13 +1233,13 @@ mod tests {
 
     #[test]
     fn concurrent_fetches_on_one_link_contend() {
-        let (t, mut f) = rig(8, 1);
+        let (t, mut f, mut b) = rig(8, 1);
         let mut pc = PoolLayerCache::new();
         pc.register(0, 0xEE);
         let bytes = 4 << 20;
         let mut lats = Vec::new();
         for n in 1..=4 {
-            let (src, lat) = pc.fetch(&mut f, &t, SimTime::ZERO, n, 0xEE, bytes);
+            let (src, lat) = pc.fetch(wire!(f, t, b), n, 0xEE, bytes);
             assert!(matches!(src, FetchSource::Peer(_)));
             lats.push(lat);
         }
@@ -1208,11 +1254,11 @@ mod tests {
 
     #[test]
     fn prefetch_registers_presence_without_blocking_foreground() {
-        let (t, mut f) = rig(4, 1);
+        let (t, mut f, mut b) = rig(4, 1);
         let mut pc = PoolLayerCache::new();
         pc.register(0, 0xAB);
         // large background prefetch toward node 1, granted the wire at t=0
-        let (src, handle) = pc.prefetch(&mut f, &t, SimTime::ZERO, 1, 0xAB, 64 << 20);
+        let (src, handle) = pc.prefetch(wire!(f, t, b), 1, 0xAB, 64 << 20);
         assert_eq!(src, FetchSource::Peer(0));
         f.advance_to(SimTime::ZERO); // grant the background flight
         assert!(pc.node_has(1, 0xAB), "prefetch registers the holder");
@@ -1220,7 +1266,7 @@ mod tests {
         // a foreground fetch on the same link is delayed by at most one
         // frame quantum
         pc.register(2, 0xCD);
-        let (_, lat) = pc.fetch(&mut f, &t, SimTime::ZERO, 3, 0xCD, 1 << 20);
+        let (_, lat) = pc.fetch(wire!(f, t, b), 3, 0xCD, 1 << 20);
         let idle = f.estimate(Endpoint::Node(2), Endpoint::Node(3), 1 << 20);
         let mtu = EtherOnConfig::default().mtu;
         let quantum = f.link(LinkClass::Array(0)).unwrap().frame_quantum(mtu);
@@ -1234,12 +1280,12 @@ mod tests {
 
     #[test]
     fn fetch_of_inflight_prefetch_waits_for_the_tail() {
-        let (t, mut f) = rig(3, 1);
+        let (t, mut f, mut b) = rig(3, 1);
         let mut pc = PoolLayerCache::new();
         pc.register(0, 0x33);
-        let (_, handle) = pc.prefetch(&mut f, &t, SimTime::ZERO, 1, 0x33, 16 << 20);
+        let (_, handle) = pc.prefetch(wire!(f, t, b), 1, 0x33, 16 << 20);
         // fetching before the prefetch lands waits exactly its tail
-        let (src, lat) = pc.fetch(&mut f, &t, SimTime::ZERO, 1, 0x33, 16 << 20);
+        let (src, lat) = pc.fetch(wire!(f, t, b), 1, 0x33, 16 << 20);
         assert_eq!(src, FetchSource::Local);
         let finish = handle.settle(&mut f);
         assert_eq!(lat, finish, "boot blocks until the prefetched bytes arrive");
@@ -1249,34 +1295,34 @@ mod tests {
             "an unpreempted engine prefetch lands at the idle-wire estimate"
         );
         // after the tail, the layer is simply resident
-        let (_, lat2) = pc.fetch(&mut f, &t, finish, 1, 0x33, 16 << 20);
+        let (_, lat2) = pc.fetch(wire!(f, t, b, finish), 1, 0x33, 16 << 20);
         assert_eq!(lat2, SimTime::ZERO);
     }
 
     #[test]
     fn prefetch_then_boot_fetch_counts_bytes_once() {
-        let (t, mut f) = rig(3, 1);
+        let (t, mut f, mut b) = rig(3, 1);
         let mut pc = PoolLayerCache::new();
         pc.register(0, 0x22);
         // prefetch moves the bytes (counted as a peer fetch) ...
-        pc.prefetch(&mut f, &t, SimTime::ZERO, 1, 0x22, 1 << 20);
+        pc.prefetch(wire!(f, t, b), 1, 0x22, 1 << 20);
         assert_eq!(pc.wan_bytes_saved(), 1 << 20);
         // ... the boot-path local hit must not count them a second time
-        let (src, _) = pc.fetch(&mut f, &t, SimTime::ZERO, 1, 0x22, 1 << 20);
+        let (src, _) = pc.fetch(wire!(f, t, b), 1, 0x22, 1 << 20);
         assert_eq!(src, FetchSource::Local);
         assert_eq!(pc.local_hits, 1);
         assert_eq!(pc.wan_bytes_saved(), 1 << 20, "no double count");
         // a later genuine warm hit is a real save again
-        let (_, _) = pc.fetch(&mut f, &t, SimTime::ZERO, 1, 0x22, 1 << 20);
+        let (_, _) = pc.fetch(wire!(f, t, b), 1, 0x22, 1 << 20);
         assert_eq!(pc.wan_bytes_saved(), 2 << 20);
     }
 
     #[test]
     fn local_prefetch_is_free_and_uncounted() {
-        let (t, mut f) = rig(2, 1);
+        let (t, mut f, mut b) = rig(2, 1);
         let mut pc = PoolLayerCache::new();
         pc.register(0, 0x11);
-        let (src, handle) = pc.prefetch(&mut f, &t, SimTime::ZERO, 0, 0x11, 1 << 20);
+        let (src, handle) = pc.prefetch(wire!(f, t, b), 0, 0x11, 1 << 20);
         assert_eq!(src, FetchSource::Local);
         assert!(handle.ids().is_empty(), "nothing was scheduled");
         assert_eq!(handle.settle(&mut f), SimTime::ZERO);
@@ -1287,13 +1333,13 @@ mod tests {
 
     #[test]
     fn peer_with_inflight_copy_cannot_serve_early() {
-        let (mut t, mut f) = rig(3, 1);
+        let (mut t, mut f, mut b) = rig(3, 1);
         let mut pc = PoolLayerCache::new();
         pc.register(0, 0x55);
-        let (_, handle) = pc.prefetch(&mut f, &t, SimTime::ZERO, 1, 0x55, 16 << 20);
+        let (_, handle) = pc.prefetch(wire!(f, t, b), 1, 0x55, 16 << 20);
         // only the in-flight copy remains reachable
         t.node_mut(0).unwrap().healthy = false;
-        let (src, lat) = pc.fetch(&mut f, &t, SimTime::ZERO, 2, 0x55, 16 << 20);
+        let (src, lat) = pc.fetch(wire!(f, t, b), 2, 0x55, 16 << 20);
         assert_eq!(src, FetchSource::Peer(1));
         let finish = handle.settle(&mut f);
         assert!(
@@ -1304,16 +1350,16 @@ mod tests {
 
     #[test]
     fn evict_clears_prefetch_marker() {
-        let (t, mut f) = rig(3, 1);
+        let (t, mut f, mut b) = rig(3, 1);
         let mut pc = PoolLayerCache::new();
         pc.register(0, 0x44);
-        pc.prefetch(&mut f, &t, SimTime::ZERO, 1, 0x44, 1 << 20);
+        pc.prefetch(wire!(f, t, b), 1, 0x44, 1 << 20);
         pc.evict(1, 0x44);
         // re-fetched for real: the stale marker must not suppress the
         // byte accounting of this genuine warm hit chain
-        pc.fetch(&mut f, &t, SimTime::ZERO, 1, 0x44, 1 << 20); // peer again
+        pc.fetch(wire!(f, t, b), 1, 0x44, 1 << 20); // peer again
         let saved_before = pc.wan_bytes_saved();
-        pc.fetch(&mut f, &t, SimTime::ZERO, 1, 0x44, 1 << 20); // local hit
+        pc.fetch(wire!(f, t, b), 1, 0x44, 1 << 20); // local hit
         assert_eq!(pc.wan_bytes_saved(), saved_before + (1 << 20));
     }
 
@@ -1326,7 +1372,7 @@ mod tests {
         pc.register(0, 0xF1); // at k holders already: untouched
         pc.register(1, 0xF1);
         let loads: HashMap<NodeId, u64> = [(0, 5), (1, 0), (2, 3), (3, 1)].into();
-        let evicted = pc.gc(2, |n| loads.get(&n).copied().unwrap_or(0));
+        let evicted = pc.gc(2, |n| loads.get(&n).copied().unwrap_or(0), |_| 0);
         assert_eq!(evicted.len(), 2);
         assert!(evicted.contains(&(0, 0xF0)), "most-loaded holder dropped");
         assert!(evicted.contains(&(2, 0xF0)), "next-most-loaded dropped");
@@ -1341,9 +1387,28 @@ mod tests {
         for n in 0..5 {
             pc.register(n, 0xF2);
         }
-        let evicted = pc.gc(2, |_| 0);
+        let evicted = pc.gc(2, |_| 0, |_| 0);
         assert_eq!(evicted.len(), 3);
         assert_eq!(pc.holders(0xF2), vec![0, 1]);
+    }
+
+    #[test]
+    fn gc_evicts_worn_holders_before_loaded_ones() {
+        let mut pc = PoolLayerCache::new();
+        for n in 0..4 {
+            pc.register(n, 0xF3);
+        }
+        // node 0 carries the most replicas but node 3 has the most-worn
+        // flash: wear outranks load, so 3 sheds its copy first
+        let loads: HashMap<NodeId, u64> = [(0, 9), (1, 0), (2, 0), (3, 0)].into();
+        let wears: HashMap<NodeId, u64> = [(0, 0), (1, 0), (2, 0), (3, 7)].into();
+        let evicted = pc.gc(
+            2,
+            |n| loads.get(&n).copied().unwrap_or(0),
+            |n| wears.get(&n).copied().unwrap_or(0),
+        );
+        assert_eq!(evicted, vec![(3, 0xF3), (0, 0xF3)], "worn first, then loaded");
+        assert_eq!(pc.holders(0xF3), vec![1, 2]);
     }
 
     #[test]
@@ -1354,12 +1419,12 @@ mod tests {
                 pc.register(n, d);
             }
         }
-        pc.gc(3, |n| n as u64);
+        pc.gc(3, |n| n as u64, |_| 0);
         for d in [0xA1u64, 0xA2, 0xA3] {
             assert_eq!(pc.holders(d).len(), 3, "invariant: >=k holders per layer");
         }
         // a second pass is a no-op
-        assert!(pc.gc(3, |n| n as u64).is_empty());
+        assert!(pc.gc(3, |n| n as u64, |_| 0).is_empty());
     }
 
     // --- chunk-granular behavior --------------------------------------------
@@ -1387,7 +1452,7 @@ mod tests {
 
     #[test]
     fn chunked_fetch_moves_only_missing_chunks() {
-        let (t, mut f) = rig(4, 1);
+        let (t, mut f, mut b) = rig(4, 1);
         let mut pc = PoolLayerCache::new();
         let recipe = recipe4();
         assert!(pc.describe_chunks(0xB10B, &recipe));
@@ -1395,7 +1460,7 @@ mod tests {
         // node 1 already holds half the chunks
         pc.register_chunk(1, 0xB10B, recipe[0].0);
         pc.register_chunk(1, 0xB10B, recipe[1].0);
-        let (src, lat) = pc.fetch(&mut f, &t, SimTime::ZERO, 1, 0xB10B, 4 << 20);
+        let (src, lat) = pc.fetch(wire!(f, t, b), 1, 0xB10B, 4 << 20);
         assert_eq!(src, FetchSource::Peer(0));
         assert!(lat > SimTime::ZERO);
         assert_eq!(pc.chunk_fetches, 2, "only the two missing chunks moved");
@@ -1406,7 +1471,7 @@ mod tests {
 
     #[test]
     fn mixed_fetch_splits_between_partial_peer_and_registry() {
-        let (t, mut f) = rig(4, 1);
+        let (t, mut f, mut b) = rig(4, 1);
         let mut pc = PoolLayerCache::new();
         let recipe = recipe4();
         assert!(pc.describe_chunks(0xB10B, &recipe));
@@ -1414,9 +1479,9 @@ mod tests {
         // holds anything
         pc.register_chunk(1, 0xB10B, recipe[0].0);
         pc.register_chunk(1, 0xB10B, recipe[1].0);
-        let (psrc, _) = pc.plan(&f, &t, 2, 0xB10B, 4 << 20);
+        let (psrc, _) = pc.plan(wire!(f, t, b), 2, 0xB10B, 4 << 20);
         assert_eq!(psrc, FetchSource::Mixed);
-        let (src, _) = pc.fetch(&mut f, &t, SimTime::ZERO, 2, 0xB10B, 4 << 20);
+        let (src, _) = pc.fetch(wire!(f, t, b), 2, 0xB10B, 4 << 20);
         assert_eq!(src, FetchSource::Mixed);
         assert_eq!(pc.chunk_bytes_peer, 2 << 20, "held chunks come over the intranet");
         assert_eq!(pc.chunk_bytes_registry, 2 << 20, "missing chunks cross the WAN");
@@ -1429,7 +1494,7 @@ mod tests {
     fn chunk_fetch_splits_across_peers_on_disjoint_links() {
         // peers in different arrays each hold half the chunks: the two
         // halves transfer on disjoint array backplanes and overlap
-        let (t, mut f) = rig(2, 2); // nodes 0,1 in array 0; 2,3 in array 1
+        let (t, mut f, mut b) = rig(2, 2); // nodes 0,1 in array 0; 2,3 in array 1
         let mut pc = PoolLayerCache::new();
         let recipe = recipe4();
         assert!(pc.describe_chunks(0xB10B, &recipe));
@@ -1437,7 +1502,7 @@ mod tests {
         pc.register_chunk(0, 0xB10B, recipe[1].0);
         pc.register_chunk(3, 0xB10B, recipe[2].0);
         pc.register_chunk(3, 0xB10B, recipe[3].0);
-        let (src, lat) = pc.fetch(&mut f, &t, SimTime::ZERO, 1, 0xB10B, 4 << 20);
+        let (src, lat) = pc.fetch(wire!(f, t, b), 1, 0xB10B, 4 << 20);
         assert_eq!(src, FetchSource::Mixed, "two peers served the layer");
         // node 0 -> 1 is same-array; 3 -> 1 crosses the tray.  Both
         // halves overlap, so the fetch ends with the cross-array half —
@@ -1471,7 +1536,7 @@ mod tests {
         pc.register(3, 0xB);
         // loads drive gc to evict nodes 2 and 3 from blob A
         let loads: HashMap<NodeId, u64> = [(0, 0), (1, 0), (2, 9), (3, 8)].into();
-        let evicted = pc.gc(2, |n| loads.get(&n).copied().unwrap_or(0));
+        let evicted = pc.gc(2, |n| loads.get(&n).copied().unwrap_or(0), |_| 0);
         assert!(evicted.contains(&(2, 0xA)) && evicted.contains(&(3, 0xA)), "{evicted:?}");
         assert_eq!(pc.holders(0xA), vec![0, 1]);
         // nodes 2 and 3 still hold the shared chunk through blob B
@@ -1524,7 +1589,7 @@ mod tests {
         assert_eq!(pc.holders(0xA), vec![0, 1, 2, 3]);
         assert_eq!(pc.holders(0xB), vec![0, 1, 2, 3]);
         // gc drops *registrations* until the derived holder count hits k
-        let evicted = pc.gc(2, |n| n as u64);
+        let evicted = pc.gc(2, |n| n as u64, |_| 0);
         assert_eq!(evicted, vec![(2, 0xA), (1, 0xA)], "most-loaded registrations go first");
         assert_eq!(pc.holders(0xA), vec![0, 3], "node 3 still derives A through B's chunk");
         assert_eq!(pc.holders(0xB), vec![0, 3]);
@@ -1563,7 +1628,7 @@ mod tests {
 
     #[test]
     fn purge_node_forgets_registrations_partials_and_markers() {
-        let (t, mut f) = rig(4, 1);
+        let (t, mut f, mut b) = rig(4, 1);
         let mut pc = PoolLayerCache::new();
         let recipe = recipe4();
         assert!(pc.describe_chunks(0xB10B, &recipe));
@@ -1573,7 +1638,7 @@ mod tests {
         pc.register_chunk(1, 0xD, 0xDC); // mid-pull partial, only copy of 0xDC
         pc.register(1, 0x77); // implicit blob, only copy
         pc.register(2, 0x88);
-        pc.prefetch(&mut f, &t, SimTime::ZERO, 1, 0x88, 1 << 20); // in-flight marker on node 1
+        pc.prefetch(wire!(f, t, b), 1, 0x88, 1 << 20); // in-flight marker on node 1
         let s = pc.purge_node(1);
         assert_eq!(s.registrations_dropped, 3, "0xB10B + 0x77 + the in-flight 0x88");
         assert_eq!(s.partials_dropped, 1);
@@ -1602,13 +1667,13 @@ mod tests {
         pc.purge_node(0);
         assert_eq!(pc.holders(0xF7), vec![1, 2]);
         // at k=2 with only live holders counted, gc must not evict
-        assert!(pc.gc(2, |_| 0).is_empty(), "both survivors are load-bearing");
+        assert!(pc.gc(2, |_| 0, |_| 0).is_empty(), "both survivors are load-bearing");
         assert_eq!(pc.holders(0xF7), vec![1, 2]);
     }
 
     #[test]
     fn rereplicate_restores_chunk_k_from_surviving_peers() {
-        let (mut t, mut f) = rig(4, 1);
+        let (mut t, mut f, mut b) = rig(4, 1);
         let mut pc = PoolLayerCache::new();
         let recipe = recipe4();
         assert!(pc.describe_chunks(0xB10B, &recipe));
@@ -1616,7 +1681,7 @@ mod tests {
         pc.register(1, 0xB10B);
         t.node_mut(1).unwrap().healthy = false;
         pc.purge_node(1);
-        let stats = pc.rereplicate_chunks(&mut f, &t, SimTime::ZERO, 2, &[]);
+        let stats = pc.rereplicate_chunks(wire!(f, t, b), 2, &[]);
         assert_eq!(stats.chunks_rereplicated, 4, "every chunk fell below k");
         assert_eq!(stats.copies_made, 4);
         assert_eq!(stats.bytes, 4 << 20);
@@ -1630,17 +1695,17 @@ mod tests {
         // bytes rode the background lane
         assert!(f.stats.prefetch_bytes >= 4 << 20);
         // a second pass is a no-op: the invariant already holds
-        let again = pc.rereplicate_chunks(&mut f, &t, SimTime::ZERO, 2, &[]);
+        let again = pc.rereplicate_chunks(wire!(f, t, b), 2, &[]);
         assert_eq!(again.copies_made, 0);
     }
 
     #[test]
     fn rereplicate_repulls_orphaned_chunks_from_the_registry() {
-        let (mut t, mut f) = rig(2, 2);
+        let (mut t, mut f, mut b) = rig(2, 2);
         let mut pc = PoolLayerCache::new();
         // the whole of array 0 (nodes 0,1) holds the only copies
-        pc.fetch(&mut f, &t, SimTime::ZERO, 0, 0x99, 2 << 20);
-        pc.fetch(&mut f, &t, SimTime::ZERO, 1, 0x99, 2 << 20);
+        pc.fetch(wire!(f, t, b), 0, 0x99, 2 << 20);
+        pc.fetch(wire!(f, t, b), 1, 0x99, 2 << 20);
         t.node_mut(0).unwrap().healthy = false;
         t.node_mut(1).unwrap().healthy = false;
         let mut orphans = Vec::new();
@@ -1648,7 +1713,7 @@ mod tests {
             orphans.extend(pc.purge_node(n).orphaned_chunks);
         }
         assert_eq!(orphans, vec![0x99], "array loss orphaned the blob");
-        let stats = pc.rereplicate_chunks(&mut f, &t, SimTime::ZERO, 2, &orphans);
+        let stats = pc.rereplicate_chunks(wire!(f, t, b), 2, &orphans);
         assert_eq!(stats.registry_chunks, 1, "first copy re-crossed the WAN");
         assert_eq!(stats.copies_made, 2, "then a peer copy restored k");
         assert_eq!(stats.bytes, 4 << 20, "sizes learned from the original fetch");
@@ -1659,7 +1724,7 @@ mod tests {
 
     #[test]
     fn rereplicate_spreads_copies_by_load() {
-        let (mut t, mut f) = rig(6, 1);
+        let (mut t, mut f, mut b) = rig(6, 1);
         let mut pc = PoolLayerCache::new();
         assert!(pc.describe_chunks(0xA, &[(0xC1, 1 << 20)]));
         assert!(pc.describe_chunks(0xB, &[(0xC2, 1 << 20)]));
@@ -1669,7 +1734,7 @@ mod tests {
         pc.register(1, 0xB);
         t.node_mut(1).unwrap().healthy = false;
         pc.purge_node(1);
-        let stats = pc.rereplicate_chunks(&mut f, &t, SimTime::ZERO, 2, &[]);
+        let stats = pc.rereplicate_chunks(wire!(f, t, b), 2, &[]);
         assert_eq!(stats.copies_made, 2);
         // least-loaded healthy non-holders get the copies: one each on
         // nodes 2 and 3, not both piled on node 2
@@ -1683,7 +1748,7 @@ mod tests {
         // is now maintained incrementally instead of recounted per pass
         // — after arbitrary churn it must equal the from-scratch count
         // of live holder entries, or heal targeting would drift
-        let (mut t, mut f) = rig(6, 1);
+        let (mut t, mut f, mut b) = rig(6, 1);
         let mut pc = PoolLayerCache::new();
         let recipe = recipe4();
         assert!(pc.describe_chunks(0xB10B, &recipe));
@@ -1693,12 +1758,12 @@ mod tests {
         pc.register(1, 0xA); // shares chunk 0xC000: refs 1 -> 2 on node 1
         pc.register_chunk(2, 0xB10B, recipe[0].0); // mid-pull partial
         pc.register(3, 0x77); // implicit single-chunk blob
-        pc.fetch(&mut f, &t, SimTime::ZERO, 4, 0x77, 1 << 20);
+        pc.fetch(wire!(f, t, b), 4, 0x77, 1 << 20);
         pc.evict(1, 0xB10B); // 0xC000 stays pinned on 1 through 0xA
         t.node_mut(0).unwrap().healthy = false;
         pc.purge_node(0);
-        pc.rereplicate_chunks(&mut f, &t, SimTime::ZERO, 2, &[]);
-        pc.gc(2, |n| n as u64);
+        pc.rereplicate_chunks(wire!(f, t, b), 2, &[]);
+        pc.gc(2, |n| n as u64, |_| 0);
         let mut recount: HashMap<NodeId, u64> = HashMap::new();
         for c in pc.chunks() {
             for n in pc.chunk_holders_of(c) {
@@ -1716,7 +1781,7 @@ mod tests {
 
     #[test]
     fn reroute_chunk_plans_survives_the_source_dying_mid_pull() {
-        let (mut t, mut f) = rig(4, 1);
+        let (mut t, f, _) = rig(4, 1);
         let mut pc = PoolLayerCache::new();
         let recipe = recipe4();
         assert!(pc.describe_chunks(0xB10B, &recipe));
@@ -1740,13 +1805,13 @@ mod tests {
 
     #[test]
     fn duplicate_chunks_in_a_recipe_transfer_once() {
-        let (t, mut f) = rig(3, 1);
+        let (t, mut f, mut b) = rig(3, 1);
         let mut pc = PoolLayerCache::new();
         // the blob repeats one chunk three times: only distinct content
         // moves
         assert!(pc.describe_chunks(0xD0B, &[(0xC9, 1 << 20), (0xC9, 1 << 20), (0xC9, 1 << 20)]));
         pc.register(0, 0xD0B);
-        let (src, _) = pc.fetch(&mut f, &t, SimTime::ZERO, 1, 0xD0B, 3 << 20);
+        let (src, _) = pc.fetch(wire!(f, t, b), 1, 0xD0B, 3 << 20);
         assert_eq!(src, FetchSource::Peer(0));
         assert_eq!(pc.chunk_fetches, 1, "dedup'd on the wire");
         assert_eq!(pc.bytes_from_peers, 1 << 20);

@@ -32,7 +32,6 @@
 
 use dockerssd::config::SystemConfig;
 use dockerssd::docker::{MiniDocker, Registry};
-use dockerssd::fabric::Fabric;
 use dockerssd::firmware::{fw_image, linux_image, CostModel, VirtualFw};
 use dockerssd::lambdafs::LambdaFs;
 use dockerssd::llm::disagg::{
@@ -41,6 +40,7 @@ use dockerssd::llm::disagg::{
 use dockerssd::llm::all_llms;
 use dockerssd::metrics::Table;
 use dockerssd::models::{evaluate, fig11_row, geomean_ratio, Component, ModelKind};
+use dockerssd::pool::WireRig;
 use dockerssd::ssd::SsdDevice;
 use dockerssd::util::{human_bytes, SimTime};
 use dockerssd::workloads::all_workloads;
@@ -280,11 +280,11 @@ fn docker_demo() {
     let mut fw = VirtualFw::new(&cfg.ssd);
     let reg = Registry::with_benchmark_images();
     let mut md = MiniDocker::new();
-    let mut fab = Fabric::of(&cfg);
+    let mut rig = WireRig::new(&cfg.pool, &cfg.etheron);
 
     println!("# docker pull mariadb (over the pool fabric + Ether-oN into λFS)");
     let r = md
-        .pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab, 0, SimTime::ZERO, "mariadb")
+        .pull(&mut fw, &mut fs, &mut dev, &reg, &mut rig.ctx(SimTime::ZERO), 0, "mariadb")
         .unwrap();
     println!("{} (simulated {:?})", r.output, r.done);
 

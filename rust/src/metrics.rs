@@ -215,6 +215,22 @@ pub mod names {
     pub const HEAL_REPLICAS_RESTARTED: &str = "heal.replicas_restarted";
     /// Dead nodes whose load entries and chunk registrations were purged.
     pub const HEAL_DEAD_NODES_PURGED: &str = "heal.dead_nodes_purged";
+
+    // Canonical names for the [`crate::ssd::ftl`] write-path economics
+    // surfaced pool-wide through `pool::FtlBank`.  Deliberately outside
+    // the `serve.`/`fabric.`/`sim.`/`chaos.`/`heal.` grep prefixes of
+    // ci/serve_smoke.sh, so exporting them changes no committed golden.
+    /// Pool-wide write amplification factor in fixed-point milli-units
+    /// (1000 = 1.0x): (host pages + GC-relocated pages) / host pages.
+    pub const FTL_WAF: &str = "ftl.waf";
+    /// Highest per-block erase count across every node's flash.
+    pub const FTL_WEAR_MAX: &str = "ftl.wear_max";
+    /// Valid pages GC moved to reclaim blocks (the WAF surcharge).
+    pub const FTL_GC_RELOCATED: &str = "ftl.gc_relocated_pages";
+    /// Pages programmed on behalf of hosts (the WAF denominator).
+    pub const FTL_HOST_PAGES: &str = "ftl.host_pages";
+    /// Blocks erased across the pool.
+    pub const FTL_ERASES: &str = "ftl.erases";
 }
 
 /// Named counters for substrate statistics.  `PartialEq` so two runs'

@@ -1,0 +1,251 @@
+//! Pool-level device-write economics and the bundled wire context.
+//!
+//! [`FtlBank`] keeps one scaled-down [`Ftl`] ledger per pool node so
+//! every byte class that *lands* on a node — CoW layer mutations, chunk
+//! installs on fetch/prefetch, KV session spill — prices its flash
+//! programs, GC relocation, and erase wear somewhere pool-visible
+//! (`ftl.waf`, `ftl.wear_max`, ...).  The bank is an economics model,
+//! not a latency model: writes occupy the bank's own per-node
+//! [`BusyResource`] (a write-back flush lane), so charging a fetch
+//! never perturbs fabric receipts or the serve schedule.  Node-local
+//! [`crate::ssd::SsdDevice`]s remain the latency model for host I/O.
+//!
+//! [`WireCtx`] bundles the `(fabric, topo, ftls, now)` borrow set that
+//! every cross-node byte-mover used to take as a bare parameter sprawl
+//! (`PoolLayerCache::{plan, fetch, prefetch}`, `MiniDocker::pull`).
+
+use crate::config::{EtherOnConfig, PoolConfig, SsdConfig};
+use crate::fabric::Fabric;
+use crate::metrics::{names, Counters};
+use crate::pool::topology::PoolTopology;
+use crate::sim::BusyResource;
+use crate::ssd::{Ftl, WriteReceipt};
+use crate::util::SimTime;
+
+/// Scaled model geometry for the per-node ledgers: 128 blocks of 32
+/// pages at 64 KiB per page (256 MiB logical per node, ~tens of KB of
+/// simulator memory) instead of the full multi-TB device geometry, so
+/// a thousand-node pool can carry a bank without the per-4KiB-page
+/// mapping cost.  Timing knobs (program/read/erase us, gc_threshold)
+/// are inherited from the base config.
+fn model_cfg(base: &SsdConfig) -> SsdConfig {
+    SsdConfig {
+        channels: 2,
+        packages_per_channel: 2,
+        blocks_per_package: 32,
+        pages_per_block: 32,
+        page_bytes: 64 << 10,
+        ..base.clone()
+    }
+}
+
+/// Per-node FTL ledgers for the whole pool, grown on demand.
+pub struct FtlBank {
+    cfg: SsdConfig,
+    ftls: Vec<Ftl>,
+    busy: Vec<BusyResource>,
+    /// Per-node wrapping write cursor over the logical span, so
+    /// sustained traffic overwrites old LPNs and exercises GC.
+    cursor: Vec<u64>,
+}
+
+impl Default for FtlBank {
+    fn default() -> Self {
+        FtlBank::new(&SsdConfig::default())
+    }
+}
+
+impl FtlBank {
+    pub fn new(base: &SsdConfig) -> Self {
+        FtlBank {
+            cfg: model_cfg(base),
+            ftls: Vec::new(),
+            busy: Vec::new(),
+            cursor: Vec::new(),
+        }
+    }
+
+    /// Logical LPN span each node's cursor wraps over: 3/4 of the
+    /// physical pages, leaving over-provisioning headroom for GC.
+    pub fn logical_span(&self) -> u64 {
+        let pages = self.cfg.total_packages() as u64
+            * self.cfg.blocks_per_package as u64
+            * self.cfg.pages_per_block as u64;
+        pages * 3 / 4
+    }
+
+    fn ensure(&mut self, node: u32) {
+        while self.ftls.len() <= node as usize {
+            self.ftls.push(Ftl::new(&self.cfg));
+            self.busy.push(BusyResource::default());
+            self.cursor.push(0);
+        }
+    }
+
+    /// Charge `bytes` landing on `node` at `at`: pages program through
+    /// the node's ledger (forcing GC as it fills), and the cost lands on
+    /// the node's write-back flush lane — never on the caller's clock.
+    pub fn write(&mut self, node: u32, at: SimTime, bytes: u64) -> WriteReceipt {
+        self.ensure(node);
+        let n = node as usize;
+        let pages = bytes.div_ceil(self.cfg.page_bytes as u64).max(1);
+        let span = self.logical_span();
+        let lpn = self.cursor[n] % span;
+        let receipt = if lpn + pages <= span {
+            self.ftls[n].write(&mut self.busy[n], at, lpn, pages)
+        } else {
+            // the write straddles the span end: wrap onto LPN 0
+            let head = span - lpn;
+            let a = self.ftls[n].write(&mut self.busy[n], at, lpn, head);
+            let b = self.ftls[n].write(&mut self.busy[n], a.done, 0, pages - head);
+            WriteReceipt {
+                pages,
+                relocated_pages: a.relocated_pages + b.relocated_pages,
+                erased_blocks: a.erased_blocks + b.erased_blocks,
+                done: b.done,
+            }
+        };
+        self.cursor[n] = (lpn + pages) % span;
+        receipt
+    }
+
+    /// `node`'s write amplification in milli-units (1000 = 1.0x for a
+    /// node the bank has never charged).
+    pub fn waf_milli_of(&self, node: u32) -> u64 {
+        self.ftls.get(node as usize).map_or(1000, Ftl::waf_milli)
+    }
+
+    /// `node`'s highest per-block erase count (0 for an uncharged node).
+    pub fn wear_max_of(&self, node: u32) -> u64 {
+        self.ftls.get(node as usize).map_or(0, |f| f.stats.wear_max)
+    }
+
+    /// Export pool-wide flash economics under the canonical `ftl.*`
+    /// names: sums over nodes, except `ftl.waf` (recomputed from the
+    /// pooled page counts) and `ftl.wear_max` (the pool-wide max).
+    pub fn export_counters(&self, c: &mut Counters) {
+        let mut host = 0u64;
+        let mut reloc = 0u64;
+        let mut erases = 0u64;
+        let mut wear = 0u64;
+        for f in &self.ftls {
+            host += f.stats.host_pages;
+            reloc += f.stats.gc_relocated_pages;
+            erases += f.stats.erases;
+            wear = wear.max(f.stats.wear_max);
+        }
+        let waf = if host == 0 { 1000 } else { (host + reloc) * 1000 / host };
+        c.add(names::FTL_WAF, waf);
+        c.add(names::FTL_WEAR_MAX, wear);
+        c.add(names::FTL_GC_RELOCATED, reloc);
+        c.add(names::FTL_HOST_PAGES, host);
+        c.add(names::FTL_ERASES, erases);
+    }
+}
+
+/// The borrow set every cross-node byte-mover needs: the shared wire,
+/// the pool shape, the write-economics bank, and the caller's clock.
+/// Replaces the `(fabric, topo, now)` parameter sprawl — see
+/// [`crate::layerstore::PoolLayerCache`] and
+/// [`crate::docker::MiniDocker`].
+pub struct WireCtx<'a> {
+    pub fabric: &'a mut Fabric,
+    pub topo: &'a PoolTopology,
+    pub ftls: &'a mut FtlBank,
+    pub now: SimTime,
+}
+
+impl<'a> WireCtx<'a> {
+    pub fn at(
+        fabric: &'a mut Fabric,
+        topo: &'a PoolTopology,
+        ftls: &'a mut FtlBank,
+        now: SimTime,
+    ) -> Self {
+        WireCtx { fabric, topo, ftls, now }
+    }
+}
+
+/// Owns a fabric + topology + bank triple and lends out [`WireCtx`]s —
+/// the standalone-caller convenience (tests, benches, examples) for
+/// code that has no [`crate::sim::PoolSim`] to borrow the pieces from.
+pub struct WireRig {
+    pub fabric: Fabric,
+    pub topo: PoolTopology,
+    pub ftls: FtlBank,
+}
+
+impl WireRig {
+    pub fn new(pool: &PoolConfig, etheron: &EtherOnConfig) -> Self {
+        WireRig {
+            fabric: Fabric::new(pool, etheron),
+            topo: PoolTopology::build(pool),
+            ftls: FtlBank::default(),
+        }
+    }
+
+    pub fn ctx(&mut self, now: SimTime) -> WireCtx<'_> {
+        WireCtx::at(&mut self.fabric, &self.topo, &mut self.ftls, now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bank_grows_on_demand_and_prices_bytes() {
+        let mut bank = FtlBank::default();
+        assert_eq!(bank.waf_milli_of(9), 1000, "uncharged node reads as 1.0x");
+        let r = bank.write(9, SimTime::ZERO, 200 << 10);
+        assert_eq!(r.pages, 4, "200 KiB = 4 x 64 KiB model pages");
+        assert!(r.done > SimTime::ZERO);
+        assert_eq!(bank.wear_max_of(3), 0, "other nodes untouched");
+    }
+
+    #[test]
+    fn churn_forces_gc_and_waf_above_one() {
+        let mut bank = FtlBank::default();
+        // 3 logical spans' worth of traffic must wrap, overwrite, and GC
+        let span_bytes = bank.logical_span() * (64 << 10);
+        let mut t = SimTime::ZERO;
+        let mut written = 0u64;
+        while written < 3 * span_bytes {
+            let r = bank.write(0, t, 4 << 20);
+            t = r.done;
+            written += 4 << 20;
+        }
+        assert!(bank.waf_milli_of(0) > 1000, "sustained churn must amplify");
+        assert!(bank.wear_max_of(0) >= 1);
+        let mut c = Counters::new();
+        bank.export_counters(&mut c);
+        assert!(c.get(names::FTL_WAF) > 1000);
+        assert!(c.get(names::FTL_GC_RELOCATED) > 0);
+        assert!(c.get(names::FTL_ERASES) > 0);
+        assert!(c.get(names::FTL_HOST_PAGES) >= 3 * bank.logical_span());
+    }
+
+    #[test]
+    fn same_traffic_same_ledger() {
+        let run = || {
+            let mut bank = FtlBank::default();
+            let mut t = SimTime::ZERO;
+            for i in 0..200u64 {
+                let r = bank.write((i % 3) as u32, t, (i + 1) * 100_000);
+                t = r.done;
+            }
+            let mut c = Counters::new();
+            bank.export_counters(&mut c);
+            c
+        };
+        assert_eq!(run(), run(), "the ledger must replay byte-identically");
+    }
+
+    #[test]
+    fn wire_rig_lends_a_ctx() {
+        let mut rig = WireRig::new(&PoolConfig::default(), &EtherOnConfig::default());
+        let ctx = rig.ctx(SimTime::us(5));
+        assert_eq!(ctx.now, SimTime::us(5));
+        assert!(!ctx.topo.nodes().is_empty());
+    }
+}

@@ -3,8 +3,10 @@
 //! PCIe switches, each with its own IP, orchestrated like a
 //! docker-compose/Kubernetes deployment.
 
+pub mod devices;
 pub mod orchestrator;
 pub mod topology;
 
+pub use devices::{FtlBank, WireCtx, WireRig};
 pub use orchestrator::{BootStormReport, DeploymentSpec, Orchestrator, RestartPolicy};
 pub use topology::{NodeId, PoolNode, PoolTopology};

@@ -3,8 +3,8 @@
 //! replicas on healthy nodes, monitor them through mini-docker logs,
 //! restart per policy.
 
+use super::devices::{FtlBank, WireCtx};
 use super::topology::{NodeId, PoolTopology};
-use crate::fabric::Fabric;
 use crate::layerstore::{FetchSource, PoolLayerCache};
 use crate::sim::PoolSim;
 use crate::util::SimTime;
@@ -115,17 +115,20 @@ impl Orchestrator {
     /// are (being) resident, so the boot-path fetch is a local hit that
     /// settles the in-flight tail.
     ///
-    /// `layers` is the image's (blob digest, bytes) list.
+    /// `layers` is the image's (blob digest, bytes) list.  `wire` bundles
+    /// the pool's fabric, topology, FTL bank, and clock
+    /// ([`WireCtx`]): placement *reads* the bank — a node whose flash is
+    /// amplifying (WAF above 1.0x) pays a wear surcharge proportional to
+    /// its excess, so replicas drift away from worn devices — and the
+    /// prefetches it kicks off *charge* the bank at the chosen node.
     pub fn deploy_with_layers(
         &mut self,
-        topo: &PoolTopology,
-        fabric: &mut Fabric,
+        wire: &mut WireCtx,
         spec: &DeploymentSpec,
         cache: &mut PoolLayerCache,
         layers: &[(u64, u64)],
-        now: SimTime,
     ) -> Result<Vec<NodeId>, String> {
-        let healthy: Vec<NodeId> = topo.healthy_nodes().map(|n| n.id).collect();
+        let healthy: Vec<NodeId> = wire.topo.healthy_nodes().map(|n| n.id).collect();
         if healthy.is_empty() {
             return Err("no healthy nodes".into());
         }
@@ -134,7 +137,7 @@ impl Orchestrator {
         // node and a once-queued warm node tie and load breaks the tie)
         let queued_cost: SimTime = layers
             .iter()
-            .fold(SimTime::ZERO, |acc, (_, b)| acc + fabric.unit_cost(*b));
+            .fold(SimTime::ZERO, |acc, (_, b)| acc + wire.fabric.unit_cost(*b));
         let mut placed = Vec::new();
         for r in 0..spec.replicas {
             // single pass; the key is unique (it ends in the node id),
@@ -147,9 +150,19 @@ impl Orchestrator {
                         .iter()
                         .filter(|(d, _)| !cache.node_has(**id, *d))
                         .fold(SimTime::ZERO, |acc, (d, b)| {
-                            acc + cache.plan(fabric, topo, **id, *d, *b).1
+                            acc + cache.plan(wire, **id, *d, *b).1
                         });
-                    (missing + queued_cost.scale(load as f64), load, **id)
+                    // flash-wear surcharge: WAF of 1.0x (or an uncharged
+                    // node) adds zero, so a fresh pool scores exactly as
+                    // it did before the bank existed
+                    let waf_excess = wire.ftls.waf_milli_of(**id).saturating_sub(1000);
+                    (
+                        missing
+                            + queued_cost.scale(load as f64)
+                            + queued_cost.scale(waf_excess as f64 / 1000.0),
+                        load,
+                        **id,
+                    )
                 })
                 .expect("healthy is non-empty");
             self.bump_load(node);
@@ -165,7 +178,7 @@ impl Orchestrator {
             // prefetch for every layer the node is missing
             for (d, b) in layers {
                 if !cache.node_has(node, *d) {
-                    cache.prefetch(fabric, topo, now, node, *d, *b);
+                    cache.prefetch(wire, node, *d, *b);
                 }
             }
         }
@@ -186,7 +199,13 @@ impl Orchestrator {
         layers: &[(u64, u64)],
     ) -> Result<Vec<NodeId>, String> {
         let now = sim.now();
-        self.deploy_with_layers(topo, &mut sim.fabric, spec, cache, layers, now)
+        let mut wire = WireCtx {
+            fabric: &mut sim.fabric,
+            topo,
+            ftls: &mut sim.ftls,
+            now,
+        };
+        self.deploy_with_layers(&mut wire, spec, cache, layers)
     }
 
     /// A replica boot storm on the pool's shared clock — the
@@ -222,9 +241,15 @@ impl Orchestrator {
             pulls_done: now,
             ..Default::default()
         };
+        let mut wire = WireCtx {
+            fabric: &mut sim.fabric,
+            topo,
+            ftls: &mut sim.ftls,
+            now,
+        };
         for &node in &placed {
             for &(digest, bytes) in layers {
-                let plans = cache.plan_chunks(&sim.fabric, topo, node, digest, bytes);
+                let plans = cache.plan_chunks(wire.fabric, wire.topo, node, digest, bytes);
                 let missing = plans.iter().any(|p| p.source != FetchSource::Local);
                 let wan = plans.iter().any(|p| p.source == FetchSource::Registry);
                 if !missing {
@@ -234,14 +259,13 @@ impl Orchestrator {
                     // any chunk no pool node holds boots like a cold
                     // pull: fetch foreground (peer-held chunks still ride
                     // the intranet; only the missing ones cross the WAN)
-                    let (_, latency) =
-                        cache.fetch(&mut sim.fabric, topo, now, node, digest, bytes);
+                    let (_, latency) = cache.fetch(&mut wire, node, digest, bytes);
                     report.registry_pulls += 1;
                     report.pulls_done = report.pulls_done.max(now + latency);
                 } else {
                     // every chunk is pool-warm (one peer or several):
                     // background prefetch
-                    cache.prefetch(&mut sim.fabric, topo, now, node, digest, bytes);
+                    cache.prefetch(&mut wire, node, digest, bytes);
                     report.peer_prefetches += 1;
                 }
             }
@@ -250,10 +274,18 @@ impl Orchestrator {
     }
 
     /// Run pool-wide layer GC with this orchestrator's replica counts as
-    /// the load signal: layers held by more than `k` nodes are dropped
-    /// from the most-loaded holders first (see [`PoolLayerCache::gc`]).
-    pub fn gc_pool(&self, cache: &mut PoolLayerCache, k: usize) -> Vec<(NodeId, u64)> {
-        cache.gc(k, |n| self.load_of(n) as u64)
+    /// the load signal and the FTL bank's wear ledger as the tiebreaker
+    /// override: layers held by more than `k` nodes are dropped from the
+    /// most-*worn* holders first, then the most-loaded (see
+    /// [`PoolLayerCache::gc`]) — spare copies come off the devices
+    /// closest to wear-out.
+    pub fn gc_pool(
+        &self,
+        cache: &mut PoolLayerCache,
+        ftls: &FtlBank,
+        k: usize,
+    ) -> Vec<(NodeId, u64)> {
+        cache.gc(k, |n| self.load_of(n) as u64, |n| ftls.wear_max_of(n))
     }
 
     pub fn placements(&self, deployment: &str) -> Vec<&Placement> {
@@ -440,8 +472,14 @@ mod tests {
         cache.register(2, 0xB);
         cache.register(1, 0xA);
         let layers = [(0xA, 1000u64), (0xB, 2000u64)];
+        let mut bank = FtlBank::default();
         let placed = orch
-            .deploy_with_layers(&t, &mut f, &spec("infer", 3), &mut cache, &layers, SimTime::ZERO)
+            .deploy_with_layers(
+                &mut WireCtx::at(&mut f, &t, &mut bank, SimTime::ZERO),
+                &spec("infer", 3),
+                &mut cache,
+                &layers,
+            )
             .unwrap();
         assert_eq!(placed[0], 2, "fully warm node first");
         assert_eq!(placed[1], 1, "partially warm node next: fetching 2000B beats one queued replica");
@@ -463,13 +501,50 @@ mod tests {
         let mut orch = Orchestrator::new();
         let mut cache = PoolLayerCache::new();
         let layers = [(0xA, 1000u64)];
+        let mut bank = FtlBank::default();
         let placed = orch
-            .deploy_with_layers(&t, &mut f, &spec("infer", 4), &mut cache, &layers, SimTime::ZERO)
+            .deploy_with_layers(
+                &mut WireCtx::at(&mut f, &t, &mut bank, SimTime::ZERO),
+                &spec("infer", 4),
+                &mut cache,
+                &layers,
+            )
             .unwrap();
         let mut sorted = placed.clone();
         sorted.sort();
         sorted.dedup();
         assert_eq!(sorted.len(), 4, "cold pool still spreads: {placed:?}");
+    }
+
+    #[test]
+    fn placement_penalizes_worn_flash() {
+        let t = topo(4);
+        let mut f = fabric(4);
+        let mut orch = Orchestrator::new();
+        let mut cache = PoolLayerCache::new();
+        // churn node 0's flash until its WAF exceeds 1.0x; every other
+        // node is untouched and otherwise ties with node 0 (all cold,
+        // load 0), so without the wear surcharge the id tiebreak would
+        // put the first replica on node 0
+        let mut bank = FtlBank::default();
+        let span_bytes = bank.logical_span() * (64 << 10);
+        let mut now = SimTime::ZERO;
+        let mut written = 0u64;
+        while written < 3 * span_bytes {
+            let r = bank.write(0, now, 4 << 20);
+            now = r.done;
+            written += 4 << 20;
+        }
+        assert!(bank.waf_milli_of(0) > 1000);
+        let placed = orch
+            .deploy_with_layers(
+                &mut WireCtx::at(&mut f, &t, &mut bank, SimTime::ZERO),
+                &spec("infer", 1),
+                &mut cache,
+                &[(0xA, 1000u64)],
+            )
+            .unwrap();
+        assert_eq!(placed, vec![1], "the wear surcharge breaks the cold tie off node 0");
     }
 
     #[test]
@@ -480,8 +555,14 @@ mod tests {
         cache.register(0, 0xA);
         t.node_mut(0).unwrap().healthy = false;
         let mut orch = Orchestrator::new();
+        let mut bank = FtlBank::default();
         let placed = orch
-            .deploy_with_layers(&t, &mut f, &spec("infer", 2), &mut cache, &[(0xA, 512)], SimTime::ZERO)
+            .deploy_with_layers(
+                &mut WireCtx::at(&mut f, &t, &mut bank, SimTime::ZERO),
+                &spec("infer", 2),
+                &mut cache,
+                &[(0xA, 512)],
+            )
             .unwrap();
         assert!(!placed.contains(&0));
     }
@@ -493,20 +574,29 @@ mod tests {
         let mut orch = Orchestrator::new();
         let mut cache = PoolLayerCache::new();
         let layers = [(0xA, 4096u64), (0xB, 8192u64)];
+        let mut bank = FtlBank::default();
         let placed = orch
-            .deploy_with_layers(&t, &mut f, &spec("infer", 2), &mut cache, &layers, SimTime::ZERO)
+            .deploy_with_layers(
+                &mut WireCtx::at(&mut f, &t, &mut bank, SimTime::ZERO),
+                &spec("infer", 2),
+                &mut cache,
+                &layers,
+            )
             .unwrap();
         assert_eq!(cache.prefetch_bytes, 2 * (4096 + 8192), "both replicas prefetched");
         assert!(f.transfers_in_flight() >= 1, "prefetch is scheduled on the engine");
         f.run_to_idle();
         assert!(f.stats.transfers_bg >= 4, "prefetch rides the background lane");
+        assert!(bank.wear_max_of(placed[0]) <= 1, "prefetched layers charge the bank lightly");
         // the boot-path fetch rides the prefetch: it hits locally and at
         // most waits for the in-flight tail, never re-transfers
         for nid in placed {
             for (d, b) in layers {
-                let (src, lat) = cache.fetch(&mut f, &t, SimTime::ZERO, nid, d, b);
+                let (src, lat) =
+                    cache.fetch(&mut WireCtx::at(&mut f, &t, &mut bank, SimTime::ZERO), nid, d, b);
                 assert_eq!(src, FetchSource::Local);
-                let (src2, lat2) = cache.fetch(&mut f, &t, lat, nid, d, b);
+                let (src2, lat2) =
+                    cache.fetch(&mut WireCtx::at(&mut f, &t, &mut bank, lat), nid, d, b);
                 assert_eq!(src2, FetchSource::Local);
                 assert_eq!(lat2, SimTime::ZERO, "resident once the tail has landed");
             }
@@ -585,7 +675,7 @@ mod tests {
         for n in 0..4 {
             cache.register(n, 0xD);
         }
-        let evicted = orch.gc_pool(&mut cache, 2);
+        let evicted = orch.gc_pool(&mut cache, &FtlBank::default(), 2);
         assert_eq!(evicted.len(), 2);
         assert!(
             evicted.contains(&(0, 0xD)),

@@ -24,6 +24,7 @@ use std::collections::{BinaryHeap, VecDeque};
 use crate::config::{EtherOnConfig, PoolConfig, SystemConfig};
 use crate::fabric::Fabric;
 use crate::metrics::{names, Counters};
+use crate::pool::devices::FtlBank;
 use crate::util::SimTime;
 
 /// A scheduled event: fires at `at`, carries an opaque `tag`.
@@ -307,6 +308,9 @@ pub struct PoolSim {
     pub queue: EventQueue,
     /// The shared wire: every cross-node/host/WAN byte crosses it.
     pub fabric: Fabric,
+    /// Per-node flash-write ledgers: every byte class that lands on a
+    /// node's device charges its FTL here (`ftl.*` counters).
+    pub ftls: FtlBank,
     /// Per-node compute (batch execution, ISP work).
     compute: Vec<BusyResource>,
 }
@@ -320,6 +324,7 @@ impl PoolSim {
         PoolSim {
             queue: EventQueue::new(),
             fabric: Fabric::new(pool, etheron),
+            ftls: FtlBank::default(),
             compute: vec![BusyResource::default(); pool.total_nodes() as usize],
         }
     }
@@ -349,6 +354,7 @@ impl PoolSim {
     pub fn export_counters(&self, c: &mut Counters) {
         self.queue.export_counters(c);
         self.fabric.export_counters(c);
+        self.ftls.export_counters(c);
     }
 }
 

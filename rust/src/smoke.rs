@@ -16,7 +16,7 @@ use crate::coordinator::{serve, serve_with_hook, EchoExecutor, ServeParams, Serv
 use crate::layerstore::PoolLayerCache;
 use crate::metrics::{Counters, Table};
 use crate::pool::{
-    BootStormReport, DeploymentSpec, NodeId, Orchestrator, PoolTopology, RestartPolicy,
+    BootStormReport, DeploymentSpec, NodeId, Orchestrator, PoolTopology, RestartPolicy, WireCtx,
 };
 use crate::sim::PoolSim;
 use crate::util::SimTime;
@@ -135,7 +135,12 @@ pub fn run(p: &SmokeParams) -> Result<SmokeOutcome, String> {
             .collect();
         for node in warm {
             for (d, b) in boot_storm_layers() {
-                cache.fetch(&mut sim.fabric, &topo, SimTime::ZERO, node, d, b);
+                cache.fetch(
+                    &mut WireCtx::at(&mut sim.fabric, &topo, &mut sim.ftls, SimTime::ZERO),
+                    node,
+                    d,
+                    b,
+                );
             }
         }
     }
@@ -270,6 +275,11 @@ mod tests {
         let lines = counter_lines(&a.counters);
         assert!(!lines.contains("chaos."), "no chaos rows without a seed");
         assert!(!lines.contains("heal."), "no heal rows without a seed");
+        // the FTL ledger is exported for every run, but its rows stay
+        // off the pinned golden: the grep filter passes them through
+        // untouched (inert), exactly like layerstore.* rows
+        assert!(a.counters.get(crate::metrics::names::FTL_WAF) >= 1000);
+        assert!(!lines.contains("ftl."), "ftl rows never enter the golden");
     }
 
     #[test]

@@ -6,6 +6,8 @@
 //! paper's SimpleSSD backend implements.
 
 use crate::config::SsdConfig;
+use crate::sim::BusyResource;
+use crate::util::SimTime;
 
 /// Physical page address.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -27,7 +29,27 @@ pub struct FtlStats {
     pub maps: u64,
     pub remaps: u64,
     pub gc_runs: u64,
-    pub gc_moved_pages: u64,
+    pub gc_relocated_pages: u64,
+    /// Pages programmed on behalf of the host (the WAF denominator);
+    /// GC relocations go through [`Ftl::map_relocate`] and stay out.
+    pub host_pages: u64,
+    pub erases: u64,
+    /// Highest erase count across all blocks — the wear hotspot.
+    pub wear_max: u64,
+}
+
+/// What one [`Ftl::write`] cost: the flash economics of a host write,
+/// including any GC it forced.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WriteReceipt {
+    /// Host pages programmed.
+    pub pages: u64,
+    /// Valid pages GC relocated to make room (the WAF surcharge).
+    pub relocated_pages: u64,
+    /// Blocks erased by the GC cycles this write triggered.
+    pub erased_blocks: u64,
+    /// When the device resource frees up.
+    pub done: SimTime,
 }
 
 /// Per-block state.
@@ -39,6 +61,8 @@ struct BlockState {
     write_ptr: u32,
     valid: u32,
     erased: bool,
+    /// Program/erase cycles endured — the block's wear.
+    erase_cycles: u32,
 }
 
 impl BlockState {
@@ -48,6 +72,7 @@ impl BlockState {
             write_ptr: 0,
             valid: 0,
             erased: true,
+            erase_cycles: 0,
         }
     }
 
@@ -134,10 +159,24 @@ impl Ftl {
         self.map_write(lpn)
     }
 
-    /// Allocate a fresh physical page for (over)writing `lpn`, invalidating
-    /// any previous mapping.  Round-robin striping across packages keeps
-    /// the channels busy in parallel.
+    /// Allocate a fresh physical page for (over)writing `lpn` on behalf
+    /// of the host, invalidating any previous mapping.  Counted in
+    /// `stats.host_pages` (the WAF denominator).
     pub fn map_write(&mut self, lpn: u64) -> Ppa {
+        self.stats.host_pages += 1;
+        self.remap(lpn)
+    }
+
+    /// Allocate a fresh physical page for a GC relocation of `lpn`: the
+    /// same striping as [`Self::map_write`] but *not* host traffic, so
+    /// WAF = (host + relocated) / host stays honest.
+    pub fn map_relocate(&mut self, lpn: u64) -> Ppa {
+        self.remap(lpn)
+    }
+
+    /// Invalidate `lpn`'s old page and append it to an open block,
+    /// round-robin striping across packages to keep channels parallel.
+    fn remap(&mut self, lpn: u64) -> Ppa {
         // invalidate old location
         if let Some(old) = self.map.remove(&lpn) {
             let pkg = old.package_index(&self.cfg);
@@ -211,19 +250,67 @@ impl Ftl {
             .flatten()
             .copied()
             .collect();
-        self.stats.gc_moved_pages += valid.len() as u64;
+        self.stats.gc_relocated_pages += valid.len() as u64;
         Some((self.pkg_to_ppa(pkg, bi as u32, 0), valid))
     }
 
     /// Mark a GC'd block erased (called after relocation completes).
+    /// Reset in place so the block's erase-cycle wear survives the cycle.
     pub fn finish_gc(&mut self, victim: Ppa) {
         let pkg = victim.package_index(&self.cfg);
         let b = &mut self.blocks[pkg][victim.block as usize];
-        // relocated LPNs were remapped by map_write; drop any stragglers
-        *b = BlockState::new(self.cfg.pages_per_block);
+        // relocated LPNs were remapped by map_relocate; drop stragglers
+        b.slots.iter_mut().for_each(|s| *s = None);
+        b.write_ptr = 0;
+        b.valid = 0;
+        b.erased = true;
+        b.erase_cycles += 1;
+        self.stats.erases += 1;
+        self.stats.wear_max = self.stats.wear_max.max(b.erase_cycles as u64);
         self.free_count += 1;
         if self.open_block[pkg] == Some(victim.block) {
             self.open_block[pkg] = None;
+        }
+    }
+
+    /// Write amplification factor in fixed-point milli-units (1000 =
+    /// 1.0x): (host pages + GC-relocated pages) / host pages.  The
+    /// numerator includes the denominator, so this is >= 1000 always.
+    pub fn waf_milli(&self) -> u64 {
+        if self.stats.host_pages == 0 {
+            return 1000;
+        }
+        (self.stats.host_pages + self.stats.gc_relocated_pages) * 1000 / self.stats.host_pages
+    }
+
+    /// Price `pages` host page-writes starting at `lpn` on the device
+    /// resource `busy`: each page programs once, and any GC a page
+    /// forces adds its relocation reads/programs plus the block erase.
+    pub fn write(&mut self, busy: &mut BusyResource, at: SimTime, lpn: u64, pages: u64) -> WriteReceipt {
+        let mut relocated = 0u64;
+        let mut erased = 0u64;
+        for i in 0..pages {
+            if self.needs_gc() {
+                if let Some((victim, valid)) = self.pick_gc_victim() {
+                    relocated += valid.len() as u64;
+                    for l in valid {
+                        self.map_relocate(l);
+                    }
+                    self.finish_gc(victim);
+                    erased += 1;
+                }
+            }
+            self.map_write(lpn + i);
+        }
+        let dur = SimTime::us(self.cfg.program_us * pages)
+            + SimTime::us((self.cfg.read_us + self.cfg.program_us) * relocated)
+            + SimTime::us(self.cfg.erase_us * erased);
+        let done = busy.occupy(at, dur);
+        WriteReceipt {
+            pages,
+            relocated_pages: relocated,
+            erased_blocks: erased,
+            done,
         }
     }
 
@@ -335,5 +422,55 @@ mod tests {
         for l in 0..total_pages + 1 {
             ftl.map_write(l); // never overwrites, never GCs
         }
+    }
+
+    #[test]
+    fn write_receipt_prices_pages_and_gc() {
+        let c = cfg();
+        let mut ftl = Ftl::new(&c);
+        let mut busy = BusyResource::default();
+        // idle device: a clean write costs exactly pages x program time
+        let r = ftl.write(&mut busy, SimTime::ZERO, 0, 4);
+        assert_eq!(r.pages, 4);
+        assert_eq!((r.relocated_pages, r.erased_blocks), (0, 0));
+        assert_eq!(r.done, SimTime::us(c.program_us * 4));
+        assert_eq!(ftl.stats.host_pages, 4);
+        assert_eq!(ftl.waf_milli(), 1000);
+        // churn a small LPN window until GC kicks in and shows up in WAF
+        let mut t = r.done;
+        for round in 0..64u64 {
+            let rr = ftl.write(&mut busy, t, (round % 7) * 16, 16);
+            assert!(rr.done >= t, "device time must advance");
+            t = rr.done;
+        }
+        assert!(ftl.stats.gc_runs > 0, "churn must force GC");
+        assert!(ftl.waf_milli() > 1000, "relocations must amplify writes");
+        assert!(ftl.stats.wear_max >= 1, "an erase must register as wear");
+        assert_eq!(ftl.stats.erases, ftl.stats.gc_runs);
+    }
+
+    #[test]
+    fn relocations_stay_out_of_host_pages() {
+        let mut ftl = Ftl::new(&cfg());
+        ftl.map_write(1);
+        ftl.map_relocate(1);
+        assert_eq!(ftl.stats.host_pages, 1);
+        assert_eq!(ftl.stats.remaps, 1, "relocation still remaps the LPN");
+    }
+
+    #[test]
+    fn wear_survives_gc_reset_and_never_decreases() {
+        let c = cfg();
+        let mut ftl = Ftl::new(&c);
+        let mut busy = BusyResource::default();
+        let mut prev_wear = 0;
+        let mut t = SimTime::ZERO;
+        for round in 0..96u64 {
+            let r = ftl.write(&mut busy, t, (round % 5) * 16, 16);
+            t = r.done;
+            assert!(ftl.stats.wear_max >= prev_wear, "wear went backwards");
+            prev_wear = ftl.stats.wear_max;
+        }
+        assert!(prev_wear >= 2, "repeated GC must accumulate wear in place");
     }
 }

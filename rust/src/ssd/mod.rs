@@ -16,7 +16,7 @@ use crate::nvme::BlockBackend;
 use crate::sim::BusyResource;
 use crate::util::SimTime;
 
-pub use ftl::{Ftl, FtlStats, Ppa};
+pub use ftl::{Ftl, FtlStats, Ppa, WriteReceipt};
 pub use icl::{Icl, IclStats};
 
 /// Physical flash array: channels x packages with busy-time serialization.
@@ -176,7 +176,7 @@ impl SsdDevice {
         for lpn in valid {
             let src = self.ftl.translate_or_map(lpn);
             t = self.flash.read_page(t, src);
-            let dst = self.ftl.map_write(lpn);
+            let dst = self.ftl.map_relocate(lpn);
             t = self.flash.program_page(t, dst);
         }
         let t = self.flash.erase_block(t, victim_ppa);

@@ -17,18 +17,20 @@ use dockerssd::llm::{all_llms, Parallelism};
 use dockerssd::llm::disagg::{pool_step_time, step_traffic};
 use dockerssd::metrics::{names, Counters};
 use dockerssd::nvme::{NvmeController, NvmeSubsystem, PcieFunction, QueuePair};
-use dockerssd::pool::{DeploymentSpec, Orchestrator, PoolTopology, RestartPolicy};
+use dockerssd::pool::{
+    DeploymentSpec, FtlBank, Orchestrator, PoolTopology, RestartPolicy, WireCtx, WireRig,
+};
 use dockerssd::sim::PoolSim;
 use dockerssd::ssd::SsdDevice;
 use dockerssd::util::{Rng, SimTime};
 
-fn rig() -> (MiniDocker, VirtualFw, LambdaFs, SsdDevice, Registry, Fabric) {
+fn rig() -> (MiniDocker, VirtualFw, LambdaFs, SsdDevice, Registry, WireRig) {
     let cfg = SystemConfig::default();
     let dev = SsdDevice::new(cfg.ssd.clone());
     let fs = LambdaFs::over_device(&dev);
     let fw = VirtualFw::new(&cfg.ssd);
-    let fabric = Fabric::of(&cfg);
-    (MiniDocker::new(), fw, fs, dev, Registry::with_benchmark_images(), fabric)
+    let wire = WireRig::new(&cfg.pool, &cfg.etheron);
+    (MiniDocker::new(), fw, fs, dev, Registry::with_benchmark_images(), wire)
 }
 
 #[test]
@@ -36,7 +38,7 @@ fn docker_lifecycle_over_simulated_ssd() {
     let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = rig();
     // pull every benchmark image, run one container each
     for img in ["embed", "mariadb", "rocksdb", "pattern", "nginx", "vsftpd"] {
-        md.pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab, 0, SimTime::ZERO, img).unwrap();
+        md.pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab.ctx(SimTime::ZERO), 0, img).unwrap();
         let id = md.run(&mut fw, &mut fs, &mut dev, SimTime::ZERO, img).unwrap().output;
         md.log_line(&mut fs, &mut dev, SimTime::ZERO, &id, "ready").unwrap();
     }
@@ -58,7 +60,7 @@ fn docker_lifecycle_over_simulated_ssd() {
 #[test]
 fn isp_processing_respects_inode_locks_end_to_end() {
     let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = rig();
-    md.pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab, 0, SimTime::ZERO, "pattern").unwrap();
+    md.pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab.ctx(SimTime::ZERO), 0, "pattern").unwrap();
     let id = md.run(&mut fw, &mut fs, &mut dev, SimTime::ZERO, "pattern").unwrap().output;
 
     // host stages data
@@ -89,7 +91,7 @@ fn isp_processing_respects_inode_locks_end_to_end() {
 fn docker_cli_over_etheron_tcp_http() {
     // host docker-cli -> TCP over Ether-oN -> mini-docker HTTP parse
     let (mut md, mut fw, mut fs, mut dev, reg, mut fab) = rig();
-    md.pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab, 0, SimTime::ZERO, "nginx").unwrap();
+    md.pull(&mut fw, &mut fs, &mut dev, &reg, &mut fab.ctx(SimTime::ZERO), 0, "nginx").unwrap();
 
     let mut host = TcpStack::new();
     fw.tcp().listen(2375);
@@ -226,8 +228,14 @@ fn replica_boot_scales_with_unique_bytes_not_replicas() {
         replicas,
         restart: RestartPolicy::OnFailure,
     };
+    let mut bank = FtlBank::default();
     let placed = orch
-        .deploy_with_layers(&topo, &mut fabric, &spec, &mut cache, &layers, SimTime::ZERO)
+        .deploy_with_layers(
+            &mut WireCtx::at(&mut fabric, &topo, &mut bank, SimTime::ZERO),
+            &spec,
+            &mut cache,
+            &layers,
+        )
         .unwrap();
     assert_eq!(placed.len(), replicas as usize);
     // placement prefetched every missing layer over the background lane:
@@ -239,8 +247,12 @@ fn replica_boot_scales_with_unique_bytes_not_replicas() {
         let (dev, fs, fw, md, store) = &mut nodes[nid as usize];
         let mut t = SimTime::ZERO;
         for blob in blobs {
-            let (src, xfer) =
-                cache.fetch(&mut fabric, &topo, t, nid, blob.digest, blob.bytes.len() as u64);
+            let (src, xfer) = cache.fetch(
+                &mut WireCtx::at(&mut fabric, &topo, &mut bank, t),
+                nid,
+                blob.digest,
+                blob.bytes.len() as u64,
+            );
             sources.push(src);
             t += xfer;
             let r = fw.install.install_blob(fs, dev, store, t, &blob.bytes).unwrap();
@@ -327,6 +339,7 @@ fn degraded_peer_serves_only_chunks_it_holds() {
         };
         let topo = PoolTopology::build(&pcfg);
         let mut fabric = Fabric::new(&pcfg, &dockerssd::config::EtherOnConfig::default());
+        let mut bank = FtlBank::default();
         let mut cache = PoolLayerCache::new();
         assert!(cache.describe_chunks(layer, &recipe));
         // node 1 holds only the first half of the layer's chunks — with
@@ -336,14 +349,24 @@ fn degraded_peer_serves_only_chunks_it_holds() {
             cache.register_chunk(1, layer, *c);
         }
         assert!(!cache.node_has(1, layer), "a partial holder is not a full holder");
-        let (src, lat) = cache.fetch(&mut fabric, &topo, SimTime::ZERO, 2, layer, layer_bytes);
+        let (src, lat) = cache.fetch(
+            &mut WireCtx::at(&mut fabric, &topo, &mut bank, SimTime::ZERO),
+            2,
+            layer,
+            layer_bytes,
+        );
         assert_eq!(src, dockerssd::layerstore::FetchSource::Mixed);
         assert!(lat > SimTime::ZERO);
         assert!(cache.node_has(2, layer), "the fetcher assembled the full layer");
         // boot two more replicas: every chunk now has a pool holder, so
         // nothing more crosses the WAN
         for node in [3u32, 0] {
-            let (src, _) = cache.fetch(&mut fabric, &topo, SimTime::ZERO, node, layer, layer_bytes);
+            let (src, _) = cache.fetch(
+                &mut WireCtx::at(&mut fabric, &topo, &mut bank, SimTime::ZERO),
+                node,
+                layer,
+                layer_bytes,
+            );
             assert!(
                 !matches!(src, FetchSource::Registry),
                 "warm chunks must come from peers, got {src:?}"
@@ -414,12 +437,17 @@ fn fabric_contention_replica_boot_storm() {
     let shared_topo = PoolTopology::build(&shared_cfg);
     let mut shared_fabric = Fabric::new(&shared_cfg, &dockerssd::config::EtherOnConfig::default());
     let single = shared_fabric.estimate(Endpoint::Node(0), Endpoint::Node(1), bytes);
+    let mut bank = FtlBank::default();
     let mut cache = PoolLayerCache::new();
     cache.register(0, digest);
     let mut shared_makespan = SimTime::ZERO;
     for nid in 1..=n {
-        let (src, lat) =
-            cache.fetch(&mut shared_fabric, &shared_topo, SimTime::ZERO, nid, digest, bytes);
+        let (src, lat) = cache.fetch(
+            &mut WireCtx::at(&mut shared_fabric, &shared_topo, &mut bank, SimTime::ZERO),
+            nid,
+            digest,
+            bytes,
+        );
         assert!(matches!(src, FetchSource::Peer(_)));
         shared_makespan = shared_makespan.max(lat);
     }
@@ -438,8 +466,12 @@ fn fabric_contention_replica_boot_storm() {
     for a in 0..n {
         cache2.register(2 * a, digest);
         let to = 2 * a + 1;
-        let (src, lat) =
-            cache2.fetch(&mut disjoint_fabric, &disjoint_topo, SimTime::ZERO, to, digest, bytes);
+        let (src, lat) = cache2.fetch(
+            &mut WireCtx::at(&mut disjoint_fabric, &disjoint_topo, &mut bank, SimTime::ZERO),
+            to,
+            digest,
+            bytes,
+        );
         assert!(matches!(src, FetchSource::Peer(_)));
         disjoint_makespan = disjoint_makespan.max(lat);
     }
@@ -463,10 +495,20 @@ fn fabric_contention_replica_boot_storm() {
     let mut pf_fabric = Fabric::new(&shared_cfg, &dockerssd::config::EtherOnConfig::default());
     let mut pf_cache = PoolLayerCache::new();
     pf_cache.register(0, digest);
-    pf_cache.prefetch(&mut pf_fabric, &shared_topo, SimTime::ZERO, 1, digest, 64 << 20);
+    pf_cache.prefetch(
+        &mut WireCtx::at(&mut pf_fabric, &shared_topo, &mut bank, SimTime::ZERO),
+        1,
+        digest,
+        64 << 20,
+    );
     pf_fabric.advance_to(SimTime::ZERO); // grant the engine-scheduled prefetch the wire
     pf_cache.register(2, 0xFEED);
-    let (_, fg_lat) = pf_cache.fetch(&mut pf_fabric, &shared_topo, SimTime::ZERO, 3, 0xFEED, bytes);
+    let (_, fg_lat) = pf_cache.fetch(
+        &mut WireCtx::at(&mut pf_fabric, &shared_topo, &mut bank, SimTime::ZERO),
+        3,
+        0xFEED,
+        bytes,
+    );
     let idle = pf_fabric.estimate(Endpoint::Node(2), Endpoint::Node(3), bytes);
     let mtu = dockerssd::config::EtherOnConfig::default().mtu;
     let quantum = pf_fabric.link(LinkClass::Array(0)).unwrap().frame_quantum(mtu);
@@ -662,10 +704,20 @@ fn docker_pull_and_llm_step_contend_on_shared_link() {
         .sum();
 
     // pull alone on an idle fabric
+    let topo = PoolTopology::build(&cfg.pool);
+    let mut bank = FtlBank::default();
     let mut fa = Fabric::of(&cfg);
     let (mut md, mut fw, mut fs, mut dev) = node_stack();
     let pull_alone = md
-        .pull(&mut fw, &mut fs, &mut dev, &reg, &mut fa, 0, SimTime::ZERO, "mariadb")
+        .pull(
+            &mut fw,
+            &mut fs,
+            &mut dev,
+            &reg,
+            &mut WireCtx::at(&mut fa, &topo, &mut bank, SimTime::ZERO),
+            0,
+            "mariadb",
+        )
         .unwrap()
         .done;
 
@@ -679,7 +731,15 @@ fn docker_pull_and_llm_step_contend_on_shared_link() {
     let step_combined = pool_step_time(&mut fc, SimTime::ZERO, &traffic);
     let (mut md2, mut fw2, mut fs2, mut dev2) = node_stack();
     let pull_combined = md2
-        .pull(&mut fw2, &mut fs2, &mut dev2, &reg, &mut fc, 0, SimTime::ZERO, "mariadb")
+        .pull(
+            &mut fw2,
+            &mut fs2,
+            &mut dev2,
+            &reg,
+            &mut WireCtx::at(&mut fc, &topo, &mut bank, SimTime::ZERO),
+            0,
+            "mariadb",
+        )
         .unwrap()
         .done;
     let combined = step_combined.max(pull_combined);
@@ -770,4 +830,98 @@ fn streamed_wire_cuts_uplink_3x_on_table2_rows() {
         assert_eq!(sc, sc2, "{row}: same-seed streamed counters diverged");
         assert_eq!(sr.host_bytes, sr2.host_bytes, "{row}: host-byte accounting diverged");
     }
+}
+
+/// ISSUE 9 acceptance: on the image behind the `rocksdb-write` Table 2
+/// row, booting replicas through the dedup'd store with a CoW writable
+/// layer per replica programs strictly less flash than whole-blob
+/// copies — visible in `ftl.waf`/`ftl.wear_max`/`ftl.host_pages` — and
+/// two same-seed runs of the priced path are byte-identical.
+#[test]
+fn rocksdb_write_dedup_cow_reduces_flash_writes_vs_whole_blob() {
+    use dockerssd::workloads::workload_named;
+
+    let image = workload_named("rocksdb-write").unwrap().benchmark.name();
+    let cfg = SystemConfig::default();
+    let topo = PoolTopology::build(&cfg.pool);
+    let replicas = 4u32;
+
+    // whole-blob baseline: every replica re-lands the full image, so the
+    // node's FTL programs every byte N times over
+    let mut plain_bank = FtlBank::default();
+    {
+        let mut fabric = Fabric::of(&cfg);
+        let (mut md, mut fw, mut fs, mut dev, reg, _) = rig();
+        for _ in 0..replicas {
+            md.pull(
+                &mut fw,
+                &mut fs,
+                &mut dev,
+                &reg,
+                &mut WireCtx::at(&mut fabric, &topo, &mut plain_bank, SimTime::ZERO),
+                0,
+                image,
+            )
+            .unwrap();
+        }
+    }
+
+    // dedup + CoW path: the store lands the image once; later replicas
+    // reuse the resident layers and dirty one CoW page each
+    let priced = || {
+        let mut bank = FtlBank::default();
+        let mut fabric = Fabric::of(&cfg);
+        let (mut md, mut fw, mut fs, mut dev, reg, _) = rig();
+        let mut store = LayerStore::default();
+        let mut t = SimTime::ZERO;
+        for _ in 0..replicas {
+            let pulled = md
+                .pull_via_store(
+                    &mut fw,
+                    &mut fs,
+                    &mut dev,
+                    &reg,
+                    &mut store,
+                    &mut WireCtx::at(&mut fabric, &topo, &mut bank, t),
+                    0,
+                    image,
+                    None,
+                )
+                .unwrap();
+            let ran = md.run_cow(&mut fw, &mut fs, &mut dev, &mut store, pulled.done, image).unwrap();
+            let layer = md.cow_layer_of(&ran.output).unwrap();
+            md.cow
+                .write_at(&mut store, &mut fs, &mut dev, ran.done, layer, 0, &[0xD8; 4096])
+                .unwrap();
+            t = ran.done;
+        }
+        let mut c = Counters::new();
+        bank.export_counters(&mut c);
+        c
+    };
+    let c = priced();
+    let c2 = priced();
+    assert_eq!(c, c2, "same-seed priced boots must be byte-identical");
+
+    let mut plain = Counters::new();
+    plain_bank.export_counters(&mut plain);
+    assert!(
+        c.get(names::FTL_HOST_PAGES) < plain.get(names::FTL_HOST_PAGES),
+        "dedup + CoW must program strictly less flash: {} !< {}",
+        c.get(names::FTL_HOST_PAGES),
+        plain.get(names::FTL_HOST_PAGES)
+    );
+    // the store path lands the image exactly once; N whole-blob copies
+    // land it N times
+    assert_eq!(
+        plain.get(names::FTL_HOST_PAGES),
+        replicas as u64 * c.get(names::FTL_HOST_PAGES),
+        "whole-blob copies re-program per replica"
+    );
+    // flash economics are exported under the canonical names
+    assert!(c.get(names::FTL_WAF) >= 1000, "WAF can never drop below 1.0");
+    assert!(plain.get(names::FTL_WAF) >= 1000);
+    assert!(c.get(names::FTL_HOST_PAGES) > 0, "the cold pull must be priced");
+    // wear is tracked (a boot this small need not complete an erase)
+    let _ = c.get(names::FTL_WEAR_MAX);
 }

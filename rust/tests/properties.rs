@@ -706,7 +706,7 @@ fn prop_chunk_presence_iff_all_chunks_held() {
     use dockerssd::config::{EtherOnConfig, PoolConfig};
     use dockerssd::fabric::Fabric;
     use dockerssd::layerstore::PoolLayerCache;
-    use dockerssd::pool::PoolTopology;
+    use dockerssd::pool::{FtlBank, PoolTopology, WireCtx};
 
     let mut rng = Rng::new(31);
     for case in 0..scaled(40) {
@@ -717,6 +717,7 @@ fn prop_chunk_presence_iff_all_chunks_held() {
         };
         let topo = PoolTopology::build(&pcfg);
         let mut fabric = Fabric::new(&pcfg, &EtherOnConfig::default());
+        let mut bank = FtlBank::default();
         let mut pc = PoolLayerCache::new();
         // three blobs drawing on a shared pool of six chunks
         let chunk_pool: Vec<(u64, u64)> = (0..6u64).map(|i| (0xC00 + i, 64 << 10)).collect();
@@ -754,10 +755,20 @@ fn prop_chunk_presence_iff_all_chunks_held() {
                     pc.register_chunk(node, blob, c);
                 }
                 2 => {
-                    pc.fetch(&mut fabric, &topo, SimTime::ZERO, node, blob, 256 << 10);
+                    pc.fetch(
+                        &mut WireCtx::at(&mut fabric, &topo, &mut bank, SimTime::ZERO),
+                        node,
+                        blob,
+                        256 << 10,
+                    );
                 }
                 3 => {
-                    pc.prefetch(&mut fabric, &topo, SimTime::ZERO, node, blob, 256 << 10);
+                    pc.prefetch(
+                        &mut WireCtx::at(&mut fabric, &topo, &mut bank, SimTime::ZERO),
+                        node,
+                        blob,
+                        256 << 10,
+                    );
                 }
                 _ => pc.evict(node, blob),
             }
@@ -767,7 +778,7 @@ fn prop_chunk_presence_iff_all_chunks_held() {
             .iter()
             .map(|(c, _)| (*c, pc.chunk_holders_of(*c).len()))
             .collect();
-        pc.gc(2, |n| n as u64);
+        pc.gc(2, |n| n as u64, |_| 0);
         check(&pc, "after gc");
         for (c, _) in &chunk_pool {
             let after = pc.chunk_holders_of(*c).len();
@@ -789,7 +800,7 @@ fn prop_chunk_fetch_never_moves_more_than_blob_fetch() {
     use dockerssd::config::{EtherOnConfig, PoolConfig};
     use dockerssd::fabric::Fabric;
     use dockerssd::layerstore::PoolLayerCache;
-    use dockerssd::pool::PoolTopology;
+    use dockerssd::pool::{FtlBank, PoolTopology, WireCtx};
 
     let mut rng = Rng::new(32);
     const NCHUNKS: u64 = 8;
@@ -829,12 +840,24 @@ fn prop_chunk_fetch_never_moves_more_than_blob_fetch() {
         }
 
         let mut fab_c = Fabric::new(&pcfg, &EtherOnConfig::default());
-        chunked.fetch(&mut fab_c, &topo, SimTime::ZERO, 0, blob, bytes);
+        let mut bank_c = FtlBank::default();
+        chunked.fetch(
+            &mut WireCtx::at(&mut fab_c, &topo, &mut bank_c, SimTime::ZERO),
+            0,
+            blob,
+            bytes,
+        );
         let moved_chunk = chunked.bytes_from_peers + chunked.bytes_from_registry;
         let wan_chunk = chunked.bytes_from_registry;
 
         let mut fab_b = Fabric::new(&pcfg, &EtherOnConfig::default());
-        blobbed.fetch(&mut fab_b, &topo, SimTime::ZERO, 0, blob, bytes);
+        let mut bank_b = FtlBank::default();
+        blobbed.fetch(
+            &mut WireCtx::at(&mut fab_b, &topo, &mut bank_b, SimTime::ZERO),
+            0,
+            blob,
+            bytes,
+        );
         let moved_blob = blobbed.bytes_from_peers + blobbed.bytes_from_registry;
         let wan_blob = blobbed.bytes_from_registry;
 
@@ -936,7 +959,7 @@ fn prop_engine_prefetch_settles_no_earlier_than_optimistic() {
     use dockerssd::config::{EtherOnConfig, PoolConfig};
     use dockerssd::fabric::{Endpoint, Fabric, LinkClass, Priority};
     use dockerssd::layerstore::PoolLayerCache;
-    use dockerssd::pool::PoolTopology;
+    use dockerssd::pool::{FtlBank, PoolTopology, WireCtx};
 
     let mut rng = Rng::new(33);
     for case in 0..scaled(100) {
@@ -951,7 +974,13 @@ fn prop_engine_prefetch_settles_no_earlier_than_optimistic() {
         cache.register(0, 0xFE7C);
         let bytes = rng.below(32 << 20) + 4096;
         let optimistic = fabric.estimate(Endpoint::Node(0), Endpoint::Node(1), bytes);
-        let (_, handle) = cache.prefetch(&mut fabric, &topo, SimTime::ZERO, 1, 0xFE7C, bytes);
+        let mut bank = FtlBank::default();
+        let (_, handle) = cache.prefetch(
+            &mut WireCtx::at(&mut fabric, &topo, &mut bank, SimTime::ZERO),
+            1,
+            0xFE7C,
+            bytes,
+        );
         assert!(!handle.ids().is_empty(), "case {case}: prefetch rides the engine");
         fabric.advance_to(SimTime::ZERO); // grant the background flight
         // foreground traffic lands later on the same backplane
@@ -1293,5 +1322,61 @@ fn prop_chaos_node_death_mid_stream_never_loses_a_session() {
             c.get(names::FABRIC_STREAM_QUANTA) > 1,
             "case {case}: the migration must have streamed"
         );
+    }
+}
+
+// --- FTL write-path invariants (ISSUE 9) ------------------------------------
+
+/// Write-path pricing (ISSUE 9): for arbitrary interleavings of write
+/// sizes, nodes, and inter-arrival gaps, the per-node flash ledger obeys
+/// physics — WAF never drops below 1.0 (GC can only add writes, never
+/// erase the host's), `wear_max` is monotone non-decreasing, every
+/// receipt completes at or after its submission time, and receipts in
+/// sum account for every host page charged.
+#[test]
+fn prop_ftl_write_path_waf_and_wear_obey_physics() {
+    use dockerssd::metrics::{names, Counters};
+    use dockerssd::pool::FtlBank;
+
+    let mut rng = Rng::new(0x9F71);
+    for case in 0..scaled(20) {
+        let mut bank = FtlBank::default();
+        let nodes = 1 + rng.below(4) as u32;
+        let mut t = SimTime::ZERO;
+        let mut wear_floor = vec![0u64; nodes as usize];
+        let mut pages_by_receipt = vec![0u64; nodes as usize];
+        for op in 0..300 {
+            let node = rng.below(nodes as u64) as u32;
+            // sizes from sub-page dirties to multi-MiB layer installs
+            let bytes = 1 + rng.below(8 << 20);
+            t += SimTime::ns(rng.below(50_000));
+            let r = bank.write(node, t, bytes);
+            assert!(r.pages >= 1, "case {case} op {op}: every write programs a page");
+            assert!(
+                r.done >= t,
+                "case {case} op {op}: receipt completes before submission"
+            );
+            pages_by_receipt[node as usize] += r.pages;
+            let waf = bank.waf_milli_of(node);
+            assert!(
+                waf >= 1000,
+                "case {case} op {op}: WAF {waf} below 1.0 — GC deleted host writes"
+            );
+            let wear = bank.wear_max_of(node);
+            assert!(
+                wear >= wear_floor[node as usize],
+                "case {case} op {op}: wear_max regressed {} -> {wear}",
+                wear_floor[node as usize]
+            );
+            wear_floor[node as usize] = wear;
+        }
+        let mut c = Counters::new();
+        bank.export_counters(&mut c);
+        assert_eq!(
+            c.get(names::FTL_HOST_PAGES),
+            pages_by_receipt.iter().sum::<u64>(),
+            "case {case}: exported host pages disagree with the sum of receipts"
+        );
+        assert!(c.get(names::FTL_WAF) >= 1000, "case {case}: pooled WAF below 1.0");
     }
 }
