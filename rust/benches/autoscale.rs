@@ -1,0 +1,132 @@
+//! Flash-crowd autoscaling across every Table 2 row: replay each trace
+//! against an under-provisioned serving pool twice — once with the
+//! reactive controller (layers move at scale-out commit) and once with
+//! predictive prefetch (layers move on the first hot tick) — and
+//! compare cold-start p99 against each other and against the PR 4
+//! boot-storm baseline (cold registry pulls over the WAN).
+//!
+//! Emits machine-readable `BENCH_autoscale.json` ({name, metric,
+//! value}) records.  Two record families:
+//!
+//! * invariant metrics the committed baselines gate now —
+//!   `no_request_lost` (autoscaling never drops a request, any row, any
+//!   mode), `same_seed_identical` (two same-seed autoscaled replays are
+//!   byte-identical), and `predictive_beats_reactive` (on the pinned
+//!   flash-crowd rows, mariadb-tpch4 and nginx-filedown, predictive
+//!   cold-start p99 is strictly below both the reactive p99 and the
+//!   boot-storm baseline) are 1.0 by construction and regress to 0.0
+//!   only when the property breaks;
+//! * simulation-shape metrics (per-row `coldstart_p99_ns` for each
+//!   mode, `warm_boots`, `scale_outs`, `prefetch_hidden_bytes`) —
+//!   deterministic and machine-independent, reported as new benches
+//!   until committed to `bench_baselines/`.
+
+use dockerssd::benchkit::{emit_json, section, BenchRecord};
+use dockerssd::metrics::Table;
+use dockerssd::pool::{boot_storm_coldstart_baseline, flash_crowd};
+use dockerssd::workloads::all_workloads;
+
+const SEED: u64 = 42;
+/// The rows the tier-1 test pins the strict predictive win on: heavy
+/// flash crowds whose backlog far outlives the controller's sustain
+/// window.
+const PINNED: [&str; 2] = ["mariadb-tpch4", "nginx-filedown"];
+
+fn main() {
+    section("flash-crowd autoscaling: reactive vs predictive, every Table 2 row");
+    let baseline = boot_storm_coldstart_baseline();
+    println!("boot-storm cold-start baseline (2 cold WAN pulls): {baseline}\n");
+
+    let mut records = Vec::new();
+    let mut table = Table::new(vec![
+        "workload",
+        "outs_r",
+        "outs_p",
+        "warm_p",
+        "p99_reactive",
+        "p99_predictive",
+        "hidden_bytes",
+    ]);
+    let mut lost = 0u64;
+    let mut pinned_wins = 0usize;
+    for w in all_workloads() {
+        let row = w.full_name();
+        let reactive = flash_crowd(&row, SEED, false).expect("table 2 row replays");
+        let predictive = flash_crowd(&row, SEED, true).expect("table 2 row replays");
+        for out in [&reactive, &predictive] {
+            lost += (out.requests - out.report.responses.len()) as u64;
+        }
+        let (p99_r, p99_p) = (
+            reactive.scale.report.coldstart_p99(),
+            predictive.scale.report.coldstart_p99(),
+        );
+        if PINNED.contains(&row.as_str()) && p99_p < p99_r && p99_p < baseline {
+            pinned_wins += 1;
+        }
+        table.row(vec![
+            row.clone(),
+            format!("{}", reactive.scale.report.scale_outs),
+            format!("{}", predictive.scale.report.scale_outs),
+            format!("{}", predictive.scale.report.warm_boots),
+            format!("{p99_r}"),
+            format!("{p99_p}"),
+            format!("{}", predictive.scale.report.prefetch_hidden_bytes),
+        ]);
+        let name = format!("autoscale_{row}");
+        records.push(BenchRecord::new(
+            name.clone(),
+            "coldstart_p99_reactive_ns",
+            p99_r.as_ns() as f64,
+        ));
+        records.push(BenchRecord::new(
+            name.clone(),
+            "coldstart_p99_predictive_ns",
+            p99_p.as_ns() as f64,
+        ));
+        records.push(BenchRecord::new(
+            name.clone(),
+            "scale_outs",
+            predictive.scale.report.scale_outs as f64,
+        ));
+        records.push(BenchRecord::new(
+            name.clone(),
+            "warm_boots",
+            predictive.scale.report.warm_boots as f64,
+        ));
+        records.push(BenchRecord::new(
+            name,
+            "prefetch_hidden_bytes",
+            predictive.scale.report.prefetch_hidden_bytes as f64,
+        ));
+    }
+    println!("{}", table.render());
+
+    let a = flash_crowd("nginx-filedown", SEED, true).expect("replay");
+    let b = flash_crowd("nginx-filedown", SEED, true).expect("replay");
+    let identical = a.counters == b.counters;
+    assert!(identical, "same-seed autoscaled replays diverged");
+    assert_eq!(lost, 0, "autoscaling dropped {lost} requests");
+    let beats = pinned_wins == PINNED.len();
+    assert!(
+        beats,
+        "predictive won on {pinned_wins}/{} pinned rows",
+        PINNED.len()
+    );
+    records.push(BenchRecord::new(
+        "autoscale_invariants",
+        "no_request_lost",
+        if lost == 0 { 1.0 } else { 0.0 },
+    ));
+    records.push(BenchRecord::new(
+        "autoscale_invariants",
+        "same_seed_identical",
+        if identical { 1.0 } else { 0.0 },
+    ));
+    records.push(BenchRecord::new(
+        "autoscale_invariants",
+        "predictive_beats_reactive",
+        if beats { 1.0 } else { 0.0 },
+    ));
+
+    emit_json("BENCH_autoscale.json", &records).expect("write BENCH_autoscale.json");
+}

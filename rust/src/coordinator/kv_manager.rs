@@ -65,6 +65,19 @@ impl KvManager {
         bytes <= self.capacity
     }
 
+    /// Whether `node` would have headroom for `bytes` after releasing
+    /// `release` of its current residency — the feasibility check an
+    /// eviction policy runs *before* sacrificing sessions: if even
+    /// releasing everything evictable on a node cannot admit the
+    /// reservation, killing sessions there destroys state without
+    /// unblocking anything.
+    pub fn fits_after_release(&self, node: u32, release: u64, bytes: u64) -> bool {
+        self.used[node as usize]
+            .saturating_sub(release)
+            .checked_add(bytes)
+            .is_some_and(|u| u <= self.capacity)
+    }
+
     /// Try to reserve `bytes` on `node`.
     pub fn reserve(&mut self, node: u32, bytes: u64) -> bool {
         let u = &mut self.used[node as usize];
@@ -105,14 +118,11 @@ impl KvManager {
         bytes: u64,
     ) -> Option<TransferReceipt> {
         if !self.book_move(from, to, bytes)? {
-            // nothing moves; the fabric path is empty for same endpoints
-            return Some(fabric.transfer(
-                now,
-                Endpoint::Node(from),
-                Endpoint::Node(to),
-                bytes,
-                Priority::Foreground,
-            ));
+            // same-node "move": nothing crosses the wire, nothing
+            // reprograms flash — an explicit zero-byte receipt, not a
+            // zero-priced fabric transfer (the fabric never hears about
+            // it, so every fabric.* counter stays untouched)
+            return Some(TransferReceipt::immediate(now));
         }
         ftls.write(to, now, bytes);
         let handle = fabric.stream(
@@ -141,9 +151,12 @@ impl KvManager {
         to: u32,
         bytes: u64,
     ) -> Option<TransferReceipt> {
-        if self.book_move(from, to, bytes)? {
-            ftls.write(to, now, bytes);
+        if !self.book_move(from, to, bytes)? {
+            // same free same-node no-op as the streamed path: the
+            // fabric is never consulted
+            return Some(TransferReceipt::immediate(now));
         }
+        ftls.write(to, now, bytes);
         Some(fabric.transfer(
             now,
             Endpoint::Node(from),
@@ -275,6 +288,44 @@ mod tests {
         // bytes, the refused and same-node moves charged nothing
         assert_eq!(bank.wear_max_of(3), 0);
         assert!(bank.waf_milli_of(1) >= 1000);
+    }
+
+    #[test]
+    fn same_node_migrate_never_touches_the_fabric() {
+        use crate::config::{EtherOnConfig, PoolConfig};
+        use crate::metrics::Counters;
+
+        let mut f = Fabric::new(
+            &PoolConfig {
+                nodes_per_array: 4,
+                arrays: 1,
+                ..Default::default()
+            },
+            &EtherOnConfig::default(),
+        );
+        let mut bank = FtlBank::default();
+        let mut kv = KvManager::new(4, 1000);
+        kv.reserve(2, 600);
+        let mut before = Counters::new();
+        f.export_counters(&mut before);
+        // both migration shapes: the same-node case is an explicit
+        // zero-length receipt, not a from==to transfer priced at zero
+        let r = kv.migrate(&mut f, &mut bank, SimTime::ms(1), 2, 2, 600).unwrap();
+        assert_eq!(r.bytes, 0);
+        assert_eq!(r.latency(), SimTime::ZERO);
+        assert_eq!(r.finish, SimTime::ms(1));
+        let m = kv
+            .migrate_monolithic(&mut f, &mut bank, SimTime::ms(2), 2, 2, 600)
+            .unwrap();
+        assert_eq!(m.bytes, 0);
+        assert_eq!(m.latency(), SimTime::ZERO);
+        let mut after = Counters::new();
+        f.export_counters(&mut after);
+        assert_eq!(before, after, "same-node moves leave every fabric.* counter untouched");
+        // residency untouched, nothing charged to flash
+        assert_eq!(kv.used_of(2), 600);
+        assert_eq!(kv.rejected, 0);
+        assert_eq!(bank.wear_max_of(2), 0);
     }
 
     #[test]

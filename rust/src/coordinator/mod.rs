@@ -26,8 +26,8 @@ pub use batcher::{Batch, Batcher};
 pub use kv_manager::KvManager;
 pub use router::Router;
 pub use server::{
-    serve, serve_with_hook, BatchExecutor, EchoExecutor, ServeHook, ServeParams, ServeReport,
-    WirePolicy, BATCH_CONTROL_BYTES,
+    serve, serve_with_hook, BatchExecutor, EchoExecutor, QueuePressure, ServeHook, ServeParams,
+    ServeReport, WirePolicy, BATCH_CONTROL_BYTES,
 };
 
 use crate::util::SimTime;

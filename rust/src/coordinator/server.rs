@@ -313,6 +313,13 @@ struct ServeLoop<'p, E> {
     blocked: VecDeque<Batch>,
     /// Resident sessions, oldest first.
     sessions: VecDeque<Session>,
+    /// Whether the skew rebalance may run on the next `try_dispatch`.
+    /// Disarmed when a placement fails (so a blocked batch retried
+    /// across many deadline events doesn't re-trigger a migration —
+    /// real wire traffic plus a destination-FTL charge — per retry) and
+    /// re-armed on any state change that could alter the outcome: a
+    /// successful dispatch, a batch completion, a new arrival.
+    rebalance_armed: bool,
     arrivals: BTreeMap<u64, SimTime>,
     responses: Vec<InferenceResponse>,
     latency: LatencyHistogram,
@@ -329,6 +336,20 @@ struct ServeLoop<'p, E> {
 impl<E: BatchExecutor> ServeLoop<'_, E> {
     fn nodes(&self) -> u32 {
         self.router.nodes() as u32
+    }
+
+    /// The loop's instantaneous load signal (see [`QueuePressure`]).
+    fn pressure(&self, now: SimTime) -> QueuePressure {
+        QueuePressure {
+            queued: self.batcher.pending(),
+            blocked: self.blocked.len(),
+            inflight: self.inflight_active,
+            oldest_wait: self
+                .batcher
+                .oldest_arrival()
+                .map(|at| now.saturating_sub(at))
+                .unwrap_or(SimTime::ZERO),
+        }
     }
 
     /// Dispatch everything dispatchable at `now`: blocked batches first
@@ -370,7 +391,10 @@ impl<E: BatchExecutor> ServeLoop<'_, E> {
         // placement
         let hi = (0..n).rev().max_by_key(|i| self.kv.used_of(*i)).expect("nodes > 0");
         let lo = (0..n).min_by_key(|i| self.kv.used_of(*i)).expect("nodes > 0");
-        if hi != lo && self.kv.used_of(hi) >= self.kv.used_of(lo) + 2 * need {
+        if self.rebalance_armed
+            && hi != lo
+            && self.kv.used_of(hi) >= self.kv.used_of(lo) + 2 * need
+        {
             if let Some(pos) = self
                 .sessions
                 .iter()
@@ -404,19 +428,34 @@ impl<E: BatchExecutor> ServeLoop<'_, E> {
         };
         // a waiting batch outranks idle sessions: evict oldest-first
         // until the batch fits somewhere (sessions vary in size now, so
-        // one eviction is not always enough) — but never sacrifice
-        // resident sessions for a batch no amount of evicting can fit
-        // (the capacity valve in `pump` handles that case)
+        // one eviction is not always enough) — but only among sessions
+        // whose release can actually move some node toward fitting: a
+        // session on a node whose *non-session* residency already rules
+        // the batch out is never sacrificed (killing it destroys
+        // resident state, and its already-spilled FTL pages, without
+        // unblocking anything).  And never evict for a batch no amount
+        // of evicting can fit (the capacity valve in `pump` handles
+        // that case).
         let node = loop {
             if let Some(node) = pick(&self.kv, &self.router) {
                 break node;
             }
             if !self.kv.fits_empty(need) {
+                self.rebalance_armed = false;
                 return Err(batch);
             }
-            let Some(victim) = self.sessions.pop_front() else {
+            let mut resident = vec![0u64; n as usize];
+            for s in &self.sessions {
+                resident[s.node as usize] += s.bytes;
+            }
+            let Some(pos) = self.sessions.iter().position(|s| {
+                self.kv
+                    .fits_after_release(s.node, resident[s.node as usize], need)
+            }) else {
+                self.rebalance_armed = false;
                 return Err(batch);
             };
+            let victim = self.sessions.remove(pos).expect("position is in range");
             self.kv.release(victim.node, victim.bytes);
             self.kv_evictions += 1;
         };
@@ -463,6 +502,9 @@ impl<E: BatchExecutor> ServeLoop<'_, E> {
         };
         self.inflight[slot] = Some(InFlight { batch, node, reserved, kv_bytes });
         self.inflight_active += 1;
+        // residency moved: a placement that failed before may succeed
+        // (or skew differently) now
+        self.rebalance_armed = true;
         sim.queue.schedule_at(done_at, tag(EV_DONE, slot as u64));
         self.end = self.end.max(done_at);
     }
@@ -472,6 +514,7 @@ impl<E: BatchExecutor> ServeLoop<'_, E> {
             self.inflight[slot].take().expect("each done event fires once");
         self.inflight_active -= 1;
         self.free_slots.push(slot);
+        self.rebalance_armed = true;
         let result = match self.exes[node as usize].as_mut() {
             Some(exe) => exe.run_batch(&batch.prompts, batch.max_new_tokens),
             None => Err(anyhow::anyhow!("engine unavailable")),
@@ -538,6 +581,36 @@ impl<E: BatchExecutor> ServeLoop<'_, E> {
     }
 }
 
+/// Instantaneous serve-loop load, exported to the hook on every foreign
+/// event — the per-tick queue-depth signal an autoscaler
+/// ([`crate::pool::AutoScaler`]) decides on.  All fields are derived
+/// from deterministic loop state, so two same-seed runs hand identical
+/// pressure sequences to their hooks.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QueuePressure {
+    /// Requests sitting in the batcher, not yet formed into a batch.
+    pub queued: usize,
+    /// Formed batches no node could currently admit.
+    pub blocked: usize,
+    /// Batches executing on some node right now.
+    pub inflight: usize,
+    /// How long the oldest unformed request has been waiting.
+    pub oldest_wait: SimTime,
+}
+
+impl QueuePressure {
+    /// Work that has arrived but not yet launched — the depth signal a
+    /// scaling controller thresholds on.
+    pub fn depth(&self) -> usize {
+        self.queued + self.blocked
+    }
+
+    /// Nothing queued, nothing blocked, nothing running.
+    pub fn idle(&self) -> bool {
+        self.depth() == 0 && self.inflight == 0
+    }
+}
+
 /// Observer for event-queue entries the serving loop does not own.
 ///
 /// The serve loop pops *every* event on the shared queue; tag kinds it
@@ -546,10 +619,25 @@ impl<E: BatchExecutor> ServeLoop<'_, E> {
 /// mutable access to the whole [`PoolSim`], so the hook can degrade
 /// links, fail nodes, or schedule follow-up events of its own while
 /// requests are mid-flight.  This is the seam the chaos engine
-/// ([`crate::chaos`]) injects through.
+/// ([`crate::chaos`]) and the autoscaler ([`crate::pool::autoscale`])
+/// inject through.
 pub trait ServeHook {
     /// One foreign event, after its pop advanced the clock to `now`.
     fn on_event(&mut self, sim: &mut PoolSim, now: SimTime, tag: u64);
+
+    /// [`ServeHook::on_event`], plus the loop's instantaneous
+    /// [`QueuePressure`].  Default delegates to `on_event` so pressure-
+    /// blind hooks (chaos injection) need not change; the serve loop
+    /// always calls *this* entry point.
+    fn on_event_with_pressure(
+        &mut self,
+        sim: &mut PoolSim,
+        now: SimTime,
+        tag: u64,
+        _pressure: QueuePressure,
+    ) {
+        self.on_event(sim, now, tag);
+    }
 }
 
 /// What [`serve`] runs with: foreign events still advance the clock,
@@ -627,6 +715,7 @@ where
         inflight_active: 0,
         blocked: VecDeque::new(),
         sessions: VecDeque::new(),
+        rebalance_armed: true,
         arrivals: BTreeMap::new(),
         responses: Vec::new(),
         latency: LatencyHistogram::new(),
@@ -647,6 +736,7 @@ where
                 let req = requests[tag_payload(ev.tag) as usize].1.clone();
                 lp.arrivals.insert(req.id, now);
                 lp.batcher.push(req, now);
+                lp.rebalance_armed = true;
                 // the partial-batch window: by this instant the request
                 // must have launched or launch now
                 sim.queue
@@ -660,9 +750,11 @@ where
             }
             // a foreign event kind on the shared queue: not ours to
             // interpret — the pop advanced the clock; the hook decides
-            // what (if anything) it means
+            // what (if anything) it means, with the loop's live load
+            // signal alongside
             _ => {
-                hook.on_event(sim, now, ev.tag);
+                let pressure = lp.pressure(now);
+                hook.on_event_with_pressure(sim, now, ev.tag, pressure);
                 lp.pump(sim, now);
             }
         }
@@ -950,6 +1042,154 @@ mod tests {
         let report = serve(&mut s, vec![mk()], rs, &p);
         assert_eq!(report.responses.len(), 3, "capacity pressure must not drop requests");
         assert!(report.kv_evictions >= 1, "old sessions evicted for new batches: {report:?}");
+    }
+
+    /// A bare loop over `nodes` echo executors, for driving
+    /// `try_dispatch` against hand-built residency states.
+    fn mk_loop(params: &ServeParams, nodes: usize) -> ServeLoop<'_, EchoExecutor> {
+        ServeLoop {
+            params,
+            batcher: Batcher::new(params.batch_width, params.prompt_len, params.batch_window),
+            router: Router::new(nodes),
+            kv: KvManager::new(nodes, params.kv_capacity_per_node),
+            exes: (0..nodes).map(|_| Some(EchoExecutor)).collect(),
+            inflight: Vec::new(),
+            free_slots: Vec::new(),
+            inflight_active: 0,
+            blocked: VecDeque::new(),
+            sessions: VecDeque::new(),
+            rebalance_armed: true,
+            arrivals: BTreeMap::new(),
+            responses: Vec::new(),
+            latency: LatencyHistogram::new(),
+            tokens_out: 0,
+            prompt_tokens: 0,
+            kv_reserved_bytes: 0,
+            failed_batches: 0,
+            kv_migrations: 0,
+            kv_evictions: 0,
+            host_bytes: 0,
+            end: SimTime::ZERO,
+        }
+    }
+
+    /// One single-request batch whose KV need is `prompt + new` tokens
+    /// (at `kv_bytes_per_token: 1`, need == token count).
+    fn one_batch(prompt_len: usize, new_tokens: usize) -> Batch {
+        let mut b = Batcher::new(1, prompt_len, SimTime::ZERO);
+        b.push(
+            InferenceRequest {
+                id: 0,
+                prompt: vec![1; prompt_len],
+                max_new_tokens: new_tokens,
+            },
+            SimTime::ZERO,
+        );
+        b.form(SimTime::ZERO, true).expect("one request forms one batch")
+    }
+
+    #[test]
+    fn eviction_spares_sessions_on_nodes_it_cannot_help() {
+        // node 0's residency is dominated by a non-session (in-flight)
+        // reservation: even releasing its only session cannot admit the
+        // batch there, so that session must survive — only node 1's
+        // sessions (whose release does admit the batch) are sacrificed
+        let p = ServeParams {
+            batch_width: 1,
+            prompt_len: 10,
+            batch_window: SimTime::ZERO,
+            kv_capacity_per_node: 100,
+            kv_bytes_per_token: 1,
+            ..Default::default()
+        };
+        let mut s = sim(2);
+        let mut lp = mk_loop(&p, 2);
+        assert!(lp.kv.reserve(0, 90), "node 0: in-flight reservation");
+        assert!(lp.kv.reserve(0, 5));
+        lp.sessions.push_back(Session { node: 0, bytes: 5 }); // globally oldest
+        assert!(lp.kv.reserve(1, 60));
+        assert!(lp.kv.reserve(1, 30));
+        lp.sessions.push_back(Session { node: 1, bytes: 60 });
+        lp.sessions.push_back(Session { node: 1, bytes: 30 });
+        let batch = one_batch(10, 40);
+        assert_eq!(p.kv_need(&batch), 50);
+        assert!(lp.try_dispatch(&mut s, SimTime::ZERO, batch).is_ok());
+        assert_eq!(lp.kv_evictions, 1, "one node-1 eviction admits the batch");
+        assert!(
+            lp.sessions.iter().any(|sess| sess.node == 0 && sess.bytes == 5),
+            "the node-0 session survives: evicting it could never have helped"
+        );
+        assert_eq!(lp.kv.used_of(0), 95, "node 0 residency untouched");
+        assert_eq!(lp.kv.used_of(1), 30 + 50, "node 1: survivor session + new reservation");
+    }
+
+    #[test]
+    fn blocked_batch_retries_do_not_thrash_migrations_or_evictions() {
+        // a batch no node can place, retried across many deadline-event
+        // pumps with no intervening state change, must not re-run the
+        // skew rebalance (each migration is real wire traffic plus a
+        // destination-FTL charge) and must not grind down resident
+        // sessions whose release cannot help
+        let p = ServeParams {
+            batch_width: 1,
+            prompt_len: 10,
+            batch_window: SimTime::ZERO,
+            kv_capacity_per_node: 1000,
+            kv_bytes_per_token: 1,
+            ..Default::default()
+        };
+        let mut s = sim(2);
+        let mut lp = mk_loop(&p, 2);
+        assert!(lp.kv.reserve(0, 990), "node 0: in-flight reservation");
+        assert!(lp.kv.reserve(0, 8));
+        lp.sessions.push_back(Session { node: 0, bytes: 8 });
+        assert!(lp.kv.reserve(1, 960), "node 1: in-flight reservation");
+        let mut batch = one_batch(10, 40); // need 50: nowhere fits
+        assert!(lp.rebalance_armed);
+        for retry in 0..50 {
+            batch = lp
+                .try_dispatch(&mut s, SimTime::us(retry), batch)
+                .expect_err("no node can admit the batch");
+            assert!(!lp.rebalance_armed, "placement failure disarms the rebalance");
+        }
+        assert_eq!(lp.kv_migrations, 0, "bounded: no migration per retry");
+        assert_eq!(lp.kv_evictions, 0, "no futile evictions either");
+        assert_eq!(lp.sessions.len(), 1, "resident session survives every retry");
+        assert_eq!(lp.kv.used_of(0), 998);
+        assert_eq!(lp.kv.used_of(1), 960);
+        // a completion frees node 1 and re-arms the rebalance (as
+        // `on_done` does); the *next* attempt may migrate — once
+        lp.kv.release(1, 960);
+        lp.rebalance_armed = true;
+        assert!(lp.try_dispatch(&mut s, SimTime::us(50), batch).is_ok());
+        assert_eq!(lp.kv_migrations, 1, "one state change, one migration");
+    }
+
+    #[test]
+    fn capacity_valve_serves_unfittable_batches_without_spill() {
+        // per-node capacity below any batch's KV need: every dispatch is
+        // forced through the pump valve — each request still served
+        // exactly once, with no reservation, no resident session, and no
+        // FTL spill
+        let mut s = sim(2);
+        let p = ServeParams {
+            batch_width: 4,
+            prompt_len: 8,
+            batch_window: SimTime::us(100),
+            kv_capacity_per_node: 1000, // < one token's 4096 bytes
+            ..Default::default()
+        };
+        let report = serve(&mut s, vec![mk(), mk()], reqs(6), &p);
+        let mut ids: Vec<u64> = report.responses.iter().map(|r| r.id).collect();
+        ids.sort();
+        assert_eq!(ids, (0..6).collect::<Vec<u64>>(), "every request served exactly once");
+        assert!(s.queue.is_empty(), "serve drains the queue");
+        assert_eq!(report.kv_reserved_bytes, 0, "reservation never succeeds");
+        assert_eq!(report.kv_evictions, 0, "nothing resident to evict");
+        assert_eq!(report.kv_migrations, 0);
+        let mut c = Counters::new();
+        s.ftls.export_counters(&mut c);
+        assert_eq!(c.get(names::FTL_HOST_PAGES), 0, "no KV spill ever programs flash");
     }
 
     #[test]

@@ -847,6 +847,37 @@ impl PoolLayerCache {
         (src, handle)
     }
 
+    /// Background-prefetch every layer of `layers` that each node of
+    /// `candidates` is missing — the autoscaler's warm-the-candidates
+    /// primitive: before a scale-out decision commits, the controller
+    /// aims this at its top-ranked nodes so a flash crowd boots from
+    /// warm peers instead of the registry WAN.
+    ///
+    /// Per (node, layer) this is exactly [`PoolLayerCache::prefetch`]
+    /// (engine-scheduled, background lane, re-timed receipts; resident
+    /// and in-flight layers are skipped as no-ops), applied in the
+    /// deterministic candidates × layers order.  Returns the bytes
+    /// newly put in flight per candidate, so the caller can account
+    /// what its prediction moved ahead of time.
+    pub fn prefetch_set(
+        &mut self,
+        wire: &mut WireCtx,
+        candidates: &[NodeId],
+        layers: &[(u64, u64)],
+    ) -> Vec<(NodeId, u64)> {
+        let mut moved = Vec::with_capacity(candidates.len());
+        for &node in candidates {
+            let before = self.prefetch_bytes;
+            for &(digest, bytes) in layers {
+                if !self.node_has(node, digest) {
+                    self.prefetch(wire, node, digest, bytes);
+                }
+            }
+            moved.push((node, self.prefetch_bytes - before));
+        }
+        moved
+    }
+
     /// All chunks currently held by at least one node, sorted — the
     /// live-chunk set heal invariants are checked over.
     pub fn chunks(&self) -> Vec<ChunkId> {
@@ -1185,6 +1216,35 @@ mod tests {
         let mut c = Counters::new();
         b.export_counters(&mut c);
         assert!(c.get(names::FTL_HOST_PAGES) > 0, "landed bytes charged the flash ledgers");
+    }
+
+    #[test]
+    fn prefetch_set_warms_candidates_and_skips_residents() {
+        let (t, mut f, mut b) = rig(4, 1);
+        let mut pc = PoolLayerCache::new();
+        pc.register(0, 0xA1);
+        pc.register(0, 0xB2);
+        pc.register(2, 0xA1); // candidate 2 already holds one layer
+        let layers = [(0xA1u64, 1u64 << 20), (0xB2u64, 2u64 << 20)];
+        let moved = pc.prefetch_set(wire!(f, t, b), &[1, 2], &layers);
+        assert_eq!(
+            moved,
+            vec![(1, 3 << 20), (2, 2 << 20)],
+            "per-candidate bytes put in flight; resident layers skipped"
+        );
+        assert_eq!(pc.prefetch_bytes, 5 << 20);
+        assert!(f.transfers_in_flight() >= 3, "engine-scheduled background transfers");
+        f.run_to_idle();
+        for n in [1u32, 2] {
+            for (d, _) in layers {
+                assert!(pc.node_has(n, d), "node {n} warmed with layer {d:#x}");
+            }
+        }
+        // a repeat over the same candidates is a no-op: everything is
+        // resident or in flight
+        let again = pc.prefetch_set(wire!(f, t, b), &[1, 2], &layers);
+        assert_eq!(again, vec![(1, 0), (2, 0)]);
+        assert_eq!(pc.prefetch_bytes, 5 << 20);
     }
 
     #[test]

@@ -15,6 +15,7 @@
 //! repro docker-demo       # pull/run/logs lifecycle on the simulated SSD
 //! repro serve [--nodes N --requests R --tokens T --seed S]
 //!             [--workload ROW --scale K --boot-storm B --chaos S]
+//!             [--autoscale [--predictive]]
 //!                         # simulated-time pool serving (PoolSim): a
 //!                         # uniform-random storm, or a Table-2 trace
 //!                         # replay (--workload mariadb-tpch4) optionally
@@ -23,7 +24,10 @@
 //!                         # schedule (node deaths, array loss, link
 //!                         # brownouts, registry stalls) against the
 //!                         # replay and reports availability + healing;
-//!                         # with --features pjrt also
+//!                         # --autoscale runs the replay under the
+//!                         # queue-depth autoscaler, --predictive warms
+//!                         # scale-out candidates' layers ahead of the
+//!                         # commit; with --features pjrt also
 //!                         # [--artifacts DIR] for real PJRT generation
 //! repro config            # print the default config as JSON
 //! ```
@@ -376,6 +380,8 @@ fn serve_cmd(rest: &[String]) {
     let mut scale = cfg.serve.trace_scale;
     let mut boot_storm = cfg.serve.boot_storm;
     let mut chaos: Option<u64> = None;
+    let mut autoscale = false;
+    let mut predictive = false;
     let mut i = 0;
     while i < rest.len() {
         match rest[i].as_str() {
@@ -413,6 +419,14 @@ fn serve_cmd(rest: &[String]) {
                 chaos = Some(value_of(i, "--chaos").parse().expect("--chaos S"));
                 i += 2;
             }
+            "--autoscale" => {
+                autoscale = true;
+                i += 1;
+            }
+            "--predictive" => {
+                predictive = true;
+                i += 1;
+            }
             other => {
                 eprintln!("unknown flag {other}");
                 std::process::exit(2);
@@ -436,6 +450,8 @@ fn serve_cmd(rest: &[String]) {
             seed,
             boot_storm,
             chaos,
+            autoscale,
+            predictive,
         };
         let out = match smoke::run(&p) {
             Ok(out) => out,
@@ -497,6 +513,19 @@ fn serve_cmd(rest: &[String]) {
                 invariant
             );
         }
+        if let Some(asc) = &out.autoscale {
+            println!(
+                "autoscale: {} ticks, {} scale-outs ({} warm, {} cold), {} scale-ins; \
+                 cold-start p99 {}, {} prefetch bytes hidden behind the commit",
+                asc.report.ticks,
+                asc.report.scale_outs,
+                asc.report.warm_boots,
+                asc.report.cold_boots,
+                asc.report.scale_ins,
+                asc.report.coldstart_p99(),
+                asc.report.prefetch_hidden_bytes
+            );
+        }
         print_report(&out.report, &out.counters);
         return;
     }
@@ -505,6 +534,9 @@ fn serve_cmd(rest: &[String]) {
     let mut sim = PoolSim::new(&cfg);
     if chaos.is_some() {
         eprintln!("note: --chaos only applies to a trace replay (--workload ROW); ignored");
+    }
+    if autoscale || predictive {
+        eprintln!("note: --autoscale only applies to a trace replay (--workload ROW); ignored");
     }
     println!(
         "simulated serve storm: {nodes} nodes, {requests} requests x {tokens} tokens, seed {seed}"

@@ -231,6 +231,27 @@ pub mod names {
     pub const FTL_HOST_PAGES: &str = "ftl.host_pages";
     /// Blocks erased across the pool.
     pub const FTL_ERASES: &str = "ftl.erases";
+
+    // Canonical names for the [`crate::pool::autoscale`] controller.
+    // Like `ftl.*`, deliberately outside the grep prefixes of
+    // ci/serve_smoke.sh — and only exported when the autoscaler runs —
+    // so the committed golden never changes while the feature is off.
+    /// Controller ticks that fired on the shared clock.
+    pub const AUTOSCALE_TICKS: &str = "autoscale.ticks";
+    /// Scale-out decisions committed (one replica each).
+    pub const AUTOSCALE_SCALE_OUTS: &str = "autoscale.scale_outs";
+    /// Scale-in decisions committed (one replica retired each).
+    pub const AUTOSCALE_SCALE_INS: &str = "autoscale.scale_ins";
+    /// Scale-outs whose node was missing layers at commit time.
+    pub const AUTOSCALE_COLD_BOOTS: &str = "autoscale.cold_boots";
+    /// Scale-outs whose node already held (or had in flight) every
+    /// layer at commit time.
+    pub const AUTOSCALE_WARM_BOOTS: &str = "autoscale.warm_boots";
+    /// Layer bytes the predictive controller put in flight toward
+    /// candidates *before* their scale-out committed.
+    pub const AUTOSCALE_PREFETCH_HIDDEN_BYTES: &str = "autoscale.prefetch_hidden_bytes";
+    /// p99 of replica cold-start (commit to boot-ready), nanoseconds.
+    pub const AUTOSCALE_COLDSTART_P99_NS: &str = "autoscale.coldstart_p99_ns";
 }
 
 /// Named counters for substrate statistics.  `PartialEq` so two runs'

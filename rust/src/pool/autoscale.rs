@@ -1,0 +1,682 @@
+//! Deterministic serverless autoscaler with predictive layer prefetch
+//! (ROADMAP direction: "Serverless autoscaling with predictive layer
+//! prefetch").
+//!
+//! The controller runs entirely on the shared [`PoolSim`] clock: it
+//! schedules its own periodic tick events ([`EV_AUTOSCALE_TICK`]) on
+//! `sim.queue` and plugs into the serving loop through the
+//! [`ServeHook`] seam, exactly like the chaos engine — every decision
+//! is an ordinary event popped in deterministic time order between
+//! arrivals, batch completions, and deadlines.  On each tick the serve
+//! loop hands over its instantaneous [`QueuePressure`]; the controller
+//! thresholds the queue depth:
+//!
+//! * **scale-out** — `sustain_ticks` consecutive ticks at or above
+//!   `high_depth` commit one new replica, placed on the head of
+//!   [`Orchestrator::rank_candidates`] (the same boot-cost scoring as
+//!   `deploy_with_layers`: missing-layer wire estimate + queued-replica
+//!   surcharge + flash-wear surcharge);
+//! * **scale-in** — `idle_ticks` consecutive fully-idle ticks retire
+//!   the highest-index running replica ([`Orchestrator::scale_in`],
+//!   LIFO); when nothing is left running the tick chain ends and the
+//!   controller goes quiet.
+//!
+//! The headline mechanism is **predictive prefetch**: in predictive
+//! mode every *hot* tick — before any scale-out commits — aims
+//! [`PoolLayerCache::prefetch_set`] at the top-ranked candidates, so
+//! their missing layers ride the fabric's *background* lanes
+//! (engine-scheduled, re-timed receipts, yielding to foreground serve
+//! traffic) while the controller is still deciding.  By the time the
+//! hot streak sustains and the scale-out commits, a flash crowd boots
+//! from warm peers instead of the registry WAN: the commit-time
+//! foreground fetch settles only the in-flight tail.  Cold-start
+//! (commit to boot-ready) is recorded per boot; the p99 is the number
+//! the PR's bench compares against the reactive controller and the
+//! boot-storm baseline ([`boot_storm_coldstart_baseline`]).
+//!
+//! Chaos interplay: the autoscaler and the chaos injector are both
+//! `ServeHook`s and both want ownership of the pool-management triple,
+//! so one serve run hosts one or the other (the smoke runner rejects
+//! `--autoscale --chaos`).  A node death between runs is already
+//! handled at the seams the autoscaler reuses: `rank_candidates` only
+//! scores healthy nodes, and a dead candidate's layer registrations are
+//! purged before the next ranking.
+//!
+//! Everything is deterministic for a given seed: two same-seed runs
+//! produce byte-identical `autoscale.*` counters, and the counters are
+//! outside the `ci/serve_smoke.sh` grep prefixes, so the committed
+//! golden never changes while the feature is off.
+
+use std::collections::BTreeMap;
+
+use super::devices::WireCtx;
+use super::orchestrator::{DeploymentSpec, Orchestrator, RestartPolicy};
+use super::topology::{NodeId, PoolTopology};
+use crate::config::SystemConfig;
+use crate::coordinator::{
+    serve_with_hook, EchoExecutor, QueuePressure, ServeHook, ServeParams, ServeReport,
+};
+use crate::layerstore::PoolLayerCache;
+use crate::metrics::{names, Counters, LatencyHistogram};
+use crate::sim::{tag, tag_kind, PoolSim};
+use crate::util::SimTime;
+use crate::workloads::{trace_arrivals, workload_named, ArrivalParams};
+
+/// Event-tag kind of one controller tick (payload unused).
+pub const EV_AUTOSCALE_TICK: u8 = 0xA5;
+
+/// Tunables of the scaling controller.
+#[derive(Clone, Copy, Debug)]
+pub struct AutoScaleParams {
+    /// Controller cadence on the shared clock.
+    pub tick: SimTime,
+    /// Queue depth (queued + blocked, [`QueuePressure::depth`]) at or
+    /// above which a tick counts as *hot*.
+    pub high_depth: usize,
+    /// Consecutive hot ticks before a scale-out commits.
+    pub sustain_ticks: u32,
+    /// Consecutive fully-idle ticks before one replica is retired.
+    pub idle_ticks: u32,
+    /// Replica ceiling for the managed deployment.
+    pub max_replicas: u32,
+    /// How many ranked candidates predictive prefetch warms per hot
+    /// tick (the scale-out hedge set).
+    pub candidates: usize,
+    /// Warm candidates on the background lane *before* commit; `false`
+    /// is the reactive baseline (all layer traffic at commit time).
+    pub predictive: bool,
+}
+
+impl Default for AutoScaleParams {
+    fn default() -> Self {
+        AutoScaleParams {
+            tick: SimTime::ms(1),
+            high_depth: 4,
+            sustain_ticks: 3,
+            idle_ticks: 8,
+            max_replicas: 8,
+            candidates: 2,
+            predictive: false,
+        }
+    }
+}
+
+/// What one autoscaled run did, exported as `autoscale.*` counters.
+#[derive(Clone, Debug, Default)]
+pub struct AutoScaleReport {
+    pub ticks: u64,
+    pub scale_outs: u64,
+    pub scale_ins: u64,
+    /// Scale-outs whose node was missing at least one layer at commit.
+    pub cold_boots: u64,
+    /// Scale-outs whose node held (or had in flight) every layer.
+    pub warm_boots: u64,
+    /// Layer bytes the predictive controller had already put in flight
+    /// toward the nodes its scale-outs later committed on.
+    pub prefetch_hidden_bytes: u64,
+    /// Per-boot cold start: scale-out commit to every layer landed.
+    pub coldstart: LatencyHistogram,
+}
+
+impl AutoScaleReport {
+    /// The headline number: p99 of commit-to-boot-ready.
+    pub fn coldstart_p99(&self) -> SimTime {
+        self.coldstart.quantile(0.99)
+    }
+
+    pub fn export_counters(&self, c: &mut Counters) {
+        c.add(names::AUTOSCALE_TICKS, self.ticks);
+        c.add(names::AUTOSCALE_SCALE_OUTS, self.scale_outs);
+        c.add(names::AUTOSCALE_SCALE_INS, self.scale_ins);
+        c.add(names::AUTOSCALE_COLD_BOOTS, self.cold_boots);
+        c.add(names::AUTOSCALE_WARM_BOOTS, self.warm_boots);
+        c.add(names::AUTOSCALE_PREFETCH_HIDDEN_BYTES, self.prefetch_hidden_bytes);
+        c.add(names::AUTOSCALE_COLDSTART_P99_NS, self.coldstart_p99().as_ns());
+    }
+}
+
+/// Everything a finished autoscaled run hands back: the report plus the
+/// pool-management state, returned for invariant checks and continued
+/// use (mirrors [`crate::chaos::ChaosOutcome`]).
+pub struct AutoScaleOutcome {
+    pub report: AutoScaleReport,
+    pub topo: PoolTopology,
+    pub orch: Orchestrator,
+    pub cache: PoolLayerCache,
+}
+
+/// See the module docs.  Build with [`AutoScaler::new`], arm on the sim
+/// queue, pass as the hook to
+/// [`crate::coordinator::serve_with_hook`], then [`AutoScaler::finish`].
+pub struct AutoScaler {
+    params: AutoScaleParams,
+    topo: PoolTopology,
+    orch: Orchestrator,
+    cache: PoolLayerCache,
+    /// The deployment being scaled.
+    deployment: String,
+    /// The image recipe scale-outs must land: `(digest, bytes)` layers.
+    layers: Vec<(u64, u64)>,
+    hot_streak: u32,
+    idle_streak: u32,
+    /// Bytes predictive prefetch put in flight per candidate, credited
+    /// to `prefetch_hidden_bytes` if that candidate's scale-out commits.
+    warmed: BTreeMap<NodeId, u64>,
+    report: AutoScaleReport,
+}
+
+impl AutoScaler {
+    /// Take ownership of the pool-management state for the run.
+    /// `layers` is the deployment image's layer recipe — what a
+    /// scale-out must have resident before the replica is boot-ready.
+    pub fn new(
+        topo: PoolTopology,
+        orch: Orchestrator,
+        cache: PoolLayerCache,
+        deployment: impl Into<String>,
+        layers: Vec<(u64, u64)>,
+        params: AutoScaleParams,
+    ) -> Self {
+        AutoScaler {
+            params,
+            topo,
+            orch,
+            cache,
+            deployment: deployment.into(),
+            layers,
+            hot_streak: 0,
+            idle_streak: 0,
+            warmed: BTreeMap::new(),
+            report: AutoScaleReport {
+                coldstart: LatencyHistogram::new(),
+                ..Default::default()
+            },
+        }
+    }
+
+    /// Schedule the first tick.  Each tick re-arms the next one; the
+    /// chain self-terminates once the loop is idle and the last replica
+    /// has been retired, so no horizon needs to be guessed up front.
+    pub fn arm(&mut self, sim: &mut PoolSim) {
+        sim.queue
+            .schedule_at(sim.now() + self.params.tick, tag(EV_AUTOSCALE_TICK, 0));
+    }
+
+    /// Pool state mid-run (the live orchestrator, for assertions).
+    pub fn orch(&self) -> &Orchestrator {
+        &self.orch
+    }
+
+    /// The report accumulated so far.
+    pub fn report(&self) -> &AutoScaleReport {
+        &self.report
+    }
+
+    /// Fold the run into an [`AutoScaleOutcome`], handing the pool state
+    /// back.  Background prefetch tails still in flight stay on the
+    /// fabric engine; settle them with `sim.fabric.run_to_idle()` before
+    /// exporting fabric counters, as every other run path does.
+    pub fn finish(self, _sim: &mut PoolSim) -> AutoScaleOutcome {
+        AutoScaleOutcome {
+            report: self.report,
+            topo: self.topo,
+            orch: self.orch,
+            cache: self.cache,
+        }
+    }
+
+    /// Every hot tick in predictive mode: warm the top-ranked
+    /// candidates' missing layers on the background lane, and remember
+    /// how many bytes each candidate got ahead of time.
+    fn prefetch_toward_candidates(&mut self, sim: &mut PoolSim, now: SimTime) {
+        let mut wire = WireCtx::at(&mut sim.fabric, &self.topo, &mut sim.ftls, now);
+        let top: Vec<NodeId> = self
+            .orch
+            .rank_candidates(&wire, &self.deployment, &self.cache, &self.layers)
+            .into_iter()
+            .take(self.params.candidates)
+            .collect();
+        for (node, bytes) in self.cache.prefetch_set(&mut wire, &top, &self.layers) {
+            if bytes > 0 {
+                *self.warmed.entry(node).or_insert(0) += bytes;
+            }
+        }
+    }
+
+    /// Commit one scale-out on the cheapest-boot candidate: classify
+    /// the boot (warm = every layer resident or already in flight),
+    /// land the layers foreground — which settles any prefetch tail —
+    /// record commit-to-boot-ready, and place the replica.
+    fn commit_scale_out(&mut self, sim: &mut PoolSim, now: SimTime) {
+        let mut wire = WireCtx::at(&mut sim.fabric, &self.topo, &mut sim.ftls, now);
+        let ranked = self
+            .orch
+            .rank_candidates(&wire, &self.deployment, &self.cache, &self.layers);
+        let Some(&node) = ranked.first() else {
+            return; // every healthy node already hosts a replica
+        };
+        let warm = self.layers.iter().all(|&(d, _)| self.cache.node_has(node, d));
+        let mut boot_ready = now;
+        for &(digest, bytes) in &self.layers {
+            let (_, latency) = self.cache.fetch(&mut wire, node, digest, bytes);
+            boot_ready = boot_ready.max(now + latency);
+        }
+        self.report.coldstart.record(boot_ready.saturating_sub(now));
+        if warm {
+            self.report.warm_boots += 1;
+        } else {
+            self.report.cold_boots += 1;
+        }
+        self.report.prefetch_hidden_bytes += self.warmed.remove(&node).unwrap_or(0);
+        self.orch.scale_out_on(&self.deployment, node);
+        self.report.scale_outs += 1;
+    }
+
+    fn on_tick(&mut self, sim: &mut PoolSim, now: SimTime, pressure: QueuePressure) {
+        self.report.ticks += 1;
+        let mut rearm = true;
+        if pressure.depth() >= self.params.high_depth {
+            self.idle_streak = 0;
+            self.hot_streak += 1;
+            if self.params.predictive {
+                // warm candidates from the *first* hot tick: the layers
+                // are in flight while the streak is still sustaining
+                self.prefetch_toward_candidates(sim, now);
+            }
+            if self.hot_streak >= self.params.sustain_ticks {
+                self.hot_streak = 0;
+                if self.orch.running_count(&self.deployment) < self.params.max_replicas {
+                    self.commit_scale_out(sim, now);
+                }
+            }
+        } else if pressure.idle() {
+            self.hot_streak = 0;
+            self.idle_streak += 1;
+            if self.idle_streak >= self.params.idle_ticks {
+                self.idle_streak = 0;
+                if self.orch.scale_in(&self.deployment).is_some() {
+                    self.report.scale_ins += 1;
+                } else {
+                    // idle pool, nothing running: the tick chain ends
+                    rearm = false;
+                }
+            }
+        } else {
+            // partial pressure: neither streak accumulates
+            self.hot_streak = 0;
+            self.idle_streak = 0;
+        }
+        if rearm {
+            sim.queue
+                .schedule_at(now + self.params.tick, tag(EV_AUTOSCALE_TICK, 0));
+        }
+    }
+}
+
+impl ServeHook for AutoScaler {
+    /// Pressure-blind delivery (not used by the serve loop, which
+    /// always calls the pressure variant): a tick with no load signal
+    /// reads as idle.
+    fn on_event(&mut self, sim: &mut PoolSim, now: SimTime, tag: u64) {
+        self.on_event_with_pressure(sim, now, tag, QueuePressure::default());
+    }
+
+    fn on_event_with_pressure(
+        &mut self,
+        sim: &mut PoolSim,
+        now: SimTime,
+        tag: u64,
+        pressure: QueuePressure,
+    ) {
+        if tag_kind(tag) == EV_AUTOSCALE_TICK {
+            self.on_tick(sim, now, pressure);
+        }
+    }
+}
+
+/// What one [`flash_crowd`] run produced.
+pub struct FlashCrowdOutcome {
+    pub report: ServeReport,
+    pub scale: AutoScaleOutcome,
+    /// `serve.*` + `fabric.*` + `sim.*` + `autoscale.*` counters with
+    /// the fabric engine drained, for byte-identity comparisons.
+    pub counters: Counters,
+    /// Requests in the generated arrival stream.
+    pub requests: usize,
+}
+
+/// The scenario the tier-1 pin test and `benches/autoscale.rs` share: a
+/// Table 2 row replayed as a flash crowd against a deliberately
+/// under-provisioned serving pool (two replicas on the default
+/// 16-node topology, image warm only on the hosts), with the autoscaler
+/// ticking on the same clock.  The trace's service backlog keeps the
+/// queue depth above the hot threshold for most of the run, so the
+/// controller commits at least one scale-out onto a node whose layers
+/// must come over the wire — foreground at commit for the reactive
+/// controller, background-ahead-of-commit for the predictive one.
+///
+/// Deterministic for a given `(workload, seed, predictive)`.
+pub fn flash_crowd(
+    workload: &str,
+    seed: u64,
+    predictive: bool,
+) -> Result<FlashCrowdOutcome, String> {
+    const SERVING_NODES: usize = 2;
+    let Some(spec) = workload_named(workload) else {
+        return Err(format!("unknown workload {workload:?}"));
+    };
+    let cfg = SystemConfig::default();
+    let mut params = ServeParams::from_config(&cfg.serve);
+    // scale 500 leaves enough requests that the backlog outlives the
+    // controller's sustain window on every Table 2 row
+    let ap = ArrivalParams {
+        scale: 500,
+        ..Default::default()
+    };
+    params.prompt_len = ap.engine_prompt_len();
+    let arr = trace_arrivals(&spec, seed, &ap);
+    let requests = arr.requests.len();
+
+    let mut sim = PoolSim::new(&cfg);
+    let topo = PoolTopology::build(&cfg.pool);
+    let mut orch = Orchestrator::new();
+    let mut cache = PoolLayerCache::new();
+    let layers = crate::smoke::boot_storm_layers();
+    let placed = orch.deploy(
+        &topo,
+        &DeploymentSpec {
+            name: "svc".into(),
+            image: "llm-worker".into(),
+            replicas: SERVING_NODES as u32,
+            restart: RestartPolicy::OnFailure,
+        },
+    )?;
+    // the image is resident exactly where it already runs: scale-out
+    // targets must pull it from those peers (or, predictively, have it
+    // pushed ahead of the commit)
+    for &node in &placed {
+        for &(d, _) in &layers {
+            cache.register(node, d);
+        }
+    }
+    let mut scaler = AutoScaler::new(
+        topo,
+        orch,
+        cache,
+        "svc",
+        layers,
+        AutoScaleParams {
+            // 12 hot ticks at 5ms give predictive prefetch a 55ms lead
+            // over the commit — enough for the image to cross the array
+            // links ahead of the decision
+            tick: SimTime::ms(5),
+            high_depth: 4,
+            sustain_ticks: 12,
+            idle_ticks: 8,
+            max_replicas: SERVING_NODES as u32 + 1,
+            candidates: 2,
+            predictive,
+        },
+    );
+    scaler.arm(&mut sim);
+    let factories: Vec<_> = (0..SERVING_NODES)
+        .map(|_| || Ok::<_, anyhow::Error>(EchoExecutor))
+        .collect();
+    let report = serve_with_hook(&mut sim, factories, arr.requests, &params, &mut scaler);
+    let scale = scaler.finish(&mut sim);
+    sim.fabric.run_to_idle();
+    let mut counters = Counters::new();
+    report.export_counters(&mut counters);
+    sim.export_counters(&mut counters);
+    scale.report.export_counters(&mut counters);
+    Ok(FlashCrowdOutcome {
+        report,
+        scale,
+        counters,
+        requests,
+    })
+}
+
+/// The PR 4 baseline the autoscaler's cold-start numbers are measured
+/// against: a two-replica [`Orchestrator::boot_storm_sim`] of the same
+/// image on a cold pool — every layer crosses the registry WAN in the
+/// foreground.  Returns when the last pull byte lands (the storm starts
+/// at t=0, so this *is* the cold-start makespan).
+pub fn boot_storm_coldstart_baseline() -> SimTime {
+    let cfg = SystemConfig::default();
+    let mut sim = PoolSim::new(&cfg);
+    let topo = PoolTopology::build(&cfg.pool);
+    let mut orch = Orchestrator::new();
+    let mut cache = PoolLayerCache::new();
+    let rep = orch
+        .boot_storm_sim(
+            &mut sim,
+            &topo,
+            &DeploymentSpec {
+                name: "storm".into(),
+                image: "llm-worker".into(),
+                replicas: 2,
+                restart: RestartPolicy::OnFailure,
+            },
+            &mut cache,
+            &crate::smoke::boot_storm_layers(),
+        )
+        .expect("the default pool has healthy nodes");
+    rep.pulls_done
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EtherOnConfig, PoolConfig};
+
+    fn rig(nodes: u32) -> (PoolSim, AutoScaler) {
+        let pool = PoolConfig {
+            nodes_per_array: nodes,
+            arrays: 1,
+            ..Default::default()
+        };
+        let sim = PoolSim::with_pool(&pool, &EtherOnConfig::default());
+        let topo = PoolTopology::build(&pool);
+        let mut orch = Orchestrator::new();
+        let mut cache = PoolLayerCache::new();
+        let layers: Vec<(u64, u64)> = (0..4u64).map(|i| (0xA5_00 + i, 8 << 20)).collect();
+        let placed = orch
+            .deploy(
+                &topo,
+                &DeploymentSpec {
+                    name: "svc".into(),
+                    image: "llm-worker".into(),
+                    replicas: 2,
+                    restart: RestartPolicy::OnFailure,
+                },
+            )
+            .unwrap();
+        for &node in &placed {
+            for &(d, _) in &layers {
+                cache.register(node, d);
+            }
+        }
+        let scaler = AutoScaler::new(
+            topo,
+            orch,
+            cache,
+            "svc",
+            layers,
+            AutoScaleParams {
+                tick: SimTime::ms(1),
+                high_depth: 2,
+                sustain_ticks: 2,
+                idle_ticks: 2,
+                max_replicas: 4,
+                candidates: 1,
+                predictive: false,
+            },
+        );
+        (sim, scaler)
+    }
+
+    fn hot() -> QueuePressure {
+        QueuePressure {
+            queued: 8,
+            blocked: 0,
+            inflight: 2,
+            oldest_wait: SimTime::us(500),
+        }
+    }
+
+    fn tick_at(scaler: &mut AutoScaler, sim: &mut PoolSim, ms: u64, p: QueuePressure) {
+        scaler.on_event_with_pressure(sim, SimTime::ms(ms), tag(EV_AUTOSCALE_TICK, 0), p);
+    }
+
+    #[test]
+    fn sustained_pressure_scales_out_onto_ranked_nodes() {
+        let (mut sim, mut scaler) = rig(4);
+        tick_at(&mut scaler, &mut sim, 1, hot());
+        assert_eq!(scaler.report().scale_outs, 0, "one hot tick does not sustain");
+        tick_at(&mut scaler, &mut sim, 2, hot());
+        assert_eq!(scaler.report().scale_outs, 1, "second consecutive hot tick commits");
+        assert_eq!(scaler.report().cold_boots, 1, "reactive boots are cold");
+        assert_eq!(scaler.orch().running_count("svc"), 3);
+        // interleaved partial pressure resets the streak
+        tick_at(&mut scaler, &mut sim, 3, hot());
+        tick_at(
+            &mut scaler,
+            &mut sim,
+            4,
+            QueuePressure {
+                queued: 1,
+                inflight: 1,
+                ..Default::default()
+            },
+        );
+        tick_at(&mut scaler, &mut sim, 5, hot());
+        assert_eq!(scaler.report().scale_outs, 1, "broken streak must re-sustain");
+        tick_at(&mut scaler, &mut sim, 6, hot());
+        assert_eq!(scaler.report().scale_outs, 2);
+        assert_eq!(scaler.orch().running_count("svc"), 4);
+        // at max_replicas further sustained pressure commits nothing
+        tick_at(&mut scaler, &mut sim, 7, hot());
+        tick_at(&mut scaler, &mut sim, 8, hot());
+        assert_eq!(scaler.report().scale_outs, 2, "replica ceiling holds");
+        let out = scaler.finish(&mut sim);
+        // both scale-outs landed the full image on their nodes
+        for node in [2u32, 3] {
+            for d in (0..4u64).map(|i| 0xA5_00 + i) {
+                assert!(out.cache.node_has(node, d), "node {node} holds {d:#x}");
+            }
+        }
+        assert!(out.report.coldstart.count() == 2);
+        assert!(out.report.coldstart_p99() > SimTime::ZERO, "cold boots take wire time");
+    }
+
+    #[test]
+    fn idle_ticks_scale_the_pool_back_in_and_end_the_chain() {
+        let (mut sim, mut scaler) = rig(4);
+        // 2 replicas running, idle_ticks = 2: every second idle tick
+        // retires one, and the tick after the last retirement stops
+        // re-arming the chain
+        for ms in 1..=4u64 {
+            tick_at(&mut scaler, &mut sim, ms, QueuePressure::default());
+        }
+        assert_eq!(scaler.report().scale_ins, 2, "both replicas retired LIFO");
+        assert_eq!(scaler.orch().running_count("svc"), 0);
+        let before = sim.queue.len();
+        tick_at(&mut scaler, &mut sim, 5, QueuePressure::default());
+        tick_at(&mut scaler, &mut sim, 6, QueuePressure::default());
+        // the empty-pool retirement attempt did not schedule a successor
+        assert!(
+            sim.queue.len() < before + 2,
+            "an idle, empty pool must stop re-arming ticks"
+        );
+        assert_eq!(scaler.report().scale_outs, 0);
+    }
+
+    #[test]
+    fn predictive_prefetch_turns_the_boot_warm_and_cheaper() {
+        let run = |predictive: bool| {
+            let (mut sim, mut scaler) = rig(4);
+            scaler.params.predictive = predictive;
+            tick_at(&mut scaler, &mut sim, 1, hot());
+            tick_at(&mut scaler, &mut sim, 2, hot());
+            assert_eq!(scaler.report().scale_outs, 1);
+            let out = scaler.finish(&mut sim);
+            sim.fabric.run_to_idle();
+            out
+        };
+        let reactive = run(false);
+        let predictive = run(true);
+        assert_eq!(reactive.report.cold_boots, 1);
+        assert_eq!(reactive.report.warm_boots, 0);
+        assert_eq!(predictive.report.cold_boots, 0);
+        assert_eq!(
+            predictive.report.warm_boots, 1,
+            "the candidate was warm (in flight) at commit"
+        );
+        assert!(
+            predictive.report.prefetch_hidden_bytes >= 32 << 20,
+            "all four layers were moving before the commit: {}",
+            predictive.report.prefetch_hidden_bytes
+        );
+        // the commit-time fetch settles only the in-flight tail, which
+        // is strictly shorter than moving everything foreground at
+        // commit (compare exact maxima, not log-bucketed quantiles)
+        assert!(
+            predictive.report.coldstart.max() < reactive.report.coldstart.max(),
+            "predictive {} !< reactive {}",
+            predictive.report.coldstart.max(),
+            reactive.report.coldstart.max()
+        );
+    }
+
+    #[test]
+    fn flash_crowd_predictive_beats_reactive_and_the_boot_storm_baseline() {
+        let baseline = boot_storm_coldstart_baseline();
+        assert!(baseline > SimTime::ZERO);
+        for row in ["mariadb-tpch4", "nginx-filedown"] {
+            let reactive = flash_crowd(row, 42, false).unwrap();
+            let predictive = flash_crowd(row, 42, true).unwrap();
+            for (mode, out) in [("reactive", &reactive), ("predictive", &predictive)] {
+                assert_eq!(
+                    out.report.responses.len(),
+                    out.requests,
+                    "{row}/{mode}: autoscaling must not lose requests"
+                );
+                assert!(
+                    out.scale.report.scale_outs >= 1,
+                    "{row}/{mode}: the flash crowd must trigger a scale-out"
+                );
+            }
+            assert!(
+                reactive.scale.report.cold_boots >= 1,
+                "{row}: reactive boots pull layers at commit"
+            );
+            assert!(
+                predictive.scale.report.warm_boots >= 1,
+                "{row}: predictive boots from warm peers"
+            );
+            let (p99_p, p99_r) = (
+                predictive.scale.report.coldstart_p99(),
+                reactive.scale.report.coldstart_p99(),
+            );
+            assert!(
+                p99_p < p99_r,
+                "{row}: predictive p99 {p99_p} !< reactive p99 {p99_r}"
+            );
+            assert!(
+                p99_p < baseline,
+                "{row}: predictive p99 {p99_p} !< boot-storm baseline {baseline}"
+            );
+        }
+    }
+
+    #[test]
+    fn same_seed_flash_crowds_are_byte_identical() {
+        let a = flash_crowd("nginx-filedown", 42, true).unwrap();
+        let b = flash_crowd("nginx-filedown", 42, true).unwrap();
+        assert_eq!(a.counters, b.counters, "same-seed replays must match byte-for-byte");
+        assert!(a.counters.get(names::AUTOSCALE_TICKS) > 0);
+        let c = flash_crowd("nginx-filedown", 43, true).unwrap();
+        assert_ne!(a.counters, c.counters, "different seeds must actually differ");
+    }
+}

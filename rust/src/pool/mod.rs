@@ -3,10 +3,15 @@
 //! PCIe switches, each with its own IP, orchestrated like a
 //! docker-compose/Kubernetes deployment.
 
+pub mod autoscale;
 pub mod devices;
 pub mod orchestrator;
 pub mod topology;
 
+pub use autoscale::{
+    boot_storm_coldstart_baseline, flash_crowd, AutoScaleOutcome, AutoScaleParams,
+    AutoScaleReport, AutoScaler, FlashCrowdOutcome, EV_AUTOSCALE_TICK,
+};
 pub use devices::{FtlBank, WireCtx, WireRig};
 pub use orchestrator::{BootStormReport, DeploymentSpec, Orchestrator, RestartPolicy};
 pub use topology::{NodeId, PoolNode, PoolTopology};

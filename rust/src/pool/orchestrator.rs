@@ -386,12 +386,113 @@ impl Orchestrator {
             .filter(|p| p.deployment == deployment && p.running)
             .count() as u32
     }
+
+    /// Rank the healthy nodes as scale-out candidates for `deployment`,
+    /// cheapest boot first: the same scoring key as
+    /// [`Orchestrator::deploy_with_layers`] (idle-wire estimate of the
+    /// node's missing layers, plus one warm-pull-equivalent per queued
+    /// replica, plus the flash-wear surcharge), over the nodes *not*
+    /// already running one of the deployment's replicas.  Pure scoring —
+    /// no placement, no wire traffic, no flash charge — so the
+    /// predictive autoscaler can call it every hot tick to aim its
+    /// background prefetch before the scale-out decision commits.
+    pub fn rank_candidates(
+        &self,
+        wire: &WireCtx,
+        deployment: &str,
+        cache: &PoolLayerCache,
+        layers: &[(u64, u64)],
+    ) -> Vec<NodeId> {
+        let hosting: std::collections::BTreeSet<NodeId> = self
+            .placements
+            .iter()
+            .filter(|p| p.deployment == deployment && p.running)
+            .map(|p| p.node)
+            .collect();
+        let queued_cost: SimTime = layers
+            .iter()
+            .fold(SimTime::ZERO, |acc, (_, b)| acc + wire.fabric.unit_cost(*b));
+        let mut scored: Vec<((SimTime, u64, NodeId), NodeId)> = wire
+            .topo
+            .healthy_nodes()
+            .map(|n| n.id)
+            .filter(|id| !hosting.contains(id))
+            .map(|id| {
+                let load = self.load_of(id) as u64;
+                let missing: SimTime = layers
+                    .iter()
+                    .filter(|(d, _)| !cache.node_has(id, *d))
+                    .fold(SimTime::ZERO, |acc, (d, b)| acc + cache.plan(wire, id, *d, *b).1);
+                let waf_excess = wire.ftls.waf_milli_of(id).saturating_sub(1000);
+                (
+                    (
+                        missing
+                            + queued_cost.scale(load as f64)
+                            + queued_cost.scale(waf_excess as f64 / 1000.0),
+                        load,
+                        id,
+                    ),
+                    id,
+                )
+            })
+            .collect();
+        // the key ends in the node id, so the order is total and
+        // deterministic
+        scored.sort_by_key(|(key, _)| *key);
+        scored.into_iter().map(|(_, id)| id).collect()
+    }
+
+    /// Commit one scale-out: place a new replica of `deployment` on
+    /// `node` (typically the head of [`Orchestrator::rank_candidates`])
+    /// and return its replica index — always one past the highest index
+    /// the deployment has ever used, so retired replicas are never
+    /// reincarnated under the same identity.
+    pub fn scale_out_on(&mut self, deployment: &str, node: NodeId) -> u32 {
+        let replica = self
+            .placements
+            .iter()
+            .filter(|p| p.deployment == deployment)
+            .map(|p| p.replica + 1)
+            .max()
+            .unwrap_or(0);
+        self.bump_load(node);
+        self.placements.push(Placement {
+            deployment: deployment.to_string(),
+            replica,
+            node,
+            running: true,
+            restarts: 0,
+        });
+        replica
+    }
+
+    /// Retire the highest-index running replica of `deployment` — LIFO,
+    /// so scale-in unwinds scale-out.  The placement stays on the books
+    /// (not running) for the restart ledger; the node's load share is
+    /// dropped so spread and locality scoring stop counting it.  Returns
+    /// the retired `(replica, node)`, or `None` when nothing is running.
+    pub fn scale_in(&mut self, deployment: &str) -> Option<(u32, NodeId)> {
+        let idx = self
+            .placements
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.deployment == deployment && p.running)
+            .max_by_key(|(_, p)| p.replica)
+            .map(|(i, _)| i)?;
+        let (replica, node) = (self.placements[idx].replica, self.placements[idx].node);
+        self.placements[idx].running = false;
+        if let Some(l) = self.load.get_mut(node as usize) {
+            *l = l.saturating_sub(1);
+        }
+        Some((replica, node))
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::{EtherOnConfig, PoolConfig};
+    use crate::fabric::Fabric;
     use crate::layerstore::FetchSource;
 
     fn topo(n: u32) -> PoolTopology {
@@ -751,6 +852,52 @@ mod tests {
         assert!(orch.node_failed(&t, 0, RestartPolicy::OnFailure).is_empty());
         assert_eq!(orch.running_count("infer"), 0);
         assert_eq!(orch.load_of(0), 0, "the dead node's load is still purged");
+    }
+
+    #[test]
+    fn rank_candidates_scores_like_deploy_and_skips_hosts() {
+        let t = topo(4);
+        let mut f = fabric(4);
+        let mut orch = Orchestrator::new();
+        let mut cache = PoolLayerCache::new();
+        // node 2 fully warm, node 1 half warm, 0 and 3 cold
+        cache.register(2, 0xA);
+        cache.register(2, 0xB);
+        cache.register(1, 0xA);
+        let layers = [(0xA, 1000u64), (0xB, 2000u64)];
+        let mut bank = FtlBank::default();
+        let wire = WireCtx::at(&mut f, &t, &mut bank, SimTime::ZERO);
+        let ranked = orch.rank_candidates(&wire, "infer", &cache, &layers);
+        assert_eq!(ranked, vec![2, 1, 0, 3], "warmest first, then id tiebreak");
+        // a node already hosting a running replica leaves the ranking
+        orch.scale_out_on("infer", 2);
+        let ranked = orch.rank_candidates(&wire, "infer", &cache, &layers);
+        assert_eq!(ranked, vec![1, 0, 3]);
+        // pure scoring: no traffic, no prefetch, no flash charge
+        assert_eq!(cache.prefetch_bytes, 0);
+        assert_eq!(f.transfers_in_flight(), 0);
+    }
+
+    #[test]
+    fn scale_out_and_in_unwind_lifo_with_fresh_replica_ids() {
+        let t = topo(4);
+        let mut orch = Orchestrator::new();
+        orch.deploy(&t, &spec("infer", 2)).unwrap();
+        let r2 = orch.scale_out_on("infer", 3);
+        assert_eq!(r2, 2, "next free replica index");
+        assert_eq!(orch.running_count("infer"), 3);
+        assert_eq!(orch.load_of(3), 1);
+        // LIFO retire: the newest replica drains first
+        assert_eq!(orch.scale_in("infer"), Some((2, 3)));
+        assert_eq!(orch.running_count("infer"), 2);
+        assert_eq!(orch.load_of(3), 0, "retired replica's load share dropped");
+        // a later scale-out never reincarnates a retired replica id
+        assert_eq!(orch.scale_out_on("infer", 3), 3);
+        assert_eq!(orch.scale_in("infer"), Some((3, 3)));
+        assert_eq!(orch.scale_in("infer"), Some((1, orch.placements("infer")[1].node)));
+        assert_eq!(orch.scale_in("infer"), Some((0, orch.placements("infer")[0].node)));
+        assert_eq!(orch.scale_in("infer"), None, "nothing left running");
+        assert_eq!(orch.running_count("infer"), 0);
     }
 
     #[test]

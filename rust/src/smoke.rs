@@ -16,7 +16,8 @@ use crate::coordinator::{serve, serve_with_hook, EchoExecutor, ServeParams, Serv
 use crate::layerstore::PoolLayerCache;
 use crate::metrics::{Counters, Table};
 use crate::pool::{
-    BootStormReport, DeploymentSpec, NodeId, Orchestrator, PoolTopology, RestartPolicy, WireCtx,
+    AutoScaleOutcome, AutoScaleParams, AutoScaler, BootStormReport, DeploymentSpec, NodeId,
+    Orchestrator, PoolTopology, RestartPolicy, WireCtx,
 };
 use crate::sim::PoolSim;
 use crate::util::SimTime;
@@ -41,6 +42,12 @@ pub struct SmokeParams {
     /// Seed of a [`ChaosSchedule`] to replay while serving; `None`
     /// (the CI smoke path) serves undisturbed.
     pub chaos: Option<u64>,
+    /// Run the serve loop under the [`AutoScaler`] (mutually exclusive
+    /// with `chaos`: both hooks want ownership of the pool state).
+    pub autoscale: bool,
+    /// Warm scale-out candidates ahead of the commit
+    /// ([`AutoScaleParams::predictive`]); implies `autoscale`.
+    pub predictive: bool,
 }
 
 impl SmokeParams {
@@ -54,6 +61,8 @@ impl SmokeParams {
             seed: 42,
             boot_storm: 2,
             chaos: None,
+            autoscale: false,
+            predictive: false,
         }
     }
 }
@@ -78,6 +87,9 @@ pub struct SmokeOutcome {
     /// `--chaos` seed was set — invariant checks read the pool from
     /// here.
     pub chaos: Option<ChaosOutcome>,
+    /// The autoscaled run's report plus the scaled pool state, when
+    /// `--autoscale` was set.
+    pub autoscale: Option<AutoScaleOutcome>,
     pub arrivals: ArrivalSummary,
     pub workload_name: String,
 }
@@ -103,6 +115,13 @@ pub fn run(p: &SmokeParams) -> Result<SmokeOutcome, String> {
             rows.join("\n  ")
         ));
     };
+    let autoscaled = p.autoscale || p.predictive;
+    if autoscaled && p.chaos.is_some() {
+        return Err(
+            "--autoscale and --chaos are mutually exclusive: each hook owns the pool state for the run"
+                .into(),
+        );
+    }
     let cfg = SystemConfig::default();
     let mut params = ServeParams::from_config(&cfg.serve);
     let ap = ArrivalParams {
@@ -162,22 +181,55 @@ pub fn run(p: &SmokeParams) -> Result<SmokeOutcome, String> {
     let factories: Vec<_> = (0..p.nodes)
         .map(|_| || Ok::<_, anyhow::Error>(EchoExecutor))
         .collect();
-    let (report, chaos) = match p.chaos {
-        Some(chaos_seed) => {
-            let schedule = ChaosSchedule::generate(chaos_seed, &topo, arr.span);
-            let mut inj = ChaosInjector::new(
-                schedule,
-                topo,
-                orch,
-                cache,
-                CHAOS_HEAL_K,
-                RestartPolicy::OnFailure,
-            );
-            inj.arm(&mut sim);
-            let report = serve_with_hook(&mut sim, factories, arr.requests, &params, &mut inj);
-            (report, Some(inj.finish(&mut sim)))
+    let (report, chaos, autoscale) = if let Some(chaos_seed) = p.chaos {
+        let schedule = ChaosSchedule::generate(chaos_seed, &topo, arr.span);
+        let mut inj = ChaosInjector::new(
+            schedule,
+            topo,
+            orch,
+            cache,
+            CHAOS_HEAL_K,
+            RestartPolicy::OnFailure,
+        );
+        inj.arm(&mut sim);
+        let report = serve_with_hook(&mut sim, factories, arr.requests, &params, &mut inj);
+        (report, Some(inj.finish(&mut sim)), None)
+    } else if autoscaled {
+        // the autoscaler manages a deployment mirroring the serving
+        // fleet; its image is warm exactly where it already runs, so
+        // scale-outs must move layers (predictively or at commit)
+        let placed = orch
+            .deploy(
+                &topo,
+                &DeploymentSpec {
+                    name: "svc".into(),
+                    image: "llm-worker".into(),
+                    replicas: p.nodes as u32,
+                    restart: RestartPolicy::OnFailure,
+                },
+            )
+            .map_err(|e| format!("autoscale deploy: {e}"))?;
+        for &node in &placed {
+            for (d, _) in boot_storm_layers() {
+                cache.register(node, d);
+            }
         }
-        None => (serve(&mut sim, factories, arr.requests, &params), None),
+        let mut scaler = AutoScaler::new(
+            topo,
+            orch,
+            cache,
+            "svc",
+            boot_storm_layers(),
+            AutoScaleParams {
+                predictive: p.predictive,
+                ..Default::default()
+            },
+        );
+        scaler.arm(&mut sim);
+        let report = serve_with_hook(&mut sim, factories, arr.requests, &params, &mut scaler);
+        (report, None, Some(scaler.finish(&mut sim)))
+    } else {
+        (serve(&mut sim, factories, arr.requests, &params), None, None)
     };
     // settle engine-scheduled background prefetches so the exported
     // fabric counters cover the whole storm, re-timed receipts included
@@ -189,11 +241,15 @@ pub fn run(p: &SmokeParams) -> Result<SmokeOutcome, String> {
         out.report.export_counters(&mut counters);
         out.heal.export_counters(&mut counters);
     }
+    if let Some(out) = &autoscale {
+        out.report.export_counters(&mut counters);
+    }
     Ok(SmokeOutcome {
         report,
         counters,
         storm,
         chaos,
+        autoscale,
         arrivals,
         workload_name: spec.full_name(),
     })
@@ -280,6 +336,45 @@ mod tests {
         // untouched (inert), exactly like layerstore.* rows
         assert!(a.counters.get(crate::metrics::names::FTL_WAF) >= 1000);
         assert!(!lines.contains("ftl."), "ftl rows never enter the golden");
+    }
+
+    #[test]
+    fn autoscale_smoke_is_deterministic_and_stays_off_the_golden() {
+        let p = SmokeParams {
+            autoscale: true,
+            predictive: true,
+            boot_storm: 0,
+            ..SmokeParams::ci()
+        };
+        let a = run(&p).unwrap();
+        let b = run(&p).unwrap();
+        assert_eq!(
+            a.counters, b.counters,
+            "same-seed autoscaled replays must match byte-for-byte"
+        );
+        let out = a.autoscale.expect("autoscaled run carries its outcome");
+        assert!(out.report.ticks > 0, "the controller actually ticked");
+        assert_eq!(
+            a.report.responses.len(),
+            a.arrivals.requests,
+            "autoscaling never loses a request"
+        );
+        // autoscale.* rows are exported but sit outside the grep
+        // prefixes, so the committed golden never changes
+        assert!(a.counters.get(crate::metrics::names::AUTOSCALE_TICKS) > 0);
+        let lines = counter_lines(&a.counters);
+        assert!(!lines.contains("autoscale."), "autoscale rows never enter the golden");
+    }
+
+    #[test]
+    fn autoscale_and_chaos_are_mutually_exclusive() {
+        let err = run(&SmokeParams {
+            autoscale: true,
+            chaos: Some(7),
+            ..SmokeParams::ci()
+        })
+        .unwrap_err();
+        assert!(err.contains("mutually exclusive"));
     }
 
     #[test]
